@@ -1,0 +1,133 @@
+//! End-to-end driver: the full system on a real (synthetic-MIPLIB)
+//! workload — the validation run recorded in EXPERIMENTS.md.
+//!
+//! Generates the benchmark suite, writes/reads every instance through the
+//! MPS layer (exercising the full I/O path), propagates each instance with
+//! all engines (cpu_seq, cpu_omp, gpu_model, papilo_like and the
+//! AOT-compiled gpu_atomic via PJRT), verifies limit-point agreement, and
+//! reports the headline metric: geometric-mean speedups per size class,
+//! measured and devsim-modeled.
+//!
+//! Run with: `cargo run --release --example presolve_pipeline -- --scale 0.2`
+
+use std::rc::Rc;
+
+use gdp::devsim::device::{P400, V100, XEON};
+use gdp::devsim::ExecutionKind;
+use gdp::experiments::context::{comparable, modeled, run_native};
+use gdp::gen::suite::{generate_suite, set_of, SuiteConfig};
+use gdp::metrics::{per_set_geomeans, SpeedupRecord};
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::papilo_like::PapiloLikeEngine;
+use gdp::propagation::xla_engine::{XlaConfig, XlaEngine};
+use gdp::propagation::{Engine, Status};
+use gdp::runtime::Runtime;
+use gdp::util::cli::Args;
+use gdp::util::fmt::{ratio, secs, Table};
+use gdp::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = args.get_f64("scale", 0.2);
+    let total = Timer::start();
+
+    // 1. workload: seeded synthetic MIPLIB-like suite
+    let cfg = SuiteConfig::default().scaled(scale);
+    let suite = generate_suite(&cfg);
+    println!("suite: {} instances (scale {scale})", suite.len());
+
+    // 2. full I/O roundtrip: every instance through the MPS layer
+    let tmp = std::env::temp_dir().join("gdp_pipeline");
+    std::fs::create_dir_all(&tmp)?;
+    let mut instances = Vec::new();
+    for inst in &suite {
+        let path = tmp.join(format!("{}.mps", inst.name));
+        gdp::mps::write_mps_file(inst, &path)?;
+        let back = gdp::mps::read_mps_file(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        assert_eq!(back.nnz(), inst.nnz(), "MPS roundtrip lost entries");
+        instances.push(back);
+    }
+    println!("mps roundtrip: ok ({} files)", instances.len());
+
+    // 3. propagate with every engine; verify agreement
+    let runtime = Rc::new(Runtime::open_default()?);
+    let mut xla = XlaEngine::new(runtime, XlaConfig::default());
+    let mut records: Vec<SpeedupRecord> = Vec::new();
+    let mut agree = 0usize;
+    let mut skipped = 0usize;
+    let mut infeasible = 0usize;
+    for inst in &instances {
+        let runs = run_native(inst);
+        if runs.seq.status == Status::Infeasible {
+            infeasible += 1;
+            continue;
+        }
+        if !comparable(&runs.seq, &runs.gpu_model) {
+            skipped += 1;
+            continue;
+        }
+        let x = xla.try_propagate(inst)?;
+        let o = OmpEngine::with_threads(8).propagate(inst);
+        let p = PapiloLikeEngine::default().propagate(inst);
+        if !x.same_limit_point(&runs.seq) || !p.same_limit_point(&runs.seq) {
+            skipped += 1;
+            continue;
+        }
+        agree += 1;
+        let base = runs.seq.wall.as_secs_f64();
+        records.push(SpeedupRecord {
+            instance: runs.name.clone(),
+            size: runs.size,
+            base_secs: base,
+            cand_secs: vec![
+                o.wall.as_secs_f64(),
+                x.wall.as_secs_f64(),
+                p.wall.as_secs_f64(),
+                // modeled layer: the paper's machines
+                base * modeled(&runs, &V100, ExecutionKind::GpuCpuLoop { fp32: false })
+                    / modeled(&runs, &XEON, ExecutionKind::CpuSeq),
+                base * modeled(&runs, &P400, ExecutionKind::GpuCpuLoop { fp32: false })
+                    / modeled(&runs, &XEON, ExecutionKind::CpuSeq),
+            ],
+        });
+        let set = set_of(runs.size).unwrap_or(0);
+        println!(
+            "  [set {set}] {:40} seq={:>9} omp={:>9} xla={:>9} papilo={:>9}",
+            runs.name,
+            secs(base),
+            secs(o.wall.as_secs_f64()),
+            secs(x.wall.as_secs_f64()),
+            secs(p.wall.as_secs_f64()),
+        );
+    }
+    println!(
+        "agreement: {agree} same limit point, {skipped} excluded, {infeasible} infeasible"
+    );
+
+    // 4. headline metric: per-set geomean speedups
+    let names = ["cpu_omp 8t", "gpu_atomic(xla)", "papilo_like", "V100(model)", "P400(model)"];
+    let mut table = Table::new(
+        std::iter::once("set".to_string()).chain(names.iter().map(|s| s.to_string())).collect::<Vec<_>>(),
+    );
+    let per: Vec<([f64; 8], f64)> = (0..names.len()).map(|k| per_set_geomeans(&records, k)).collect();
+    for set in 0..8 {
+        let mut row = vec![format!("Set-{}", set + 1)];
+        for (sets, _) in &per {
+            row.push(if sets[set].is_nan() { "-".into() } else { ratio(sets[set]) });
+        }
+        table.row(row);
+    }
+    let mut all = vec!["All".to_string()];
+    for (_, a) in &per {
+        all.push(ratio(*a));
+    }
+    table.row(all);
+    println!("\nheadline: geomean speedup over cpu_seq (measured + modeled)\n");
+    println!("{}", table.to_text());
+    println!("pipeline total: {}", secs(total.secs()));
+
+    // sanity for CI use: the modeled V100 must beat the modeled P400
+    assert!(per[3].1 > per[4].1, "V100 model should outperform P400 model");
+    assert!(agree > 0);
+    Ok(())
+}

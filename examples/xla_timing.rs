@@ -1,0 +1,29 @@
+//! Quick timing probe: XLA engine wall time per round across bucket sizes.
+use gdp::experiments::context::run_native;
+use gdp::gen::{generate, Family, GenConfig};
+use gdp::propagation::xla_engine::{XlaConfig, XlaEngine};
+use gdp::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() {
+    let rt = Rc::new(Runtime::open(std::path::Path::new("artifacts")).unwrap());
+    let mut e = XlaEngine::new(rt.clone(), XlaConfig::default());
+    let mut ej = XlaEngine::new(rt.clone(), XlaConfig::default().jnp());
+    use gdp::propagation::xla_engine::SyncVariant;
+    let mut eg = XlaEngine::new(rt, XlaConfig::default().variant(SyncVariant::GpuLoop));
+    for &(rows, cols) in &[(500usize, 500usize), (3000, 3000), (12000, 12000), (50000, 45000)] {
+        let inst = generate(&GenConfig { family: Family::Mixed, nrows: rows, ncols: cols, mean_row_nnz: 8, seed: 5, ..Default::default() });
+        let n = run_native(&inst);
+        let r = e.try_propagate(&inst).unwrap();
+        let rj = ej.try_propagate(&inst).unwrap();
+        let rg = eg.try_propagate(&inst).unwrap();
+        println!("{}x{} nnz={} rounds={} pallas={:.2}ms/round jnp={:.2}ms/round seq={:.2}ms total speedup_pallas={:.3} speedup_jnp={:.3} gpu_loop_total={:.1}ms",
+            rows, cols, inst.nnz(), r.rounds,
+            r.wall.as_secs_f64()*1e3 / r.rounds as f64,
+            rj.wall.as_secs_f64()*1e3 / rj.rounds as f64,
+            n.seq.wall.as_secs_f64()*1e3,
+            n.seq.wall.as_secs_f64() / r.wall.as_secs_f64(),
+            n.seq.wall.as_secs_f64() / rj.wall.as_secs_f64(),
+            rg.wall.as_secs_f64()*1e3);
+    }
+}

@@ -1,0 +1,16 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+This package is never imported at propagation (request) time; the Rust
+coordinator loads the HLO artifacts it emits via PJRT.
+"""
+import jax
+
+# Domain propagation is a double-precision algorithm (bounds, activities);
+# f32 variants are produced explicitly for the single-precision study.
+jax.config.update("jax_enable_x64", True)
+
+# Numerical policy shared by every layer (mirrored in rust/src/propagation).
+EPS_IMPROVE_REL = 1e-9   # minimal relative bound improvement that counts
+FEAS_TOL = 1e-6          # empty-domain detection: lb > ub + FEAS_TOL
+INT_ROUND_EPS = 1e-6     # integrality rounding slack
+MAX_ROUNDS = 100         # paper section 4.1

@@ -1,0 +1,144 @@
+"""AOT driver: lower L2 propagation functions to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust coordinator then loads
+the artifacts via PJRT without any Python on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifact naming / calling convention (mirrored by rust/src/runtime):
+  inputs, in order:
+    vals    f[S, W]     cols    i32[S, W]   seg_row i32[S]
+    lhs     f[R]        rhs     f[R]
+    lb      f[C]        ub      f[C]        is_int  i32[C]
+  outputs (always a tuple):
+    round:  (new_lb f[C], new_ub f[C], change i32, infeas i32)
+    loop:   (lb f[C], ub f[C], rounds i32, infeas i32)
+    mega:   (lb f[C], ub f[C], rounds i32, infeas i32)
+
+The manifest (artifacts/manifest.txt) is line-oriented `key=value` records,
+one artifact per line, parsed by rust/src/runtime/manifest.rs.
+"""
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import MAX_ROUNDS
+from .model import VARIANTS
+
+# Shape buckets. A bucket fits an instance iff rows+1 <= R, cols <= C and
+# its blocked-ELL packing needs <= S segments of width W. R/C grow ~4x per
+# bucket, mirroring the paper's Set-1..Set-8 size classes.
+BUCKETS = [
+    # name      R      C      S      W
+    # W trades ELL padding waste (MIPLIB rows average ~10 nnz) against
+    # lane utilization; the *s variants serve tall-but-sparse instances
+    # without paying for the full segment capacity (section Perf sweep in
+    # EXPERIMENTS.md).
+    ("b0",     256,   256,   1024,  16),
+    ("b1",    1024,  1024,   4096,  16),
+    ("b2",    4096,  4096,  16384,  32),
+    ("b3s",  16384, 16384,  24576,  32),
+    ("b3",   16384, 16384,  65536,  32),
+    ("b4s",  65536, 65536,  98304,  32),
+    ("b4",   65536, 65536, 262144,  32),
+]
+
+# (variant, dtype, impl, fastmath, buckets); `None` = all buckets.
+ARTIFACT_SPECS = [
+    ("round", "f64", "pallas", False, None),
+    ("round", "f32", "pallas", False, None),
+    ("round", "f32", "pallas", True,  None),   # fast-math analog
+    ("round", "f64", "jnp",    False, None),   # ablation: no explicit tiling
+    ("loop",  "f64", "pallas", False, None),   # Appendix C: gpu_loop
+    ("mega",  "f64", "pallas", False, None),   # Appendix C: megakernel
+]
+
+DTYPES = {"f64": jnp.float64, "f32": jnp.float32}
+
+
+def artifact_name(variant, dtype, impl, fastmath, bucket):
+    fm = "fm" if fastmath else ""
+    return f"{variant}_{dtype}{fm}_{impl}_{bucket}"
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_artifact(variant, dtype, impl, fastmath, rows, cols, segs, width):
+    f = DTYPES[dtype]
+    spec = jax.ShapeDtypeStruct
+    args = (
+        spec((segs, width), f), spec((segs, width), jnp.int32),
+        spec((segs,), jnp.int32),
+        spec((rows,), f), spec((rows,), f),
+        spec((cols,), f), spec((cols,), f), spec((cols,), jnp.int32),
+    )
+    fn = VARIANTS[variant]
+
+    def wrapped(vals, cols_, seg_row, lhs, rhs, lb, ub, is_int):
+        return fn(vals, cols_, seg_row, lhs, rhs, lb, ub, is_int,
+                  impl=impl, fastmath=fastmath)
+
+    lowered = jax.jit(wrapped).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--only", default=None,
+                   help="comma-separated artifact-name substrings to build")
+    p.add_argument("--buckets", default=None,
+                   help="comma-separated bucket names to build (default all)")
+    a = p.parse_args()
+    os.makedirs(a.out, exist_ok=True)
+    only = a.only.split(",") if a.only else None
+    bucket_filter = a.buckets.split(",") if a.buckets else None
+
+    manifest = []
+    t_all = time.time()
+    for bucket, rows, cols, segs, width in BUCKETS:
+        if bucket_filter and bucket not in bucket_filter:
+            continue
+        for variant, dtype, impl, fastmath, allowed in ARTIFACT_SPECS:
+            if allowed is not None and bucket not in allowed:
+                continue
+            name = artifact_name(variant, dtype, impl, fastmath, bucket)
+            if only and not any(s in name for s in only):
+                continue
+            fname = f"{name}.hlo.txt"
+            t0 = time.time()
+            text = lower_artifact(variant, dtype, impl, fastmath,
+                                  rows, cols, segs, width)
+            with open(os.path.join(a.out, fname), "w") as fh:
+                fh.write(text)
+            dt = time.time() - t0
+            print(f"  {name}: {len(text)//1024} KiB in {dt:.1f}s", flush=True)
+            manifest.append(dict(
+                name=name, variant=variant, dtype=dtype, impl=impl,
+                fastmath=int(fastmath), rows=rows, cols=cols, segs=segs,
+                width=width, max_rounds=MAX_ROUNDS, file=fname))
+
+    with open(os.path.join(a.out, "manifest.txt"), "w") as fh:
+        fh.write("# gdp artifact manifest; key=value records, one per line\n")
+        for m in manifest:
+            fh.write(" ".join(f"{k}={v}" for k, v in m.items()) + "\n")
+    print(f"wrote {len(manifest)} artifacts in {time.time()-t_all:.1f}s "
+          f"to {a.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

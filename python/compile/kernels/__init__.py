@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the propagation hot spot.
+
+`activities` — per-segment (finite-sum, inf-count) activity partials, the
+SpMV-shaped reduction of paper sections 3.1-3.4 re-tiled for TPU VMEM.
+`candidates` — per-nonzero bound candidates from residual activities
+(paper section 3.5).
+`ref` — pure-jnp oracle for both kernels and for a whole propagation round.
+"""

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: per-nonzero bound candidates.
+
+Second phase of the paper's Algorithm 3 (section 3.5): each nonzero
+(i, j) maps to a lower/upper bound candidate for variable j, computed
+from the *residual* activities (eqs. (5a)/(5b)) reconstructed on the fly
+from the per-row (finite part, infinity count) pairs. The entry's own
+coefficient and bounds are already in VMEM from the tile load, so the
+residual step costs no extra HBM traffic — the property the paper
+exploits on the GPU with shared memory.
+
+Candidates that carry no information (padding entries, infinite
+constraint side, infinite residual) are emitted as -inf/+inf so that the
+downstream scatter-min/max (the atomicMin/Max analog) is a no-op for them:
+this is the pre-filtering of useless candidates described in section 3.5.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import INT_ROUND_EPS
+
+
+def _candidates_kernel(vals_ref, cols_ref, seg_row_ref,
+                       fin_min_ref, cnt_min_ref, fin_max_ref, cnt_max_ref,
+                       lhs_ref, rhs_ref, lb_ref, ub_ref, is_int_ref,
+                       lb_cand_ref, ub_cand_ref):
+    a = vals_ref[...]                  # [SB, W]
+    j = cols_ref[...]
+    r = seg_row_ref[...]               # [SB]
+    dt = a.dtype
+    inf = jnp.array(jnp.inf, dt)
+
+    lb = lb_ref[...]
+    ub = ub_ref[...]
+    lbj = lb[j]
+    ubj = ub[j]
+    pos = a > 0
+    nz = a != 0
+    b_min = jnp.where(pos, lbj, ubj)
+    b_max = jnp.where(pos, ubj, lbj)
+    fin_b_min = jnp.isfinite(b_min)
+    fin_b_max = jnp.isfinite(b_max)
+
+    own_fin_min = jnp.where(nz & fin_b_min, a * jnp.where(fin_b_min, b_min, 0.0), 0.0)
+    own_fin_max = jnp.where(nz & fin_b_max, a * jnp.where(fin_b_max, b_max, 0.0), 0.0)
+    own_cnt_min = (nz & ~fin_b_min).astype(jnp.int32)
+    own_cnt_max = (nz & ~fin_b_max).astype(jnp.int32)
+
+    # per-row totals, broadcast down the tile
+    fin_min_r = fin_min_ref[...][r][:, None]
+    cnt_min_r = cnt_min_ref[...][r][:, None]
+    fin_max_r = fin_max_ref[...][r][:, None]
+    cnt_max_r = cnt_max_ref[...][r][:, None]
+    rhs_r = rhs_ref[...][r][:, None]
+    lhs_r = lhs_ref[...][r][:, None]
+
+    # residual activities (5a)/(5b)
+    resmin_fin = (cnt_min_r - own_cnt_min) == 0
+    resmax_fin = (cnt_max_r - own_cnt_max) == 0
+    resmin = jnp.where(resmin_fin, fin_min_r - own_fin_min, -inf)
+    resmax = jnp.where(resmax_fin, fin_max_r - own_fin_max, inf)
+
+    # (4a)/(4b) in residual form
+    ub_num = jnp.where(pos, rhs_r - resmin, lhs_r - resmax)
+    lb_num = jnp.where(pos, lhs_r - resmax, rhs_r - resmin)
+    safe_a = jnp.where(nz, a, jnp.array(1.0, dt))
+    ub_ok = nz & jnp.isfinite(ub_num)
+    lb_ok = nz & jnp.isfinite(lb_num)
+    ub_cand = jnp.where(ub_ok, jnp.where(ub_ok, ub_num, 0.0) / safe_a, inf)
+    lb_cand = jnp.where(lb_ok, jnp.where(lb_ok, lb_num, 0.0) / safe_a, -inf)
+
+    isint = is_int_ref[...][j] != 0
+    ub_cand = jnp.where(isint & jnp.isfinite(ub_cand),
+                        jnp.floor(ub_cand + INT_ROUND_EPS), ub_cand)
+    lb_cand = jnp.where(isint & jnp.isfinite(lb_cand),
+                        jnp.ceil(lb_cand - INT_ROUND_EPS), lb_cand)
+    lb_cand_ref[...] = lb_cand
+    ub_cand_ref[...] = ub_cand
+
+
+@functools.partial(jax.jit, static_argnames=("block_segs",))
+def bound_candidates(vals, cols, seg_row, fin_min, cnt_min, fin_max, cnt_max,
+                     lhs, rhs, lb, ub, is_int, block_segs=None):
+    """Per-nonzero bound candidates via the Pallas kernel.
+
+    Returns (lb_cand, ub_cand), each f[S, W].
+    """
+    s, w = vals.shape
+    r = lhs.shape[0]
+    c = lb.shape[0]
+    from .activities import _default_block_segs
+    sb = block_segs or _default_block_segs(s, w)
+    assert s % sb == 0, f"segments {s} not divisible by block {sb}"
+    grid = (s // sb,)
+    dt = vals.dtype
+    row_spec = pl.BlockSpec((r,), lambda i: (0,))
+    col_spec = pl.BlockSpec((c,), lambda i: (0,))
+    tile_spec = pl.BlockSpec((sb, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        _candidates_kernel,
+        grid=grid,
+        in_specs=[
+            tile_spec, tile_spec, pl.BlockSpec((sb,), lambda i: (i,)),
+            row_spec, row_spec, row_spec, row_spec,   # fin/cnt min/max
+            row_spec, row_spec,                        # lhs, rhs
+            col_spec, col_spec, col_spec,              # lb, ub, is_int
+        ],
+        out_specs=[tile_spec, tile_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, w), dt),
+            jax.ShapeDtypeStruct((s, w), dt),
+        ],
+        interpret=True,
+    )(vals, cols, seg_row, fin_min, cnt_min, fin_max, cnt_max,
+      lhs, rhs, lb, ub, is_int)

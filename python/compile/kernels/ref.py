@@ -1,0 +1,168 @@
+"""Pure-jnp oracle for domain propagation over the blocked-ELL layout.
+
+This module is the single source of truth for the numerical semantics of a
+propagation round. The Pallas kernels (activities.py, candidates.py) and the
+Rust engines (rust/src/propagation/*) are all differentially tested against
+the functions here.
+
+Blocked-ELL layout
+------------------
+The sparse constraint matrix ``A`` (m x n, nnz stored row-major) is packed
+into *segments* of fixed width ``W``:
+
+  vals    f[S, W]   coefficients; padding entries are exactly 0.0
+  cols    i32[S, W] column index of each entry; padding entries are 0
+  seg_row i32[S]    the row each segment belongs to; padding segments are 0
+
+A row with k nonzeros occupies ceil(k / W) consecutive segments. Because a
+padding entry has ``a == 0`` it contributes nothing to any reduction, and a
+padding *segment* contributes (0, 0, 0, 0) partials to row 0, which is
+harmless. This mirrors the paper's CSR-adaptive row-blocking (section 3.2):
+short rows share the streaming granularity, long rows are split across
+segments and their partials are reduced afterwards (the "CSR-vector with
+all warps" case).
+
+Row data: ``lhs, rhs  f[R]`` (lhs in R∪{-inf}, rhs in R∪{+inf}).
+Column data: ``lb, ub f[C]``, ``is_int i32[C]`` (0/1).
+Rows m..R are padding: lhs=-inf, rhs=+inf. Columns n..C are padding:
+lb=-inf, ub=+inf, is_int=0.
+"""
+import jax.numpy as jnp
+import jax
+
+from .. import EPS_IMPROVE_REL, FEAS_TOL, INT_ROUND_EPS
+
+
+def seg_activities_ref(vals, cols, lb, ub):
+    """Per-segment activity partials.
+
+    Returns (fin_min, cnt_min, fin_max, cnt_max), each of shape [S]:
+    the finite part and the number of infinite contributions of the
+    minimum / maximum activity restricted to the segment's entries
+    (paper eq. (3a)/(3b) + the infinity counters of section 3.4).
+    """
+    a = vals
+    lbj = lb[cols]
+    ubj = ub[cols]
+    pos = a > 0
+    nz = a != 0
+    b_min = jnp.where(pos, lbj, ubj)
+    b_max = jnp.where(pos, ubj, lbj)
+    fin_b_min = jnp.isfinite(b_min)
+    fin_b_max = jnp.isfinite(b_max)
+    fin_min = jnp.sum(jnp.where(nz & fin_b_min, a * jnp.where(fin_b_min, b_min, 0.0), 0.0), axis=-1)
+    fin_max = jnp.sum(jnp.where(nz & fin_b_max, a * jnp.where(fin_b_max, b_max, 0.0), 0.0), axis=-1)
+    cnt_min = jnp.sum((nz & ~fin_b_min).astype(jnp.int32), axis=-1)
+    cnt_max = jnp.sum((nz & ~fin_b_max).astype(jnp.int32), axis=-1)
+    return fin_min, cnt_min, fin_max, cnt_max
+
+
+def row_activities_ref(vals, cols, seg_row, lb, ub, num_rows):
+    """Per-row (finite part, inf count) of min/max activities.
+
+    Combines per-segment partials with a segment-sum — the analog of the
+    paper's shared-memory reduction across warps for long rows.
+    """
+    fin_min_s, cnt_min_s, fin_max_s, cnt_max_s = seg_activities_ref(vals, cols, lb, ub)
+    fin_min = jax.ops.segment_sum(fin_min_s, seg_row, num_segments=num_rows)
+    cnt_min = jax.ops.segment_sum(cnt_min_s, seg_row, num_segments=num_rows)
+    fin_max = jax.ops.segment_sum(fin_max_s, seg_row, num_segments=num_rows)
+    cnt_max = jax.ops.segment_sum(cnt_max_s, seg_row, num_segments=num_rows)
+    return fin_min, cnt_min, fin_max, cnt_max
+
+
+def candidates_ref(vals, cols, seg_row, fin_min, cnt_min, fin_max, cnt_max,
+                   lhs, rhs, lb, ub, is_int):
+    """Per-nonzero bound candidates (paper eqs. (4a)/(4b) via residuals (5a)/(5b)).
+
+    Returns (lb_cand, ub_cand) of shape [S, W]. Entries that yield no
+    tightening information (padding, infinite side, infinite residual)
+    return -inf / +inf so the subsequent segment-min/max is a no-op.
+    """
+    dt = vals.dtype
+    inf = jnp.array(jnp.inf, dt)
+    a = vals
+    j = cols
+    r = seg_row[:, None]
+    lbj = lb[j]
+    ubj = ub[j]
+    pos = a > 0
+    nz = a != 0
+    b_min = jnp.where(pos, lbj, ubj)
+    b_max = jnp.where(pos, ubj, lbj)
+    fin_b_min = jnp.isfinite(b_min)
+    fin_b_max = jnp.isfinite(b_max)
+
+    # this entry's own contribution to the row's (finite, count) pair
+    own_fin_min = jnp.where(nz & fin_b_min, a * jnp.where(fin_b_min, b_min, 0.0), 0.0)
+    own_fin_max = jnp.where(nz & fin_b_max, a * jnp.where(fin_b_max, b_max, 0.0), 0.0)
+    own_cnt_min = (nz & ~fin_b_min).astype(jnp.int32)
+    own_cnt_max = (nz & ~fin_b_max).astype(jnp.int32)
+
+    # residual activities (5a)/(5b): finite iff every *other* contribution is
+    resmin_fin = (cnt_min[r.squeeze(-1)][:, None] - own_cnt_min) == 0
+    resmax_fin = (cnt_max[r.squeeze(-1)][:, None] - own_cnt_max) == 0
+    resmin = jnp.where(resmin_fin, fin_min[r.squeeze(-1)][:, None] - own_fin_min, -inf)
+    resmax = jnp.where(resmax_fin, fin_max[r.squeeze(-1)][:, None] - own_fin_max, inf)
+
+    rhs_r = rhs[r.squeeze(-1)][:, None]
+    lhs_r = lhs[r.squeeze(-1)][:, None]
+
+    # a > 0:  x_j <= (rhs - resmin)/a,  x_j >= (lhs - resmax)/a
+    # a < 0:  x_j <= (lhs - resmax)/a,  x_j >= (rhs - resmin)/a
+    ub_num = jnp.where(pos, rhs_r - resmin, lhs_r - resmax)
+    lb_num = jnp.where(pos, lhs_r - resmax, rhs_r - resmin)
+    safe_a = jnp.where(nz, a, jnp.array(1.0, dt))
+    ub_ok = nz & jnp.isfinite(ub_num)
+    lb_ok = nz & jnp.isfinite(lb_num)
+    ub_cand = jnp.where(ub_ok, jnp.where(ub_ok, ub_num, 0.0) / safe_a, inf)
+    lb_cand = jnp.where(lb_ok, jnp.where(lb_ok, lb_num, 0.0) / safe_a, -inf)
+
+    isint = is_int[j] != 0
+    ub_cand = jnp.where(isint & jnp.isfinite(ub_cand),
+                        jnp.floor(ub_cand + INT_ROUND_EPS), ub_cand)
+    lb_cand = jnp.where(isint & jnp.isfinite(lb_cand),
+                        jnp.ceil(lb_cand - INT_ROUND_EPS), lb_cand)
+    return lb_cand, ub_cand
+
+
+def improves_lb(old, new):
+    """A lower-bound candidate counts as an improvement iff it clears the
+    relative threshold; mirrored by propagation::bounds in Rust."""
+    thresh = jnp.maximum(jnp.array(1.0, old.dtype), jnp.abs(old)) * EPS_IMPROVE_REL
+    # against -inf old bounds, any finite candidate improves
+    return jnp.where(jnp.isfinite(old), new > old + thresh, new > old)
+
+
+def improves_ub(old, new):
+    thresh = jnp.maximum(jnp.array(1.0, old.dtype), jnp.abs(old)) * EPS_IMPROVE_REL
+    return jnp.where(jnp.isfinite(old), new < old - thresh, new < old)
+
+
+def round_ref(vals, cols, seg_row, lhs, rhs, lb, ub, is_int):
+    """One full propagation round (Algorithm 2 / Algorithm 3 body).
+
+    Round-synchronous: all candidates are computed against the *incoming*
+    bounds, then reduced per column (the scatter-min/max analog of the
+    paper's atomicMin/atomicMax, section 3.5).
+
+    Returns (new_lb, new_ub, change i32 scalar, infeas i32 scalar).
+    """
+    num_rows = lhs.shape[0]
+    num_cols = lb.shape[0]
+    fin_min, cnt_min, fin_max, cnt_max = row_activities_ref(
+        vals, cols, seg_row, lb, ub, num_rows)
+    lb_cand, ub_cand = candidates_ref(
+        vals, cols, seg_row, fin_min, cnt_min, fin_max, cnt_max,
+        lhs, rhs, lb, ub, is_int)
+    best_lb = jax.ops.segment_max(lb_cand.ravel(), cols.ravel(),
+                                  num_segments=num_cols)
+    best_ub = jax.ops.segment_min(ub_cand.ravel(), cols.ravel(),
+                                  num_segments=num_cols)
+    lb_imp = improves_lb(lb, best_lb)
+    ub_imp = improves_ub(ub, best_ub)
+    new_lb = jnp.where(lb_imp, best_lb, lb)
+    new_ub = jnp.where(ub_imp, best_ub, ub)
+    change = (jnp.any(lb_imp) | jnp.any(ub_imp)).astype(jnp.int32)
+    infeas = jnp.any(new_lb > new_ub + FEAS_TOL).astype(jnp.int32)
+    return new_lb, new_ub, change, infeas

@@ -1,0 +1,115 @@
+"""L2: a propagation round (and whole-propagation variants) as JAX functions.
+
+Everything here is traced once at build time by aot.py and shipped to the
+Rust coordinator as HLO text; nothing in this module runs at request time.
+
+Variants (paper section 3.7):
+  round  — one propagation round; the Rust side drives the round loop
+           (`cpu_loop`, the paper's best variant).
+  loop   — the whole propagation as a device-side `lax.while_loop`
+           (`gpu_loop`: no host synchronization until the fixed point).
+  mega   — fixed-trip `lax.scan` over MAX_ROUNDS with masked updates
+           (`megakernel`: the cooperative-groups analog; no early exit).
+
+Implementations:
+  pallas — activities + candidates through the L1 Pallas kernels.
+  jnp    — the pure-jnp reference path (ablation: what XLA does without
+           the explicit tiling).
+"""
+import jax
+import jax.numpy as jnp
+
+from . import MAX_ROUNDS
+from .kernels import ref
+from .kernels.activities import seg_activities, _default_block_segs
+from .kernels.candidates import bound_candidates
+
+
+def round_fn(vals, cols, seg_row, lhs, rhs, lb, ub, is_int,
+             impl="pallas", block_segs=None, fastmath=False):
+    """One round: returns (new_lb, new_ub, change i32, infeas i32)."""
+    if impl == "jnp":
+        return ref.round_ref(vals, cols, seg_row, lhs, rhs, lb, ub, is_int)
+    num_rows = lhs.shape[0]
+    num_cols = lb.shape[0]
+    sb = block_segs or _default_block_segs(*vals.shape)
+    fm, cm, fM, cM = seg_activities(vals, cols, lb, ub, block_segs=sb,
+                                    fastmath=fastmath)
+    fin_min = jax.ops.segment_sum(fm, seg_row, num_segments=num_rows)
+    cnt_min = jax.ops.segment_sum(cm, seg_row, num_segments=num_rows)
+    fin_max = jax.ops.segment_sum(fM, seg_row, num_segments=num_rows)
+    cnt_max = jax.ops.segment_sum(cM, seg_row, num_segments=num_rows)
+    lb_cand, ub_cand = bound_candidates(
+        vals, cols, seg_row, fin_min, cnt_min, fin_max, cnt_max,
+        lhs, rhs, lb, ub, is_int, block_segs=sb)
+    best_lb = jax.ops.segment_max(lb_cand.ravel(), cols.ravel(),
+                                  num_segments=num_cols)
+    best_ub = jax.ops.segment_min(ub_cand.ravel(), cols.ravel(),
+                                  num_segments=num_cols)
+    lb_imp = ref.improves_lb(lb, best_lb)
+    ub_imp = ref.improves_ub(ub, best_ub)
+    new_lb = jnp.where(lb_imp, best_lb, lb)
+    new_ub = jnp.where(ub_imp, best_ub, ub)
+    change = (jnp.any(lb_imp) | jnp.any(ub_imp)).astype(jnp.int32)
+    infeas = jnp.any(new_lb > new_ub + ref.FEAS_TOL).astype(jnp.int32)
+    return new_lb, new_ub, change, infeas
+
+
+def loop_fn(vals, cols, seg_row, lhs, rhs, lb, ub, is_int,
+            impl="pallas", block_segs=None, fastmath=False,
+            max_rounds=MAX_ROUNDS):
+    """Whole propagation as a device-side while loop (`gpu_loop`).
+
+    Returns (lb, ub, rounds i32, infeas i32). The host dispatches once and
+    receives the fixed point — the paper's dynamic-parallelism variant.
+    """
+    def body(state):
+        cur_lb, cur_ub, rounds, _change, _infeas = state
+        nlb, nub, change, infeas = round_fn(
+            vals, cols, seg_row, lhs, rhs, cur_lb, cur_ub, is_int,
+            impl=impl, block_segs=block_segs, fastmath=fastmath)
+        return nlb, nub, rounds + 1, change, infeas
+
+    def cond(state):
+        _lb, _ub, rounds, change, infeas = state
+        return (change == 1) & (infeas == 0) & (rounds < max_rounds)
+
+    one = jnp.int32(1)
+    zero = jnp.int32(0)
+    state = (lb, ub, zero, one, zero)
+    flb, fub, rounds, _change, infeas = jax.lax.while_loop(cond, body, state)
+    return flb, fub, rounds, infeas
+
+
+def mega_fn(vals, cols, seg_row, lhs, rhs, lb, ub, is_int,
+            impl="pallas", block_segs=None, fastmath=False,
+            max_rounds=MAX_ROUNDS):
+    """Fixed-trip propagation (`megakernel`): always runs max_rounds
+    round bodies; once converged, updates are masked out. Models the
+    grid-wide-synchronized cooperative kernel which cannot exit early.
+
+    Returns (lb, ub, rounds i32, infeas i32) where rounds counts the
+    rounds that were still active.
+    """
+    def step(state, _):
+        cur_lb, cur_ub, rounds, active, infeas = state
+        nlb, nub, change, step_infeas = round_fn(
+            vals, cols, seg_row, lhs, rhs, cur_lb, cur_ub, is_int,
+            impl=impl, block_segs=block_segs, fastmath=fastmath)
+        keep = (active == 1) & (infeas == 0)
+        out_lb = jnp.where(keep, nlb, cur_lb)
+        out_ub = jnp.where(keep, nub, cur_ub)
+        rounds = rounds + keep.astype(jnp.int32)
+        infeas = jnp.where(keep, step_infeas, infeas)
+        active = jnp.where(keep, change, active)
+        return (out_lb, out_ub, rounds, active, infeas), ()
+
+    one = jnp.int32(1)
+    zero = jnp.int32(0)
+    state = (lb, ub, zero, one, zero)
+    (flb, fub, rounds, _active, infeas), _ = jax.lax.scan(
+        step, state, None, length=max_rounds)
+    return flb, fub, rounds, infeas
+
+
+VARIANTS = {"round": round_fn, "loop": loop_fn, "mega": mega_fn}

@@ -1,0 +1,75 @@
+"""Blocked-ELL packing (numpy, build/test-time reference).
+
+The Rust coordinator has its own packer (rust/src/sparse/blocked_ell.rs);
+this module is the executable specification it is differentially tested
+against (via golden files produced by python/tests/test_pack.py).
+
+See kernels/ref.py for the layout contract.
+"""
+import numpy as np
+
+
+def pack_blocked_ell(row_cols, row_vals, num_rows, num_cols, width,
+                     min_segs=None):
+    """Pack per-row sparse data into blocked-ELL arrays.
+
+    row_cols / row_vals: sequences (len num_rows) of per-row column-index
+    and coefficient arrays (zero coefficients must already be dropped).
+    Returns (vals f64[S, W], cols i32[S, W], seg_row i32[S]) with
+    S = max(min_segs, total segments needed).
+    """
+    seg_rows = []
+    for r in range(num_rows):
+        k = len(row_cols[r])
+        assert k == len(row_vals[r])
+        nseg = max(1, -(-k // width)) if k > 0 else 0
+        seg_rows.extend([r] * nseg)
+    s = len(seg_rows)
+    if min_segs is not None:
+        s = max(s, min_segs)
+    vals = np.zeros((s, width), dtype=np.float64)
+    cols = np.zeros((s, width), dtype=np.int32)
+    seg_row = np.zeros(s, dtype=np.int32)
+    si = 0
+    for r in range(num_rows):
+        k = len(row_cols[r])
+        if k == 0:
+            continue
+        for off in range(0, k, width):
+            chunk = slice(off, min(off + width, k))
+            n = chunk.stop - chunk.start
+            vals[si, :n] = np.asarray(row_vals[r][chunk], dtype=np.float64)
+            cols[si, :n] = np.asarray(row_cols[r][chunk], dtype=np.int32)
+            seg_row[si] = r
+            si += 1
+    assert si == len(seg_rows)
+    return vals, cols, seg_row
+
+
+def pad_system(vals, cols, seg_row, lhs, rhs, lb, ub, is_int,
+               rows_pad, cols_pad, segs_pad):
+    """Pad a packed system into bucket shapes (rows_pad, cols_pad, segs_pad).
+
+    Padding rows: lhs=-inf, rhs=+inf (never propagate). Padding columns:
+    free bounds, continuous. Padding segments: all-zero entries on row 0.
+    """
+    s, w = vals.shape
+    m, n = lhs.shape[0], lb.shape[0]
+    assert s <= segs_pad and m <= rows_pad and n <= cols_pad
+    pv = np.zeros((segs_pad, w), vals.dtype)
+    pc = np.zeros((segs_pad, w), np.int32)
+    pr = np.zeros(segs_pad, np.int32)
+    pv[:s] = vals
+    pc[:s] = cols
+    pr[:s] = seg_row
+    plhs = np.full(rows_pad, -np.inf)
+    prhs = np.full(rows_pad, np.inf)
+    plhs[:m] = lhs
+    prhs[:m] = rhs
+    plb = np.full(cols_pad, -np.inf)
+    pub = np.full(cols_pad, np.inf)
+    pint = np.zeros(cols_pad, np.int32)
+    plb[:n] = lb
+    pub[:n] = ub
+    pint[:n] = is_int
+    return pv, pc, pr, plhs, prhs, plb, pub, pint

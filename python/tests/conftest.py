@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+settings.register_profile("gdp", deadline=None, max_examples=40,
+                          derandomize=True)
+settings.load_profile("gdp")

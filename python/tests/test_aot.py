@@ -1,0 +1,64 @@
+"""AOT artifact sanity: manifest structure, lowering output, bucket grid."""
+import os
+
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_bucket_grid_monotone():
+    prev = None
+    for name, r, c, s, w in aot.BUCKETS:
+        assert s * w >= r, f"bucket {name} cannot hold one nnz per row"
+        if prev:
+            assert r >= prev[1] and c >= prev[2] and s * w >= prev[3] * prev[4]
+        prev = (name, r, c, s, w)
+
+
+def test_artifact_names_unique():
+    names = set()
+    for bucket, *_ in aot.BUCKETS:
+        for variant, dtype, impl, fm, allowed in aot.ARTIFACT_SPECS:
+            if allowed is not None and bucket not in allowed:
+                continue
+            n = aot.artifact_name(variant, dtype, impl, fm, bucket)
+            assert n not in names
+            names.add(n)
+
+
+def test_lowering_produces_hlo_entry():
+    text = aot.lower_artifact("round", "f64", "pallas", False,
+                              rows=16, cols=16, segs=32, width=8)
+    assert "ENTRY" in text and "HloModule" in text
+    # round artifacts return a 4-tuple (lb, ub, change, infeas)
+    assert "f64[16]" in text
+
+
+def test_lowering_jnp_variant_smaller():
+    """The jnp ablation should lower without pallas grid loops."""
+    pal = aot.lower_artifact("round", "f64", "pallas", False, 16, 16, 32, 8)
+    jnp_ = aot.lower_artifact("round", "f64", "jnp", False, 16, 16, 32, 8)
+    assert "HloModule" in jnp_
+    assert len(jnp_) < len(pal)
+
+
+def test_loop_variant_has_while():
+    text = aot.lower_artifact("loop", "f64", "pallas", False, 16, 16, 32, 8)
+    assert "while" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.txt")),
+                    reason="artifacts not built (`make artifacts`)")
+def test_built_manifest_consistent():
+    with open(os.path.join(ART_DIR, "manifest.txt")) as fh:
+        lines = [l.strip() for l in fh if l.strip() and not l.startswith("#")]
+    assert lines, "empty manifest"
+    for line in lines:
+        kv = dict(tok.split("=", 1) for tok in line.split())
+        for key in ("name", "variant", "dtype", "impl", "rows", "cols",
+                    "segs", "width", "file"):
+            assert key in kv, f"missing {key} in: {line}"
+        assert os.path.exists(os.path.join(ART_DIR, kv["file"]))
+        assert int(kv["rows"]) > 0 and int(kv["segs"]) % 1 == 0

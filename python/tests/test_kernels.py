@@ -1,0 +1,171 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, infinity patterns and integrality; every
+case asserts allclose/exact-equal against ref.py, which in turn is checked
+against the independent per-entry numpy oracle in test_round.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.activities import seg_activities, _default_block_segs
+from compile.kernels.candidates import bound_candidates
+from tests.util import random_system
+
+
+def _as_jax(args, dtype=jnp.float64):
+    out = []
+    for a in args:
+        if a.dtype == np.float64:
+            out.append(jnp.asarray(a, dtype))
+        else:
+            out.append(jnp.asarray(a))
+    return out
+
+
+@given(seed=st.integers(0, 10_000),
+       width=st.sampled_from([4, 8, 16, 32]),
+       block=st.sampled_from([1, 2, 4]))
+def test_activities_matches_ref(seed, width, block):
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, width=width, min_segs=4 * block)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = _as_jax(args)
+    s = vals.shape[0]
+    sb = block if s % block == 0 else 1
+    got = seg_activities(vals, cols, lb, ub, block_segs=sb)
+    want = ref.seg_activities_ref(vals, cols, lb, ub)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-12)
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_allclose(got[2], want[2], rtol=1e-12)
+    np.testing.assert_array_equal(got[3], want[3])
+
+
+@given(seed=st.integers(0, 10_000), width=st.sampled_from([4, 8, 16]))
+def test_activities_f32(seed, width):
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, width=width)
+    a32 = _as_jax(args, jnp.float32)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = a32
+    got = seg_activities(vals, cols, lb, ub, block_segs=1)
+    want = ref.seg_activities_ref(vals, cols, lb, ub)
+    assert got[0].dtype == jnp.float32
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+@given(seed=st.integers(0, 10_000))
+def test_activities_all_infinite_bounds(seed):
+    """Every bound infinite: finite parts must be exactly 0, counters = nnz."""
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, p_inf_bound=1.0)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = _as_jax(args)
+    fm, cm, fM, cM = seg_activities(vals, cols, lb, ub, block_segs=1)
+    nnz_per_seg = np.sum(np.asarray(vals) != 0, axis=1)
+    np.testing.assert_array_equal(np.asarray(fm), np.zeros_like(fm))
+    np.testing.assert_array_equal(np.asarray(cm), nnz_per_seg)
+    np.testing.assert_array_equal(np.asarray(cM), nnz_per_seg)
+
+
+def test_activities_padding_segment_contributes_zero():
+    vals = jnp.zeros((2, 4))
+    cols = jnp.zeros((2, 4), jnp.int32)
+    lb = jnp.array([-jnp.inf, 0.0])
+    ub = jnp.array([jnp.inf, 1.0])
+    fm, cm, fM, cM = seg_activities(vals, cols, lb, ub, block_segs=1)
+    assert np.all(np.asarray(fm) == 0) and np.all(np.asarray(cm) == 0)
+    assert np.all(np.asarray(fM) == 0) and np.all(np.asarray(cM) == 0)
+
+
+@given(seed=st.integers(0, 10_000),
+       width=st.sampled_from([4, 8, 16]),
+       p_inf=st.sampled_from([0.0, 0.2, 0.6, 1.0]))
+def test_candidates_matches_ref(seed, width, p_inf):
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, width=width, p_inf_bound=p_inf)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = _as_jax(args)
+    m = lhs.shape[0]
+    acts = ref.row_activities_ref(vals, cols, seg_row, lb, ub, m)
+    got = bound_candidates(vals, cols, seg_row, *acts, lhs, rhs, lb, ub,
+                           is_int, block_segs=1)
+    want = ref.candidates_ref(vals, cols, seg_row, *acts, lhs, rhs, lb, ub,
+                              is_int)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-12)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-12)
+
+
+def test_candidates_single_infinity_residual():
+    """Paper section 3.4: exactly one infinite contribution — the infinite
+    variable still gets a finite residual and can be tightened."""
+    # row: x0 + x1 <= 4, x0 in [1, 2], x1 in (-inf, inf)
+    vals = jnp.array([[1.0, 1.0, 0.0, 0.0]])
+    cols = jnp.array([[0, 1, 0, 0]], jnp.int32)
+    seg_row = jnp.array([0], jnp.int32)
+    lhs = jnp.array([-jnp.inf])
+    rhs = jnp.array([4.0])
+    lb = jnp.array([1.0, -jnp.inf])
+    ub = jnp.array([2.0, jnp.inf])
+    is_int = jnp.zeros(2, jnp.int32)
+    acts = ref.row_activities_ref(vals, cols, seg_row, lb, ub, 1)
+    fin_min, cnt_min, _, _ = acts
+    assert int(cnt_min[0]) == 1 and float(fin_min[0]) == 1.0
+    lc, uc = bound_candidates(vals, cols, seg_row, *acts, lhs, rhs, lb, ub,
+                              is_int, block_segs=1)
+    # x1 <= rhs - resmin(x1) = 4 - 1 = 3 ; x0 has infinite residual -> no cand
+    assert float(uc[0, 1]) == 3.0
+    assert float(uc[0, 0]) == np.inf
+
+
+def test_candidates_two_infinities_no_tightening():
+    """Two infinite contributions: every residual is infinite, no candidates."""
+    vals = jnp.array([[1.0, 1.0, 1.0, 0.0]])
+    cols = jnp.array([[0, 1, 2, 0]], jnp.int32)
+    seg_row = jnp.array([0], jnp.int32)
+    lhs = jnp.array([-jnp.inf])
+    rhs = jnp.array([4.0])
+    lb = jnp.array([1.0, -jnp.inf, -jnp.inf])
+    ub = jnp.array([2.0, jnp.inf, jnp.inf])
+    is_int = jnp.zeros(3, jnp.int32)
+    acts = ref.row_activities_ref(vals, cols, seg_row, lb, ub, 1)
+    lc, uc = bound_candidates(vals, cols, seg_row, *acts, lhs, rhs, lb, ub,
+                              is_int, block_segs=1)
+    assert np.all(np.asarray(uc) == np.inf)
+    assert np.all(np.asarray(lc) == -np.inf)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_fastmath_counters_exact_values_close(seed):
+    """fast-math changes the MAC precision, never the infinity counters."""
+    rng = np.random.default_rng(seed)
+    args = random_system(rng)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = _as_jax(args, jnp.float32)
+    exact = seg_activities(vals, cols, lb, ub, block_segs=1)
+    fast = seg_activities(vals, cols, lb, ub, block_segs=1, fastmath=True)
+    np.testing.assert_array_equal(exact[1], fast[1])
+    np.testing.assert_array_equal(exact[3], fast[3])
+    # bf16 has ~3 decimal digits; allow loose tolerance scaled by magnitude
+    np.testing.assert_allclose(fast[0], exact[0], rtol=3e-2, atol=3e-1)
+    np.testing.assert_allclose(fast[2], exact[2], rtol=3e-2, atol=3e-1)
+
+
+def test_default_block_segs_divides():
+    for s in [1, 2, 7, 64, 1024, 4096, 262144]:
+        for w in [8, 32, 64, 128]:
+            sb = _default_block_segs(s, w)
+            assert s % sb == 0 and sb >= 1
+
+
+@pytest.mark.parametrize("w", [4, 32])
+def test_empty_system_roundtrips(w):
+    """No nonzeros at all: activities zero, no candidates."""
+    vals = jnp.zeros((2, w))
+    cols = jnp.zeros((2, w), jnp.int32)
+    seg_row = jnp.zeros(2, jnp.int32)
+    lb = jnp.array([0.0, 1.0])
+    ub = jnp.array([5.0, 6.0])
+    acts = ref.row_activities_ref(vals, cols, seg_row, lb, ub, 3)
+    lc, uc = bound_candidates(vals, cols, seg_row, *acts,
+                              jnp.full(3, -jnp.inf), jnp.full(3, jnp.inf),
+                              lb, ub, jnp.zeros(2, jnp.int32), block_segs=1)
+    assert np.all(np.asarray(lc) == -np.inf) and np.all(np.asarray(uc) == np.inf)

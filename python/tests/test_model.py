@@ -1,0 +1,128 @@
+"""L2 model semantics: loop/mega variants vs iterated rounds, pallas vs jnp,
+cascade behaviour (paper section 2.2), round caps."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import MAX_ROUNDS
+from compile.kernels import ref
+from compile import model
+from tests.util import random_system, slow_propagate
+
+
+def _jx(args):
+    return [jnp.asarray(a) for a in args]
+
+
+def _iterate_rounds(args, max_rounds=MAX_ROUNDS, impl="jnp"):
+    args = list(args)
+    rounds = 0
+    infeas = 0
+    while rounds < max_rounds:
+        nlb, nub, ch, infeas = model.round_fn(*args, impl=impl)
+        args[5], args[6] = nlb, nub
+        rounds += 1
+        if int(ch) == 0 or int(infeas) == 1:
+            break
+    return args[5], args[6], rounds, int(infeas)
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=25)
+def test_pallas_round_equals_jnp_round(seed):
+    rng = np.random.default_rng(seed)
+    args = _jx(random_system(rng, min_segs=4))
+    p = model.round_fn(*args, impl="pallas", block_segs=1)
+    j = model.round_fn(*args, impl="jnp")
+    np.testing.assert_allclose(np.asarray(p[0]), np.asarray(j[0]), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(p[1]), np.asarray(j[1]), rtol=1e-12)
+    assert int(p[2]) == int(j[2]) and int(p[3]) == int(j[3])
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=20)
+def test_loop_equals_iterated_rounds(seed):
+    rng = np.random.default_rng(seed)
+    args = _jx(random_system(rng, min_segs=4))
+    flb, fub, rounds, infeas = model.loop_fn(*args, impl="jnp")
+    wlb, wub, wrounds, winfeas = _iterate_rounds(args)
+    np.testing.assert_allclose(np.asarray(flb), np.asarray(wlb), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(fub), np.asarray(wub), rtol=1e-12)
+    assert int(infeas) == winfeas
+    # loop counts only change-producing rounds; iterate counts the final
+    # no-change round too (unless it hit infeasibility / max_rounds first)
+    assert abs(int(rounds) - wrounds) <= 1
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=15)
+def test_mega_equals_loop_fixed_point(seed):
+    rng = np.random.default_rng(seed)
+    args = _jx(random_system(rng, min_segs=4))
+    l = model.loop_fn(*args, impl="jnp")
+    m = model.mega_fn(*args, impl="jnp")
+    np.testing.assert_allclose(np.asarray(l[0]), np.asarray(m[0]), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(l[1]), np.asarray(m[1]), rtol=1e-12)
+    assert int(l[3]) == int(m[3])
+
+
+@given(seed=st.integers(0, 50_000))
+@settings(max_examples=15)
+def test_loop_matches_slow_propagate(seed):
+    rng = np.random.default_rng(seed)
+    np_args = random_system(rng, min_segs=4)
+    flb, fub, rounds, infeas = model.loop_fn(*_jx(np_args), impl="jnp")
+    wlb, wub, wrounds, winfeas = slow_propagate(np_args)
+    if int(infeas) == 1:
+        assert winfeas
+        return
+    np.testing.assert_allclose(np.asarray(flb), wlb, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(fub), wub, rtol=1e-9, atol=1e-12)
+
+
+def _cascade_chain(m):
+    """x_0 <= 1 ; x_{i} <= x_{i-1} encoded as x_i - x_{i-1} <= 0.
+
+    A parallel round-synchronous propagator needs m rounds (paper 2.2's
+    worst-case cascading pattern); all x_i start in [0, 1000]."""
+    rows = []
+    rows.append(([0], [1.0], -np.inf, 1.0))
+    for i in range(1, m):
+        rows.append(([i, i - 1], [1.0, -1.0], -np.inf, 0.0))
+    w = 4
+    from compile.pack import pack_blocked_ell
+    vals, cols, seg_row = pack_blocked_ell(
+        [np.array(r[0], np.int32) for r in rows],
+        [np.array(r[1]) for r in rows], len(rows), m, w)
+    lhs = np.array([r[2] for r in rows])
+    rhs = np.array([r[3] for r in rows])
+    lb = np.zeros(m)
+    ub = np.full(m, 1000.0)
+    return _jx((vals, cols, seg_row, lhs, rhs, lb, ub,
+                np.zeros(m, np.int32)))
+
+
+def test_cascade_needs_m_rounds():
+    m = 7
+    args = _cascade_chain(m)
+    flb, fub, rounds, infeas = model.loop_fn(*args, impl="jnp")
+    assert int(infeas) == 0
+    np.testing.assert_array_equal(np.asarray(fub), np.ones(m))
+    # round r fixes x_{r-1}; one extra round to observe no change
+    assert int(rounds) == m + 1
+
+
+def test_max_rounds_cap():
+    m = 12
+    args = _cascade_chain(m)
+    flb, fub, rounds, infeas = model.loop_fn(*args, impl="jnp", max_rounds=5)
+    assert int(rounds) == 5
+    # only the first 5 variables have been tightened
+    assert float(fub[4]) == 1.0 and float(fub[6]) == 1000.0
+
+
+def test_mega_counts_active_rounds_only():
+    m = 5
+    args = _cascade_chain(m)
+    _, _, rounds, _ = model.mega_fn(*args, impl="jnp")
+    assert int(rounds) == m + 1

@@ -1,0 +1,93 @@
+"""Blocked-ELL packing properties (compile/pack.py)."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.pack import pack_blocked_ell, pad_system
+from tests.util import random_system
+
+
+@given(seed=st.integers(0, 100_000), width=st.sampled_from([1, 2, 4, 8, 32]))
+def test_pack_preserves_entries(seed, width):
+    rng = np.random.default_rng(seed)
+    m, n = int(rng.integers(1, 10)), int(rng.integers(1, 10))
+    row_cols, row_vals = [], []
+    for _ in range(m):
+        k = int(rng.integers(0, 3 * width))
+        cols = rng.integers(0, n, size=k).astype(np.int32)
+        vals = rng.normal(size=k)
+        vals[vals == 0] = 1.0
+        row_cols.append(cols)
+        row_vals.append(vals)
+    vals, cols, seg_row = pack_blocked_ell(row_cols, row_vals, m, n, width)
+    # reconstruct (row, col, val) multiset
+    got = []
+    for s in range(vals.shape[0]):
+        for w in range(width):
+            if vals[s, w] != 0:
+                got.append((int(seg_row[s]), int(cols[s, w]), vals[s, w]))
+    want = []
+    for r in range(m):
+        for c, v in zip(row_cols[r], row_vals[r]):
+            want.append((r, int(c), v))
+    assert sorted(got) == sorted(want)
+
+
+@given(seed=st.integers(0, 100_000))
+def test_pack_segment_count(seed):
+    """Each row occupies exactly ceil(k/W) segments; rows stay contiguous."""
+    rng = np.random.default_rng(seed)
+    w = 4
+    m = int(rng.integers(1, 8))
+    n = 20
+    row_cols = []
+    row_vals = []
+    expected = 0
+    for _ in range(m):
+        k = int(rng.integers(0, 15))
+        row_cols.append(np.arange(k, dtype=np.int32) % n)
+        row_vals.append(np.ones(k))
+        expected += -(-k // w) if k else 0
+    vals, cols, seg_row = pack_blocked_ell(row_cols, row_vals, m, n, w)
+    assert vals.shape[0] == max(expected, 0) or expected == 0
+    # contiguity: seg_row is non-decreasing
+    assert np.all(np.diff(seg_row[:expected]) >= 0)
+
+
+def test_pack_long_row_split():
+    w = 4
+    row_cols = [np.arange(10, dtype=np.int32)]
+    row_vals = [np.arange(1.0, 11.0)]
+    vals, cols, seg_row = pack_blocked_ell(row_cols, row_vals, 1, 10, w)
+    assert vals.shape == (3, 4)
+    assert list(seg_row) == [0, 0, 0]
+    assert list(vals[2]) == [9.0, 10.0, 0.0, 0.0]
+
+
+def test_pad_system_shapes_and_values():
+    rng = np.random.default_rng(7)
+    args = random_system(rng, m=3, n=4, width=4)
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = args
+    out = pad_system(*args, rows_pad=8, cols_pad=9, segs_pad=vals.shape[0] + 3)
+    pv, pc, pr, plhs, prhs, plb, pub, pint = out
+    assert pv.shape == (vals.shape[0] + 3, 4)
+    assert plhs.shape == (8,) and plb.shape == (9,)
+    assert np.all(plhs[3:] == -np.inf) and np.all(prhs[3:] == np.inf)
+    assert np.all(plb[4:] == -np.inf) and np.all(pub[4:] == np.inf)
+    np.testing.assert_array_equal(pv[:vals.shape[0]], vals)
+    np.testing.assert_array_equal(plb[:4], lb)
+
+
+def test_padding_does_not_change_fixed_point():
+    import jax.numpy as jnp
+    from compile import model
+    rng = np.random.default_rng(11)
+    args = random_system(rng, m=5, n=6, width=4)
+    base = model.loop_fn(*[jnp.asarray(a) for a in args], impl="jnp")
+    padded = pad_system(*args, rows_pad=16, cols_pad=17,
+                        segs_pad=args[0].shape[0] + 5)
+    got = model.loop_fn(*[jnp.asarray(a) for a in padded], impl="jnp")
+    np.testing.assert_allclose(np.asarray(got[0])[:6], np.asarray(base[0]),
+                               rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(got[1])[:6], np.asarray(base[1]),
+                               rtol=1e-12)
+    assert int(got[2]) == int(base[2]) and int(got[3]) == int(base[3])

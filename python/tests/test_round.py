@@ -1,0 +1,157 @@
+"""Round semantics: ref.round_ref vs an independent per-entry numpy oracle,
+plus hand-verified examples of the paper's algorithmic steps 1-3."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from tests.util import random_system, slow_round
+
+
+def _jx(args):
+    return [jnp.asarray(a) for a in args]
+
+
+def _cmp_bounds(got, want):
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-9, atol=1e-12)
+
+
+@given(seed=st.integers(0, 100_000),
+       p_inf=st.sampled_from([0.0, 0.2, 0.5, 0.9]),
+       p_int=st.sampled_from([0.0, 0.5, 1.0]))
+def test_round_matches_slow_oracle(seed, p_inf, p_int):
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, p_inf_bound=p_inf, p_int=p_int)
+    nlb, nub, ch, inf_ = ref.round_ref(*_jx(args))
+    wlb, wub, wch, winf = slow_round(*args)
+    _cmp_bounds(nlb, wlb)
+    _cmp_bounds(nub, wub)
+    assert bool(ch) == wch
+    assert bool(inf_) == winf
+
+
+def _single_row(a_row, lhs_v, rhs_v, lb_v, ub_v, ints=None, w=4):
+    n = len(a_row)
+    k = len([a for a in a_row if a != 0])
+    vals = np.zeros((max(1, -(-k // w)), w))
+    cols = np.zeros_like(vals, dtype=np.int32)
+    idx = 0
+    for j, a in enumerate(a_row):
+        if a != 0:
+            vals[idx // w, idx % w] = a
+            cols[idx // w, idx % w] = j
+            idx += 1
+    seg_row = np.zeros(vals.shape[0], np.int32)
+    return (jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(seg_row),
+            jnp.asarray([float(lhs_v)]), jnp.asarray([float(rhs_v)]),
+            jnp.asarray(np.asarray(lb_v, float)),
+            jnp.asarray(np.asarray(ub_v, float)),
+            jnp.asarray(ints if ints is not None else np.zeros(n, np.int32)))
+
+
+def test_step3_textbook_example():
+    # 2x + 3y <= 12, x in [0, 10], y in [0, 10]
+    # minact = 0 => x <= (12 - 0)/2 = 6, y <= (12-0)/3 = 4
+    args = _single_row([2.0, 3.0], -np.inf, 12.0, [0, 0], [10, 10])
+    nlb, nub, ch, inf_ = ref.round_ref(*args)
+    assert list(np.asarray(nub)) == [6.0, 4.0]
+    assert list(np.asarray(nlb)) == [0.0, 0.0]
+    assert int(ch) == 1 and int(inf_) == 0
+
+
+def test_negative_coefficient_tightening():
+    # -x + y >= 1 (lhs=1, rhs=inf), x in [0,4], y in [0,3]
+    # maxact = -0 + 3 = 3; for x (a=-1): x <= (lhs - resmax)/a ... x <= (1-3)/(-1) = 2
+    args = _single_row([-1.0, 1.0], 1.0, np.inf, [0, 0], [4, 3])
+    nlb, nub, _, _ = ref.round_ref(*args)
+    assert float(nub[0]) == 2.0
+    # y >= lhs - resmax(y) = 1 - (-1*0) = 1  => y >= (1 - 0)/1 = 1
+    assert float(nlb[1]) == 1.0
+
+
+def test_redundant_constraint_no_change():
+    # x + y <= 100, x,y in [0,1]: maxact 2 <= 100, Step 1 redundant
+    args = _single_row([1.0, 1.0], -np.inf, 100.0, [0, 0], [1, 1])
+    nlb, nub, ch, inf_ = ref.round_ref(*args)
+    assert int(ch) == 0 and int(inf_) == 0
+    assert list(np.asarray(nub)) == [1.0, 1.0]
+
+
+def test_infeasible_constraint_detected():
+    # x + y <= 1, x,y in [2,3]: minact 4 > 1 -> Step 3 empties domains
+    args = _single_row([1.0, 1.0], -np.inf, 1.0, [2, 2], [3, 3])
+    nlb, nub, ch, inf_ = ref.round_ref(*args)
+    assert int(inf_) == 1
+
+
+def test_integer_rounding():
+    # 2x <= 5, x integer in [0, 10] -> x <= floor(2.5) = 2
+    args = _single_row([2.0], -np.inf, 5.0, [0], [10],
+                       ints=np.array([1], np.int32))
+    nlb, nub, _, _ = ref.round_ref(*args)
+    assert float(nub[0]) == 2.0
+
+
+def test_integer_rounding_eps_guard():
+    # 3x <= 6, x integer: candidate exactly 2.0 must not round to 1
+    args = _single_row([3.0], -np.inf, 6.0, [0], [10],
+                       ints=np.array([1], np.int32))
+    _, nub, _, _ = ref.round_ref(*args)
+    assert float(nub[0]) == 2.0
+
+
+def test_equality_constraint_fixes_variable():
+    # x + y = 5, x in [0,5], y in [5,5] fixed -> x = 0? no: x in [0,0]
+    args = _single_row([1.0, 1.0], 5.0, 5.0, [0, 5], [5, 5])
+    nlb, nub, _, inf_ = ref.round_ref(*args)
+    assert float(nub[0]) == 0.0 and float(nlb[0]) == 0.0
+    assert int(inf_) == 0
+
+
+@given(seed=st.integers(0, 100_000))
+def test_bounds_monotone(seed):
+    """Within a round, lb never decreases and ub never increases."""
+    rng = np.random.default_rng(seed)
+    args = random_system(rng)
+    nlb, nub, _, _ = ref.round_ref(*_jx(args))
+    lb, ub = args[5], args[6]
+    assert np.all(np.asarray(nlb) >= lb)
+    assert np.all(np.asarray(nub) <= ub)
+
+
+@given(seed=st.integers(0, 100_000))
+def test_fixed_point_idempotent(seed):
+    """Once change=0, a second round must leave bounds untouched.
+
+    Note: iterated propagation need not converge finitely (paper section
+    1.1) — instances still changing after MAX_ROUNDS are skipped, exactly
+    as the paper excludes them (section 4.1)."""
+    rng = np.random.default_rng(seed)
+    args = list(_jx(random_system(rng)))
+    ch, inf_ = 1, 0
+    for _ in range(100):
+        nlb, nub, ch, inf_ = ref.round_ref(*args)
+        args[5], args[6] = nlb, nub
+        if int(ch) == 0 or int(inf_) == 1:
+            break
+    if int(inf_) == 1 or int(ch) == 1:
+        return
+    nlb2, nub2, ch2, _ = ref.round_ref(*args)
+    assert int(ch2) == 0
+    np.testing.assert_array_equal(np.asarray(nlb2), np.asarray(args[5]))
+    np.testing.assert_array_equal(np.asarray(nub2), np.asarray(args[6]))
+
+
+@given(seed=st.integers(0, 100_000))
+def test_round_f32_close_to_f64(seed):
+    rng = np.random.default_rng(seed)
+    args = random_system(rng, p_inf_bound=0.3)
+    a64 = _jx(args)
+    a32 = [jnp.asarray(np.asarray(a), jnp.float32)
+           if a.dtype == np.float64 else jnp.asarray(a) for a in args]
+    lb64, ub64, _, _ = ref.round_ref(*a64)
+    lb32, ub32, _, _ = ref.round_ref(*a32)
+    # paper section 4.3 tolerances
+    mask = np.isfinite(np.asarray(lb64))
+    np.testing.assert_allclose(np.asarray(lb32)[mask],
+                               np.asarray(lb64)[mask], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,121 @@
+"""Shared test helpers: random system generation + slow oracle propagation."""
+import numpy as np
+
+from compile.pack import pack_blocked_ell
+from compile import INT_ROUND_EPS, EPS_IMPROVE_REL, FEAS_TOL, MAX_ROUNDS
+
+
+def random_system(rng, m=None, n=None, width=8, density=0.4,
+                  p_inf_bound=0.2, p_int=0.4, max_coef=5.0, min_segs=None):
+    """Generate a random padded blocked-ELL system (numpy arrays)."""
+    m = m if m is not None else int(rng.integers(1, 12))
+    n = n if n is not None else int(rng.integers(1, 12))
+    row_cols, row_vals = [], []
+    for _ in range(m):
+        k = int(rng.binomial(n, density))
+        cols = rng.choice(n, size=k, replace=False).astype(np.int32)
+        vals = rng.uniform(-max_coef, max_coef, size=k)
+        vals = np.where(np.abs(vals) < 1e-3, 1.0, vals)  # no near-zeros
+        row_cols.append(np.sort(cols))
+        row_vals.append(vals[np.argsort(cols)])
+    vals, cols, seg_row = pack_blocked_ell(row_cols, row_vals, m, n, width,
+                                           min_segs=max(1, min_segs or 1))
+    lb = rng.uniform(-10, 0, n)
+    ub = lb + rng.uniform(0, 10, n)
+    lb[rng.random(n) < p_inf_bound] = -np.inf
+    ub[rng.random(n) < p_inf_bound] = np.inf
+    is_int = (rng.random(n) < p_int).astype(np.int32)
+    lb = np.where(is_int & np.isfinite(lb), np.ceil(lb), lb)
+    ub = np.where(is_int & np.isfinite(ub), np.floor(ub), ub)
+    lhs = rng.uniform(-20, 0, m)
+    rhs = lhs + rng.uniform(0, 30, m)
+    lhs[rng.random(m) < 0.3] = -np.inf
+    rhs[rng.random(m) < 0.3] = np.inf
+    return (vals, cols, seg_row, lhs.astype(np.float64),
+            rhs.astype(np.float64), lb.astype(np.float64),
+            ub.astype(np.float64), is_int)
+
+
+def improves_lb_np(old, new):
+    fin = np.isfinite(old)
+    safe = np.where(fin, old, 0.0)
+    thresh = np.maximum(1.0, np.abs(safe)) * EPS_IMPROVE_REL
+    return np.where(fin, new > safe + thresh, new > old)
+
+
+def improves_ub_np(old, new):
+    fin = np.isfinite(old)
+    safe = np.where(fin, old, 0.0)
+    thresh = np.maximum(1.0, np.abs(safe)) * EPS_IMPROVE_REL
+    return np.where(fin, new < safe - thresh, new < old)
+
+
+def slow_round(vals, cols, seg_row, lhs, rhs, lb, ub, is_int):
+    """Dead-simple per-entry numpy propagation round (independent oracle:
+    no segments, no masks — literal transcription of eqs. (3)-(5))."""
+    m = lhs.shape[0]
+    n = lb.shape[0]
+    entries = []  # (row, col, a)
+    S, W = vals.shape
+    for s in range(S):
+        for w in range(W):
+            if vals[s, w] != 0.0:
+                entries.append((int(seg_row[s]), int(cols[s, w]), vals[s, w]))
+    fin_min = np.zeros(m)
+    cnt_min = np.zeros(m, int)
+    fin_max = np.zeros(m)
+    cnt_max = np.zeros(m, int)
+    for (r, j, a) in entries:
+        bmin = lb[j] if a > 0 else ub[j]
+        bmax = ub[j] if a > 0 else lb[j]
+        if np.isfinite(bmin):
+            fin_min[r] += a * bmin
+        else:
+            cnt_min[r] += 1
+        if np.isfinite(bmax):
+            fin_max[r] += a * bmax
+        else:
+            cnt_max[r] += 1
+    best_lb = np.full(n, -np.inf)
+    best_ub = np.full(n, np.inf)
+    for (r, j, a) in entries:
+        bmin = lb[j] if a > 0 else ub[j]
+        bmax = ub[j] if a > 0 else lb[j]
+        own_cmin = 0 if np.isfinite(bmin) else 1
+        own_cmax = 0 if np.isfinite(bmax) else 1
+        resmin = (fin_min[r] - (a * bmin if own_cmin == 0 else 0.0)
+                  if cnt_min[r] - own_cmin == 0 else -np.inf)
+        resmax = (fin_max[r] - (a * bmax if own_cmax == 0 else 0.0)
+                  if cnt_max[r] - own_cmax == 0 else np.inf)
+        if a > 0:
+            ub_num, lb_num = rhs[r] - resmin, lhs[r] - resmax
+        else:
+            ub_num, lb_num = lhs[r] - resmax, rhs[r] - resmin
+        uc = ub_num / a if np.isfinite(ub_num) else np.inf
+        lc = lb_num / a if np.isfinite(lb_num) else -np.inf
+        if is_int[j] and np.isfinite(uc):
+            uc = np.floor(uc + INT_ROUND_EPS)
+        if is_int[j] and np.isfinite(lc):
+            lc = np.ceil(lc - INT_ROUND_EPS)
+        best_ub[j] = min(best_ub[j], uc)
+        best_lb[j] = max(best_lb[j], lc)
+    lb_imp = improves_lb_np(lb, best_lb)
+    ub_imp = improves_ub_np(ub, best_ub)
+    new_lb = np.where(lb_imp, best_lb, lb)
+    new_ub = np.where(ub_imp, best_ub, ub)
+    change = bool(lb_imp.any() or ub_imp.any())
+    infeas = bool((new_lb > new_ub + FEAS_TOL).any())
+    return new_lb, new_ub, change, infeas
+
+
+def slow_propagate(args, max_rounds=MAX_ROUNDS):
+    vals, cols, seg_row, lhs, rhs, lb, ub, is_int = args
+    lb, ub = lb.copy(), ub.copy()
+    rounds = 0
+    infeas = False
+    change = True
+    while change and not infeas and rounds < max_rounds:
+        lb, ub, change, infeas = slow_round(
+            vals, cols, seg_row, lhs, rhs, lb, ub, is_int)
+        rounds += 1
+    return lb, ub, rounds, infeas

@@ -1,0 +1,138 @@
+//! Benchmark harness (`cargo bench`). The offline registry has no
+//! criterion; this is a self-contained harness with warmup, repetition and
+//! min/median reporting (rust/src/util/timer.rs).
+//!
+//! Two groups:
+//! * micro — hot-path benches per engine/kernel (per-round costs).
+//! * paper — one end-to-end bench per paper table/figure, delegating to
+//!   the experiment harness on a reduced suite and printing the same rows
+//!   the paper reports.
+//!
+//! Filters: `cargo bench -- micro` or `cargo bench -- table1` etc.
+
+use std::rc::Rc;
+
+use gdp::experiments;
+use gdp::gen::{generate, Family, GenConfig};
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::papilo_like::PapiloLikeEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::xla_engine::{SyncVariant, XlaConfig, XlaEngine};
+use gdp::propagation::Engine;
+use gdp::runtime::Runtime;
+use gdp::util::cli::Args;
+use gdp::util::fmt::secs;
+use gdp::util::timer::measure;
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) {
+    let (min, median, mean) = measure(warmup, iters, f);
+    println!(
+        "bench {name:56} min {:>10}  median {:>10}  mean {:>10}",
+        secs(min),
+        secs(median),
+        secs(mean)
+    );
+}
+
+fn micro() {
+    println!("\n== micro: per-engine propagation cost ==");
+    for &(rows, cols, nnz) in &[(500usize, 500usize, 6usize), (4000, 4000, 8), (20000, 18000, 10)] {
+        let inst = generate(&GenConfig {
+            family: Family::Mixed,
+            nrows: rows,
+            ncols: cols,
+            mean_row_nnz: nnz,
+            seed: 11,
+            ..Default::default()
+        });
+        let label = format!("{}x{}", rows, cols);
+        let mut seq = SeqEngine::new();
+        bench(&format!("cpu_seq/{label}"), 1, 5, || {
+            let _ = seq.propagate(&inst);
+        });
+        let mut gpu = GpuModelEngine::default();
+        bench(&format!("gpu_model/{label}"), 1, 5, || {
+            let _ = gpu.propagate(&inst);
+        });
+        let mut omp = OmpEngine::with_threads(8);
+        bench(&format!("cpu_omp8/{label}"), 1, 5, || {
+            let _ = omp.propagate(&inst);
+        });
+        let mut pap = PapiloLikeEngine::default();
+        bench(&format!("papilo_like/{label}"), 1, 5, || {
+            let _ = pap.propagate(&inst);
+        });
+    }
+
+    if let Ok(rt) = Runtime::open(std::path::Path::new("artifacts")) {
+        let rt = Rc::new(rt);
+        println!("\n== micro: XLA engine (AOT artifacts via PJRT) ==");
+        for &(rows, cols) in &[(500usize, 500usize), (4000, 4000), (20000, 18000)] {
+            let inst = generate(&GenConfig {
+                family: Family::Mixed,
+                nrows: rows,
+                ncols: cols,
+                mean_row_nnz: 8,
+                seed: 11,
+                ..Default::default()
+            });
+            let label = format!("{}x{}", rows, cols);
+            for (tag, config) in [
+                ("pallas_round", XlaConfig::default()),
+                ("jnp_round", XlaConfig::default().jnp()),
+                ("gpu_loop", XlaConfig::default().variant(SyncVariant::GpuLoop)),
+                ("megakernel", XlaConfig::default().variant(SyncVariant::Megakernel)),
+                ("f32_round", XlaConfig::default().f32()),
+            ] {
+                let mut e = XlaEngine::new(rt.clone(), config);
+                // first call pays (untimed-internally) artifact compilation
+                let _ = e.try_propagate(&inst).unwrap();
+                bench(&format!("xla_{tag}/{label}"), 0, 3, || {
+                    let _ = e.try_propagate(&inst).unwrap();
+                });
+            }
+        }
+    } else {
+        println!("(artifacts missing; skipping XLA micro benches)");
+    }
+}
+
+fn paper(filter: Option<&str>) {
+    // reduced suite: every table/figure regenerated end-to-end
+    // fig5/fig6 rerun the XLA engine several times per instance; the bench
+    // default keeps sets 1-5 so a full `cargo bench` stays in minutes.
+    // GDP_BENCH_SCALE / GDP_BENCH_SETS override.
+    let scale = std::env::var("GDP_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let sets = std::env::var("GDP_BENCH_SETS").unwrap_or_else(|_| "1,2,3,4,5".to_string());
+    let args = Args::parse(vec![format!("--scale={scale}"), format!("--sets={sets}")]);
+    for id in experiments::ALL_EXPERIMENTS {
+        if let Some(f) = filter {
+            if !id.contains(f) {
+                continue;
+            }
+        }
+        println!("\n== paper bench: {id} (scale {scale}) ==");
+        let t = std::time::Instant::now();
+        match experiments::run(id, &args) {
+            Ok(out) => {
+                print!("{}", out.to_text());
+                println!("bench {id}: completed in {}", secs(t.elapsed().as_secs_f64()));
+            }
+            Err(e) => println!("bench {id}: ERROR {e:#}"),
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let filter = args.first().map(|s| s.as_str());
+    match filter {
+        Some("micro") => micro(),
+        Some(f) => paper(Some(f)),
+        None => {
+            micro();
+            paper(None);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Specifications of the paper's seven machines (section 4.2), from the
+//! public datasheets the paper cites ([1][2][3] NVIDIA architecture
+//! whitepapers; CPU figures from vendor ark pages).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    Gpu,
+    Cpu,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub class: DeviceClass,
+    /// Peak memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Peak FP64 throughput, GFLOP/s.
+    pub fp64_gflops: f64,
+    /// Peak FP32 throughput, GFLOP/s.
+    pub fp32_gflops: f64,
+    /// GPU: streaming multiprocessors; CPU: cores.
+    pub units: usize,
+    /// GPU: nonzeros needed to saturate bandwidth (occupancy model).
+    /// CPU: unused.
+    pub saturation_nnz: f64,
+    /// Fraction of peak bandwidth this irregular, gather-heavy kernel can
+    /// achieve at full occupancy (latency-hiding quality of the part).
+    pub bw_efficiency: f64,
+    /// GPU: kernel-launch + host sync latency per dispatch, microseconds.
+    /// CPU (parallel): per-round thread-team fork/join overhead.
+    pub dispatch_overhead_us: f64,
+    /// Serialized-atomic cost per conflicting update, nanoseconds.
+    pub atomic_ns: f64,
+    /// CPU: last-level cache, MiB (working-set bandwidth cliff).
+    pub cache_mib: f64,
+    /// CPU: single-core sustained DRAM bandwidth, GB/s.
+    pub core_bw_gbs: f64,
+    /// CPU: sustained scalar cycles per processed nonzero (branchy
+    /// propagation inner loop).
+    pub cycles_per_nnz: f64,
+    /// CPU: clock, GHz.
+    pub ghz: f64,
+}
+
+const GPU_DEFAULTS: DeviceSpec = DeviceSpec {
+    name: "",
+    class: DeviceClass::Gpu,
+    mem_bw_gbs: 0.0,
+    fp64_gflops: 0.0,
+    fp32_gflops: 0.0,
+    units: 0,
+    saturation_nnz: 0.0,
+    bw_efficiency: 0.33,
+    dispatch_overhead_us: 8.0,
+    atomic_ns: 8.0,
+    cache_mib: 0.0,
+    core_bw_gbs: 0.0,
+    cycles_per_nnz: 0.0,
+    ghz: 0.0,
+};
+
+const CPU_DEFAULTS: DeviceSpec = DeviceSpec {
+    name: "",
+    class: DeviceClass::Cpu,
+    mem_bw_gbs: 0.0,
+    fp64_gflops: 0.0,
+    fp32_gflops: 0.0,
+    units: 0,
+    saturation_nnz: 0.0,
+    bw_efficiency: 1.0,
+    dispatch_overhead_us: 25.0, // omp parallel-for fork/join
+    atomic_ns: 20.0,
+    cache_mib: 0.0,
+    core_bw_gbs: 0.0,
+    cycles_per_nnz: 9.0,
+    ghz: 0.0,
+};
+
+/// NVIDIA Tesla V100 PCIe 32GB (Volta, [2]).
+pub const V100: DeviceSpec = DeviceSpec {
+    name: "V100",
+    mem_bw_gbs: 900.0,
+    fp64_gflops: 7_000.0,
+    fp32_gflops: 14_000.0,
+    units: 80,
+    saturation_nnz: 1.6e6,
+    bw_efficiency: 0.35,
+    ..GPU_DEFAULTS
+};
+
+/// NVIDIA Titan RTX 24GB (Turing, [3]); FP64 at 1/32 rate.
+pub const TITAN: DeviceSpec = DeviceSpec {
+    name: "TITAN",
+    mem_bw_gbs: 672.0,
+    fp64_gflops: 510.0,
+    fp32_gflops: 16_300.0,
+    units: 72,
+    saturation_nnz: 1.4e6,
+    ..GPU_DEFAULTS
+};
+
+/// NVIDIA GeForce RTX 2080 SUPER 8GB (Turing).
+pub const RTXSUPER: DeviceSpec = DeviceSpec {
+    name: "RTXsuper",
+    mem_bw_gbs: 496.0,
+    fp64_gflops: 350.0,
+    fp32_gflops: 11_200.0,
+    units: 48,
+    saturation_nnz: 1.0e6,
+    ..GPU_DEFAULTS
+};
+
+/// NVIDIA Quadro P400 2GB (Pascal, low end): 3 SMs worth of GP107 silicon,
+/// slow GDDR5, higher launch latency on desktop stacks.
+pub const P400: DeviceSpec = DeviceSpec {
+    name: "P400",
+    mem_bw_gbs: 32.0,
+    fp64_gflops: 20.0,
+    fp32_gflops: 640.0,
+    units: 3,
+    saturation_nnz: 6.0e4,
+    bw_efficiency: 0.1, // 2-SM Pascal: almost no latency hiding for gathers
+    dispatch_overhead_us: 12.0,
+    atomic_ns: 25.0,
+    ..GPU_DEFAULTS
+};
+
+/// 24-core Intel Xeon Gold 6246 @ 3.3 GHz, 384 GB RAM (the paper's
+/// baseline host).
+pub const XEON: DeviceSpec = DeviceSpec {
+    name: "xeon",
+    units: 24,
+    ghz: 3.3,
+    cache_mib: 33.0,
+    core_bw_gbs: 12.0,
+    mem_bw_gbs: 140.0,
+    ..CPU_DEFAULTS
+};
+
+/// 64-core AMD Ryzen Threadripper 3990X @ 3.3 GHz, 128 GB RAM.
+pub const AMDTR: DeviceSpec = DeviceSpec {
+    name: "amdtr",
+    units: 64,
+    ghz: 3.3,
+    cache_mib: 256.0,
+    core_bw_gbs: 14.0,
+    mem_bw_gbs: 100.0,
+    cycles_per_nnz: 9.5,
+    ..CPU_DEFAULTS
+};
+
+/// 8-core Intel i7-9700K @ 3.6 GHz, 64 GB RAM (desktop).
+pub const I7_9700K: DeviceSpec = DeviceSpec {
+    name: "i7-9700K",
+    units: 8,
+    ghz: 3.6,
+    cache_mib: 12.0,
+    core_bw_gbs: 15.0,
+    mem_bw_gbs: 40.0,
+    cycles_per_nnz: 9.0,
+    dispatch_overhead_us: 12.0, // desktop part: cheaper thread fork/join
+    ..CPU_DEFAULTS
+};
+
+pub const ALL_GPUS: [&DeviceSpec; 4] = [&V100, &TITAN, &RTXSUPER, &P400];
+pub const ALL_CPUS: [&DeviceSpec; 3] = [&XEON, &AMDTR, &I7_9700K];
+
+/// Machine balance (FLOP/byte at which a kernel turns compute-bound),
+/// as used in the paper's roofline discussion (V100: 8.53 in FP64... the
+/// paper's number uses FP32; ours is per-dtype).
+pub fn machine_balance(spec: &DeviceSpec, fp32: bool) -> f64 {
+    let flops = if fp32 { spec.fp32_gflops } else { spec.fp64_gflops };
+    flops / spec.mem_bw_gbs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_balance_matches_paper_order() {
+        // paper reports 8.53 for the V100 (FP64 TFLOPs over bandwidth,
+        // both in their respective units)
+        let b = machine_balance(&V100, false);
+        assert!((7.0..9.5).contains(&b), "balance {b}");
+    }
+
+    #[test]
+    fn gpu_ranking_sane() {
+        assert!(V100.mem_bw_gbs > TITAN.mem_bw_gbs);
+        assert!(TITAN.mem_bw_gbs > RTXSUPER.mem_bw_gbs);
+        assert!(RTXSUPER.mem_bw_gbs > P400.mem_bw_gbs);
+        // Turing FP64 is crippled relative to Volta
+        assert!(TITAN.fp64_gflops < V100.fp64_gflops / 10.0);
+    }
+
+    #[test]
+    fn cpu_classes() {
+        for c in ALL_CPUS {
+            assert_eq!(c.class, DeviceClass::Cpu);
+            assert!(c.ghz > 1.0 && c.units >= 8);
+        }
+        for g in ALL_GPUS {
+            assert_eq!(g.class, DeviceClass::Gpu);
+        }
+    }
+}

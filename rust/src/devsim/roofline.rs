@@ -1,0 +1,123 @@
+//! Roofline analysis (paper section 4.4 / Williams et al. [23]): arithmetic
+//! intensity of a recorded run and the fraction of attainable performance
+//! the modeled execution achieves.
+
+use super::device::DeviceSpec;
+use super::model::{estimate_time, ExecutionKind};
+use crate::propagation::trace::Trace;
+use crate::sparse::stats::MatrixStats;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflineResult {
+    /// FLOP per byte moved.
+    pub arithmetic_intensity: f64,
+    /// FLOP/s the roofline allows at this intensity.
+    pub attainable_flops: f64,
+    /// FLOP/s the modeled run achieved.
+    pub achieved_flops: f64,
+    /// achieved / attainable, in [0, 1].
+    pub fraction_of_attainable: f64,
+    /// Is the kernel memory-bound at this intensity on this machine?
+    pub memory_bound: bool,
+}
+
+/// FLOPs and bytes of one run (same constants as the cost model).
+pub fn flops_and_bytes(trace: &Trace, stats: &MatrixStats, fp32: bool) -> (f64, f64) {
+    let fbytes = if fp32 { 4.0 } else { 8.0 };
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+    for round in &trace.rounds {
+        let nnz = round.nnz_processed.max(1) as f64 / 2.0;
+        flops += nnz * 8.0;
+        // integer index traffic dominates alongside float traffic
+        // (section 4.5's explanation for the modest FP32 gains)
+        bytes += nnz * (fbytes + 4.0)
+            + stats.nrows as f64 * (4.0 * fbytes + 8.0)
+            + stats.ncols as f64 * (4.0 * fbytes + 4.0);
+    }
+    (flops, bytes)
+}
+
+/// Roofline position of a (modeled) GPU execution.
+pub fn analyze(spec: &DeviceSpec, kind: ExecutionKind, trace: &Trace, stats: &MatrixStats) -> RooflineResult {
+    let fp32 = matches!(
+        kind,
+        ExecutionKind::GpuCpuLoop { fp32: true }
+            | ExecutionKind::GpuDeviceLoop { fp32: true }
+            | ExecutionKind::GpuMegakernel { fp32: true }
+    );
+    let (flops, bytes) = flops_and_bytes(trace, stats, fp32);
+    let ai = flops / bytes;
+    let peak = if fp32 { spec.fp32_gflops } else { spec.fp64_gflops } * 1e9;
+    let bw = spec.mem_bw_gbs * 1e9;
+    let attainable = (ai * bw).min(peak);
+    let secs = estimate_time(spec, kind, trace, stats);
+    let achieved = flops / secs;
+    RooflineResult {
+        arithmetic_intensity: ai,
+        attainable_flops: attainable,
+        achieved_flops: achieved,
+        fraction_of_attainable: (achieved / attainable).min(1.0),
+        memory_bound: ai * bw < peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devsim::device::V100;
+    use crate::propagation::trace::RoundTrace;
+
+    fn setup(nnz: usize) -> (Trace, MatrixStats) {
+        let mut t = Trace::default();
+        for _ in 0..4 {
+            t.push(RoundTrace { rows_processed: nnz / 8, nnz_processed: 2 * nnz, ..Default::default() });
+        }
+        let stats = MatrixStats {
+            nrows: nnz / 8,
+            ncols: nnz / 8,
+            nnz,
+            density: 0.01,
+            row_nnz_min: 1,
+            row_nnz_max: 64,
+            row_nnz_mean: 8.0,
+            row_nnz_stddev: 2.0,
+            col_nnz_min: 1,
+            col_nnz_max: 64,
+            col_nnz_mean: 8.0,
+            col_nnz_stddev: 2.0,
+            top1pct_row_share: 0.05,
+        };
+        (t, stats)
+    }
+
+    #[test]
+    fn propagation_is_memory_bound_on_v100() {
+        let (t, s) = setup(1_000_000);
+        let r = analyze(&V100, ExecutionKind::GpuCpuLoop { fp32: false }, &t, &s);
+        // paper section 4.4: AI well below the machine balance
+        assert!(r.memory_bound);
+        assert!(r.arithmetic_intensity < 2.0, "{}", r.arithmetic_intensity);
+        assert!(r.fraction_of_attainable > 0.0 && r.fraction_of_attainable <= 1.0);
+    }
+
+    #[test]
+    fn fraction_higher_on_large_instances() {
+        let (ts, ss) = setup(10_000);
+        let (tl, sl) = setup(4_000_000);
+        let small = analyze(&V100, ExecutionKind::GpuCpuLoop { fp32: false }, &ts, &ss);
+        let large = analyze(&V100, ExecutionKind::GpuCpuLoop { fp32: false }, &tl, &sl);
+        assert!(large.fraction_of_attainable > small.fraction_of_attainable);
+    }
+
+    #[test]
+    fn fp32_lowers_intensity() {
+        // fewer float bytes but identical integer traffic -> AI changes
+        // little; the paper reports sp runs even more memory-bound
+        let (t, s) = setup(1_000_000);
+        let dp = analyze(&V100, ExecutionKind::GpuCpuLoop { fp32: false }, &t, &s);
+        let sp = analyze(&V100, ExecutionKind::GpuCpuLoop { fp32: true }, &t, &s);
+        assert!(sp.memory_bound);
+        assert!(sp.attainable_flops > dp.attainable_flops * 0.5);
+    }
+}

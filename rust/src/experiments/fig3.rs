@@ -1,0 +1,91 @@
+//! Figure 3 (section 4.6): validation against the PaPILO-style baseline.
+//! Measured on this host: papilo_like with 1 and 8 threads, and cpu_omp
+//! with 8 threads, against the cpu_seq baseline.
+//! Paper: PaPILO-1t speedup 0.08, PaPILO-8t 0.07, both improving with size.
+
+use anyhow::Result;
+
+use super::context::{comparable, measured, measured_omp, run_native, ExpContext};
+use super::ExpOutput;
+use crate::metrics::{per_set_geomeans, SpeedupRecord};
+use crate::propagation::papilo_like::PapiloLikeEngine;
+use crate::util::fmt::{ratio, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
+    let mut out = ExpOutput::new("fig3");
+    let mut records: Vec<SpeedupRecord> = Vec::new();
+    let mut agree = 0usize;
+    let mut disagree = 0usize;
+
+    for inst in &ctx.suite {
+        let runs = run_native(inst);
+        if runs.seq.status != crate::propagation::Status::Converged {
+            continue;
+        }
+        let mut pap1 = PapiloLikeEngine::with_threads(1);
+        let mut pap8 = PapiloLikeEngine::with_threads(8);
+        let (r1, t1) = measured(&mut pap1, inst);
+        let (_r8, t8) = measured(&mut pap8, inst);
+        let (_ro, to) = measured_omp(inst, 8);
+        if comparable(&runs.seq, &r1) {
+            agree += 1;
+        } else {
+            disagree += 1;
+            continue;
+        }
+        records.push(SpeedupRecord {
+            instance: runs.name,
+            size: runs.size,
+            base_secs: runs.seq.wall.as_secs_f64(),
+            cand_secs: vec![t1, t8, to],
+        });
+    }
+
+    let names = ["papilo_like 1t", "papilo_like 8t", "cpu_omp 8t"];
+    let per: Vec<([f64; 8], f64)> =
+        (0..names.len()).map(|k| per_set_geomeans(&records, k)).collect();
+    let mut t = Table::new(
+        std::iter::once("set".to_string()).chain(names.iter().map(|s| s.to_string())).collect::<Vec<_>>(),
+    );
+    for set in 0..8 {
+        let mut row = vec![format!("Set-{}", set + 1)];
+        for (sets, _) in &per {
+            row.push(if sets[set].is_nan() { "-".into() } else { ratio(sets[set]) });
+        }
+        t.row(row);
+    }
+    let mut all = vec!["All".to_string()];
+    for (_, a) in &per {
+        all.push(ratio(*a));
+    }
+    t.row(all);
+    out.tables.push(("measured speedups vs cpu_seq (paper Fig. 3)".into(), t));
+    out.note(format!(
+        "result agreement with cpu_seq: {agree} same limit point, {disagree} excluded \
+         (paper keeps 701 of 987 through its PaPILO comparison pipeline)"
+    ));
+
+    out.check(
+        "papilo_like is slower than cpu_seq overall (paper: 0.08x)",
+        per[0].1 < 1.0,
+    );
+    out.check(
+        "multithreaded papilo_like no faster overall on this suite (paper: 0.07x)",
+        per[1].1 <= per[0].1 * 1.5,
+    );
+    out.check("most instances agree on the limit point", agree >= disagree);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::suite::{generate_suite, SuiteConfig};
+
+    #[test]
+    fn smoke_run() {
+        let ctx = ExpContext::with_suite(generate_suite(&SuiteConfig::smoke()));
+        let out = run(&ctx).unwrap();
+        assert!(!out.tables.is_empty());
+    }
+}

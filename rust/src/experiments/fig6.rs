@@ -1,0 +1,130 @@
+//! Figure 6 (Appendix C): synchronization variants — cpu_loop vs gpu_loop
+//! vs megakernel, per size set. Both measured (the three artifact variants
+//! on this host) and modeled (TITAN-class GPU).
+//! Paper: cpu_loop 1.72x faster than gpu_loop overall, gap closing with
+//! size (Amdahl); megakernel worst everywhere.
+
+use anyhow::Result;
+
+use super::context::{comparable, run_native, ExpContext};
+use super::ExpOutput;
+use crate::devsim::device::{RTXSUPER, XEON};
+use crate::devsim::ExecutionKind;
+use crate::metrics::{geomean, per_set_geomeans, SpeedupRecord};
+use crate::propagation::xla_engine::{SyncVariant, XlaConfig};
+use crate::util::fmt::{ratio, Table};
+
+pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
+    let mut out = ExpOutput::new("fig6");
+    let mut cpu_loop = ctx.xla_engine(XlaConfig::default())?;
+    let mut gpu_loop = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::GpuLoop))?;
+    let mut mega = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::Megakernel))?;
+
+    let mut measured: Vec<SpeedupRecord> = Vec::new();
+    let mut modeled: Vec<SpeedupRecord> = Vec::new();
+    let mut loop_ratio: Vec<f64> = Vec::new();
+
+    for inst in &ctx.suite {
+        let runs = run_native(inst);
+        if !comparable(&runs.seq, &runs.gpu_model) {
+            continue;
+        }
+        let a = cpu_loop.try_propagate(inst)?;
+        let b = gpu_loop.try_propagate(inst)?;
+        let c = mega.try_propagate(inst)?;
+        if a.status != crate::propagation::Status::Converged {
+            continue;
+        }
+        measured.push(SpeedupRecord {
+            instance: runs.name.clone(),
+            size: runs.size,
+            base_secs: runs.seq.wall.as_secs_f64(),
+            cand_secs: vec![
+                a.wall.as_secs_f64(),
+                b.wall.as_secs_f64(),
+                c.wall.as_secs_f64(),
+            ],
+        });
+        let base = super::context::modeled(&runs, &XEON, ExecutionKind::CpuSeq);
+        let m_cpu =
+            super::context::modeled(&runs, &RTXSUPER, ExecutionKind::GpuCpuLoop { fp32: false });
+        let m_gpu =
+            super::context::modeled(&runs, &RTXSUPER, ExecutionKind::GpuDeviceLoop { fp32: false });
+        let m_mega =
+            super::context::modeled(&runs, &RTXSUPER, ExecutionKind::GpuMegakernel { fp32: false });
+        loop_ratio.push(m_gpu / m_cpu);
+        modeled.push(SpeedupRecord {
+            instance: runs.name,
+            size: runs.size,
+            base_secs: base,
+            cand_secs: vec![m_cpu, m_gpu, m_mega],
+        });
+    }
+
+    let names = ["cpu_loop", "gpu_loop", "megakernel"];
+    for (label, records) in
+        [("measured (this host)", &measured), ("modeled (RTXsuper)", &modeled)]
+    {
+        let per: Vec<([f64; 8], f64)> =
+            (0..names.len()).map(|k| per_set_geomeans(records, k)).collect();
+        let mut t = Table::new(
+            std::iter::once("set".to_string())
+                .chain(names.iter().map(|s| s.to_string()))
+                .collect::<Vec<_>>(),
+        );
+        for set in 0..8 {
+            let mut row = vec![format!("Set-{}", set + 1)];
+            for (sets, _) in &per {
+                row.push(if sets[set].is_nan() { "-".into() } else { ratio(sets[set]) });
+            }
+            t.row(row);
+        }
+        let mut all = vec!["All".to_string()];
+        for (_, a) in &per {
+            all.push(ratio(*a));
+        }
+        t.row(all);
+        out.tables.push((format!("{label} speedups vs cpu_seq"), t));
+    }
+
+    // shape checks on the modeled layer (the measured host layer conflates
+    // XLA while-loop compilation quality with the sync question)
+    let per_modeled: Vec<([f64; 8], f64)> =
+        (0..names.len()).map(|k| per_set_geomeans(&modeled, k)).collect();
+    out.note(format!(
+        "modeled gpu_loop/cpu_loop time ratio: geomean {:.2} (paper: 1.72)",
+        geomean(&loop_ratio)
+    ));
+    out.check("cpu_loop fastest overall (modeled)", {
+        per_modeled[0].1 >= per_modeled[1].1 && per_modeled[0].1 >= per_modeled[2].1
+    });
+    out.check("megakernel slowest overall (modeled)", {
+        per_modeled[2].1 <= per_modeled[1].1
+    });
+    out.check("cpu_loop vs gpu_loop gap closes with size (modeled)", {
+        let first = loop_ratio.first().copied().unwrap_or(1.0);
+        // compare small-set vs large-set per-set ratios
+        let small = per_modeled[1].0.iter().find(|x| !x.is_nan());
+        let large = per_modeled[1].0.iter().rev().find(|x| !x.is_nan());
+        match (small, large) {
+            (Some(s), Some(l)) => {
+                let small_gap = per_modeled[0]
+                    .0
+                    .iter()
+                    .find(|x| !x.is_nan())
+                    .map(|c| c / s)
+                    .unwrap_or(first);
+                let large_gap = per_modeled[0]
+                    .0
+                    .iter()
+                    .rev()
+                    .find(|x| !x.is_nan())
+                    .map(|c| c / l)
+                    .unwrap_or(first);
+                large_gap <= small_gap * 1.05
+            }
+            _ => true,
+        }
+    });
+    Ok(out)
+}

@@ -1,0 +1,116 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md
+//! section 5). Every experiment produces the same rows/series the paper
+//! reports, written as aligned text + CSV + Markdown into `results/`.
+
+pub mod context;
+pub mod price_par;
+pub mod table1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod roofline_exp;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+use crate::util::fmt::Table;
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 8] =
+    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6"];
+
+/// Run one experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
+    let ctx = context::ExpContext::from_args(args)?;
+    match id {
+        "price-par" => price_par::run(&ctx),
+        "table1" => table1::run(&ctx),
+        "fig2" => fig2::run(&ctx),
+        "roofline" => roofline_exp::run(&ctx),
+        "fig3" => fig3::run(&ctx),
+        "fig4" => fig4::run(&ctx),
+        "fig5" => fig5::run(&ctx),
+        "fig6" => fig6::run(&ctx),
+        other => anyhow::bail!("unknown experiment {other}; known: {ALL_EXPERIMENTS:?}"),
+    }
+}
+
+/// What an experiment produces: named tables plus shape-check findings.
+pub struct ExpOutput {
+    pub id: &'static str,
+    pub tables: Vec<(String, Table)>,
+    /// Human-readable notes (headline numbers, counts).
+    pub notes: Vec<String>,
+    /// Shape checks: (description, passed).
+    pub checks: Vec<(String, bool)>,
+}
+
+impl ExpOutput {
+    pub fn new(id: &'static str) -> ExpOutput {
+        ExpOutput { id, tables: Vec::new(), notes: Vec::new(), checks: Vec::new() }
+    }
+
+    pub fn check(&mut self, desc: impl Into<String>, ok: bool) {
+        self.checks.push((desc.into(), ok));
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn all_checks_pass(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+
+    /// Write `<outdir>/<id>.md` and one CSV per table; returns the report.
+    pub fn write(&self, outdir: &Path) -> Result<String> {
+        std::fs::create_dir_all(outdir)?;
+        let mut report = format!("# Experiment {}\n\n", self.id);
+        for note in &self.notes {
+            report.push_str(&format!("- {note}\n"));
+        }
+        report.push('\n');
+        for (name, table) in &self.tables {
+            report.push_str(&format!("## {name}\n\n"));
+            report.push_str(&table.to_markdown());
+            report.push('\n');
+            let csv_name = format!(
+                "{}_{}.csv",
+                self.id,
+                name.to_lowercase().replace([' ', '/', '-'], "_")
+            );
+            std::fs::write(outdir.join(&csv_name), table.to_csv())?;
+        }
+        if !self.checks.is_empty() {
+            report.push_str("## Shape checks\n\n");
+            for (desc, ok) in &self.checks {
+                report.push_str(&format!("- [{}] {desc}\n", if *ok { "x" } else { " " }));
+            }
+        }
+        std::fs::write(outdir.join(format!("{}.md", self.id)), &report)?;
+        Ok(report)
+    }
+
+    /// Render to stdout-style text.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("=== {} ===\n", self.id);
+        for note in &self.notes {
+            out.push_str(&format!("  {note}\n"));
+        }
+        for (name, table) in &self.tables {
+            out.push_str(&format!("\n-- {name} --\n"));
+            out.push_str(&table.to_text());
+        }
+        if !self.checks.is_empty() {
+            out.push_str("\nshape checks:\n");
+            for (desc, ok) in &self.checks {
+                out.push_str(&format!("  [{}] {desc}\n", if *ok { "PASS" } else { "FAIL" }));
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,88 @@
+//! Section 2.2: the "price of parallelism" — propagation-round counts of
+//! the sequential Algorithm 1 vs the round-synchronous Algorithm 2 on the
+//! instances where both converge to the same limit point.
+//! Paper: avg 3.1 -> 4.4 rounds (factor 1.4), max factor 22.0.
+
+use anyhow::Result;
+
+use super::context::{comparable, run_native, ExpContext};
+use super::ExpOutput;
+use crate::metrics::geomean;
+use crate::util::fmt::Table;
+
+pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
+    let mut out = ExpOutput::new("price-par");
+    let mut rows_table = Table::new(vec!["instance", "size", "rounds_seq", "rounds_par", "factor"]);
+    let mut seq_rounds = Vec::new();
+    let mut par_rounds = Vec::new();
+    let mut factors = Vec::new();
+    let mut excluded = 0usize;
+
+    for inst in &ctx.suite {
+        let runs = run_native(inst);
+        if !comparable(&runs.seq, &runs.gpu_model) {
+            excluded += 1;
+            continue;
+        }
+        let s = runs.seq.rounds as f64;
+        let p = runs.gpu_model.rounds as f64;
+        let f = p / s;
+        rows_table.row(vec![
+            runs.name.clone(),
+            runs.size.to_string(),
+            format!("{}", runs.seq.rounds),
+            format!("{}", runs.gpu_model.rounds),
+            format!("{f:.2}"),
+        ]);
+        seq_rounds.push(s);
+        par_rounds.push(p);
+        factors.push(f);
+    }
+
+    let avg_seq = seq_rounds.iter().sum::<f64>() / seq_rounds.len().max(1) as f64;
+    let avg_par = par_rounds.iter().sum::<f64>() / par_rounds.len().max(1) as f64;
+    let max_factor = factors.iter().cloned().fold(0.0f64, f64::max);
+    let mut summary = Table::new(vec!["metric", "value", "paper"]);
+    summary.row(vec!["avg rounds sequential".to_string(), format!("{avg_seq:.2}"), "3.1".into()]);
+    summary.row(vec!["avg rounds parallel".to_string(), format!("{avg_par:.2}"), "4.4".into()]);
+    summary.row(vec![
+        "avg factor".to_string(),
+        format!("{:.2}", avg_par / avg_seq.max(1e-12)),
+        "1.4".into(),
+    ]);
+    summary.row(vec!["max factor".to_string(), format!("{max_factor:.1}"), "22.0".into()]);
+    summary.row(vec![
+        "geomean factor".to_string(),
+        format!("{:.2}", geomean(&factors)),
+        "-".into(),
+    ]);
+
+    out.note(format!(
+        "{} instances compared, {} excluded (non-converged or different limit points)",
+        factors.len(),
+        excluded
+    ));
+    out.tables.push(("summary".into(), summary));
+    out.tables.push(("per-instance".into(), rows_table));
+    out.check("parallel needs at least as many rounds on average", avg_par >= avg_seq);
+    out.check(
+        "some instance pays a strictly positive price",
+        factors.iter().any(|&f| f > 1.0),
+    );
+    out.check("factor never below 1", factors.iter().all(|&f| f >= 1.0 - 1e-9));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::suite::{generate_suite, SuiteConfig};
+
+    #[test]
+    fn smoke_run() {
+        let ctx = ExpContext::with_suite(generate_suite(&SuiteConfig::smoke()));
+        let out = run(&ctx).unwrap();
+        assert!(out.all_checks_pass(), "{}", out.to_text());
+        assert_eq!(out.tables.len(), 2);
+    }
+}

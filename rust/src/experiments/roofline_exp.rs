@@ -1,0 +1,102 @@
+//! Section 4.4/4.5 roofline paragraphs: arithmetic intensity and fraction
+//! of attainable performance of the (modeled) gpu_atomic execution on the
+//! V100, double and single precision, over instances with enough nonzeros
+//! to make the analysis meaningful.
+//! Paper (dp, >=250k nnz): avg AI 2.96 (0.26..17.69), avg 23.64% of
+//! attainable (1.5%..89.14%), machine balance 8.53 -> memory-bound.
+
+use anyhow::Result;
+
+use super::context::{run_native, ExpContext};
+use super::ExpOutput;
+use crate::devsim::device::{machine_balance, V100};
+use crate::devsim::roofline::analyze;
+use crate::devsim::ExecutionKind;
+use crate::util::fmt::Table;
+
+/// Paper threshold is 250k nnz on MIPLIB; scaled to our suite.
+pub const MIN_NNZ: usize = 20_000;
+
+pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
+    let mut out = ExpOutput::new("roofline");
+    let mut t = Table::new(vec![
+        "instance", "nnz", "AI dp", "%attainable dp", "AI sp", "%attainable sp", "mem-bound",
+    ]);
+    let mut ai_dp = Vec::new();
+    let mut frac_dp = Vec::new();
+    let mut ai_sp = Vec::new();
+    let mut frac_sp = Vec::new();
+
+    for inst in &ctx.suite {
+        if inst.nnz() < MIN_NNZ {
+            continue;
+        }
+        let runs = run_native(inst);
+        let dp = analyze(
+            &V100,
+            ExecutionKind::GpuCpuLoop { fp32: false },
+            &runs.gpu_model.trace,
+            &runs.stats,
+        );
+        let sp = analyze(
+            &V100,
+            ExecutionKind::GpuCpuLoop { fp32: true },
+            &runs.gpu_model.trace,
+            &runs.stats,
+        );
+        t.row(vec![
+            runs.name.clone(),
+            runs.stats.nnz.to_string(),
+            format!("{:.2}", dp.arithmetic_intensity),
+            format!("{:.1}%", dp.fraction_of_attainable * 100.0),
+            format!("{:.2}", sp.arithmetic_intensity),
+            format!("{:.1}%", sp.fraction_of_attainable * 100.0),
+            dp.memory_bound.to_string(),
+        ]);
+        ai_dp.push(dp.arithmetic_intensity);
+        frac_dp.push(dp.fraction_of_attainable);
+        ai_sp.push(sp.arithmetic_intensity);
+        frac_sp.push(sp.fraction_of_attainable);
+    }
+
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let mut s = Table::new(vec!["metric", "ours", "paper"]);
+    s.row(vec![
+        "V100 machine balance (fp64)".to_string(),
+        format!("{:.2}", machine_balance(&V100, false)),
+        "8.53".into(),
+    ]);
+    s.row(vec!["avg AI dp".to_string(), format!("{:.2}", avg(&ai_dp)), "2.96".into()]);
+    s.row(vec![
+        "avg % attainable dp".to_string(),
+        format!("{:.1}%", avg(&frac_dp) * 100.0),
+        "23.64%".into(),
+    ]);
+    s.row(vec!["avg AI sp".to_string(), format!("{:.2}", avg(&ai_sp)), "2.74".into()]);
+    s.row(vec![
+        "avg % attainable sp".to_string(),
+        format!("{:.1}%", avg(&frac_sp) * 100.0),
+        "14.86%".into(),
+    ]);
+    out.tables.push(("summary".into(), s));
+    out.tables.push(("per-instance".into(), t));
+    out.note(format!("{} instances with >= {MIN_NNZ} nnz analyzed", ai_dp.len()));
+
+    if !ai_dp.is_empty() {
+        out.check(
+            "kernel is memory-bound on V100 (AI below machine balance)",
+            avg(&ai_dp) < machine_balance(&V100, false),
+        );
+        out.check(
+            "sp runs are at least as memory-bound as dp",
+            avg(&frac_sp) <= avg(&frac_dp) * 1.3,
+        );
+        out.check(
+            "fraction of attainable is partial (well below 100%)",
+            avg(&frac_dp) < 0.9,
+        );
+    } else {
+        out.note("suite too small for the roofline cut; rerun with --scale >= 1");
+    }
+    Ok(out)
+}

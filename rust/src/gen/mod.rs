@@ -1,0 +1,444 @@
+//! Synthetic MIP instance generator — the MIPLIB 2017 substitute
+//! (DESIGN.md section 3). Families cover the structural axes the paper's
+//! performance analysis identifies (section 3.6): row/column counts,
+//! nnz-per-row and nnz-per-column distributions, dense "connecting
+//! constraints", integrality mix, and propagation dynamics (cascades).
+
+use crate::instance::{MipInstance, VarType};
+use crate::sparse::permute::{permute_csr, Permutation};
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+pub mod suite;
+
+/// Generator families. `Mixed` draws sub-blocks from the others.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Knapsack-like rows: positive coefficients, <= capacity, bounded vars.
+    Knapsack,
+    /// Set-covering rows: 0/1 coefficients, >= 1, binary vars.
+    SetCover,
+    /// Chains x_i <= x_{i-1} (+ noise rows): forces multi-round cascades.
+    Cascade,
+    /// Sparse base + a few dense connecting rows (section 3).
+    DenseConnecting,
+    /// A blend of the above with ranged/equality rows and infinite bounds.
+    Mixed,
+}
+
+impl Family {
+    pub const ALL: [Family; 5] = [
+        Family::Knapsack,
+        Family::SetCover,
+        Family::Cascade,
+        Family::DenseConnecting,
+        Family::Mixed,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Knapsack => "knapsack",
+            Family::SetCover => "setcover",
+            Family::Cascade => "cascade",
+            Family::DenseConnecting => "denseconn",
+            Family::Mixed => "mixed",
+        }
+    }
+}
+
+/// Knobs for instance generation.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub family: Family,
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Mean nonzeros per row (power-law distributed around this).
+    pub mean_row_nnz: usize,
+    /// Fraction of integer variables.
+    pub int_frac: f64,
+    /// Fraction of variables with one infinite bound.
+    pub inf_bound_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            family: Family::Mixed,
+            nrows: 100,
+            ncols: 100,
+            mean_row_nnz: 8,
+            int_frac: 0.4,
+            inf_bound_frac: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate one instance.
+pub fn generate(cfg: &GenConfig) -> MipInstance {
+    let mut rng = Rng::new(cfg.seed ^ (cfg.family as u64) << 32);
+    let name = format!(
+        "{}_{}x{}_s{}",
+        cfg.family.name(),
+        cfg.nrows,
+        cfg.ncols,
+        cfg.seed
+    );
+    let inst = match cfg.family {
+        Family::Knapsack => gen_knapsack(cfg, &mut rng, &name),
+        Family::SetCover => gen_setcover(cfg, &mut rng, &name),
+        Family::Cascade => gen_cascade(cfg, &mut rng, &name),
+        Family::DenseConnecting => gen_dense_connecting(cfg, &mut rng, &name),
+        Family::Mixed => gen_mixed(cfg, &mut rng, &name),
+    };
+    debug_assert!(inst.validate().is_ok(), "generator produced invalid instance");
+    inst
+}
+
+fn var_bounds(
+    cfg: &GenConfig,
+    rng: &mut Rng,
+    n: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<VarType>) {
+    let mut lb = Vec::with_capacity(n);
+    let mut ub = Vec::with_capacity(n);
+    let mut vt = Vec::with_capacity(n);
+    for _ in 0..n {
+        let is_int = rng.chance(cfg.int_frac);
+        let (mut l, mut u) = if is_int {
+            let l = rng.range(0, 10) as f64 - 3.0;
+            (l, l + rng.range(1, 20) as f64)
+        } else {
+            let l = rng.range_f64(-20.0, 5.0);
+            (l, l + rng.range_f64(0.5, 40.0))
+        };
+        if rng.chance(cfg.inf_bound_frac) {
+            if rng.chance(0.5) {
+                l = f64::NEG_INFINITY;
+            } else {
+                u = f64::INFINITY;
+            }
+        }
+        lb.push(l);
+        ub.push(u);
+        vt.push(if is_int { VarType::Integer } else { VarType::Continuous });
+    }
+    (lb, ub, vt)
+}
+
+/// Sample a point inside the bounds (integral where required). The
+/// generator anchors constraint sides at each row's activity at this
+/// point, guaranteeing the instance is feasible — like MIPLIB instances,
+/// which model solvable problems (infeasible-by-construction suites would
+/// make the convergence census meaningless).
+fn feasible_point(rng: &mut Rng, lb: &[f64], ub: &[f64], vt: &[VarType]) -> Vec<f64> {
+    lb.iter()
+        .zip(ub)
+        .zip(vt)
+        .map(|((&l, &u), t)| {
+            let lo = if l.is_finite() { l } else { u.min(20.0) - 20.0 };
+            let hi = if u.is_finite() { u } else { l.max(-20.0) + 20.0 };
+            let x = rng.range_f64(lo, hi);
+            if *t == VarType::Integer {
+                let xi = x.round();
+                xi.clamp(
+                    if l.is_finite() { l } else { xi },
+                    if u.is_finite() { u } else { xi },
+                )
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+/// Activity of one row at a point.
+fn activity_at(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    cols.iter().zip(vals).map(|(&c, &a)| a * x[c as usize]).sum()
+}
+
+fn row_len(cfg: &GenConfig, rng: &mut Rng) -> usize {
+    let max = (cfg.mean_row_nnz * 6).min(cfg.ncols).max(1);
+    rng.powlaw(max, 1.7).clamp(1, cfg.ncols)
+}
+
+fn gen_knapsack(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols;
+    let (lb, ub, vt) = var_bounds(cfg, rng, n);
+    let x = feasible_point(rng, &lb, &ub, &vt);
+    let mut rows = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for _ in 0..cfg.nrows {
+        let k = row_len(cfg, rng);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 9.5)).collect();
+        // capacity anchored above the feasible point's activity: never
+        // infeasible, tight enough to propagate
+        let v = activity_at(&cols, &vals, &x);
+        let (amin, amax) = activity_range(&cols, &vals, &lb, &ub);
+        let slack = if amax.is_finite() { (amax - v) * rng.range_f64(0.05, 0.6) } else { rng.range_f64(1.0, 30.0) };
+        let _ = amin;
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(v + slack);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+fn gen_setcover(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols;
+    // binary variables
+    let lb = vec![0.0; n];
+    let ub = vec![1.0; n];
+    let vt = vec![VarType::Integer; n];
+    let mut rows = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for _ in 0..cfg.nrows {
+        let k = row_len(cfg, rng).max(2);
+        let cols: Vec<u32> = rng.sample_distinct(n, k.min(n)).iter().map(|&c| c as u32).collect();
+        let vals = vec![1.0; cols.len()];
+        lhs.push(1.0);
+        rhs.push(f64::INFINITY);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+fn gen_cascade(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols;
+    // chains longer than MAX_ROUNDS can never converge round-synchronously
+    // (the paper's worst case, section 2.2); cap well below the limit
+    let chain_len = if n >= 2 { (n / 2).max(2).min(24) } else { 1 };
+    let mut rows: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
+    let mut lhs = Vec::new();
+    let mut rhs = Vec::new();
+    // anchor: x_0 <= 1
+    rows.push((vec![0], vec![1.0]));
+    lhs.push(f64::NEG_INFINITY);
+    rhs.push(1.0);
+    // chain: x_i - x_{i-1} <= 0
+    for i in 1..chain_len {
+        rows.push((vec![(i - 1) as u32, i as u32], vec![-1.0, 1.0]));
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(0.0);
+    }
+    // noise rows over the remaining variables keep the shape realistic;
+    // x = 0 satisfies the chain, so anchor the noise there too
+    let lb = vec![0.0; n];
+    let ub = vec![1000.0; n];
+    while rows.len() < cfg.nrows {
+        let k = row_len(cfg, rng);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..cols.len()).map(|_| rng.range_f64(0.5, 4.0)).collect();
+        let (_amin, amax) = activity_range(&cols, &vals, &lb, &ub);
+        let cap = (amax * rng.range_f64(0.3, 0.95)).max(rng.range_f64(0.5, 5.0));
+        rows.push((cols, vals));
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(cap);
+    }
+    let vt = vec![VarType::Continuous; n];
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+fn gen_dense_connecting(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols;
+    let (lb, ub, vt) = var_bounds(cfg, rng, n);
+    let x = feasible_point(rng, &lb, &ub, &vt);
+    let mut rows = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    let dense_rows = (cfg.nrows / 50).clamp(1, 8);
+    for i in 0..cfg.nrows {
+        let k = if i < dense_rows {
+            // connecting constraint: 20-60% of all columns
+            (n as f64 * rng.range_f64(0.2, 0.6)) as usize
+        } else {
+            row_len(cfg, rng)
+        }
+        .clamp(1, n);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..cols.len()).map(|_| rng.range_f64(-4.0, 6.0)).collect();
+        let vals: Vec<f64> = vals.into_iter().map(|v| if v.abs() < 0.1 { 1.0 } else { v }).collect();
+        let v = activity_at(&cols, &vals, &x);
+        let (_amin, amax) = activity_range(&cols, &vals, &lb, &ub);
+        let slack = if amax.is_finite() { (amax - v) * rng.range_f64(0.05, 0.7) } else { rng.range_f64(1.0, 40.0) };
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(v + slack);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+fn gen_mixed(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols;
+    let (lb, ub, vt) = var_bounds(cfg, rng, n);
+    let x = feasible_point(rng, &lb, &ub, &vt);
+    let mut rows = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for i in 0..cfg.nrows {
+        let k = if rng.chance(0.01) {
+            (n as f64 * rng.range_f64(0.1, 0.4)) as usize
+        } else {
+            row_len(cfg, rng)
+        }
+        .clamp(1, n);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..cols.len())
+            .map(|_| {
+                let v = rng.range_f64(-5.0, 7.0);
+                if v.abs() < 0.1 {
+                    1.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let (amin, amax) = activity_range(&cols, &vals, &lb, &ub);
+        let v = activity_at(&cols, &vals, &x);
+        let up = if amax.is_finite() { (amax - v).max(0.0) } else { 40.0 };
+        let dn = if amin.is_finite() { (v - amin).max(0.0) } else { 40.0 };
+        // all sides anchored at the feasible point's activity v
+        let style = i % 16;
+        let (l, r) = if style == 0 {
+            (v, v) // equality row: drives propagation hard
+        } else if rng.chance(0.25) {
+            // ranged row around v
+            (v - dn * rng.range_f64(0.02, 0.5), v + up * rng.range_f64(0.02, 0.5))
+        } else if rng.chance(0.5) {
+            (f64::NEG_INFINITY, v + up * rng.range_f64(0.02, 0.6))
+        } else {
+            (v - dn * rng.range_f64(0.02, 0.6), f64::INFINITY)
+        };
+        lhs.push(l);
+        rhs.push(r);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+/// (min activity, max activity) of a row under the given bounds,
+/// treating infinite contributions as +-inf.
+fn activity_range(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> (f64, f64) {
+    let mut amin = 0.0f64;
+    let mut amax = 0.0f64;
+    for (&c, &a) in cols.iter().zip(vals) {
+        let (l, u) = (lb[c as usize], ub[c as usize]);
+        let (bmin, bmax) = if a > 0.0 { (l, u) } else { (u, l) };
+        amin += if bmin.is_finite() { a * bmin } else { f64::NEG_INFINITY };
+        amax += if bmax.is_finite() { a * bmax } else { f64::INFINITY };
+    }
+    (amin, amax)
+}
+
+/// Small random instance for property tests (any family, modest dims).
+pub fn random_instance(rng: &mut Rng, max_rows: usize, max_cols: usize, int_frac: f64) -> MipInstance {
+    let family = Family::ALL[rng.below(Family::ALL.len())];
+    let cfg = GenConfig {
+        family,
+        nrows: rng.range(1, max_rows + 1),
+        ncols: rng.range(1, max_cols + 1),
+        mean_row_nnz: rng.range(1, 6),
+        int_frac,
+        inf_bound_frac: 0.15,
+        seed: rng.next_u64(),
+    };
+    generate(&cfg)
+}
+
+/// Randomly permute the rows and columns of an instance
+/// (paper Appendix B's `seedN` runs).
+pub fn permute_instance(inst: &MipInstance, seed: u64) -> MipInstance {
+    let mut rng = Rng::new(seed);
+    let rp = Permutation::random(inst.nrows(), &mut rng);
+    let cp = Permutation::random(inst.ncols(), &mut rng);
+    let matrix = permute_csr(&inst.matrix, &rp, &cp);
+    MipInstance {
+        name: format!("{}_perm{}", inst.name, seed),
+        matrix,
+        lhs: rp.apply(&inst.lhs),
+        rhs: rp.apply(&inst.rhs),
+        lb: cp.apply(&inst.lb),
+        ub: cp.apply(&inst.ub),
+        var_types: cp.apply(&inst.var_types),
+        obj: cp.apply(&inst.obj),
+        row_names: rp.apply(&inst.row_names),
+        col_names: cp.apply(&inst.col_names),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn all_families_validate() {
+        for family in Family::ALL {
+            for seed in 0..3 {
+                let cfg = GenConfig { family, nrows: 40, ncols: 35, seed, ..Default::default() };
+                let inst = generate(&cfg);
+                inst.validate().unwrap_or_else(|e| panic!("{}: {e}", family.name()));
+                assert!(inst.nnz() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = GenConfig { seed: 7, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.lhs, b.lhs);
+        assert_eq!(a.lb, b.lb);
+    }
+
+    #[test]
+    fn dense_connecting_has_dense_row() {
+        let cfg = GenConfig {
+            family: Family::DenseConnecting,
+            nrows: 100,
+            ncols: 200,
+            ..Default::default()
+        };
+        let inst = generate(&cfg);
+        let max_row = (0..inst.nrows()).map(|r| inst.matrix.row_nnz(r)).max().unwrap();
+        assert!(max_row >= 40, "expected a connecting constraint, max {max_row}");
+    }
+
+    #[test]
+    fn setcover_is_binary() {
+        let cfg = GenConfig { family: Family::SetCover, nrows: 30, ncols: 30, ..Default::default() };
+        let inst = generate(&cfg);
+        assert!(inst.var_types.iter().all(|t| *t == VarType::Integer));
+        assert!(inst.lb.iter().all(|&l| l == 0.0));
+        assert!(inst.ub.iter().all(|&u| u == 1.0));
+        assert!(inst.lhs.iter().all(|&l| l == 1.0));
+    }
+
+    #[test]
+    fn prop_generated_instances_valid() {
+        prop("generator validity", Config::cases(40), |rng| {
+            let inst = random_instance(rng, 30, 30, 0.5);
+            inst.validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn permute_preserves_validity_and_shape() {
+        let inst = generate(&GenConfig { nrows: 25, ncols: 30, seed: 3, ..Default::default() });
+        let p = permute_instance(&inst, 99);
+        p.validate().unwrap();
+        assert_eq!(p.nnz(), inst.nnz());
+        assert_eq!(p.nrows(), inst.nrows());
+    }
+}

@@ -1,0 +1,273 @@
+//! MIP instance model: a system of linear constraints `lhs <= Ax <= rhs`
+//! with variable bounds `lb <= x <= ub` and integrality marks — the input
+//! of domain propagation (paper section 1.1).
+
+use crate::numerics;
+use crate::sparse::{Csc, Csr};
+
+/// Values at or beyond this magnitude are treated as infinite on ingest
+/// (SCIP convention; MPS files encode "no bound" in several ways).
+pub const INF_THRESHOLD: f64 = 1e20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarType {
+    Continuous,
+    Integer,
+}
+
+/// A full MIP instance (objective kept for I/O fidelity; propagation
+/// ignores it).
+#[derive(Debug, Clone)]
+pub struct MipInstance {
+    pub name: String,
+    pub matrix: Csr,
+    /// Left-hand sides, length nrows; -inf when absent.
+    pub lhs: Vec<f64>,
+    /// Right-hand sides, length nrows; +inf when absent.
+    pub rhs: Vec<f64>,
+    /// Lower bounds, length ncols.
+    pub lb: Vec<f64>,
+    /// Upper bounds, length ncols.
+    pub ub: Vec<f64>,
+    pub var_types: Vec<VarType>,
+    pub obj: Vec<f64>,
+    pub row_names: Vec<String>,
+    pub col_names: Vec<String>,
+}
+
+impl MipInstance {
+    pub fn nrows(&self) -> usize {
+        self.matrix.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.matrix.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.matrix.nnz()
+    }
+
+    /// `is_int` as the 0/1 vector the artifacts consume.
+    pub fn is_int_i32(&self) -> Vec<i32> {
+        self.var_types
+            .iter()
+            .map(|t| if *t == VarType::Integer { 1 } else { 0 })
+            .collect()
+    }
+
+    /// Number of integer variables.
+    pub fn num_integer(&self) -> usize {
+        self.var_types.iter().filter(|t| **t == VarType::Integer).count()
+    }
+
+    /// The paper's size measure for set partitioning (section 4.1):
+    /// an instance is in `[s, t)` if it has less than `t` variables AND
+    /// `t` constraints, but at least `s` variables OR `s` constraints.
+    pub fn size_measure(&self) -> usize {
+        self.nrows().max(self.ncols())
+    }
+
+    /// Column-major view for the marking mechanism (built lazily by
+    /// engines that need it; one-time init excluded from timing).
+    pub fn to_csc(&self) -> Csc {
+        Csc::from_csr(&self.matrix)
+    }
+
+    /// Normalize near-infinite values to true infinities.
+    pub fn canonicalize_infinities(&mut self) {
+        for v in self.lhs.iter_mut().chain(self.rhs.iter_mut()) {
+            if v.abs() >= INF_THRESHOLD {
+                *v = if *v > 0.0 { f64::INFINITY } else { f64::NEG_INFINITY };
+            }
+        }
+        for v in self.lb.iter_mut().chain(self.ub.iter_mut()) {
+            if v.abs() >= INF_THRESHOLD {
+                *v = if *v > 0.0 { f64::INFINITY } else { f64::NEG_INFINITY };
+            }
+        }
+    }
+
+    /// Structural + semantic validation.
+    pub fn validate(&self) -> Result<(), String> {
+        self.matrix.validate()?;
+        let m = self.nrows();
+        let n = self.ncols();
+        if self.lhs.len() != m || self.rhs.len() != m {
+            return Err("lhs/rhs length".into());
+        }
+        if self.lb.len() != n || self.ub.len() != n || self.var_types.len() != n {
+            return Err("bound/vartype length".into());
+        }
+        if self.obj.len() != n {
+            return Err("objective length".into());
+        }
+        for r in 0..m {
+            if self.lhs[r].is_nan() || self.rhs[r].is_nan() {
+                return Err(format!("row {r}: NaN side"));
+            }
+            if self.lhs[r] == f64::INFINITY || self.rhs[r] == f64::NEG_INFINITY {
+                return Err(format!("row {r}: degenerate side (lhs=+inf or rhs=-inf)"));
+            }
+            if self.lhs[r] > self.rhs[r] {
+                return Err(format!("row {r}: lhs > rhs"));
+            }
+        }
+        for c in 0..n {
+            if self.lb[c].is_nan() || self.ub[c].is_nan() {
+                return Err(format!("col {c}: NaN bound"));
+            }
+            if self.lb[c] > self.ub[c] + numerics::FEAS_TOL {
+                return Err(format!("col {c}: empty domain on input"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience constructor used throughout tests and the generator.
+    pub fn from_parts(
+        name: &str,
+        matrix: Csr,
+        lhs: Vec<f64>,
+        rhs: Vec<f64>,
+        lb: Vec<f64>,
+        ub: Vec<f64>,
+        var_types: Vec<VarType>,
+    ) -> MipInstance {
+        let n = matrix.ncols;
+        let m = matrix.nrows;
+        let mut inst = MipInstance {
+            name: name.to_string(),
+            row_names: (0..m).map(|i| format!("c{i}")).collect(),
+            col_names: (0..n).map(|i| format!("x{i}")).collect(),
+            obj: vec![0.0; n],
+            matrix,
+            lhs,
+            rhs,
+            lb,
+            ub,
+            var_types,
+        };
+        inst.canonicalize_infinities();
+        inst
+    }
+}
+
+/// The bound state a propagation run produces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bounds {
+    pub lb: Vec<f64>,
+    pub ub: Vec<f64>,
+}
+
+impl Bounds {
+    pub fn of(inst: &MipInstance) -> Bounds {
+        Bounds { lb: inst.lb.clone(), ub: inst.ub.clone() }
+    }
+
+    /// Paper section 4.3: equality of two executions within tolerances,
+    /// `self` being the reference.
+    pub fn equal_within_tol(&self, other: &Bounds) -> bool {
+        self.lb.len() == other.lb.len()
+            && self.ub.len() == other.ub.len()
+            && self
+                .lb
+                .iter()
+                .zip(&other.lb)
+                .all(|(&a, &b)| numerics::bounds_equal(a, b))
+            && self
+                .ub
+                .iter()
+                .zip(&other.ub)
+                .all(|(&a, &b)| numerics::bounds_equal(a, b))
+    }
+
+    /// Sum of finite domain widths (a crude tightness measure for tests).
+    pub fn total_width(&self) -> f64 {
+        self.lb
+            .iter()
+            .zip(&self.ub)
+            .map(|(&l, &u)| if l.is_finite() && u.is_finite() { u - l } else { 0.0 })
+            .sum()
+    }
+
+    /// Any empty domain?
+    pub fn infeasible(&self) -> bool {
+        self.lb
+            .iter()
+            .zip(&self.ub)
+            .any(|(&l, &u)| l > u + numerics::FEAS_TOL)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MipInstance {
+        let m = Csr::from_triplets(1, 2, &[(0, 0, 2.0), (0, 1, 3.0)]).unwrap();
+        MipInstance::from_parts(
+            "tiny",
+            m,
+            vec![f64::NEG_INFINITY],
+            vec![12.0],
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            vec![VarType::Continuous, VarType::Continuous],
+        )
+    }
+
+    #[test]
+    fn validates() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_crossed_sides() {
+        let mut inst = tiny();
+        inst.lhs[0] = 20.0;
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_sides() {
+        let mut inst = tiny();
+        inst.rhs[0] = f64::NEG_INFINITY;
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn canonicalizes_big_values() {
+        let m = Csr::from_triplets(1, 1, &[(0, 0, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "big",
+            m,
+            vec![-1e30],
+            vec![1e21],
+            vec![-5e20],
+            vec![3e20],
+            vec![VarType::Continuous],
+        );
+        assert_eq!(inst.lhs[0], f64::NEG_INFINITY);
+        assert_eq!(inst.rhs[0], f64::INFINITY);
+        assert_eq!(inst.lb[0], f64::NEG_INFINITY);
+        assert_eq!(inst.ub[0], f64::INFINITY);
+    }
+
+    #[test]
+    fn bounds_comparison() {
+        let inst = tiny();
+        let a = Bounds::of(&inst);
+        let mut b = a.clone();
+        assert!(a.equal_within_tol(&b));
+        b.ub[0] += 1e-9;
+        assert!(a.equal_within_tol(&b));
+        b.ub[0] += 1.0;
+        assert!(!a.equal_within_tol(&b));
+    }
+
+    #[test]
+    fn size_measure_is_max_dim() {
+        assert_eq!(tiny().size_measure(), 2);
+    }
+}

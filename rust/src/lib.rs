@@ -1,0 +1,114 @@
+//! # gdp — GPU-parallel domain propagation, reproduced as a Rust + JAX/Pallas stack
+//!
+//! Reproduction of *"Accelerating Domain Propagation: an Efficient
+//! GPU-Parallel Algorithm over Sparse Matrices"* (Sofranac, Gleixner,
+//! Pokutta, 2020).
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: instance I/O, propagation engines,
+//!   experiment harness, device cost models, CLI.
+//! * **L2/L1 (python/compile)** — the propagation round as a JAX function
+//!   calling Pallas kernels, AOT-lowered to HLO text artifacts that the
+//!   [`runtime`] module loads and executes via PJRT. Python never runs at
+//!   propagation time.
+//!
+//! Quickstart:
+//! ```no_run
+//! use gdp::propagation::{seq::SeqEngine, Engine};
+//!
+//! let inst = gdp::mps::read_mps_file(std::path::Path::new("model.mps")).unwrap();
+//! let mut engine = SeqEngine::default();
+//! let result = engine.propagate(&inst);
+//! println!("rounds: {} status: {:?}", result.rounds, result.status);
+//! ```
+
+pub mod util;
+pub mod testkit;
+pub mod sparse;
+pub mod instance;
+pub mod mps;
+pub mod gen;
+pub mod propagation;
+pub mod runtime;
+pub mod devsim;
+pub mod metrics;
+pub mod experiments;
+
+/// Numerical policy shared with python/compile/__init__.py. The two must
+/// stay in lock-step for the differential tests to hold.
+pub mod numerics {
+    /// Minimal relative bound improvement that counts as a change.
+    pub const EPS_IMPROVE_REL: f64 = 1e-9;
+    /// Empty-domain detection: infeasible iff `lb > ub + FEAS_TOL`.
+    pub const FEAS_TOL: f64 = 1e-6;
+    /// Slack used when rounding integer-variable bound candidates.
+    pub const INT_ROUND_EPS: f64 = 1e-6;
+    /// Maximum number of propagation rounds (paper section 4.1).
+    pub const MAX_ROUNDS: u32 = 100;
+    /// Equality tolerances for comparing two executions (paper section 4.3).
+    pub const CMP_ABS_TOL: f64 = 1e-8;
+    pub const CMP_REL_TOL: f64 = 1e-5;
+
+    /// Does `new` improve on lower bound `old`?
+    /// Mirrors `ref.improves_lb` in python/compile/kernels/ref.py.
+    #[inline]
+    pub fn improves_lb(old: f64, new: f64) -> bool {
+        if old.is_finite() {
+            new > old + old.abs().max(1.0) * EPS_IMPROVE_REL
+        } else {
+            new > old
+        }
+    }
+
+    /// Does `new` improve on upper bound `old`?
+    #[inline]
+    pub fn improves_ub(old: f64, new: f64) -> bool {
+        if old.is_finite() {
+            new < old - old.abs().max(1.0) * EPS_IMPROVE_REL
+        } else {
+            new < old
+        }
+    }
+
+    /// Paper section 4.3: two bound values are equal within tolerances,
+    /// `a` being the reference execution's value.
+    #[inline]
+    pub fn bounds_equal(reference: f64, candidate: f64) -> bool {
+        if reference == candidate {
+            return true; // covers equal infinities
+        }
+        if !reference.is_finite() || !candidate.is_finite() {
+            return false;
+        }
+        (reference - candidate).abs() <= CMP_ABS_TOL + CMP_REL_TOL * candidate.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::numerics::*;
+
+    #[test]
+    fn improvement_thresholds() {
+        assert!(improves_lb(0.0, 1.0));
+        assert!(!improves_lb(0.0, 0.0));
+        assert!(!improves_lb(0.0, 5e-10));
+        assert!(improves_lb(f64::NEG_INFINITY, -1e30));
+        assert!(!improves_lb(f64::NEG_INFINITY, f64::NEG_INFINITY));
+        assert!(improves_ub(0.0, -1.0));
+        assert!(!improves_ub(0.0, -5e-10));
+        assert!(improves_ub(f64::INFINITY, 1e30));
+        // relative scaling: at magnitude 1e12 a 1e-9-relative step is noise
+        assert!(!improves_lb(1e12, 1e12 + 1e-6));
+        assert!(improves_lb(1e12, 1e12 + 2e3));
+    }
+
+    #[test]
+    fn bound_equality_tolerances() {
+        assert!(bounds_equal(1.0, 1.0 + 5e-9));
+        assert!(!bounds_equal(1.0, 1.1));
+        assert!(bounds_equal(f64::INFINITY, f64::INFINITY));
+        assert!(!bounds_equal(f64::INFINITY, 1e30));
+        assert!(bounds_equal(1e6, 1e6 * (1.0 + 1e-6)));
+    }
+}

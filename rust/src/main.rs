@@ -1,0 +1,227 @@
+//! `gdp` — GPU-parallel domain propagation coordinator CLI.
+//!
+//! Subcommands:
+//!   propagate --mps FILE [--engine NAME] [--threads N]
+//!       Run one instance through an engine and print the result.
+//!   generate  --family F --rows M --cols N [--seed S] --out FILE
+//!       Emit a synthetic instance as an MPS file.
+//!   suite     [--scale X] [--seed S] [--out DIR]
+//!       Generate the benchmark suite as MPS files.
+//!   exp       <id>|all [--scale X] [--smoke] [--sets 1,2] [--out DIR] [--check]
+//!       Reproduce a paper table/figure (price-par, table1, fig2, roofline,
+//!       fig3, fig4, fig5, fig6).
+//!   inspect   --mps FILE
+//!       Print instance statistics.
+
+use std::process::ExitCode;
+
+use gdp::experiments;
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::MipInstance;
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::papilo_like::PapiloLikeEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::xla_engine::{SyncVariant, XlaConfig, XlaEngine};
+use gdp::propagation::{Engine, PropResult};
+use gdp::runtime::Runtime;
+use gdp::sparse::stats::MatrixStats;
+use gdp::util::cli::Args;
+use gdp::util::fmt;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "propagate" => cmd_propagate(&args),
+        "generate" => cmd_generate(&args),
+        "suite" => cmd_suite(&args),
+        "exp" => cmd_exp(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(true)
+        }
+        other => {
+            eprintln!("unknown command {other}\n{HELP}");
+            Ok(false)
+        }
+    };
+    match result {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+gdp - GPU-parallel domain propagation (paper reproduction)
+
+USAGE:
+  gdp propagate --mps FILE [--engine cpu_seq|cpu_omp|gpu_model|gpu_atomic|gpu_loop|megakernel|papilo_like]
+  gdp generate --family mixed|knapsack|setcover|cascade|denseconn --rows M --cols N --out FILE
+  gdp suite [--scale X] [--seed S] --out DIR
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|all> [--scale X] [--smoke] [--out DIR] [--check]
+  gdp inspect --mps FILE
+";
+
+fn load_instance(args: &Args) -> anyhow::Result<MipInstance> {
+    let path = args
+        .get("mps")
+        .ok_or_else(|| anyhow::anyhow!("--mps FILE required"))?;
+    let inst = gdp::mps::read_mps_file(std::path::Path::new(path))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    inst.validate().map_err(|e| anyhow::anyhow!("invalid instance: {e}"))?;
+    Ok(inst)
+}
+
+fn print_result(name: &str, inst: &MipInstance, r: &PropResult) {
+    println!(
+        "engine={name} instance={} rows={} cols={} nnz={}",
+        inst.name,
+        inst.nrows(),
+        inst.ncols(),
+        inst.nnz()
+    );
+    println!(
+        "status={:?} rounds={} wall={} bound_changes={}",
+        r.status,
+        r.rounds,
+        fmt::secs(r.wall.as_secs_f64()),
+        r.trace.total_bound_changes()
+    );
+    let tightened = r
+        .bounds
+        .lb
+        .iter()
+        .zip(&inst.lb)
+        .filter(|(a, b)| a != b)
+        .count()
+        + r.bounds.ub.iter().zip(&inst.ub).filter(|(a, b)| a != b).count();
+    println!("tightened_bounds={tightened}");
+}
+
+fn cmd_propagate(args: &Args) -> anyhow::Result<bool> {
+    let inst = load_instance(args)?;
+    let engine_name = args.get_or("engine", "cpu_seq");
+    let r = match engine_name {
+        "cpu_seq" => SeqEngine::new().propagate(&inst),
+        "cpu_omp" => OmpEngine::with_threads(args.get_usize("threads", 8)).propagate(&inst),
+        "gpu_model" => GpuModelEngine::default().propagate(&inst),
+        "papilo_like" => {
+            PapiloLikeEngine::with_threads(args.get_usize("threads", 1)).propagate(&inst)
+        }
+        "gpu_atomic" | "gpu_loop" | "megakernel" => {
+            let rt = std::rc::Rc::new(Runtime::open_default()?);
+            let config = match engine_name {
+                "gpu_atomic" => XlaConfig::default(),
+                "gpu_loop" => XlaConfig::default().variant(SyncVariant::GpuLoop),
+                _ => XlaConfig::default().variant(SyncVariant::Megakernel),
+            };
+            let config = if args.flag("f32") { config.f32() } else { config };
+            XlaEngine::new(rt, config).try_propagate(&inst)?
+        }
+        other => anyhow::bail!("unknown engine {other}"),
+    };
+    print_result(engine_name, &inst, &r);
+    if args.flag("bounds") {
+        for j in 0..inst.ncols() {
+            println!("  {}: [{}, {}]", inst.col_names[j], r.bounds.lb[j], r.bounds.ub[j]);
+        }
+    }
+    Ok(true)
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<bool> {
+    let family = match args.get_or("family", "mixed") {
+        "mixed" => Family::Mixed,
+        "knapsack" => Family::Knapsack,
+        "setcover" => Family::SetCover,
+        "cascade" => Family::Cascade,
+        "denseconn" => Family::DenseConnecting,
+        other => anyhow::bail!("unknown family {other}"),
+    };
+    let cfg = GenConfig {
+        family,
+        nrows: args.get_usize("rows", 100),
+        ncols: args.get_usize("cols", 100),
+        mean_row_nnz: args.get_usize("mean-nnz", 8),
+        int_frac: args.get_f64("int-frac", 0.4),
+        inf_bound_frac: args.get_f64("inf-frac", 0.1),
+        seed: args.get_u64("seed", 0),
+    };
+    let inst = gen::generate(&cfg);
+    let out = args.get_or("out", "instance.mps");
+    gdp::mps::write_mps_file(&inst, std::path::Path::new(out))?;
+    println!("wrote {} ({}x{}, {} nnz) to {out}", inst.name, inst.nrows(), inst.ncols(), inst.nnz());
+    Ok(true)
+}
+
+fn cmd_suite(args: &Args) -> anyhow::Result<bool> {
+    let cfg = gdp::gen::suite::SuiteConfig {
+        seed: args.get_u64("seed", 2017),
+        ..Default::default()
+    }
+    .scaled(args.get_f64("scale", 1.0));
+    let outdir = std::path::PathBuf::from(args.get_or("out", "suite"));
+    std::fs::create_dir_all(&outdir)?;
+    let suite = gdp::gen::suite::generate_suite(&cfg);
+    for inst in &suite {
+        gdp::mps::write_mps_file(inst, &outdir.join(format!("{}.mps", inst.name)))?;
+    }
+    println!("wrote {} instances to {}", suite.len(), outdir.display());
+    Ok(true)
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<bool> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: gdp exp <id>|all"))?;
+    let outdir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    let mut all_ok = true;
+    for id in ids {
+        eprintln!(">>> running experiment {id} ...");
+        let out = experiments::run(id, args)?;
+        print!("{}", out.to_text());
+        out.write(&outdir)?;
+        if args.flag("check") && !out.all_checks_pass() {
+            eprintln!("!! shape checks FAILED for {id}");
+            all_ok = false;
+        }
+    }
+    Ok(all_ok)
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<bool> {
+    let inst = load_instance(args)?;
+    let stats = MatrixStats::compute(&inst.matrix);
+    println!("{}: {} rows, {} cols, {} nnz", inst.name, stats.nrows, stats.ncols, stats.nnz);
+    println!(
+        "density {:.5}  row nnz [{}, {}] mean {:.1} sd {:.1}  col nnz [{}, {}] mean {:.1}",
+        stats.density,
+        stats.row_nnz_min,
+        stats.row_nnz_max,
+        stats.row_nnz_mean,
+        stats.row_nnz_stddev,
+        stats.col_nnz_min,
+        stats.col_nnz_max,
+        stats.col_nnz_mean
+    );
+    println!(
+        "integer vars {} / {}  top-1% row share {:.2}",
+        inst.num_integer(),
+        inst.ncols(),
+        stats.top1pct_row_share
+    );
+    Ok(true)
+}

@@ -1,0 +1,129 @@
+//! Evaluation metrics (paper section 4.3): speedups over wall-clock time,
+//! geometric means, percentiles, and the Set-1..Set-8 partition.
+
+use crate::gen::suite::set_of;
+
+/// Geometric mean of positive values; 0 when empty.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on the sorted data.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// One instance's measurement under several executions.
+#[derive(Debug, Clone)]
+pub struct SpeedupRecord {
+    pub instance: String,
+    /// `max(nrows, ncols)` — the paper's size measure.
+    pub size: usize,
+    /// Baseline (cpu_seq) seconds.
+    pub base_secs: f64,
+    /// Candidate seconds keyed by execution name, aligned with the caller's
+    /// execution list.
+    pub cand_secs: Vec<f64>,
+}
+
+impl SpeedupRecord {
+    pub fn speedup(&self, k: usize) -> f64 {
+        self.base_secs / self.cand_secs[k]
+    }
+}
+
+/// Geometric-mean speedups per size set (1..=8) plus "All", for execution k.
+/// Returns ([per-set geomean; 8], all) — sets with no instances give NaN.
+pub fn per_set_geomeans(records: &[SpeedupRecord], k: usize) -> ([f64; 8], f64) {
+    let mut buckets: [Vec<f64>; 8] = Default::default();
+    let mut all = Vec::new();
+    for r in records {
+        let s = r.speedup(k);
+        all.push(s);
+        if let Some(set) = set_of(r.size) {
+            buckets[set - 1].push(s);
+        }
+    }
+    let mut per_set = [f64::NAN; 8];
+    for (i, b) in buckets.iter().enumerate() {
+        if !b.is_empty() {
+            per_set[i] = geomean(b);
+        }
+    }
+    (per_set, geomean(&all))
+}
+
+/// The paper's percentile summary (5%, median, 95%) for execution k.
+pub fn percentile_speedups(records: &[SpeedupRecord], k: usize) -> (f64, f64, f64) {
+    let xs: Vec<f64> = records.iter().map(|r| r.speedup(k)).collect();
+    (percentile(&xs, 5.0), percentile(&xs, 50.0), percentile(&xs, 95.0))
+}
+
+/// Ascending per-instance speedup curve (Figure 1b's series) for execution k.
+pub fn ascending_curve(records: &[SpeedupRecord], k: usize) -> Vec<f64> {
+    let mut xs: Vec<f64> = records.iter().map(|r| r.speedup(k)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[10.0]) - 10.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    fn rec(size: usize, base: f64, cand: f64) -> SpeedupRecord {
+        SpeedupRecord {
+            instance: "i".into(),
+            size,
+            base_secs: base,
+            cand_secs: vec![cand],
+        }
+    }
+
+    #[test]
+    fn per_set_routing() {
+        let records = vec![rec(300, 2.0, 1.0), rec(300, 8.0, 1.0), rec(1500, 3.0, 1.0)];
+        let (sets, all) = per_set_geomeans(&records, 0);
+        assert!((sets[0] - 4.0).abs() < 1e-12); // geomean(2, 8)
+        assert!((sets[1] - 3.0).abs() < 1e-12);
+        assert!(sets[2].is_nan());
+        assert!((all - (2.0f64 * 8.0 * 3.0).powf(1.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_sorted() {
+        let records = vec![rec(300, 3.0, 1.0), rec(300, 1.0, 1.0), rec(300, 2.0, 1.0)];
+        assert_eq!(ascending_curve(&records, 0), vec![1.0, 2.0, 3.0]);
+    }
+}

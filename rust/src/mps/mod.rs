@@ -1,0 +1,597 @@
+//! Free-format MPS reader/writer.
+//!
+//! Supports the sections used by MIPLIB-style instances: NAME, ROWS (N/L/G/E),
+//! COLUMNS (with INTORG/INTEND markers), RHS, RANGES, BOUNDS
+//! (LO/UP/FX/FR/MI/PL/BV/LI/UI), OBJSENSE, ENDATA. The writer emits files the
+//! reader round-trips, which the test-suite exercises property-style.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use crate::instance::{MipInstance, VarType};
+use crate::sparse::Csr;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RowKind {
+    Objective,
+    LessEq,
+    GreaterEq,
+    Equal,
+}
+
+#[derive(Debug)]
+pub struct MpsError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for MpsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MPS parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for MpsError {}
+
+fn err(line: usize, msg: impl Into<String>) -> MpsError {
+    MpsError { line, msg: msg.into() }
+}
+
+pub fn read_mps_file(path: &Path) -> Result<MipInstance, Box<dyn std::error::Error>> {
+    let f = std::fs::File::open(path)?;
+    let inst = read_mps(BufReader::new(f))?;
+    Ok(inst)
+}
+
+pub fn read_mps_str(text: &str) -> Result<MipInstance, MpsError> {
+    read_mps(BufReader::new(text.as_bytes()))
+}
+
+struct RowInfo {
+    kind: RowKind,
+    rhs: f64,
+    range: Option<f64>,
+}
+
+pub fn read_mps<R: Read>(reader: BufReader<R>) -> Result<MipInstance, MpsError> {
+    let mut name = String::from("unnamed");
+    let mut section = String::new();
+    let mut rows: Vec<(String, RowInfo)> = Vec::new();
+    let mut row_index: HashMap<String, usize> = HashMap::new();
+    let mut obj_row: Option<String> = None;
+    let mut cols: Vec<(String, VarType)> = Vec::new();
+    let mut col_index: HashMap<String, usize> = HashMap::new();
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new(); // (row, col, val)
+    let mut obj_coefs: Vec<(usize, f64)> = Vec::new();
+    let mut in_integer = false;
+    // bound records applied after COLUMNS: (col, type, value)
+    let mut bound_records: Vec<(usize, String, f64, usize)> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.map_err(|e| err(lineno, e.to_string()))?;
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() || trimmed.starts_with('*') {
+            continue;
+        }
+        let is_header = !trimmed.starts_with(' ') && !trimmed.starts_with('\t');
+        let fields: Vec<&str> = trimmed.split_whitespace().collect();
+        if is_header {
+            section = fields[0].to_uppercase();
+            if section == "NAME" && fields.len() > 1 {
+                name = fields[1].to_string();
+            }
+            if section == "ENDATA" {
+                break;
+            }
+            continue;
+        }
+        match section.as_str() {
+            "OBJSENSE" => { /* MIN/MAX: irrelevant for propagation */ }
+            "ROWS" => {
+                if fields.len() < 2 {
+                    return Err(err(lineno, "ROWS line needs kind + name"));
+                }
+                let kind = match fields[0].to_uppercase().as_str() {
+                    "N" => RowKind::Objective,
+                    "L" => RowKind::LessEq,
+                    "G" => RowKind::GreaterEq,
+                    "E" => RowKind::Equal,
+                    other => return Err(err(lineno, format!("unknown row kind {other}"))),
+                };
+                let rname = fields[1].to_string();
+                if kind == RowKind::Objective {
+                    if obj_row.is_none() {
+                        obj_row = Some(rname);
+                    }
+                    // extra N rows are free rows; ignore their entries
+                    continue;
+                }
+                if row_index.contains_key(&rname) {
+                    return Err(err(lineno, format!("duplicate row {rname}")));
+                }
+                row_index.insert(rname.clone(), rows.len());
+                rows.push((rname, RowInfo { kind, rhs: 0.0, range: None }));
+            }
+            "COLUMNS" => {
+                if fields.len() >= 3 && fields[1].to_uppercase() == "'MARKER'" {
+                    let m = fields.last().unwrap().to_uppercase();
+                    if m.contains("INTORG") {
+                        in_integer = true;
+                    } else if m.contains("INTEND") {
+                        in_integer = false;
+                    }
+                    continue;
+                }
+                if fields.len() < 3 || fields.len() % 2 == 0 {
+                    return Err(err(lineno, "COLUMNS line needs name + (row val)+"));
+                }
+                let cname = fields[0].to_string();
+                let ci = *col_index.entry(cname.clone()).or_insert_with(|| {
+                    cols.push((
+                        cname,
+                        if in_integer { VarType::Integer } else { VarType::Continuous },
+                    ));
+                    cols.len() - 1
+                });
+                let mut k = 1;
+                while k + 1 < fields.len() {
+                    let rname = fields[k];
+                    let val: f64 = fields[k + 1]
+                        .parse()
+                        .map_err(|_| err(lineno, format!("bad number {}", fields[k + 1])))?;
+                    if Some(rname) == obj_row.as_deref() {
+                        obj_coefs.push((ci, val));
+                    } else if let Some(&ri) = row_index.get(rname) {
+                        entries.push((ri, ci, val));
+                    } else {
+                        return Err(err(lineno, format!("unknown row {rname}")));
+                    }
+                    k += 2;
+                }
+            }
+            "RHS" => {
+                // first field is the RHS set name; pairs follow
+                if fields.len() < 3 {
+                    return Err(err(lineno, "RHS line needs set + (row val)+"));
+                }
+                let mut k = 1;
+                while k + 1 <= fields.len() - 1 {
+                    let rname = fields[k];
+                    let val: f64 = fields[k + 1]
+                        .parse()
+                        .map_err(|_| err(lineno, format!("bad number {}", fields[k + 1])))?;
+                    if Some(rname) == obj_row.as_deref() {
+                        // objective constant; ignore
+                    } else if let Some(&ri) = row_index.get(rname) {
+                        rows[ri].1.rhs = val;
+                    } else {
+                        return Err(err(lineno, format!("unknown row {rname}")));
+                    }
+                    k += 2;
+                }
+            }
+            "RANGES" => {
+                if fields.len() < 3 {
+                    return Err(err(lineno, "RANGES line needs set + (row val)+"));
+                }
+                let mut k = 1;
+                while k + 1 <= fields.len() - 1 {
+                    let rname = fields[k];
+                    let val: f64 = fields[k + 1]
+                        .parse()
+                        .map_err(|_| err(lineno, format!("bad number {}", fields[k + 1])))?;
+                    let ri = *row_index
+                        .get(rname)
+                        .ok_or_else(|| err(lineno, format!("unknown row {rname}")))?;
+                    rows[ri].1.range = Some(val);
+                    k += 2;
+                }
+            }
+            "BOUNDS" => {
+                if fields.len() < 3 {
+                    return Err(err(lineno, "BOUNDS line needs type + set + col [val]"));
+                }
+                let btype = fields[0].to_uppercase();
+                let cname = fields[2];
+                let ci = *col_index
+                    .get(cname)
+                    .ok_or_else(|| err(lineno, format!("unknown column {cname}")))?;
+                let val: f64 = if fields.len() > 3 {
+                    fields[3]
+                        .parse()
+                        .map_err(|_| err(lineno, format!("bad number {}", fields[3])))?
+                } else {
+                    0.0
+                };
+                bound_records.push((ci, btype, val, lineno));
+            }
+            "" => return Err(err(lineno, "data before first section header")),
+            other => return Err(err(lineno, format!("unsupported section {other}"))),
+        }
+    }
+
+    let m = rows.len();
+    let n = cols.len();
+    let matrix = Csr::from_triplets(m, n, &entries).map_err(|e| err(0, e))?;
+
+    // constraint sides from kind + rhs + range (standard MPS semantics)
+    let mut lhs = vec![f64::NEG_INFINITY; m];
+    let mut rhs_v = vec![f64::INFINITY; m];
+    for (ri, (_, info)) in rows.iter().enumerate() {
+        match info.kind {
+            RowKind::LessEq => {
+                rhs_v[ri] = info.rhs;
+                if let Some(rg) = info.range {
+                    lhs[ri] = info.rhs - rg.abs();
+                }
+            }
+            RowKind::GreaterEq => {
+                lhs[ri] = info.rhs;
+                if let Some(rg) = info.range {
+                    rhs_v[ri] = info.rhs + rg.abs();
+                }
+            }
+            RowKind::Equal => {
+                lhs[ri] = info.rhs;
+                rhs_v[ri] = info.rhs;
+                if let Some(rg) = info.range {
+                    if rg >= 0.0 {
+                        rhs_v[ri] = info.rhs + rg;
+                    } else {
+                        lhs[ri] = info.rhs + rg;
+                    }
+                }
+            }
+            RowKind::Objective => unreachable!(),
+        }
+    }
+
+    // default bounds: [0, +inf) continuous; integers default [0, +inf) too
+    // (modern MIPLIB convention; BV/UI/LI set explicit ones)
+    let mut lb = vec![0.0; n];
+    let mut ub = vec![f64::INFINITY; n];
+    let mut vt: Vec<VarType> = cols.iter().map(|(_, t)| *t).collect();
+    // track whether UP with negative value should drop lb to -inf (classic
+    // MPS quirk): only when no explicit lower bound was given
+    let mut lb_explicit = vec![false; n];
+    for (ci, btype, val, lineno) in bound_records {
+        match btype.as_str() {
+            "LO" => {
+                lb[ci] = val;
+                lb_explicit[ci] = true;
+            }
+            "UP" => {
+                ub[ci] = val;
+                if val < 0.0 && !lb_explicit[ci] {
+                    lb[ci] = f64::NEG_INFINITY;
+                }
+            }
+            "FX" => {
+                lb[ci] = val;
+                ub[ci] = val;
+                lb_explicit[ci] = true;
+            }
+            "FR" => {
+                lb[ci] = f64::NEG_INFINITY;
+                ub[ci] = f64::INFINITY;
+            }
+            "MI" => {
+                lb[ci] = f64::NEG_INFINITY;
+            }
+            "PL" => {
+                ub[ci] = f64::INFINITY;
+            }
+            "BV" => {
+                lb[ci] = 0.0;
+                ub[ci] = 1.0;
+                vt[ci] = VarType::Integer;
+                lb_explicit[ci] = true;
+            }
+            "LI" => {
+                lb[ci] = val;
+                vt[ci] = VarType::Integer;
+                lb_explicit[ci] = true;
+            }
+            "UI" => {
+                ub[ci] = val;
+                vt[ci] = VarType::Integer;
+            }
+            other => return Err(err(lineno, format!("unknown bound type {other}"))),
+        }
+    }
+
+    let mut obj = vec![0.0; n];
+    for (ci, v) in obj_coefs {
+        obj[ci] = v;
+    }
+
+    let mut inst = MipInstance {
+        name,
+        matrix,
+        lhs,
+        rhs: rhs_v,
+        lb,
+        ub,
+        var_types: vt,
+        obj,
+        row_names: rows.iter().map(|(n, _)| n.clone()).collect(),
+        col_names: cols.iter().map(|(n, _)| n.clone()).collect(),
+    };
+    inst.canonicalize_infinities();
+    Ok(inst)
+}
+
+/// Serialize an instance back to free-format MPS.
+pub fn write_mps(inst: &MipInstance) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "NAME          {}", inst.name);
+    let _ = writeln!(out, "ROWS");
+    let _ = writeln!(out, " N  OBJ");
+    // encode each row as its tightest single-kind form, with RANGES when
+    // two-sided
+    #[derive(Clone, Copy, PartialEq)]
+    enum Enc {
+        L,
+        G,
+        E,
+        Ranged,
+    }
+    let mut encs = Vec::with_capacity(inst.nrows());
+    for r in 0..inst.nrows() {
+        let (l, u) = (inst.lhs[r], inst.rhs[r]);
+        assert!(
+            l.is_finite() || u.is_finite(),
+            "write_mps: row {r} is free (both sides infinite); MPS cannot encode it losslessly"
+        );
+        let enc = if l.is_finite() && u.is_finite() {
+            if l == u {
+                Enc::E
+            } else {
+                Enc::Ranged
+            }
+        } else if u.is_finite() {
+            Enc::L
+        } else {
+            Enc::G
+        };
+        encs.push(enc);
+        let kind = match enc {
+            Enc::L | Enc::Ranged => "L",
+            Enc::G => "G",
+            Enc::E => "E",
+        };
+        let _ = writeln!(out, " {}  {}", kind, inst.row_names[r]);
+    }
+    let _ = writeln!(out, "COLUMNS");
+    let csc = inst.to_csc(); // column-wise entries require a CSC pass
+    let mut in_int = false;
+    let mut marker = 0usize;
+    for c in 0..inst.ncols() {
+        let is_int = inst.var_types[c] == VarType::Integer;
+        if is_int && !in_int {
+            let _ = writeln!(out, "    MARKER{marker}  'MARKER'  'INTORG'");
+            marker += 1;
+            in_int = true;
+        }
+        if !is_int && in_int {
+            let _ = writeln!(out, "    MARKER{marker}  'MARKER'  'INTEND'");
+            marker += 1;
+            in_int = false;
+        }
+        // a column with no matrix entries must still appear in COLUMNS
+        // (via a zero objective entry) or the reader cannot register it
+        if inst.obj[c] != 0.0 || csc.col_nnz(c) == 0 {
+            let _ = writeln!(out, "    {}  OBJ  {:.17e}", inst.col_names[c], inst.obj[c]);
+        }
+        let (rows_c, vals_c) = csc.col(c);
+        for (&r, &v) in rows_c.iter().zip(vals_c) {
+            let _ = writeln!(
+                out,
+                "    {}  {}  {:.17e}",
+                inst.col_names[c], inst.row_names[r as usize], v
+            );
+        }
+    }
+    if in_int {
+        let _ = writeln!(out, "    MARKER{marker}  'MARKER'  'INTEND'");
+    }
+    let _ = writeln!(out, "RHS");
+    for r in 0..inst.nrows() {
+        let v = match encs[r] {
+            Enc::L | Enc::Ranged => inst.rhs[r],
+            Enc::G | Enc::E => inst.lhs[r],
+        };
+        if v != 0.0 {
+            let _ = writeln!(out, "    RHS  {}  {:.17e}", inst.row_names[r], v);
+        }
+    }
+    if encs.iter().any(|e| *e == Enc::Ranged) {
+        let _ = writeln!(out, "RANGES");
+        for r in 0..inst.nrows() {
+            if encs[r] == Enc::Ranged {
+                let _ = writeln!(
+                    out,
+                    "    RNG  {}  {:.17e}",
+                    inst.row_names[r],
+                    inst.rhs[r] - inst.lhs[r]
+                );
+            }
+        }
+    }
+    let _ = writeln!(out, "BOUNDS");
+    for c in 0..inst.ncols() {
+        let (l, u) = (inst.lb[c], inst.ub[c]);
+        let cn = &inst.col_names[c];
+        if l.is_finite() {
+            let _ = writeln!(out, " LO BND  {}  {:.17e}", cn, l);
+        } else {
+            let _ = writeln!(out, " MI BND  {}", cn);
+        }
+        if u.is_finite() {
+            let _ = writeln!(out, " UP BND  {}  {:.17e}", cn, u);
+        }
+    }
+    let _ = writeln!(out, "ENDATA");
+    out
+}
+
+pub fn write_mps_file(inst: &MipInstance, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, write_mps(inst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::testkit::{prop, Config};
+
+    const SAMPLE: &str = "\
+NAME          sample
+ROWS
+ N  COST
+ L  LIM1
+ G  LIM2
+ E  MYEQN
+COLUMNS
+    X1  COST  1.0  LIM1  1.0
+    X1  LIM2  1.0
+    MARKER1  'MARKER'  'INTORG'
+    X2  COST  2.0  LIM1  1.0
+    X2  MYEQN  -1.0
+    MARKER2  'MARKER'  'INTEND'
+    X3  COST  -1.0  MYEQN  1.0
+RHS
+    RHS  LIM1  4.0  LIM2  1.0
+    RHS  MYEQN  7.0
+BOUNDS
+ UP BND  X1  4.0
+ LO BND  X2  -1.0
+ENDATA
+";
+
+    #[test]
+    fn parses_sample() {
+        let inst = read_mps_str(SAMPLE).unwrap();
+        assert_eq!(inst.name, "sample");
+        assert_eq!(inst.nrows(), 3);
+        assert_eq!(inst.ncols(), 3);
+        assert_eq!(inst.rhs[0], 4.0); // LIM1: <= 4
+        assert_eq!(inst.lhs[0], f64::NEG_INFINITY);
+        assert_eq!(inst.lhs[1], 1.0); // LIM2: >= 1
+        assert_eq!(inst.lhs[2], 7.0); // MYEQN: == 7
+        assert_eq!(inst.rhs[2], 7.0);
+        assert_eq!(inst.var_types[1], VarType::Integer);
+        assert_eq!(inst.var_types[0], VarType::Continuous);
+        assert_eq!(inst.ub[0], 4.0);
+        assert_eq!(inst.lb[1], -1.0);
+        assert_eq!(inst.obj, vec![1.0, 2.0, -1.0]);
+        inst.validate().unwrap();
+    }
+
+    #[test]
+    fn ranges_semantics() {
+        let text = "\
+NAME r
+ROWS
+ N OBJ
+ L A
+ G B
+ E C
+COLUMNS
+    X A 1.0 B 1.0
+    X C 1.0
+RHS
+    RHS A 10.0 B 2.0
+    RHS C 5.0
+RANGES
+    RNG A 4.0 B 3.0
+    RNG C -2.0
+ENDATA
+";
+        let inst = read_mps_str(text).unwrap();
+        // L with range: lhs = rhs - |r|
+        assert_eq!((inst.lhs[0], inst.rhs[0]), (6.0, 10.0));
+        // G with range: rhs = lhs + |r|
+        assert_eq!((inst.lhs[1], inst.rhs[1]), (2.0, 5.0));
+        // E with negative range: lhs = rhs + r
+        assert_eq!((inst.lhs[2], inst.rhs[2]), (3.0, 5.0));
+    }
+
+    #[test]
+    fn bound_types() {
+        let text = "\
+NAME b
+ROWS
+ N OBJ
+ L A
+COLUMNS
+    X1 A 1.0
+    X2 A 1.0
+    X3 A 1.0
+    X4 A 1.0
+    X5 A 1.0
+RHS
+    RHS A 100.0
+BOUNDS
+ FR BND X1
+ FX BND X2 3.5
+ BV BND X3
+ UP BND X4 -2.0
+ MI BND X5
+ENDATA
+";
+        let inst = read_mps_str(text).unwrap();
+        assert_eq!(inst.lb[0], f64::NEG_INFINITY);
+        assert_eq!(inst.ub[0], f64::INFINITY);
+        assert_eq!((inst.lb[1], inst.ub[1]), (3.5, 3.5));
+        assert_eq!((inst.lb[2], inst.ub[2]), (0.0, 1.0));
+        assert_eq!(inst.var_types[2], VarType::Integer);
+        // UP with negative value and no explicit LO: lb drops to -inf
+        assert_eq!(inst.lb[3], f64::NEG_INFINITY);
+        assert_eq!(inst.ub[3], -2.0);
+        assert_eq!(inst.lb[4], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_mps_str("ROWS\n Z BADKIND\nENDATA\n").is_err());
+        assert!(read_mps_str("COLUMNS\n    X A 1.0\nENDATA\n").is_err());
+        assert!(read_mps_str("NOSECTION\n X\nENDATA\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let text = "* header comment\nNAME c\n\nROWS\n N OBJ\n* mid comment\n L A\nCOLUMNS\n    X A 1.0\nRHS\n    R A 1.0\nENDATA\n";
+        let inst = read_mps_str(text).unwrap();
+        assert_eq!(inst.nrows(), 1);
+    }
+
+    #[test]
+    fn prop_write_read_roundtrip() {
+        prop("mps roundtrip", Config::cases(24), |rng| {
+            let inst = gen::random_instance(rng, 8, 8, 0.5);
+            let text = write_mps(&inst);
+            let back = read_mps_str(&text).unwrap();
+            assert_eq!(back.nrows(), inst.nrows());
+            assert_eq!(back.ncols(), inst.ncols());
+            assert_eq!(back.matrix.nnz(), inst.matrix.nnz());
+            for r in 0..inst.nrows() {
+                crate::testkit::assert_close(back.lhs[r], inst.lhs[r], 1e-12, 1e-12);
+                crate::testkit::assert_close(back.rhs[r], inst.rhs[r], 1e-12, 1e-12);
+            }
+            for c in 0..inst.ncols() {
+                crate::testkit::assert_close(back.lb[c], inst.lb[c], 1e-12, 1e-12);
+                crate::testkit::assert_close(back.ub[c], inst.ub[c], 1e-12, 1e-12);
+                assert_eq!(back.var_types[c], inst.var_types[c]);
+            }
+            for (a, b) in inst.matrix.iter().zip(back.matrix.iter()) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1, b.1);
+                crate::testkit::assert_close(a.2, b.2, 1e-12, 1e-15);
+            }
+        });
+    }
+}

@@ -1,0 +1,197 @@
+//! Activity arithmetic with infinity-contribution counters (paper
+//! sections 1.1 and 3.4). Shared by every engine.
+
+/// One directed activity: the finite part of the sum plus the number of
+//  infinite contributions.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Act {
+    pub fin: f64,
+    pub cnt: u32,
+}
+
+impl Act {
+    #[inline]
+    pub fn add(&mut self, contribution: f64) {
+        if contribution.is_finite() {
+            self.fin += contribution;
+        } else {
+            self.cnt += 1;
+        }
+    }
+
+    /// The activity value itself: -inf/+inf when any contribution is
+    /// infinite (`sign` picks which infinity an `inf_count > 0` means:
+    /// -1 for minimum activity, +1 for maximum activity).
+    #[inline]
+    pub fn value(&self, sign: f64) -> f64 {
+        if self.cnt == 0 {
+            self.fin
+        } else {
+            sign * f64::INFINITY
+        }
+    }
+
+    /// Residual activity after removing one entry's contribution
+    /// (paper eqs. (5a)/(5b) with the section 3.4 counter trick):
+    /// finite iff every *other* contribution is finite.
+    #[inline]
+    pub fn residual(&self, own_contribution: f64, sign: f64) -> f64 {
+        if own_contribution.is_finite() {
+            if self.cnt == 0 {
+                self.fin - own_contribution
+            } else {
+                sign * f64::INFINITY
+            }
+        } else if self.cnt == 1 {
+            self.fin
+        } else {
+            sign * f64::INFINITY
+        }
+    }
+}
+
+/// Min/max activity pair of one constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RowActivity {
+    pub min: Act,
+    pub max: Act,
+}
+
+impl RowActivity {
+    /// Accumulate one entry given coefficient `a` and the variable's
+    /// current bounds: minimum activity uses lb for a>0 / ub for a<=0,
+    /// maximum activity the opposite (paper eq. (3a)/(3b)).
+    #[inline]
+    pub fn accumulate(&mut self, a: f64, lb: f64, ub: f64) {
+        let (bmin, bmax) = if a > 0.0 { (lb, ub) } else { (ub, lb) };
+        self.min.add(if bmin.is_finite() { a * bmin } else { f64::NEG_INFINITY });
+        self.max.add(if bmax.is_finite() { a * bmax } else { f64::INFINITY });
+    }
+
+    /// Compute for a whole row.
+    pub fn of_row(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> RowActivity {
+        let mut act = RowActivity::default();
+        for (&c, &a) in cols.iter().zip(vals) {
+            act.accumulate(a, lb[c as usize], ub[c as usize]);
+        }
+        act
+    }
+
+    pub fn min_value(&self) -> f64 {
+        self.min.value(-1.0)
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.max.value(1.0)
+    }
+
+    /// Paper Step 1: constraint is redundant under [lhs, rhs].
+    #[inline]
+    pub fn redundant(&self, lhs: f64, rhs: f64) -> bool {
+        lhs <= self.min_value() && self.max_value() <= rhs
+    }
+
+    /// Paper Step 2: constraint cannot be satisfied.
+    #[inline]
+    pub fn infeasible(&self, lhs: f64, rhs: f64) -> bool {
+        self.min_value() > rhs || lhs > self.max_value()
+    }
+
+    /// Can Step 3 possibly tighten anything? (the "can c propagate" gate
+    /// of Algorithm 1 line 9: a finite side with at most one infinite
+    /// contribution on the relevant activity)
+    #[inline]
+    pub fn can_propagate(&self, lhs: f64, rhs: f64) -> bool {
+        (rhs.is_finite() && self.min.cnt <= 1) || (lhs.is_finite() && self.max.cnt <= 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_finite_row() {
+        // 2x + 3y, x in [0,10], y in [1,2]
+        let act = RowActivity::of_row(&[0, 1], &[2.0, 3.0], &[0.0, 1.0], &[10.0, 2.0]);
+        assert_eq!(act.min_value(), 3.0);
+        assert_eq!(act.max_value(), 26.0);
+        assert_eq!(act.min.cnt, 0);
+    }
+
+    #[test]
+    fn negative_coefficients_swap_bounds() {
+        // -2x, x in [1, 5]: min = -10, max = -2
+        let act = RowActivity::of_row(&[0], &[-2.0], &[1.0], &[5.0]);
+        assert_eq!(act.min_value(), -10.0);
+        assert_eq!(act.max_value(), -2.0);
+    }
+
+    #[test]
+    fn one_infinity_tracked() {
+        // x + y, x in [1,2], y in (-inf, 3]
+        let act = RowActivity::of_row(
+            &[0, 1],
+            &[1.0, 1.0],
+            &[1.0, f64::NEG_INFINITY],
+            &[2.0, 3.0],
+        );
+        assert_eq!(act.min.cnt, 1);
+        assert_eq!(act.min.fin, 1.0);
+        assert_eq!(act.min_value(), f64::NEG_INFINITY);
+        assert_eq!(act.max_value(), 5.0);
+    }
+
+    #[test]
+    fn residual_single_infinity() {
+        // the section 3.4 special case: the infinite variable's residual
+        // is the finite part
+        let mut a = Act::default();
+        a.add(1.0);
+        a.add(f64::NEG_INFINITY);
+        assert_eq!(a.residual(f64::NEG_INFINITY, -1.0), 1.0);
+        // the finite variable's residual stays infinite
+        assert_eq!(a.residual(1.0, -1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn residual_no_infinity() {
+        let mut a = Act::default();
+        a.add(1.0);
+        a.add(2.5);
+        assert_eq!(a.residual(1.0, -1.0), 2.5);
+    }
+
+    #[test]
+    fn residual_two_infinities() {
+        let mut a = Act::default();
+        a.add(f64::INFINITY);
+        a.add(f64::INFINITY);
+        a.add(3.0);
+        assert_eq!(a.residual(f64::INFINITY, 1.0), f64::INFINITY);
+        assert_eq!(a.residual(3.0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn step1_step2_checks() {
+        let act = RowActivity::of_row(&[0, 1], &[1.0, 1.0], &[0.0, 0.0], &[1.0, 1.0]);
+        // activities [0, 2]
+        assert!(act.redundant(f64::NEG_INFINITY, 5.0));
+        assert!(!act.redundant(1.0, 5.0));
+        assert!(act.infeasible(f64::NEG_INFINITY, -1.0)); // minact 0 > rhs -1
+        assert!(act.infeasible(3.0, f64::INFINITY)); // lhs 3 > maxact 2
+        assert!(!act.infeasible(0.0, 2.0));
+    }
+
+    #[test]
+    fn can_propagate_gate() {
+        let mut act = RowActivity::default();
+        act.accumulate(1.0, f64::NEG_INFINITY, f64::INFINITY);
+        act.accumulate(1.0, f64::NEG_INFINITY, f64::INFINITY);
+        // two infinities on both sides: nothing can be tightened
+        assert!(!act.can_propagate(0.0, 1.0));
+        let act1 = RowActivity::of_row(&[0], &[1.0], &[f64::NEG_INFINITY], &[f64::INFINITY]);
+        assert!(act1.can_propagate(0.0, 1.0)); // single infinity: residual finite
+        assert!(!act1.can_propagate(f64::NEG_INFINITY, f64::INFINITY)); // free row
+    }
+}

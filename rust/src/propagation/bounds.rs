@@ -1,0 +1,159 @@
+//! Bound-candidate computation (paper eqs. (4a)/(4b) in residual form
+//! (5a)/(5b)) and the update rule. Mirrors the candidate kernel
+//! (python/compile/kernels/candidates.py) exactly; the differential tests
+//! in rust/tests/xla_differential.rs rely on this.
+
+use super::activity::RowActivity;
+use crate::numerics::{improves_lb, improves_ub, INT_ROUND_EPS};
+
+/// Lower/upper bound candidate of one (row, entry) pair. Non-informative
+/// candidates are -inf/+inf (they never pass the improvement check).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub lb: f64,
+    pub ub: f64,
+}
+
+/// Compute the candidates variable `j` (coefficient `a`, bounds `lbj/ubj`,
+/// integrality `is_int`) receives from a row with activity `act` and sides
+/// `[lhs, rhs]`.
+#[inline]
+pub fn candidates(
+    a: f64,
+    lbj: f64,
+    ubj: f64,
+    is_int: bool,
+    act: &RowActivity,
+    lhs: f64,
+    rhs: f64,
+) -> Candidate {
+    debug_assert!(a != 0.0);
+    // this entry's own contributions to the min/max activity
+    let (bmin, bmax) = if a > 0.0 { (lbj, ubj) } else { (ubj, lbj) };
+    let own_min = if bmin.is_finite() { a * bmin } else { f64::NEG_INFINITY };
+    let own_max = if bmax.is_finite() { a * bmax } else { f64::INFINITY };
+    let resmin = act.min.residual(own_min, -1.0);
+    let resmax = act.max.residual(own_max, 1.0);
+
+    // a > 0:  x_j <= (rhs - resmin)/a,  x_j >= (lhs - resmax)/a
+    // a < 0:  x_j <= (lhs - resmax)/a,  x_j >= (rhs - resmin)/a
+    let ub_num = if a > 0.0 { rhs - resmin } else { lhs - resmax };
+    let lb_num = if a > 0.0 { lhs - resmax } else { rhs - resmin };
+    let mut ub = if ub_num.is_finite() { ub_num / a } else { f64::INFINITY };
+    let mut lb = if lb_num.is_finite() { lb_num / a } else { f64::NEG_INFINITY };
+    if is_int {
+        if ub.is_finite() {
+            ub = (ub + INT_ROUND_EPS).floor();
+        }
+        if lb.is_finite() {
+            lb = (lb - INT_ROUND_EPS).ceil();
+        }
+    }
+    Candidate { lb, ub }
+}
+
+/// Apply a candidate to the bound pair; returns (lb_changed, ub_changed).
+#[inline]
+pub fn apply(cand: Candidate, lb: &mut f64, ub: &mut f64) -> (bool, bool) {
+    let l = improves_lb(*lb, cand.lb);
+    if l {
+        *lb = cand.lb;
+    }
+    let u = improves_ub(*ub, cand.ub);
+    if u {
+        *ub = cand.ub;
+    }
+    (l, u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propagation::activity::RowActivity;
+
+    fn act_of(entries: &[(f64, f64, f64)]) -> RowActivity {
+        let mut act = RowActivity::default();
+        for &(a, l, u) in entries {
+            act.accumulate(a, l, u);
+        }
+        act
+    }
+
+    #[test]
+    fn textbook_positive() {
+        // 2x + 3y <= 12, x,y in [0,10]: x <= 6, y <= 4
+        let act = act_of(&[(2.0, 0.0, 10.0), (3.0, 0.0, 10.0)]);
+        let cx = candidates(2.0, 0.0, 10.0, false, &act, f64::NEG_INFINITY, 12.0);
+        assert_eq!(cx.ub, 6.0);
+        assert_eq!(cx.lb, f64::NEG_INFINITY);
+        let cy = candidates(3.0, 0.0, 10.0, false, &act, f64::NEG_INFINITY, 12.0);
+        assert_eq!(cy.ub, 4.0);
+    }
+
+    #[test]
+    fn negative_coefficient() {
+        // -x + y >= 1, x in [0,4], y in [0,3]: x <= 2, y >= 1
+        let act = act_of(&[(-1.0, 0.0, 4.0), (1.0, 0.0, 3.0)]);
+        let cx = candidates(-1.0, 0.0, 4.0, false, &act, 1.0, f64::INFINITY);
+        assert_eq!(cx.ub, 2.0);
+        let cy = candidates(1.0, 0.0, 3.0, false, &act, 1.0, f64::INFINITY);
+        assert_eq!(cy.lb, 1.0);
+    }
+
+    #[test]
+    fn integer_rounding() {
+        // 2x <= 5, x integer: x <= 2
+        let act = act_of(&[(2.0, 0.0, 10.0)]);
+        let c = candidates(2.0, 0.0, 10.0, true, &act, f64::NEG_INFINITY, 5.0);
+        assert_eq!(c.ub, 2.0);
+        // exactly-integral candidate must not over-round
+        let c2 = candidates(3.0, 0.0, 10.0, true, &act_of(&[(3.0, 0.0, 10.0)]), f64::NEG_INFINITY, 6.0);
+        assert_eq!(c2.ub, 2.0);
+    }
+
+    #[test]
+    fn single_infinity_residual_enables_tightening() {
+        // x0 + x1 <= 4, x0 in [1,2], x1 free below: x1 <= 3
+        let act = act_of(&[(1.0, 1.0, 2.0), (1.0, f64::NEG_INFINITY, f64::INFINITY)]);
+        let c1 = candidates(
+            1.0,
+            f64::NEG_INFINITY,
+            f64::INFINITY,
+            false,
+            &act,
+            f64::NEG_INFINITY,
+            4.0,
+        );
+        assert_eq!(c1.ub, 3.0);
+        // while x0's residual is infinite: no candidate
+        let c0 = candidates(1.0, 1.0, 2.0, false, &act, f64::NEG_INFINITY, 4.0);
+        assert_eq!(c0.ub, f64::INFINITY);
+    }
+
+    #[test]
+    fn infinite_side_no_candidate() {
+        let act = act_of(&[(1.0, 0.0, 1.0)]);
+        let c = candidates(1.0, 0.0, 1.0, false, &act, f64::NEG_INFINITY, f64::INFINITY);
+        assert_eq!(c.ub, f64::INFINITY);
+        assert_eq!(c.lb, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn apply_respects_threshold() {
+        let mut lb = 0.0;
+        let mut ub = 10.0;
+        let (l, u) = apply(Candidate { lb: 0.0 + 1e-12, ub: 5.0 }, &mut lb, &mut ub);
+        assert!(!l && u);
+        assert_eq!(lb, 0.0);
+        assert_eq!(ub, 5.0);
+    }
+
+    #[test]
+    fn equality_row_fixes_variable() {
+        // x + y = 5, x in [0,5], y fixed at 5: x fixed to 0
+        let act = act_of(&[(1.0, 0.0, 5.0), (1.0, 5.0, 5.0)]);
+        let c = candidates(1.0, 0.0, 5.0, false, &act, 5.0, 5.0);
+        assert_eq!(c.lb, 0.0);
+        assert_eq!(c.ub, 0.0);
+    }
+}

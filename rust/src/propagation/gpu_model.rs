@@ -1,0 +1,270 @@
+//! Native Rust execution of the GPU algorithm's round-synchronous schedule
+//! (Algorithm 2 / Algorithm 3).
+//!
+//! Two roles:
+//! 1. **Differential oracle** — same semantics as the AOT artifacts
+//!    (python/compile/kernels/ref.py), so `XlaEngine` results can be
+//!    validated against it without Python in the loop.
+//! 2. **Trace recorder** — produces the per-round metrics (nnz, candidate
+//!    counts, atomic conflicts per column) that the device cost model
+//!    replays to estimate GPU runtimes (DESIGN.md section 3).
+//!
+//! All candidates in a round are computed against the *incoming* bounds;
+//! per-column reduction picks the best candidate (the scatter-min/max /
+//! atomicMin-atomicMax step of section 3.5).
+
+use super::activity::RowActivity;
+use super::bounds::candidates;
+use super::trace::{RoundTrace, Trace};
+use super::{Engine, PropResult, Status};
+use crate::instance::{Bounds, MipInstance, VarType};
+use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
+use crate::util::timer::Timer;
+
+pub struct GpuModelEngine {
+    pub max_rounds: u32,
+    /// Record the (more expensive) per-column conflict histogram.
+    pub record_conflicts: bool,
+}
+
+impl Default for GpuModelEngine {
+    fn default() -> Self {
+        GpuModelEngine { max_rounds: MAX_ROUNDS, record_conflicts: true }
+    }
+}
+
+impl Engine for GpuModelEngine {
+    fn name(&self) -> &'static str {
+        "gpu_model"
+    }
+
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+        let timer = Timer::start();
+        let m = inst.nrows();
+        let n = inst.ncols();
+        let mut lb = inst.lb.clone();
+        let mut ub = inst.ub.clone();
+        // round-synchronous double buffers
+        let mut best_lb = vec![f64::NEG_INFINITY; n];
+        let mut best_ub = vec![f64::INFINITY; n];
+        let mut col_hits = vec![0u32; n];
+        let mut acts: Vec<RowActivity> = vec![RowActivity::default(); m];
+        let mut trace = Trace::default();
+        let mut rounds = 0u32;
+        let mut status = Status::MaxRounds;
+
+        while rounds < self.max_rounds {
+            rounds += 1;
+            let mut rt = RoundTrace { rows_processed: m, ..Default::default() };
+
+            // phase 1 (Alg. 2 lines 3-4): activities for ALL constraints
+            for r in 0..m {
+                let (cols, vals) = inst.matrix.row(r);
+                acts[r] = RowActivity::of_row(cols, vals, &lb, &ub);
+                rt.nnz_processed += cols.len();
+            }
+
+            // phase 2 (lines 5-13): candidates for ALL nonzeros, reduced
+            // per column against the incoming bounds
+            for x in best_lb.iter_mut() {
+                *x = f64::NEG_INFINITY;
+            }
+            for x in best_ub.iter_mut() {
+                *x = f64::INFINITY;
+            }
+            if self.record_conflicts {
+                for h in col_hits.iter_mut() {
+                    *h = 0;
+                }
+            }
+            for r in 0..m {
+                let (cols, vals) = inst.matrix.row(r);
+                rt.nnz_processed += cols.len();
+                let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+                for (&c, &a) in cols.iter().zip(vals) {
+                    let j = c as usize;
+                    let cand = candidates(
+                        a,
+                        lb[j],
+                        ub[j],
+                        inst.var_types[j] == VarType::Integer,
+                        &acts[r],
+                        lhs,
+                        rhs,
+                    );
+                    // pre-filter before the "atomic" (section 3.5)
+                    let mut hit = false;
+                    if improves_lb(lb[j], cand.lb) {
+                        rt.atomic_updates += 1;
+                        hit = true;
+                        if cand.lb > best_lb[j] {
+                            best_lb[j] = cand.lb;
+                        }
+                    }
+                    if improves_ub(ub[j], cand.ub) {
+                        rt.atomic_updates += 1;
+                        hit = true;
+                        if cand.ub < best_ub[j] {
+                            best_ub[j] = cand.ub;
+                        }
+                    }
+                    if hit && self.record_conflicts {
+                        col_hits[j] += 1;
+                    }
+                }
+            }
+
+            // commit: round-synchronous bound swap
+            let mut change = false;
+            let mut infeas = false;
+            for j in 0..n {
+                if improves_lb(lb[j], best_lb[j]) {
+                    lb[j] = best_lb[j];
+                    change = true;
+                    rt.bound_changes += 1;
+                }
+                if improves_ub(ub[j], best_ub[j]) {
+                    ub[j] = best_ub[j];
+                    change = true;
+                    rt.bound_changes += 1;
+                }
+                if lb[j] > ub[j] + FEAS_TOL {
+                    infeas = true;
+                }
+            }
+            if self.record_conflicts {
+                rt.max_col_conflicts =
+                    col_hits.iter().copied().max().unwrap_or(0) as usize;
+            }
+            trace.push(rt);
+            if infeas {
+                status = Status::Infeasible;
+                break;
+            }
+            if !change {
+                status = Status::Converged;
+                break;
+            }
+        }
+
+        PropResult {
+            bounds: Bounds { lb, ub },
+            rounds,
+            status,
+            wall: timer.elapsed(),
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::propagation::seq::SeqEngine;
+    use crate::sparse::Csr;
+    use crate::testkit::{prop, Config};
+
+    fn cascade(m: usize) -> MipInstance {
+        let mut triplets = vec![(0usize, 0usize, 1.0)];
+        for i in 1..m {
+            triplets.push((i, i, 1.0));
+            triplets.push((i, i - 1, -1.0));
+        }
+        let matrix = Csr::from_triplets(m, m, &triplets).unwrap();
+        MipInstance::from_parts(
+            "cascade",
+            matrix,
+            vec![f64::NEG_INFINITY; m],
+            {
+                let mut r = vec![0.0; m];
+                r[0] = 1.0;
+                r
+            },
+            vec![0.0; m],
+            vec![1000.0; m],
+            vec![VarType::Continuous; m],
+        )
+    }
+
+    #[test]
+    fn cascade_needs_m_plus_one_rounds() {
+        // the paper's worst case (section 2.2): round-synchronous
+        // propagation resolves one chain link per round
+        let m = 9;
+        let r = GpuModelEngine::default().propagate(&cascade(m));
+        assert_eq!(r.status, Status::Converged);
+        assert!(r.bounds.ub.iter().all(|&u| u == 1.0));
+        assert_eq!(r.rounds as usize, m + 1);
+    }
+
+    #[test]
+    fn same_limit_point_as_seq() {
+        prop("gpu_model == seq limit point", Config::cases(32), |rng| {
+            let inst = gen::random_instance(rng, 25, 25, 0.5);
+            let seq = SeqEngine::new().propagate(&inst);
+            let gpu = GpuModelEngine::default().propagate(&inst);
+            if seq.status == Status::Converged && gpu.status == Status::Converged {
+                crate::testkit::assert_bounds_equal(&seq.bounds.lb, &gpu.bounds.lb, "lb");
+                crate::testkit::assert_bounds_equal(&seq.bounds.ub, &gpu.bounds.ub, "ub");
+            }
+            if seq.status == Status::Infeasible {
+                // parallel propagation must also discover infeasibility
+                // (possibly in a later round)
+                assert_ne!(gpu.status, Status::Converged);
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_rounds_at_least_sequential() {
+        // the price of parallelism (section 2.2): rounds(par) >= rounds(seq)
+        // whenever both converge
+        prop("rounds(par) >= rounds(seq)", Config::cases(24), |rng| {
+            let inst = gen::random_instance(rng, 20, 20, 0.4);
+            let seq = SeqEngine::new().propagate(&inst);
+            let gpu = GpuModelEngine::default().propagate(&inst);
+            if seq.status == Status::Converged && gpu.status == Status::Converged {
+                assert!(
+                    gpu.rounds >= seq.rounds,
+                    "par {} < seq {}",
+                    gpu.rounds,
+                    seq.rounds
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn trace_records_conflicts() {
+        // many rows tightening the same column -> conflicts recorded
+        let mut triplets = Vec::new();
+        for r in 0..8usize {
+            triplets.push((r, 0usize, 1.0));
+            triplets.push((r, r + 1, 1.0));
+        }
+        let matrix = Csr::from_triplets(8, 9, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "conflict",
+            matrix,
+            vec![f64::NEG_INFINITY; 8],
+            vec![1.0; 8],
+            vec![0.0; 9],
+            vec![10.0; 9],
+            vec![VarType::Continuous; 9],
+        );
+        let r = GpuModelEngine::default().propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        assert!(r.trace.rounds[0].max_col_conflicts >= 8);
+    }
+
+    #[test]
+    fn processes_all_rows_every_round() {
+        let inst = cascade(5);
+        let r = GpuModelEngine::default().propagate(&inst);
+        for rt in &r.trace.rounds {
+            assert_eq!(rt.rows_processed, 5);
+            assert_eq!(rt.nnz_processed, 2 * inst.nnz());
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Domain propagation engines.
+//!
+//! * [`seq::SeqEngine`] — Algorithm 1: sequential, constraint marking,
+//!   early termination (the `cpu_seq` baseline).
+//! * [`omp::OmpEngine`] — shared-memory parallel Algorithm 1 round
+//!   (the `cpu_omp` baseline; crossbeam scoped threads + atomic bounds).
+//! * [`gpu_model::GpuModelEngine`] — native Rust execution of Algorithm 2's
+//!   round-synchronous schedule; differential oracle for the artifacts and
+//!   trace recorder for the device cost model.
+//! * [`xla_engine::XlaEngine`] — the paper's contribution: the propagation
+//!   round AOT-compiled from JAX/Pallas, executed via PJRT
+//!   (`cpu_loop`/`gpu_loop`/`megakernel` variants, section 3.7).
+//! * [`papilo_like::PapiloLikeEngine`] — independent comparison baseline
+//!   re-creating PaPILO's propagation-plus-reductions behaviour (section 4.6).
+
+pub mod activity;
+pub mod bounds;
+pub mod trace;
+pub mod seq;
+pub mod omp;
+pub mod gpu_model;
+pub mod xla_engine;
+pub mod papilo_like;
+
+use crate::instance::{Bounds, MipInstance};
+use std::time::Duration;
+use trace::Trace;
+
+/// Why a propagation run stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Fixed point reached: a round found no bound change.
+    Converged,
+    /// Round limit hit while still finding changes (paper section 4.1).
+    MaxRounds,
+    /// An empty domain was produced: the (sub)problem is infeasible.
+    Infeasible,
+}
+
+/// Outcome of one propagation run.
+#[derive(Debug, Clone)]
+pub struct PropResult {
+    pub bounds: Bounds,
+    pub rounds: u32,
+    pub status: Status,
+    /// Wall-clock time of the propagation loop only (one-time setup such
+    /// as CSC construction or artifact compilation is excluded, following
+    /// the paper's timing protocol, section 4.3).
+    pub wall: Duration,
+    pub trace: Trace,
+}
+
+impl PropResult {
+    /// Did this run converge to the same limit point as `reference`
+    /// (paper section 4.3 equality)? Two infeasible verdicts agree
+    /// regardless of where in the round the empty domain was caught.
+    pub fn same_limit_point(&self, reference: &PropResult) -> bool {
+        if self.status == Status::Infeasible && reference.status == Status::Infeasible {
+            return true;
+        }
+        self.status == reference.status && reference.bounds.equal_within_tol(&self.bounds)
+    }
+}
+
+/// A propagation engine. Engines own scratch state so repeated calls reuse
+/// allocations; `propagate` itself is the timed hot path.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult;
+}

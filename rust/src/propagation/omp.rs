@@ -1,0 +1,306 @@
+//! Shared-memory parallel Algorithm 1 — the `cpu_omp` baseline.
+//!
+//! Follows the paper's description (section 4.2): the per-round loop over
+//! constraints is parallelized; the marked-constraint set is pre-processed
+//! into a worklist so threads receive only useful work; bound updates use
+//! atomics (the paper uses OpenMP locks; we use lock-free CAS min/max on
+//! the f64 bit patterns, which has the same monotone-lattice semantics).
+//!
+//! Like the OpenMP original, bound changes made by other threads *within*
+//! a round may or may not be observed — the update lattice is monotone, so
+//! every interleaving converges to a valid (possibly tighter-earlier)
+//! state, and the fixed point matches the sequential one within tolerances.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use super::activity::RowActivity;
+use super::bounds::candidates;
+use super::trace::{RoundTrace, Trace};
+use super::{Engine, PropResult, Status};
+use crate::instance::{Bounds, MipInstance, VarType};
+use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
+use crate::util::timer::Timer;
+
+/// f64 stored in an AtomicU64.
+#[inline]
+fn load_f64(a: &AtomicU64) -> f64 {
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+/// Atomic lower-bound max-update; returns true if this call improved it.
+#[inline]
+fn atomic_update_lb(a: &AtomicU64, new: f64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let curf = f64::from_bits(cur);
+        if !improves_lb(curf, new) {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Atomic upper-bound min-update; returns true if this call improved it.
+#[inline]
+fn atomic_update_ub(a: &AtomicU64, new: f64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let curf = f64::from_bits(cur);
+        if !improves_ub(curf, new) {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+pub struct OmpEngine {
+    pub threads: usize,
+    pub max_rounds: u32,
+}
+
+impl Default for OmpEngine {
+    fn default() -> Self {
+        OmpEngine {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            max_rounds: MAX_ROUNDS,
+        }
+    }
+}
+
+impl OmpEngine {
+    pub fn with_threads(threads: usize) -> OmpEngine {
+        OmpEngine { threads: threads.max(1), ..Default::default() }
+    }
+}
+
+impl Engine for OmpEngine {
+    fn name(&self) -> &'static str {
+        "cpu_omp"
+    }
+
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+        let csc = inst.to_csc(); // one-time init, untimed
+        let timer = Timer::start();
+        let m = inst.nrows();
+        let lb: Vec<AtomicU64> = inst.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+        let ub: Vec<AtomicU64> = inst.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+        let marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(true)).collect();
+        let next_marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
+        let infeasible = AtomicBool::new(false);
+        let mut trace = Trace::default();
+        let mut rounds = 0u32;
+        let mut status = Status::MaxRounds;
+        let mut worklist: Vec<u32> = Vec::with_capacity(m);
+
+        while rounds < self.max_rounds {
+            rounds += 1;
+            // pre-process the marked set into a worklist (load balancing,
+            // paper section 4.2)
+            worklist.clear();
+            for r in 0..m {
+                if marked[r].swap(false, Ordering::Relaxed) {
+                    worklist.push(r as u32);
+                }
+            }
+            if worklist.is_empty() {
+                status = Status::Converged;
+                rounds -= 1; // nothing processed: not a round
+                break;
+            }
+
+            let changes = AtomicUsize::new(0);
+            let atomics_issued = AtomicUsize::new(0);
+            let nnz_processed = AtomicUsize::new(0);
+            let nthreads = self.threads.min(worklist.len()).max(1);
+            let chunk = worklist.len().div_ceil(nthreads);
+
+            crossbeam_utils::thread::scope(|scope| {
+                for t in 0..nthreads {
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(worklist.len());
+                    if lo >= hi {
+                        continue;
+                    }
+                    let work = &worklist[lo..hi];
+                    let csc = &csc;
+                    let lb = &lb;
+                    let ub = &ub;
+                    let next_marked = &next_marked;
+                    let infeasible = &infeasible;
+                    let changes = &changes;
+                    let atomics_issued = &atomics_issued;
+                    let nnz_processed = &nnz_processed;
+                    scope.spawn(move |_| {
+                        let mut local_changes = 0usize;
+                        let mut local_atomics = 0usize;
+                        let mut local_nnz = 0usize;
+                        for &r in work {
+                            if infeasible.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let r = r as usize;
+                            let (cols, vals) = inst.matrix.row(r);
+                            local_nnz += cols.len();
+                            let mut act = RowActivity::default();
+                            for (&c, &a) in cols.iter().zip(vals) {
+                                let j = c as usize;
+                                act.accumulate(a, load_f64(&lb[j]), load_f64(&ub[j]));
+                            }
+                            let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+                            if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+                                continue;
+                            }
+                            local_nnz += cols.len();
+                            for (&c, &a) in cols.iter().zip(vals) {
+                                let j = c as usize;
+                                let cand = candidates(
+                                    a,
+                                    load_f64(&lb[j]),
+                                    load_f64(&ub[j]),
+                                    inst.var_types[j] == VarType::Integer,
+                                    &act,
+                                    lhs,
+                                    rhs,
+                                );
+                                let mut changed = false;
+                                if cand.lb.is_finite() || cand.lb == f64::INFINITY {
+                                    if improves_lb(load_f64(&lb[j]), cand.lb) {
+                                        local_atomics += 1;
+                                        changed |= atomic_update_lb(&lb[j], cand.lb);
+                                    }
+                                }
+                                if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
+                                    if improves_ub(load_f64(&ub[j]), cand.ub) {
+                                        local_atomics += 1;
+                                        changed |= atomic_update_ub(&ub[j], cand.ub);
+                                    }
+                                }
+                                if changed {
+                                    local_changes += 1;
+                                    if load_f64(&lb[j]) > load_f64(&ub[j]) + FEAS_TOL {
+                                        infeasible.store(true, Ordering::Relaxed);
+                                        break;
+                                    }
+                                    let (rows_j, _) = csc.col(j);
+                                    for &ri in rows_j {
+                                        next_marked[ri as usize].store(true, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                        }
+                        changes.fetch_add(local_changes, Ordering::Relaxed);
+                        atomics_issued.fetch_add(local_atomics, Ordering::Relaxed);
+                        nnz_processed.fetch_add(local_nnz, Ordering::Relaxed);
+                    });
+                }
+            })
+            .expect("worker thread panicked");
+
+            trace.push(RoundTrace {
+                rows_processed: worklist.len(),
+                nnz_processed: nnz_processed.load(Ordering::Relaxed),
+                bound_changes: changes.load(Ordering::Relaxed),
+                atomic_updates: atomics_issued.load(Ordering::Relaxed),
+                max_col_conflicts: 0,
+            });
+
+            if infeasible.load(Ordering::Relaxed) {
+                status = Status::Infeasible;
+                break;
+            }
+            if changes.load(Ordering::Relaxed) == 0 {
+                status = Status::Converged;
+                break;
+            }
+            for (m_, n_) in marked.iter().zip(&next_marked) {
+                m_.store(n_.swap(false, Ordering::Relaxed), Ordering::Relaxed);
+            }
+        }
+
+        PropResult {
+            bounds: Bounds {
+                lb: lb.iter().map(load_f64).collect(),
+                ub: ub.iter().map(load_f64).collect(),
+            },
+            rounds,
+            status,
+            wall: timer.elapsed(),
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::propagation::seq::SeqEngine;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn atomic_lb_monotone() {
+        let a = AtomicU64::new(0.0f64.to_bits());
+        assert!(atomic_update_lb(&a, 2.0));
+        assert!(!atomic_update_lb(&a, 1.0));
+        assert!(atomic_update_lb(&a, 3.0));
+        assert_eq!(load_f64(&a), 3.0);
+    }
+
+    #[test]
+    fn atomic_ub_monotone() {
+        let a = AtomicU64::new(f64::INFINITY.to_bits());
+        assert!(atomic_update_ub(&a, 5.0));
+        assert!(!atomic_update_ub(&a, 6.0));
+        assert_eq!(load_f64(&a), 5.0);
+    }
+
+    #[test]
+    fn matches_sequential_fixed_point() {
+        prop("omp == seq limit point", Config::cases(24), |rng| {
+            let inst = gen::random_instance(rng, 25, 25, 0.5);
+            let seq = SeqEngine::new().propagate(&inst);
+            let mut omp = OmpEngine::with_threads(4);
+            let par = omp.propagate(&inst);
+            if seq.status == Status::Converged && par.status == Status::Converged {
+                crate::testkit::assert_bounds_equal(&seq.bounds.lb, &par.bounds.lb, "lb");
+                crate::testkit::assert_bounds_equal(&seq.bounds.ub, &par.bounds.ub, "ub");
+            }
+            // non-converged cases (MaxRounds/Infeasible) are excluded from
+            // comparison, exactly as the paper excludes them (section 4.1)
+        });
+    }
+
+    #[test]
+    fn single_thread_omp_equals_seq_exactly() {
+        let inst = gen::generate(&GenConfig { nrows: 60, ncols: 50, seed: 5, ..Default::default() });
+        let seq = SeqEngine::new().propagate(&inst);
+        let par = OmpEngine::with_threads(1).propagate(&inst);
+        assert_eq!(seq.status, par.status);
+        crate::testkit::assert_bounds_equal(&seq.bounds.lb, &par.bounds.lb, "lb");
+        crate::testkit::assert_bounds_equal(&seq.bounds.ub, &par.bounds.ub, "ub");
+    }
+
+    #[test]
+    fn infeasible_detected_parallel() {
+        use crate::instance::{MipInstance, VarType};
+        use crate::sparse::Csr;
+        let matrix = Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "inf",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            vec![VarType::Continuous; 2],
+        );
+        let r = OmpEngine::with_threads(2).propagate(&inst);
+        assert_eq!(r.status, Status::Infeasible);
+    }
+}

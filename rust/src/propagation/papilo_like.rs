@@ -1,0 +1,278 @@
+//! PaPILO-style comparison baseline (paper section 4.6).
+//!
+//! An independent re-implementation of how a *generic presolve framework*
+//! performs domain propagation: besides the propagation itself it performs
+//! the reductions PaPILO cannot switch off — redundant-constraint
+//! detection/removal and fixed-variable substitution — plus the
+//! transaction-log bookkeeping a solver-facing presolver maintains.
+//! This reproduces the paper's observation that PaPILO is slower than the
+//! purpose-built `cpu_seq` on pure propagation workloads (speedup ~0.08),
+//! not because it is badly written but because it does more per round.
+
+use super::activity::RowActivity;
+use super::bounds::{apply, candidates};
+use super::trace::{RoundTrace, Trace};
+use super::{Engine, PropResult, Status};
+use crate::instance::{Bounds, MipInstance, VarType};
+use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
+use crate::util::timer::Timer;
+
+/// One entry of the reduction transaction log (what PaPILO would hand to
+/// the solver after presolve).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reduction {
+    LowerBound { col: usize, value: f64 },
+    UpperBound { col: usize, value: f64 },
+    RedundantRow { row: usize },
+    FixedVar { col: usize, value: f64 },
+}
+
+pub struct PapiloLikeEngine {
+    pub threads: usize,
+    pub max_rounds: u32,
+    /// The reduction log of the last run.
+    pub log: Vec<Reduction>,
+}
+
+impl Default for PapiloLikeEngine {
+    fn default() -> Self {
+        PapiloLikeEngine { threads: 1, max_rounds: MAX_ROUNDS, log: Vec::new() }
+    }
+}
+
+impl PapiloLikeEngine {
+    pub fn with_threads(threads: usize) -> PapiloLikeEngine {
+        PapiloLikeEngine { threads: threads.max(1), ..Default::default() }
+    }
+}
+
+impl Engine for PapiloLikeEngine {
+    fn name(&self) -> &'static str {
+        "papilo_like"
+    }
+
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+        let csc = inst.to_csc();
+        let timer = Timer::start();
+        let m = inst.nrows();
+        let n = inst.ncols();
+        let mut lb = inst.lb.clone();
+        let mut ub = inst.ub.clone();
+        let mut row_active = vec![true; m];
+        let mut var_fixed = vec![false; n];
+        let mut marked = vec![true; m];
+        let mut next_marked = vec![false; m];
+        self.log.clear();
+        let mut trace = Trace::default();
+        let mut rounds = 0u32;
+        let mut status = Status::MaxRounds;
+        // framework bookkeeping: per-round activity cache rebuilt from
+        // scratch (PaPILO keeps activities for *all* presolvers up to date)
+        let mut act_cache: Vec<RowActivity> = vec![RowActivity::default(); m];
+
+        'outer: while rounds < self.max_rounds {
+            rounds += 1;
+            let mut rt = RoundTrace::default();
+            let mut change = false;
+
+            // --- generic-framework pass 1: refresh ALL row activities
+            // (needed by the redundancy/feasibility reductions below)
+            for r in 0..m {
+                if !row_active[r] {
+                    continue;
+                }
+                let (cols, vals) = inst.matrix.row(r);
+                act_cache[r] = RowActivity::of_row(cols, vals, &lb, &ub);
+                rt.nnz_processed += cols.len();
+            }
+
+            // --- propagation over the marked set (sequential, like
+            // PaPILO's single-thread propagation kernel)
+            for r in 0..m {
+                if !row_active[r] || !marked[r] {
+                    continue;
+                }
+                marked[r] = false;
+                rt.rows_processed += 1;
+                let (cols, vals) = inst.matrix.row(r);
+                rt.nnz_processed += cols.len();
+                // re-read the activity (bounds may have moved this round)
+                let act = RowActivity::of_row(cols, vals, &lb, &ub);
+                let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+                if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+                    continue;
+                }
+                for (&cj, &a) in cols.iter().zip(vals) {
+                    let j = cj as usize;
+                    if var_fixed[j] {
+                        continue;
+                    }
+                    let cand = candidates(
+                        a,
+                        lb[j],
+                        ub[j],
+                        inst.var_types[j] == VarType::Integer,
+                        &act,
+                        lhs,
+                        rhs,
+                    );
+                    let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
+                    if lch {
+                        self.log.push(Reduction::LowerBound { col: j, value: lb[j] });
+                    }
+                    if uch {
+                        self.log.push(Reduction::UpperBound { col: j, value: ub[j] });
+                    }
+                    if lch || uch {
+                        change = true;
+                        rt.bound_changes += (lch as usize) + (uch as usize);
+                        if lb[j] > ub[j] + FEAS_TOL {
+                            status = Status::Infeasible;
+                            trace.push(rt);
+                            break 'outer;
+                        }
+                        let (rows_j, _) = csc.col(j);
+                        for &ri in rows_j {
+                            next_marked[ri as usize] = true;
+                        }
+                    }
+                }
+            }
+
+            // --- generic-framework pass 2: reductions PaPILO always runs
+            // (redundant rows removed, fixed variables logged), parallel
+            // when threads > 1 — with the associated coordination overhead
+            let redundant: Vec<usize> = if self.threads > 1 {
+                scan_redundant_parallel(inst, &act_cache, &row_active, self.threads)
+            } else {
+                (0..m)
+                    .filter(|&r| {
+                        row_active[r] && act_cache[r].redundant(inst.lhs[r], inst.rhs[r])
+                    })
+                    .collect()
+            };
+            for r in redundant {
+                row_active[r] = false;
+                self.log.push(Reduction::RedundantRow { row: r });
+            }
+            for j in 0..n {
+                if !var_fixed[j] && lb[j].is_finite() && (ub[j] - lb[j]).abs() <= FEAS_TOL {
+                    var_fixed[j] = true;
+                    self.log.push(Reduction::FixedVar { col: j, value: lb[j] });
+                }
+            }
+
+            trace.push(rt);
+            if !change {
+                status = Status::Converged;
+                break;
+            }
+            std::mem::swap(&mut marked, &mut next_marked);
+            for f in next_marked.iter_mut() {
+                *f = false;
+            }
+        }
+
+        PropResult {
+            bounds: Bounds { lb, ub },
+            rounds,
+            status,
+            wall: timer.elapsed(),
+            trace,
+        }
+    }
+}
+
+/// Parallel redundancy scan: the multi-threaded PaPILO mode. For small
+/// instances the thread coordination dominates — exactly the behaviour
+/// Figure 3 shows for PaPILO with 8 threads.
+fn scan_redundant_parallel(
+    inst: &MipInstance,
+    acts: &[RowActivity],
+    row_active: &[bool],
+    threads: usize,
+) -> Vec<usize> {
+    let m = inst.nrows();
+    let chunk = m.div_ceil(threads).max(1);
+    let mut results: Vec<Vec<usize>> = Vec::new();
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(m);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(scope.spawn(move |_| {
+                (lo..hi)
+                    .filter(|&r| row_active[r] && acts[r].redundant(inst.lhs[r], inst.rhs[r]))
+                    .collect::<Vec<usize>>()
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("scan thread"));
+        }
+    })
+    .expect("scope");
+    results.concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::propagation::seq::SeqEngine;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn same_limit_point_as_seq() {
+        prop("papilo_like == seq limit point", Config::cases(24), |rng| {
+            let inst = gen::random_instance(rng, 20, 20, 0.5);
+            let seq = SeqEngine::new().propagate(&inst);
+            let mut pap = PapiloLikeEngine::default();
+            let r = pap.propagate(&inst);
+            if seq.status == Status::Converged && r.status == Status::Converged {
+                crate::testkit::assert_bounds_equal(&seq.bounds.lb, &r.bounds.lb, "lb");
+                crate::testkit::assert_bounds_equal(&seq.bounds.ub, &r.bounds.ub, "ub");
+            }
+        });
+    }
+
+    #[test]
+    fn logs_reductions() {
+        use crate::instance::MipInstance;
+        use crate::sparse::Csr;
+        // x + y <= 2 (tightens nothing), z <= 1 fixed by 2z <= 2 with z in [1, 5]
+        let matrix =
+            Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 2.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "red",
+            matrix,
+            vec![f64::NEG_INFINITY, f64::NEG_INFINITY],
+            vec![100.0, 2.0],
+            vec![0.0, 0.0, 1.0],
+            vec![1.0, 1.0, 5.0],
+            vec![VarType::Continuous; 3],
+        );
+        let mut pap = PapiloLikeEngine::default();
+        let r = pap.propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        // row 0 redundant; z fixed at 1
+        assert!(pap.log.iter().any(|x| matches!(x, Reduction::RedundantRow { row: 0 })));
+        assert!(pap
+            .log
+            .iter()
+            .any(|x| matches!(x, Reduction::FixedVar { col: 2, value } if *value == 1.0)));
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        let inst = gen::generate(&gen::GenConfig { nrows: 80, ncols: 60, seed: 9, ..Default::default() });
+        let mut a = PapiloLikeEngine::with_threads(1);
+        let mut b = PapiloLikeEngine::with_threads(4);
+        let ra = a.propagate(&inst);
+        let rb = b.propagate(&inst);
+        assert_eq!(ra.status, rb.status);
+        crate::testkit::assert_bounds_equal(&ra.bounds.lb, &rb.bounds.lb, "lb");
+    }
+}

@@ -1,0 +1,417 @@
+//! Algorithm 1: sequential domain propagation with constraint marking and
+//! early termination — the `cpu_seq` baseline, following the paper's
+//! description of the state-of-the-art CPU implementation (section 2.1).
+
+use super::activity::RowActivity;
+use super::bounds::{apply, candidates};
+use super::trace::{RoundTrace, Trace};
+use super::{Engine, PropResult, Status};
+use crate::instance::{Bounds, MipInstance, VarType};
+use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
+use crate::sparse::Csc;
+use crate::util::timer::Timer;
+
+/// Sequential engine. Holds reusable scratch.
+#[derive(Default)]
+pub struct SeqEngine {
+    pub max_rounds: u32,
+    /// Record per-round traces (tiny overhead; on by default).
+    pub record_trace: bool,
+}
+
+impl SeqEngine {
+    pub fn new() -> SeqEngine {
+        SeqEngine { max_rounds: MAX_ROUNDS, record_trace: true }
+    }
+}
+
+impl Engine for SeqEngine {
+    fn name(&self) -> &'static str {
+        "cpu_seq"
+    }
+
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+        let max_rounds = if self.max_rounds == 0 { MAX_ROUNDS } else { self.max_rounds };
+        // one-time init: column view for the marking mechanism — excluded
+        // from timing, as in the paper (section 4.3)
+        let csc = inst.to_csc();
+        propagate_seq(inst, &csc, max_rounds, self.record_trace)
+    }
+}
+
+/// The timed propagation loop (Algorithm 1).
+pub fn propagate_seq(
+    inst: &MipInstance,
+    csc: &Csc,
+    max_rounds: u32,
+    record_trace: bool,
+) -> PropResult {
+    propagate_seq_warm(inst, csc, None, None, max_rounds, record_trace)
+}
+
+/// Warm-start propagation: the paper's post-branching use case
+/// (section 5 Outlook). The system is assumed already propagated;
+/// `start` carries the branched bounds and `seed_vars` the variables whose
+/// bounds just changed — only constraints containing them are marked, so
+/// the marking mechanism does the minimal work the paper describes
+/// ("equivalent to just after a propagation round with a single bound
+/// change on the branching variable").
+///
+/// With `start`/`seed_vars` = None this is plain Algorithm 1.
+pub fn propagate_seq_warm(
+    inst: &MipInstance,
+    csc: &Csc,
+    start: Option<&Bounds>,
+    seed_vars: Option<&[usize]>,
+    max_rounds: u32,
+    record_trace: bool,
+) -> PropResult {
+    let timer = Timer::start();
+    let m = inst.nrows();
+    let mut lb = start.map(|b| b.lb.clone()).unwrap_or_else(|| inst.lb.clone());
+    let mut ub = start.map(|b| b.ub.clone()).unwrap_or_else(|| inst.ub.clone());
+    // line 1: mark all constraints — or, warm-started, only those touching
+    // the seed variables
+    let mut marked = match seed_vars {
+        None => vec![true; m],
+        Some(vars) => {
+            let mut marked = vec![false; m];
+            for &v in vars {
+                let (rows_v, _) = csc.col(v);
+                for &r in rows_v {
+                    marked[r as usize] = true;
+                }
+            }
+            marked
+        }
+    };
+    let mut next_marked = vec![false; m];
+    let mut trace = Trace::default();
+    let mut rounds = 0u32;
+    let mut status = Status::MaxRounds;
+
+    'outer: while rounds < max_rounds {
+        rounds += 1;
+        let mut round_trace = RoundTrace::default();
+        let mut bound_change_found = false;
+
+        for r in 0..m {
+            if !marked[r] {
+                continue;
+            }
+            marked[r] = false; // line 7: unmark
+            let (cols, vals) = inst.matrix.row(r);
+            round_trace.rows_processed += 1;
+            round_trace.nnz_processed += cols.len();
+            // line 8: compute activities
+            let act = RowActivity::of_row(cols, vals, &lb, &ub);
+            let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+            // line 9: "can c propagate" — skip redundant rows and rows with
+            // no finite side / too many infinities (early termination)
+            if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+                continue;
+            }
+            round_trace.nnz_processed += cols.len(); // second sweep below
+            for (&cj, &a) in cols.iter().zip(vals) {
+                let j = cj as usize;
+                // line 11 "can v be tightened" is folded into the candidate
+                // computation: non-informative candidates are +-inf
+                let cand = candidates(
+                    a,
+                    lb[j],
+                    ub[j],
+                    inst.var_types[j] == VarType::Integer,
+                    &act,
+                    lhs,
+                    rhs,
+                );
+                let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
+                if lch || uch {
+                    bound_change_found = true;
+                    round_trace.bound_changes += (lch as usize) + (uch as usize);
+                    if lb[j] > ub[j] + FEAS_TOL {
+                        // empty domain: infeasible, stop immediately
+                        status = Status::Infeasible;
+                        if record_trace {
+                            trace.push(round_trace);
+                        }
+                        break 'outer;
+                    }
+                    // line 20: mark all constraints containing v
+                    let (rows_j, _) = csc.col(j);
+                    for &ri in rows_j {
+                        next_marked[ri as usize] = true;
+                    }
+                }
+            }
+        }
+
+        if record_trace {
+            trace.push(round_trace);
+        }
+        if !bound_change_found {
+            status = Status::Converged;
+            break;
+        }
+        // next round processes the freshly marked set; constraints marked
+        // during this round that sit *after* the current position were
+        // already marked in `next_marked` too — Algorithm 1 as written
+        // re-visits them next round
+        std::mem::swap(&mut marked, &mut next_marked);
+        for f in next_marked.iter_mut() {
+            *f = false;
+        }
+    }
+
+    PropResult {
+        bounds: Bounds { lb, ub },
+        rounds,
+        status,
+        wall: timer.elapsed(),
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::MipInstance;
+    use crate::sparse::Csr;
+
+    fn single_row(
+        entries: &[(usize, f64)],
+        n: usize,
+        lhs: f64,
+        rhs: f64,
+        lb: Vec<f64>,
+        ub: Vec<f64>,
+        ints: &[usize],
+    ) -> MipInstance {
+        let triplets: Vec<_> = entries.iter().map(|&(c, v)| (0usize, c, v)).collect();
+        let matrix = Csr::from_triplets(1, n, &triplets).unwrap();
+        let mut vt = vec![VarType::Continuous; n];
+        for &i in ints {
+            vt[i] = VarType::Integer;
+        }
+        MipInstance::from_parts("t", matrix, vec![lhs], vec![rhs], lb, ub, vt)
+    }
+
+    #[test]
+    fn textbook_tightening() {
+        let inst = single_row(
+            &[(0, 2.0), (1, 3.0)],
+            2,
+            f64::NEG_INFINITY,
+            12.0,
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            &[],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        assert_eq!(r.bounds.ub, vec![6.0, 4.0]);
+        assert_eq!(r.bounds.lb, vec![0.0, 0.0]);
+        assert_eq!(r.rounds, 2); // tighten, then observe fixed point
+    }
+
+    #[test]
+    fn redundant_row_converges_in_one_round() {
+        let inst = single_row(
+            &[(0, 1.0), (1, 1.0)],
+            2,
+            f64::NEG_INFINITY,
+            100.0,
+            vec![0.0, 0.0],
+            vec![1.0, 1.0],
+            &[],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        assert_eq!(r.rounds, 1);
+        assert_eq!(r.trace.total_bound_changes(), 0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let inst = single_row(
+            &[(0, 1.0), (1, 1.0)],
+            2,
+            f64::NEG_INFINITY,
+            1.0,
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            &[],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn cascade_propagates_in_one_round_sequentially() {
+        // x0 <= 1; x_i - x_{i-1} <= 0 : sequential marking resolves the
+        // whole chain in round 1 (paper section 2.2 / Appendix B)
+        let m = 10;
+        let mut triplets = vec![(0usize, 0usize, 1.0)];
+        for i in 1..m {
+            triplets.push((i, i, 1.0));
+            triplets.push((i, i - 1, -1.0));
+        }
+        let matrix = Csr::from_triplets(m, m, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "cascade",
+            matrix,
+            vec![f64::NEG_INFINITY; m],
+            {
+                let mut r = vec![0.0; m];
+                r[0] = 1.0;
+                r
+            },
+            vec![0.0; m],
+            vec![1000.0; m],
+            vec![VarType::Continuous; m],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        assert!(r.bounds.ub.iter().all(|&u| u == 1.0));
+        // forward order: every x_i tightened in round 1; round 2 re-checks
+        // the marked rows and finds nothing
+        assert_eq!(r.rounds, 2);
+    }
+
+    #[test]
+    fn marking_limits_reprocessing() {
+        // two independent blocks; only the block with changes is revisited
+        let triplets = vec![
+            (0usize, 0usize, 1.0),
+            (0, 1, 1.0),
+            (1, 2, 1.0),
+            (1, 3, 1.0),
+        ];
+        let matrix = Csr::from_triplets(2, 4, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "blocks",
+            matrix,
+            vec![f64::NEG_INFINITY, f64::NEG_INFINITY],
+            vec![1.0, 100.0],
+            vec![0.0; 4],
+            vec![10.0, 10.0, 1.0, 1.0],
+            vec![VarType::Continuous; 4],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.status, Status::Converged);
+        // round 1 processes both rows; round 2 only the re-marked row 0
+        assert_eq!(r.trace.rounds[0].rows_processed, 2);
+        assert_eq!(r.trace.rounds[1].rows_processed, 1);
+    }
+
+    #[test]
+    fn integer_bounds_rounded() {
+        let inst = single_row(
+            &[(0, 2.0)],
+            1,
+            f64::NEG_INFINITY,
+            5.0,
+            vec![0.0],
+            vec![10.0],
+            &[0],
+        );
+        let r = SeqEngine::new().propagate(&inst);
+        assert_eq!(r.bounds.ub, vec![2.0]);
+    }
+
+    #[test]
+    fn warm_start_minimal_work() {
+        use crate::instance::Bounds;
+        // two independent blocks; branching on x0 must only reprocess the
+        // block containing x0
+        let triplets = vec![
+            (0usize, 0usize, 1.0),
+            (0, 1, 1.0),
+            (1, 2, 1.0),
+            (1, 3, 1.0),
+        ];
+        let matrix = Csr::from_triplets(2, 4, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "blocks",
+            matrix,
+            vec![f64::NEG_INFINITY; 2],
+            vec![8.0, 8.0],
+            vec![0.0; 4],
+            vec![5.0; 4],
+            vec![VarType::Continuous; 4],
+        );
+        let csc = inst.to_csc();
+        let base = SeqEngine::new().propagate(&inst);
+        assert_eq!(base.status, Status::Converged);
+        // "branch": tighten x0 <= 1
+        let mut branched = base.bounds.clone();
+        branched.ub[0] = 1.0;
+        let warm = propagate_seq_warm(&inst, &csc, Some(&branched), Some(&[0]), 100, true);
+        assert_eq!(warm.status, Status::Converged);
+        // only row 0 is ever processed
+        assert!(warm.trace.rounds.iter().all(|r| r.rows_processed <= 1));
+        // and the result equals cold propagation of the branched instance
+        let mut cold_inst = inst.clone();
+        cold_inst.ub[0] = 1.0;
+        let cold = SeqEngine::new().propagate(&cold_inst);
+        crate::testkit::assert_bounds_equal(&cold.bounds.lb, &warm.bounds.lb, "warm lb");
+        crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "warm ub");
+        let _ = Bounds { lb: vec![], ub: vec![] };
+    }
+
+    #[test]
+    fn warm_start_equals_cold_property() {
+        use crate::gen;
+        use crate::testkit::{prop, Config};
+        prop("warm == cold after branching", Config::cases(20), |rng| {
+            let inst = gen::random_instance(rng, 20, 20, 0.4);
+            let base = SeqEngine::new().propagate(&inst);
+            if base.status != Status::Converged {
+                return;
+            }
+            // branch on a random variable with a finite-width domain
+            let n = inst.ncols();
+            let v = rng.below(n);
+            let (l, u) = (base.bounds.lb[v], base.bounds.ub[v]);
+            if !(l.is_finite() && u.is_finite() && u - l > 1e-6) {
+                return;
+            }
+            let mid = (l + u) / 2.0;
+            let mut branched = base.bounds.clone();
+            branched.ub[v] = mid;
+            let csc = inst.to_csc();
+            let warm = propagate_seq_warm(&inst, &csc, Some(&branched), Some(&[v]), 100, false);
+            let mut cold_inst = inst.clone();
+            cold_inst.lb = branched.lb.clone();
+            cold_inst.ub = branched.ub.clone();
+            let cold = SeqEngine::new().propagate(&cold_inst);
+            assert_eq!(warm.status, cold.status);
+            if warm.status == Status::Converged {
+                crate::testkit::assert_bounds_equal(&cold.bounds.lb, &warm.bounds.lb, "lb");
+                crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "ub");
+            }
+        });
+    }
+
+    #[test]
+    fn max_rounds_cap() {
+        // diverging system (x >= y + 1, y >= x + 1 is infeasible but bounds
+        // run away when both are unbounded above): round limit must hold
+        let triplets = vec![(0usize, 0usize, 1.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 1.0)];
+        let matrix = Csr::from_triplets(2, 2, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "diverge",
+            matrix,
+            vec![1.0, 1.0],
+            vec![f64::INFINITY, f64::INFINITY],
+            vec![0.0, 0.0],
+            vec![f64::INFINITY, f64::INFINITY],
+            vec![VarType::Continuous; 2],
+        );
+        let mut e = SeqEngine::new();
+        e.max_rounds = 20;
+        let r = e.propagate(&inst);
+        assert_eq!(r.status, Status::MaxRounds);
+        assert_eq!(r.rounds, 20);
+    }
+}

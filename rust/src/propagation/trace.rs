@@ -1,0 +1,59 @@
+//! Per-round execution trace: the measurements the device cost model
+//! (devsim) replays, and the raw material of the roofline study.
+
+/// Metrics of one propagation round.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundTrace {
+    /// Constraints actually processed (marked ones for Algorithm 1;
+    /// all m for the round-synchronous Algorithm 2).
+    pub rows_processed: usize,
+    /// Nonzeros touched while computing activities / candidates.
+    pub nnz_processed: usize,
+    /// Bound-improving updates applied (lower + upper).
+    pub bound_changes: usize,
+    /// Candidates that passed the pre-filter and would issue an atomic
+    /// (paper section 3.5's "only use atomics for improvements").
+    pub atomic_updates: usize,
+    /// Largest number of improving candidates hitting one column this
+    /// round: the atomic serialization hot spot (section 3.6).
+    pub max_col_conflicts: usize,
+}
+
+/// Whole-run trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub rounds: Vec<RoundTrace>,
+}
+
+impl Trace {
+    pub fn push(&mut self, r: RoundTrace) {
+        self.rounds.push(r);
+    }
+
+    pub fn total_nnz_processed(&self) -> usize {
+        self.rounds.iter().map(|r| r.nnz_processed).sum()
+    }
+
+    pub fn total_bound_changes(&self) -> usize {
+        self.rounds.iter().map(|r| r.bound_changes).sum()
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let mut t = Trace::default();
+        t.push(RoundTrace { rows_processed: 3, nnz_processed: 10, bound_changes: 2, ..Default::default() });
+        t.push(RoundTrace { rows_processed: 1, nnz_processed: 4, bound_changes: 0, ..Default::default() });
+        assert_eq!(t.total_nnz_processed(), 14);
+        assert_eq!(t.total_bound_changes(), 2);
+        assert_eq!(t.num_rounds(), 2);
+    }
+}

@@ -1,0 +1,272 @@
+//! The `gpu_atomic` engine: propagation rounds executed as AOT-compiled
+//! XLA artifacts (JAX/Pallas lowered to HLO, run via PJRT).
+//!
+//! Synchronization variants (paper section 3.7):
+//! * [`SyncVariant::CpuLoop`] — the Rust host drives the round loop,
+//!   reading back one change flag per round (the paper's fastest variant).
+//! * [`SyncVariant::GpuLoop`] — the whole propagation is one dispatch of a
+//!   device-side `while` loop (dynamic-parallelism analog).
+//! * [`SyncVariant::Megakernel`] — one dispatch of a fixed-trip loop with
+//!   masked updates (cooperative-kernel analog; no early exit).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::trace::{RoundTrace, Trace};
+use super::{Engine, PropResult, Status};
+use crate::instance::{Bounds, MipInstance};
+use crate::numerics::MAX_ROUNDS;
+use crate::runtime::literal::{
+    pack_static_host, pad_bounds, unpack_output, upload_bounds, upload_static, DeviceStatic,
+};
+use crate::runtime::manifest::{ArtifactMeta, Dtype};
+use crate::runtime::{select_bucket, ExecCache, Runtime};
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncVariant {
+    CpuLoop,
+    GpuLoop,
+    Megakernel,
+}
+
+impl SyncVariant {
+    fn artifact_variant(&self) -> &'static str {
+        match self {
+            SyncVariant::CpuLoop => "round",
+            SyncVariant::GpuLoop => "loop",
+            SyncVariant::Megakernel => "mega",
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncVariant::CpuLoop => "cpu_loop",
+            SyncVariant::GpuLoop => "gpu_loop",
+            SyncVariant::Megakernel => "megakernel",
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct XlaConfig {
+    pub variant: SyncVariant,
+    pub dtype: Dtype,
+    /// "pallas" (the L1 kernels) or "jnp" (the no-explicit-tiling ablation).
+    pub impl_: String,
+    pub fastmath: bool,
+    pub max_rounds: u32,
+}
+
+impl Default for XlaConfig {
+    fn default() -> Self {
+        XlaConfig {
+            variant: SyncVariant::CpuLoop,
+            dtype: Dtype::F64,
+            impl_: "pallas".into(),
+            fastmath: false,
+            max_rounds: MAX_ROUNDS,
+        }
+    }
+}
+
+impl XlaConfig {
+    pub fn f32(mut self) -> Self {
+        self.dtype = Dtype::F32;
+        self
+    }
+
+    pub fn fastmath(mut self) -> Self {
+        self.dtype = Dtype::F32;
+        self.fastmath = true;
+        self
+    }
+
+    pub fn variant(mut self, v: SyncVariant) -> Self {
+        self.variant = v;
+        self
+    }
+
+    pub fn jnp(mut self) -> Self {
+        self.impl_ = "jnp".into();
+        self
+    }
+}
+
+pub struct XlaEngine {
+    pub runtime: Rc<Runtime>,
+    pub config: XlaConfig,
+    cache: ExecCache,
+}
+
+impl XlaEngine {
+    pub fn new(runtime: Rc<Runtime>, config: XlaConfig) -> XlaEngine {
+        XlaEngine { runtime, config, cache: ExecCache::new() }
+    }
+
+    /// The artifact that would serve this instance (None = doesn't fit).
+    pub fn bucket_for(&self, inst: &MipInstance) -> Option<ArtifactMeta> {
+        let fam = self.runtime.manifest.family(
+            self.config.variant.artifact_variant(),
+            self.config.dtype,
+            &self.config.impl_,
+            self.config.fastmath,
+        );
+        select_bucket(&fam, inst).cloned()
+    }
+
+    /// Fallible propagation (bucket selection / PJRT errors surface here).
+    pub fn try_propagate(&mut self, inst: &MipInstance) -> Result<PropResult> {
+        let meta = self.bucket_for(inst).with_context(|| {
+            format!("no bucket fits instance {} ({}x{})", inst.name, inst.nrows(), inst.ncols())
+        })?;
+        // one-time setup, excluded from timing (paper section 4.3):
+        // compile (cached) + blocked-ELL packing + upload ("the blocking of
+        // A is precomputed on the CPU and the necessary memory is sent to
+        // the GPU")
+        let exe = self.cache.get(&self.runtime, &meta)?;
+        let host = pack_static_host(inst, &meta)?;
+        let device = upload_static(&self.runtime.client, &meta, &host)?;
+
+        match self.config.variant {
+            SyncVariant::CpuLoop => {
+                run_cpu_loop(&self.config, &self.runtime.client, inst, &meta, exe, &device)
+            }
+            SyncVariant::GpuLoop | SyncVariant::Megakernel => {
+                run_single_dispatch(&self.runtime.client, inst, &meta, exe, &device)
+            }
+        }
+    }
+}
+
+fn execute_round(
+    exe: &xla::PjRtLoadedExecutable,
+    device: &DeviceStatic,
+    lb_buf: &xla::PjRtBuffer,
+    ub_buf: &xla::PjRtBuffer,
+) -> Result<xla::Literal> {
+    let result = exe
+        .execute_b::<&xla::PjRtBuffer>(&[
+            &device.vals,
+            &device.cols,
+            &device.seg_row,
+            &device.lhs,
+            &device.rhs,
+            lb_buf,
+            ub_buf,
+            &device.is_int,
+        ])
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))
+}
+
+fn run_cpu_loop(
+    config: &XlaConfig,
+    client: &xla::PjRtClient,
+    inst: &MipInstance,
+    meta: &ArtifactMeta,
+    exe: &xla::PjRtLoadedExecutable,
+    device: &DeviceStatic,
+) -> Result<PropResult> {
+    let m = inst.nrows();
+    let nnz = inst.nnz();
+    let max_rounds = config.max_rounds;
+    // bounds are carried at the padded bucket width across rounds
+    let (lb0, ub0) = pad_bounds(&inst.lb, &inst.ub, meta);
+    let (mut lb_buf, mut ub_buf) = upload_bounds(client, &lb0, &ub0, meta)?;
+    let timer = Timer::start();
+    let mut trace = Trace::default();
+    let mut rounds = 0u32;
+    let mut status = Status::MaxRounds;
+    let mut final_lb: Vec<f64> = inst.lb.clone();
+    let mut final_ub: Vec<f64> = inst.ub.clone();
+
+    while rounds < max_rounds {
+        rounds += 1;
+        let tuple = execute_round(exe, device, &lb_buf, &ub_buf)?;
+        // keep the padded width internally; truncate only on exit
+        let out = unpack_output(tuple, meta, meta.cols)?;
+        trace.push(RoundTrace {
+            rows_processed: m,
+            nnz_processed: 2 * nnz,
+            ..Default::default()
+        });
+        final_lb = out.lb[..inst.ncols()].to_vec();
+        final_ub = out.ub[..inst.ncols()].to_vec();
+        if out.infeas == 1 {
+            status = Status::Infeasible;
+            break;
+        }
+        if out.flag == 0 {
+            status = Status::Converged;
+            break;
+        }
+        let next = upload_bounds(client, &out.lb, &out.ub, meta)?;
+        lb_buf = next.0;
+        ub_buf = next.1;
+    }
+
+    Ok(PropResult {
+        bounds: Bounds { lb: final_lb, ub: final_ub },
+        rounds,
+        status,
+        wall: timer.elapsed(),
+        trace,
+    })
+}
+
+fn run_single_dispatch(
+    client: &xla::PjRtClient,
+    inst: &MipInstance,
+    meta: &ArtifactMeta,
+    exe: &xla::PjRtLoadedExecutable,
+    device: &DeviceStatic,
+) -> Result<PropResult> {
+    let (lb0, ub0) = pad_bounds(&inst.lb, &inst.ub, meta);
+    let (lb_buf, ub_buf) = upload_bounds(client, &lb0, &ub0, meta)?;
+    let timer = Timer::start();
+    let tuple = execute_round(exe, device, &lb_buf, &ub_buf)?;
+    let out = unpack_output(tuple, meta, inst.ncols())?;
+    let wall = timer.elapsed();
+    let rounds = out.flag as u32; // loop/mega artifacts return the round count
+    let status = if out.infeas == 1 {
+        Status::Infeasible
+    } else if rounds >= meta.max_rounds {
+        Status::MaxRounds
+    } else {
+        Status::Converged
+    };
+    let mut trace = Trace::default();
+    for _ in 0..rounds {
+        trace.push(RoundTrace {
+            rows_processed: inst.nrows(),
+            nnz_processed: 2 * inst.nnz(),
+            ..Default::default()
+        });
+    }
+    Ok(PropResult { bounds: Bounds { lb: out.lb, ub: out.ub }, rounds, status, wall, trace })
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        match (self.config.variant, self.config.dtype, self.config.fastmath) {
+            (SyncVariant::CpuLoop, Dtype::F64, _) => "gpu_atomic",
+            (SyncVariant::CpuLoop, Dtype::F32, false) => "gpu_atomic_f32",
+            (SyncVariant::CpuLoop, Dtype::F32, true) => "gpu_atomic_f32fm",
+            (SyncVariant::GpuLoop, _, _) => "gpu_loop",
+            (SyncVariant::Megakernel, _, _) => "megakernel",
+        }
+    }
+
+    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+        self.try_propagate(inst).expect("XlaEngine propagation failed")
+    }
+}
+
+/// Largest (rows, cols) any artifact can hold — the harness pre-filters
+/// oversize instances, as the paper excludes reader failures.
+pub fn max_bucket_dims(rt: &Runtime) -> (usize, usize) {
+    rt.manifest.artifacts.iter().map(|a| (a.rows, a.cols)).max().unwrap_or((0, 0))
+}

@@ -1,0 +1,90 @@
+//! Shape-bucket selection: find the smallest artifact whose static shapes
+//! can hold a given instance (AOT artifacts have fixed shapes; instances
+//! are padded into them — see python/compile/pack.py `pad_system`).
+
+use super::manifest::ArtifactMeta;
+use crate::instance::MipInstance;
+use crate::sparse::BlockedEll;
+
+/// Smallest artifact of `family` (already capacity-sorted) fitting `inst`.
+/// Returns `None` when the instance exceeds the largest bucket.
+pub fn select_bucket<'a>(
+    family: &[&'a ArtifactMeta],
+    inst: &MipInstance,
+) -> Option<&'a ArtifactMeta> {
+    for meta in family {
+        if fits(meta, inst) {
+            return Some(meta);
+        }
+    }
+    None
+}
+
+/// Does the instance fit the bucket's static shapes?
+pub fn fits(meta: &ArtifactMeta, inst: &MipInstance) -> bool {
+    if inst.nrows() > meta.rows || inst.ncols() > meta.cols {
+        return false;
+    }
+    BlockedEll::segments_needed(&inst.matrix, meta.width) <= meta.segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Dtype;
+    use crate::sparse::Csr;
+
+    fn meta(rows: usize, cols: usize, segs: usize, width: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: format!("r{rows}"),
+            variant: "round".into(),
+            dtype: Dtype::F64,
+            impl_: "pallas".into(),
+            fastmath: false,
+            rows,
+            cols,
+            segs,
+            width,
+            max_rounds: 100,
+            file: "f".into(),
+        }
+    }
+
+    fn inst(nrows: usize, ncols: usize, nnz_per_row: usize) -> MipInstance {
+        let mut triplets = Vec::new();
+        for r in 0..nrows {
+            for k in 0..nnz_per_row.min(ncols) {
+                triplets.push((r, k, 1.0));
+            }
+        }
+        let m = Csr::from_triplets(nrows, ncols, &triplets).unwrap();
+        MipInstance::from_parts(
+            "i",
+            m,
+            vec![f64::NEG_INFINITY; nrows],
+            vec![1.0; nrows],
+            vec![0.0; ncols],
+            vec![1.0; ncols],
+            vec![crate::instance::VarType::Continuous; ncols],
+        )
+    }
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let b0 = meta(16, 16, 32, 4);
+        let b1 = meta(64, 64, 128, 4);
+        let fam = vec![&b0, &b1];
+        assert_eq!(select_bucket(&fam, &inst(10, 10, 2)).unwrap().rows, 16);
+        assert_eq!(select_bucket(&fam, &inst(30, 10, 2)).unwrap().rows, 64);
+        assert!(select_bucket(&fam, &inst(100, 10, 2)).is_none());
+    }
+
+    #[test]
+    fn segment_capacity_respected() {
+        // 16 rows x 8 nnz with width 4 -> 32 segments needed
+        let b_small = meta(16, 16, 31, 4);
+        let b_big = meta(16, 16, 32, 4);
+        assert!(!fits(&b_small, &inst(16, 16, 8)));
+        assert!(fits(&b_big, &inst(16, 16, 8)));
+    }
+}

@@ -1,0 +1,38 @@
+//! Executable cache: artifacts are compiled once per process and reused
+//! across propagation runs (compilation is one-time setup, excluded from
+//! the paper's timing protocol, section 4.3).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::manifest::ArtifactMeta;
+use super::Runtime;
+
+#[derive(Default)]
+pub struct ExecCache {
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ExecCache {
+    pub fn new() -> ExecCache {
+        ExecCache::default()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn get(&mut self, rt: &Runtime, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&meta.name) {
+            let exe = rt.compile(meta)?;
+            self.compiled.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.compiled[&meta.name])
+    }
+
+    pub fn len(&self) -> usize {
+        self.compiled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.compiled.is_empty()
+    }
+}

@@ -1,0 +1,296 @@
+//! Packing/unpacking: instance -> artifact inputs, outputs -> bounds.
+//!
+//! Input order (fixed convention, see python/compile/aot.py):
+//!   vals f[S,W], cols i32[S,W], seg_row i32[S],
+//!   lhs f[R], rhs f[R], lb f[C], ub f[C], is_int i32[C]
+//! Output (a tuple): (lb f[C], ub f[C], change/rounds i32, infeas i32).
+//!
+//! The bound-independent arrays are uploaded to the PJRT device ONCE per
+//! (instance, bucket) pair and reused across rounds via `execute_b` — the
+//! paper's "necessary memory is sent to the GPU" one-time setup step
+//! (section 4.3). Only the bound vectors move per round.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactMeta, Dtype};
+use crate::instance::MipInstance;
+use crate::sparse::BlockedEll;
+
+/// A float vector in the artifact's dtype.
+pub enum FVec {
+    F64(Vec<f64>),
+    F32(Vec<f32>),
+}
+
+impl FVec {
+    pub fn from_f64(v: &[f64], dtype: Dtype) -> FVec {
+        match dtype {
+            Dtype::F64 => FVec::F64(v.to_vec()),
+            Dtype::F32 => FVec::F32(v.iter().map(|&x| x as f32).collect()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            FVec::F64(v) => v.len(),
+            FVec::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// As f64s (lossless widening for f32).
+    pub fn to_f64(&self) -> Vec<f64> {
+        match self {
+            FVec::F64(v) => v.clone(),
+            FVec::F32(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    fn upload(&self, client: &xla::PjRtClient, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        match self {
+            FVec::F64(v) => client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload f64: {e:?}")),
+            FVec::F32(v) => client
+                .buffer_from_host_buffer(v, dims, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}")),
+        }
+    }
+}
+
+/// f64 slice -> literal of the artifact dtype (used for per-round bounds).
+pub fn lit_f(v: &[f64], dtype: Dtype) -> xla::Literal {
+    match dtype {
+        Dtype::F64 => xla::Literal::vec1(v),
+        Dtype::F32 => {
+            let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            xla::Literal::vec1(&v32)
+        }
+    }
+}
+
+/// Host-side packed static arrays (bucket-padded).
+pub struct HostStatic {
+    pub vals: FVec,
+    pub cols: Vec<i32>,
+    pub seg_row: Vec<i32>,
+    pub lhs: FVec,
+    pub rhs: FVec,
+    pub is_int: Vec<i32>,
+    /// Real nonzeros (diagnostics).
+    pub nnz: usize,
+    /// Segments actually used before padding.
+    pub segs_used: usize,
+}
+
+/// Pack the bound-independent arrays, padding into the bucket shapes.
+pub fn pack_static_host(inst: &MipInstance, meta: &ArtifactMeta) -> Result<HostStatic> {
+    if inst.nrows() > meta.rows || inst.ncols() > meta.cols {
+        bail!(
+            "instance {}x{} exceeds bucket {} ({}x{})",
+            inst.nrows(),
+            inst.ncols(),
+            meta.name,
+            meta.rows,
+            meta.cols
+        );
+    }
+    let segs_used = BlockedEll::segments_needed(&inst.matrix, meta.width);
+    if segs_used > meta.segs {
+        bail!("instance needs {segs_used} segments, bucket {} has {}", meta.name, meta.segs);
+    }
+    let bell = BlockedEll::pack(&inst.matrix, meta.width, Some(meta.segs));
+    debug_assert_eq!(bell.segs, meta.segs);
+
+    // padding rows never propagate: lhs=-inf, rhs=+inf
+    let mut lhs = vec![f64::NEG_INFINITY; meta.rows];
+    let mut rhs = vec![f64::INFINITY; meta.rows];
+    lhs[..inst.nrows()].copy_from_slice(&inst.lhs);
+    rhs[..inst.nrows()].copy_from_slice(&inst.rhs);
+
+    let mut is_int = vec![0i32; meta.cols];
+    for (dst, src) in is_int.iter_mut().zip(inst.is_int_i32()) {
+        *dst = src;
+    }
+
+    Ok(HostStatic {
+        vals: FVec::from_f64(&bell.vals, meta.dtype),
+        cols: bell.cols,
+        seg_row: bell.seg_row,
+        lhs: FVec::from_f64(&lhs, meta.dtype),
+        rhs: FVec::from_f64(&rhs, meta.dtype),
+        is_int,
+        nnz: inst.nnz(),
+        segs_used,
+    })
+}
+
+/// Device-resident static inputs: uploaded once, reused every round.
+pub struct DeviceStatic {
+    pub vals: xla::PjRtBuffer,
+    pub cols: xla::PjRtBuffer,
+    pub seg_row: xla::PjRtBuffer,
+    pub lhs: xla::PjRtBuffer,
+    pub rhs: xla::PjRtBuffer,
+    pub is_int: xla::PjRtBuffer,
+    pub nnz: usize,
+    pub segs_used: usize,
+}
+
+pub fn upload_static(
+    client: &xla::PjRtClient,
+    meta: &ArtifactMeta,
+    host: &HostStatic,
+) -> Result<DeviceStatic> {
+    let up_i32 = |v: &[i32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+        client.buffer_from_host_buffer(v, dims, None).map_err(|e| anyhow!("upload i32: {e:?}"))
+    };
+    Ok(DeviceStatic {
+        vals: host.vals.upload(client, &[meta.segs, meta.width])?,
+        cols: up_i32(&host.cols, &[meta.segs, meta.width])?,
+        seg_row: up_i32(&host.seg_row, &[meta.segs])?,
+        lhs: host.lhs.upload(client, &[meta.rows])?,
+        rhs: host.rhs.upload(client, &[meta.rows])?,
+        is_int: up_i32(&host.is_int, &[meta.cols])?,
+        nnz: host.nnz,
+        segs_used: host.segs_used,
+    })
+}
+
+/// Pad current bounds to the bucket width (host side).
+pub fn pad_bounds(lb: &[f64], ub: &[f64], meta: &ArtifactMeta) -> (Vec<f64>, Vec<f64>) {
+    let mut plb = vec![f64::NEG_INFINITY; meta.cols];
+    let mut pub_ = vec![f64::INFINITY; meta.cols];
+    plb[..lb.len()].copy_from_slice(lb);
+    pub_[..ub.len()].copy_from_slice(ub);
+    (plb, pub_)
+}
+
+/// Upload (padded) bounds for one round.
+pub fn upload_bounds(
+    client: &xla::PjRtClient,
+    lb_pad: &[f64],
+    ub_pad: &[f64],
+    meta: &ArtifactMeta,
+) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+    let lb = FVec::from_f64(lb_pad, meta.dtype).upload(client, &[meta.cols])?;
+    let ub = FVec::from_f64(ub_pad, meta.dtype).upload(client, &[meta.cols])?;
+    Ok((lb, ub))
+}
+
+/// Decoded artifact output.
+pub struct RoundOutput {
+    pub lb: Vec<f64>,
+    pub ub: Vec<f64>,
+    /// `change` for round artifacts; `rounds` for loop/mega artifacts.
+    pub flag: i32,
+    pub infeas: i32,
+}
+
+fn vec_f(l: &xla::Literal, dtype: Dtype) -> Result<Vec<f64>> {
+    Ok(match dtype {
+        Dtype::F64 => l.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e:?}"))?,
+        Dtype::F32 => l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec f32: {e:?}"))?
+            .into_iter()
+            .map(|x| x as f64)
+            .collect(),
+    })
+}
+
+/// Unpack the output tuple, truncating bounds to `ncols` real columns.
+pub fn unpack_output(tuple: xla::Literal, meta: &ArtifactMeta, ncols: usize) -> Result<RoundOutput> {
+    let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    if parts.len() != 4 {
+        bail!("expected 4-tuple output, got {}", parts.len());
+    }
+    let mut lb = vec_f(&parts[0], meta.dtype)?;
+    let mut ub = vec_f(&parts[1], meta.dtype)?;
+    lb.truncate(ncols);
+    ub.truncate(ncols);
+    let flag = parts[2].to_vec::<i32>().map_err(|e| anyhow!("flag: {e:?}"))?[0];
+    let infeas = parts[3].to_vec::<i32>().map_err(|e| anyhow!("infeas: {e:?}"))?[0];
+    Ok(RoundOutput { lb, ub, flag, infeas })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::VarType;
+    use crate::runtime::manifest::Dtype;
+    use crate::sparse::Csr;
+
+    fn meta(rows: usize, cols: usize, segs: usize, width: usize, dtype: Dtype) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            variant: "round".into(),
+            dtype,
+            impl_: "pallas".into(),
+            fastmath: false,
+            rows,
+            cols,
+            segs,
+            width,
+            max_rounds: 100,
+            file: "f".into(),
+        }
+    }
+
+    fn inst() -> MipInstance {
+        let m = Csr::from_triplets(2, 3, &[(0, 0, 2.0), (0, 2, 3.0), (1, 1, -1.0)]).unwrap();
+        MipInstance::from_parts(
+            "i",
+            m,
+            vec![f64::NEG_INFINITY, -5.0],
+            vec![12.0, f64::INFINITY],
+            vec![0.0, -1.0, 0.0],
+            vec![10.0, 1.0, 10.0],
+            vec![VarType::Continuous, VarType::Integer, VarType::Continuous],
+        )
+    }
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let meta = meta(4, 5, 8, 4, Dtype::F64);
+        let p = pack_static_host(&inst(), &meta).unwrap();
+        assert_eq!(p.nnz, 3);
+        assert_eq!(p.segs_used, 2);
+        let vals = p.vals.to_f64();
+        assert_eq!(vals.len(), 8 * 4);
+        assert_eq!(&vals[..4], &[2.0, 3.0, 0.0, 0.0]);
+        let lhs = p.lhs.to_f64();
+        assert_eq!(lhs.len(), 4);
+        assert_eq!(lhs[2], f64::NEG_INFINITY); // padding row
+        assert_eq!(&p.is_int[..3], &[0, 1, 0]);
+        assert_eq!(&p.is_int[3..], &[0, 0]);
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let meta = meta(1, 5, 8, 4, Dtype::F64);
+        assert!(pack_static_host(&inst(), &meta).is_err());
+    }
+
+    #[test]
+    fn pad_bounds_pads_free() {
+        let meta = meta(4, 5, 8, 4, Dtype::F64);
+        let (lb, ub) = pad_bounds(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &meta);
+        assert_eq!(&lb[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(lb[3], f64::NEG_INFINITY);
+        assert_eq!(ub[4], f64::INFINITY);
+    }
+
+    #[test]
+    fn f32_conversion() {
+        let meta = meta(4, 5, 8, 4, Dtype::F32);
+        let p = pack_static_host(&inst(), &meta).unwrap();
+        match &p.vals {
+            FVec::F32(v) => assert_eq!(v[0], 2.0f32),
+            _ => panic!("expected f32"),
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact manifest parsing. The manifest is line-oriented `key=value`
+//! records written by python/compile/aot.py — deliberately trivial to parse
+//! so the Rust side needs no Python at runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Artifact dtype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F64,
+    F32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f64" => Ok(Dtype::F64),
+            "f32" => Ok(Dtype::F32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// One artifact record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "round" | "loop" | "mega"
+    pub variant: String,
+    pub dtype: Dtype,
+    /// "pallas" | "jnp"
+    pub impl_: String,
+    pub fastmath: bool,
+    pub rows: usize,
+    pub cols: usize,
+    pub segs: usize,
+    pub width: usize,
+    pub max_rounds: u32,
+    pub file: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("line {}: bad token {tok}", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k).copied().with_context(|| format!("line {}: missing {k}", lineno + 1))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get("name")?.to_string(),
+                variant: get("variant")?.to_string(),
+                dtype: Dtype::parse(get("dtype")?)?,
+                impl_: get("impl")?.to_string(),
+                fastmath: get("fastmath")? == "1",
+                rows: get("rows")?.parse()?,
+                cols: get("cols")?.parse()?,
+                segs: get("segs")?.parse()?,
+                width: get("width")?.parse()?,
+                max_rounds: kv.get("max_rounds").map(|s| s.parse()).transpose()?.unwrap_or(100),
+                file: get("file")?.to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest contains no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// All artifacts matching a (variant, dtype, impl, fastmath) family,
+    /// sorted by capacity (rows ascending).
+    pub fn family(
+        &self,
+        variant: &str,
+        dtype: Dtype,
+        impl_: &str,
+        fastmath: bool,
+    ) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.variant == variant && a.dtype == dtype && a.impl_ == impl_ && a.fastmath == fastmath
+            })
+            .collect();
+        v.sort_by_key(|a| (a.rows, a.cols, a.segs));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+name=round_f64_pallas_b0 variant=round dtype=f64 impl=pallas fastmath=0 rows=256 cols=256 segs=1024 width=16 max_rounds=100 file=round_f64_pallas_b0.hlo.txt
+name=round_f64_pallas_b1 variant=round dtype=f64 impl=pallas fastmath=0 rows=1024 cols=1024 segs=4096 width=16 max_rounds=100 file=round_f64_pallas_b1.hlo.txt
+name=round_f32fm_pallas_b0 variant=round dtype=f32 impl=pallas fastmath=1 rows=256 cols=256 segs=1024 width=16 max_rounds=100 file=round_f32fm_pallas_b0.hlo.txt
+";
+
+    #[test]
+    fn parses_records() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].rows, 256);
+        assert_eq!(m.artifacts[0].dtype, Dtype::F64);
+        assert!(m.artifacts[2].fastmath);
+    }
+
+    #[test]
+    fn family_filter_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let fam = m.family("round", Dtype::F64, "pallas", false);
+        assert_eq!(fam.len(), 2);
+        assert!(fam[0].rows < fam[1].rows);
+        assert!(m.family("round", Dtype::F32, "pallas", false).is_empty());
+        assert_eq!(m.family("round", Dtype::F32, "pallas", true).len(), 1);
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(Manifest::parse("# only comments\n").is_err());
+        assert!(Manifest::parse("name=x brokentoken\n").is_err());
+        assert!(Manifest::parse("name=x variant=round dtype=f99 impl=p fastmath=0 rows=1 cols=1 segs=1 width=1 file=f\n").is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the interchange is `artifacts/manifest.txt`
+//! plus one HLO text file per (variant, dtype, impl, bucket) combination
+//! (see /opt/xla-example/README.md for why text, not serialized protos).
+
+pub mod manifest;
+pub mod buckets;
+pub mod literal;
+pub mod exec_cache;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use buckets::select_bucket;
+pub use exec_cache::ExecCache;
+pub use manifest::{ArtifactMeta, Manifest};
+
+/// A PJRT CPU client plus the artifact inventory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/` next to the repo
+    /// root, overridable with `GDP_ARTIFACTS`).
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("GDP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(Path::new(&dir))
+    }
+
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
+        Ok(Runtime { client, manifest, artifact_dir: dir.to_path_buf() })
+    }
+
+    /// Compile one artifact (cached callers should go through [`ExecCache`]).
+    pub fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifact_dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", meta.name))
+    }
+}

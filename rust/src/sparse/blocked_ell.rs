@@ -1,0 +1,168 @@
+//! Blocked-ELL packing: the layout the L1 Pallas kernel consumes.
+//!
+//! Mirrors python/compile/pack.py exactly (differentially tested against
+//! goldens it generates): each row occupies ceil(k/W) consecutive
+//! width-W segments; padding entries have `val == 0.0, col == 0`; padding
+//! segments map to row 0 and contribute nothing.
+//!
+//! This is the TPU adaptation of the paper's CSR-adaptive row blocking
+//! (DESIGN.md section Hardware-Adaptation).
+
+use super::csr::Csr;
+
+#[derive(Debug, Clone)]
+pub struct BlockedEll {
+    /// Segment width (entries per segment).
+    pub width: usize,
+    /// Number of segments (rows of the [S, W] arrays).
+    pub segs: usize,
+    /// Coefficients, row-major [segs * width].
+    pub vals: Vec<f64>,
+    /// Column indices, row-major [segs * width].
+    pub cols: Vec<i32>,
+    /// Row owning each segment.
+    pub seg_row: Vec<i32>,
+}
+
+impl BlockedEll {
+    /// Pack a CSR matrix. `min_segs` pads the segment count (bucket shapes).
+    pub fn pack(csr: &Csr, width: usize, min_segs: Option<usize>) -> BlockedEll {
+        assert!(width > 0);
+        let mut needed = 0usize;
+        for r in 0..csr.nrows {
+            let k = csr.row_nnz(r);
+            needed += k.div_ceil(width);
+        }
+        let segs = needed.max(min_segs.unwrap_or(0)).max(1);
+        let mut vals = vec![0.0f64; segs * width];
+        let mut cols = vec![0i32; segs * width];
+        let mut seg_row = vec![0i32; segs];
+        let mut si = 0usize;
+        for r in 0..csr.nrows {
+            let (rcols, rvals) = csr.row(r);
+            let k = rcols.len();
+            let mut off = 0;
+            while off < k {
+                let n = (k - off).min(width);
+                let base = si * width;
+                for t in 0..n {
+                    vals[base + t] = rvals[off + t];
+                    cols[base + t] = rcols[off + t] as i32;
+                }
+                seg_row[si] = r as i32;
+                si += 1;
+                off += n;
+            }
+        }
+        debug_assert_eq!(si, needed);
+        BlockedEll { width, segs, vals, cols, seg_row }
+    }
+
+    /// Number of segments strictly required (before padding).
+    pub fn segments_needed(csr: &Csr, width: usize) -> usize {
+        (0..csr.nrows).map(|r| csr.row_nnz(r).div_ceil(width)).sum()
+    }
+
+    /// Count of real (nonzero) entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Reconstruct the (row, col, val) triplet list (tests / goldens).
+    pub fn to_triplets(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        for s in 0..self.segs {
+            for w in 0..self.width {
+                let v = self.vals[s * self.width + w];
+                if v != 0.0 {
+                    out.push((
+                        self.seg_row[s] as usize,
+                        self.cols[s * self.width + w] as usize,
+                        v,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// vals re-encoded as f32 (single-precision artifacts).
+    pub fn vals_f32(&self) -> Vec<f32> {
+        self.vals.iter().map(|&v| v as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    fn csr_random(rng: &mut crate::util::rng::Rng) -> Csr {
+        let nrows = rng.range(1, 10);
+        let ncols = rng.range(1, 10);
+        let mut triplets = Vec::new();
+        for r in 0..nrows {
+            let k = rng.below(ncols + 1);
+            for c in rng.sample_distinct(ncols, k) {
+                triplets.push((r, c, rng.range_f64(0.5, 3.0)));
+            }
+        }
+        Csr::from_triplets(nrows, ncols, &triplets).unwrap()
+    }
+
+    #[test]
+    fn long_row_split() {
+        let csr = Csr::from_rows(
+            10,
+            &[((0..10u32).collect(), (1..=10).map(|x| x as f64).collect())],
+        )
+        .unwrap();
+        let b = BlockedEll::pack(&csr, 4, None);
+        assert_eq!(b.segs, 3);
+        assert_eq!(b.seg_row, vec![0, 0, 0]);
+        assert_eq!(&b.vals[8..12], &[9.0, 10.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn min_segs_pads() {
+        let csr = Csr::from_triplets(1, 1, &[(0, 0, 1.0)]).unwrap();
+        let b = BlockedEll::pack(&csr, 4, Some(7));
+        assert_eq!(b.segs, 7);
+        assert_eq!(b.nnz(), 1);
+        assert!(b.seg_row[1..].iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn empty_matrix_one_padding_segment() {
+        let csr = Csr::from_triplets(3, 3, &[]).unwrap();
+        let b = BlockedEll::pack(&csr, 8, None);
+        assert_eq!(b.segs, 1);
+        assert_eq!(b.nnz(), 0);
+    }
+
+    #[test]
+    fn prop_pack_preserves_entries() {
+        prop("blocked-ell preserves entries", Config::cases(48), |rng| {
+            let csr = csr_random(rng);
+            let width = rng.range(1, 9);
+            let b = BlockedEll::pack(&csr, width, None);
+            let mut got = b.to_triplets();
+            let mut want: Vec<_> = csr.iter().collect();
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(got, want);
+            assert_eq!(b.segs.max(1), BlockedEll::segments_needed(&csr, width).max(1));
+        });
+    }
+
+    #[test]
+    fn prop_segments_contiguous_per_row() {
+        prop("segments contiguous", Config::cases(32), |rng| {
+            let csr = csr_random(rng);
+            let b = BlockedEll::pack(&csr, 3, None);
+            let needed = BlockedEll::segments_needed(&csr, 3);
+            let rows = &b.seg_row[..needed];
+            assert!(rows.windows(2).all(|w| w[0] <= w[1]));
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Compressed Sparse Column view — the constraint-marking index of the
+//! sequential Algorithm 1 ("mark all constraints c with v in c", line 20)
+//! needs column-major access. Built once per instance (the paper counts
+//! this as one-time initialization excluded from timing, section 4.3).
+
+use super::csr::Csr;
+
+#[derive(Debug, Clone)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Column pointer array, length ncols+1.
+    pub col_ptr: Vec<usize>,
+    /// Row indices, length nnz, sorted within each column.
+    pub row_idx: Vec<u32>,
+    /// Coefficients aligned with `row_idx`.
+    pub vals: Vec<f64>,
+}
+
+impl Csc {
+    pub fn from_csr(csr: &Csr) -> Csc {
+        let nnz = csr.nnz();
+        let mut col_ptr = vec![0usize; csr.ncols + 1];
+        for &c in &csr.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for i in 0..csr.ncols {
+            col_ptr[i + 1] += col_ptr[i];
+        }
+        let mut next = col_ptr.clone();
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        for (r, c, v) in csr.iter() {
+            let slot = next[c];
+            row_idx[slot] = r as u32;
+            vals[slot] = v;
+            next[c] += 1;
+        }
+        Csc { nrows: csr.nrows, ncols: csr.ncols, col_ptr, row_idx, vals }
+    }
+
+    /// (row_idx, vals) of one column: the constraints containing variable c.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[u32], &[f64]) {
+        let lo = self.col_ptr[c];
+        let hi = self.col_ptr[c + 1];
+        (&self.row_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    #[inline]
+    pub fn col_nnz(&self, c: usize) -> usize {
+        self.col_ptr[c + 1] - self.col_ptr[c]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn transpose_matches() {
+        let csr = Csr::from_triplets(
+            2,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 0, 3.0), (1, 1, 4.0)],
+        )
+        .unwrap();
+        let csc = Csc::from_csr(&csr);
+        assert_eq!(csc.col(0), (&[0u32, 1][..], &[1.0, 3.0][..]));
+        assert_eq!(csc.col(1), (&[1u32][..], &[4.0][..]));
+        assert_eq!(csc.col(2), (&[0u32][..], &[2.0][..]));
+    }
+
+    #[test]
+    fn prop_csc_entry_set_equals_csr() {
+        prop("csc == csr^T", Config::cases(32), |rng| {
+            let nrows = rng.range(1, 15);
+            let ncols = rng.range(1, 15);
+            let n = rng.range(0, 40);
+            let triplets: Vec<_> = (0..n)
+                .map(|_| (rng.below(nrows), rng.below(ncols), rng.range_f64(0.5, 2.0)))
+                .collect();
+            let csr = Csr::from_triplets(nrows, ncols, &triplets).unwrap();
+            let csc = Csc::from_csr(&csr);
+            assert_eq!(csc.nnz(), csr.nnz());
+            let mut from_csr: Vec<_> = csr.iter().collect();
+            let mut from_csc = Vec::new();
+            for c in 0..ncols {
+                let (rows, vals) = csc.col(c);
+                // rows sorted within each column
+                assert!(rows.windows(2).all(|w| w[0] < w[1]));
+                for (&r, &v) in rows.iter().zip(vals) {
+                    from_csc.push((r as usize, c, v));
+                }
+            }
+            from_csr.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            from_csc.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            assert_eq!(from_csr, from_csc);
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! Compressed Sparse Row storage (paper section 3: the input format).
+
+/// CSR matrix. Zero-coefficient entries are dropped at construction:
+/// the whole stack relies on `val != 0` identifying real nonzeros.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointer array, length nrows+1.
+    pub row_ptr: Vec<usize>,
+    /// Column indices, length nnz, sorted within each row.
+    pub col_idx: Vec<u32>,
+    /// Coefficients, length nnz, all nonzero.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO triplets (row, col, val). Duplicates are summed;
+    /// resulting zeros (exact cancellation) are dropped.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Csr, String> {
+        let mut items: Vec<(usize, usize, f64)> = Vec::with_capacity(triplets.len());
+        for &(r, c, v) in triplets {
+            if r >= nrows || c >= ncols {
+                return Err(format!("entry ({r},{c}) out of bounds {nrows}x{ncols}"));
+            }
+            if !v.is_finite() {
+                return Err(format!("non-finite coefficient at ({r},{c})"));
+            }
+            items.push((r, c, v));
+        }
+        items.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        // sum duplicates
+        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(items.len());
+        for (r, c, v) in items {
+            match merged.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        merged.retain(|&(_, _, v)| v != 0.0);
+
+        let mut row_ptr = vec![0usize; nrows + 1];
+        for &(r, _, _) in &merged {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx = merged.iter().map(|&(_, c, _)| c as u32).collect();
+        let vals = merged.iter().map(|&(_, _, v)| v).collect();
+        Ok(Csr { nrows, ncols, row_ptr, col_idx, vals })
+    }
+
+    /// Build directly from per-row (cols, vals) slices (already clean).
+    pub fn from_rows(ncols: usize, rows: &[(Vec<u32>, Vec<f64>)]) -> Result<Csr, String> {
+        let mut triplets = Vec::new();
+        for (r, (cols, vals)) in rows.iter().enumerate() {
+            if cols.len() != vals.len() {
+                return Err(format!("row {r}: cols/vals length mismatch"));
+            }
+            for (&c, &v) in cols.iter().zip(vals) {
+                triplets.push((r, c as usize, v));
+            }
+        }
+        Csr::from_triplets(rows.len(), ncols, &triplets)
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// (col_idx, vals) of one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[r];
+        let hi = self.row_ptr[r + 1];
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Iterate all (row, col, val).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.nrows).flat_map(move |r| {
+            let (cols, vals) = self.row(r);
+            cols.iter().zip(vals).map(move |(&c, &v)| (r, c as usize, v))
+        })
+    }
+
+    /// Structural validation (used by tests and after permutations).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err("row_ptr endpoints".into());
+        }
+        if self.col_idx.len() != self.vals.len() {
+            return Err("col/val length".into());
+        }
+        for r in 0..self.nrows {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(format!("row_ptr not monotone at {r}"));
+            }
+            let (cols, vals) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} columns not strictly sorted"));
+                }
+            }
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize >= self.ncols {
+                    return Err(format!("row {r} col {c} out of range"));
+                }
+                if v == 0.0 || !v.is_finite() {
+                    return Err(format!("row {r} col {c} bad value {v}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense representation (tests only; O(nrows*ncols)).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.ncols]; self.nrows];
+        for (r, c, v) in self.iter() {
+            out[r][c] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn from_triplets_sorts_and_sums() {
+        let m = Csr::from_triplets(
+            2,
+            3,
+            &[(1, 2, 1.0), (0, 1, 2.0), (1, 2, 0.5), (0, 0, -1.0)],
+        )
+        .unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[0u32, 1][..], &[-1.0, 2.0][..]));
+        assert_eq!(m.row(1), (&[2u32][..], &[1.5][..]));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn cancellation_dropped() {
+        let m = Csr::from_triplets(1, 1, &[(0, 0, 1.0), (0, 0, -1.0)]).unwrap();
+        assert_eq!(m.nnz(), 0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Csr::from_triplets(1, 1, &[(1, 0, 1.0)]).is_err());
+        assert!(Csr::from_triplets(1, 1, &[(0, 0, f64::NAN)]).is_err());
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let m = Csr::from_triplets(3, 3, &[(1, 1, 5.0)]).unwrap();
+        assert_eq!(m.row_nnz(0), 0);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn prop_roundtrip_via_dense() {
+        prop("csr dense roundtrip", Config::cases(32), |rng| {
+            let nrows = rng.range(1, 12);
+            let ncols = rng.range(1, 12);
+            let n = rng.range(0, 30);
+            let mut triplets = Vec::new();
+            for _ in 0..n {
+                triplets.push((
+                    rng.below(nrows),
+                    rng.below(ncols),
+                    (rng.f64() * 10.0) - 5.0,
+                ));
+            }
+            let m = Csr::from_triplets(nrows, ncols, &triplets).unwrap();
+            m.validate().unwrap();
+            let dense = m.to_dense();
+            let mut want = vec![vec![0.0; ncols]; nrows];
+            for &(r, c, v) in &triplets {
+                want[r][c] += v;
+            }
+            for r in 0..nrows {
+                for c in 0..ncols {
+                    assert!((dense[r][c] - want[r][c]).abs() < 1e-12);
+                }
+            }
+        });
+    }
+}

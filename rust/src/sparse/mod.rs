@@ -1,0 +1,14 @@
+//! Sparse-matrix substrate: CSR/CSC storage, the blocked-ELL packing that
+//! feeds the L1 kernel, the CSR-adaptive row-block partitioner, matrix
+//! statistics and permutation tools.
+
+pub mod csr;
+pub mod csc;
+pub mod blocked_ell;
+pub mod rowblocks;
+pub mod stats;
+pub mod permute;
+
+pub use blocked_ell::BlockedEll;
+pub use csc::Csc;
+pub use csr::Csr;

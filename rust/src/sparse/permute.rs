@@ -1,0 +1,140 @@
+//! Row/column permutations (paper Appendix B: the ordering study runs the
+//! whole benchmark on randomly permuted instances).
+
+use super::csr::Csr;
+use crate::util::rng::Rng;
+
+/// A permutation `perm` maps new index -> old index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Permutation(pub Vec<usize>);
+
+impl Permutation {
+    pub fn identity(n: usize) -> Permutation {
+        Permutation((0..n).collect())
+    }
+
+    pub fn random(n: usize, rng: &mut Rng) -> Permutation {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        Permutation(p)
+    }
+
+    /// Inverse permutation: maps old index -> new index.
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0usize; self.0.len()];
+        for (newi, &oldi) in self.0.iter().enumerate() {
+            inv[oldi] = newi;
+        }
+        Permutation(inv)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Apply to a vector: out[new] = v[perm[new]].
+    pub fn apply<T: Clone>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.0.len());
+        self.0.iter().map(|&old| v[old].clone()).collect()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.0.len();
+        let mut seen = vec![false; n];
+        for &i in &self.0 {
+            if i >= n || seen[i] {
+                return Err(format!("not a permutation at {i}"));
+            }
+            seen[i] = true;
+        }
+        Ok(())
+    }
+}
+
+/// Permute rows and columns of a CSR matrix:
+/// `out[i][j] = csr[row_perm[i]][col_perm[j]]`.
+pub fn permute_csr(csr: &Csr, row_perm: &Permutation, col_perm: &Permutation) -> Csr {
+    assert_eq!(row_perm.len(), csr.nrows);
+    assert_eq!(col_perm.len(), csr.ncols);
+    let col_inv = col_perm.inverse();
+    let mut triplets = Vec::with_capacity(csr.nnz());
+    for (newr, &oldr) in row_perm.0.iter().enumerate() {
+        let (cols, vals) = csr.row(oldr);
+        for (&c, &v) in cols.iter().zip(vals) {
+            triplets.push((newr, col_inv.0[c as usize], v));
+        }
+    }
+    Csr::from_triplets(csr.nrows, csr.ncols, &triplets).expect("permutation preserves validity")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(1);
+        let p = Permutation::random(20, &mut rng);
+        p.validate().unwrap();
+        let inv = p.inverse();
+        for i in 0..20 {
+            assert_eq!(inv.0[p.0[i]], i);
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let csr = Csr::from_triplets(2, 3, &[(0, 1, 2.0), (1, 2, 3.0)]).unwrap();
+        let out = permute_csr(&csr, &Permutation::identity(2), &Permutation::identity(3));
+        assert_eq!(out, csr);
+    }
+
+    #[test]
+    fn prop_permute_preserves_values() {
+        prop("permute preserves entry multiset", Config::cases(32), |rng| {
+            let nrows = rng.range(1, 10);
+            let ncols = rng.range(1, 10);
+            let n = rng.range(0, 25);
+            let triplets: Vec<_> = (0..n)
+                .map(|_| (rng.below(nrows), rng.below(ncols), rng.range_f64(0.5, 5.0)))
+                .collect();
+            let csr = Csr::from_triplets(nrows, ncols, &triplets).unwrap();
+            let rp = Permutation::random(nrows, rng);
+            let cp = Permutation::random(ncols, rng);
+            let out = permute_csr(&csr, &rp, &cp);
+            out.validate().unwrap();
+            assert_eq!(out.nnz(), csr.nnz());
+            // spot-check correspondence entry by entry
+            for (newr, newc, v) in out.iter() {
+                let oldr = rp.0[newr];
+                let oldc = cp.0[newc];
+                let (cols, vals) = csr.row(oldr);
+                let pos = cols.binary_search(&(oldc as u32)).expect("entry must exist");
+                assert!((vals[pos] - v).abs() < 1e-15);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_double_permute_roundtrips() {
+        prop("P^-1(P(A)) == A", Config::cases(16), |rng| {
+            let nrows = rng.range(1, 8);
+            let ncols = rng.range(1, 8);
+            let n = rng.range(0, 20);
+            let triplets: Vec<_> = (0..n)
+                .map(|_| (rng.below(nrows), rng.below(ncols), rng.range_f64(0.5, 5.0)))
+                .collect();
+            let csr = Csr::from_triplets(nrows, ncols, &triplets).unwrap();
+            let rp = Permutation::random(nrows, rng);
+            let cp = Permutation::random(ncols, rng);
+            let there = permute_csr(&csr, &rp, &cp);
+            let back = permute_csr(&there, &rp.inverse(), &cp.inverse());
+            assert_eq!(back, csr);
+        });
+    }
+}

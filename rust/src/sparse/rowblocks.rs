@@ -1,0 +1,172 @@
+//! CSR-adaptive row-block partitioner (Greathouse & Daga, paper section 3.2).
+//!
+//! Groups consecutive rows into blocks holding at most `nnz_per_block`
+//! nonzeros. Short rows share a block (CSR-stream); a row longer than the
+//! budget gets its own block (CSR-vector, with the one-warp / all-warps
+//! split at `length_threshold`, paper section 3.3 uses 64).
+//!
+//! Consumed by (a) the device cost model — the kernel-launch geometry of the
+//! simulated GPU — and (b) the cpu_omp scheduler for load balancing.
+
+use super::csr::Csr;
+
+/// How a row block is processed (paper Algorithm 3, lines 4-10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// Several short rows: stream nonzeros through shared memory.
+    Stream,
+    /// Single row, nnz below the length threshold: one warp.
+    VectorOneWarp,
+    /// Single (very long) row: all warps of the thread block.
+    VectorAllWarps,
+}
+
+#[derive(Debug, Clone)]
+pub struct RowBlock {
+    pub start_row: usize,
+    /// exclusive
+    pub end_row: usize,
+    pub nnz: usize,
+    pub kind: BlockKind,
+}
+
+#[derive(Debug, Clone)]
+pub struct RowBlocks {
+    pub blocks: Vec<RowBlock>,
+    pub nnz_per_block: usize,
+    pub length_threshold: usize,
+}
+
+impl RowBlocks {
+    /// Partition `csr` with the given shared-memory budget (in nonzeros).
+    pub fn partition(csr: &Csr, nnz_per_block: usize, length_threshold: usize) -> RowBlocks {
+        assert!(nnz_per_block > 0);
+        let mut blocks = Vec::new();
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        let mut r = 0usize;
+        while r < csr.nrows {
+            let k = csr.row_nnz(r);
+            if k > nnz_per_block {
+                // flush the pending stream block
+                if r > start {
+                    blocks.push(RowBlock { start_row: start, end_row: r, nnz: acc, kind: BlockKind::Stream });
+                }
+                let kind = if k < length_threshold {
+                    BlockKind::VectorOneWarp
+                } else {
+                    BlockKind::VectorAllWarps
+                };
+                blocks.push(RowBlock { start_row: r, end_row: r + 1, nnz: k, kind });
+                r += 1;
+                start = r;
+                acc = 0;
+            } else if acc + k > nnz_per_block {
+                blocks.push(RowBlock { start_row: start, end_row: r, nnz: acc, kind: BlockKind::Stream });
+                start = r;
+                acc = 0;
+            } else {
+                acc += k;
+                r += 1;
+            }
+        }
+        if start < csr.nrows {
+            // every remaining row fits the budget: a stream block
+            blocks.push(RowBlock { start_row: start, end_row: csr.nrows, nnz: acc, kind: BlockKind::Stream });
+        }
+        RowBlocks { blocks, nnz_per_block, length_threshold }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Validation: blocks tile [0, nrows) exactly, respecting budgets.
+    pub fn validate(&self, csr: &Csr) -> Result<(), String> {
+        let mut expect = 0usize;
+        for b in &self.blocks {
+            if b.start_row != expect {
+                return Err(format!("gap before row {}", b.start_row));
+            }
+            if b.end_row <= b.start_row {
+                return Err("empty block".into());
+            }
+            let nnz: usize = (b.start_row..b.end_row).map(|r| csr.row_nnz(r)).sum();
+            if nnz != b.nnz {
+                return Err(format!("nnz mismatch in block at {}", b.start_row));
+            }
+            match b.kind {
+                BlockKind::Stream => {
+                    if b.nnz > self.nnz_per_block {
+                        return Err(format!("stream block over budget at {}", b.start_row));
+                    }
+                }
+                BlockKind::VectorOneWarp | BlockKind::VectorAllWarps => {
+                    if b.end_row - b.start_row != 1 {
+                        return Err("vector block spans several rows".into());
+                    }
+                }
+            }
+            expect = b.end_row;
+        }
+        if expect != csr.nrows {
+            return Err(format!("blocks end at {expect}, expected {}", csr.nrows));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{prop, Config};
+
+    fn csr_with_rows(lens: &[usize]) -> Csr {
+        let ncols = lens.iter().copied().max().unwrap_or(1).max(1);
+        let rows: Vec<(Vec<u32>, Vec<f64>)> = lens
+            .iter()
+            .map(|&k| ((0..k as u32).collect(), vec![1.0; k]))
+            .collect();
+        Csr::from_rows(ncols, &rows).unwrap()
+    }
+
+    #[test]
+    fn short_rows_grouped() {
+        let csr = csr_with_rows(&[2, 2, 2, 2]);
+        let rb = RowBlocks::partition(&csr, 8, 64);
+        assert_eq!(rb.num_blocks(), 1);
+        assert_eq!(rb.blocks[0].kind, BlockKind::Stream);
+        rb.validate(&csr).unwrap();
+    }
+
+    #[test]
+    fn dense_connecting_row_isolated() {
+        let csr = csr_with_rows(&[2, 100, 2]);
+        let rb = RowBlocks::partition(&csr, 8, 64);
+        rb.validate(&csr).unwrap();
+        let kinds: Vec<_> = rb.blocks.iter().map(|b| b.kind).collect();
+        assert!(kinds.contains(&BlockKind::VectorAllWarps));
+    }
+
+    #[test]
+    fn medium_row_one_warp() {
+        let csr = csr_with_rows(&[2, 30, 2]);
+        let rb = RowBlocks::partition(&csr, 8, 64);
+        rb.validate(&csr).unwrap();
+        assert!(rb.blocks.iter().any(|b| b.kind == BlockKind::VectorOneWarp));
+    }
+
+    #[test]
+    fn prop_partition_valid() {
+        prop("rowblocks tile matrix", Config::cases(48), |rng| {
+            let nrows = rng.range(1, 30);
+            let lens: Vec<usize> = (0..nrows)
+                .map(|_| if rng.chance(0.1) { rng.range(20, 120) } else { rng.below(8) })
+                .collect();
+            let csr = csr_with_rows(&lens);
+            let budget = rng.range(4, 40);
+            let rb = RowBlocks::partition(&csr, budget, 64);
+            rb.validate(&csr).unwrap();
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! Matrix shape/sparsity statistics (paper section 3.6: the performance
+//! analysis is a function of rows, columns, nnz-per-row and nnz-per-column
+//! distributions). Used by the device cost model and the roofline study.
+
+use super::csc::Csc;
+use super::csr::Csr;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub row_nnz_min: usize,
+    pub row_nnz_max: usize,
+    pub row_nnz_mean: f64,
+    pub row_nnz_stddev: f64,
+    pub col_nnz_min: usize,
+    pub col_nnz_max: usize,
+    pub col_nnz_mean: f64,
+    pub col_nnz_stddev: f64,
+    /// Fraction of nnz living in the densest 1% of rows ("connecting
+    /// constraints" indicator).
+    pub top1pct_row_share: f64,
+}
+
+fn dist(lens: &[usize]) -> (usize, usize, f64, f64) {
+    if lens.is_empty() {
+        return (0, 0, 0.0, 0.0);
+    }
+    let min = *lens.iter().min().unwrap();
+    let max = *lens.iter().max().unwrap();
+    let n = lens.len() as f64;
+    let mean = lens.iter().sum::<usize>() as f64 / n;
+    let var = lens.iter().map(|&k| (k as f64 - mean).powi(2)).sum::<f64>() / n;
+    (min, max, mean, var.sqrt())
+}
+
+impl MatrixStats {
+    pub fn compute(csr: &Csr) -> MatrixStats {
+        let row_lens: Vec<usize> = (0..csr.nrows).map(|r| csr.row_nnz(r)).collect();
+        let csc = Csc::from_csr(csr);
+        let col_lens: Vec<usize> = (0..csr.ncols).map(|c| csc.col_nnz(c)).collect();
+        let (rmin, rmax, rmean, rsd) = dist(&row_lens);
+        let (cmin, cmax, cmean, csd) = dist(&col_lens);
+        let nnz = csr.nnz();
+        let mut sorted = row_lens.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top = (csr.nrows.max(100) / 100).max(1).min(sorted.len());
+        let top_share = if nnz > 0 {
+            sorted[..top].iter().sum::<usize>() as f64 / nnz as f64
+        } else {
+            0.0
+        };
+        MatrixStats {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            nnz,
+            density: if csr.nrows * csr.ncols > 0 {
+                nnz as f64 / (csr.nrows as f64 * csr.ncols as f64)
+            } else {
+                0.0
+            },
+            row_nnz_min: rmin,
+            row_nnz_max: rmax,
+            row_nnz_mean: rmean,
+            row_nnz_stddev: rsd,
+            col_nnz_min: cmin,
+            col_nnz_max: cmax,
+            col_nnz_mean: cmean,
+            col_nnz_stddev: csd,
+            top1pct_row_share: top_share,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let csr = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (2, 3, 1.0)],
+        )
+        .unwrap();
+        let s = MatrixStats::compute(&csr);
+        assert_eq!(s.nnz, 4);
+        assert_eq!(s.row_nnz_max, 2);
+        assert_eq!(s.col_nnz_max, 2);
+        assert!((s.row_nnz_mean - 4.0 / 3.0).abs() < 1e-12);
+        assert!((s.density - 4.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_row_dominates_top_share() {
+        let mut triplets = vec![];
+        for c in 0..50 {
+            triplets.push((0usize, c, 1.0));
+        }
+        for r in 1..50 {
+            triplets.push((r, 0, 1.0));
+        }
+        let csr = Csr::from_triplets(50, 50, &triplets).unwrap();
+        let s = MatrixStats::compute(&csr);
+        assert!(s.top1pct_row_share > 0.4, "{}", s.top1pct_row_share);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::from_triplets(2, 2, &[]).unwrap();
+        let s = MatrixStats::compute(&csr);
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.row_nnz_max, 0);
+        assert_eq!(s.top1pct_row_share, 0.0);
+    }
+}

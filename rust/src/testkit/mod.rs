@@ -1,0 +1,133 @@
+//! Property-testing mini-framework (the offline registry has no proptest).
+//!
+//! Deterministic, seed-sweep based: a property is a closure over an [`Rng`];
+//! the runner executes it for `cases` derived seeds and, on failure, reports
+//! the failing seed so the case can be replayed with `prop_replay`.
+//!
+//! ```no_run
+//! use gdp::testkit::{prop, Config};
+//! prop("addition commutes", Config::default(), |rng| {
+//!     let a = rng.range_f64(-10.0, 10.0);
+//!     let b = rng.range_f64(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    pub fn cases(n: u64) -> Config {
+        Config { cases: n, ..Default::default() }
+    }
+}
+
+/// Run `property` for `config.cases` derived seeds; panic with the failing
+/// case seed on the first failure.
+pub fn prop<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, config: Config, property: F) {
+    for case in 0..config.cases {
+        let case_seed = config.seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            property(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn prop_replay<F: Fn(&mut Rng)>(seed: u64, property: F) {
+    let mut rng = Rng::new(seed);
+    property(&mut rng);
+}
+
+/// Assert two f64 are close: |a - b| <= atol + rtol*|b|.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    if a == b {
+        return; // covers infinities of equal sign
+    }
+    if !(a.is_finite() && b.is_finite()) {
+        panic!("assert_close: {a} vs {b} (non-finite mismatch)");
+    }
+    let tol = atol + rtol * b.abs();
+    if (a - b).abs() > tol {
+        panic!("assert_close: {a} vs {b} differ by {} > {tol}", (a - b).abs());
+    }
+}
+
+/// Assert two bound vectors are equal within the paper's tolerances.
+#[track_caller]
+pub fn assert_bounds_equal(reference: &[f64], candidate: &[f64], what: &str) {
+    assert_eq!(reference.len(), candidate.len(), "{what}: length mismatch");
+    for (i, (&a, &b)) in reference.iter().zip(candidate.iter()).enumerate() {
+        if !crate::numerics::bounds_equal(a, b) {
+            panic!("{what}[{i}]: reference {a} vs candidate {b}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes() {
+        prop("tautology", Config::cases(8), |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn prop_reports_failing_seed() {
+        prop("always fails", Config::cases(2), |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn close_infinities() {
+        assert_close(f64::INFINITY, f64::INFINITY, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_rejects_mixed_inf() {
+        assert_close(f64::INFINITY, 1.0, 1e-9, 1e-9);
+    }
+
+    #[test]
+    fn replay_matches_runner_stream() {
+        // the runner derives case seeds deterministically; replaying the
+        // derived seed must observe the identical random stream
+        let cfg = Config::cases(1);
+        let case_seed = cfg.seed ^ 0u64.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut direct = Rng::new(case_seed);
+        let want = direct.next_u64();
+        prop_replay(case_seed, |rng| {
+            assert_eq!(rng.next_u64(), want);
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Infrastructure substrates built in-tree (the offline registry lacks
+//! rand/serde/clap/criterion — see DESIGN.md section 3).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod fmt;
+pub mod timer;

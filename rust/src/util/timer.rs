@@ -1,0 +1,60 @@
+//! Wall-clock timing helpers used by engines and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Measure best-of / statistics over repeated runs of `f`.
+/// Returns (min, median, mean) in seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    (min, median, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+
+    #[test]
+    fn measure_ordering() {
+        let (min, median, mean) = measure(0, 5, || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        assert!(min <= median);
+        assert!(min > 0.0 && mean > 0.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! End-to-end integration: the benchmark suite through the whole stack —
+//! generator -> MPS roundtrip -> all engines (incl. PJRT artifacts) ->
+//! metrics. A miniature of examples/presolve_pipeline.rs that runs in CI.
+
+use std::rc::Rc;
+
+use gdp::experiments::context::{comparable, run_native};
+use gdp::gen::suite::{generate_suite, SuiteConfig};
+use gdp::metrics::{geomean, SpeedupRecord};
+use gdp::propagation::xla_engine::{XlaConfig, XlaEngine};
+use gdp::propagation::Status;
+use gdp::runtime::Runtime;
+
+#[test]
+fn suite_through_full_stack() {
+    let suite = generate_suite(&SuiteConfig::smoke());
+    let runtime = Rc::new(
+        Runtime::open(std::path::Path::new("artifacts"))
+            .expect("artifacts/ missing - run `make artifacts`"),
+    );
+    let mut xla = XlaEngine::new(runtime, XlaConfig::default());
+    let mut records = Vec::new();
+    let mut agree = 0;
+    for inst in &suite {
+        // MPS roundtrip on the way in
+        let text = gdp::mps::write_mps(inst);
+        let inst = gdp::mps::read_mps_str(&text).expect("mps roundtrip");
+        inst.validate().unwrap();
+
+        let runs = run_native(&inst);
+        if !comparable(&runs.seq, &runs.gpu_model) {
+            continue;
+        }
+        let x = xla.try_propagate(&inst).expect("xla propagation");
+        assert_eq!(x.status, Status::Converged, "{}", inst.name);
+        assert!(x.same_limit_point(&runs.seq), "{} diverged from cpu_seq", inst.name);
+        agree += 1;
+        records.push(SpeedupRecord {
+            instance: inst.name.clone(),
+            size: inst.size_measure(),
+            base_secs: runs.seq.wall.as_secs_f64(),
+            cand_secs: vec![x.wall.as_secs_f64()],
+        });
+    }
+    assert!(agree >= 5, "only {agree} instances agreed");
+    let speedups: Vec<f64> = records.iter().map(|r| r.speedup(0)).collect();
+    let g = geomean(&speedups);
+    // interpret-mode XLA on a CPU won't beat native code; it must still be
+    // within sane bounds (not 10^4 off) and positive
+    assert!(g > 1e-4 && g.is_finite(), "geomean speedup {g}");
+}
+
+#[test]
+fn cli_binary_exists_and_helps() {
+    // `cargo test` builds the bin; smoke its help path through the library
+    // CLI parser instead of spawning a process (no subprocess in CI)
+    let args = gdp::util::cli::Args::parse(vec!["exp".into(), "all".into(), "--smoke".into()]);
+    assert_eq!(args.positional, vec!["exp", "all"]);
+    assert!(args.flag("smoke"));
+}

@@ -1,0 +1,165 @@
+//! Edge cases and failure injection across the stack.
+
+use gdp::instance::{MipInstance, VarType};
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::{Engine, Status};
+use gdp::runtime::manifest::Manifest;
+use gdp::runtime::Runtime;
+use gdp::sparse::Csr;
+
+fn inst_of(
+    m: usize,
+    n: usize,
+    trip: &[(usize, usize, f64)],
+    lhs: Vec<f64>,
+    rhs: Vec<f64>,
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+) -> MipInstance {
+    MipInstance::from_parts(
+        "edge",
+        Csr::from_triplets(m, n, trip).unwrap(),
+        lhs,
+        rhs,
+        lb,
+        ub,
+        vec![VarType::Continuous; n],
+    )
+}
+
+#[test]
+fn empty_matrix_converges_in_one_round() {
+    let inst = inst_of(2, 2, &[], vec![-1.0; 2], vec![1.0; 2], vec![0.0; 2], vec![1.0; 2]);
+    for result in [
+        SeqEngine::new().propagate(&inst),
+        GpuModelEngine::default().propagate(&inst),
+        OmpEngine::with_threads(2).propagate(&inst),
+    ] {
+        assert_eq!(result.status, Status::Converged);
+        assert_eq!(result.bounds.lb, vec![0.0; 2]);
+        assert_eq!(result.bounds.ub, vec![1.0; 2]);
+    }
+}
+
+#[test]
+fn single_variable_fixing() {
+    // 2x = 6 -> x fixed to 3
+    let inst = inst_of(1, 1, &[(0, 0, 2.0)], vec![6.0], vec![6.0], vec![-10.0], vec![10.0]);
+    let r = SeqEngine::new().propagate(&inst);
+    assert_eq!(r.status, Status::Converged);
+    assert_eq!(r.bounds.lb, vec![3.0]);
+    assert_eq!(r.bounds.ub, vec![3.0]);
+}
+
+#[test]
+fn all_free_variables_nothing_to_do() {
+    let inst = inst_of(
+        1,
+        3,
+        &[(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0)],
+        vec![f64::NEG_INFINITY],
+        vec![10.0],
+        vec![f64::NEG_INFINITY; 3],
+        vec![f64::INFINITY; 3],
+    );
+    // three infinite contributions: no residual is finite, no tightening
+    let r = GpuModelEngine::default().propagate(&inst);
+    assert_eq!(r.status, Status::Converged);
+    assert_eq!(r.rounds, 1);
+    assert!(r.bounds.ub.iter().all(|u| u.is_infinite()));
+}
+
+#[test]
+fn one_free_variable_bounded_by_residual() {
+    // x + y <= 10, x in [2,3], y free -> y <= 8
+    let inst = inst_of(
+        1,
+        2,
+        &[(0, 0, 1.0), (0, 1, 1.0)],
+        vec![f64::NEG_INFINITY],
+        vec![10.0],
+        vec![2.0, f64::NEG_INFINITY],
+        vec![3.0, f64::INFINITY],
+    );
+    let r = SeqEngine::new().propagate(&inst);
+    assert_eq!(r.bounds.ub[1], 8.0);
+}
+
+#[test]
+fn near_inf_threshold_values_canonicalized() {
+    let mut inst = inst_of(
+        1,
+        1,
+        &[(0, 0, 1.0)],
+        vec![f64::NEG_INFINITY],
+        vec![1e19], // below threshold: stays finite
+        vec![-1e21], // above: becomes -inf
+        vec![1e21],
+    );
+    inst.canonicalize_infinities();
+    assert_eq!(inst.rhs[0], 1e19);
+    assert_eq!(inst.lb[0], f64::NEG_INFINITY);
+    assert_eq!(inst.ub[0], f64::INFINITY);
+    let r = SeqEngine::new().propagate(&inst);
+    assert_eq!(r.status, Status::Converged);
+    assert_eq!(r.bounds.ub[0], 1e19);
+}
+
+#[test]
+fn zero_rounds_never_happens_min_one_round() {
+    let inst = inst_of(1, 1, &[(0, 0, 1.0)], vec![-1.0], vec![1.0], vec![-1.0], vec![1.0]);
+    let r = SeqEngine::new().propagate(&inst);
+    assert!(r.rounds >= 1);
+    assert_eq!(r.trace.num_rounds(), r.rounds as usize);
+}
+
+#[test]
+fn runtime_open_missing_dir_errors() {
+    let err = Runtime::open(std::path::Path::new("/nonexistent/dir"));
+    assert!(err.is_err());
+}
+
+#[test]
+fn manifest_rejects_truncated_records() {
+    assert!(Manifest::parse("name=x variant=round dtype=f64\n").is_err());
+}
+
+#[test]
+fn engines_agree_on_degenerate_equalities() {
+    // chain of equalities forcing exact fixing: x=1, x+y=3, y+z=5
+    let inst = inst_of(
+        3,
+        3,
+        &[(0, 0, 1.0), (1, 0, 1.0), (1, 1, 1.0), (2, 1, 1.0), (2, 2, 1.0)],
+        vec![1.0, 3.0, 5.0],
+        vec![1.0, 3.0, 5.0],
+        vec![-100.0; 3],
+        vec![100.0; 3],
+    );
+    let seq = SeqEngine::new().propagate(&inst);
+    let gpu = GpuModelEngine::default().propagate(&inst);
+    assert_eq!(seq.status, Status::Converged);
+    for (a, b) in [(1.0, seq.bounds.lb[0]), (2.0, seq.bounds.lb[1]), (3.0, seq.bounds.lb[2])] {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+    assert!(gpu.same_limit_point(&seq));
+}
+
+#[test]
+fn coefficient_magnitude_extremes() {
+    // 1e-8 x + 1e8 y <= 1e8, x in [0, 1e10], y in [0, 1]
+    let inst = inst_of(
+        1,
+        2,
+        &[(0, 0, 1e-8), (0, 1, 1e8)],
+        vec![f64::NEG_INFINITY],
+        vec![1e8],
+        vec![0.0, 0.0],
+        vec![1e10, 1.0],
+    );
+    let seq = SeqEngine::new().propagate(&inst);
+    let gpu = GpuModelEngine::default().propagate(&inst);
+    assert!(gpu.same_limit_point(&seq));
+}

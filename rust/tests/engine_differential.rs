@@ -1,0 +1,102 @@
+//! Native-engine differential matrix: every pair of engines that should
+//! agree, across the generator families, property-style.
+
+use gdp::gen::{self, suite, Family, GenConfig};
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::papilo_like::PapiloLikeEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::{Engine, Status};
+use gdp::testkit::assert_bounds_equal;
+use gdp::util::rng::Rng;
+
+fn agree(name: &str, a: &gdp::propagation::PropResult, b: &gdp::propagation::PropResult) {
+    if a.status == Status::Converged && b.status == Status::Converged {
+        assert_bounds_equal(&a.bounds.lb, &b.bounds.lb, &format!("{name} lb"));
+        assert_bounds_equal(&a.bounds.ub, &b.bounds.ub, &format!("{name} ub"));
+    }
+    if a.status == Status::Infeasible {
+        assert_ne!(b.status, Status::Converged, "{name}: missed infeasibility");
+    }
+}
+
+#[test]
+fn all_native_engines_agree_per_family() {
+    for family in Family::ALL {
+        for seed in 0..6 {
+            let inst = gen::generate(&GenConfig {
+                family,
+                nrows: 60,
+                ncols: 50,
+                seed,
+                ..Default::default()
+            });
+            let seq = SeqEngine::new().propagate(&inst);
+            let gpu = GpuModelEngine::default().propagate(&inst);
+            let omp = OmpEngine::with_threads(4).propagate(&inst);
+            let pap = PapiloLikeEngine::default().propagate(&inst);
+            let tag = format!("{}-{}", family.name(), seed);
+            agree(&format!("{tag} gpu"), &seq, &gpu);
+            agree(&format!("{tag} omp"), &seq, &omp);
+            agree(&format!("{tag} papilo"), &seq, &pap);
+        }
+    }
+}
+
+#[test]
+fn suite_instances_converge_and_agree() {
+    let suite = suite::generate_suite(&suite::SuiteConfig::smoke());
+    let mut converged = 0;
+    for inst in &suite {
+        let seq = SeqEngine::new().propagate(&inst);
+        let gpu = GpuModelEngine::default().propagate(&inst);
+        agree(&inst.name, &seq, &gpu);
+        if seq.status == Status::Converged {
+            converged += 1;
+        }
+    }
+    // the generator anchors sides at a feasible point: the suite must be
+    // overwhelmingly convergent, like the paper's 893/987
+    assert!(converged * 10 >= suite.len() * 8, "{converged}/{}", suite.len());
+}
+
+#[test]
+fn permutation_preserves_limit_point() {
+    let mut rng = Rng::new(77);
+    for _ in 0..10 {
+        let inst = gen::random_instance(&mut rng, 25, 25, 0.5);
+        let base = SeqEngine::new().propagate(&inst);
+        if base.status != Status::Converged {
+            continue;
+        }
+        let seed = rng.next_u64();
+        let perm = gen::permute_instance(&inst, seed);
+        let r = SeqEngine::new().propagate(&perm);
+        assert_eq!(r.status, Status::Converged);
+        // un-permute and compare: the limit point is ordering-independent
+        let mut prng = Rng::new(seed);
+        let _rp = gdp::sparse::permute::Permutation::random(inst.nrows(), &mut prng);
+        let cp = gdp::sparse::permute::Permutation::random(inst.ncols(), &mut prng);
+        let back_lb = cp.inverse().apply(&r.bounds.lb);
+        let back_ub = cp.inverse().apply(&r.bounds.ub);
+        assert_bounds_equal(&base.bounds.lb, &back_lb, "permuted lb");
+        assert_bounds_equal(&base.bounds.ub, &back_ub, "permuted ub");
+    }
+}
+
+#[test]
+fn price_of_parallelism_bounded_by_max_rounds() {
+    // even adversarial cascades stay within the round cap (generator cap)
+    for n in [16usize, 48, 120] {
+        let inst = gen::generate(&GenConfig {
+            family: Family::Cascade,
+            nrows: n,
+            ncols: n,
+            seed: 3,
+            ..Default::default()
+        });
+        let gpu = GpuModelEngine::default().propagate(&inst);
+        assert_eq!(gpu.status, Status::Converged);
+        assert!(gpu.rounds <= 30, "cascade cap violated: {} rounds", gpu.rounds);
+    }
+}

@@ -1,0 +1,144 @@
+//! Cross-language differential tests: golden files produced by the Python
+//! reference stack (python/tests/gen_golden.py) replayed through the Rust
+//! substrates — no Python at test time.
+//!
+//! * packing golden: `BlockedEll::pack` must equal `compile.pack`'s output
+//!   byte for byte (layout contract of the L1 kernel).
+//! * propagation goldens: `GpuModelEngine` (native Algorithm 2) must reach
+//!   the same fixed point, round count and feasibility verdict as the JAX
+//!   reference `loop_fn`.
+
+use gdp::instance::{MipInstance, VarType};
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::{Engine, Status};
+use gdp::sparse::{BlockedEll, Csr};
+use gdp::testkit::assert_bounds_equal;
+
+fn parse_f64(tok: &str) -> f64 {
+    match tok {
+        "inf" => f64::INFINITY,
+        "-inf" => f64::NEG_INFINITY,
+        t => t.parse().unwrap_or_else(|_| panic!("bad f64 {t}")),
+    }
+}
+
+fn field<'a>(lines: &'a [&str], key: &str) -> &'a str {
+    for line in lines {
+        if let Some(rest) = line.strip_prefix(key) {
+            if rest.starts_with(' ') {
+                return rest.trim();
+            }
+        }
+    }
+    panic!("missing field {key}");
+}
+
+fn vecf(s: &str) -> Vec<f64> {
+    s.split_whitespace().map(parse_f64).collect()
+}
+
+fn veci(s: &str) -> Vec<i32> {
+    s.split_whitespace().map(|t| t.parse().unwrap()).collect()
+}
+
+#[test]
+fn packing_matches_python_golden() {
+    let text = std::fs::read_to_string("tests/golden/pack_case.txt")
+        .expect("run `python -m tests.gen_golden` first");
+    let lines: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+    let shape: Vec<usize> =
+        field(&lines, "shape").split_whitespace().map(|t| t.parse().unwrap()).collect();
+    let (s, w) = (shape[0], shape[1]);
+    let want_vals = vecf(field(&lines, "vals"));
+    let want_cols = veci(field(&lines, "cols"));
+    let want_seg_row = veci(field(&lines, "seg_row"));
+
+    // the same system the generator hardcodes
+    let rows: Vec<(Vec<u32>, Vec<f64>)> = vec![
+        ((0..11u32).collect(), (1..=11).map(|x| x as f64).collect()),
+        (vec![2, 5], vec![-1.5, 2.5]),
+        (vec![], vec![]),
+        (vec![0, 3, 7], vec![4.0, -4.0, 0.5]),
+    ];
+    let csr = Csr::from_rows(12, &rows).unwrap();
+    let bell = BlockedEll::pack(&csr, 4, Some(8));
+    assert_eq!(bell.segs, s);
+    assert_eq!(bell.width, w);
+    assert_eq!(bell.vals, want_vals);
+    assert_eq!(bell.cols, want_cols);
+    assert_eq!(bell.seg_row, want_seg_row);
+}
+
+/// Rebuild a MipInstance from a golden case's packed arrays.
+#[allow(clippy::too_many_arguments)]
+fn instance_from_case(
+    vals: &[f64],
+    cols: &[i32],
+    seg_row: &[i32],
+    w: usize,
+    lhs: Vec<f64>,
+    rhs: Vec<f64>,
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    is_int: &[i32],
+) -> MipInstance {
+    let mut triplets = Vec::new();
+    for (si, chunk) in vals.chunks(w).enumerate() {
+        for (t, &v) in chunk.iter().enumerate() {
+            if v != 0.0 {
+                triplets.push((seg_row[si] as usize, cols[si * w + t] as usize, v));
+            }
+        }
+    }
+    let matrix = Csr::from_triplets(lhs.len(), lb.len(), &triplets).unwrap();
+    let vt = is_int
+        .iter()
+        .map(|&i| if i == 1 { VarType::Integer } else { VarType::Continuous })
+        .collect();
+    MipInstance::from_parts("golden", matrix, lhs, rhs, lb, ub, vt)
+}
+
+#[test]
+fn propagation_matches_python_golden() {
+    let text = std::fs::read_to_string("tests/golden/propagation_cases.txt")
+        .expect("run `python -m tests.gen_golden` first");
+    let all: Vec<&str> = text.lines().filter(|l| !l.starts_with('#')).collect();
+    let case_starts: Vec<usize> = all
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.starts_with("case "))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(case_starts.len() >= 20, "expected many golden cases");
+
+    let mut engine = GpuModelEngine::default();
+    for (k, &start) in case_starts.iter().enumerate() {
+        let end = case_starts.get(k + 1).copied().unwrap_or(all.len());
+        let lines = &all[start..end];
+        let shape: Vec<usize> =
+            field(lines, "shape").split_whitespace().map(|t| t.parse().unwrap()).collect();
+        let w = shape[1];
+        let vals = vecf(field(lines, "vals"));
+        let cols = veci(field(lines, "cols"));
+        let seg_row = veci(field(lines, "seg_row"));
+        let lhs = vecf(field(lines, "lhs"));
+        let rhs = vecf(field(lines, "rhs"));
+        let lb = vecf(field(lines, "lb"));
+        let ub = vecf(field(lines, "ub"));
+        let is_int = veci(field(lines, "is_int"));
+        let want_rounds: u32 = field(lines, "out_rounds").parse().unwrap();
+        let want_infeas: i32 = field(lines, "out_infeas").parse().unwrap();
+        let want_lb = vecf(field(lines, "out_lb"));
+        let want_ub = vecf(field(lines, "out_ub"));
+
+        let inst = instance_from_case(&vals, &cols, &seg_row, w, lhs, rhs, lb, ub, &is_int);
+        let r = engine.propagate(&inst);
+        let infeas = (r.status == Status::Infeasible) as i32;
+        assert_eq!(infeas, want_infeas, "case {k}: infeasibility verdict");
+        if want_infeas == 0 {
+            assert_eq!(r.rounds, want_rounds, "case {k}: round count");
+            assert_bounds_equal(&want_lb, &r.bounds.lb, &format!("case {k} lb"));
+            assert_bounds_equal(&want_ub, &r.bounds.ub, &format!("case {k} ub"));
+        }
+    }
+}

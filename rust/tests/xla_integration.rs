@@ -1,0 +1,187 @@
+//! Integration: the full L3->PJRT->artifact path against the native oracle.
+//!
+//! Requires `make artifacts` (artifacts/manifest.txt). These tests compile
+//! the real HLO artifacts on the PJRT CPU client and differentially test
+//! the XlaEngine against SeqEngine / GpuModelEngine.
+
+use std::rc::Rc;
+
+use gdp::gen::{self, GenConfig};
+use gdp::instance::VarType;
+use gdp::propagation::gpu_model::GpuModelEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::xla_engine::{SyncVariant, XlaConfig, XlaEngine};
+use gdp::propagation::{Engine, Status};
+use gdp::runtime::Runtime;
+use gdp::sparse::Csr;
+use gdp::testkit::assert_bounds_equal;
+use gdp::util::rng::Rng;
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::open(std::path::Path::new("artifacts")).expect(
+        "artifacts/ missing - run `make artifacts` before `cargo test`",
+    ))
+}
+
+#[test]
+fn textbook_instance_via_pjrt() {
+    let matrix = Csr::from_triplets(1, 2, &[(0, 0, 2.0), (0, 1, 3.0)]).unwrap();
+    let inst = gdp::instance::MipInstance::from_parts(
+        "texbook",
+        matrix,
+        vec![f64::NEG_INFINITY],
+        vec![12.0],
+        vec![0.0, 0.0],
+        vec![10.0, 10.0],
+        vec![VarType::Continuous; 2],
+    );
+    let mut engine = XlaEngine::new(runtime(), XlaConfig::default());
+    let r = engine.try_propagate(&inst).unwrap();
+    assert_eq!(r.status, Status::Converged);
+    assert_eq!(r.bounds.ub, vec![6.0, 4.0]);
+    assert_eq!(r.bounds.lb, vec![0.0, 0.0]);
+}
+
+#[test]
+fn differential_vs_gpu_model_many_random_instances() {
+    let rt = runtime();
+    let mut engine = XlaEngine::new(rt, XlaConfig::default());
+    let mut oracle = GpuModelEngine::default();
+    let mut rng = Rng::new(0xD1FF);
+    let mut compared = 0;
+    for _ in 0..25 {
+        let inst = gen::random_instance(&mut rng, 40, 40, 0.5);
+        let want = oracle.propagate(&inst);
+        let got = engine.try_propagate(&inst).unwrap();
+        assert_eq!(got.status, want.status, "status mismatch on {}", inst.name);
+        assert_eq!(got.rounds, want.rounds, "rounds mismatch on {}", inst.name);
+        if want.status == Status::Converged {
+            assert_bounds_equal(&want.bounds.lb, &got.bounds.lb, &format!("{} lb", inst.name));
+            assert_bounds_equal(&want.bounds.ub, &got.bounds.ub, &format!("{} ub", inst.name));
+            compared += 1;
+        }
+    }
+    assert!(compared >= 10, "too few converged comparisons: {compared}");
+}
+
+#[test]
+fn same_limit_point_as_sequential() {
+    let rt = runtime();
+    let mut engine = XlaEngine::new(rt, XlaConfig::default());
+    let mut seq = SeqEngine::new();
+    let mut rng = Rng::new(0x5E01);
+    for _ in 0..15 {
+        let inst = gen::random_instance(&mut rng, 30, 30, 0.4);
+        let s = seq.propagate(&inst);
+        let x = engine.try_propagate(&inst).unwrap();
+        if s.status == Status::Converged && x.status == Status::Converged {
+            assert_bounds_equal(&s.bounds.lb, &x.bounds.lb, "lb vs seq");
+            assert_bounds_equal(&s.bounds.ub, &x.bounds.ub, "ub vs seq");
+        }
+    }
+}
+
+#[test]
+fn gpu_loop_and_megakernel_match_cpu_loop() {
+    let rt = runtime();
+    let mut cpu_loop = XlaEngine::new(rt.clone(), XlaConfig::default());
+    let mut gpu_loop =
+        XlaEngine::new(rt.clone(), XlaConfig::default().variant(SyncVariant::GpuLoop));
+    let mut mega =
+        XlaEngine::new(rt, XlaConfig::default().variant(SyncVariant::Megakernel));
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..8 {
+        let inst = gen::random_instance(&mut rng, 25, 25, 0.5);
+        let a = cpu_loop.try_propagate(&inst).unwrap();
+        let b = gpu_loop.try_propagate(&inst).unwrap();
+        let c = mega.try_propagate(&inst).unwrap();
+        assert_eq!(a.status, b.status);
+        assert_eq!(a.status, c.status);
+        if a.status == Status::Converged {
+            assert_bounds_equal(&a.bounds.lb, &b.bounds.lb, "gpu_loop lb");
+            assert_bounds_equal(&a.bounds.lb, &c.bounds.lb, "mega lb");
+            assert_bounds_equal(&a.bounds.ub, &b.bounds.ub, "gpu_loop ub");
+            assert_bounds_equal(&a.bounds.ub, &c.bounds.ub, "mega ub");
+        }
+    }
+}
+
+#[test]
+fn f32_engine_close_to_f64() {
+    let rt = runtime();
+    let mut f64e = XlaEngine::new(rt.clone(), XlaConfig::default());
+    let mut f32e = XlaEngine::new(rt.clone(), XlaConfig::default().f32());
+    let mut fme = XlaEngine::new(rt, XlaConfig::default().fastmath());
+    let mut rng = Rng::new(0xF32);
+    let mut same = 0;
+    let mut total = 0;
+    for _ in 0..12 {
+        let inst = gen::random_instance(&mut rng, 20, 20, 0.3);
+        let a = f64e.try_propagate(&inst).unwrap();
+        let b = f32e.try_propagate(&inst).unwrap();
+        let c = fme.try_propagate(&inst).unwrap();
+        if a.status == Status::Converged {
+            total += 1;
+            // single precision may diverge on some instances (section 4.5);
+            // count agreement instead of requiring it
+            if b.same_limit_point(&a) {
+                same += 1;
+            }
+            let _ = c;
+        }
+    }
+    assert!(total > 0);
+    assert!(same * 2 >= total, "f32 agreed on only {same}/{total}");
+}
+
+#[test]
+fn jnp_ablation_matches_pallas() {
+    let rt = runtime();
+    let mut pallas = XlaEngine::new(rt.clone(), XlaConfig::default());
+    let mut jnp = XlaEngine::new(rt, XlaConfig::default().jnp());
+    let mut rng = Rng::new(0x11);
+    for _ in 0..8 {
+        let inst = gen::random_instance(&mut rng, 25, 25, 0.5);
+        let a = pallas.try_propagate(&inst).unwrap();
+        let b = jnp.try_propagate(&inst).unwrap();
+        assert_eq!(a.status, b.status);
+        assert_eq!(a.rounds, b.rounds);
+        if a.status == Status::Converged {
+            assert_bounds_equal(&a.bounds.lb, &b.bounds.lb, "jnp lb");
+            assert_bounds_equal(&a.bounds.ub, &b.bounds.ub, "jnp ub");
+        }
+    }
+}
+
+#[test]
+fn bucket_escalation_larger_instance() {
+    // an instance too large for b0 must transparently use b1+
+    let inst = gen::generate(&GenConfig { nrows: 500, ncols: 400, seed: 42, ..Default::default() });
+    let rt = runtime();
+    let mut engine = XlaEngine::new(rt, XlaConfig::default());
+    let meta = engine.bucket_for(&inst).unwrap();
+    assert!(meta.rows >= 500);
+    let r = engine.try_propagate(&inst).unwrap();
+    let want = GpuModelEngine::default().propagate(&inst);
+    assert_eq!(r.status, want.status);
+    if want.status == Status::Converged {
+        assert_bounds_equal(&want.bounds.lb, &r.bounds.lb, "lb");
+    }
+}
+
+#[test]
+fn infeasible_instance_detected_via_pjrt() {
+    let matrix = Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+    let inst = gdp::instance::MipInstance::from_parts(
+        "infeas",
+        matrix,
+        vec![f64::NEG_INFINITY],
+        vec![1.0],
+        vec![2.0, 2.0],
+        vec![3.0, 3.0],
+        vec![VarType::Continuous; 2],
+    );
+    let mut engine = XlaEngine::new(runtime(), XlaConfig::default());
+    let r = engine.try_propagate(&inst).unwrap();
+    assert_eq!(r.status, Status::Infeasible);
+}
