@@ -1,18 +1,20 @@
 //! The paper's Outlook scenario (section 5): domain propagation *after
 //! branching*. The system is already at its fixed point; branching
-//! tightens one variable. The sequential engine's marking mechanism makes
-//! the warm re-propagation nearly free — the regime where, as the paper
-//! concludes, "there is not enough work to justify the cost of
-//! parallelization", motivating new GPU-native parent methods.
+//! tightens one variable. With the session API this is the natural flow:
+//! `prepare` once, then re-`propagate` the same session with branched
+//! bounds — the sequential engine's marking mechanism makes the warm
+//! re-propagation nearly free, the regime where, as the paper concludes,
+//! "there is not enough work to justify the cost of parallelization".
 //!
 //! Run with: `cargo run --release --example branching_warmstart`
 
 use gdp::gen::{generate, Family, GenConfig};
-use gdp::propagation::seq::{propagate_seq_warm, SeqEngine};
-use gdp::propagation::{Engine, Status};
+use gdp::instance::Bounds;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine as _, PreparedProblem as _, Status};
 use gdp::util::fmt::secs;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let inst = generate(&GenConfig {
         family: Family::Mixed,
         nrows: 8000,
@@ -21,10 +23,14 @@ fn main() {
         seed: 21,
         ..Default::default()
     });
-    let csc = inst.to_csc();
+
+    // one-time setup (untimed): CSC build, scratch allocation
+    let registry = Registry::with_defaults();
+    let engine = registry.create(&EngineSpec::new("cpu_seq"))?;
+    let mut session = engine.prepare(&inst)?;
 
     // root propagation (presolve use case): whole system
-    let root = SeqEngine::new().propagate(&inst);
+    let root = session.propagate(&Bounds::of(&inst));
     assert_eq!(root.status, Status::Converged);
     println!(
         "root propagation: {} rounds, {} rows processed, {}",
@@ -33,22 +39,18 @@ fn main() {
         secs(root.wall.as_secs_f64())
     );
 
-    // branch on the first variable with a wide finite domain
-    let v = (0..inst.ncols())
-        .find(|&j| {
-            let (l, u) = (root.bounds.lb[j], root.bounds.ub[j]);
-            l.is_finite() && u.is_finite() && u - l > 1.0
-        })
+    // branch on the first variable with a wide finite domain (the same
+    // rule the warm-start differential tests use)
+    let (v, branched) = gdp::testkit::branch_first_wide_var(&root.bounds, 1.0)
         .expect("a branchable variable");
-    let mut branched = root.bounds.clone();
-    branched.ub[v] = (branched.lb[v] + branched.ub[v]) / 2.0;
     println!(
         "branching: x{} <= {} (was {})",
         v, branched.ub[v], root.bounds.ub[v]
     );
 
-    // warm re-propagation: only constraints containing x{v} marked
-    let warm = propagate_seq_warm(&inst, &csc, Some(&branched), Some(&[v]), 100, true);
+    // warm re-propagation of the SAME session: only constraints containing
+    // the branched variable start marked
+    let warm = session.propagate_warm(&branched, &[v]);
     let warm_rows: usize = warm.trace.rounds.iter().map(|r| r.rows_processed).sum();
     println!(
         "warm propagation: {} rounds, {} rows processed, {}",
@@ -61,7 +63,7 @@ fn main() {
     let mut cold_inst = inst.clone();
     cold_inst.lb = branched.lb.clone();
     cold_inst.ub = branched.ub.clone();
-    let cold = SeqEngine::new().propagate(&cold_inst);
+    let cold = engine.propagate(&cold_inst);
     let cold_rows: usize = cold.trace.rounds.iter().map(|r| r.rows_processed).sum();
     println!(
         "cold propagation: {} rounds, {} rows processed, {}",
@@ -78,4 +80,5 @@ fn main() {
          pay off, and why it argues for GPU-native parent methods.",
         100.0 * warm_rows as f64 / cold_rows.max(1) as f64
     );
+    Ok(())
 }

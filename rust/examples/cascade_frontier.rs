@@ -2,21 +2,19 @@
 //! a cascading chain x_0 <= 1, x_i <= x_{i-1} is resolved by the
 //! sequential engine in one pass, while every round-synchronous engine
 //! (native model and the XLA artifact alike) pays one round per link.
+//! All three engines come from the registry.
 //!
 //! Run with: `cargo run --release --example cascade_frontier`
 
-use std::rc::Rc;
-
 use gdp::gen::{generate, Family, GenConfig};
-use gdp::propagation::gpu_model::GpuModelEngine;
-use gdp::propagation::seq::SeqEngine;
-use gdp::propagation::xla_engine::{XlaConfig, XlaEngine};
-use gdp::propagation::Engine;
-use gdp::runtime::Runtime;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::Engine as _;
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Rc::new(Runtime::open_default()?);
-    let mut xla = XlaEngine::new(runtime, XlaConfig::default());
+    let registry = Registry::with_defaults();
+    let seq = registry.create(&EngineSpec::new("cpu_seq"))?;
+    let gpu_model = registry.create(&EngineSpec::new("gpu_model"))?;
+    let xla = registry.create(&EngineSpec::new("gpu_atomic"))?;
     println!("{:>6} {:>10} {:>10} {:>10}", "cols", "seq", "gpu_model", "xla");
     for &n in &[8usize, 16, 32, 48] {
         let inst = generate(&GenConfig {
@@ -26,16 +24,16 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             ..Default::default()
         });
-        let seq = SeqEngine::new().propagate(&inst);
-        let gpu = GpuModelEngine::default().propagate(&inst);
+        let s = seq.propagate(&inst);
+        let g = gpu_model.propagate(&inst);
         let x = xla.try_propagate(&inst)?;
         println!(
             "{:>6} {:>8}rd {:>8}rd {:>8}rd",
-            n, seq.rounds, gpu.rounds, x.rounds
+            n, s.rounds, g.rounds, x.rounds
         );
-        assert!(gpu.same_limit_point(&seq));
-        assert!(x.same_limit_point(&seq));
-        assert!(gpu.rounds >= seq.rounds);
+        assert!(g.same_limit_point(&s));
+        assert!(x.same_limit_point(&s));
+        assert!(g.rounds >= s.rounds);
     }
     println!("\nsequential marking collapses the cascade; round-synchronous");
     println!("propagation pays ~1 round per chain link (paper section 2.2).");

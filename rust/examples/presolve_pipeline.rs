@@ -3,25 +3,20 @@
 //!
 //! Generates the benchmark suite, writes/reads every instance through the
 //! MPS layer (exercising the full I/O path), propagates each instance with
-//! all engines (cpu_seq, cpu_omp, gpu_model, papilo_like and the
+//! all registry engines (cpu_seq, cpu_omp, gpu_model, papilo_like and the
 //! AOT-compiled gpu_atomic via PJRT), verifies limit-point agreement, and
 //! reports the headline metric: geometric-mean speedups per size class,
 //! measured and devsim-modeled.
 //!
 //! Run with: `cargo run --release --example presolve_pipeline -- --scale 0.2`
 
-use std::rc::Rc;
-
 use gdp::devsim::device::{P400, V100, XEON};
 use gdp::devsim::ExecutionKind;
 use gdp::experiments::context::{comparable, modeled, run_native};
 use gdp::gen::suite::{generate_suite, set_of, SuiteConfig};
 use gdp::metrics::{per_set_geomeans, SpeedupRecord};
-use gdp::propagation::omp::OmpEngine;
-use gdp::propagation::papilo_like::PapiloLikeEngine;
-use gdp::propagation::xla_engine::{XlaConfig, XlaEngine};
-use gdp::propagation::{Engine, Status};
-use gdp::runtime::Runtime;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine as _, Status};
 use gdp::util::cli::Args;
 use gdp::util::fmt::{ratio, secs, Table};
 use gdp::util::timer::Timer;
@@ -49,9 +44,12 @@ fn main() -> anyhow::Result<()> {
     }
     println!("mps roundtrip: ok ({} files)", instances.len());
 
-    // 3. propagate with every engine; verify agreement
-    let runtime = Rc::new(Runtime::open_default()?);
-    let mut xla = XlaEngine::new(runtime, XlaConfig::default());
+    // 3. propagate with every engine (one registry, shared runtime);
+    // verify agreement
+    let registry = Registry::with_defaults();
+    let xla = registry.create(&EngineSpec::new("gpu_atomic"))?;
+    let omp = registry.create(&EngineSpec::new("cpu_omp").threads(8))?;
+    let papilo = registry.create(&EngineSpec::new("papilo_like"))?;
     let mut records: Vec<SpeedupRecord> = Vec::new();
     let mut agree = 0usize;
     let mut skipped = 0usize;
@@ -67,8 +65,8 @@ fn main() -> anyhow::Result<()> {
             continue;
         }
         let x = xla.try_propagate(inst)?;
-        let o = OmpEngine::with_threads(8).propagate(inst);
-        let p = PapiloLikeEngine::default().propagate(inst);
+        let o = omp.propagate(inst);
+        let p = papilo.propagate(inst);
         if !x.same_limit_point(&runs.seq) || !p.same_limit_point(&runs.seq) {
             skipped += 1;
             continue;

@@ -1,0 +1,37 @@
+//! Quick timing probe: XLA engine wall time per round across bucket sizes.
+//! Sessions are prepared once per (engine, instance) pair; only the hot
+//! path is timed, and the second `propagate` call on the same session
+//! shows the warm-session cost (no re-pack, no re-upload of statics).
+use gdp::experiments::context::run_native;
+use gdp::gen::{generate, Family, GenConfig};
+use gdp::instance::Bounds;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine as _, PreparedProblem as _};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::with_defaults();
+    let pallas = registry.create(&EngineSpec::new("gpu_atomic"))?;
+    let jnp = registry.create(&EngineSpec::new("gpu_atomic").jnp())?;
+    let gpu_loop = registry.create(&EngineSpec::new("gpu_loop"))?;
+    for &(rows, cols) in &[(500usize, 500usize), (3000, 3000), (12000, 12000), (50000, 45000)] {
+        let inst = generate(&GenConfig { family: Family::Mixed, nrows: rows, ncols: cols, mean_row_nnz: 8, seed: 5, ..Default::default() });
+        let n = run_native(&inst);
+        let start = Bounds::of(&inst);
+        // prepare once (setup untimed), then time the hot path twice
+        let mut s = pallas.prepare(&inst)?;
+        let r = s.propagate(&start);
+        let r2 = s.propagate(&start);
+        let rj = jnp.try_propagate(&inst)?;
+        let rg = gpu_loop.try_propagate(&inst)?;
+        println!("{}x{} nnz={} rounds={} pallas={:.2}ms/round warm2={:.2}ms/round jnp={:.2}ms/round seq={:.2}ms total speedup_pallas={:.3} speedup_jnp={:.3} gpu_loop_total={:.1}ms",
+            rows, cols, inst.nnz(), r.rounds,
+            r.wall.as_secs_f64()*1e3 / r.rounds.max(1) as f64,
+            r2.wall.as_secs_f64()*1e3 / r2.rounds.max(1) as f64,
+            rj.wall.as_secs_f64()*1e3 / rj.rounds.max(1) as f64,
+            n.seq.wall.as_secs_f64()*1e3,
+            n.seq.wall.as_secs_f64() / r.wall.as_secs_f64(),
+            n.seq.wall.as_secs_f64() / rj.wall.as_secs_f64(),
+            rg.wall.as_secs_f64()*1e3);
+    }
+    Ok(())
+}

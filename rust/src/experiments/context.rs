@@ -1,18 +1,17 @@
-//! Shared experiment context: the instance suite, the PJRT runtime, and
-//! measured/modeled execution helpers reused by every experiment.
+//! Shared experiment context: the instance suite, the engine registry with
+//! its shared PJRT runtime, and measured/modeled execution helpers reused
+//! by every experiment.
 
 use std::rc::Rc;
 
-use anyhow::{Context as _, Result};
+use anyhow::Result;
 
 use crate::devsim::{self, ExecutionKind};
 use crate::gen::suite::{generate_suite, SuiteConfig};
-use crate::instance::MipInstance;
-use crate::propagation::gpu_model::GpuModelEngine;
-use crate::propagation::omp::OmpEngine;
-use crate::propagation::seq::SeqEngine;
+use crate::instance::{Bounds, MipInstance};
+use crate::propagation::registry::{EngineSpec, Registry};
 use crate::propagation::xla_engine::{XlaConfig, XlaEngine};
-use crate::propagation::{Engine, PropResult, Status};
+use crate::propagation::{Engine, PreparedProblem as _, PropResult, Status};
 use crate::runtime::Runtime;
 use crate::sparse::stats::MatrixStats;
 use crate::util::cli::Args;
@@ -21,8 +20,10 @@ pub struct ExpContext {
     pub suite: Vec<MipInstance>,
     pub outdir: std::path::PathBuf,
     pub threads: usize,
-    runtime: std::cell::RefCell<Option<Rc<Runtime>>>,
-    artifact_dir: std::path::PathBuf,
+    /// Engine registry; owns the lazily-opened shared PJRT runtime, so
+    /// every XLA variant an experiment asks for reuses one client and one
+    /// executable cache.
+    pub registry: Registry,
 }
 
 impl ExpContext {
@@ -51,8 +52,12 @@ impl ExpContext {
                 "threads",
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             ),
-            runtime: std::cell::RefCell::new(None),
-            artifact_dir: std::path::PathBuf::from(args.get_or("artifacts", "artifacts")),
+            registry: match args.get("artifacts") {
+                // --artifacts overrides; otherwise GDP_ARTIFACTS / "artifacts",
+                // same resolution as `gdp propagate`
+                Some(dir) => Registry::with_defaults().with_artifact_dir(dir),
+                None => Registry::with_defaults(),
+            },
         })
     }
 
@@ -62,23 +67,22 @@ impl ExpContext {
             suite,
             outdir: std::path::PathBuf::from("results"),
             threads: 4,
-            runtime: std::cell::RefCell::new(None),
-            artifact_dir: std::path::PathBuf::from("artifacts"),
+            registry: Registry::with_defaults(),
         }
     }
 
-    /// Lazily opened PJRT runtime (artifacts must be built).
+    /// The shared PJRT runtime (artifacts must be built).
     pub fn runtime(&self) -> Result<Rc<Runtime>> {
-        let mut slot = self.runtime.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(Rc::new(
-                Runtime::open(&self.artifact_dir)
-                    .context("opening artifacts (run `make artifacts`)")?,
-            ));
-        }
-        Ok(slot.as_ref().unwrap().clone())
+        self.registry.runtime()
     }
 
+    /// An engine by registry spec.
+    pub fn engine(&self, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+        self.registry.create(spec)
+    }
+
+    /// An XLA engine with an explicit config (ablation variants), sharing
+    /// the registry's runtime.
     pub fn xla_engine(&self, config: XlaConfig) -> Result<XlaEngine> {
         Ok(XlaEngine::new(self.runtime()?, config))
     }
@@ -97,8 +101,8 @@ pub struct InstanceRuns {
 /// trace recorder). The XLA engines are measured by the experiments that
 /// need them.
 pub fn run_native(inst: &MipInstance) -> InstanceRuns {
-    let seq = SeqEngine::new().propagate(inst);
-    let gpu_model = GpuModelEngine::default().propagate(inst);
+    let seq = crate::propagation::seq::SeqEngine::new().propagate(inst);
+    let gpu_model = crate::propagation::gpu_model::GpuModelEngine::default().propagate(inst);
     InstanceRuns {
         name: inst.name.clone(),
         size: inst.size_measure(),
@@ -124,15 +128,21 @@ pub fn modeled(runs: &InstanceRuns, spec: &devsim::DeviceSpec, kind: ExecutionKi
     devsim::estimate_time(spec, kind, trace, &runs.stats)
 }
 
-/// Measured seconds of an engine run (the engine's own internal timer,
-/// which excludes one-time setup per the paper's protocol). Repeats tiny
-/// runs and takes the minimum to push down scheduler noise.
-pub fn measured<E: Engine>(engine: &mut E, inst: &MipInstance) -> (PropResult, f64) {
-    let first = engine.propagate(inst);
+/// Measured seconds of an engine run. `prepare` (one-time setup) happens
+/// outside the timed region; the session's own internal timer covers only
+/// the hot path, per the paper's protocol (section 4.3). Tiny runs are
+/// re-propagated on the *same* prepared session and the minimum taken, to
+/// push down scheduler noise.
+pub fn measured(engine: &dyn Engine, inst: &MipInstance) -> (PropResult, f64) {
+    let mut session = engine.prepare(inst).unwrap_or_else(|e| {
+        panic!("{}: prepare failed during measurement: {e:#}", engine.name())
+    });
+    let start = Bounds::of(inst);
+    let first = session.propagate(&start);
     let mut best = first.wall.as_secs_f64();
     if best < 0.01 {
         for _ in 0..2 {
-            let r = engine.propagate(inst);
+            let r = session.propagate(&start);
             best = best.min(r.wall.as_secs_f64());
         }
     }
@@ -141,8 +151,8 @@ pub fn measured<E: Engine>(engine: &mut E, inst: &MipInstance) -> (PropResult, f
 
 /// Measured seconds for the OMP engine with explicit thread count.
 pub fn measured_omp(inst: &MipInstance, threads: usize) -> (PropResult, f64) {
-    let mut e = OmpEngine::with_threads(threads);
-    measured(&mut e, inst)
+    let e = crate::propagation::omp::OmpEngine::with_threads(threads);
+    measured(&e, inst)
 }
 
 #[cfg(test)]
@@ -176,5 +186,15 @@ mod tests {
         );
         let ctx = ExpContext::from_args(&args).unwrap();
         assert_eq!(ctx.suite.len(), 3); // smoke set-1 count
+    }
+
+    #[test]
+    fn measured_reuses_one_session() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 30, ncols: 30, seed: 2, ..Default::default() });
+        let engine = crate::propagation::seq::SeqEngine::new();
+        let (r, secs) = measured(&engine, &inst);
+        assert!(secs >= 0.0);
+        assert!(r.rounds >= 1);
     }
 }

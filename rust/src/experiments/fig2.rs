@@ -14,13 +14,13 @@ use crate::devsim::device::{P400, TITAN, V100, XEON};
 use crate::devsim::ExecutionKind;
 use crate::metrics::{per_set_geomeans, SpeedupRecord};
 use crate::propagation::xla_engine::XlaConfig;
-use crate::propagation::Status;
+use crate::propagation::{Engine as _, Status};
 use crate::util::fmt::{ratio, Table};
 
 pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut out = ExpOutput::new("fig2");
-    let mut f32e = ctx.xla_engine(XlaConfig::default().f32())?;
-    let mut fme = ctx.xla_engine(XlaConfig::default().fastmath())?;
+    let f32e = ctx.xla_engine(XlaConfig::default().f32())?;
+    let fme = ctx.xla_engine(XlaConfig::default().fastmath())?;
 
     let mut modeled: Vec<SpeedupRecord> = Vec::new();
     let mut measured: Vec<SpeedupRecord> = Vec::new();

@@ -8,7 +8,7 @@ use anyhow::Result;
 use super::context::{comparable, measured, measured_omp, run_native, ExpContext};
 use super::ExpOutput;
 use crate::metrics::{per_set_geomeans, SpeedupRecord};
-use crate::propagation::papilo_like::PapiloLikeEngine;
+use crate::propagation::registry::EngineSpec;
 use crate::util::fmt::{ratio, Table};
 
 pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
@@ -16,16 +16,18 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut records: Vec<SpeedupRecord> = Vec::new();
     let mut agree = 0usize;
     let mut disagree = 0usize;
+    // engines are constructed once through the registry and reused; all
+    // per-instance state lives in the prepared sessions `measured` makes
+    let pap1 = ctx.engine(&EngineSpec::new("papilo_like").threads(1))?;
+    let pap8 = ctx.engine(&EngineSpec::new("papilo_like").threads(8))?;
 
     for inst in &ctx.suite {
         let runs = run_native(inst);
         if runs.seq.status != crate::propagation::Status::Converged {
             continue;
         }
-        let mut pap1 = PapiloLikeEngine::with_threads(1);
-        let mut pap8 = PapiloLikeEngine::with_threads(8);
-        let (r1, t1) = measured(&mut pap1, inst);
-        let (_r8, t8) = measured(&mut pap8, inst);
+        let (r1, t1) = measured(pap1.as_ref(), inst);
+        let (_r8, t8) = measured(pap8.as_ref(), inst);
         let (_ro, to) = measured_omp(inst, 8);
         if comparable(&runs.seq, &r1) {
             agree += 1;

@@ -11,13 +11,14 @@ use super::ExpOutput;
 use crate::gen::permute_instance;
 use crate::metrics::{per_set_geomeans, SpeedupRecord};
 use crate::propagation::xla_engine::XlaConfig;
+use crate::propagation::Engine as _;
 use crate::util::fmt::{ratio, Table};
 
 pub const NUM_SEEDS: usize = 5; // seed0 = original + 4 permutations
 
 pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut out = ExpOutput::new("fig5");
-    let mut engine = ctx.xla_engine(XlaConfig::default())?;
+    let engine = ctx.xla_engine(XlaConfig::default())?;
     let mut records: Vec<SpeedupRecord> = Vec::new();
 
     for inst in &ctx.suite {

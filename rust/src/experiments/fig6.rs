@@ -12,13 +12,14 @@ use crate::devsim::device::{RTXSUPER, XEON};
 use crate::devsim::ExecutionKind;
 use crate::metrics::{geomean, per_set_geomeans, SpeedupRecord};
 use crate::propagation::xla_engine::{SyncVariant, XlaConfig};
+use crate::propagation::Engine as _;
 use crate::util::fmt::{ratio, Table};
 
 pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut out = ExpOutput::new("fig6");
-    let mut cpu_loop = ctx.xla_engine(XlaConfig::default())?;
-    let mut gpu_loop = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::GpuLoop))?;
-    let mut mega = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::Megakernel))?;
+    let cpu_loop = ctx.xla_engine(XlaConfig::default())?;
+    let gpu_loop = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::GpuLoop))?;
+    let mega = ctx.xla_engine(XlaConfig::default().variant(SyncVariant::Megakernel))?;
 
     let mut measured: Vec<SpeedupRecord> = Vec::new();
     let mut modeled: Vec<SpeedupRecord> = Vec::new();

@@ -17,6 +17,7 @@ use crate::devsim::device::{AMDTR, I7_9700K, P400, RTXSUPER, TITAN, V100, XEON};
 use crate::devsim::ExecutionKind;
 use crate::metrics::{ascending_curve, per_set_geomeans, percentile_speedups, SpeedupRecord};
 use crate::propagation::xla_engine::XlaConfig;
+use crate::propagation::Engine as _;
 use crate::util::fmt::{ratio, Table};
 
 pub const MODELED_COMBOS: [(&str, &crate::devsim::DeviceSpec, ExecutionKind); 7] = [
@@ -34,7 +35,7 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     let mut modeled_records: Vec<SpeedupRecord> = Vec::new();
     let mut measured_records: Vec<SpeedupRecord> = Vec::new();
     let mut excluded = 0usize;
-    let mut xla = ctx.xla_engine(XlaConfig::default())?;
+    let xla = ctx.xla_engine(XlaConfig::default())?;
 
     for inst in &ctx.suite {
         let runs = run_native(inst);

@@ -12,14 +12,23 @@
 //!   [`runtime`] module loads and executes via PJRT. Python never runs at
 //!   propagation time.
 //!
-//! Quickstart:
+//! Quickstart (two-phase session API — prepare once, propagate many):
 //! ```no_run
-//! use gdp::propagation::{seq::SeqEngine, Engine};
+//! use gdp::instance::Bounds;
+//! use gdp::propagation::registry::{EngineSpec, Registry};
+//! use gdp::propagation::{Engine as _, PreparedProblem as _};
 //!
 //! let inst = gdp::mps::read_mps_file(std::path::Path::new("model.mps")).unwrap();
-//! let mut engine = SeqEngine::default();
-//! let result = engine.propagate(&inst);
+//! let registry = Registry::with_defaults();
+//! let engine = registry.create(&EngineSpec::new("cpu_seq")).unwrap();
+//! let mut session = engine.prepare(&inst).unwrap();       // one-time setup
+//! let result = session.propagate(&Bounds::of(&inst));     // timed hot path
 //! println!("rounds: {} status: {:?}", result.rounds, result.status);
+//! // branch x0 <= 1 and warm re-propagate the SAME session
+//! let mut branched = result.bounds.clone();
+//! branched.ub[0] = branched.ub[0].min(1.0);
+//! let warm = session.propagate_warm(&branched, &[0]);
+//! println!("warm rounds: {}", warm.rounds);
 //! ```
 
 pub mod util;

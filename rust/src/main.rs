@@ -1,8 +1,10 @@
 //! `gdp` — GPU-parallel domain propagation coordinator CLI.
 //!
 //! Subcommands:
-//!   propagate --mps FILE [--engine NAME] [--threads N]
-//!       Run one instance through an engine and print the result.
+//!   propagate --mps FILE [--engine NAME] [engine options]
+//!       Run one instance through a registered engine and print the result.
+//!   engines
+//!       List the registered engines (names + one-line summaries).
 //!   generate  --family F --rows M --cols N [--seed S] --out FILE
 //!       Emit a synthetic instance as an MPS file.
 //!   suite     [--scale X] [--seed S] [--out DIR]
@@ -12,19 +14,17 @@
 //!       fig3, fig4, fig5, fig6).
 //!   inspect   --mps FILE
 //!       Print instance statistics.
+//!
+//! Engine names and the `--engine` help list both come from the registry
+//! (`gdp::propagation::registry`), so they cannot drift apart.
 
 use std::process::ExitCode;
 
 use gdp::experiments;
 use gdp::gen::{self, Family, GenConfig};
-use gdp::instance::MipInstance;
-use gdp::propagation::gpu_model::GpuModelEngine;
-use gdp::propagation::omp::OmpEngine;
-use gdp::propagation::papilo_like::PapiloLikeEngine;
-use gdp::propagation::seq::SeqEngine;
-use gdp::propagation::xla_engine::{SyncVariant, XlaConfig, XlaEngine};
-use gdp::propagation::{Engine, PropResult};
-use gdp::runtime::Runtime;
+use gdp::instance::{Bounds, MipInstance};
+use gdp::propagation::registry::{default_artifact_dir, EngineSpec, Registry};
+use gdp::propagation::{Engine as _, PreparedProblem as _, PropResult};
 use gdp::sparse::stats::MatrixStats;
 use gdp::util::cli::Args;
 use gdp::util::fmt;
@@ -34,16 +34,17 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "propagate" => cmd_propagate(&args),
+        "engines" => cmd_engines(),
         "generate" => cmd_generate(&args),
         "suite" => cmd_suite(&args),
         "exp" => cmd_exp(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
-            print!("{}", HELP);
+            print!("{}", help_text());
             Ok(true)
         }
         other => {
-            eprintln!("unknown command {other}\n{HELP}");
+            eprintln!("unknown command {other}\n{}", help_text());
             Ok(false)
         }
     };
@@ -57,16 +58,30 @@ fn main() -> ExitCode {
     }
 }
 
-const HELP: &str = "\
+/// HELP text with the `--engine` list generated from the registry, so the
+/// accepted names and the documented names are the same list by
+/// construction.
+fn help_text() -> String {
+    let engines = Registry::with_defaults().engine_list();
+    format!(
+        "\
 gdp - GPU-parallel domain propagation (paper reproduction)
 
 USAGE:
-  gdp propagate --mps FILE [--engine cpu_seq|cpu_omp|gpu_model|gpu_atomic|gpu_loop|megakernel|papilo_like]
-  gdp generate --family mixed|knapsack|setcover|cascade|denseconn --rows M --cols N --out FILE
+  gdp propagate --mps FILE [--engine {engines}]
+                [--threads N] [--f32] [--fastmath] [--jnp] [--max-rounds R]
+                [--warm-var J] [--artifacts DIR] [--bounds]
+  gdp engines
+  gdp generate --family mixed|knapsack|setcover|cascade|denseconn --rows M --cols N
+               [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S] --out FILE
   gdp suite [--scale X] [--seed S] --out DIR
-  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|all> [--scale X] [--smoke] [--out DIR] [--check]
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|all>
+          [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
+          [--artifacts DIR] [--out DIR] [--check]
   gdp inspect --mps FILE
-";
+"
+    )
+}
 
 fn load_instance(args: &Args) -> anyhow::Result<MipInstance> {
     let path = args
@@ -106,31 +121,65 @@ fn print_result(name: &str, inst: &MipInstance, r: &PropResult) {
 
 fn cmd_propagate(args: &Args) -> anyhow::Result<bool> {
     let inst = load_instance(args)?;
-    let engine_name = args.get_or("engine", "cpu_seq");
-    let r = match engine_name {
-        "cpu_seq" => SeqEngine::new().propagate(&inst),
-        "cpu_omp" => OmpEngine::with_threads(args.get_usize("threads", 8)).propagate(&inst),
-        "gpu_model" => GpuModelEngine::default().propagate(&inst),
-        "papilo_like" => {
-            PapiloLikeEngine::with_threads(args.get_usize("threads", 1)).propagate(&inst)
+    let registry = Registry::with_defaults()
+        .with_artifact_dir(args.get_or("artifacts", &default_artifact_dir().to_string_lossy()));
+    let spec = EngineSpec::from_args(args);
+    let engine = registry.create(&spec)?;
+
+    // session API: one-time prepare (untimed), then the timed hot path
+    let mut session = engine.prepare(&inst)?;
+    let r = session.propagate(&Bounds::of(&inst));
+    print_result(&spec.name, &inst, &r);
+
+    // optional demo of warm re-propagation: halve the domain of --warm-var
+    // and re-run the session (the branch-and-bound shape)
+    let mut display_bounds = r.bounds.clone();
+    if let Some(v) = args.get("warm-var") {
+        let v: usize = v.parse().map_err(|_| anyhow::anyhow!("--warm-var expects an index"))?;
+        if v >= inst.ncols() {
+            anyhow::bail!("--warm-var {v} out of range (instance has {} columns)", inst.ncols());
         }
-        "gpu_atomic" | "gpu_loop" | "megakernel" => {
-            let rt = std::rc::Rc::new(Runtime::open_default()?);
-            let config = match engine_name {
-                "gpu_atomic" => XlaConfig::default(),
-                "gpu_loop" => XlaConfig::default().variant(SyncVariant::GpuLoop),
-                _ => XlaConfig::default().variant(SyncVariant::Megakernel),
-            };
-            let config = if args.flag("f32") { config.f32() } else { config };
-            XlaEngine::new(rt, config).try_propagate(&inst)?
+        let mut branched = r.bounds.clone();
+        if !(branched.lb[v].is_finite() && branched.ub[v].is_finite()) {
+            anyhow::bail!(
+                "--warm-var {v}: cannot branch on a variable with an infinite domain \
+                 [{}, {}]",
+                branched.lb[v],
+                branched.ub[v]
+            );
         }
-        other => anyhow::bail!("unknown engine {other}"),
-    };
-    print_result(engine_name, &inst, &r);
+        branched.ub[v] = (branched.lb[v] + branched.ub[v]) / 2.0;
+        let warm = session.propagate_warm(&branched, &[v]);
+        println!(
+            "warm re-propagation after branching x{v} (ub -> {}): status={:?} rounds={} wall={} rows={}",
+            branched.ub[v],
+            warm.status,
+            warm.rounds,
+            fmt::secs(warm.wall.as_secs_f64()),
+            warm.trace.rounds.iter().map(|t| t.rows_processed).sum::<usize>()
+        );
+        // --bounds after a warm run shows the warm result, not the root
+        display_bounds = warm.bounds;
+    }
+
     if args.flag("bounds") {
         for j in 0..inst.ncols() {
-            println!("  {}: [{}, {}]", inst.col_names[j], r.bounds.lb[j], r.bounds.ub[j]);
+            println!("  {}: [{}, {}]", inst.col_names[j], display_bounds.lb[j], display_bounds.ub[j]);
         }
+    }
+    Ok(true)
+}
+
+fn cmd_engines() -> anyhow::Result<bool> {
+    let registry = Registry::with_defaults();
+    println!("registered engines (artifacts {}):", registry.artifact_dir().display());
+    for entry in registry.entries() {
+        println!(
+            "  {:12} {}{}",
+            entry.name,
+            entry.summary,
+            if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
+        );
     }
     Ok(true)
 }

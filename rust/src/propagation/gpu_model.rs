@@ -16,7 +16,7 @@
 use super::activity::RowActivity;
 use super::bounds::candidates;
 use super::trace::{RoundTrace, Trace};
-use super::{Engine, PropResult, Status};
+use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance, VarType};
 use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
 use crate::util::timer::Timer;
@@ -38,17 +38,50 @@ impl Engine for GpuModelEngine {
         "gpu_model"
     }
 
-    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
+    fn prepare<'a>(
+        &self,
+        inst: &'a MipInstance,
+    ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
+        // one-time init (untimed): the round-synchronous double buffers and
+        // the per-row activity scratch, sized to the instance once and
+        // reused across repeated propagations
+        let m = inst.nrows();
+        let n = inst.ncols();
+        Ok(Box::new(GpuModelPrepared {
+            inst,
+            max_rounds: self.max_rounds,
+            record_conflicts: self.record_conflicts,
+            best_lb: vec![f64::NEG_INFINITY; n],
+            best_ub: vec![f64::INFINITY; n],
+            col_hits: vec![0u32; n],
+            acts: vec![RowActivity::default(); m],
+        }))
+    }
+}
+
+/// A prepared round-synchronous session: instance + reusable scratch.
+pub struct GpuModelPrepared<'a> {
+    inst: &'a MipInstance,
+    pub max_rounds: u32,
+    pub record_conflicts: bool,
+    best_lb: Vec<f64>,
+    best_ub: Vec<f64>,
+    col_hits: Vec<u32>,
+    acts: Vec<RowActivity>,
+}
+
+impl PreparedProblem for GpuModelPrepared<'_> {
+    fn engine_name(&self) -> &'static str {
+        "gpu_model"
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        let inst = self.inst;
         let timer = Timer::start();
         let m = inst.nrows();
         let n = inst.ncols();
-        let mut lb = inst.lb.clone();
-        let mut ub = inst.ub.clone();
-        // round-synchronous double buffers
-        let mut best_lb = vec![f64::NEG_INFINITY; n];
-        let mut best_ub = vec![f64::INFINITY; n];
-        let mut col_hits = vec![0u32; n];
-        let mut acts: Vec<RowActivity> = vec![RowActivity::default(); m];
+        let mut lb = start.lb.clone();
+        let mut ub = start.ub.clone();
         let mut trace = Trace::default();
         let mut rounds = 0u32;
         let mut status = Status::MaxRounds;
@@ -60,20 +93,20 @@ impl Engine for GpuModelEngine {
             // phase 1 (Alg. 2 lines 3-4): activities for ALL constraints
             for r in 0..m {
                 let (cols, vals) = inst.matrix.row(r);
-                acts[r] = RowActivity::of_row(cols, vals, &lb, &ub);
+                self.acts[r] = RowActivity::of_row(cols, vals, &lb, &ub);
                 rt.nnz_processed += cols.len();
             }
 
             // phase 2 (lines 5-13): candidates for ALL nonzeros, reduced
             // per column against the incoming bounds
-            for x in best_lb.iter_mut() {
+            for x in self.best_lb.iter_mut() {
                 *x = f64::NEG_INFINITY;
             }
-            for x in best_ub.iter_mut() {
+            for x in self.best_ub.iter_mut() {
                 *x = f64::INFINITY;
             }
             if self.record_conflicts {
-                for h in col_hits.iter_mut() {
+                for h in self.col_hits.iter_mut() {
                     *h = 0;
                 }
             }
@@ -88,7 +121,7 @@ impl Engine for GpuModelEngine {
                         lb[j],
                         ub[j],
                         inst.var_types[j] == VarType::Integer,
-                        &acts[r],
+                        &self.acts[r],
                         lhs,
                         rhs,
                     );
@@ -97,19 +130,19 @@ impl Engine for GpuModelEngine {
                     if improves_lb(lb[j], cand.lb) {
                         rt.atomic_updates += 1;
                         hit = true;
-                        if cand.lb > best_lb[j] {
-                            best_lb[j] = cand.lb;
+                        if cand.lb > self.best_lb[j] {
+                            self.best_lb[j] = cand.lb;
                         }
                     }
                     if improves_ub(ub[j], cand.ub) {
                         rt.atomic_updates += 1;
                         hit = true;
-                        if cand.ub < best_ub[j] {
-                            best_ub[j] = cand.ub;
+                        if cand.ub < self.best_ub[j] {
+                            self.best_ub[j] = cand.ub;
                         }
                     }
                     if hit && self.record_conflicts {
-                        col_hits[j] += 1;
+                        self.col_hits[j] += 1;
                     }
                 }
             }
@@ -118,13 +151,13 @@ impl Engine for GpuModelEngine {
             let mut change = false;
             let mut infeas = false;
             for j in 0..n {
-                if improves_lb(lb[j], best_lb[j]) {
-                    lb[j] = best_lb[j];
+                if improves_lb(lb[j], self.best_lb[j]) {
+                    lb[j] = self.best_lb[j];
                     change = true;
                     rt.bound_changes += 1;
                 }
-                if improves_ub(ub[j], best_ub[j]) {
-                    ub[j] = best_ub[j];
+                if improves_ub(ub[j], self.best_ub[j]) {
+                    ub[j] = self.best_ub[j];
                     change = true;
                     rt.bound_changes += 1;
                 }
@@ -134,7 +167,7 @@ impl Engine for GpuModelEngine {
             }
             if self.record_conflicts {
                 rt.max_col_conflicts =
-                    col_hits.iter().copied().max().unwrap_or(0) as usize;
+                    self.col_hits.iter().copied().max().unwrap_or(0) as usize;
             }
             trace.push(rt);
             if infeas {
@@ -266,5 +299,19 @@ mod tests {
             assert_eq!(rt.rows_processed, 5);
             assert_eq!(rt.nnz_processed, 2 * inst.nnz());
         }
+    }
+
+    #[test]
+    fn session_reuse_resumes_from_given_bounds() {
+        // propagating again from the fixed point is a single no-op round
+        let inst = cascade(6);
+        let engine = GpuModelEngine::default();
+        let mut session = engine.prepare(&inst).unwrap();
+        let first = session.propagate(&Bounds::of(&inst));
+        assert_eq!(first.status, Status::Converged);
+        let again = session.propagate(&first.bounds);
+        assert_eq!(again.status, Status::Converged);
+        assert_eq!(again.rounds, 1);
+        assert!(again.same_limit_point(&first));
     }
 }

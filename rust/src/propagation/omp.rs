@@ -5,6 +5,7 @@
 //! into a worklist so threads receive only useful work; bound updates use
 //! atomics (the paper uses OpenMP locks; we use lock-free CAS min/max on
 //! the f64 bit patterns, which has the same monotone-lattice semantics).
+//! Threading uses `std::thread::scope` (no external dependency).
 //!
 //! Like the OpenMP original, bound changes made by other threads *within*
 //! a round may or may not be observed — the update lattice is monotone, so
@@ -16,9 +17,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use super::activity::RowActivity;
 use super::bounds::candidates;
 use super::trace::{RoundTrace, Trace};
-use super::{Engine, PropResult, Status};
+use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance, VarType};
 use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
+use crate::sparse::Csc;
 use crate::util::timer::Timer;
 
 /// f64 stored in an AtomicU64.
@@ -84,155 +86,210 @@ impl Engine for OmpEngine {
         "cpu_omp"
     }
 
-    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
-        let csc = inst.to_csc(); // one-time init, untimed
-        let timer = Timer::start();
-        let m = inst.nrows();
-        let lb: Vec<AtomicU64> = inst.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
-        let ub: Vec<AtomicU64> = inst.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
-        let marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(true)).collect();
-        let next_marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
-        let infeasible = AtomicBool::new(false);
-        let mut trace = Trace::default();
-        let mut rounds = 0u32;
-        let mut status = Status::MaxRounds;
-        let mut worklist: Vec<u32> = Vec::with_capacity(m);
+    fn prepare<'a>(
+        &self,
+        inst: &'a MipInstance,
+    ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
+        // one-time init (untimed): the column view used for re-marking
+        Ok(Box::new(OmpPrepared {
+            inst,
+            csc: inst.to_csc(),
+            threads: self.threads,
+            max_rounds: self.max_rounds,
+        }))
+    }
+}
 
-        while rounds < self.max_rounds {
-            rounds += 1;
-            // pre-process the marked set into a worklist (load balancing,
-            // paper section 4.2)
-            worklist.clear();
-            for r in 0..m {
-                if marked[r].swap(false, Ordering::Relaxed) {
-                    worklist.push(r as u32);
+/// A prepared shared-memory session.
+pub struct OmpPrepared<'a> {
+    inst: &'a MipInstance,
+    csc: Csc,
+    pub threads: usize,
+    pub max_rounds: u32,
+}
+
+impl PreparedProblem for OmpPrepared<'_> {
+    fn engine_name(&self) -> &'static str {
+        "cpu_omp"
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        propagate_omp(self.inst, &self.csc, start, None, self.threads, self.max_rounds)
+    }
+
+    fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
+        propagate_omp(self.inst, &self.csc, start, Some(seed_vars), self.threads, self.max_rounds)
+    }
+}
+
+/// The timed parallel propagation loop. With `seed_vars` only constraints
+/// containing a seed variable are initially marked (post-branching warm
+/// start); otherwise every constraint is.
+pub fn propagate_omp(
+    inst: &MipInstance,
+    csc: &Csc,
+    start: &Bounds,
+    seed_vars: Option<&[usize]>,
+    threads: usize,
+    max_rounds: u32,
+) -> PropResult {
+    let timer = Timer::start();
+    let m = inst.nrows();
+    let lb: Vec<AtomicU64> = start.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+    let ub: Vec<AtomicU64> = start.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
+    let marked: Vec<AtomicBool> = match seed_vars {
+        None => (0..m).map(|_| AtomicBool::new(true)).collect(),
+        Some(vars) => {
+            let marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
+            for &v in vars {
+                let (rows_v, _) = csc.col(v);
+                for &r in rows_v {
+                    marked[r as usize].store(true, Ordering::Relaxed);
                 }
             }
-            if worklist.is_empty() {
-                status = Status::Converged;
-                rounds -= 1; // nothing processed: not a round
-                break;
+            marked
+        }
+    };
+    let next_marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
+    let infeasible = AtomicBool::new(false);
+    let mut trace = Trace::default();
+    let mut rounds = 0u32;
+    let mut status = Status::MaxRounds;
+    let mut worklist: Vec<u32> = Vec::with_capacity(m);
+
+    while rounds < max_rounds {
+        rounds += 1;
+        // pre-process the marked set into a worklist (load balancing,
+        // paper section 4.2)
+        worklist.clear();
+        for r in 0..m {
+            if marked[r].swap(false, Ordering::Relaxed) {
+                worklist.push(r as u32);
             }
+        }
+        if worklist.is_empty() {
+            status = Status::Converged;
+            rounds -= 1; // nothing processed: not a round
+            break;
+        }
 
-            let changes = AtomicUsize::new(0);
-            let atomics_issued = AtomicUsize::new(0);
-            let nnz_processed = AtomicUsize::new(0);
-            let nthreads = self.threads.min(worklist.len()).max(1);
-            let chunk = worklist.len().div_ceil(nthreads);
+        let changes = AtomicUsize::new(0);
+        let atomics_issued = AtomicUsize::new(0);
+        let nnz_processed = AtomicUsize::new(0);
+        let nthreads = threads.min(worklist.len()).max(1);
+        let chunk = worklist.len().div_ceil(nthreads);
 
-            crossbeam_utils::thread::scope(|scope| {
-                for t in 0..nthreads {
-                    let lo = t * chunk;
-                    let hi = ((t + 1) * chunk).min(worklist.len());
-                    if lo >= hi {
-                        continue;
-                    }
-                    let work = &worklist[lo..hi];
-                    let csc = &csc;
-                    let lb = &lb;
-                    let ub = &ub;
-                    let next_marked = &next_marked;
-                    let infeasible = &infeasible;
-                    let changes = &changes;
-                    let atomics_issued = &atomics_issued;
-                    let nnz_processed = &nnz_processed;
-                    scope.spawn(move |_| {
-                        let mut local_changes = 0usize;
-                        let mut local_atomics = 0usize;
-                        let mut local_nnz = 0usize;
-                        for &r in work {
-                            if infeasible.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            let r = r as usize;
-                            let (cols, vals) = inst.matrix.row(r);
-                            local_nnz += cols.len();
-                            let mut act = RowActivity::default();
-                            for (&c, &a) in cols.iter().zip(vals) {
-                                let j = c as usize;
-                                act.accumulate(a, load_f64(&lb[j]), load_f64(&ub[j]));
-                            }
-                            let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
-                            if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
-                                continue;
-                            }
-                            local_nnz += cols.len();
-                            for (&c, &a) in cols.iter().zip(vals) {
-                                let j = c as usize;
-                                let cand = candidates(
-                                    a,
-                                    load_f64(&lb[j]),
-                                    load_f64(&ub[j]),
-                                    inst.var_types[j] == VarType::Integer,
-                                    &act,
-                                    lhs,
-                                    rhs,
-                                );
-                                let mut changed = false;
-                                if cand.lb.is_finite() || cand.lb == f64::INFINITY {
-                                    if improves_lb(load_f64(&lb[j]), cand.lb) {
-                                        local_atomics += 1;
-                                        changed |= atomic_update_lb(&lb[j], cand.lb);
-                                    }
+        std::thread::scope(|scope| {
+            for t in 0..nthreads {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(worklist.len());
+                if lo >= hi {
+                    continue;
+                }
+                let work = &worklist[lo..hi];
+                let csc = &csc;
+                let lb = &lb;
+                let ub = &ub;
+                let next_marked = &next_marked;
+                let infeasible = &infeasible;
+                let changes = &changes;
+                let atomics_issued = &atomics_issued;
+                let nnz_processed = &nnz_processed;
+                scope.spawn(move || {
+                    let mut local_changes = 0usize;
+                    let mut local_atomics = 0usize;
+                    let mut local_nnz = 0usize;
+                    for &r in work {
+                        if infeasible.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let r = r as usize;
+                        let (cols, vals) = inst.matrix.row(r);
+                        local_nnz += cols.len();
+                        let mut act = RowActivity::default();
+                        for (&c, &a) in cols.iter().zip(vals) {
+                            let j = c as usize;
+                            act.accumulate(a, load_f64(&lb[j]), load_f64(&ub[j]));
+                        }
+                        let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+                        if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+                            continue;
+                        }
+                        local_nnz += cols.len();
+                        for (&c, &a) in cols.iter().zip(vals) {
+                            let j = c as usize;
+                            let cand = candidates(
+                                a,
+                                load_f64(&lb[j]),
+                                load_f64(&ub[j]),
+                                inst.var_types[j] == VarType::Integer,
+                                &act,
+                                lhs,
+                                rhs,
+                            );
+                            let mut changed = false;
+                            if cand.lb.is_finite() || cand.lb == f64::INFINITY {
+                                if improves_lb(load_f64(&lb[j]), cand.lb) {
+                                    local_atomics += 1;
+                                    changed |= atomic_update_lb(&lb[j], cand.lb);
                                 }
-                                if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
-                                    if improves_ub(load_f64(&ub[j]), cand.ub) {
-                                        local_atomics += 1;
-                                        changed |= atomic_update_ub(&ub[j], cand.ub);
-                                    }
+                            }
+                            if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
+                                if improves_ub(load_f64(&ub[j]), cand.ub) {
+                                    local_atomics += 1;
+                                    changed |= atomic_update_ub(&ub[j], cand.ub);
                                 }
-                                if changed {
-                                    local_changes += 1;
-                                    if load_f64(&lb[j]) > load_f64(&ub[j]) + FEAS_TOL {
-                                        infeasible.store(true, Ordering::Relaxed);
-                                        break;
-                                    }
-                                    let (rows_j, _) = csc.col(j);
-                                    for &ri in rows_j {
-                                        next_marked[ri as usize].store(true, Ordering::Relaxed);
-                                    }
+                            }
+                            if changed {
+                                local_changes += 1;
+                                if load_f64(&lb[j]) > load_f64(&ub[j]) + FEAS_TOL {
+                                    infeasible.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                                let (rows_j, _) = csc.col(j);
+                                for &ri in rows_j {
+                                    next_marked[ri as usize].store(true, Ordering::Relaxed);
                                 }
                             }
                         }
-                        changes.fetch_add(local_changes, Ordering::Relaxed);
-                        atomics_issued.fetch_add(local_atomics, Ordering::Relaxed);
-                        nnz_processed.fetch_add(local_nnz, Ordering::Relaxed);
-                    });
-                }
-            })
-            .expect("worker thread panicked");
+                    }
+                    changes.fetch_add(local_changes, Ordering::Relaxed);
+                    atomics_issued.fetch_add(local_atomics, Ordering::Relaxed);
+                    nnz_processed.fetch_add(local_nnz, Ordering::Relaxed);
+                });
+            }
+        });
 
-            trace.push(RoundTrace {
-                rows_processed: worklist.len(),
-                nnz_processed: nnz_processed.load(Ordering::Relaxed),
-                bound_changes: changes.load(Ordering::Relaxed),
-                atomic_updates: atomics_issued.load(Ordering::Relaxed),
-                max_col_conflicts: 0,
-            });
+        trace.push(RoundTrace {
+            rows_processed: worklist.len(),
+            nnz_processed: nnz_processed.load(Ordering::Relaxed),
+            bound_changes: changes.load(Ordering::Relaxed),
+            atomic_updates: atomics_issued.load(Ordering::Relaxed),
+            max_col_conflicts: 0,
+        });
 
-            if infeasible.load(Ordering::Relaxed) {
-                status = Status::Infeasible;
-                break;
-            }
-            if changes.load(Ordering::Relaxed) == 0 {
-                status = Status::Converged;
-                break;
-            }
-            for (m_, n_) in marked.iter().zip(&next_marked) {
-                m_.store(n_.swap(false, Ordering::Relaxed), Ordering::Relaxed);
-            }
+        if infeasible.load(Ordering::Relaxed) {
+            status = Status::Infeasible;
+            break;
         }
-
-        PropResult {
-            bounds: Bounds {
-                lb: lb.iter().map(load_f64).collect(),
-                ub: ub.iter().map(load_f64).collect(),
-            },
-            rounds,
-            status,
-            wall: timer.elapsed(),
-            trace,
+        if changes.load(Ordering::Relaxed) == 0 {
+            status = Status::Converged;
+            break;
         }
+        for (m_, n_) in marked.iter().zip(&next_marked) {
+            m_.store(n_.swap(false, Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    PropResult {
+        bounds: Bounds {
+            lb: lb.iter().map(load_f64).collect(),
+            ub: ub.iter().map(load_f64).collect(),
+        },
+        rounds,
+        status,
+        wall: timer.elapsed(),
+        trace,
     }
 }
 
@@ -265,8 +322,7 @@ mod tests {
         prop("omp == seq limit point", Config::cases(24), |rng| {
             let inst = gen::random_instance(rng, 25, 25, 0.5);
             let seq = SeqEngine::new().propagate(&inst);
-            let mut omp = OmpEngine::with_threads(4);
-            let par = omp.propagate(&inst);
+            let par = OmpEngine::with_threads(4).propagate(&inst);
             if seq.status == Status::Converged && par.status == Status::Converged {
                 crate::testkit::assert_bounds_equal(&seq.bounds.lb, &par.bounds.lb, "lb");
                 crate::testkit::assert_bounds_equal(&seq.bounds.ub, &par.bounds.ub, "ub");
@@ -302,5 +358,32 @@ mod tests {
         );
         let r = OmpEngine::with_threads(2).propagate(&inst);
         assert_eq!(r.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn warm_start_session_matches_cold() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 50, ncols: 40, seed: 8, ..Default::default() });
+        let engine = OmpEngine::with_threads(4);
+        let mut session = engine.prepare(&inst).unwrap();
+        let base = session.propagate(&Bounds::of(&inst));
+        if base.status != Status::Converged {
+            return;
+        }
+        // branch: tighten the first finite-width variable (shared rule)
+        let Some((v, branched)) = crate::testkit::branch_first_wide_var(&base.bounds, 1e-3)
+        else {
+            return;
+        };
+        let warm = session.propagate_warm(&branched, &[v]);
+        let mut cold_inst = inst.clone();
+        cold_inst.lb = branched.lb.clone();
+        cold_inst.ub = branched.ub.clone();
+        let cold = SeqEngine::new().propagate(&cold_inst);
+        assert_eq!(warm.status, cold.status);
+        if warm.status == Status::Converged {
+            crate::testkit::assert_bounds_equal(&cold.bounds.lb, &warm.bounds.lb, "lb");
+            crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "ub");
+        }
     }
 }

@@ -12,9 +12,10 @@
 use super::activity::RowActivity;
 use super::bounds::{apply, candidates};
 use super::trace::{RoundTrace, Trace};
-use super::{Engine, PropResult, Status};
+use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance, VarType};
 use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
+use crate::sparse::Csc;
 use crate::util::timer::Timer;
 
 /// One entry of the reduction transaction log (what PaPILO would hand to
@@ -30,19 +31,29 @@ pub enum Reduction {
 pub struct PapiloLikeEngine {
     pub threads: usize,
     pub max_rounds: u32,
-    /// The reduction log of the last run.
-    pub log: Vec<Reduction>,
 }
 
 impl Default for PapiloLikeEngine {
     fn default() -> Self {
-        PapiloLikeEngine { threads: 1, max_rounds: MAX_ROUNDS, log: Vec::new() }
+        PapiloLikeEngine { threads: 1, max_rounds: MAX_ROUNDS }
     }
 }
 
 impl PapiloLikeEngine {
     pub fn with_threads(threads: usize) -> PapiloLikeEngine {
         PapiloLikeEngine { threads: threads.max(1), ..Default::default() }
+    }
+
+    /// Concrete-typed `prepare`, exposing the reduction [`log`]
+    /// (`PapiloPrepared::log`) that the trait object hides.
+    pub fn prepare_session<'a>(&self, inst: &'a MipInstance) -> PapiloPrepared<'a> {
+        PapiloPrepared {
+            inst,
+            csc: inst.to_csc(),
+            threads: self.threads,
+            max_rounds: self.max_rounds,
+            log: Vec::new(),
+        }
     }
 }
 
@@ -51,13 +62,37 @@ impl Engine for PapiloLikeEngine {
         "papilo_like"
     }
 
-    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
-        let csc = inst.to_csc();
+    fn prepare<'a>(
+        &self,
+        inst: &'a MipInstance,
+    ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
+        Ok(Box::new(self.prepare_session(inst)))
+    }
+}
+
+/// A prepared PaPILO-style session. Keeps the transaction log of the most
+/// recent propagation, as the framework would hand it to the solver.
+pub struct PapiloPrepared<'a> {
+    inst: &'a MipInstance,
+    csc: Csc,
+    pub threads: usize,
+    pub max_rounds: u32,
+    /// The reduction log of the last `propagate` call.
+    pub log: Vec<Reduction>,
+}
+
+impl PreparedProblem for PapiloPrepared<'_> {
+    fn engine_name(&self) -> &'static str {
+        "papilo_like"
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        let inst = self.inst;
         let timer = Timer::start();
         let m = inst.nrows();
         let n = inst.ncols();
-        let mut lb = inst.lb.clone();
-        let mut ub = inst.ub.clone();
+        let mut lb = start.lb.clone();
+        let mut ub = start.ub.clone();
         let mut row_active = vec![true; m];
         let mut var_fixed = vec![false; n];
         let mut marked = vec![true; m];
@@ -131,7 +166,7 @@ impl Engine for PapiloLikeEngine {
                             trace.push(rt);
                             break 'outer;
                         }
-                        let (rows_j, _) = csc.col(j);
+                        let (rows_j, _) = self.csc.col(j);
                         for &ri in rows_j {
                             next_marked[ri as usize] = true;
                         }
@@ -195,7 +230,7 @@ fn scan_redundant_parallel(
     let m = inst.nrows();
     let chunk = m.div_ceil(threads).max(1);
     let mut results: Vec<Vec<usize>> = Vec::new();
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for t in 0..threads {
             let lo = t * chunk;
@@ -203,7 +238,7 @@ fn scan_redundant_parallel(
             if lo >= hi {
                 continue;
             }
-            handles.push(scope.spawn(move |_| {
+            handles.push(scope.spawn(move || {
                 (lo..hi)
                     .filter(|&r| row_active[r] && acts[r].redundant(inst.lhs[r], inst.rhs[r]))
                     .collect::<Vec<usize>>()
@@ -212,8 +247,7 @@ fn scan_redundant_parallel(
         for h in handles {
             results.push(h.join().expect("scan thread"));
         }
-    })
-    .expect("scope");
+    });
     results.concat()
 }
 
@@ -229,8 +263,7 @@ mod tests {
         prop("papilo_like == seq limit point", Config::cases(24), |rng| {
             let inst = gen::random_instance(rng, 20, 20, 0.5);
             let seq = SeqEngine::new().propagate(&inst);
-            let mut pap = PapiloLikeEngine::default();
-            let r = pap.propagate(&inst);
+            let r = PapiloLikeEngine::default().propagate(&inst);
             if seq.status == Status::Converged && r.status == Status::Converged {
                 crate::testkit::assert_bounds_equal(&seq.bounds.lb, &r.bounds.lb, "lb");
                 crate::testkit::assert_bounds_equal(&seq.bounds.ub, &r.bounds.ub, "ub");
@@ -254,12 +287,13 @@ mod tests {
             vec![1.0, 1.0, 5.0],
             vec![VarType::Continuous; 3],
         );
-        let mut pap = PapiloLikeEngine::default();
-        let r = pap.propagate(&inst);
+        let engine = PapiloLikeEngine::default();
+        let mut session = engine.prepare_session(&inst);
+        let r = session.propagate(&Bounds::of(&inst));
         assert_eq!(r.status, Status::Converged);
         // row 0 redundant; z fixed at 1
-        assert!(pap.log.iter().any(|x| matches!(x, Reduction::RedundantRow { row: 0 })));
-        assert!(pap
+        assert!(session.log.iter().any(|x| matches!(x, Reduction::RedundantRow { row: 0 })));
+        assert!(session
             .log
             .iter()
             .any(|x| matches!(x, Reduction::FixedVar { col: 2, value } if *value == 1.0)));
@@ -268,10 +302,8 @@ mod tests {
     #[test]
     fn multithreaded_matches_single() {
         let inst = gen::generate(&gen::GenConfig { nrows: 80, ncols: 60, seed: 9, ..Default::default() });
-        let mut a = PapiloLikeEngine::with_threads(1);
-        let mut b = PapiloLikeEngine::with_threads(4);
-        let ra = a.propagate(&inst);
-        let rb = b.propagate(&inst);
+        let ra = PapiloLikeEngine::with_threads(1).propagate(&inst);
+        let rb = PapiloLikeEngine::with_threads(4).propagate(&inst);
         assert_eq!(ra.status, rb.status);
         crate::testkit::assert_bounds_equal(&ra.bounds.lb, &rb.bounds.lb, "lb");
     }

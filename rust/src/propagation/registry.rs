@@ -1,0 +1,390 @@
+//! Central engine registry: the one place engine names are mapped to
+//! factories. The CLI, experiment harness, benches and examples all
+//! construct engines through [`Registry::create`] from a parsed
+//! [`EngineSpec`], so the set of accepted `--engine` values, the HELP
+//! text, and the differential-test matrix can never drift apart.
+//!
+//! The registry also owns the lazily-opened, process-shared PJRT
+//! [`Runtime`]: all XLA engine variants created through one registry reuse
+//! the same client, artifact manifest and compiled-executable cache.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::gpu_model::GpuModelEngine;
+use super::omp::OmpEngine;
+use super::papilo_like::PapiloLikeEngine;
+use super::seq::SeqEngine;
+use super::xla_engine::{SyncVariant, XlaConfig, XlaEngine};
+use super::Engine;
+use crate::numerics::MAX_ROUNDS;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::cli::Args;
+
+pub use crate::runtime::default_artifact_dir;
+
+/// Parsed engine specification: which engine, plus the knobs every
+/// construction site used to hand-roll (thread count, precision, sync
+/// variant ablations, round cap).
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    /// Registered engine name (`cpu_seq`, `cpu_omp`, `gpu_model`,
+    /// `papilo_like`, `gpu_atomic`, `gpu_loop`, `megakernel`).
+    pub name: String,
+    /// Worker threads for the CPU-parallel engines. `None` keeps each
+    /// engine's own default (cpu_omp: all cores; papilo_like: 1, the
+    /// paper's PaPILO baseline).
+    pub threads: Option<usize>,
+    /// Run XLA artifacts in single precision (paper section 4.5).
+    pub f32: bool,
+    /// Single precision with fast-math artifacts (implies `f32`).
+    pub fastmath: bool,
+    /// Use the `jnp` no-explicit-tiling ablation artifacts.
+    pub jnp: bool,
+    /// Propagation round cap (paper section 4.1).
+    pub max_rounds: u32,
+}
+
+impl EngineSpec {
+    pub fn new(name: &str) -> EngineSpec {
+        EngineSpec {
+            name: name.to_string(),
+            threads: None,
+            f32: false,
+            fastmath: false,
+            jnp: false,
+            max_rounds: MAX_ROUNDS,
+        }
+    }
+
+    pub fn threads(mut self, threads: usize) -> EngineSpec {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    pub fn f32(mut self) -> EngineSpec {
+        self.f32 = true;
+        self
+    }
+
+    pub fn fastmath(mut self) -> EngineSpec {
+        self.f32 = true;
+        self.fastmath = true;
+        self
+    }
+
+    pub fn jnp(mut self) -> EngineSpec {
+        self.jnp = true;
+        self
+    }
+
+    pub fn max_rounds(mut self, max_rounds: u32) -> EngineSpec {
+        self.max_rounds = if max_rounds == 0 { MAX_ROUNDS } else { max_rounds };
+        self
+    }
+
+    /// Parse from CLI arguments: `--engine NAME [--threads N] [--f32]
+    /// [--fastmath] [--jnp] [--max-rounds R]`.
+    pub fn from_args(args: &Args) -> EngineSpec {
+        let mut spec = EngineSpec::new(args.get_or("engine", "cpu_seq"))
+            .max_rounds(args.get_u64("max-rounds", MAX_ROUNDS as u64) as u32);
+        if let Some(threads) = args.get("threads") {
+            spec = spec.threads(threads.parse().unwrap_or_else(|_| {
+                panic!("--threads expects an integer, got {threads:?}")
+            }));
+        }
+        if args.flag("f32") {
+            spec = spec.f32();
+        }
+        if args.flag("fastmath") {
+            spec = spec.fastmath();
+        }
+        if args.flag("jnp") {
+            spec = spec.jnp();
+        }
+        spec
+    }
+
+    /// The XLA engine configuration this spec describes.
+    fn xla_config(&self, variant: SyncVariant) -> XlaConfig {
+        let mut config = XlaConfig::default().variant(variant);
+        if self.fastmath {
+            config = config.fastmath();
+        } else if self.f32 {
+            config = config.f32();
+        }
+        if self.jnp {
+            config = config.jnp();
+        }
+        config.max_rounds = self.max_rounds;
+        config
+    }
+}
+
+type Factory = fn(&Registry, &EngineSpec) -> Result<Box<dyn Engine>>;
+
+/// One registered engine.
+pub struct EngineEntry {
+    pub name: &'static str,
+    /// One-line description (engine tables in README/HELP).
+    pub summary: &'static str,
+    /// Does this engine need compiled AOT artifacts (a PJRT runtime)?
+    pub needs_artifacts: bool,
+    factory: Factory,
+}
+
+fn make_seq(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+    let mut engine = SeqEngine::new();
+    engine.max_rounds = spec.max_rounds;
+    Ok(Box::new(engine))
+}
+
+fn make_omp(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+    let mut engine = match spec.threads {
+        Some(threads) => OmpEngine::with_threads(threads),
+        None => OmpEngine::default(),
+    };
+    engine.max_rounds = spec.max_rounds;
+    Ok(Box::new(engine))
+}
+
+fn make_gpu_model(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+    let mut engine = GpuModelEngine::default();
+    engine.max_rounds = spec.max_rounds;
+    Ok(Box::new(engine))
+}
+
+fn make_papilo(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+    // default stays 1 thread: the paper's single-threaded PaPILO baseline
+    let mut engine = match spec.threads {
+        Some(threads) => PapiloLikeEngine::with_threads(threads),
+        None => PapiloLikeEngine::default(),
+    };
+    engine.max_rounds = spec.max_rounds;
+    Ok(Box::new(engine))
+}
+
+fn make_xla(reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+    let variant = match spec.name.as_str() {
+        "gpu_loop" => SyncVariant::GpuLoop,
+        "megakernel" => SyncVariant::Megakernel,
+        _ => SyncVariant::CpuLoop,
+    };
+    let runtime = reg.runtime()?;
+    Ok(Box::new(XlaEngine::new(runtime, spec.xla_config(variant))))
+}
+
+/// Name→factory registry plus the shared PJRT runtime.
+pub struct Registry {
+    entries: Vec<EngineEntry>,
+    artifact_dir: PathBuf,
+    runtime: RefCell<Option<Rc<Runtime>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::with_defaults()
+    }
+}
+
+impl Registry {
+    /// An empty registry (tests; custom engine sets).
+    pub fn empty() -> Registry {
+        Registry {
+            entries: Vec::new(),
+            artifact_dir: default_artifact_dir(),
+            runtime: RefCell::new(None),
+        }
+    }
+
+    /// The standard registry: all five engine families, seven names.
+    pub fn with_defaults() -> Registry {
+        let mut reg = Registry::empty();
+        reg.register(EngineEntry {
+            name: "cpu_seq",
+            summary: "Algorithm 1: sequential with constraint marking (baseline)",
+            needs_artifacts: false,
+            factory: make_seq,
+        });
+        reg.register(EngineEntry {
+            name: "cpu_omp",
+            summary: "shared-memory parallel Algorithm 1 (scoped threads + atomic bounds)",
+            needs_artifacts: false,
+            factory: make_omp,
+        });
+        reg.register(EngineEntry {
+            name: "gpu_model",
+            summary: "native round-synchronous Algorithm 2 (oracle + trace recorder)",
+            needs_artifacts: false,
+            factory: make_gpu_model,
+        });
+        reg.register(EngineEntry {
+            name: "papilo_like",
+            summary: "PaPILO-style presolve baseline (propagation + reductions)",
+            needs_artifacts: false,
+            factory: make_papilo,
+        });
+        reg.register(EngineEntry {
+            name: "gpu_atomic",
+            summary: "AOT JAX/Pallas artifact via PJRT, host-driven round loop",
+            needs_artifacts: true,
+            factory: make_xla,
+        });
+        reg.register(EngineEntry {
+            name: "gpu_loop",
+            summary: "AOT artifact, whole propagation as one device-side loop",
+            needs_artifacts: true,
+            factory: make_xla,
+        });
+        reg.register(EngineEntry {
+            name: "megakernel",
+            summary: "AOT artifact, fixed-trip masked loop in one dispatch",
+            needs_artifacts: true,
+            factory: make_xla,
+        });
+        reg
+    }
+
+    /// Add (or override, by name) an entry.
+    pub fn register(&mut self, entry: EngineEntry) {
+        self.entries.retain(|e| e.name != entry.name);
+        self.entries.push(entry);
+    }
+
+    /// Use a non-default artifact directory for the shared runtime.
+    pub fn with_artifact_dir<P: Into<PathBuf>>(mut self, dir: P) -> Registry {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    pub fn artifact_dir(&self) -> &std::path::Path {
+        &self.artifact_dir
+    }
+
+    /// All registered engine names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    pub fn entries(&self) -> &[EngineEntry] {
+        &self.entries
+    }
+
+    /// `cpu_seq|cpu_omp|...` — the generated `--engine` help list.
+    pub fn engine_list(&self) -> String {
+        self.names().join("|")
+    }
+
+    /// Construct the engine `spec` describes.
+    pub fn create(&self, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
+        let entry = self.entries.iter().find(|e| e.name == spec.name).ok_or_else(|| {
+            anyhow!("unknown engine {} (registered: {})", spec.name, self.engine_list())
+        })?;
+        (entry.factory)(self, spec)
+    }
+
+    /// The shared PJRT runtime, opened on first use and reused by every
+    /// XLA engine created through this registry.
+    pub fn runtime(&self) -> Result<Rc<Runtime>> {
+        let mut slot = self.runtime.borrow_mut();
+        if slot.is_none() {
+            let rt = Runtime::open(&self.artifact_dir)
+                .with_context(|| "opening artifacts (run `make -C python artifacts`)")?;
+            *slot = Some(Rc::new(rt));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    }
+
+    /// Are artifacts present (without opening a PJRT client)?
+    pub fn artifacts_available(&self) -> bool {
+        Manifest::load(&self.artifact_dir.join("manifest.txt")).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::instance::Bounds;
+    use crate::propagation::{PreparedProblem as _, Status};
+
+    #[test]
+    fn spec_from_args_reads_knobs() {
+        let args = Args::parse(
+            ["--engine", "cpu_omp", "--threads", "3", "--f32", "--max-rounds", "7"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        );
+        let spec = EngineSpec::from_args(&args);
+        assert_eq!(spec.name, "cpu_omp");
+        assert_eq!(spec.threads, Some(3));
+        assert!(spec.f32 && !spec.fastmath && !spec.jnp);
+        assert_eq!(spec.max_rounds, 7);
+        // without --threads, each engine keeps its own default
+        let spec = EngineSpec::from_args(&Args::parse(Vec::new()));
+        assert_eq!(spec.threads, None);
+    }
+
+    #[test]
+    fn registry_knows_all_engine_families() {
+        let reg = Registry::with_defaults();
+        let names = reg.names();
+        for want in
+            ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like", "gpu_atomic", "gpu_loop", "megakernel"]
+        {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        assert!(reg.engine_list().contains('|'));
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_names() {
+        let reg = Registry::with_defaults();
+        let err = reg.create(&EngineSpec::new("warp_drive")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("warp_drive") && msg.contains("cpu_seq"), "{msg}");
+    }
+
+    #[test]
+    fn native_engines_construct_and_propagate() {
+        let reg = Registry::with_defaults();
+        let inst =
+            gen::generate(&GenConfig { nrows: 25, ncols: 25, seed: 4, ..Default::default() });
+        for name in ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like"] {
+            let engine = reg.create(&EngineSpec::new(name).threads(2)).unwrap();
+            assert!(!engine.name().is_empty());
+            let mut session = engine.prepare(&inst).unwrap();
+            let r = session.propagate(&Bounds::of(&inst));
+            assert!(r.rounds >= 1, "{name} ran no rounds");
+            assert_eq!(r.bounds.lb.len(), inst.ncols(), "{name} bound width");
+        }
+    }
+
+    #[test]
+    fn max_rounds_respected_through_registry() {
+        // diverging system: the spec's round cap must reach the engine
+        use crate::instance::{MipInstance, VarType};
+        use crate::sparse::Csr;
+        let triplets =
+            vec![(0usize, 0usize, 1.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 1.0)];
+        let matrix = Csr::from_triplets(2, 2, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "diverge",
+            matrix,
+            vec![1.0, 1.0],
+            vec![f64::INFINITY, f64::INFINITY],
+            vec![0.0, 0.0],
+            vec![f64::INFINITY, f64::INFINITY],
+            vec![VarType::Continuous; 2],
+        );
+        let reg = Registry::with_defaults();
+        let engine = reg.create(&EngineSpec::new("cpu_seq").max_rounds(15)).unwrap();
+        let r = engine.propagate(&inst);
+        assert_eq!(r.status, Status::MaxRounds);
+        assert_eq!(r.rounds, 15);
+    }
+}

@@ -5,13 +5,13 @@
 use super::activity::RowActivity;
 use super::bounds::{apply, candidates};
 use super::trace::{RoundTrace, Trace};
-use super::{Engine, PropResult, Status};
+use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance, VarType};
 use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
 
-/// Sequential engine. Holds reusable scratch.
+/// Sequential engine configuration.
 #[derive(Default)]
 pub struct SeqEngine {
     pub max_rounds: u32,
@@ -23,6 +23,16 @@ impl SeqEngine {
     pub fn new() -> SeqEngine {
         SeqEngine { max_rounds: MAX_ROUNDS, record_trace: true }
     }
+
+    /// Concrete-typed `prepare` (the trait method boxes this).
+    pub fn prepare_session<'a>(&self, inst: &'a MipInstance) -> SeqPrepared<'a> {
+        SeqPrepared {
+            inst,
+            csc: inst.to_csc(),
+            max_rounds: if self.max_rounds == 0 { MAX_ROUNDS } else { self.max_rounds },
+            record_trace: self.record_trace,
+        }
+    }
 }
 
 impl Engine for SeqEngine {
@@ -30,12 +40,42 @@ impl Engine for SeqEngine {
         "cpu_seq"
     }
 
-    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
-        let max_rounds = if self.max_rounds == 0 { MAX_ROUNDS } else { self.max_rounds };
-        // one-time init: column view for the marking mechanism — excluded
-        // from timing, as in the paper (section 4.3)
-        let csc = inst.to_csc();
-        propagate_seq(inst, &csc, max_rounds, self.record_trace)
+    fn prepare<'a>(
+        &self,
+        inst: &'a MipInstance,
+    ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
+        // one-time init: the column view for the marking mechanism —
+        // excluded from timing, as in the paper (section 4.3)
+        Ok(Box::new(self.prepare_session(inst)))
+    }
+}
+
+/// A prepared sequential session: instance + its column view.
+pub struct SeqPrepared<'a> {
+    inst: &'a MipInstance,
+    csc: Csc,
+    pub max_rounds: u32,
+    pub record_trace: bool,
+}
+
+impl PreparedProblem for SeqPrepared<'_> {
+    fn engine_name(&self) -> &'static str {
+        "cpu_seq"
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        propagate_seq_warm(self.inst, &self.csc, Some(start), None, self.max_rounds, self.record_trace)
+    }
+
+    fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
+        propagate_seq_warm(
+            self.inst,
+            &self.csc,
+            Some(start),
+            Some(seed_vars),
+            self.max_rounds,
+            self.record_trace,
+        )
     }
 }
 
@@ -321,9 +361,8 @@ mod tests {
 
     #[test]
     fn warm_start_minimal_work() {
-        use crate::instance::Bounds;
         // two independent blocks; branching on x0 must only reprocess the
-        // block containing x0
+        // block containing x0 — exercised through the session API
         let triplets = vec![
             (0usize, 0usize, 1.0),
             (0, 1, 1.0),
@@ -340,13 +379,14 @@ mod tests {
             vec![5.0; 4],
             vec![VarType::Continuous; 4],
         );
-        let csc = inst.to_csc();
-        let base = SeqEngine::new().propagate(&inst);
+        let engine = SeqEngine::new();
+        let mut session = engine.prepare_session(&inst);
+        let base = session.propagate(&Bounds::of(&inst));
         assert_eq!(base.status, Status::Converged);
         // "branch": tighten x0 <= 1
         let mut branched = base.bounds.clone();
         branched.ub[0] = 1.0;
-        let warm = propagate_seq_warm(&inst, &csc, Some(&branched), Some(&[0]), 100, true);
+        let warm = session.propagate_warm(&branched, &[0]);
         assert_eq!(warm.status, Status::Converged);
         // only row 0 is ever processed
         assert!(warm.trace.rounds.iter().all(|r| r.rows_processed <= 1));
@@ -356,7 +396,6 @@ mod tests {
         let cold = SeqEngine::new().propagate(&cold_inst);
         crate::testkit::assert_bounds_equal(&cold.bounds.lb, &warm.bounds.lb, "warm lb");
         crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "warm ub");
-        let _ = Bounds { lb: vec![], ub: vec![] };
     }
 
     #[test]
@@ -365,7 +404,9 @@ mod tests {
         use crate::testkit::{prop, Config};
         prop("warm == cold after branching", Config::cases(20), |rng| {
             let inst = gen::random_instance(rng, 20, 20, 0.4);
-            let base = SeqEngine::new().propagate(&inst);
+            let engine = SeqEngine::new();
+            let mut session = engine.prepare_session(&inst);
+            let base = session.propagate(&Bounds::of(&inst));
             if base.status != Status::Converged {
                 return;
             }
@@ -379,8 +420,7 @@ mod tests {
             let mid = (l + u) / 2.0;
             let mut branched = base.bounds.clone();
             branched.ub[v] = mid;
-            let csc = inst.to_csc();
-            let warm = propagate_seq_warm(&inst, &csc, Some(&branched), Some(&[v]), 100, false);
+            let warm = session.propagate_warm(&branched, &[v]);
             let mut cold_inst = inst.clone();
             cold_inst.lb = branched.lb.clone();
             cold_inst.ub = branched.ub.clone();

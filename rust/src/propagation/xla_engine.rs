@@ -8,20 +8,27 @@
 //!   device-side `while` loop (dynamic-parallelism analog).
 //! * [`SyncVariant::Megakernel`] — one dispatch of a fixed-trip loop with
 //!   masked updates (cooperative-kernel analog; no early exit).
+//!
+//! [`Engine::prepare`] performs the entire one-time setup — bucket
+//! selection, artifact compilation (cached in the shared [`Runtime`]),
+//! blocked-ELL packing and device upload of the bound-independent arrays —
+//! so [`PreparedProblem::propagate`] moves only the bound vectors per call,
+//! which is the paper's "necessary memory is sent to the GPU" protocol
+//! (section 4.3) and the warm-start shape branch-and-bound needs.
 
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use super::trace::{RoundTrace, Trace};
-use super::{Engine, PropResult, Status};
+use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance};
 use crate::numerics::MAX_ROUNDS;
 use crate::runtime::literal::{
     pack_static_host, pad_bounds, unpack_output, upload_bounds, upload_static, DeviceStatic,
 };
 use crate::runtime::manifest::{ArtifactMeta, Dtype};
-use crate::runtime::{select_bucket, ExecCache, Runtime};
+use crate::runtime::{select_bucket, Runtime};
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,12 +105,11 @@ impl XlaConfig {
 pub struct XlaEngine {
     pub runtime: Rc<Runtime>,
     pub config: XlaConfig,
-    cache: ExecCache,
 }
 
 impl XlaEngine {
     pub fn new(runtime: Rc<Runtime>, config: XlaConfig) -> XlaEngine {
-        XlaEngine { runtime, config, cache: ExecCache::new() }
+        XlaEngine { runtime, config }
     }
 
     /// The artifact that would serve this instance (None = doesn't fit).
@@ -116,28 +122,104 @@ impl XlaEngine {
         );
         select_bucket(&fam, inst).cloned()
     }
+}
 
-    /// Fallible propagation (bucket selection / PJRT errors surface here).
-    pub fn try_propagate(&mut self, inst: &MipInstance) -> Result<PropResult> {
+/// Engine name for a configuration — shared by `Engine::name` and
+/// `PreparedProblem::engine_name` so the two can never disagree.
+fn name_for(config: &XlaConfig) -> &'static str {
+    match (config.variant, config.dtype, config.fastmath) {
+        (SyncVariant::CpuLoop, Dtype::F64, _) => "gpu_atomic",
+        (SyncVariant::CpuLoop, Dtype::F32, false) => "gpu_atomic_f32",
+        (SyncVariant::CpuLoop, Dtype::F32, true) => "gpu_atomic_f32fm",
+        (SyncVariant::GpuLoop, _, _) => "gpu_loop",
+        (SyncVariant::Megakernel, _, _) => "megakernel",
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        name_for(&self.config)
+    }
+
+    fn prepare<'a>(
+        &self,
+        inst: &'a MipInstance,
+    ) -> Result<Box<dyn PreparedProblem + 'a>> {
         let meta = self.bucket_for(inst).with_context(|| {
             format!("no bucket fits instance {} ({}x{})", inst.name, inst.nrows(), inst.ncols())
         })?;
         // one-time setup, excluded from timing (paper section 4.3):
-        // compile (cached) + blocked-ELL packing + upload ("the blocking of
-        // A is precomputed on the CPU and the necessary memory is sent to
-        // the GPU")
-        let exe = self.cache.get(&self.runtime, &meta)?;
+        // compile (cached in the shared runtime) + blocked-ELL packing +
+        // upload ("the blocking of A is precomputed on the CPU and the
+        // necessary memory is sent to the GPU")
+        let exe = self.runtime.executable(&meta)?;
         let host = pack_static_host(inst, &meta)?;
         let device = upload_static(&self.runtime.client, &meta, &host)?;
+        Ok(Box::new(XlaPrepared {
+            inst,
+            runtime: self.runtime.clone(),
+            config: self.config.clone(),
+            meta,
+            exe,
+            device,
+        }))
+    }
+}
 
+/// A prepared XLA session: compiled executable + device-resident statics.
+pub struct XlaPrepared<'a> {
+    inst: &'a MipInstance,
+    runtime: Rc<Runtime>,
+    config: XlaConfig,
+    meta: ArtifactMeta,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    device: DeviceStatic,
+}
+
+impl XlaPrepared<'_> {
+    /// The bucket serving this session.
+    pub fn bucket(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn try_run(&self, start: &Bounds) -> Result<PropResult> {
         match self.config.variant {
-            SyncVariant::CpuLoop => {
-                run_cpu_loop(&self.config, &self.runtime.client, inst, &meta, exe, &device)
-            }
-            SyncVariant::GpuLoop | SyncVariant::Megakernel => {
-                run_single_dispatch(&self.runtime.client, inst, &meta, exe, &device)
-            }
+            SyncVariant::CpuLoop => run_cpu_loop(
+                &self.config,
+                &self.runtime.client,
+                self.inst,
+                &self.meta,
+                &self.exe,
+                &self.device,
+                start,
+            ),
+            SyncVariant::GpuLoop | SyncVariant::Megakernel => run_single_dispatch(
+                &self.runtime.client,
+                self.inst,
+                &self.meta,
+                &self.exe,
+                &self.device,
+                start,
+            ),
         }
+    }
+}
+
+impl PreparedProblem for XlaPrepared<'_> {
+    fn engine_name(&self) -> &'static str {
+        name_for(&self.config)
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        // infallible variant: device errors after a successful prepare are
+        // execution faults worth surfacing loudly. Callers that want to
+        // skip-on-error use `try_propagate`.
+        self.try_run(start)
+            .unwrap_or_else(|e| panic!("XLA propagation failed mid-session: {e:#}"))
+    }
+
+    fn try_propagate(&mut self, start: &Bounds) -> Result<PropResult> {
+        self.try_run(start)
     }
 }
 
@@ -158,10 +240,11 @@ fn execute_round(
             ub_buf,
             &device.is_int,
         ])
-        .map_err(|e| anyhow!("execute: {e:?}"))?;
-    result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))
+        .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+    result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_cpu_loop(
     config: &XlaConfig,
     client: &xla::PjRtClient,
@@ -169,19 +252,20 @@ fn run_cpu_loop(
     meta: &ArtifactMeta,
     exe: &xla::PjRtLoadedExecutable,
     device: &DeviceStatic,
+    start: &Bounds,
 ) -> Result<PropResult> {
     let m = inst.nrows();
     let nnz = inst.nnz();
     let max_rounds = config.max_rounds;
     // bounds are carried at the padded bucket width across rounds
-    let (lb0, ub0) = pad_bounds(&inst.lb, &inst.ub, meta);
+    let (lb0, ub0) = pad_bounds(&start.lb, &start.ub, meta);
     let (mut lb_buf, mut ub_buf) = upload_bounds(client, &lb0, &ub0, meta)?;
     let timer = Timer::start();
     let mut trace = Trace::default();
     let mut rounds = 0u32;
     let mut status = Status::MaxRounds;
-    let mut final_lb: Vec<f64> = inst.lb.clone();
-    let mut final_ub: Vec<f64> = inst.ub.clone();
+    let mut final_lb: Vec<f64> = start.lb.clone();
+    let mut final_ub: Vec<f64> = start.ub.clone();
 
     while rounds < max_rounds {
         rounds += 1;
@@ -223,8 +307,9 @@ fn run_single_dispatch(
     meta: &ArtifactMeta,
     exe: &xla::PjRtLoadedExecutable,
     device: &DeviceStatic,
+    start: &Bounds,
 ) -> Result<PropResult> {
-    let (lb0, ub0) = pad_bounds(&inst.lb, &inst.ub, meta);
+    let (lb0, ub0) = pad_bounds(&start.lb, &start.ub, meta);
     let (lb_buf, ub_buf) = upload_bounds(client, &lb0, &ub0, meta)?;
     let timer = Timer::start();
     let tuple = execute_round(exe, device, &lb_buf, &ub_buf)?;
@@ -247,22 +332,6 @@ fn run_single_dispatch(
         });
     }
     Ok(PropResult { bounds: Bounds { lb: out.lb, ub: out.ub }, rounds, status, wall, trace })
-}
-
-impl Engine for XlaEngine {
-    fn name(&self) -> &'static str {
-        match (self.config.variant, self.config.dtype, self.config.fastmath) {
-            (SyncVariant::CpuLoop, Dtype::F64, _) => "gpu_atomic",
-            (SyncVariant::CpuLoop, Dtype::F32, false) => "gpu_atomic_f32",
-            (SyncVariant::CpuLoop, Dtype::F32, true) => "gpu_atomic_f32fm",
-            (SyncVariant::GpuLoop, _, _) => "gpu_loop",
-            (SyncVariant::Megakernel, _, _) => "megakernel",
-        }
-    }
-
-    fn propagate(&mut self, inst: &MipInstance) -> PropResult {
-        self.try_propagate(inst).expect("XlaEngine propagation failed")
-    }
 }
 
 /// Largest (rows, cols) any artifact can hold — the harness pre-filters

@@ -1,8 +1,12 @@
 //! Executable cache: artifacts are compiled once per process and reused
-//! across propagation runs (compilation is one-time setup, excluded from
-//! the paper's timing protocol, section 4.3).
+//! across propagation sessions (compilation is one-time setup, excluded
+//! from the paper's timing protocol, section 4.3).
+//!
+//! Executables are handed out as `Rc` so prepared sessions can hold them
+//! while the cache lives inside the shared [`Runtime`] behind a `RefCell`.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::Result;
 
@@ -11,7 +15,7 @@ use super::Runtime;
 
 #[derive(Default)]
 pub struct ExecCache {
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    compiled: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
 }
 
 impl ExecCache {
@@ -20,12 +24,17 @@ impl ExecCache {
     }
 
     /// Get (compiling on first use) the executable for an artifact.
-    pub fn get(&mut self, rt: &Runtime, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(&meta.name) {
-            let exe = rt.compile(meta)?;
-            self.compiled.insert(meta.name.clone(), exe);
+    pub fn get(
+        &mut self,
+        rt: &Runtime,
+        meta: &ArtifactMeta,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.get(&meta.name) {
+            return Ok(exe.clone());
         }
-        Ok(&self.compiled[&meta.name])
+        let exe = Rc::new(rt.compile(meta)?);
+        self.compiled.insert(meta.name.clone(), exe.clone());
+        Ok(exe)
     }
 
     pub fn len(&self) -> usize {

@@ -3,14 +3,21 @@
 //!
 //! Python never runs here — the interchange is `artifacts/manifest.txt`
 //! plus one HLO text file per (variant, dtype, impl, bucket) combination
-//! (see /opt/xla-example/README.md for why text, not serialized protos).
+//! (see DESIGN.md for why text, not serialized protos).
+//!
+//! One `Runtime` is meant to be shared per process (the engine registry
+//! hands out an `Rc<Runtime>`): it owns the PJRT client, the artifact
+//! manifest, and the compiled-executable cache, so every XLA engine
+//! variant reuses the same compilation work.
 
 pub mod manifest;
 pub mod buckets;
 pub mod literal;
 pub mod exec_cache;
 
+use std::cell::RefCell;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
@@ -18,29 +25,43 @@ pub use buckets::select_bucket;
 pub use exec_cache::ExecCache;
 pub use manifest::{ArtifactMeta, Manifest};
 
-/// A PJRT CPU client plus the artifact inventory.
+/// The one place artifact-directory resolution lives:
+/// `GDP_ARTIFACTS` or `artifacts/` next to the working directory.
+pub fn default_artifact_dir() -> PathBuf {
+    PathBuf::from(std::env::var("GDP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
+}
+
+/// A PJRT CPU client plus the artifact inventory and executable cache.
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     pub artifact_dir: PathBuf,
+    exec_cache: RefCell<ExecCache>,
 }
 
 impl Runtime {
     /// Open the artifact directory (default `artifacts/` next to the repo
-    /// root, overridable with `GDP_ARTIFACTS`).
+    /// root, overridable with `GDP_ARTIFACTS`). Prefer going through
+    /// `propagation::registry::Registry`, which shares one runtime across
+    /// engines; this is for standalone runtime users.
     pub fn open_default() -> Result<Runtime> {
-        let dir = std::env::var("GDP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-        Runtime::open(Path::new(&dir))
+        Runtime::open(&default_artifact_dir())
     }
 
     pub fn open(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(&dir.join("manifest.txt"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e:?}"))?;
-        Ok(Runtime { client, manifest, artifact_dir: dir.to_path_buf() })
+        Ok(Runtime {
+            client,
+            manifest,
+            artifact_dir: dir.to_path_buf(),
+            exec_cache: RefCell::new(ExecCache::new()),
+        })
     }
 
-    /// Compile one artifact (cached callers should go through [`ExecCache`]).
+    /// Compile one artifact, bypassing the cache (callers normally want
+    /// [`Runtime::executable`]).
     pub fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
         let path = self.artifact_dir.join(&meta.file);
         let proto = xla::HloModuleProto::from_text_file(&path)
@@ -49,5 +70,16 @@ impl Runtime {
         self.client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", meta.name))
+    }
+
+    /// The cached executable for an artifact, compiling on first use.
+    /// Shared across every engine holding this `Runtime`.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        self.exec_cache.borrow_mut().get(self, meta)
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.exec_cache.borrow().len()
     }
 }

@@ -87,6 +87,37 @@ pub fn assert_bounds_equal(reference: &[f64], candidate: &[f64], what: &str) {
     }
 }
 
+/// The XLA integration tests' shared skip policy: the PJRT runtime over
+/// the default artifact directory, or `None` (with a note on stderr) when
+/// artifacts are missing or the `xla` crate is the vendored stub.
+pub fn open_test_runtime(test: &str) -> Option<std::rc::Rc<crate::runtime::Runtime>> {
+    match crate::runtime::Runtime::open(&crate::runtime::default_artifact_dir()) {
+        Ok(rt) => Some(std::rc::Rc::new(rt)),
+        Err(e) => {
+            eprintln!("{test}: skipping XLA leg (no PJRT runtime: {e:#})");
+            None
+        }
+    }
+}
+
+/// The warm-start differential tests' shared branching rule: pick the
+/// first variable whose domain is finite and wider than `min_width`, and
+/// return `(var, bounds-with-its-ub-halved)`. One definition so the
+/// warm-vs-cold suites cannot drift apart.
+pub fn branch_first_wide_var(
+    bounds: &crate::instance::Bounds,
+    min_width: f64,
+) -> Option<(usize, crate::instance::Bounds)> {
+    let v = (0..bounds.lb.len()).find(|&j| {
+        bounds.lb[j].is_finite()
+            && bounds.ub[j].is_finite()
+            && bounds.ub[j] - bounds.lb[j] > min_width
+    })?;
+    let mut branched = bounds.clone();
+    branched.ub[v] = (branched.lb[v] + branched.ub[v]) / 2.0;
+    Some((v, branched))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -111,7 +111,7 @@ fn propagation_matches_python_golden() {
         .collect();
     assert!(case_starts.len() >= 20, "expected many golden cases");
 
-    let mut engine = GpuModelEngine::default();
+    let engine = GpuModelEngine::default();
     for (k, &start) in case_starts.iter().enumerate() {
         let end = case_starts.get(k + 1).copied().unwrap_or(all.len());
         let lines = &all[start..end];

@@ -1,0 +1,156 @@
+//! Registry-driven differential matrix: every engine the registry knows
+//! must reach the same limit point as `cpu_seq` on a small generated
+//! suite, through the public session API — including a warm-start
+//! re-propagation after tightening one bound.
+//!
+//! Because the engine list comes from the registry itself, adding a new
+//! engine automatically enrolls it here; XLA engines skip (with a note)
+//! when no PJRT runtime / artifacts are available.
+
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::Bounds;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine, PreparedProblem, Status};
+use gdp::testkit::assert_bounds_equal;
+
+/// The engines this checkout can actually run: all native ones, plus the
+/// XLA ones if artifacts + a real PJRT runtime are present.
+fn runnable_engines(registry: &Registry) -> Vec<Box<dyn Engine>> {
+    let xla_ok = registry.runtime().is_ok();
+    registry
+        .entries()
+        .iter()
+        .filter(|e| {
+            if e.needs_artifacts && !xla_ok {
+                eprintln!("registry_differential: skipping {} (no PJRT runtime)", e.name);
+                return false;
+            }
+            true
+        })
+        .map(|e| {
+            registry
+                .create(&EngineSpec::new(e.name).threads(4))
+                .unwrap_or_else(|err| panic!("constructing {}: {err:#}", e.name))
+        })
+        .collect()
+}
+
+fn small_suite() -> Vec<gdp::instance::MipInstance> {
+    let mut suite = Vec::new();
+    for family in Family::ALL {
+        for seed in 0..3 {
+            suite.push(gen::generate(&GenConfig {
+                family,
+                nrows: 40,
+                ncols: 35,
+                seed,
+                ..Default::default()
+            }));
+        }
+    }
+    suite
+}
+
+#[test]
+fn every_registered_engine_matches_cpu_seq() {
+    let registry = Registry::with_defaults();
+    let engines = runnable_engines(&registry);
+    assert!(engines.len() >= 4, "registry lost the native engines");
+    let reference = registry.create(&EngineSpec::new("cpu_seq")).unwrap();
+
+    for inst in &small_suite() {
+        let want = reference.propagate(inst);
+        for engine in &engines {
+            let got = engine.propagate(inst);
+            if want.status == Status::Converged && got.status == Status::Converged {
+                assert!(
+                    got.same_limit_point(&want),
+                    "{} diverged from cpu_seq on {}",
+                    engine.name(),
+                    inst.name
+                );
+            }
+            if want.status == Status::Infeasible {
+                assert_ne!(
+                    got.status,
+                    Status::Converged,
+                    "{} missed infeasibility on {}",
+                    engine.name(),
+                    inst.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_start_re_propagation_matches_fresh_cold_run() {
+    // the acceptance scenario: prepare once, propagate, tighten one bound,
+    // propagate the SAME session again warm — the result must equal a
+    // fresh cpu_seq run on the modified instance
+    let registry = Registry::with_defaults();
+    let engines = runnable_engines(&registry);
+
+    for inst in &small_suite() {
+        // root fixed point from the reference engine
+        let root = registry.create(&EngineSpec::new("cpu_seq")).unwrap().propagate(inst);
+        if root.status != Status::Converged {
+            continue;
+        }
+        // branch: halve the first finite-width domain (shared rule)
+        let Some((v, branched)) = gdp::testkit::branch_first_wide_var(&root.bounds, 1e-3) else {
+            continue;
+        };
+
+        // the cold oracle: a fresh instance carrying the branched bounds
+        let mut cold_inst = inst.clone();
+        cold_inst.lb = branched.lb.clone();
+        cold_inst.ub = branched.ub.clone();
+        let cold = registry.create(&EngineSpec::new("cpu_seq")).unwrap().propagate(&cold_inst);
+
+        for engine in &engines {
+            let mut session = engine
+                .prepare(inst)
+                .unwrap_or_else(|e| panic!("{}: prepare failed: {e:#}", engine.name()));
+            let base = session.propagate(&Bounds::of(inst));
+            assert!(
+                base.status != Status::Converged || base.same_limit_point(&root),
+                "{} root disagrees on {}",
+                engine.name(),
+                inst.name
+            );
+            let warm = session.propagate_warm(&branched, &[v]);
+            if cold.status == Status::Converged && warm.status == Status::Converged {
+                assert_bounds_equal(
+                    &cold.bounds.lb,
+                    &warm.bounds.lb,
+                    &format!("{} warm lb on {}", engine.name(), inst.name),
+                );
+                assert_bounds_equal(
+                    &cold.bounds.ub,
+                    &warm.bounds.ub,
+                    &format!("{} warm ub on {}", engine.name(), inst.name),
+                );
+            } else if cold.status == Status::Infeasible {
+                assert_ne!(
+                    warm.status,
+                    Status::Converged,
+                    "{} warm run missed infeasibility on {}",
+                    engine.name(),
+                    inst.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn help_list_and_registry_agree() {
+    // the CLI HELP text is generated from the registry; both must contain
+    // the same names (the satellite fix for HELP drift)
+    let registry = Registry::with_defaults();
+    let list = registry.engine_list();
+    for name in registry.names() {
+        assert!(list.split('|').any(|n| n == name), "{name} missing from engine list");
+    }
+}

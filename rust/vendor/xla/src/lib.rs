@@ -1,0 +1,138 @@
+//! Stub of the `xla-rs` PJRT binding surface the `gdp` crate uses.
+//!
+//! The offline build environment has no XLA/PJRT shared libraries, so this
+//! crate provides the exact type and method surface of the real bindings
+//! with every entry point returning [`Error::Unavailable`]. Everything
+//! downstream is `Result`-typed: the `Runtime` fails to open, XLA engines
+//! report "backend unavailable", and the native engines, experiments and
+//! tests degrade gracefully (XLA differential tests skip).
+//!
+//! To run the real artifact path, point the `xla` path dependency in
+//! `rust/Cargo.toml` at a checkout of the actual bindings; the `gdp` crate
+//! compiles unchanged against either.
+
+use std::path::Path;
+
+/// Error type mirroring xla-rs: only `Debug` is relied upon by callers.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// This build uses the stubbed bindings; no PJRT runtime exists.
+    Unavailable(&'static str),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Unavailable(
+        "PJRT backend not available: built against the vendored `xla` stub \
+         (rust/vendor/xla); link the real xla-rs bindings to execute artifacts",
+    ))
+}
+
+/// Element types accepted by host-buffer uploads and literal decode.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A PJRT client (CPU or GPU). Stub: construction always fails.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn gpu(_memory_fraction: f64, _preallocate: bool) -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("stub"));
+    }
+
+    #[test]
+    fn literal_constructs_but_does_not_decode() {
+        let lit = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(lit.to_vec::<f64>().is_err());
+    }
+}
