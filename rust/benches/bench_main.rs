@@ -9,21 +9,26 @@
 //! paper's timing protocol (section 4.3). Earlier revisions timed the XLA
 //! engines setup-inclusive, which overstated their per-call cost.
 //!
-//! Two groups:
+//! Three groups:
 //! * micro — hot-path benches per engine/kernel (per-round costs).
+//! * batch — `propagate_batch` (B branched node domains per dispatch)
+//!   vs B sequential `propagate` calls, B in {1, 8, 64}; writes the
+//!   baseline numbers to `BENCH_batch.json` in the working directory.
 //! * paper — one end-to-end bench per paper table/figure, delegating to
 //!   the experiment harness on a reduced suite and printing the same rows
 //!   the paper reports.
 //!
-//! Filters: `cargo bench -- micro` or `cargo bench -- table1` etc.
+//! Filters: `cargo bench -- micro`, `cargo bench -- batch`, or
+//! `cargo bench -- table1` etc.
 
 use gdp::experiments;
-use gdp::gen::{generate, Family, GenConfig};
+use gdp::gen::{branched_nodes, generate, Family, GenConfig};
 use gdp::instance::Bounds;
 use gdp::propagation::registry::{EngineSpec, Registry};
-use gdp::propagation::{Engine as _, PreparedProblem as _};
+use gdp::propagation::{Engine as _, PreparedProblem as _, Status};
 use gdp::util::cli::Args;
 use gdp::util::fmt::secs;
+use gdp::util::json::Json;
 use gdp::util::timer::measure;
 
 fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) {
@@ -112,6 +117,76 @@ fn micro() {
     }
 }
 
+/// The batched-session bench: for each native engine and B in {1, 8, 64},
+/// time one `propagate_batch` dispatch of B branched node domains against
+/// B sequential `propagate` calls on the same prepared session, and write
+/// the baseline to BENCH_batch.json.
+fn batch_bench() {
+    let registry = Registry::with_defaults();
+    println!("\n== batch: propagate_batch vs B sequential propagate calls ==");
+    let inst = generate(&GenConfig {
+        family: Family::Mixed,
+        nrows: 2000,
+        ncols: 2000,
+        mean_row_nnz: 8,
+        seed: 13,
+        ..Default::default()
+    });
+    // root-propagate once so the branched nodes start from a realistic
+    // B&B fixed point
+    let root = registry.create(&EngineSpec::new("cpu_seq")).expect("cpu_seq").propagate(&inst);
+    if root.status != Status::Converged {
+        println!("(root propagation did not converge; skipping batch bench)");
+        return;
+    }
+    let mut records: Vec<Json> = Vec::new();
+    for (tag, spec) in [
+        ("cpu_seq", EngineSpec::new("cpu_seq")),
+        ("cpu_omp8", EngineSpec::new("cpu_omp").threads(8)),
+        ("gpu_model", EngineSpec::new("gpu_model")),
+    ] {
+        let engine = registry.create(&spec).expect("native engine");
+        let mut session = engine.prepare(&inst).expect("native prepare");
+        for b in [1usize, 8, 64] {
+            let starts: Vec<Bounds> = branched_nodes(&inst, &root.bounds, b, 7)
+                .into_iter()
+                .map(|n| n.bounds)
+                .collect();
+            let (_, loop_median, _) = measure(1, 3, || {
+                for s in &starts {
+                    let _ = session.propagate(s);
+                }
+            });
+            let (_, batch_median, _) = measure(1, 3, || {
+                let _ = session.propagate_batch(&starts);
+            });
+            let speedup = loop_median / batch_median.max(1e-12);
+            println!(
+                "bench batch/{tag}/B{b:<3} loop {:>10}  batch {:>10}  speedup {speedup:.2}x",
+                secs(loop_median),
+                secs(batch_median)
+            );
+            records.push(Json::obj(vec![
+                ("engine", Json::Str(tag.to_string())),
+                ("batch", Json::Num(b as f64)),
+                ("loop_s", Json::Num(loop_median)),
+                ("batch_s", Json::Num(batch_median)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("batch".to_string())),
+        ("instance", Json::Str(inst.name.clone())),
+        ("batch_sizes", Json::Arr(vec![Json::Num(1.0), Json::Num(8.0), Json::Num(64.0)])),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_batch.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_batch.json"),
+        Err(e) => println!("(could not write BENCH_batch.json: {e})"),
+    }
+}
+
 fn paper(filter: Option<&str>) {
     // reduced suite: every table/figure regenerated end-to-end
     // fig5/fig6 rerun the XLA engine several times per instance; the bench
@@ -143,9 +218,11 @@ fn main() {
     let filter = args.first().map(|s| s.as_str());
     match filter {
         Some("micro") => micro(),
+        Some("batch") => batch_bench(),
         Some(f) => paper(Some(f)),
         None => {
             micro();
+            batch_bench();
             paper(None);
         }
     }

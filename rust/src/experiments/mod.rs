@@ -2,6 +2,7 @@
 //! section 5). Every experiment produces the same rows/series the paper
 //! reports, written as aligned text + CSV + Markdown into `results/`.
 
+pub mod batch_throughput;
 pub mod context;
 pub mod price_par;
 pub mod table1;
@@ -19,9 +20,10 @@ use anyhow::Result;
 use crate::util::cli::Args;
 use crate::util::fmt::Table;
 
-/// All experiment ids, in paper order.
-pub const ALL_EXPERIMENTS: [&str; 8] =
-    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6"];
+/// All experiment ids, in paper order; `batch` is this reproduction's own
+/// section 5 outlook experiment (batched multi-node throughput).
+pub const ALL_EXPERIMENTS: [&str; 9] =
+    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6", "batch"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
@@ -35,6 +37,7 @@ pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
         "fig4" => fig4::run(&ctx),
         "fig5" => fig5::run(&ctx),
         "fig6" => fig6::run(&ctx),
+        "batch" => batch_throughput::run(&ctx),
         other => anyhow::bail!("unknown experiment {other}; known: {ALL_EXPERIMENTS:?}"),
     }
 }

@@ -4,7 +4,7 @@
 //! nnz-per-row and nnz-per-column distributions, dense "connecting
 //! constraints", integrality mix, and propagation dynamics (cascades).
 
-use crate::instance::{MipInstance, VarType};
+use crate::instance::{Bounds, MipInstance, VarType};
 use crate::sparse::permute::{permute_csr, Permutation};
 use crate::sparse::Csr;
 use crate::util::rng::Rng;
@@ -354,6 +354,67 @@ pub fn random_instance(rng: &mut Rng, max_rows: usize, max_cols: usize, int_frac
     generate(&cfg)
 }
 
+/// One branch-and-bound node domain derived from a propagated root: the
+/// tightened bounds plus the variables whose bounds the branching
+/// decisions changed (the warm-start seed set).
+#[derive(Debug, Clone)]
+pub struct BranchedNode {
+    pub bounds: Bounds,
+    pub seed_vars: Vec<usize>,
+}
+
+/// Generate `count` branched node bound-sets from `base` (typically a
+/// propagated root fixed point): each node applies 1-2 random branching
+/// decisions, halving a finite-width variable's domain downward
+/// (`ub <- mid`) or upward (`lb <- mid`), with floor/ceil rounding for
+/// integer variables. Node domains never start empty. This is the B&B
+/// workload shape of the paper's section 5 outlook — many sibling
+/// subproblems over one matrix — used by `--batch`, the batch bench and
+/// the throughput experiment.
+pub fn branched_nodes(
+    inst: &MipInstance,
+    base: &Bounds,
+    count: usize,
+    seed: u64,
+) -> Vec<BranchedNode> {
+    let mut rng = Rng::new(seed ^ 0xB5A2_C3E4_D501_9F6B);
+    let n = inst.ncols();
+    let wide: Vec<usize> = (0..n)
+        .filter(|&j| {
+            base.lb[j].is_finite() && base.ub[j].is_finite() && base.ub[j] - base.lb[j] > 1e-6
+        })
+        .collect();
+    (0..count)
+        .map(|_| {
+            let mut bounds = base.clone();
+            let mut seed_vars = Vec::new();
+            if !wide.is_empty() {
+                let depth = 1 + rng.below(2);
+                for _ in 0..depth {
+                    let v = wide[rng.below(wide.len())];
+                    let (l, u) = (bounds.lb[v], bounds.ub[v]);
+                    if !(l.is_finite() && u.is_finite() && u - l > 1e-6) {
+                        continue; // already narrowed by an earlier decision
+                    }
+                    let mid = (l + u) / 2.0;
+                    let is_int = inst.var_types[v] == VarType::Integer;
+                    if rng.chance(0.5) {
+                        // branch down: x_v <= mid
+                        bounds.ub[v] = if is_int { mid.floor().max(l) } else { mid };
+                    } else {
+                        // branch up: x_v >= mid
+                        bounds.lb[v] = if is_int { mid.ceil().min(u) } else { mid };
+                    }
+                    seed_vars.push(v);
+                }
+                seed_vars.sort_unstable();
+                seed_vars.dedup();
+            }
+            BranchedNode { bounds, seed_vars }
+        })
+        .collect()
+}
+
 /// Randomly permute the rows and columns of an instance
 /// (paper Appendix B's `seedN` runs).
 pub fn permute_instance(inst: &MipInstance, seed: u64) -> MipInstance {
@@ -431,6 +492,43 @@ mod tests {
             let inst = random_instance(rng, 30, 30, 0.5);
             inst.validate().unwrap();
         });
+    }
+
+    #[test]
+    fn branched_nodes_are_deterministic_nonempty_tightenings() {
+        let inst = generate(&GenConfig { nrows: 30, ncols: 30, seed: 5, ..Default::default() });
+        let base = Bounds::of(&inst);
+        let a = branched_nodes(&inst, &base, 8, 42);
+        let b = branched_nodes(&inst, &base, 8, 42);
+        assert_eq!(a.len(), 8);
+        for (na, nb) in a.iter().zip(&b) {
+            assert_eq!(na.bounds.lb, nb.bounds.lb, "deterministic by seed");
+            assert_eq!(na.seed_vars, nb.seed_vars);
+            // never an empty domain at the node root
+            assert!(!na.bounds.infeasible());
+            // every seeded variable's domain actually changed
+            for &v in &na.seed_vars {
+                assert!(
+                    na.bounds.lb[v] != base.lb[v] || na.bounds.ub[v] != base.ub[v],
+                    "seed var {v} unchanged"
+                );
+            }
+        }
+        // branching tightened something somewhere
+        assert!(a.iter().any(|n| !n.seed_vars.is_empty()));
+    }
+
+    #[test]
+    fn branched_nodes_handle_unbranchable_base() {
+        // all domains infinite: nothing to branch on, nodes are the base
+        let inst = generate(&GenConfig { nrows: 5, ncols: 5, seed: 1, ..Default::default() });
+        let base = Bounds {
+            lb: vec![f64::NEG_INFINITY; inst.ncols()],
+            ub: vec![f64::INFINITY; inst.ncols()],
+        };
+        let nodes = branched_nodes(&inst, &base, 3, 0);
+        assert_eq!(nodes.len(), 3);
+        assert!(nodes.iter().all(|n| n.seed_vars.is_empty()));
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! `gdp` — GPU-parallel domain propagation coordinator CLI.
 //!
 //! Subcommands:
-//!   propagate --mps FILE [--engine NAME] [engine options]
-//!       Run one instance through a registered engine and print the result.
-//!   engines
-//!       List the registered engines (names + one-line summaries).
+//!   propagate --mps FILE [--engine NAME] [engine options] [--batch N]
+//!       Run one instance through a registered engine and print the result;
+//!       with --batch N, additionally propagate N branched B&B node
+//!       domains through the batched session API.
+//!   engines [--json]
+//!       List the registered engines (names + one-line summaries);
+//!       --json (or the global --engines-json flag) emits the
+//!       machine-readable list with capabilities, for tooling and CI.
 //!   generate  --family F --rows M --cols N [--seed S] --out FILE
 //!       Emit a synthetic instance as an MPS file.
 //!   suite     [--scale X] [--seed S] [--out DIR]
 //!       Generate the benchmark suite as MPS files.
 //!   exp       <id>|all [--scale X] [--smoke] [--sets 1,2] [--out DIR] [--check]
 //!       Reproduce a paper table/figure (price-par, table1, fig2, roofline,
-//!       fig3, fig4, fig5, fig6).
+//!       fig3, fig4, fig5, fig6) or the batched-throughput outlook
+//!       experiment (batch).
 //!   inspect   --mps FILE
 //!       Print instance statistics.
 //!
@@ -31,10 +36,15 @@ use gdp::util::fmt;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
+    // global flag: machine-readable engine list, regardless of subcommand
+    if args.flag("engines-json") || args.get("engines-json").is_some() {
+        println!("{}", Registry::with_defaults().engines_json().to_string());
+        return ExitCode::SUCCESS;
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "propagate" => cmd_propagate(&args),
-        "engines" => cmd_engines(),
+        "engines" => cmd_engines(&args),
         "generate" => cmd_generate(&args),
         "suite" => cmd_suite(&args),
         "exp" => cmd_exp(&args),
@@ -70,12 +80,13 @@ gdp - GPU-parallel domain propagation (paper reproduction)
 USAGE:
   gdp propagate --mps FILE [--engine {engines}]
                 [--threads N] [--f32] [--fastmath] [--jnp] [--max-rounds R]
-                [--warm-var J] [--artifacts DIR] [--bounds]
-  gdp engines
+                [--warm-var J] [--batch N] [--artifacts DIR] [--bounds]
+  gdp engines [--json]
+  gdp --engines-json
   gdp generate --family mixed|knapsack|setcover|cascade|denseconn --rows M --cols N
                [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S] --out FILE
   gdp suite [--scale X] [--seed S] --out DIR
-  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|all>
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|all>
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
   gdp inspect --mps FILE
@@ -162,6 +173,40 @@ fn cmd_propagate(args: &Args) -> anyhow::Result<bool> {
         display_bounds = warm.bounds;
     }
 
+    // batched multi-node propagation: N branched B&B node domains derived
+    // from the root fixed point, propagated through the batched session
+    // API (the section 5 outlook workload)
+    if let Some(bstr) = args.get("batch") {
+        let b: usize = bstr
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--batch expects a node count, got {bstr:?}"))?;
+        if r.status != gdp::propagation::Status::Converged {
+            anyhow::bail!(
+                "--batch: root propagation ended {:?}, not Converged — branched node \
+                 domains need a root fixed point",
+                r.status
+            );
+        }
+        let nodes = gdp::gen::branched_nodes(&inst, &r.bounds, b, args.get_u64("seed", 17));
+        let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+        let timer = gdp::util::timer::Timer::start();
+        let results = session.propagate_batch(&starts);
+        let wall = timer.secs();
+        let converged = results.iter().filter(|r| r.status == gdp::propagation::Status::Converged).count();
+        let infeasible = results.iter().filter(|r| r.status == gdp::propagation::Status::Infeasible).count();
+        let total_rounds: u32 = results.iter().map(|r| r.rounds).sum();
+        println!(
+            "batch propagation: nodes={} wall={} nodes_per_s={:.1} converged={} infeasible={} other={} total_rounds={}",
+            results.len(),
+            fmt::secs(wall),
+            results.len() as f64 / wall.max(1e-12),
+            converged,
+            infeasible,
+            results.len() - converged - infeasible,
+            total_rounds
+        );
+    }
+
     if args.flag("bounds") {
         for j in 0..inst.ncols() {
             println!("  {}: [{}, {}]", inst.col_names[j], display_bounds.lb[j], display_bounds.ub[j]);
@@ -170,14 +215,19 @@ fn cmd_propagate(args: &Args) -> anyhow::Result<bool> {
     Ok(true)
 }
 
-fn cmd_engines() -> anyhow::Result<bool> {
+fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
     let registry = Registry::with_defaults();
+    if args.flag("json") {
+        println!("{}", registry.engines_json().to_string());
+        return Ok(true);
+    }
     println!("registered engines (artifacts {}):", registry.artifact_dir().display());
     for entry in registry.entries() {
         println!(
-            "  {:12} {}{}",
+            "  {:12} {}  [batch: {}]{}",
             entry.name,
             entry.summary,
+            entry.batch.name(),
             if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
         );
     }

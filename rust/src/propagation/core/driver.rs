@@ -1,0 +1,105 @@
+//! The generic round loop every engine drives: round counting, the round
+//! cap (paper section 4.1), and one shared mapping from per-round
+//! outcomes to a final [`Status`] — so termination semantics cannot
+//! drift between engines.
+
+use super::super::Status;
+
+/// What one round of propagation concluded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// Bound changes were found; schedule another round.
+    Progress,
+    /// A full round of work found no change: fixed point reached. The
+    /// round counts (it is the run's convergence witness).
+    Quiescent,
+    /// Nothing was marked at round entry: the system is already at a
+    /// fixed point. The round does NOT count — no work was done.
+    Empty,
+    /// An empty domain was produced; stop now, per the
+    /// [`Status::Infeasible`] contract (the round counts).
+    Infeasible,
+}
+
+/// Drive `round` until it terminates or the round cap is hit. Returns the
+/// number of counted rounds and the final status.
+pub fn run_rounds(max_rounds: u32, mut round: impl FnMut(u32) -> RoundOutcome) -> (u32, Status) {
+    match run_rounds_fallible::<(), _>(max_rounds, |r| Ok(round(r))) {
+        Ok(out) => out,
+        Err(()) => unreachable!("infallible round"),
+    }
+}
+
+/// [`run_rounds`] for engines whose rounds can fail at runtime (device
+/// backends): the first error aborts the loop and is returned as-is.
+pub fn run_rounds_fallible<E, F>(max_rounds: u32, mut round: F) -> Result<(u32, Status), E>
+where
+    F: FnMut(u32) -> Result<RoundOutcome, E>,
+{
+    let mut rounds = 0u32;
+    while rounds < max_rounds {
+        rounds += 1;
+        match round(rounds)? {
+            RoundOutcome::Progress => {}
+            RoundOutcome::Quiescent => return Ok((rounds, Status::Converged)),
+            RoundOutcome::Empty => return Ok((rounds - 1, Status::Converged)),
+            RoundOutcome::Infeasible => return Ok((rounds, Status::Infeasible)),
+        }
+    }
+    Ok((max_rounds, Status::MaxRounds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_when_quiescent() {
+        let (rounds, status) = run_rounds(10, |r| {
+            if r < 3 {
+                RoundOutcome::Progress
+            } else {
+                RoundOutcome::Quiescent
+            }
+        });
+        assert_eq!((rounds, status), (3, Status::Converged));
+    }
+
+    #[test]
+    fn empty_round_does_not_count() {
+        let (rounds, status) = run_rounds(10, |_| RoundOutcome::Empty);
+        assert_eq!((rounds, status), (0, Status::Converged));
+    }
+
+    #[test]
+    fn infeasible_round_counts() {
+        let (rounds, status) = run_rounds(10, |r| {
+            if r < 2 {
+                RoundOutcome::Progress
+            } else {
+                RoundOutcome::Infeasible
+            }
+        });
+        assert_eq!((rounds, status), (2, Status::Infeasible));
+    }
+
+    #[test]
+    fn round_cap_applies() {
+        let (rounds, status) = run_rounds(5, |_| RoundOutcome::Progress);
+        assert_eq!((rounds, status), (5, Status::MaxRounds));
+        let (rounds, status) = run_rounds(0, |_| RoundOutcome::Progress);
+        assert_eq!((rounds, status), (0, Status::MaxRounds));
+    }
+
+    #[test]
+    fn errors_abort_immediately() {
+        let result: Result<(u32, Status), &str> = run_rounds_fallible(10, |r| {
+            if r == 2 {
+                Err("device fault")
+            } else {
+                Ok(RoundOutcome::Progress)
+            }
+        });
+        assert_eq!(result.unwrap_err(), "device fault");
+    }
+}

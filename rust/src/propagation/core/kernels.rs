@@ -1,0 +1,471 @@
+//! The shared propagation kernels every engine schedules: the scalar
+//! marked-row sweep (Algorithm 1's inner step), its chunk-parallel
+//! variant over atomic bounds (the `cpu_omp` schedule, paper section
+//! 4.2), and the round-synchronous phases of Algorithm 2 (activity
+//! recompute, per-column candidate reduction, commit).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::super::activity::RowActivity;
+use super::super::bounds::{apply, candidates};
+use super::super::trace::RoundTrace;
+use super::state::AtomicBounds;
+use super::workset::WorkSet;
+use crate::instance::{MipInstance, VarType};
+use crate::numerics::{improves_lb, improves_ub, FEAS_TOL};
+use crate::sparse::Csc;
+
+/// What one scalar row sweep did.
+pub struct SweepOutcome {
+    /// Any bound improved.
+    pub changed: bool,
+    /// An empty domain was produced; the sweep returned immediately
+    /// (Status::Infeasible contract).
+    pub infeasible: bool,
+}
+
+/// Scalar sweep of one marked row (Algorithm 1 lines 7-20): recompute the
+/// row activity against the current bounds, gate on "can propagate" /
+/// redundancy, then compute and immediately apply candidates, re-marking
+/// every constraint containing a changed variable into `ws`'s next set.
+///
+/// `skip_var` masks columns the caller has fixed (the PaPILO-style
+/// engine's substituted variables); `on_change(j, lb_changed, ub_changed,
+/// lb[j], ub[j])` observes each applied change (reduction logging).
+/// Returns early on an empty domain, per the [`super::super::Status::Infeasible`]
+/// contract.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_row_marked(
+    inst: &MipInstance,
+    csc: &Csc,
+    r: usize,
+    lb: &mut [f64],
+    ub: &mut [f64],
+    ws: &WorkSet,
+    skip_var: Option<&[bool]>,
+    rt: &mut RoundTrace,
+    mut on_change: impl FnMut(usize, bool, bool, f64, f64),
+) -> SweepOutcome {
+    let (cols, vals) = inst.matrix.row(r);
+    rt.rows_processed += 1;
+    rt.nnz_processed += cols.len();
+    // line 8: compute activities
+    let act = RowActivity::of_row(cols, vals, lb, ub);
+    let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+    // line 9: "can c propagate" — skip redundant rows and rows with no
+    // finite side / too many infinities (early termination)
+    if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+        return SweepOutcome { changed: false, infeasible: false };
+    }
+    rt.nnz_processed += cols.len(); // the candidate sweep below
+    let mut changed = false;
+    for (&cj, &a) in cols.iter().zip(vals) {
+        let j = cj as usize;
+        if skip_var.map(|s| s[j]).unwrap_or(false) {
+            continue;
+        }
+        // line 11 "can v be tightened" is folded into the candidate
+        // computation: non-informative candidates are +-inf
+        let cand = candidates(
+            a,
+            lb[j],
+            ub[j],
+            inst.var_types[j] == VarType::Integer,
+            &act,
+            lhs,
+            rhs,
+        );
+        let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
+        if lch || uch {
+            changed = true;
+            rt.bound_changes += (lch as usize) + (uch as usize);
+            on_change(j, lch, uch, lb[j], ub[j]);
+            if lb[j] > ub[j] + FEAS_TOL {
+                // empty domain: stop immediately
+                return SweepOutcome { changed: true, infeasible: true };
+            }
+            // line 20: mark all constraints containing v
+            let (rows_j, _) = csc.col(j);
+            for &ri in rows_j {
+                ws.mark_next(ri as usize);
+            }
+        }
+    }
+    SweepOutcome { changed, infeasible: false }
+}
+
+/// What one atomic row sweep did (chunk-parallel schedule).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RowCounters {
+    /// Candidates that won their CAS (bound-improving updates applied).
+    pub changes: usize,
+    /// Candidates that passed the pre-filter and issued a CAS ("only use
+    /// atomics for improvements", paper section 3.5).
+    pub atomics: usize,
+    /// Nonzeros touched (activity + candidate passes).
+    pub nnz: usize,
+    /// An empty domain was produced; the sweep stopped mid-row.
+    pub infeasible: bool,
+}
+
+/// One row of the chunk-parallel marked sweep, against shared atomic
+/// bounds. Like the OpenMP original, bound changes made by other threads
+/// *within* a round may or may not be observed — the update lattice is
+/// monotone, so every interleaving converges to a valid state.
+pub fn sweep_row_atomic(
+    inst: &MipInstance,
+    csc: &Csc,
+    r: usize,
+    bounds: &AtomicBounds,
+    ws: &WorkSet,
+) -> RowCounters {
+    let mut out = RowCounters::default();
+    let (cols, vals) = inst.matrix.row(r);
+    out.nnz += cols.len();
+    let mut act = RowActivity::default();
+    for (&c, &a) in cols.iter().zip(vals) {
+        let j = c as usize;
+        act.accumulate(a, bounds.lb(j), bounds.ub(j));
+    }
+    let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+    if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
+        return out;
+    }
+    out.nnz += cols.len();
+    for (&c, &a) in cols.iter().zip(vals) {
+        let j = c as usize;
+        let cand = candidates(
+            a,
+            bounds.lb(j),
+            bounds.ub(j),
+            inst.var_types[j] == VarType::Integer,
+            &act,
+            lhs,
+            rhs,
+        );
+        let mut changed = false;
+        if cand.lb.is_finite() || cand.lb == f64::INFINITY {
+            if improves_lb(bounds.lb(j), cand.lb) {
+                out.atomics += 1;
+                changed |= bounds.try_improve_lb(j, cand.lb);
+            }
+        }
+        if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
+            if improves_ub(bounds.ub(j), cand.ub) {
+                out.atomics += 1;
+                changed |= bounds.try_improve_ub(j, cand.ub);
+            }
+        }
+        if changed {
+            out.changes += 1;
+            if bounds.lb(j) > bounds.ub(j) + FEAS_TOL {
+                out.infeasible = true;
+                return out;
+            }
+            let (rows_j, _) = csc.col(j);
+            for &ri in rows_j {
+                ws.mark_next(ri as usize);
+            }
+        }
+    }
+    out
+}
+
+/// Summed counters of one thread's (or one node's) share of a round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkCounters {
+    pub changes: usize,
+    pub atomics: usize,
+    pub nnz: usize,
+}
+
+impl ChunkCounters {
+    pub fn absorb(&mut self, row: RowCounters) {
+        self.changes += row.changes;
+        self.atomics += row.atomics;
+        self.nnz += row.nnz;
+    }
+
+    pub fn merge(&mut self, other: ChunkCounters) {
+        self.changes += other.changes;
+        self.atomics += other.atomics;
+        self.nnz += other.nnz;
+    }
+}
+
+/// One thread's share of a round: sweep the rows of `work` against shared
+/// atomic bounds, bailing out as soon as any thread flags infeasibility.
+pub fn sweep_chunk_atomic(
+    inst: &MipInstance,
+    csc: &Csc,
+    work: &[u32],
+    bounds: &AtomicBounds,
+    ws: &WorkSet,
+    infeasible: &AtomicBool,
+) -> ChunkCounters {
+    let mut counters = ChunkCounters::default();
+    for &r in work {
+        if infeasible.load(Ordering::Relaxed) {
+            break;
+        }
+        let row = sweep_row_atomic(inst, csc, r as usize, bounds, ws);
+        let infeas = row.infeasible;
+        counters.absorb(row);
+        if infeas {
+            infeasible.store(true, Ordering::Relaxed);
+            break;
+        }
+    }
+    counters
+}
+
+/// Fan `worklist` out over up to `threads` scoped threads, each running
+/// [`sweep_chunk_atomic`]; returns the summed counters. Uses plain
+/// contiguous chunking, like the paper's OpenMP static schedule.
+pub fn parallel_sweep(
+    inst: &MipInstance,
+    csc: &Csc,
+    worklist: &[u32],
+    bounds: &AtomicBounds,
+    ws: &WorkSet,
+    infeasible: &AtomicBool,
+    threads: usize,
+) -> ChunkCounters {
+    let nthreads = threads.min(worklist.len()).max(1);
+    if nthreads == 1 {
+        return sweep_chunk_atomic(inst, csc, worklist, bounds, ws, infeasible);
+    }
+    let chunk = worklist.len().div_ceil(nthreads);
+    let mut total = ChunkCounters::default();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(worklist.len());
+            if lo >= hi {
+                continue;
+            }
+            let work = &worklist[lo..hi];
+            handles
+                .push(scope.spawn(move || sweep_chunk_atomic(inst, csc, work, bounds, ws, infeasible)));
+        }
+        for h in handles {
+            total.merge(h.join().expect("sweep thread"));
+        }
+    });
+    total
+}
+
+/// Phase 1 of the round-synchronous schedule (Algorithm 2 lines 3-4):
+/// recompute every (active) row's activity against the current bounds.
+/// Returns the nonzeros touched.
+pub fn recompute_activities(
+    inst: &MipInstance,
+    lb: &[f64],
+    ub: &[f64],
+    acts: &mut [RowActivity],
+    active: Option<&[bool]>,
+) -> usize {
+    let mut nnz = 0;
+    for r in 0..inst.nrows() {
+        if active.map(|a| !a[r]).unwrap_or(false) {
+            continue;
+        }
+        let (cols, vals) = inst.matrix.row(r);
+        acts[r] = RowActivity::of_row(cols, vals, lb, ub);
+        nnz += cols.len();
+    }
+    nnz
+}
+
+/// Phase 2 (Algorithm 2 lines 5-13): candidates for every nonzero against
+/// the *incoming* bounds, reduced per column into `best_lb`/`best_ub` —
+/// the scatter-min/max / atomicMin-atomicMax step of section 3.5.
+/// `col_hits`, when present, counts improving candidates per column (the
+/// atomic-serialization hot-spot histogram of section 3.6).
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_candidates(
+    inst: &MipInstance,
+    lb: &[f64],
+    ub: &[f64],
+    acts: &[RowActivity],
+    best_lb: &mut [f64],
+    best_ub: &mut [f64],
+    mut col_hits: Option<&mut [u32]>,
+    rt: &mut RoundTrace,
+) {
+    for x in best_lb.iter_mut() {
+        *x = f64::NEG_INFINITY;
+    }
+    for x in best_ub.iter_mut() {
+        *x = f64::INFINITY;
+    }
+    if let Some(h) = col_hits.as_deref_mut() {
+        for v in h.iter_mut() {
+            *v = 0;
+        }
+    }
+    for r in 0..inst.nrows() {
+        let (cols, vals) = inst.matrix.row(r);
+        rt.nnz_processed += cols.len();
+        let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+        for (&c, &a) in cols.iter().zip(vals) {
+            let j = c as usize;
+            let cand = candidates(
+                a,
+                lb[j],
+                ub[j],
+                inst.var_types[j] == VarType::Integer,
+                &acts[r],
+                lhs,
+                rhs,
+            );
+            // pre-filter before the "atomic" (section 3.5)
+            let mut hit = false;
+            if improves_lb(lb[j], cand.lb) {
+                rt.atomic_updates += 1;
+                hit = true;
+                if cand.lb > best_lb[j] {
+                    best_lb[j] = cand.lb;
+                }
+            }
+            if improves_ub(ub[j], cand.ub) {
+                rt.atomic_updates += 1;
+                hit = true;
+                if cand.ub < best_ub[j] {
+                    best_ub[j] = cand.ub;
+                }
+            }
+            if hit {
+                if let Some(h) = col_hits.as_deref_mut() {
+                    h[j] += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Commit (the round-synchronous bound swap): apply each column's winning
+/// candidate. Returns `(any_change, any_empty_domain)`.
+pub fn commit_round(
+    lb: &mut [f64],
+    ub: &mut [f64],
+    best_lb: &[f64],
+    best_ub: &[f64],
+    rt: &mut RoundTrace,
+) -> (bool, bool) {
+    let mut change = false;
+    let mut infeas = false;
+    for j in 0..lb.len() {
+        if improves_lb(lb[j], best_lb[j]) {
+            lb[j] = best_lb[j];
+            change = true;
+            rt.bound_changes += 1;
+        }
+        if improves_ub(ub[j], best_ub[j]) {
+            ub[j] = best_ub[j];
+            change = true;
+            rt.bound_changes += 1;
+        }
+        if lb[j] > ub[j] + FEAS_TOL {
+            infeas = true;
+        }
+    }
+    (change, infeas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::Bounds;
+    use crate::sparse::Csr;
+
+    fn textbook() -> MipInstance {
+        // 2x + 3y <= 12, x,y in [0,10]: x <= 6, y <= 4
+        let matrix = Csr::from_triplets(1, 2, &[(0, 0, 2.0), (0, 1, 3.0)]).unwrap();
+        MipInstance::from_parts(
+            "k",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![12.0],
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            vec![VarType::Continuous; 2],
+        )
+    }
+
+    #[test]
+    fn scalar_sweep_tightens_and_marks() {
+        let inst = textbook();
+        let csc = inst.to_csc();
+        let ws = WorkSet::new(1);
+        ws.seed(&csc, Some(&[]));
+        let mut lb = inst.lb.clone();
+        let mut ub = inst.ub.clone();
+        let mut rt = RoundTrace::default();
+        let out =
+            sweep_row_marked(&inst, &csc, 0, &mut lb, &mut ub, &ws, None, &mut rt, |_, _, _, _, _| {});
+        assert!(out.changed && !out.infeasible);
+        assert_eq!(ub, vec![6.0, 4.0]);
+        assert_eq!(rt.rows_processed, 1);
+        assert_eq!(rt.bound_changes, 2);
+        ws.advance();
+        assert!(ws.take(0), "changed vars must re-mark their row");
+    }
+
+    #[test]
+    fn atomic_sweep_matches_scalar() {
+        let inst = textbook();
+        let csc = inst.to_csc();
+        let ws = WorkSet::new(1);
+        ws.seed(&csc, Some(&[]));
+        let bounds = AtomicBounds::new(&Bounds::of(&inst));
+        let row = sweep_row_atomic(&inst, &csc, 0, &bounds, &ws);
+        assert_eq!(row.changes, 2);
+        assert!(!row.infeasible);
+        let snap = bounds.snapshot();
+        assert_eq!(snap.ub, vec![6.0, 4.0]);
+    }
+
+    #[test]
+    fn round_synchronous_phases_tighten_once() {
+        let inst = textbook();
+        let mut lb = inst.lb.clone();
+        let mut ub = inst.ub.clone();
+        let mut acts = vec![RowActivity::default(); 1];
+        let mut best_lb = vec![0.0; 2];
+        let mut best_ub = vec![0.0; 2];
+        let mut rt = RoundTrace::default();
+        let nnz = recompute_activities(&inst, &lb, &ub, &mut acts, None);
+        assert_eq!(nnz, 2);
+        reduce_candidates(&inst, &lb, &ub, &acts, &mut best_lb, &mut best_ub, None, &mut rt);
+        let (change, infeas) = commit_round(&mut lb, &mut ub, &best_lb, &best_ub, &mut rt);
+        assert!(change && !infeas);
+        assert_eq!(ub, vec![6.0, 4.0]);
+        assert_eq!(rt.bound_changes, 2);
+    }
+
+    #[test]
+    fn sweep_detects_empty_domain() {
+        // x + y <= 1 with x,y in [2,3]: the first candidate empties x
+        let matrix = Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "inf",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            vec![VarType::Continuous; 2],
+        );
+        let csc = inst.to_csc();
+        let ws = WorkSet::new(1);
+        let mut lb = inst.lb.clone();
+        let mut ub = inst.ub.clone();
+        let mut rt = RoundTrace::default();
+        let out =
+            sweep_row_marked(&inst, &csc, 0, &mut lb, &mut ub, &ws, None, &mut rt, |_, _, _, _, _| {});
+        assert!(out.infeasible);
+        assert!(lb[0] > ub[0]);
+    }
+}

@@ -1,0 +1,48 @@
+//! The shared propagation core: one implementation of the paper's
+//! round machinery, specialized by each engine's scheduler.
+//!
+//! Before this layer existed every engine re-implemented the same four
+//! ingredients in its own dialect — the marking/worklist mechanism, the
+//! CSR activity recompute, the candidate-and-apply sweep, and the round
+//! loop with its termination rules. The core factors them out once:
+//!
+//! * [`workset::WorkSet`] — the marked-constraint set of Algorithm 1
+//!   (current + next round), with warm-start seeding and worklist
+//!   draining (paper section 4.2's load-balancing pre-process).
+//! * [`state::RoundState`] — scalar bounds + per-row activity scratch +
+//!   trace accumulation, reused across repeated propagations of one
+//!   prepared session; [`state::AtomicBounds`] — the lock-free CAS
+//!   min/max bound lattice the shared-memory engines update from many
+//!   threads.
+//! * [`kernels`] — the shared sweeps: [`kernels::sweep_row_marked`]
+//!   (scalar Algorithm 1 row step), [`kernels::sweep_row_atomic`] /
+//!   [`kernels::parallel_sweep`] (chunk-parallel variant over atomic
+//!   bounds), and the round-synchronous trio
+//!   [`kernels::recompute_activities`] / [`kernels::reduce_candidates`] /
+//!   [`kernels::commit_round`] (Algorithm 2 phases).
+//! * [`driver`] — the generic round loop: round counting, the round cap
+//!   (paper section 4.1) and the mapping from per-round
+//!   [`driver::RoundOutcome`]s to a final [`super::Status`], identical
+//!   for every engine so termination semantics cannot drift.
+//!
+//! Engines are thin schedulers over these pieces: `cpu_seq` drives
+//! `sweep_row_marked` over the marked set in row order, `cpu_omp` fans a
+//! drained worklist across scoped threads, `gpu_model` runs the
+//! round-synchronous phases over all rows, `papilo_like` adds its
+//! framework reductions around the same marked sweep, and the XLA
+//! engines' host loop runs device rounds under the same driver. The
+//! batched session API ([`super::PreparedProblem::propagate_batch`])
+//! schedules many B&B node domains over these same kernels.
+
+pub mod driver;
+pub mod kernels;
+pub mod state;
+pub mod workset;
+
+pub use driver::{run_rounds, run_rounds_fallible, RoundOutcome};
+pub use kernels::{
+    commit_round, parallel_sweep, recompute_activities, reduce_candidates, sweep_chunk_atomic,
+    sweep_row_atomic, sweep_row_marked, ChunkCounters, RowCounters, SweepOutcome,
+};
+pub use state::{AtomicBounds, RoundState};
+pub use workset::WorkSet;

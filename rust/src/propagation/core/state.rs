@@ -1,0 +1,214 @@
+//! Per-run propagation state shared by the engines: scalar bounds with
+//! activity scratch and trace accumulation ([`RoundState`]), and the
+//! lock-free atomic bound lattice the shared-memory engines update from
+//! many threads ([`AtomicBounds`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::super::activity::RowActivity;
+use super::super::trace::{RoundTrace, Trace};
+use super::super::{PropResult, Status};
+use crate::instance::Bounds;
+use crate::numerics::{improves_lb, improves_ub};
+
+/// Scalar run state: the bound vectors being tightened, per-row activity
+/// scratch (sized once per session, reused across propagations) and the
+/// accumulating trace. Lives inside a prepared session so repeated
+/// `propagate` calls reuse the allocations.
+pub struct RoundState {
+    pub lb: Vec<f64>,
+    pub ub: Vec<f64>,
+    /// Per-row activity scratch for the round-synchronous phases and the
+    /// PaPILO-style framework cache.
+    pub acts: Vec<RowActivity>,
+    pub trace: Trace,
+    /// Record per-round traces (tiny overhead; on by default).
+    pub record_trace: bool,
+}
+
+impl RoundState {
+    pub fn new(m: usize, record_trace: bool) -> RoundState {
+        RoundState {
+            lb: Vec::new(),
+            ub: Vec::new(),
+            acts: vec![RowActivity::default(); m],
+            trace: Trace::default(),
+            record_trace,
+        }
+    }
+
+    /// Load `start` bounds and clear the trace, reusing allocations.
+    pub fn reset(&mut self, start: &Bounds) {
+        self.lb.clear();
+        self.lb.extend_from_slice(&start.lb);
+        self.ub.clear();
+        self.ub.extend_from_slice(&start.ub);
+        self.trace = Trace::default();
+    }
+
+    /// Record one round's trace (no-op when `record_trace` is off).
+    pub fn push_round(&mut self, rt: RoundTrace) {
+        if self.record_trace {
+            self.trace.push(rt);
+        }
+    }
+
+    /// Move the run's outcome (bounds + trace) into a [`PropResult`],
+    /// leaving the state reusable for the next propagate call.
+    pub fn take_result(&mut self, rounds: u32, status: Status, wall: Duration) -> PropResult {
+        PropResult {
+            bounds: Bounds {
+                lb: std::mem::take(&mut self.lb),
+                ub: std::mem::take(&mut self.ub),
+            },
+            rounds,
+            status,
+            wall,
+            trace: std::mem::take(&mut self.trace),
+        }
+    }
+}
+
+/// f64 stored in an AtomicU64.
+#[inline]
+pub fn load_f64(a: &AtomicU64) -> f64 {
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+/// Atomic lower-bound max-update; returns true if this call improved it.
+/// The CAS loop on the f64 bit patterns has the same monotone-lattice
+/// semantics as the paper's OpenMP locks: every interleaving converges to
+/// a valid (possibly tighter-earlier) state.
+#[inline]
+pub fn atomic_update_lb(a: &AtomicU64, new: f64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let curf = f64::from_bits(cur);
+        if !improves_lb(curf, new) {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Atomic upper-bound min-update; returns true if this call improved it.
+#[inline]
+pub fn atomic_update_ub(a: &AtomicU64, new: f64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let curf = f64::from_bits(cur);
+        if !improves_ub(curf, new) {
+            return false;
+        }
+        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// The shared-memory bound lattice: one atomic per bound, updated with
+/// lock-free CAS min/max from any number of threads.
+pub struct AtomicBounds {
+    lb: Vec<AtomicU64>,
+    ub: Vec<AtomicU64>,
+}
+
+impl AtomicBounds {
+    pub fn new(start: &Bounds) -> AtomicBounds {
+        AtomicBounds {
+            lb: start.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect(),
+            ub: start.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn lb(&self, j: usize) -> f64 {
+        load_f64(&self.lb[j])
+    }
+
+    #[inline]
+    pub fn ub(&self, j: usize) -> f64 {
+        load_f64(&self.ub[j])
+    }
+
+    /// CAS max-update of `lb[j]`; true if this call improved it.
+    #[inline]
+    pub fn try_improve_lb(&self, j: usize, new: f64) -> bool {
+        atomic_update_lb(&self.lb[j], new)
+    }
+
+    /// CAS min-update of `ub[j]`; true if this call improved it.
+    #[inline]
+    pub fn try_improve_ub(&self, j: usize, new: f64) -> bool {
+        atomic_update_ub(&self.ub[j], new)
+    }
+
+    /// Copy the current lattice state out as plain bounds.
+    pub fn snapshot(&self) -> Bounds {
+        Bounds {
+            lb: self.lb.iter().map(load_f64).collect(),
+            ub: self.ub.iter().map(load_f64).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_lb_monotone() {
+        let a = AtomicU64::new(0.0f64.to_bits());
+        assert!(atomic_update_lb(&a, 2.0));
+        assert!(!atomic_update_lb(&a, 1.0));
+        assert!(atomic_update_lb(&a, 3.0));
+        assert_eq!(load_f64(&a), 3.0);
+    }
+
+    #[test]
+    fn atomic_ub_monotone() {
+        let a = AtomicU64::new(f64::INFINITY.to_bits());
+        assert!(atomic_update_ub(&a, 5.0));
+        assert!(!atomic_update_ub(&a, 6.0));
+        assert_eq!(load_f64(&a), 5.0);
+    }
+
+    #[test]
+    fn atomic_bounds_snapshot_round_trips() {
+        let start = Bounds { lb: vec![0.0, f64::NEG_INFINITY], ub: vec![5.0, f64::INFINITY] };
+        let ab = AtomicBounds::new(&start);
+        assert!(ab.try_improve_lb(0, 1.0));
+        assert!(ab.try_improve_ub(1, 9.0));
+        let snap = ab.snapshot();
+        assert_eq!(snap.lb, vec![1.0, f64::NEG_INFINITY]);
+        assert_eq!(snap.ub, vec![5.0, 9.0]);
+    }
+
+    #[test]
+    fn round_state_reuses_allocations_across_runs() {
+        let mut state = RoundState::new(3, true);
+        let start = Bounds { lb: vec![0.0; 2], ub: vec![1.0; 2] };
+        state.reset(&start);
+        state.push_round(RoundTrace { rows_processed: 3, ..Default::default() });
+        let r = state.take_result(1, Status::Converged, Duration::ZERO);
+        assert_eq!(r.bounds.lb, vec![0.0; 2]);
+        assert_eq!(r.trace.num_rounds(), 1);
+        // second run starts clean
+        state.reset(&start);
+        assert_eq!(state.lb, vec![0.0; 2]);
+        assert_eq!(state.trace.num_rounds(), 0);
+    }
+
+    #[test]
+    fn record_trace_off_drops_rounds() {
+        let mut state = RoundState::new(1, false);
+        state.reset(&Bounds { lb: vec![0.0], ub: vec![1.0] });
+        state.push_round(RoundTrace::default());
+        assert_eq!(state.trace.num_rounds(), 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! The marked-constraint set of Algorithm 1, shared by every marking
+//! engine: a current-round set and a next-round set over atomic flags, so
+//! the same structure serves the sequential engines (relaxed loads are
+//! free on one thread) and the chunk-parallel sweep (threads re-mark
+//! concurrently through a shared reference).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::sparse::Csc;
+
+/// Current/next marked sets over `m` constraints. All operations take
+/// `&self` (the flags are atomic), so a `WorkSet` can be shared across
+/// scoped threads during a round.
+pub struct WorkSet {
+    marked: Vec<AtomicBool>,
+    next: Vec<AtomicBool>,
+}
+
+impl WorkSet {
+    /// An all-unmarked set over `m` constraints.
+    pub fn new(m: usize) -> WorkSet {
+        WorkSet {
+            marked: (0..m).map(|_| AtomicBool::new(false)).collect(),
+            next: (0..m).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    /// Number of constraints tracked.
+    pub fn len(&self) -> usize {
+        self.marked.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.marked.is_empty()
+    }
+
+    /// Seed for a new propagation (Algorithm 1 line 1): mark every
+    /// constraint (cold start), or — warm-started after branching — only
+    /// the constraints containing a seed variable. Clears the next set.
+    pub fn seed(&self, csc: &Csc, seed_vars: Option<&[usize]>) {
+        match seed_vars {
+            None => {
+                for f in &self.marked {
+                    f.store(true, Ordering::Relaxed);
+                }
+            }
+            Some(vars) => {
+                for f in &self.marked {
+                    f.store(false, Ordering::Relaxed);
+                }
+                for &v in vars {
+                    let (rows_v, _) = csc.col(v);
+                    for &r in rows_v {
+                        self.marked[r as usize].store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        for f in &self.next {
+            f.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Take constraint `r` from the current round's set (Algorithm 1
+    /// line 7: unmark + report whether it was marked). Loads before
+    /// swapping so the sequential engines' per-row check stays a plain
+    /// read on the (common) unmarked path instead of a locked RMW —
+    /// race-free because `marked` is only written between rounds by the
+    /// scheduling thread (in-round re-marks go to the next set).
+    pub fn take(&self, r: usize) -> bool {
+        if !self.marked[r].load(Ordering::Relaxed) {
+            return false;
+        }
+        self.marked[r].swap(false, Ordering::Relaxed)
+    }
+
+    /// Mark constraint `r` for the NEXT round (Algorithm 1 line 20).
+    /// Thread-safe: the chunk-parallel sweep calls this through a shared
+    /// reference.
+    pub fn mark_next(&self, r: usize) {
+        self.next[r].store(true, Ordering::Relaxed);
+    }
+
+    /// Drain the current set into `out` as a worklist, leaving it empty —
+    /// the pre-processing step the paper uses for thread load balancing
+    /// (section 4.2).
+    pub fn drain_worklist(&self, out: &mut Vec<u32>) {
+        out.clear();
+        for (r, f) in self.marked.iter().enumerate() {
+            // load-first keeps the unmarked path a plain read (see `take`)
+            if f.load(Ordering::Relaxed) {
+                f.store(false, Ordering::Relaxed);
+                out.push(r as u32);
+            }
+        }
+    }
+
+    /// Is anything marked for the current round?
+    pub fn any_marked(&self) -> bool {
+        self.marked.iter().any(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// End of round: the next-round set becomes current (and the next set
+    /// is cleared).
+    pub fn advance(&self) {
+        for (m, n) in self.marked.iter().zip(&self.next) {
+            m.store(n.swap(false, Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn csc_of(triplets: &[(usize, usize, f64)], m: usize, n: usize) -> Csc {
+        Csc::from_csr(&Csr::from_triplets(m, n, triplets).unwrap())
+    }
+
+    #[test]
+    fn cold_seed_marks_everything() {
+        let csc = csc_of(&[(0, 0, 1.0), (1, 1, 1.0)], 2, 2);
+        let ws = WorkSet::new(2);
+        ws.seed(&csc, None);
+        assert!(ws.any_marked());
+        assert!(ws.take(0) && ws.take(1));
+        assert!(!ws.take(0), "take must unmark");
+        assert!(!ws.any_marked());
+    }
+
+    #[test]
+    fn warm_seed_marks_only_containing_rows() {
+        // rows 0,1 contain x0; row 2 contains only x1
+        let csc = csc_of(&[(0, 0, 1.0), (1, 0, 2.0), (2, 1, 1.0)], 3, 2);
+        let ws = WorkSet::new(3);
+        ws.seed(&csc, Some(&[0]));
+        assert!(ws.take(0) && ws.take(1));
+        assert!(!ws.take(2));
+    }
+
+    #[test]
+    fn advance_swaps_next_into_current() {
+        let csc = csc_of(&[(0, 0, 1.0)], 2, 1);
+        let ws = WorkSet::new(2);
+        ws.seed(&csc, Some(&[]));
+        assert!(!ws.any_marked());
+        ws.mark_next(1);
+        ws.advance();
+        assert!(!ws.take(0) && ws.take(1));
+        // next was cleared by advance
+        ws.advance();
+        assert!(!ws.any_marked());
+    }
+
+    #[test]
+    fn drain_collects_and_clears() {
+        let csc = csc_of(&[(0, 0, 1.0), (2, 0, 1.0)], 3, 1);
+        let ws = WorkSet::new(3);
+        ws.seed(&csc, Some(&[0]));
+        let mut work = Vec::new();
+        ws.drain_worklist(&mut work);
+        assert_eq!(work, vec![0, 2]);
+        assert!(!ws.any_marked());
+    }
+}

@@ -9,16 +9,24 @@
 //!    counts, atomic conflicts per column) that the device cost model
 //!    replays to estimate GPU runtimes (DESIGN.md section 3).
 //!
-//! All candidates in a round are computed against the *incoming* bounds;
-//! per-column reduction picks the best candidate (the scatter-min/max /
-//! atomicMin-atomicMax step of section 3.5).
+//! A thin scheduler over the shared core: each round runs
+//! [`core::recompute_activities`] (Alg. 2 lines 3-4),
+//! [`core::reduce_candidates`] (lines 5-13: all candidates against the
+//! *incoming* bounds, reduced per column — the scatter-min/max /
+//! atomicMin-atomicMax step of section 3.5) and [`core::commit_round`]
+//! (the round-synchronous bound swap), under the generic round driver.
+//!
+//! The batched schedule ([`PreparedProblem::propagate_batch`]) carries
+//! B node domains as an outer array axis over the same prepared
+//! structures — one conceptual device dispatch per round sweeps every
+//! still-active node, which is how a GPU would saturate on many small
+//! B&B subproblems (section 5 outlook).
 
-use super::activity::RowActivity;
-use super::bounds::candidates;
+use super::core::{self, run_rounds, RoundOutcome, RoundState};
 use super::trace::{RoundTrace, Trace};
 use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance, VarType};
-use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
+use crate::instance::{Bounds, MipInstance};
+use crate::numerics::MAX_ROUNDS;
 use crate::util::timer::Timer;
 
 pub struct GpuModelEngine {
@@ -42,8 +50,8 @@ impl Engine for GpuModelEngine {
         &self,
         inst: &'a MipInstance,
     ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
-        // one-time init (untimed): the round-synchronous double buffers and
-        // the per-row activity scratch, sized to the instance once and
+        // one-time init (untimed): the round-synchronous reduction buffers
+        // and the per-row activity scratch, sized to the instance once and
         // reused across repeated propagations
         let m = inst.nrows();
         let n = inst.ncols();
@@ -51,10 +59,10 @@ impl Engine for GpuModelEngine {
             inst,
             max_rounds: self.max_rounds,
             record_conflicts: self.record_conflicts,
+            state: RoundState::new(m, true),
             best_lb: vec![f64::NEG_INFINITY; n],
             best_ub: vec![f64::INFINITY; n],
             col_hits: vec![0u32; n],
-            acts: vec![RowActivity::default(); m],
         }))
     }
 }
@@ -64,10 +72,51 @@ pub struct GpuModelPrepared<'a> {
     inst: &'a MipInstance,
     pub max_rounds: u32,
     pub record_conflicts: bool,
+    state: RoundState,
     best_lb: Vec<f64>,
     best_ub: Vec<f64>,
     col_hits: Vec<u32>,
-    acts: Vec<RowActivity>,
+}
+
+impl GpuModelPrepared<'_> {
+    /// One round-synchronous round over one node's bounds (the shared
+    /// Algorithm 2 phases). Returns the outcome for the driver.
+    fn round(
+        inst: &MipInstance,
+        lb: &mut [f64],
+        ub: &mut [f64],
+        acts: &mut [crate::propagation::activity::RowActivity],
+        best_lb: &mut [f64],
+        best_ub: &mut [f64],
+        col_hits: &mut [u32],
+        record_conflicts: bool,
+        trace: &mut Trace,
+    ) -> RoundOutcome {
+        let mut rt = RoundTrace { rows_processed: inst.nrows(), ..Default::default() };
+        rt.nnz_processed += core::recompute_activities(inst, lb, ub, acts, None);
+        core::reduce_candidates(
+            inst,
+            lb,
+            ub,
+            acts,
+            best_lb,
+            best_ub,
+            if record_conflicts { Some(&mut col_hits[..]) } else { None },
+            &mut rt,
+        );
+        let (change, infeas) = core::commit_round(lb, ub, best_lb, best_ub, &mut rt);
+        if record_conflicts {
+            rt.max_col_conflicts = col_hits.iter().copied().max().unwrap_or(0) as usize;
+        }
+        trace.push(rt);
+        if infeas {
+            RoundOutcome::Infeasible
+        } else if !change {
+            RoundOutcome::Quiescent
+        } else {
+            RoundOutcome::Progress
+        }
+    }
 }
 
 impl PreparedProblem for GpuModelPrepared<'_> {
@@ -76,117 +125,111 @@ impl PreparedProblem for GpuModelPrepared<'_> {
     }
 
     fn propagate(&mut self, start: &Bounds) -> PropResult {
-        let inst = self.inst;
         let timer = Timer::start();
-        let m = inst.nrows();
+        let inst = self.inst;
+        self.state.reset(start);
+        let state = &mut self.state;
+        let best_lb = &mut self.best_lb;
+        let best_ub = &mut self.best_ub;
+        let col_hits = &mut self.col_hits;
+        let record_conflicts = self.record_conflicts;
+        let (rounds, status) = run_rounds(self.max_rounds, |_| {
+            Self::round(
+                inst,
+                &mut state.lb,
+                &mut state.ub,
+                &mut state.acts,
+                best_lb,
+                best_ub,
+                col_hits,
+                record_conflicts,
+                &mut state.trace,
+            )
+        });
+        state.take_result(rounds, status, timer.elapsed())
+    }
+
+    fn propagate_batch(&mut self, starts: &[Bounds]) -> Vec<PropResult> {
+        let inst = self.inst;
+        let b_count = starts.len();
+        if b_count == 0 {
+            return Vec::new();
+        }
+        let timer = Timer::start();
         let n = inst.ncols();
-        let mut lb = start.lb.clone();
-        let mut ub = start.ub.clone();
-        let mut trace = Trace::default();
-        let mut rounds = 0u32;
-        let mut status = Status::MaxRounds;
+        // batch as an outer array axis: all node bounds in two flat
+        // [B x n] arrays over the shared prepared structures
+        let mut lb_all: Vec<f64> = Vec::with_capacity(b_count * n);
+        let mut ub_all: Vec<f64> = Vec::with_capacity(b_count * n);
+        for s in starts {
+            lb_all.extend_from_slice(&s.lb);
+            ub_all.extend_from_slice(&s.ub);
+        }
+        let mut rounds = vec![0u32; b_count];
+        let mut traces: Vec<Trace> = vec![Trace::default(); b_count];
+        let mut statuses: Vec<Option<Status>> = vec![None; b_count];
 
-        while rounds < self.max_rounds {
-            rounds += 1;
-            let mut rt = RoundTrace { rows_processed: m, ..Default::default() };
-
-            // phase 1 (Alg. 2 lines 3-4): activities for ALL constraints
-            for r in 0..m {
-                let (cols, vals) = inst.matrix.row(r);
-                self.acts[r] = RowActivity::of_row(cols, vals, &lb, &ub);
-                rt.nnz_processed += cols.len();
-            }
-
-            // phase 2 (lines 5-13): candidates for ALL nonzeros, reduced
-            // per column against the incoming bounds
-            for x in self.best_lb.iter_mut() {
-                *x = f64::NEG_INFINITY;
-            }
-            for x in self.best_ub.iter_mut() {
-                *x = f64::INFINITY;
-            }
-            if self.record_conflicts {
-                for h in self.col_hits.iter_mut() {
-                    *h = 0;
+        // one conceptual dispatch per round: sweep every still-active
+        // node's slice with the shared kernels. The per-node arithmetic
+        // is identical to the single-node schedule, so results are
+        // bit-exact equal to B independent propagate calls.
+        while statuses.iter().any(|s| s.is_none()) {
+            for b in 0..b_count {
+                if statuses[b].is_some() {
+                    continue;
                 }
-            }
-            for r in 0..m {
-                let (cols, vals) = inst.matrix.row(r);
-                rt.nnz_processed += cols.len();
-                let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
-                for (&c, &a) in cols.iter().zip(vals) {
-                    let j = c as usize;
-                    let cand = candidates(
-                        a,
-                        lb[j],
-                        ub[j],
-                        inst.var_types[j] == VarType::Integer,
-                        &self.acts[r],
-                        lhs,
-                        rhs,
-                    );
-                    // pre-filter before the "atomic" (section 3.5)
-                    let mut hit = false;
-                    if improves_lb(lb[j], cand.lb) {
-                        rt.atomic_updates += 1;
-                        hit = true;
-                        if cand.lb > self.best_lb[j] {
-                            self.best_lb[j] = cand.lb;
-                        }
+                if rounds[b] >= self.max_rounds {
+                    statuses[b] = Some(Status::MaxRounds);
+                    continue;
+                }
+                rounds[b] += 1;
+                let lb = &mut lb_all[b * n..(b + 1) * n];
+                let ub = &mut ub_all[b * n..(b + 1) * n];
+                match Self::round(
+                    inst,
+                    lb,
+                    ub,
+                    &mut self.state.acts,
+                    &mut self.best_lb,
+                    &mut self.best_ub,
+                    &mut self.col_hits,
+                    self.record_conflicts,
+                    &mut traces[b],
+                ) {
+                    RoundOutcome::Progress => {}
+                    RoundOutcome::Quiescent | RoundOutcome::Empty => {
+                        statuses[b] = Some(Status::Converged);
                     }
-                    if improves_ub(ub[j], cand.ub) {
-                        rt.atomic_updates += 1;
-                        hit = true;
-                        if cand.ub < self.best_ub[j] {
-                            self.best_ub[j] = cand.ub;
-                        }
-                    }
-                    if hit && self.record_conflicts {
-                        self.col_hits[j] += 1;
-                    }
+                    RoundOutcome::Infeasible => statuses[b] = Some(Status::Infeasible),
                 }
-            }
-
-            // commit: round-synchronous bound swap
-            let mut change = false;
-            let mut infeas = false;
-            for j in 0..n {
-                if improves_lb(lb[j], self.best_lb[j]) {
-                    lb[j] = self.best_lb[j];
-                    change = true;
-                    rt.bound_changes += 1;
-                }
-                if improves_ub(ub[j], self.best_ub[j]) {
-                    ub[j] = self.best_ub[j];
-                    change = true;
-                    rt.bound_changes += 1;
-                }
-                if lb[j] > ub[j] + FEAS_TOL {
-                    infeas = true;
-                }
-            }
-            if self.record_conflicts {
-                rt.max_col_conflicts =
-                    self.col_hits.iter().copied().max().unwrap_or(0) as usize;
-            }
-            trace.push(rt);
-            if infeas {
-                status = Status::Infeasible;
-                break;
-            }
-            if !change {
-                status = Status::Converged;
-                break;
             }
         }
 
-        PropResult {
-            bounds: Bounds { lb, ub },
-            rounds,
-            status,
-            wall: timer.elapsed(),
-            trace,
-        }
+        let wall = timer.elapsed();
+        (0..b_count)
+            .map(|b| PropResult {
+                bounds: Bounds {
+                    lb: lb_all[b * n..(b + 1) * n].to_vec(),
+                    ub: ub_all[b * n..(b + 1) * n].to_vec(),
+                },
+                rounds: rounds[b],
+                status: statuses[b].unwrap_or(Status::MaxRounds),
+                wall,
+                trace: std::mem::take(&mut traces[b]),
+            })
+            .collect()
+    }
+
+    fn propagate_batch_warm(
+        &mut self,
+        starts: &[Bounds],
+        seed_vars: &[Vec<usize>],
+    ) -> Vec<PropResult> {
+        // round-synchronous engines process all rows every round anyway,
+        // so warm seeding changes nothing — same fallback as
+        // `propagate_warm`
+        assert_eq!(starts.len(), seed_vars.len(), "one seed-variable set per node");
+        self.propagate_batch(starts)
     }
 }
 
@@ -194,6 +237,7 @@ impl PreparedProblem for GpuModelPrepared<'_> {
 mod tests {
     use super::*;
     use crate::gen;
+    use crate::instance::VarType;
     use crate::propagation::seq::SeqEngine;
     use crate::sparse::Csr;
     use crate::testkit::{prop, Config};
@@ -313,5 +357,36 @@ mod tests {
         assert_eq!(again.status, Status::Converged);
         assert_eq!(again.rounds, 1);
         assert!(again.same_limit_point(&first));
+    }
+
+    #[test]
+    fn batch_is_bit_exact_with_independent_runs() {
+        // deterministic arithmetic: the array-axis batch must equal B
+        // independent propagate calls exactly, rounds and traces included
+        let inst = gen::generate(&gen::GenConfig {
+            nrows: 40,
+            ncols: 35,
+            seed: 6,
+            ..Default::default()
+        });
+        let engine = GpuModelEngine::default();
+        let mut session = engine.prepare(&inst).unwrap();
+        let base = session.propagate(&Bounds::of(&inst));
+        let nodes = gen::branched_nodes(&inst, &base.bounds, 5, 11);
+        let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+        let batch = session.propagate_batch(&starts);
+        assert_eq!(batch.len(), starts.len());
+        for (i, start) in starts.iter().enumerate() {
+            let solo = session.propagate(start);
+            assert_eq!(batch[i].status, solo.status, "node {i} status");
+            assert_eq!(batch[i].rounds, solo.rounds, "node {i} rounds");
+            assert_eq!(batch[i].bounds.lb, solo.bounds.lb, "node {i} lb");
+            assert_eq!(batch[i].bounds.ub, solo.bounds.ub, "node {i} ub");
+            assert_eq!(
+                batch[i].trace.total_nnz_processed(),
+                solo.trace.total_nnz_processed(),
+                "node {i} trace"
+            );
+        }
     }
 }

@@ -29,13 +29,21 @@
 //! 3. [`PreparedProblem::propagate_warm`] — same, but with the branched
 //!    variables named so marking engines start from the minimal marked set
 //!    (the paper's section 5 outlook scenario).
+//! 4. [`PreparedProblem::propagate_batch`] /
+//!    [`PreparedProblem::propagate_batch_warm`] — many B&B node domains
+//!    propagated over the same prepared structures in one call, the
+//!    batch as an outer axis (section 5's "enough work to saturate the
+//!    device" scenario).
 //!
-//! Engines are constructed by name through [`registry::Registry`], which
-//! also shares one PJRT [`crate::runtime::Runtime`] across all XLA
-//! variants.
+//! All engines schedule the shared round machinery in [`core`] (marking
+//! worklist, activity recompute, candidate sweeps, round driver) rather
+//! than carrying private copies of it. Engines are constructed by name
+//! through [`registry::Registry`], which also shares one PJRT
+//! [`crate::runtime::Runtime`] across all XLA variants.
 
 pub mod activity;
 pub mod bounds;
+pub mod core;
 pub mod trace;
 pub mod registry;
 pub mod seq;
@@ -57,6 +65,18 @@ pub enum Status {
     /// Round limit hit while still finding changes (paper section 4.1).
     MaxRounds,
     /// An empty domain was produced: the (sub)problem is infeasible.
+    ///
+    /// Contract (uniform across engines): the engine stops within — or at
+    /// the end of — the round that produced the empty domain. That round
+    /// is counted in [`PropResult::rounds`] and its (possibly partial)
+    /// trace is recorded. The returned bounds contain at least one empty
+    /// domain (`lb[j] > ub[j] + FEAS_TOL`) and are NOT a propagation
+    /// fixed point; callers must not propagate them further. Engines may
+    /// differ in how much of the detecting round they complete (a
+    /// sequential engine aborts mid-row, the chunk-parallel engine lets
+    /// in-flight threads drain), so the bounds of two infeasible runs are
+    /// not comparable — only the verdict is (see
+    /// [`PropResult::same_limit_point`]).
     Infeasible,
 }
 
@@ -141,6 +161,42 @@ pub trait PreparedProblem {
     /// engines never fail and use the default.
     fn try_propagate(&mut self, start: &Bounds) -> Result<PropResult> {
         Ok(self.propagate(start))
+    }
+
+    /// Batched hot path: propagate `starts.len()` B&B node domains over
+    /// the SAME prepared sparse structures — one matrix, B node
+    /// bound-sets, the paper's section 5 outlook scenario. The batch
+    /// dimension is an outer axis over the prepared problem: the default
+    /// schedules the nodes as a sequential loop, while engines with a
+    /// native batch schedule override it (`cpu_omp` parallelizes across
+    /// nodes × rows, `gpu_model` carries the batch as an extra array
+    /// axis of its round-synchronous sweep).
+    ///
+    /// Results are positionally aligned with `starts`, and each equals
+    /// what an independent [`PreparedProblem::propagate`] call from the
+    /// same start would produce (bit-exact for deterministic engines,
+    /// within the section 4.3 tolerance for concurrent ones). In a
+    /// natively batched run every result's `wall` is the wall time of
+    /// the whole batch dispatch, since the nodes execute together.
+    fn propagate_batch(&mut self, starts: &[Bounds]) -> Vec<PropResult> {
+        starts.iter().map(|s| self.propagate(s)).collect()
+    }
+
+    /// Warm batched re-propagation: like
+    /// [`PreparedProblem::propagate_batch`], but with each node's
+    /// just-branched variables named so marking engines seed each node's
+    /// worklist minimally. `seed_vars[i]` belongs to `starts[i]`.
+    fn propagate_batch_warm(
+        &mut self,
+        starts: &[Bounds],
+        seed_vars: &[Vec<usize>],
+    ) -> Vec<PropResult> {
+        assert_eq!(starts.len(), seed_vars.len(), "one seed-variable set per node");
+        starts
+            .iter()
+            .zip(seed_vars)
+            .map(|(s, vars)| self.propagate_warm(s, vars))
+            .collect()
     }
 }
 

@@ -1,65 +1,31 @@
 //! Shared-memory parallel Algorithm 1 — the `cpu_omp` baseline.
 //!
-//! Follows the paper's description (section 4.2): the per-round loop over
-//! constraints is parallelized; the marked-constraint set is pre-processed
-//! into a worklist so threads receive only useful work; bound updates use
-//! atomics (the paper uses OpenMP locks; we use lock-free CAS min/max on
-//! the f64 bit patterns, which has the same monotone-lattice semantics).
-//! Threading uses `std::thread::scope` (no external dependency).
+//! A thin scheduler over the shared core (paper section 4.2): each round
+//! drains the [`core::WorkSet`] into a worklist (so threads receive only
+//! useful work), fans it across scoped threads with
+//! [`core::parallel_sweep`], and updates bounds through the lock-free
+//! [`core::AtomicBounds`] lattice (the paper uses OpenMP locks; CAS
+//! min/max on the f64 bit patterns has the same monotone-lattice
+//! semantics). Like the OpenMP original, bound changes made by other
+//! threads *within* a round may or may not be observed — every
+//! interleaving converges to a valid state, and the fixed point matches
+//! the sequential one within tolerances.
 //!
-//! Like the OpenMP original, bound changes made by other threads *within*
-//! a round may or may not be observed — the update lattice is monotone, so
-//! every interleaving converges to a valid (possibly tighter-earlier)
-//! state, and the fixed point matches the sequential one within tolerances.
+//! The batched schedule ([`PreparedProblem::propagate_batch`]) extends
+//! the same round loop across B independent node domains: the per-round
+//! worklist becomes (node, row) pairs, parallelized across nodes × rows,
+//! so small per-node marked sets still saturate the thread pool — the
+//! section 5 outlook scenario.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 
-use super::activity::RowActivity;
-use super::bounds::candidates;
+use super::core::{self, run_rounds, AtomicBounds, ChunkCounters, RoundOutcome, WorkSet};
 use super::trace::{RoundTrace, Trace};
 use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance, VarType};
-use crate::numerics::{improves_lb, improves_ub, FEAS_TOL, MAX_ROUNDS};
+use crate::instance::{Bounds, MipInstance};
+use crate::numerics::MAX_ROUNDS;
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
-
-/// f64 stored in an AtomicU64.
-#[inline]
-fn load_f64(a: &AtomicU64) -> f64 {
-    f64::from_bits(a.load(Ordering::Relaxed))
-}
-
-/// Atomic lower-bound max-update; returns true if this call improved it.
-#[inline]
-fn atomic_update_lb(a: &AtomicU64, new: f64) -> bool {
-    let mut cur = a.load(Ordering::Relaxed);
-    loop {
-        let curf = f64::from_bits(cur);
-        if !improves_lb(curf, new) {
-            return false;
-        }
-        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => return true,
-            Err(actual) => cur = actual,
-        }
-    }
-}
-
-/// Atomic upper-bound min-update; returns true if this call improved it.
-#[inline]
-fn atomic_update_ub(a: &AtomicU64, new: f64) -> bool {
-    let mut cur = a.load(Ordering::Relaxed);
-    loop {
-        let curf = f64::from_bits(cur);
-        if !improves_ub(curf, new) {
-            return false;
-        }
-        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => return true,
-            Err(actual) => cur = actual,
-        }
-    }
-}
 
 pub struct OmpEngine {
     pub threads: usize,
@@ -91,9 +57,12 @@ impl Engine for OmpEngine {
         inst: &'a MipInstance,
     ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
         // one-time init (untimed): the column view used for re-marking
+        // plus the reusable marked set and worklist buffer
         Ok(Box::new(OmpPrepared {
             inst,
             csc: inst.to_csc(),
+            ws: WorkSet::new(inst.nrows()),
+            worklist: Vec::with_capacity(inst.nrows()),
             threads: self.threads,
             max_rounds: self.max_rounds,
         }))
@@ -104,8 +73,191 @@ impl Engine for OmpEngine {
 pub struct OmpPrepared<'a> {
     inst: &'a MipInstance,
     csc: Csc,
+    ws: WorkSet,
+    worklist: Vec<u32>,
     pub threads: usize,
     pub max_rounds: u32,
+}
+
+impl OmpPrepared<'_> {
+    /// The timed loop: the chunk-parallel schedule over the shared kernels.
+    fn run(&mut self, start: &Bounds, seed_vars: Option<&[usize]>) -> PropResult {
+        let timer = Timer::start();
+        let inst = self.inst;
+        let csc = &self.csc;
+        let threads = self.threads;
+        let bounds = AtomicBounds::new(start);
+        self.ws.seed(csc, seed_vars);
+        let ws = &self.ws;
+        let infeasible = AtomicBool::new(false);
+        let mut trace = Trace::default();
+        let worklist = &mut self.worklist;
+        let (rounds, status) = run_rounds(self.max_rounds, |_| {
+            // pre-process the marked set into a worklist (load balancing,
+            // paper section 4.2)
+            ws.drain_worklist(worklist);
+            if worklist.is_empty() {
+                return RoundOutcome::Empty;
+            }
+            let counters =
+                core::parallel_sweep(inst, csc, worklist, &bounds, ws, &infeasible, threads);
+            trace.push(RoundTrace {
+                rows_processed: worklist.len(),
+                nnz_processed: counters.nnz,
+                bound_changes: counters.changes,
+                atomic_updates: counters.atomics,
+                max_col_conflicts: 0,
+            });
+            if infeasible.load(Ordering::Relaxed) {
+                return RoundOutcome::Infeasible;
+            }
+            if counters.changes == 0 {
+                return RoundOutcome::Quiescent;
+            }
+            ws.advance();
+            RoundOutcome::Progress
+        });
+        PropResult { bounds: bounds.snapshot(), rounds, status, wall: timer.elapsed(), trace }
+    }
+
+    /// The batched schedule: B node domains over one matrix, the round's
+    /// work parallelized across nodes × rows.
+    fn run_batch(&mut self, starts: &[Bounds], seeds: Option<&[Vec<usize>]>) -> Vec<PropResult> {
+        let inst = self.inst;
+        let csc = &self.csc;
+        let threads = self.threads;
+        let max_rounds = self.max_rounds;
+        let b_count = starts.len();
+        if b_count == 0 {
+            return Vec::new();
+        }
+        let timer = Timer::start();
+        let m = inst.nrows();
+        // shared per-node state (bounds lattice, marked set, infeasible
+        // flag) plus host-side per-node accounting
+        let shared: Vec<(AtomicBounds, WorkSet, AtomicBool)> = starts
+            .iter()
+            .enumerate()
+            .map(|(b, start)| {
+                let ws = WorkSet::new(m);
+                ws.seed(csc, seeds.map(|s| s[b].as_slice()));
+                (AtomicBounds::new(start), ws, AtomicBool::new(false))
+            })
+            .collect();
+        let mut rounds = vec![0u32; b_count];
+        let mut traces: Vec<Trace> = vec![Trace::default(); b_count];
+        let mut statuses: Vec<Option<Status>> = vec![None; b_count];
+        let mut rows_this_round = vec![0usize; b_count];
+        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        let mut scratch: Vec<u32> = Vec::new();
+
+        loop {
+            // drain every active node's marked set into one combined
+            // (node, row) worklist
+            pairs.clear();
+            for b in 0..b_count {
+                rows_this_round[b] = 0;
+                if statuses[b].is_some() {
+                    continue;
+                }
+                if rounds[b] >= max_rounds {
+                    statuses[b] = Some(Status::MaxRounds);
+                    continue;
+                }
+                shared[b].1.drain_worklist(&mut scratch);
+                if scratch.is_empty() {
+                    // nothing marked at round entry: converged, round not
+                    // counted (same semantics as the single-node schedule)
+                    statuses[b] = Some(Status::Converged);
+                    continue;
+                }
+                rows_this_round[b] = scratch.len();
+                pairs.extend(scratch.iter().map(|&r| (b as u32, r)));
+            }
+            if pairs.is_empty() {
+                break;
+            }
+
+            // fan the combined worklist across threads: each thread
+            // resolves a pair to its node's shared state and runs the
+            // shared row sweep
+            let nthreads = threads.min(pairs.len()).max(1);
+            let chunk = pairs.len().div_ceil(nthreads);
+            let mut merged: Vec<ChunkCounters> = vec![ChunkCounters::default(); b_count];
+            let shared_ref = &shared;
+            let pairs_ref = &pairs;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for t in 0..nthreads {
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(pairs_ref.len());
+                    if lo >= hi {
+                        continue;
+                    }
+                    let work = &pairs_ref[lo..hi];
+                    handles.push(scope.spawn(move || {
+                        let mut local: Vec<ChunkCounters> =
+                            vec![ChunkCounters::default(); b_count];
+                        for &(b, r) in work {
+                            let (bounds, ws, infeasible) = &shared_ref[b as usize];
+                            if infeasible.load(Ordering::Relaxed) {
+                                continue;
+                            }
+                            let row = core::sweep_row_atomic(inst, csc, r as usize, bounds, ws);
+                            let infeas = row.infeasible;
+                            local[b as usize].absorb(row);
+                            if infeas {
+                                infeasible.store(true, Ordering::Relaxed);
+                            }
+                        }
+                        local
+                    }));
+                }
+                for h in handles {
+                    let local = h.join().expect("batch sweep thread");
+                    for (acc, part) in merged.iter_mut().zip(local) {
+                        acc.merge(part);
+                    }
+                }
+            });
+
+            // per-node round bookkeeping, same outcome mapping as the
+            // single-node driver
+            for b in 0..b_count {
+                if rows_this_round[b] == 0 || statuses[b].is_some() {
+                    continue;
+                }
+                rounds[b] += 1;
+                traces[b].push(RoundTrace {
+                    rows_processed: rows_this_round[b],
+                    nnz_processed: merged[b].nnz,
+                    bound_changes: merged[b].changes,
+                    atomic_updates: merged[b].atomics,
+                    max_col_conflicts: 0,
+                });
+                if shared[b].2.load(Ordering::Relaxed) {
+                    statuses[b] = Some(Status::Infeasible);
+                } else if merged[b].changes == 0 {
+                    statuses[b] = Some(Status::Converged);
+                } else {
+                    shared[b].1.advance();
+                }
+            }
+        }
+
+        let wall = timer.elapsed();
+        shared
+            .iter()
+            .enumerate()
+            .map(|(b, (bounds, _, _))| PropResult {
+                bounds: bounds.snapshot(),
+                rounds: rounds[b],
+                status: statuses[b].unwrap_or(Status::MaxRounds),
+                wall,
+                trace: std::mem::take(&mut traces[b]),
+            })
+            .collect()
+    }
 }
 
 impl PreparedProblem for OmpPrepared<'_> {
@@ -114,182 +266,24 @@ impl PreparedProblem for OmpPrepared<'_> {
     }
 
     fn propagate(&mut self, start: &Bounds) -> PropResult {
-        propagate_omp(self.inst, &self.csc, start, None, self.threads, self.max_rounds)
+        self.run(start, None)
     }
 
     fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
-        propagate_omp(self.inst, &self.csc, start, Some(seed_vars), self.threads, self.max_rounds)
-    }
-}
-
-/// The timed parallel propagation loop. With `seed_vars` only constraints
-/// containing a seed variable are initially marked (post-branching warm
-/// start); otherwise every constraint is.
-pub fn propagate_omp(
-    inst: &MipInstance,
-    csc: &Csc,
-    start: &Bounds,
-    seed_vars: Option<&[usize]>,
-    threads: usize,
-    max_rounds: u32,
-) -> PropResult {
-    let timer = Timer::start();
-    let m = inst.nrows();
-    let lb: Vec<AtomicU64> = start.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
-    let ub: Vec<AtomicU64> = start.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect();
-    let marked: Vec<AtomicBool> = match seed_vars {
-        None => (0..m).map(|_| AtomicBool::new(true)).collect(),
-        Some(vars) => {
-            let marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
-            for &v in vars {
-                let (rows_v, _) = csc.col(v);
-                for &r in rows_v {
-                    marked[r as usize].store(true, Ordering::Relaxed);
-                }
-            }
-            marked
-        }
-    };
-    let next_marked: Vec<AtomicBool> = (0..m).map(|_| AtomicBool::new(false)).collect();
-    let infeasible = AtomicBool::new(false);
-    let mut trace = Trace::default();
-    let mut rounds = 0u32;
-    let mut status = Status::MaxRounds;
-    let mut worklist: Vec<u32> = Vec::with_capacity(m);
-
-    while rounds < max_rounds {
-        rounds += 1;
-        // pre-process the marked set into a worklist (load balancing,
-        // paper section 4.2)
-        worklist.clear();
-        for r in 0..m {
-            if marked[r].swap(false, Ordering::Relaxed) {
-                worklist.push(r as u32);
-            }
-        }
-        if worklist.is_empty() {
-            status = Status::Converged;
-            rounds -= 1; // nothing processed: not a round
-            break;
-        }
-
-        let changes = AtomicUsize::new(0);
-        let atomics_issued = AtomicUsize::new(0);
-        let nnz_processed = AtomicUsize::new(0);
-        let nthreads = threads.min(worklist.len()).max(1);
-        let chunk = worklist.len().div_ceil(nthreads);
-
-        std::thread::scope(|scope| {
-            for t in 0..nthreads {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(worklist.len());
-                if lo >= hi {
-                    continue;
-                }
-                let work = &worklist[lo..hi];
-                let csc = &csc;
-                let lb = &lb;
-                let ub = &ub;
-                let next_marked = &next_marked;
-                let infeasible = &infeasible;
-                let changes = &changes;
-                let atomics_issued = &atomics_issued;
-                let nnz_processed = &nnz_processed;
-                scope.spawn(move || {
-                    let mut local_changes = 0usize;
-                    let mut local_atomics = 0usize;
-                    let mut local_nnz = 0usize;
-                    for &r in work {
-                        if infeasible.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        let r = r as usize;
-                        let (cols, vals) = inst.matrix.row(r);
-                        local_nnz += cols.len();
-                        let mut act = RowActivity::default();
-                        for (&c, &a) in cols.iter().zip(vals) {
-                            let j = c as usize;
-                            act.accumulate(a, load_f64(&lb[j]), load_f64(&ub[j]));
-                        }
-                        let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
-                        if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
-                            continue;
-                        }
-                        local_nnz += cols.len();
-                        for (&c, &a) in cols.iter().zip(vals) {
-                            let j = c as usize;
-                            let cand = candidates(
-                                a,
-                                load_f64(&lb[j]),
-                                load_f64(&ub[j]),
-                                inst.var_types[j] == VarType::Integer,
-                                &act,
-                                lhs,
-                                rhs,
-                            );
-                            let mut changed = false;
-                            if cand.lb.is_finite() || cand.lb == f64::INFINITY {
-                                if improves_lb(load_f64(&lb[j]), cand.lb) {
-                                    local_atomics += 1;
-                                    changed |= atomic_update_lb(&lb[j], cand.lb);
-                                }
-                            }
-                            if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
-                                if improves_ub(load_f64(&ub[j]), cand.ub) {
-                                    local_atomics += 1;
-                                    changed |= atomic_update_ub(&ub[j], cand.ub);
-                                }
-                            }
-                            if changed {
-                                local_changes += 1;
-                                if load_f64(&lb[j]) > load_f64(&ub[j]) + FEAS_TOL {
-                                    infeasible.store(true, Ordering::Relaxed);
-                                    break;
-                                }
-                                let (rows_j, _) = csc.col(j);
-                                for &ri in rows_j {
-                                    next_marked[ri as usize].store(true, Ordering::Relaxed);
-                                }
-                            }
-                        }
-                    }
-                    changes.fetch_add(local_changes, Ordering::Relaxed);
-                    atomics_issued.fetch_add(local_atomics, Ordering::Relaxed);
-                    nnz_processed.fetch_add(local_nnz, Ordering::Relaxed);
-                });
-            }
-        });
-
-        trace.push(RoundTrace {
-            rows_processed: worklist.len(),
-            nnz_processed: nnz_processed.load(Ordering::Relaxed),
-            bound_changes: changes.load(Ordering::Relaxed),
-            atomic_updates: atomics_issued.load(Ordering::Relaxed),
-            max_col_conflicts: 0,
-        });
-
-        if infeasible.load(Ordering::Relaxed) {
-            status = Status::Infeasible;
-            break;
-        }
-        if changes.load(Ordering::Relaxed) == 0 {
-            status = Status::Converged;
-            break;
-        }
-        for (m_, n_) in marked.iter().zip(&next_marked) {
-            m_.store(n_.swap(false, Ordering::Relaxed), Ordering::Relaxed);
-        }
+        self.run(start, Some(seed_vars))
     }
 
-    PropResult {
-        bounds: Bounds {
-            lb: lb.iter().map(load_f64).collect(),
-            ub: ub.iter().map(load_f64).collect(),
-        },
-        rounds,
-        status,
-        wall: timer.elapsed(),
-        trace,
+    fn propagate_batch(&mut self, starts: &[Bounds]) -> Vec<PropResult> {
+        self.run_batch(starts, None)
+    }
+
+    fn propagate_batch_warm(
+        &mut self,
+        starts: &[Bounds],
+        seed_vars: &[Vec<usize>],
+    ) -> Vec<PropResult> {
+        assert_eq!(starts.len(), seed_vars.len(), "one seed-variable set per node");
+        self.run_batch(starts, Some(seed_vars))
     }
 }
 
@@ -299,23 +293,6 @@ mod tests {
     use crate::gen::{self, GenConfig};
     use crate::propagation::seq::SeqEngine;
     use crate::testkit::{prop, Config};
-
-    #[test]
-    fn atomic_lb_monotone() {
-        let a = AtomicU64::new(0.0f64.to_bits());
-        assert!(atomic_update_lb(&a, 2.0));
-        assert!(!atomic_update_lb(&a, 1.0));
-        assert!(atomic_update_lb(&a, 3.0));
-        assert_eq!(load_f64(&a), 3.0);
-    }
-
-    #[test]
-    fn atomic_ub_monotone() {
-        let a = AtomicU64::new(f64::INFINITY.to_bits());
-        assert!(atomic_update_ub(&a, 5.0));
-        assert!(!atomic_update_ub(&a, 6.0));
-        assert_eq!(load_f64(&a), 5.0);
-    }
 
     #[test]
     fn matches_sequential_fixed_point() {
@@ -384,6 +361,50 @@ mod tests {
         if warm.status == Status::Converged {
             crate::testkit::assert_bounds_equal(&cold.bounds.lb, &warm.bounds.lb, "lb");
             crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "ub");
+        }
+    }
+
+    #[test]
+    fn batched_nodes_match_independent_runs() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 50, ncols: 40, seed: 12, ..Default::default() });
+        let engine = OmpEngine::with_threads(4);
+        let mut session = engine.prepare(&inst).unwrap();
+        let base = session.propagate(&Bounds::of(&inst));
+        if base.status != Status::Converged {
+            return;
+        }
+        // a few branched node domains derived from the root fixed point
+        let nodes = gen::branched_nodes(&inst, &base.bounds, 6, 3);
+        let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+        let batch = session.propagate_batch(&starts);
+        assert_eq!(batch.len(), starts.len());
+        for (i, start) in starts.iter().enumerate() {
+            let solo = session.propagate(start);
+            if batch[i].status == Status::Converged && solo.status == Status::Converged {
+                assert!(
+                    solo.same_limit_point(&batch[i]),
+                    "node {i} diverged between batch and solo"
+                );
+            }
+            if solo.status == Status::Infeasible {
+                assert_ne!(batch[i].status, Status::Converged, "node {i} missed infeasibility");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_of_empty_and_one_is_well_formed() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 20, ncols: 20, seed: 1, ..Default::default() });
+        let engine = OmpEngine::with_threads(2);
+        let mut session = engine.prepare(&inst).unwrap();
+        assert!(session.propagate_batch(&[]).is_empty());
+        let one = session.propagate_batch(&[Bounds::of(&inst)]);
+        assert_eq!(one.len(), 1);
+        let solo = session.propagate(&Bounds::of(&inst));
+        if one[0].status == Status::Converged && solo.status == Status::Converged {
+            assert!(solo.same_limit_point(&one[0]));
         }
     }
 }

@@ -8,12 +8,18 @@
 //! This reproduces the paper's observation that PaPILO is slower than the
 //! purpose-built `cpu_seq` on pure propagation workloads (speedup ~0.08),
 //! not because it is badly written but because it does more per round.
+//!
+//! The propagation itself is the same scalar marked sweep every marking
+//! engine schedules ([`core::sweep_row_marked`], with the reduction log
+//! attached through the sweep's change observer); what stays
+//! engine-specific is the framework behaviour around it — the full
+//! activity-cache refresh and the mandatory reduction passes.
 
+use super::core::{self, run_rounds, RoundOutcome, RoundState, WorkSet};
 use super::activity::RowActivity;
-use super::bounds::{apply, candidates};
-use super::trace::{RoundTrace, Trace};
-use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance, VarType};
+use super::trace::RoundTrace;
+use super::{Engine, PreparedProblem, PropResult};
+use crate::instance::{Bounds, MipInstance};
 use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
@@ -47,11 +53,14 @@ impl PapiloLikeEngine {
     /// Concrete-typed `prepare`, exposing the reduction [`log`]
     /// (`PapiloPrepared::log`) that the trait object hides.
     pub fn prepare_session<'a>(&self, inst: &'a MipInstance) -> PapiloPrepared<'a> {
+        let m = inst.nrows();
         PapiloPrepared {
             inst,
             csc: inst.to_csc(),
             threads: self.threads,
             max_rounds: self.max_rounds,
+            state: RoundState::new(m, true),
+            ws: WorkSet::new(m),
             log: Vec::new(),
         }
     }
@@ -77,6 +86,8 @@ pub struct PapiloPrepared<'a> {
     csc: Csc,
     pub threads: usize,
     pub max_rounds: u32,
+    state: RoundState,
+    ws: WorkSet,
     /// The reduction log of the last `propagate` call.
     pub log: Vec<Reduction>,
 }
@@ -87,134 +98,108 @@ impl PreparedProblem for PapiloPrepared<'_> {
     }
 
     fn propagate(&mut self, start: &Bounds) -> PropResult {
-        let inst = self.inst;
         let timer = Timer::start();
+        let inst = self.inst;
         let m = inst.nrows();
         let n = inst.ncols();
-        let mut lb = start.lb.clone();
-        let mut ub = start.ub.clone();
+        let threads = self.threads;
+        self.state.reset(start);
+        self.ws.seed(&self.csc, None);
+        self.log.clear();
         let mut row_active = vec![true; m];
         let mut var_fixed = vec![false; n];
-        let mut marked = vec![true; m];
-        let mut next_marked = vec![false; m];
-        self.log.clear();
-        let mut trace = Trace::default();
-        let mut rounds = 0u32;
-        let mut status = Status::MaxRounds;
-        // framework bookkeeping: per-round activity cache rebuilt from
-        // scratch (PaPILO keeps activities for *all* presolvers up to date)
-        let mut act_cache: Vec<RowActivity> = vec![RowActivity::default(); m];
+        let csc = &self.csc;
+        let ws = &self.ws;
+        let state = &mut self.state;
+        let log = &mut self.log;
 
-        'outer: while rounds < self.max_rounds {
-            rounds += 1;
+        let (rounds, status) = run_rounds(self.max_rounds, |_| {
             let mut rt = RoundTrace::default();
-            let mut change = false;
 
             // --- generic-framework pass 1: refresh ALL row activities
-            // (needed by the redundancy/feasibility reductions below)
-            for r in 0..m {
-                if !row_active[r] {
-                    continue;
-                }
-                let (cols, vals) = inst.matrix.row(r);
-                act_cache[r] = RowActivity::of_row(cols, vals, &lb, &ub);
-                rt.nnz_processed += cols.len();
-            }
+            // (needed by the redundancy/feasibility reductions below;
+            // PaPILO keeps activities for *all* presolvers up to date)
+            rt.nnz_processed += core::recompute_activities(
+                inst,
+                &state.lb,
+                &state.ub,
+                &mut state.acts,
+                Some(&row_active),
+            );
 
-            // --- propagation over the marked set (sequential, like
-            // PaPILO's single-thread propagation kernel)
+            // --- propagation over the marked set: the shared scalar
+            // sweep, sequential like PaPILO's propagation kernel, with
+            // the transaction log attached to the change observer
+            let mut progressed = false;
+            let mut infeasible = false;
             for r in 0..m {
-                if !row_active[r] || !marked[r] {
+                if !row_active[r] || !ws.take(r) {
                     continue;
                 }
-                marked[r] = false;
-                rt.rows_processed += 1;
-                let (cols, vals) = inst.matrix.row(r);
-                rt.nnz_processed += cols.len();
-                // re-read the activity (bounds may have moved this round)
-                let act = RowActivity::of_row(cols, vals, &lb, &ub);
-                let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
-                if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
-                    continue;
-                }
-                for (&cj, &a) in cols.iter().zip(vals) {
-                    let j = cj as usize;
-                    if var_fixed[j] {
-                        continue;
-                    }
-                    let cand = candidates(
-                        a,
-                        lb[j],
-                        ub[j],
-                        inst.var_types[j] == VarType::Integer,
-                        &act,
-                        lhs,
-                        rhs,
-                    );
-                    let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
-                    if lch {
-                        self.log.push(Reduction::LowerBound { col: j, value: lb[j] });
-                    }
-                    if uch {
-                        self.log.push(Reduction::UpperBound { col: j, value: ub[j] });
-                    }
-                    if lch || uch {
-                        change = true;
-                        rt.bound_changes += (lch as usize) + (uch as usize);
-                        if lb[j] > ub[j] + FEAS_TOL {
-                            status = Status::Infeasible;
-                            trace.push(rt);
-                            break 'outer;
+                let out = core::sweep_row_marked(
+                    inst,
+                    csc,
+                    r,
+                    &mut state.lb,
+                    &mut state.ub,
+                    ws,
+                    Some(&var_fixed),
+                    &mut rt,
+                    |j, lch, uch, lbj, ubj| {
+                        if lch {
+                            log.push(Reduction::LowerBound { col: j, value: lbj });
                         }
-                        let (rows_j, _) = self.csc.col(j);
-                        for &ri in rows_j {
-                            next_marked[ri as usize] = true;
+                        if uch {
+                            log.push(Reduction::UpperBound { col: j, value: ubj });
                         }
-                    }
+                    },
+                );
+                progressed |= out.changed;
+                if out.infeasible {
+                    infeasible = true;
+                    break;
                 }
+            }
+            if infeasible {
+                state.push_round(rt);
+                return RoundOutcome::Infeasible;
             }
 
             // --- generic-framework pass 2: reductions PaPILO always runs
             // (redundant rows removed, fixed variables logged), parallel
             // when threads > 1 — with the associated coordination overhead
-            let redundant: Vec<usize> = if self.threads > 1 {
-                scan_redundant_parallel(inst, &act_cache, &row_active, self.threads)
+            let redundant: Vec<usize> = if threads > 1 {
+                scan_redundant_parallel(inst, &state.acts, &row_active, threads)
             } else {
                 (0..m)
                     .filter(|&r| {
-                        row_active[r] && act_cache[r].redundant(inst.lhs[r], inst.rhs[r])
+                        row_active[r] && state.acts[r].redundant(inst.lhs[r], inst.rhs[r])
                     })
                     .collect()
             };
             for r in redundant {
                 row_active[r] = false;
-                self.log.push(Reduction::RedundantRow { row: r });
+                log.push(Reduction::RedundantRow { row: r });
             }
             for j in 0..n {
-                if !var_fixed[j] && lb[j].is_finite() && (ub[j] - lb[j]).abs() <= FEAS_TOL {
+                if !var_fixed[j]
+                    && state.lb[j].is_finite()
+                    && (state.ub[j] - state.lb[j]).abs() <= FEAS_TOL
+                {
                     var_fixed[j] = true;
-                    self.log.push(Reduction::FixedVar { col: j, value: lb[j] });
+                    log.push(Reduction::FixedVar { col: j, value: state.lb[j] });
                 }
             }
 
-            trace.push(rt);
-            if !change {
-                status = Status::Converged;
-                break;
+            state.push_round(rt);
+            if !progressed {
+                return RoundOutcome::Quiescent;
             }
-            std::mem::swap(&mut marked, &mut next_marked);
-            for f in next_marked.iter_mut() {
-                *f = false;
-            }
-        }
+            ws.advance();
+            RoundOutcome::Progress
+        });
 
-        PropResult {
-            bounds: Bounds { lb, ub },
-            rounds,
-            status,
-            wall: timer.elapsed(),
-            trace,
-        }
+        state.take_result(rounds, status, timer.elapsed())
     }
 }
 
@@ -256,6 +241,7 @@ mod tests {
     use super::*;
     use crate::gen;
     use crate::propagation::seq::SeqEngine;
+    use crate::propagation::Status;
     use crate::testkit::{prop, Config};
 
     #[test]
@@ -273,7 +259,7 @@ mod tests {
 
     #[test]
     fn logs_reductions() {
-        use crate::instance::MipInstance;
+        use crate::instance::{MipInstance, VarType};
         use crate::sparse::Csr;
         // x + y <= 2 (tightens nothing), z <= 1 fixed by 2z <= 2 with z in [1, 5]
         let matrix =

@@ -126,6 +126,42 @@ impl EngineSpec {
 
 type Factory = fn(&Registry, &EngineSpec) -> Result<Box<dyn Engine>>;
 
+/// How a prepared session executes
+/// [`super::PreparedProblem::propagate_batch`] — the registry-level
+/// capability surfaced through `gdp engines --json` so tooling can pick
+/// batch-capable engines without constructing them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// The default sequential loop over the node bound-sets.
+    Loop,
+    /// Natively parallelized across nodes × rows (shared-memory threads):
+    /// the schedule that actually increases host throughput.
+    ParallelNodes,
+    /// The batch is carried as an extra array axis of the
+    /// round-synchronous schedule (one conceptual dispatch per round
+    /// sweeps every active node). On the native Rust oracle this models
+    /// the GPU's saturation schedule — per-node work equals the loop;
+    /// the throughput win belongs to a device executing the axis wide.
+    ArrayAxis,
+}
+
+impl BatchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Loop => "loop",
+            BatchMode::ParallelNodes => "parallel_nodes",
+            BatchMode::ArrayAxis => "array_axis",
+        }
+    }
+
+    /// Does `propagate_batch` schedule the batch natively rather than
+    /// looping node-by-node? (Shape of the schedule, not a host-speedup
+    /// promise: see the [`BatchMode::ArrayAxis`] caveat.)
+    pub fn is_native(&self) -> bool {
+        !matches!(self, BatchMode::Loop)
+    }
+}
+
 /// One registered engine.
 pub struct EngineEntry {
     pub name: &'static str,
@@ -133,6 +169,8 @@ pub struct EngineEntry {
     pub summary: &'static str,
     /// Does this engine need compiled AOT artifacts (a PJRT runtime)?
     pub needs_artifacts: bool,
+    /// How the engine schedules batched multi-node propagation.
+    pub batch: BatchMode,
     factory: Factory,
 }
 
@@ -207,42 +245,49 @@ impl Registry {
             name: "cpu_seq",
             summary: "Algorithm 1: sequential with constraint marking (baseline)",
             needs_artifacts: false,
+            batch: BatchMode::Loop,
             factory: make_seq,
         });
         reg.register(EngineEntry {
             name: "cpu_omp",
             summary: "shared-memory parallel Algorithm 1 (scoped threads + atomic bounds)",
             needs_artifacts: false,
+            batch: BatchMode::ParallelNodes,
             factory: make_omp,
         });
         reg.register(EngineEntry {
             name: "gpu_model",
             summary: "native round-synchronous Algorithm 2 (oracle + trace recorder)",
             needs_artifacts: false,
+            batch: BatchMode::ArrayAxis,
             factory: make_gpu_model,
         });
         reg.register(EngineEntry {
             name: "papilo_like",
             summary: "PaPILO-style presolve baseline (propagation + reductions)",
             needs_artifacts: false,
+            batch: BatchMode::Loop,
             factory: make_papilo,
         });
         reg.register(EngineEntry {
             name: "gpu_atomic",
             summary: "AOT JAX/Pallas artifact via PJRT, host-driven round loop",
             needs_artifacts: true,
+            batch: BatchMode::Loop,
             factory: make_xla,
         });
         reg.register(EngineEntry {
             name: "gpu_loop",
             summary: "AOT artifact, whole propagation as one device-side loop",
             needs_artifacts: true,
+            batch: BatchMode::Loop,
             factory: make_xla,
         });
         reg.register(EngineEntry {
             name: "megakernel",
             summary: "AOT artifact, fixed-trip masked loop in one dispatch",
             needs_artifacts: true,
+            batch: BatchMode::Loop,
             factory: make_xla,
         });
         reg
@@ -276,6 +321,32 @@ impl Registry {
     /// `cpu_seq|cpu_omp|...` — the generated `--engine` help list.
     pub fn engine_list(&self) -> String {
         self.names().join("|")
+    }
+
+    /// Machine-readable engine list (the CLI `--engines-json` surface):
+    /// name, summary and capabilities — including how each engine
+    /// schedules batched multi-node propagation — generated from the
+    /// registry so tooling and CI can never drift from the accepted
+    /// `--engine` values.
+    pub fn engines_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![(
+            "engines",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::Str(e.name.to_string())),
+                            ("summary", Json::Str(e.summary.to_string())),
+                            ("needs_artifacts", Json::Bool(e.needs_artifacts)),
+                            ("batch", Json::Str(e.batch.name().to_string())),
+                            ("batch_native", Json::Bool(e.batch.is_native())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
     }
 
     /// Construct the engine `spec` describes.
@@ -339,6 +410,29 @@ mod tests {
             assert!(names.contains(&want), "missing {want}");
         }
         assert!(reg.engine_list().contains('|'));
+    }
+
+    #[test]
+    fn engines_json_covers_every_entry_with_batch_capability() {
+        let reg = Registry::with_defaults();
+        let json = reg.engines_json();
+        let engines = json.get("engines").and_then(|e| e.as_arr()).expect("engines array");
+        assert_eq!(engines.len(), reg.entries().len());
+        for (entry, j) in reg.entries().iter().zip(engines) {
+            assert_eq!(j.get("name").and_then(|v| v.as_str()), Some(entry.name));
+            assert_eq!(
+                j.get("batch").and_then(|v| v.as_str()),
+                Some(entry.batch.name())
+            );
+        }
+        // the capability map the batching work relies on
+        let mode_of = |name: &str| {
+            reg.entries().iter().find(|e| e.name == name).map(|e| e.batch).unwrap()
+        };
+        assert_eq!(mode_of("cpu_omp"), BatchMode::ParallelNodes);
+        assert_eq!(mode_of("gpu_model"), BatchMode::ArrayAxis);
+        assert_eq!(mode_of("cpu_seq"), BatchMode::Loop);
+        assert!(!BatchMode::Loop.is_native() && BatchMode::ArrayAxis.is_native());
     }
 
     #[test]

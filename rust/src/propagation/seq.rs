@@ -1,13 +1,18 @@
 //! Algorithm 1: sequential domain propagation with constraint marking and
 //! early termination — the `cpu_seq` baseline, following the paper's
 //! description of the state-of-the-art CPU implementation (section 2.1).
+//!
+//! The engine is a thin scheduler over the shared core: it drives
+//! [`core::sweep_row_marked`] over the [`core::WorkSet`] in row order
+//! under the generic round loop ([`core::run_rounds`]). Sequential
+//! semantics — immediate in-round bound updates, minimal marked-set work —
+//! come entirely from the schedule, not from a private implementation.
 
-use super::activity::RowActivity;
-use super::bounds::{apply, candidates};
-use super::trace::{RoundTrace, Trace};
-use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance, VarType};
-use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
+use super::core::{self, run_rounds, RoundOutcome, RoundState, WorkSet};
+use super::trace::RoundTrace;
+use super::{Engine, PreparedProblem, PropResult};
+use crate::instance::{Bounds, MipInstance};
+use crate::numerics::MAX_ROUNDS;
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
 
@@ -26,11 +31,13 @@ impl SeqEngine {
 
     /// Concrete-typed `prepare` (the trait method boxes this).
     pub fn prepare_session<'a>(&self, inst: &'a MipInstance) -> SeqPrepared<'a> {
+        let m = inst.nrows();
         SeqPrepared {
             inst,
             csc: inst.to_csc(),
+            state: RoundState::new(m, self.record_trace),
+            ws: WorkSet::new(m),
             max_rounds: if self.max_rounds == 0 { MAX_ROUNDS } else { self.max_rounds },
-            record_trace: self.record_trace,
         }
     }
 }
@@ -44,18 +51,77 @@ impl Engine for SeqEngine {
         &self,
         inst: &'a MipInstance,
     ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
-        // one-time init: the column view for the marking mechanism —
-        // excluded from timing, as in the paper (section 4.3)
+        // one-time init: the column view for the marking mechanism plus
+        // the reusable run state — excluded from timing, as in the paper
+        // (section 4.3)
         Ok(Box::new(self.prepare_session(inst)))
     }
 }
 
-/// A prepared sequential session: instance + its column view.
+/// A prepared sequential session: instance + column view + reusable run
+/// state (bounds scratch, marked set, trace buffers).
 pub struct SeqPrepared<'a> {
     inst: &'a MipInstance,
     csc: Csc,
+    state: RoundState,
+    ws: WorkSet,
     pub max_rounds: u32,
-    pub record_trace: bool,
+}
+
+impl SeqPrepared<'_> {
+    /// The timed loop: the sequential schedule over the shared kernels.
+    fn run(&mut self, start: &Bounds, seed_vars: Option<&[usize]>) -> PropResult {
+        let timer = Timer::start();
+        let inst = self.inst;
+        let m = inst.nrows();
+        self.state.reset(start);
+        self.ws.seed(&self.csc, seed_vars);
+        let csc = &self.csc;
+        let ws = &self.ws;
+        let state = &mut self.state;
+        let (rounds, status) = run_rounds(self.max_rounds, |_| {
+            let mut rt = RoundTrace::default();
+            let mut progressed = false;
+            for r in 0..m {
+                if !ws.take(r) {
+                    continue;
+                }
+                let out = core::sweep_row_marked(
+                    inst,
+                    csc,
+                    r,
+                    &mut state.lb,
+                    &mut state.ub,
+                    ws,
+                    None,
+                    &mut rt,
+                    |_, _, _, _, _| {},
+                );
+                progressed |= out.changed;
+                if out.infeasible {
+                    state.push_round(rt);
+                    return RoundOutcome::Infeasible;
+                }
+            }
+            if rt.rows_processed == 0 {
+                // nothing was marked: already at a fixed point (detected
+                // from the take loop itself — no separate marked-set scan
+                // on the warm-start hot path)
+                return RoundOutcome::Empty;
+            }
+            state.push_round(rt);
+            if !progressed {
+                return RoundOutcome::Quiescent;
+            }
+            // next round processes the freshly marked set; constraints
+            // marked during this round that sit *after* the current
+            // position were only marked for the next round — Algorithm 1
+            // as written re-visits them then
+            ws.advance();
+            RoundOutcome::Progress
+        });
+        state.take_result(rounds, status, timer.elapsed())
+    }
 }
 
 impl PreparedProblem for SeqPrepared<'_> {
@@ -64,158 +130,23 @@ impl PreparedProblem for SeqPrepared<'_> {
     }
 
     fn propagate(&mut self, start: &Bounds) -> PropResult {
-        propagate_seq_warm(self.inst, &self.csc, Some(start), None, self.max_rounds, self.record_trace)
+        self.run(start, None)
     }
 
     fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
-        propagate_seq_warm(
-            self.inst,
-            &self.csc,
-            Some(start),
-            Some(seed_vars),
-            self.max_rounds,
-            self.record_trace,
-        )
-    }
-}
-
-/// The timed propagation loop (Algorithm 1).
-pub fn propagate_seq(
-    inst: &MipInstance,
-    csc: &Csc,
-    max_rounds: u32,
-    record_trace: bool,
-) -> PropResult {
-    propagate_seq_warm(inst, csc, None, None, max_rounds, record_trace)
-}
-
-/// Warm-start propagation: the paper's post-branching use case
-/// (section 5 Outlook). The system is assumed already propagated;
-/// `start` carries the branched bounds and `seed_vars` the variables whose
-/// bounds just changed — only constraints containing them are marked, so
-/// the marking mechanism does the minimal work the paper describes
-/// ("equivalent to just after a propagation round with a single bound
-/// change on the branching variable").
-///
-/// With `start`/`seed_vars` = None this is plain Algorithm 1.
-pub fn propagate_seq_warm(
-    inst: &MipInstance,
-    csc: &Csc,
-    start: Option<&Bounds>,
-    seed_vars: Option<&[usize]>,
-    max_rounds: u32,
-    record_trace: bool,
-) -> PropResult {
-    let timer = Timer::start();
-    let m = inst.nrows();
-    let mut lb = start.map(|b| b.lb.clone()).unwrap_or_else(|| inst.lb.clone());
-    let mut ub = start.map(|b| b.ub.clone()).unwrap_or_else(|| inst.ub.clone());
-    // line 1: mark all constraints — or, warm-started, only those touching
-    // the seed variables
-    let mut marked = match seed_vars {
-        None => vec![true; m],
-        Some(vars) => {
-            let mut marked = vec![false; m];
-            for &v in vars {
-                let (rows_v, _) = csc.col(v);
-                for &r in rows_v {
-                    marked[r as usize] = true;
-                }
-            }
-            marked
-        }
-    };
-    let mut next_marked = vec![false; m];
-    let mut trace = Trace::default();
-    let mut rounds = 0u32;
-    let mut status = Status::MaxRounds;
-
-    'outer: while rounds < max_rounds {
-        rounds += 1;
-        let mut round_trace = RoundTrace::default();
-        let mut bound_change_found = false;
-
-        for r in 0..m {
-            if !marked[r] {
-                continue;
-            }
-            marked[r] = false; // line 7: unmark
-            let (cols, vals) = inst.matrix.row(r);
-            round_trace.rows_processed += 1;
-            round_trace.nnz_processed += cols.len();
-            // line 8: compute activities
-            let act = RowActivity::of_row(cols, vals, &lb, &ub);
-            let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
-            // line 9: "can c propagate" — skip redundant rows and rows with
-            // no finite side / too many infinities (early termination)
-            if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
-                continue;
-            }
-            round_trace.nnz_processed += cols.len(); // second sweep below
-            for (&cj, &a) in cols.iter().zip(vals) {
-                let j = cj as usize;
-                // line 11 "can v be tightened" is folded into the candidate
-                // computation: non-informative candidates are +-inf
-                let cand = candidates(
-                    a,
-                    lb[j],
-                    ub[j],
-                    inst.var_types[j] == VarType::Integer,
-                    &act,
-                    lhs,
-                    rhs,
-                );
-                let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
-                if lch || uch {
-                    bound_change_found = true;
-                    round_trace.bound_changes += (lch as usize) + (uch as usize);
-                    if lb[j] > ub[j] + FEAS_TOL {
-                        // empty domain: infeasible, stop immediately
-                        status = Status::Infeasible;
-                        if record_trace {
-                            trace.push(round_trace);
-                        }
-                        break 'outer;
-                    }
-                    // line 20: mark all constraints containing v
-                    let (rows_j, _) = csc.col(j);
-                    for &ri in rows_j {
-                        next_marked[ri as usize] = true;
-                    }
-                }
-            }
-        }
-
-        if record_trace {
-            trace.push(round_trace);
-        }
-        if !bound_change_found {
-            status = Status::Converged;
-            break;
-        }
-        // next round processes the freshly marked set; constraints marked
-        // during this round that sit *after* the current position were
-        // already marked in `next_marked` too — Algorithm 1 as written
-        // re-visits them next round
-        std::mem::swap(&mut marked, &mut next_marked);
-        for f in next_marked.iter_mut() {
-            *f = false;
-        }
-    }
-
-    PropResult {
-        bounds: Bounds { lb, ub },
-        rounds,
-        status,
-        wall: timer.elapsed(),
-        trace,
+        // the paper's post-branching use case (section 5 Outlook): only
+        // constraints containing a just-branched variable start marked,
+        // "equivalent to just after a propagation round with a single
+        // bound change on the branching variable"
+        self.run(start, Some(seed_vars))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::instance::MipInstance;
+    use crate::instance::{MipInstance, VarType};
+    use crate::propagation::Status;
     use crate::sparse::Csr;
 
     fn single_row(
@@ -431,6 +362,56 @@ mod tests {
                 crate::testkit::assert_bounds_equal(&cold.bounds.ub, &warm.bounds.ub, "ub");
             }
         });
+    }
+
+    #[test]
+    fn warm_start_with_no_seeds_is_a_zero_round_no_op() {
+        // the Empty outcome: an already-propagated system re-propagated
+        // with nothing marked does no work and counts no round
+        let inst = single_row(
+            &[(0, 2.0), (1, 3.0)],
+            2,
+            f64::NEG_INFINITY,
+            12.0,
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            &[],
+        );
+        let engine = SeqEngine::new();
+        let mut session = engine.prepare_session(&inst);
+        let base = session.propagate(&Bounds::of(&inst));
+        assert_eq!(base.status, Status::Converged);
+        let warm = session.propagate_warm(&base.bounds, &[]);
+        assert_eq!(warm.status, Status::Converged);
+        assert_eq!(warm.rounds, 0);
+        assert_eq!(warm.trace.num_rounds(), 0);
+        assert!(warm.same_limit_point(&base));
+    }
+
+    #[test]
+    fn batch_default_equals_independent_runs() {
+        let inst = single_row(
+            &[(0, 2.0), (1, 3.0)],
+            2,
+            f64::NEG_INFINITY,
+            12.0,
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            &[],
+        );
+        let engine = SeqEngine::new();
+        let mut session = engine.prepare_session(&inst);
+        let a = Bounds::of(&inst);
+        let mut b = a.clone();
+        b.ub[0] = 3.0;
+        let batch = session.propagate_batch(&[a.clone(), b.clone()]);
+        assert_eq!(batch.len(), 2);
+        let solo_a = session.propagate(&a);
+        let solo_b = session.propagate(&b);
+        assert!(batch[0].same_limit_point(&solo_a));
+        assert!(batch[1].same_limit_point(&solo_b));
+        assert_eq!(batch[0].rounds, solo_a.rounds);
+        assert_eq!(batch[1].rounds, solo_b.rounds);
     }
 
     #[test]

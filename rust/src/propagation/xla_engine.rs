@@ -20,6 +20,7 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
+use super::core::{run_rounds_fallible, RoundOutcome};
 use super::trace::{RoundTrace, Trace};
 use super::{Engine, PreparedProblem, PropResult, Status};
 use crate::instance::{Bounds, MipInstance};
@@ -262,13 +263,13 @@ fn run_cpu_loop(
     let (mut lb_buf, mut ub_buf) = upload_bounds(client, &lb0, &ub0, meta)?;
     let timer = Timer::start();
     let mut trace = Trace::default();
-    let mut rounds = 0u32;
-    let mut status = Status::MaxRounds;
     let mut final_lb: Vec<f64> = start.lb.clone();
     let mut final_ub: Vec<f64> = start.ub.clone();
 
-    while rounds < max_rounds {
-        rounds += 1;
+    // the host-driven round loop runs under the same generic driver as
+    // the native engines, so the round cap and termination mapping
+    // cannot drift from theirs
+    let (rounds, status) = run_rounds_fallible(max_rounds, |_| {
         let tuple = execute_round(exe, device, &lb_buf, &ub_buf)?;
         // keep the padded width internally; truncate only on exit
         let out = unpack_output(tuple, meta, meta.cols)?;
@@ -280,17 +281,16 @@ fn run_cpu_loop(
         final_lb = out.lb[..inst.ncols()].to_vec();
         final_ub = out.ub[..inst.ncols()].to_vec();
         if out.infeas == 1 {
-            status = Status::Infeasible;
-            break;
+            return Ok(RoundOutcome::Infeasible);
         }
         if out.flag == 0 {
-            status = Status::Converged;
-            break;
+            return Ok(RoundOutcome::Quiescent);
         }
         let next = upload_bounds(client, &out.lb, &out.ub, meta)?;
         lb_buf = next.0;
         ub_buf = next.1;
-    }
+        Ok(RoundOutcome::Progress)
+    })?;
 
     Ok(PropResult {
         bounds: Bounds { lb: final_lb, ub: final_ub },

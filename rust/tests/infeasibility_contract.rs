@@ -1,0 +1,104 @@
+//! Pins the `Status::Infeasible` contract shared by the marking engines
+//! (documented on `gdp::propagation::Status`): propagation stops within
+//! the round that produced the empty domain, that round is counted and
+//! its (possibly partial) trace recorded, and the returned bounds contain
+//! the empty domain. `cpu_seq` and `cpu_omp` historically disagreed
+//! (early exit vs finish-the-round); both now follow the one contract.
+
+use gdp::instance::{Bounds, MipInstance, VarType};
+use gdp::propagation::omp::OmpEngine;
+use gdp::propagation::seq::SeqEngine;
+use gdp::propagation::{Engine, PreparedProblem as _, PropResult, Status};
+use gdp::sparse::Csr;
+
+/// x + y <= 1 with x, y in [2, 3]: the very first candidate sweep
+/// empties a domain, in round 1.
+fn immediately_infeasible() -> MipInstance {
+    let matrix = Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+    MipInstance::from_parts(
+        "inf1",
+        matrix,
+        vec![f64::NEG_INFINITY],
+        vec![1.0],
+        vec![2.0, 2.0],
+        vec![3.0, 3.0],
+        vec![VarType::Continuous; 2],
+    )
+}
+
+fn assert_contract(name: &str, r: &PropResult) {
+    assert_eq!(r.status, Status::Infeasible, "{name}: status");
+    assert_eq!(r.rounds, 1, "{name}: the detecting round is counted");
+    assert_eq!(
+        r.trace.num_rounds(),
+        1,
+        "{name}: the detecting round's (partial) trace is recorded"
+    );
+    assert!(
+        r.trace.rounds[0].bound_changes > 0,
+        "{name}: the emptying bound change is part of the trace"
+    );
+    assert!(r.bounds.infeasible(), "{name}: returned bounds must contain the empty domain");
+}
+
+#[test]
+fn seq_and_omp_agree_on_immediate_infeasibility() {
+    let inst = immediately_infeasible();
+    assert_contract("cpu_seq", &SeqEngine::new().propagate(&inst));
+    for threads in [1, 2, 4] {
+        assert_contract(
+            &format!("cpu_omp/{threads}"),
+            &OmpEngine::with_threads(threads).propagate(&inst),
+        );
+    }
+}
+
+#[test]
+fn warm_started_detection_follows_the_same_contract() {
+    // two independent blocks: rows 0 (x0 + x1 <= 8) and 1 (x2 + x3 <= 8).
+    // Branching x0 below x1's forced minimum makes row 0 infeasible; the
+    // warm seed marks only row 0, so detection happens in warm round 1
+    // without touching the other block.
+    let matrix =
+        Csr::from_triplets(2, 4, &[(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0), (1, 3, 1.0)]).unwrap();
+    let inst = MipInstance::from_parts(
+        "blocks",
+        matrix,
+        vec![5.0, f64::NEG_INFINITY],
+        vec![8.0, 8.0],
+        vec![0.0; 4],
+        vec![3.0; 4],
+        vec![VarType::Continuous; 4],
+    );
+    for (name, engine) in [
+        ("cpu_seq", Box::new(SeqEngine::new()) as Box<dyn Engine>),
+        ("cpu_omp", Box::new(OmpEngine::with_threads(2)) as Box<dyn Engine>),
+    ] {
+        let mut session = engine.prepare(&inst).unwrap();
+        let root = session.propagate(&Bounds::of(&inst));
+        assert_eq!(root.status, Status::Converged, "{name}: root must converge");
+        // branch: x0 <= 1. Row 0 then needs x1 >= 4 > ub(x1) = 3: empty.
+        let mut branched = root.bounds.clone();
+        branched.ub[0] = 1.0;
+        let warm = session.propagate_warm(&branched, &[0]);
+        assert_eq!(warm.status, Status::Infeasible, "{name}: warm detection");
+        assert_eq!(warm.rounds, 1, "{name}: detected in the first warm round");
+        assert_eq!(warm.trace.num_rounds(), 1, "{name}: warm trace recorded");
+        assert!(
+            warm.trace.rounds[0].rows_processed <= 1,
+            "{name}: only the seeded block is touched"
+        );
+        assert!(warm.bounds.infeasible(), "{name}: empty domain returned");
+    }
+}
+
+#[test]
+fn infeasible_runs_are_mutually_comparable_only_by_verdict() {
+    // the contract's comparison rule: two infeasible results agree as
+    // limit points regardless of where in the round detection happened
+    let inst = immediately_infeasible();
+    let seq = SeqEngine::new().propagate(&inst);
+    let omp = OmpEngine::with_threads(4).propagate(&inst);
+    assert!(seq.same_limit_point(&omp));
+    assert!(omp.same_limit_point(&seq));
+}

@@ -144,6 +144,78 @@ fn warm_start_re_propagation_matches_fresh_cold_run() {
     }
 }
 
+/// Compare one batch slot against its independent oracle run: equal limit
+/// points when both converge; an infeasible verdict on either side may
+/// not become "converged" on the other.
+fn assert_batch_slot_agrees(
+    engine: &str,
+    inst: &str,
+    what: &str,
+    i: usize,
+    batch: &gdp::propagation::PropResult,
+    solo: &gdp::propagation::PropResult,
+) {
+    if batch.status == Status::Converged && solo.status == Status::Converged {
+        assert!(
+            solo.same_limit_point(batch),
+            "{engine} {what} node {i} diverged from independent run on {inst}"
+        );
+    }
+    if solo.status == Status::Infeasible {
+        assert_ne!(
+            batch.status,
+            Status::Converged,
+            "{engine} {what} node {i} missed infeasibility on {inst}"
+        );
+    }
+    if batch.status == Status::Infeasible {
+        assert_ne!(
+            solo.status,
+            Status::Converged,
+            "{engine} {what} node {i} fabricated infeasibility on {inst}"
+        );
+    }
+}
+
+#[test]
+fn propagate_batch_matches_independent_propagates() {
+    // the PR 2 acceptance scenario: for every registered engine,
+    // propagate_batch(&[b0..bB]) must equal the B independent propagate
+    // calls (section 4.3 tolerance), cold and warm-started alike
+    let registry = Registry::with_defaults();
+    let engines = runnable_engines(&registry);
+
+    for inst in &small_suite() {
+        let root = registry.create(&EngineSpec::new("cpu_seq")).unwrap().propagate(inst);
+        if root.status != Status::Converged {
+            continue;
+        }
+        let nodes = gen::branched_nodes(inst, &root.bounds, 5, 42);
+        let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+        let seeds: Vec<Vec<usize>> = nodes.iter().map(|n| n.seed_vars.clone()).collect();
+
+        for engine in &engines {
+            let mut session = engine
+                .prepare(inst)
+                .unwrap_or_else(|e| panic!("{}: prepare failed: {e:#}", engine.name()));
+
+            let batch = session.propagate_batch(&starts);
+            assert_eq!(batch.len(), starts.len(), "{}: batch arity", engine.name());
+            for (i, start) in starts.iter().enumerate() {
+                let solo = session.propagate(start);
+                assert_batch_slot_agrees(engine.name(), &inst.name, "cold", i, &batch[i], &solo);
+            }
+
+            let warm = session.propagate_batch_warm(&starts, &seeds);
+            assert_eq!(warm.len(), starts.len(), "{}: warm batch arity", engine.name());
+            for (i, (start, vars)) in starts.iter().zip(&seeds).enumerate() {
+                let solo = session.propagate_warm(start, vars);
+                assert_batch_slot_agrees(engine.name(), &inst.name, "warm", i, &warm[i], &solo);
+            }
+        }
+    }
+}
+
 #[test]
 fn help_list_and_registry_agree() {
     // the CLI HELP text is generated from the registry; both must contain

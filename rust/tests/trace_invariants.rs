@@ -1,0 +1,173 @@
+//! Cross-engine Trace invariants: the per-round instrumentation that the
+//! devsim cost models replay must stay internally consistent — core-layer
+//! refactors cannot be allowed to silently break it.
+//!
+//! Invariants pinned here:
+//! * counted rounds and recorded trace rounds agree;
+//! * per-round processed-row counts are plausible (marked engines
+//!   process at most m rows; the round-synchronous engine exactly m);
+//! * nonzero traffic per round is bounded by the engine's sweep shape;
+//! * a converged run's final round is the (change-free) convergence
+//!   witness and every earlier round found changes;
+//! * an infeasible run's returned bounds actually contain an empty
+//!   domain;
+//! * the marked-set engine never does more total work than the all-rows
+//!   engine on the same instance (the price of parallelism, section 2.2).
+
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::Bounds;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine as _, PreparedProblem as _, Status};
+
+fn suite() -> Vec<gdp::instance::MipInstance> {
+    let mut out = Vec::new();
+    for family in Family::ALL {
+        for seed in 0..2 {
+            out.push(gen::generate(&GenConfig {
+                family,
+                nrows: 40,
+                ncols: 35,
+                seed,
+                ..Default::default()
+            }));
+        }
+    }
+    out
+}
+
+#[test]
+fn per_engine_trace_invariants() {
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        let m = inst.nrows();
+        let nnz = inst.nnz();
+        for name in ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like"] {
+            let engine = registry.create(&EngineSpec::new(name).threads(3)).unwrap();
+            let r = engine.propagate(inst);
+            assert_eq!(
+                r.trace.num_rounds(),
+                r.rounds as usize,
+                "{name} on {}: trace rounds != counted rounds",
+                inst.name
+            );
+            for (i, rt) in r.trace.rounds.iter().enumerate() {
+                assert!(
+                    rt.rows_processed <= m,
+                    "{name} on {} round {i}: processed {} of {m} rows",
+                    inst.name,
+                    rt.rows_processed
+                );
+                // marked sweeps touch each nonzero at most twice per round
+                // (activity + candidates); papilo_like adds its framework
+                // activity refresh on top
+                let nnz_cap = if name == "papilo_like" { 3 * nnz } else { 2 * nnz };
+                assert!(
+                    rt.nnz_processed <= nnz_cap,
+                    "{name} on {} round {i}: nnz {} > cap {nnz_cap}",
+                    inst.name,
+                    rt.nnz_processed
+                );
+            }
+            if name == "gpu_model" {
+                assert!(
+                    r.trace.rounds.iter().all(|rt| rt.rows_processed == m),
+                    "gpu_model must process all rows every round on {}",
+                    inst.name
+                );
+            }
+            match r.status {
+                Status::Converged => {
+                    let rounds = &r.trace.rounds;
+                    assert!(!rounds.is_empty(), "{name} on {}: converged with no rounds", inst.name);
+                    assert_eq!(
+                        rounds.last().unwrap().bound_changes,
+                        0,
+                        "{name} on {}: final converged round found changes",
+                        inst.name
+                    );
+                    for (i, rt) in rounds[..rounds.len() - 1].iter().enumerate() {
+                        assert!(
+                            rt.bound_changes > 0,
+                            "{name} on {} round {i}: counted a change-free non-final round",
+                            inst.name
+                        );
+                    }
+                }
+                Status::Infeasible => {
+                    assert!(
+                        r.bounds.infeasible(),
+                        "{name} on {}: Infeasible without an empty domain",
+                        inst.name
+                    );
+                }
+                Status::MaxRounds => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn marked_set_work_bounded_by_all_rows_work() {
+    // seq's marked set processes a subset of rows each round and needs no
+    // more rounds than the round-synchronous schedule, so its total work
+    // is bounded by gpu_model's rounds * m (and nnz analogously)
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        let seq = registry.create(&EngineSpec::new("cpu_seq")).unwrap().propagate(inst);
+        let gpu = registry.create(&EngineSpec::new("gpu_model")).unwrap().propagate(inst);
+        if seq.status != Status::Converged || gpu.status != Status::Converged {
+            continue;
+        }
+        let seq_rows: usize = seq.trace.rounds.iter().map(|rt| rt.rows_processed).sum();
+        let gpu_rows: usize = gpu.trace.rounds.iter().map(|rt| rt.rows_processed).sum();
+        assert!(
+            seq_rows <= gpu_rows,
+            "marked-set work {seq_rows} exceeds all-rows work {gpu_rows} on {}",
+            inst.name
+        );
+        assert!(
+            seq.trace.total_nnz_processed() <= gpu.trace.total_nnz_processed(),
+            "marked-set nnz exceeds all-rows nnz on {}",
+            inst.name
+        );
+    }
+}
+
+#[test]
+fn warm_start_traces_stay_consistent() {
+    // the instrumentation contract holds for warm re-propagation too
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        let root = registry.create(&EngineSpec::new("cpu_seq")).unwrap().propagate(inst);
+        if root.status != Status::Converged {
+            continue;
+        }
+        let Some((v, branched)) = gdp::testkit::branch_first_wide_var(&root.bounds, 1e-3) else {
+            continue;
+        };
+        for name in ["cpu_seq", "cpu_omp"] {
+            let engine = registry.create(&EngineSpec::new(name).threads(3)).unwrap();
+            let mut session = engine.prepare(inst).unwrap();
+            let _ = session.propagate(&Bounds::of(inst));
+            let warm = session.propagate_warm(&branched, &[v]);
+            assert_eq!(
+                warm.trace.num_rounds(),
+                warm.rounds as usize,
+                "{name} warm on {}: trace rounds != counted rounds",
+                inst.name
+            );
+            // the warm marked set starts from the rows containing v only
+            if let Some(first) = warm.trace.rounds.first() {
+                let csc = inst.to_csc();
+                let (rows_v, _) = csc.col(v);
+                assert!(
+                    first.rows_processed <= rows_v.len(),
+                    "{name} warm on {}: first round processed {} rows, seed touches {}",
+                    inst.name,
+                    first.rows_processed,
+                    rows_v.len()
+                );
+            }
+        }
+    }
+}
