@@ -9,17 +9,22 @@
 //! paper's timing protocol (section 4.3). Earlier revisions timed the XLA
 //! engines setup-inclusive, which overstated their per-call cost.
 //!
-//! Three groups:
+//! Four groups:
 //! * micro — hot-path benches per engine/kernel (per-round costs).
 //! * batch — `propagate_batch` (B branched node domains per dispatch)
 //!   vs B sequential `propagate` calls, B in {1, 8, 64}; writes the
 //!   baseline numbers to `BENCH_batch.json` in the working directory.
+//! * pb — the pseudo-boolean constraint-class kernels: class-dispatched
+//!   (default) vs force-generic (`--no-specialize` semantics) per native
+//!   engine on the PB families; writes `BENCH_pb.json`.
 //! * paper — one end-to-end bench per paper table/figure, delegating to
 //!   the experiment harness on a reduced suite and printing the same rows
 //!   the paper reports.
 //!
-//! Filters: `cargo bench -- micro`, `cargo bench -- batch`, or
-//! `cargo bench -- table1` etc.
+//! Filters: `cargo bench -- micro`, `cargo bench -- batch`,
+//! `cargo bench -- pb`, `cargo bench -- table1` etc.
+//! `cargo bench -- smoke` is the CI quick mode: the pb group on tiny
+//! shapes only (seconds, still writes BENCH_pb.json).
 
 use gdp::experiments;
 use gdp::gen::{branched_nodes, generate, Family, GenConfig};
@@ -187,6 +192,73 @@ fn batch_bench() {
     }
 }
 
+/// The pseudo-boolean specialization bench: for each PB family and native
+/// engine, time the class-dispatched hot path against the same engine
+/// with specialization force-disabled, and write the baseline to
+/// BENCH_pb.json. `smoke` shrinks the shapes to CI-friendly sizes.
+fn pb_bench(smoke: bool) {
+    let registry = Registry::with_defaults();
+    println!("\n== pb: class-specialized vs generic kernels (prepare excluded) ==");
+    let shapes: &[(usize, usize)] = if smoke { &[(80, 80)] } else { &[(600, 600), (3000, 3000)] };
+    let iters = if smoke { 3 } else { 5 };
+    let mut records: Vec<Json> = Vec::new();
+    for &(rows, cols) in shapes {
+        for family in Family::PB {
+            let inst = generate(&GenConfig {
+                family,
+                nrows: rows,
+                ncols: cols,
+                mean_row_nnz: 8,
+                int_frac: 1.0,
+                inf_bound_frac: 0.0,
+                seed: 21,
+            });
+            let start = Bounds::of(&inst);
+            for (tag, spec) in [
+                ("cpu_seq", EngineSpec::new("cpu_seq")),
+                ("cpu_omp8", EngineSpec::new("cpu_omp").threads(8)),
+                ("gpu_model", EngineSpec::new("gpu_model")),
+            ] {
+                let specialized = registry.create(&spec).expect("native engine");
+                let generic =
+                    registry.create(&spec.clone().no_specialize()).expect("native engine");
+                let mut s_spec = specialized.prepare(&inst).expect("native prepare");
+                let mut s_gen = generic.prepare(&inst).expect("native prepare");
+                let (_, spec_median, _) = measure(1, iters, || {
+                    let _ = s_spec.propagate(&start);
+                });
+                let (_, gen_median, _) = measure(1, iters, || {
+                    let _ = s_gen.propagate(&start);
+                });
+                let speedup = gen_median / spec_median.max(1e-12);
+                println!(
+                    "bench pb/{}/{tag}/{rows}x{cols}  generic {:>10}  specialized {:>10}  speedup {speedup:.2}x",
+                    family.name(),
+                    secs(gen_median),
+                    secs(spec_median)
+                );
+                records.push(Json::obj(vec![
+                    ("instance", Json::Str(inst.name.clone())),
+                    ("family", Json::Str(family.name().to_string())),
+                    ("engine", Json::Str(tag.to_string())),
+                    ("generic_s", Json::Num(gen_median)),
+                    ("specialized_s", Json::Num(spec_median)),
+                    ("speedup", Json::Num(speedup)),
+                ]));
+            }
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("pb".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_pb.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_pb.json"),
+        Err(e) => println!("(could not write BENCH_pb.json: {e})"),
+    }
+}
+
 fn paper(filter: Option<&str>) {
     // reduced suite: every table/figure regenerated end-to-end
     // fig5/fig6 rerun the XLA engine several times per instance; the bench
@@ -219,10 +291,13 @@ fn main() {
     match filter {
         Some("micro") => micro(),
         Some("batch") => batch_bench(),
+        Some("pb") => pb_bench(false),
+        Some("smoke") => pb_bench(true),
         Some(f) => paper(Some(f)),
         None => {
             micro();
             batch_bench();
+            pb_bench(false);
             paper(None);
         }
     }

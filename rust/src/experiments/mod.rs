@@ -4,6 +4,7 @@
 
 pub mod batch_throughput;
 pub mod context;
+pub mod pb;
 pub mod price_par;
 pub mod table1;
 pub mod fig2;
@@ -20,10 +21,11 @@ use anyhow::Result;
 use crate::util::cli::Args;
 use crate::util::fmt::Table;
 
-/// All experiment ids, in paper order; `batch` is this reproduction's own
-/// section 5 outlook experiment (batched multi-node throughput).
-pub const ALL_EXPERIMENTS: [&str; 9] =
-    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6", "batch"];
+/// All experiment ids, in paper order; `batch` (batched multi-node
+/// throughput) and `pb` (pseudo-boolean constraint-class specialization)
+/// are this reproduction's own section 5 outlook experiments.
+pub const ALL_EXPERIMENTS: [&str; 10] =
+    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6", "batch", "pb"];
 
 /// Run one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
@@ -38,6 +40,7 @@ pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
         "fig5" => fig5::run(&ctx),
         "fig6" => fig6::run(&ctx),
         "batch" => batch_throughput::run(&ctx),
+        "pb" => pb::run(&ctx),
         other => anyhow::bail!("unknown experiment {other}; known: {ALL_EXPERIMENTS:?}"),
     }
 }

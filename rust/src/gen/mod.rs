@@ -11,7 +11,9 @@ use crate::util::rng::Rng;
 
 pub mod suite;
 
-/// Generator families. `Mixed` draws sub-blocks from the others.
+/// Generator families. `Mixed` draws sub-blocks from the others; the
+/// `Pb*` families are OPB-style pseudo-boolean workloads (all-binary
+/// variables, integral data) that feed the constraint-class analyzer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// Knapsack-like rows: positive coefficients, <= capacity, bounded vars.
@@ -24,15 +26,37 @@ pub enum Family {
     DenseConnecting,
     /// A blend of the above with ranged/equality rows and infinite bounds.
     Mixed,
+    /// Pseudo-boolean set packing: `sum x_j <= 1` rows over binary vars.
+    PbPacking,
+    /// Pseudo-boolean set covering: `sum x_j >= 1` rows over binary vars.
+    PbCovering,
+    /// Pseudo-boolean cardinality: `sum x_j (<=|>=|==) k` rows.
+    PbCardinality,
+    /// Pseudo-boolean mix: packing/covering/cardinality plus binary
+    /// knapsack and implication (generic-class) rows.
+    PbMixed,
 }
 
 impl Family {
-    pub const ALL: [Family; 5] = [
+    pub const ALL: [Family; 9] = [
         Family::Knapsack,
         Family::SetCover,
         Family::Cascade,
         Family::DenseConnecting,
         Family::Mixed,
+        Family::PbPacking,
+        Family::PbCovering,
+        Family::PbCardinality,
+        Family::PbMixed,
+    ];
+
+    /// The pseudo-boolean subset of [`Family::ALL`] (all-binary instances
+    /// that the OPB writer accepts).
+    pub const PB: [Family; 4] = [
+        Family::PbPacking,
+        Family::PbCovering,
+        Family::PbCardinality,
+        Family::PbMixed,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -42,6 +66,10 @@ impl Family {
             Family::Cascade => "cascade",
             Family::DenseConnecting => "denseconn",
             Family::Mixed => "mixed",
+            Family::PbPacking => "pb_packing",
+            Family::PbCovering => "pb_covering",
+            Family::PbCardinality => "pb_cardinality",
+            Family::PbMixed => "pb_mixed",
         }
     }
 }
@@ -91,6 +119,9 @@ pub fn generate(cfg: &GenConfig) -> MipInstance {
         Family::Cascade => gen_cascade(cfg, &mut rng, &name),
         Family::DenseConnecting => gen_dense_connecting(cfg, &mut rng, &name),
         Family::Mixed => gen_mixed(cfg, &mut rng, &name),
+        Family::PbPacking | Family::PbCovering | Family::PbCardinality | Family::PbMixed => {
+            gen_pb(cfg, &mut rng, &name)
+        }
     };
     debug_assert!(inst.validate().is_ok(), "generator produced invalid instance");
     inst
@@ -325,6 +356,129 @@ fn gen_mixed(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
     MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
 }
 
+/// Pseudo-boolean (OPB-style) instance: all variables binary, all data
+/// integral, rows drawn from the constraint classes the analyzer tags.
+/// Like the other families, every row is anchored at a feasible 0/1
+/// point, so the instances model solvable problems.
+fn gen_pb(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols.max(1);
+    let lb = vec![0.0; n];
+    let ub = vec![1.0; n];
+    let vt = vec![VarType::Integer; n];
+    // the feasible anchor point; covering rows need at least one 1
+    let mut x: Vec<bool> = (0..n).map(|_| rng.chance(0.35)).collect();
+    if !x.iter().any(|&b| b) {
+        let j = rng.below(n);
+        x[j] = true;
+    }
+    let ones: Vec<usize> = (0..n).filter(|&j| x[j]).collect();
+    let zeros: Vec<usize> = (0..n).filter(|&j| !x[j]).collect();
+
+    let mut rows: Vec<(Vec<u32>, Vec<f64>)> = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for i in 0..cfg.nrows {
+        // 0 packing, 1 covering, 2 cardinality, 3 knapsack, 4 implication
+        let kind = match cfg.family {
+            Family::PbPacking => 0,
+            Family::PbCovering => 1,
+            Family::PbCardinality => 2,
+            _ => i % 5,
+        };
+        let k = row_len(cfg, rng).clamp(1, n);
+        match kind {
+            0 => {
+                // packing: columns from the anchor's zero set plus at most
+                // one anchor one, so the activity at x is <= 1
+                let kz = k.min(zeros.len());
+                let mut cols: Vec<u32> =
+                    rng.sample_distinct(zeros.len(), kz).iter().map(|&i| zeros[i] as u32).collect();
+                if (cols.is_empty() || rng.chance(0.6)) && !ones.is_empty() {
+                    cols.push(ones[rng.below(ones.len())] as u32);
+                }
+                if cols.is_empty() {
+                    cols.push(rng.below(n) as u32);
+                }
+                let len = cols.len();
+                rows.push((cols, vec![1.0; len]));
+                lhs.push(f64::NEG_INFINITY);
+                rhs.push(1.0);
+            }
+            1 => {
+                // covering: at least one anchor one in the support
+                let mut cols = rng.sample_distinct(n, k);
+                let anchor = ones[rng.below(ones.len())];
+                if !cols.contains(&anchor) {
+                    cols.push(anchor);
+                }
+                let cols: Vec<u32> = cols.iter().map(|&c| c as u32).collect();
+                let len = cols.len();
+                rows.push((cols, vec![1.0; len]));
+                lhs.push(1.0);
+                rhs.push(f64::INFINITY);
+            }
+            2 => {
+                // cardinality: side(s) anchored at the support's count of
+                // anchor ones, so the row is always satisfiable
+                let cols = rng.sample_distinct(n, k);
+                let c = cols.iter().filter(|&&j| x[j]).count();
+                let (l, u) = match rng.below(3) {
+                    0 => (f64::NEG_INFINITY, (c + rng.below(k - c + 1)) as f64),
+                    1 => ((c - rng.below(c + 1)) as f64, f64::INFINITY),
+                    _ => (c as f64, c as f64),
+                };
+                let cols: Vec<u32> = cols.iter().map(|&c| c as u32).collect();
+                let len = cols.len();
+                rows.push((cols, vec![1.0; len]));
+                lhs.push(l);
+                rhs.push(u);
+            }
+            3 => {
+                // binary knapsack: positive integer weights, capacity at
+                // the anchor activity plus integer slack
+                let cols = rng.sample_distinct(n, k);
+                let mut vals: Vec<f64> =
+                    (0..cols.len()).map(|_| rng.range(1, 10) as f64).collect();
+                if vals.iter().all(|&v| v == 1.0) {
+                    // an all-unit row would be cardinality; keep the class
+                    vals[0] = 2.0;
+                }
+                let cap: f64 = cols
+                    .iter()
+                    .zip(&vals)
+                    .filter(|(&j, _)| x[j])
+                    .map(|(_, &v)| v)
+                    .sum::<f64>()
+                    + rng.below(6) as f64;
+                rows.push((cols.iter().map(|&c| c as u32).collect(), vals));
+                lhs.push(f64::NEG_INFINITY);
+                rhs.push(cap);
+            }
+            _ => {
+                // implication x_a <= x_b (generic class: a -1 coefficient);
+                // a comes from the zero set so the anchor satisfies it
+                if zeros.is_empty() || n < 2 {
+                    // degenerate shape: fall back to a trivial packing row
+                    rows.push((vec![rng.below(n) as u32], vec![1.0]));
+                    lhs.push(f64::NEG_INFINITY);
+                    rhs.push(1.0);
+                } else {
+                    let a = zeros[rng.below(zeros.len())];
+                    let mut b = rng.below(n);
+                    if b == a {
+                        b = (b + 1) % n;
+                    }
+                    rows.push((vec![a as u32, b as u32], vec![1.0, -1.0]));
+                    lhs.push(f64::NEG_INFINITY);
+                    rhs.push(0.0);
+                }
+            }
+        }
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
 /// (min activity, max activity) of a row under the given bounds,
 /// treating infinite contributions as +-inf.
 fn activity_range(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> (f64, f64) {
@@ -349,6 +503,22 @@ pub fn random_instance(rng: &mut Rng, max_rows: usize, max_cols: usize, int_frac
         mean_row_nnz: rng.range(1, 6),
         int_frac,
         inf_bound_frac: 0.15,
+        seed: rng.next_u64(),
+    };
+    generate(&cfg)
+}
+
+/// Small random pseudo-boolean instance (any PB family, modest dims) —
+/// the OPB round-trip and specialization property tests draw from this.
+pub fn random_pb_instance(rng: &mut Rng, max_rows: usize, max_cols: usize) -> MipInstance {
+    let family = Family::PB[rng.below(Family::PB.len())];
+    let cfg = GenConfig {
+        family,
+        nrows: rng.range(1, max_rows + 1),
+        ncols: rng.range(1, max_cols + 1),
+        mean_row_nnz: rng.range(1, 6),
+        int_frac: 1.0,
+        inf_bound_frac: 0.0,
         seed: rng.next_u64(),
     };
     generate(&cfg)
@@ -484,6 +654,50 @@ mod tests {
         assert!(inst.lb.iter().all(|&l| l == 0.0));
         assert!(inst.ub.iter().all(|&u| u == 1.0));
         assert!(inst.lhs.iter().all(|&l| l == 1.0));
+    }
+
+    #[test]
+    fn pb_families_are_binary_and_feasible_shapes() {
+        use crate::instance::{RowClass, RowClasses};
+        for family in Family::PB {
+            let cfg = GenConfig { family, nrows: 60, ncols: 50, seed: 3, ..Default::default() };
+            let inst = generate(&cfg);
+            inst.validate().unwrap_or_else(|e| panic!("{}: {e}", family.name()));
+            assert!(inst.var_types.iter().all(|t| *t == VarType::Integer), "{}", family.name());
+            assert!(inst.lb.iter().all(|&l| l == 0.0) && inst.ub.iter().all(|&u| u == 1.0));
+            let classes = RowClasses::analyze(&inst);
+            assert!(
+                classes.specialized_rows() > 0,
+                "{}: no specialized rows",
+                family.name()
+            );
+            match family {
+                Family::PbPacking => {
+                    assert_eq!(classes.count(RowClass::SetPacking), inst.nrows())
+                }
+                Family::PbCovering => {
+                    assert_eq!(classes.count(RowClass::SetCovering), inst.nrows())
+                }
+                Family::PbMixed => {
+                    // the mix must exercise the generic fallback too
+                    assert!(classes.count(RowClass::Generic) > 0);
+                    assert!(classes.count(RowClass::BinaryKnapsack) > 0);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn pb_instances_convert_to_opb_and_back() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..8 {
+            let inst = random_pb_instance(&mut rng, 20, 20);
+            let text = crate::opb::write_opb(&inst).expect("PB instances are OPB-encodable");
+            let back = crate::opb::read_opb_str(&text).unwrap();
+            assert_eq!(back.nrows(), inst.nrows());
+            assert_eq!(back.ncols(), inst.ncols());
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Constraint-class analysis: classify each row once at `prepare` time so
+//! the propagation kernels can dispatch cheaper specialized tightening
+//! rules per row (pseudo-boolean workloads are dominated by a handful of
+//! structured families). Classification is conservative — any doubt means
+//! [`RowClass::Generic`], the always-correct fallback path.
+//!
+//! The specialized rules in `propagation::bounds` are bit-exact with the
+//! generic candidate rule for the classes tagged here: the unit classes
+//! rely only on every coefficient being exactly `1.0` (multiplying or
+//! dividing by `1.0` is an IEEE identity), and the one-sided classes rely
+//! on the absent side producing a never-improving infinite candidate.
+//! The registry differential enforces this equality for every engine.
+
+use super::{MipInstance, VarType};
+
+/// The constraint class of one row, in specialization priority order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowClass {
+    /// `sum x_j <= 1` over binary variables, unit coefficients.
+    SetPacking,
+    /// `sum x_j >= 1` over binary variables, unit coefficients.
+    SetCovering,
+    /// Unit coefficients over binary variables with integral side(s)
+    /// other than the packing/covering shapes (`<= k`, `>= k`, `== k`,
+    /// ranged).
+    Cardinality,
+    /// Positive coefficients over binary variables, `<=`-only
+    /// (`sum a_j x_j <= c`, `a_j > 0`).
+    BinaryKnapsack,
+    /// Everything else: the full candidate rule applies.
+    Generic,
+}
+
+impl RowClass {
+    pub const ALL: [RowClass; 5] = [
+        RowClass::SetPacking,
+        RowClass::SetCovering,
+        RowClass::Cardinality,
+        RowClass::BinaryKnapsack,
+        RowClass::Generic,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RowClass::SetPacking => "set_packing",
+            RowClass::SetCovering => "set_covering",
+            RowClass::Cardinality => "cardinality",
+            RowClass::BinaryKnapsack => "binary_knapsack",
+            RowClass::Generic => "generic",
+        }
+    }
+
+    /// Does this class guarantee every coefficient is exactly `1.0`
+    /// (the classes whose kernels skip the per-entry multiply/divide)?
+    #[inline]
+    pub fn unit_coefficients(&self) -> bool {
+        matches!(
+            self,
+            RowClass::SetPacking | RowClass::SetCovering | RowClass::Cardinality
+        )
+    }
+
+    /// Does a specialized fast path exist for this class?
+    #[inline]
+    pub fn is_specialized(&self) -> bool {
+        !matches!(self, RowClass::Generic)
+    }
+}
+
+/// Is variable `j` binary in `inst` (integer with original domain {0, 1})?
+#[inline]
+fn is_binary(inst: &MipInstance, j: usize) -> bool {
+    inst.var_types[j] == VarType::Integer && inst.lb[j] == 0.0 && inst.ub[j] == 1.0
+}
+
+/// Classify one row of `inst` from its coefficient and side structure.
+/// Conservative: anything not provably in a specialized class is
+/// [`RowClass::Generic`].
+pub fn classify_row(inst: &MipInstance, r: usize) -> RowClass {
+    let (cols, vals) = inst.matrix.row(r);
+    if cols.is_empty() {
+        return RowClass::Generic;
+    }
+    if !cols.iter().all(|&c| is_binary(inst, c as usize)) {
+        return RowClass::Generic;
+    }
+    let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+    if vals.iter().all(|&v| v == 1.0) {
+        if lhs == f64::NEG_INFINITY && rhs == 1.0 {
+            RowClass::SetPacking
+        } else if lhs == 1.0 && rhs == f64::INFINITY {
+            RowClass::SetCovering
+        } else if (!lhs.is_finite() || lhs.fract() == 0.0)
+            && (!rhs.is_finite() || rhs.fract() == 0.0)
+        {
+            RowClass::Cardinality
+        } else {
+            RowClass::Generic
+        }
+    } else if vals.iter().all(|&v| v > 0.0) && lhs == f64::NEG_INFINITY && rhs.is_finite() {
+        RowClass::BinaryKnapsack
+    } else {
+        RowClass::Generic
+    }
+}
+
+/// Per-row class tags of one instance plus the class histogram, computed
+/// once at `prepare` time and stored alongside the CSR in every prepared
+/// session (untimed, like the CSC build).
+#[derive(Debug, Clone)]
+pub struct RowClasses {
+    tags: Vec<RowClass>,
+    counts: [usize; 5],
+}
+
+impl RowClasses {
+    /// One O(nnz) pass over the instance.
+    pub fn analyze(inst: &MipInstance) -> RowClasses {
+        let mut tags = Vec::with_capacity(inst.nrows());
+        let mut counts = [0usize; 5];
+        for r in 0..inst.nrows() {
+            let class = classify_row(inst, r);
+            counts[class as usize] += 1;
+            tags.push(class);
+        }
+        RowClasses { tags, counts }
+    }
+
+    /// Per-row tags, indexed by row (the slice the kernels dispatch on).
+    pub fn tags(&self) -> &[RowClass] {
+        &self.tags
+    }
+
+    pub fn count(&self, class: RowClass) -> usize {
+        self.counts[class as usize]
+    }
+
+    /// Rows with a specialized fast path (non-generic).
+    pub fn specialized_rows(&self) -> usize {
+        self.tags.len() - self.count(RowClass::Generic)
+    }
+
+    /// `(class name, count)` in [`RowClass::ALL`] order (the `gdp inspect`
+    /// histogram).
+    pub fn histogram(&self) -> Vec<(&'static str, usize)> {
+        RowClass::ALL.iter().map(|c| (c.name(), self.count(*c))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    /// Binary instance with the given rows and sides.
+    fn pb(rows: &[(Vec<u32>, Vec<f64>)], n: usize, lhs: Vec<f64>, rhs: Vec<f64>) -> MipInstance {
+        let matrix = Csr::from_rows(n, rows).unwrap();
+        MipInstance::from_parts(
+            "pb",
+            matrix,
+            lhs,
+            rhs,
+            vec![0.0; n],
+            vec![1.0; n],
+            vec![VarType::Integer; n],
+        )
+    }
+
+    #[test]
+    fn classifies_packing_covering_cardinality() {
+        let inst = pb(
+            &[
+                (vec![0, 1, 2], vec![1.0; 3]), // sum <= 1: packing
+                (vec![1, 2, 3], vec![1.0; 3]), // sum >= 1: covering
+                (vec![0, 2, 3], vec![1.0; 3]), // sum <= 2: cardinality
+                (vec![0, 1, 3], vec![1.0; 3]), // sum == 2: cardinality
+                (vec![0, 1], vec![1.0; 2]),    // 1 <= sum <= 2: cardinality
+            ],
+            4,
+            vec![f64::NEG_INFINITY, 1.0, f64::NEG_INFINITY, 2.0, 1.0],
+            vec![1.0, f64::INFINITY, 2.0, 2.0, 2.0],
+        );
+        let classes = RowClasses::analyze(&inst);
+        assert_eq!(classes.tags()[0], RowClass::SetPacking);
+        assert_eq!(classes.tags()[1], RowClass::SetCovering);
+        assert_eq!(classes.tags()[2], RowClass::Cardinality);
+        assert_eq!(classes.tags()[3], RowClass::Cardinality);
+        assert_eq!(classes.tags()[4], RowClass::Cardinality);
+        assert_eq!(classes.specialized_rows(), 5);
+    }
+
+    #[test]
+    fn classifies_knapsack_and_generic() {
+        let inst = pb(
+            &[
+                (vec![0, 1, 2], vec![3.0, 4.0, 2.0]),  // positive <=: knapsack
+                (vec![0, 1], vec![1.0, -1.0]),         // negative coefficient
+                (vec![0, 1, 2], vec![3.0, 4.0, 2.0]),  // positive but >=
+                (vec![0, 1], vec![1.0, 1.0]),          // non-integral side
+            ],
+            3,
+            vec![f64::NEG_INFINITY, f64::NEG_INFINITY, 5.0, f64::NEG_INFINITY],
+            vec![6.0, 0.0, f64::INFINITY, 1.5],
+        );
+        let classes = RowClasses::analyze(&inst);
+        assert_eq!(classes.tags()[0], RowClass::BinaryKnapsack);
+        assert_eq!(classes.tags()[1], RowClass::Generic);
+        assert_eq!(classes.tags()[2], RowClass::Generic);
+        assert_eq!(classes.tags()[3], RowClass::Generic);
+        assert_eq!(classes.count(RowClass::Generic), 3);
+    }
+
+    #[test]
+    fn non_binary_variables_force_generic() {
+        // same unit-packing shape, but one continuous and one wide-integer
+        // variable
+        let matrix =
+            Csr::from_rows(2, &[(vec![0, 1], vec![1.0, 1.0])]).unwrap();
+        let inst = MipInstance::from_parts(
+            "nb",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![1.0],
+            vec![0.0, 0.0],
+            vec![1.0, 2.0],
+            vec![VarType::Continuous, VarType::Integer],
+        );
+        assert_eq!(classify_row(&inst, 0), RowClass::Generic);
+    }
+
+    #[test]
+    fn histogram_covers_all_classes() {
+        let inst = pb(
+            &[(vec![0, 1], vec![1.0, 1.0])],
+            2,
+            vec![f64::NEG_INFINITY],
+            vec![1.0],
+        );
+        let classes = RowClasses::analyze(&inst);
+        let hist = classes.histogram();
+        assert_eq!(hist.len(), 5);
+        assert_eq!(hist[0], ("set_packing", 1));
+        assert_eq!(hist[4], ("generic", 0));
+        assert_eq!(hist.iter().map(|(_, c)| c).sum::<usize>(), inst.nrows());
+    }
+
+    #[test]
+    fn empty_row_is_generic() {
+        let matrix = Csr::from_triplets(2, 1, &[(0, 0, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "e",
+            matrix,
+            vec![f64::NEG_INFINITY; 2],
+            vec![1.0; 2],
+            vec![0.0],
+            vec![1.0],
+            vec![VarType::Integer],
+        );
+        assert_eq!(classify_row(&inst, 1), RowClass::Generic);
+    }
+}

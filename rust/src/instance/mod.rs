@@ -5,6 +5,10 @@
 use crate::numerics;
 use crate::sparse::{Csc, Csr};
 
+pub mod classify;
+
+pub use classify::{classify_row, RowClass, RowClasses};
+
 /// Values at or beyond this magnitude are treated as infinite on ingest
 /// (SCIP convention; MPS files encode "no bound" in several ways).
 pub const INF_THRESHOLD: f64 = 1e20;

@@ -36,6 +36,7 @@ pub mod testkit;
 pub mod sparse;
 pub mod instance;
 pub mod mps;
+pub mod opb;
 pub mod gen;
 pub mod propagation;
 pub mod runtime;

@@ -78,28 +78,31 @@ fn help_text() -> String {
 gdp - GPU-parallel domain propagation (paper reproduction)
 
 USAGE:
-  gdp propagate --mps FILE [--engine {engines}]
+  gdp propagate (--mps FILE | --opb FILE) [--engine {engines}]
                 [--threads N] [--f32] [--fastmath] [--jnp] [--max-rounds R]
-                [--warm-var J] [--batch N] [--artifacts DIR] [--bounds]
+                [--no-specialize] [--warm-var J] [--batch N] [--artifacts DIR] [--bounds]
   gdp engines [--json]
   gdp --engines-json
-  gdp generate --family mixed|knapsack|setcover|cascade|denseconn --rows M --cols N
-               [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S] --out FILE
+  gdp generate --family mixed|knapsack|setcover|cascade|denseconn|pb_packing|pb_covering|pb_cardinality|pb_mixed
+               --rows M --cols N [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S]
+               --out FILE   (a .opb suffix writes OPB; anything else MPS)
   gdp suite [--scale X] [--seed S] --out DIR
-  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|all>
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|pb|all>
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
-  gdp inspect --mps FILE
+  gdp inspect (--mps FILE | --opb FILE)
 "
     )
 }
 
 fn load_instance(args: &Args) -> anyhow::Result<MipInstance> {
-    let path = args
-        .get("mps")
-        .ok_or_else(|| anyhow::anyhow!("--mps FILE required"))?;
-    let inst = gdp::mps::read_mps_file(std::path::Path::new(path))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let inst = if let Some(path) = args.get("opb") {
+        gdp::opb::read_opb_file(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?
+    } else if let Some(path) = args.get("mps") {
+        gdp::mps::read_mps_file(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?
+    } else {
+        anyhow::bail!("--mps FILE or --opb FILE required");
+    };
     inst.validate().map_err(|e| anyhow::anyhow!("invalid instance: {e}"))?;
     Ok(inst)
 }
@@ -224,10 +227,11 @@ fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
     println!("registered engines (artifacts {}):", registry.artifact_dir().display());
     for entry in registry.entries() {
         println!(
-            "  {:12} {}  [batch: {}]{}",
+            "  {:12} {}  [batch: {}]{}{}",
             entry.name,
             entry.summary,
             entry.batch.name(),
+            if entry.specializes { "  [class-dispatch]" } else { "" },
             if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
         );
     }
@@ -241,6 +245,10 @@ fn cmd_generate(args: &Args) -> anyhow::Result<bool> {
         "setcover" => Family::SetCover,
         "cascade" => Family::Cascade,
         "denseconn" => Family::DenseConnecting,
+        "pb_packing" => Family::PbPacking,
+        "pb_covering" => Family::PbCovering,
+        "pb_cardinality" => Family::PbCardinality,
+        "pb_mixed" => Family::PbMixed,
         other => anyhow::bail!("unknown family {other}"),
     };
     let cfg = GenConfig {
@@ -254,7 +262,12 @@ fn cmd_generate(args: &Args) -> anyhow::Result<bool> {
     };
     let inst = gen::generate(&cfg);
     let out = args.get_or("out", "instance.mps");
-    gdp::mps::write_mps_file(&inst, std::path::Path::new(out))?;
+    if out.ends_with(".opb") {
+        gdp::opb::write_opb_file(&inst, std::path::Path::new(out))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    } else {
+        gdp::mps::write_mps_file(&inst, std::path::Path::new(out))?;
+    }
     println!("wrote {} ({}x{}, {} nnz) to {out}", inst.name, inst.nrows(), inst.ncols(), inst.nnz());
     Ok(true)
 }
@@ -321,6 +334,21 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<bool> {
         inst.num_integer(),
         inst.ncols(),
         stats.top1pct_row_share
+    );
+    // constraint-class histogram (the prepare-time analyzer's view)
+    let classes = gdp::instance::RowClasses::analyze(&inst);
+    let hist = classes
+        .histogram()
+        .iter()
+        .map(|(name, count)| format!("{name}={count}"))
+        .collect::<Vec<_>>()
+        .join("  ");
+    println!("row classes: {hist}");
+    println!(
+        "specialized rows: {} / {} ({:.1}%)",
+        classes.specialized_rows(),
+        inst.nrows(),
+        100.0 * classes.specialized_rows() as f64 / inst.nrows().max(1) as f64
     );
     Ok(true)
 }

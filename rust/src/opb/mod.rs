@@ -1,0 +1,476 @@
+//! OPB (linear pseudo-boolean) reader/writer.
+//!
+//! Supports the linear subset of the DIMACS PB-competition input format:
+//! an optional `* #variable= N #constraint= M` header, `*` comment lines,
+//! an optional `min:`/`max:` objective line, and one linear constraint
+//! per statement — `<terms> (>=|<=|=) <value> ;` with terms of the form
+//! `<coef> <var>`. Statements may span lines; each ends with `;`. All
+//! variables are binary (`{0, 1}`, integer), which is what makes the
+//! format pseudo-boolean. Round-trips through [`MipInstance`] the way
+//! `mps` does, exercised property-style by the test suite.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use crate::instance::{MipInstance, VarType};
+use crate::sparse::Csr;
+
+#[derive(Debug)]
+pub struct OpbError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for OpbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "OPB parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for OpbError {}
+
+fn err(line: usize, msg: impl Into<String>) -> OpbError {
+    OpbError { line, msg: msg.into() }
+}
+
+pub fn read_opb_file(path: &Path) -> Result<MipInstance, Box<dyn std::error::Error>> {
+    let f = std::fs::File::open(path)?;
+    let inst = read_opb(BufReader::new(f))?;
+    Ok(inst)
+}
+
+pub fn read_opb_str(text: &str) -> Result<MipInstance, OpbError> {
+    read_opb(BufReader::new(text.as_bytes()))
+}
+
+/// Parser state: the variable table (pre-registered `x1..xN` when the
+/// header declares a count, appended on first use otherwise).
+struct VarTable {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl VarTable {
+    fn new() -> VarTable {
+        VarTable { names: Vec::new(), index: HashMap::new() }
+    }
+
+    fn declare(&mut self, count: usize) {
+        for i in self.names.len()..count {
+            let name = format!("x{}", i + 1);
+            self.index.insert(name.clone(), i);
+            self.names.push(name);
+        }
+    }
+
+    fn resolve(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.index.get(name) {
+            return i;
+        }
+        let i = self.names.len();
+        self.index.insert(name.to_string(), i);
+        self.names.push(name.to_string());
+        i
+    }
+}
+
+/// `(coef, var)` term pairs of one statement fragment.
+fn parse_terms(
+    toks: &[String],
+    vars: &mut VarTable,
+    lineno: usize,
+) -> Result<Vec<(usize, f64)>, OpbError> {
+    if toks.len() % 2 != 0 {
+        return Err(err(lineno, "terms must be (coefficient variable) pairs"));
+    }
+    let mut out = Vec::with_capacity(toks.len() / 2);
+    for pair in toks.chunks(2) {
+        let coef: f64 = pair[0]
+            .parse()
+            .map_err(|_| err(lineno, format!("bad coefficient {:?}", pair[0])))?;
+        if !coef.is_finite() {
+            return Err(err(lineno, format!("non-finite coefficient {:?}", pair[0])));
+        }
+        let var = &pair[1];
+        if var.parse::<f64>().is_ok() {
+            return Err(err(lineno, format!("expected a variable name, got {var:?}")));
+        }
+        out.push((vars.resolve(var), coef));
+    }
+    Ok(out)
+}
+
+pub fn read_opb<R: Read>(reader: BufReader<R>) -> Result<MipInstance, OpbError> {
+    let mut name = String::from("opb");
+    let mut vars = VarTable::new();
+    let mut obj_terms: Vec<(usize, f64)> = Vec::new();
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+    let mut lhs: Vec<f64> = Vec::new();
+    let mut rhs: Vec<f64> = Vec::new();
+    // statements accumulate tokens (possibly across lines) until ';'
+    let mut pending: Vec<String> = Vec::new();
+    let mut pending_line = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.map_err(|e| err(lineno, e.to_string()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if trimmed.starts_with('*') {
+            // header comment: "* #variable= N #constraint= M"; also our
+            // writer's "* name: <instance name>"
+            if let Some(n) = header_count(trimmed, "#variable=") {
+                vars.declare(n);
+            }
+            if let Some(rest) = trimmed.strip_prefix("* name:") {
+                name = rest.trim().to_string();
+            }
+            continue;
+        }
+        for raw in trimmed.split_whitespace() {
+            let (tok, terminated) = match raw.strip_suffix(';') {
+                Some(stripped) => (stripped, true),
+                None => (raw, false),
+            };
+            if !tok.is_empty() {
+                if pending.is_empty() {
+                    pending_line = lineno;
+                }
+                pending.push(tok.to_string());
+            }
+            if terminated {
+                process_statement(
+                    &pending,
+                    pending_line.max(1),
+                    &mut vars,
+                    &mut obj_terms,
+                    &mut entries,
+                    &mut lhs,
+                    &mut rhs,
+                )?;
+                pending.clear();
+            }
+        }
+    }
+    if !pending.is_empty() {
+        return Err(err(pending_line, "unterminated statement (missing ';')"));
+    }
+
+    let m = lhs.len();
+    let n = vars.names.len();
+    let matrix = Csr::from_triplets(m, n, &entries).map_err(|e| err(0, e))?;
+    let mut obj = vec![0.0; n];
+    for (ci, v) in obj_terms {
+        obj[ci] += v;
+    }
+    let mut inst = MipInstance {
+        name,
+        matrix,
+        lhs,
+        rhs,
+        lb: vec![0.0; n],
+        ub: vec![1.0; n],
+        var_types: vec![VarType::Integer; n],
+        obj,
+        row_names: (0..m).map(|i| format!("c{i}")).collect(),
+        col_names: vars.names,
+    };
+    inst.canonicalize_infinities();
+    Ok(inst)
+}
+
+/// Parse `key N` out of a header comment, e.g. `#variable= 6`.
+fn header_count(comment: &str, key: &str) -> Option<usize> {
+    let pos = comment.find(key)?;
+    comment[pos + key.len()..].split_whitespace().next()?.parse().ok()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn process_statement(
+    tokens: &[String],
+    lineno: usize,
+    vars: &mut VarTable,
+    obj_terms: &mut Vec<(usize, f64)>,
+    entries: &mut Vec<(usize, usize, f64)>,
+    lhs: &mut Vec<f64>,
+    rhs: &mut Vec<f64>,
+) -> Result<(), OpbError> {
+    if tokens.is_empty() {
+        return Ok(()); // stray ';'
+    }
+    if tokens[0] == "min:" || tokens[0] == "max:" {
+        // objective: kept for I/O fidelity, ignored by propagation. The
+        // instance model has no objective-sense field, so a `max:`
+        // objective is stored in minimization form (coefficients negated)
+        // — the writer's `min:` output then preserves the semantics.
+        let sign = if tokens[0] == "max:" { -1.0 } else { 1.0 };
+        obj_terms.extend(
+            parse_terms(&tokens[1..], vars, lineno)?
+                .into_iter()
+                .map(|(ci, v)| (ci, sign * v)),
+        );
+        return Ok(());
+    }
+    let op_pos = tokens
+        .iter()
+        .position(|t| t == ">=" || t == "<=" || t == "=" || t == "==")
+        .ok_or_else(|| err(lineno, "constraint without relational operator"))?;
+    if op_pos + 2 != tokens.len() {
+        return Err(err(lineno, "expected exactly one value after the operator"));
+    }
+    let val: f64 = tokens[op_pos + 1]
+        .parse()
+        .map_err(|_| err(lineno, format!("bad degree {:?}", tokens[op_pos + 1])))?;
+    if !val.is_finite() {
+        return Err(err(lineno, format!("non-finite degree {:?}", tokens[op_pos + 1])));
+    }
+    let terms = parse_terms(&tokens[..op_pos], vars, lineno)?;
+    if terms.is_empty() {
+        return Err(err(lineno, "constraint with no terms"));
+    }
+    let r = lhs.len();
+    for (ci, coef) in terms {
+        entries.push((r, ci, coef));
+    }
+    let (l, u) = match tokens[op_pos].as_str() {
+        ">=" => (val, f64::INFINITY),
+        "<=" => (f64::NEG_INFINITY, val),
+        _ => (val, val),
+    };
+    lhs.push(l);
+    rhs.push(u);
+    Ok(())
+}
+
+/// Format a coefficient or degree: integers (the normal PB case) print
+/// exactly as integers, anything else with full f64 precision.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.17e}")
+    }
+}
+
+/// Serialize a binary instance to OPB. Errors when a variable is not
+/// binary or a row is ranged with two distinct finite sides (OPB has no
+/// ranged constraints).
+pub fn write_opb(inst: &MipInstance) -> Result<String, String> {
+    use std::fmt::Write;
+    for j in 0..inst.ncols() {
+        if inst.var_types[j] != VarType::Integer || inst.lb[j] != 0.0 || inst.ub[j] != 1.0 {
+            return Err(format!(
+                "write_opb: variable {} is not binary (type {:?}, bounds [{}, {}])",
+                inst.col_names[j], inst.var_types[j], inst.lb[j], inst.ub[j]
+            ));
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "* #variable= {} #constraint= {}", inst.ncols(), inst.nrows());
+    let _ = writeln!(out, "* name: {}", inst.name);
+    if inst.obj.iter().any(|&v| v != 0.0) {
+        out.push_str("min:");
+        for (j, &v) in inst.obj.iter().enumerate() {
+            if v != 0.0 {
+                let _ = write!(out, " {} x{}", fmt_num(v), j + 1);
+            }
+        }
+        out.push_str(" ;\n");
+    }
+    for r in 0..inst.nrows() {
+        let (l, u) = (inst.lhs[r], inst.rhs[r]);
+        let (op, val) = if l.is_finite() && u.is_finite() {
+            if l != u {
+                return Err(format!(
+                    "write_opb: row {} is ranged ([{l}, {u}]); OPB cannot encode it",
+                    inst.row_names[r]
+                ));
+            }
+            ("=", l)
+        } else if u.is_finite() {
+            ("<=", u)
+        } else if l.is_finite() {
+            (">=", l)
+        } else {
+            return Err(format!("write_opb: row {} is free", inst.row_names[r]));
+        };
+        let (cols, vals) = inst.matrix.row(r);
+        if cols.is_empty() {
+            return Err(format!(
+                "write_opb: row {} has no terms; OPB cannot encode it",
+                inst.row_names[r]
+            ));
+        }
+        for (&c, &v) in cols.iter().zip(vals) {
+            let _ = write!(out, "{} x{} ", fmt_num(v), c + 1);
+        }
+        let _ = writeln!(out, "{op} {} ;", fmt_num(val));
+    }
+    Ok(out)
+}
+
+pub fn write_opb_file(inst: &MipInstance, path: &Path) -> Result<(), Box<dyn std::error::Error>> {
+    let text = write_opb(inst)?;
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::instance::RowClass;
+    use crate::propagation::seq::SeqEngine;
+    use crate::propagation::Engine as _;
+    use crate::testkit::{prop, Config};
+
+    const SAMPLE: &str = "\
+* #variable= 6 #constraint= 5
+* name: sample_pb
+min: +1 x1 +2 x2 -1 x6 ;
++1 x1 +1 x2 +1 x3 <= 1 ;
++1 x3 +1 x4 +1 x5 >= 1 ;
++1 x1 +1 x2 +1 x4 +1 x5 <= 2 ;
++3 x1 +4 x2 +2 x6 <= 6 ;
++1 x5 -1 x6 >= 0 ;
+";
+
+    #[test]
+    fn parses_sample() {
+        let inst = read_opb_str(SAMPLE).unwrap();
+        inst.validate().unwrap();
+        assert_eq!(inst.name, "sample_pb");
+        assert_eq!(inst.nrows(), 5);
+        assert_eq!(inst.ncols(), 6);
+        assert!(inst.var_types.iter().all(|t| *t == VarType::Integer));
+        assert!(inst.lb.iter().all(|&l| l == 0.0));
+        assert!(inst.ub.iter().all(|&u| u == 1.0));
+        assert_eq!(inst.rhs[0], 1.0);
+        assert_eq!(inst.lhs[0], f64::NEG_INFINITY);
+        assert_eq!(inst.lhs[1], 1.0);
+        assert_eq!(inst.rhs[1], f64::INFINITY);
+        assert_eq!(inst.obj[0], 1.0);
+        assert_eq!(inst.obj[5], -1.0);
+        // x6 appears with a negative coefficient in the last row
+        let (cols, vals) = inst.matrix.row(4);
+        assert_eq!(cols, &[4, 5]);
+        assert_eq!(vals, &[1.0, -1.0]);
+    }
+
+    #[test]
+    fn sample_covers_every_specialized_class() {
+        let inst = read_opb_str(SAMPLE).unwrap();
+        let classes = crate::instance::RowClasses::analyze(&inst);
+        assert_eq!(classes.tags()[0], RowClass::SetPacking);
+        assert_eq!(classes.tags()[1], RowClass::SetCovering);
+        assert_eq!(classes.tags()[2], RowClass::Cardinality);
+        assert_eq!(classes.tags()[3], RowClass::BinaryKnapsack);
+        assert_eq!(classes.tags()[4], RowClass::Generic);
+    }
+
+    #[test]
+    fn checked_in_fixture_matches_inline_sample() {
+        // the CI smoke runs `gdp propagate --opb` on this fixture; keep it
+        // parseable and in sync with the inline sample
+        let path = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/fixtures/sample.opb"
+        ));
+        let from_file = read_opb_file(path).expect("fixture parses");
+        let from_str = read_opb_str(SAMPLE).unwrap();
+        assert_eq!(from_file.nrows(), from_str.nrows());
+        assert_eq!(from_file.ncols(), from_str.ncols());
+        assert_eq!(from_file.lhs, from_str.lhs);
+        assert_eq!(from_file.rhs, from_str.rhs);
+    }
+
+    #[test]
+    fn max_objective_stored_in_minimization_form() {
+        let text = "* #variable= 2 #constraint= 1\nmax: +3 x1 -1 x2 ;\n+1 x1 +1 x2 <= 1 ;\n";
+        let inst = read_opb_str(text).unwrap();
+        assert_eq!(inst.obj, vec![-3.0, 1.0]);
+        // the writer's min: line then means the same thing
+        let back = read_opb_str(&write_opb(&inst).unwrap()).unwrap();
+        assert_eq!(back.obj, inst.obj);
+    }
+
+    #[test]
+    fn statements_may_span_lines() {
+        let text = "* #variable= 3 #constraint= 1\n+1 x1\n+1 x2 +1 x3\n>= 1 ;\n";
+        let inst = read_opb_str(text).unwrap();
+        assert_eq!(inst.nrows(), 1);
+        assert_eq!(inst.matrix.row_nnz(0), 3);
+        assert_eq!(inst.lhs[0], 1.0);
+    }
+
+    #[test]
+    fn unused_declared_variables_are_registered() {
+        let text = "* #variable= 4 #constraint= 1\n+1 x1 +1 x2 <= 1 ;\n";
+        let inst = read_opb_str(text).unwrap();
+        assert_eq!(inst.ncols(), 4);
+        assert_eq!(inst.matrix.nnz(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_opb_str("+1 x1 <= 1").is_err(), "missing terminator");
+        assert!(read_opb_str("+1 <= 1 ;").is_err(), "missing variable");
+        assert!(read_opb_str("+1 x1 1 ;").is_err(), "missing operator");
+        assert!(read_opb_str("+1 x1 <= 1 2 ;").is_err(), "two degrees");
+        assert!(read_opb_str("x1 +1 <= 1 ;").is_err(), "swapped pair");
+        assert!(read_opb_str("<= 1 ;").is_err(), "no terms");
+    }
+
+    #[test]
+    fn writer_rejects_non_binary_and_ranged() {
+        let mut inst = gen::generate(&gen::GenConfig {
+            family: gen::Family::Knapsack,
+            nrows: 4,
+            ncols: 4,
+            int_frac: 0.0,
+            seed: 1,
+            ..Default::default()
+        });
+        assert!(write_opb(&inst).is_err(), "continuous variables");
+        // a ranged binary row cannot be encoded either
+        inst = read_opb_str("* #variable= 2 #constraint= 1\n+1 x1 +1 x2 <= 1 ;\n").unwrap();
+        inst.lhs[0] = 0.0; // now 0 <= x1 + x2 <= 1: ranged
+        assert!(write_opb(&inst).is_err(), "ranged row");
+    }
+
+    #[test]
+    fn prop_write_read_roundtrip() {
+        prop("opb roundtrip", Config::cases(24), |rng| {
+            let inst = gen::random_pb_instance(rng, 10, 10);
+            let text = write_opb(&inst).unwrap();
+            let back = read_opb_str(&text).unwrap();
+            back.validate().unwrap();
+            assert_eq!(back.nrows(), inst.nrows());
+            assert_eq!(back.ncols(), inst.ncols());
+            assert_eq!(back.matrix.nnz(), inst.matrix.nnz());
+            for r in 0..inst.nrows() {
+                crate::testkit::assert_close(back.lhs[r], inst.lhs[r], 1e-12, 1e-12);
+                crate::testkit::assert_close(back.rhs[r], inst.rhs[r], 1e-12, 1e-12);
+            }
+            for c in 0..inst.ncols() {
+                assert_eq!(back.lb[c], 0.0);
+                assert_eq!(back.ub[c], 1.0);
+                assert_eq!(back.var_types[c], VarType::Integer);
+            }
+            for (a, b) in inst.matrix.iter().zip(back.matrix.iter()) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1, b.1);
+                assert_eq!(a.2, b.2, "integer coefficients round-trip exactly");
+            }
+            // and the propagation fixed point survives the round trip
+            let before = SeqEngine::new().propagate(&inst);
+            let after = SeqEngine::new().propagate(&back);
+            assert_eq!(before.status, after.status);
+            assert_eq!(before.bounds.lb, after.bounds.lb);
+            assert_eq!(before.bounds.ub, after.bounds.ub);
+        });
+    }
+}

@@ -68,11 +68,30 @@ impl RowActivity {
         self.max.add(if bmax.is_finite() { a * bmax } else { f64::INFINITY });
     }
 
+    /// Accumulate one unit-coefficient entry (`a == 1.0`): the bounds
+    /// contribute directly, skipping the multiply. Bit-exact with
+    /// `accumulate(1.0, lb, ub)` (`x * 1.0` is an IEEE identity).
+    #[inline]
+    pub fn accumulate_unit(&mut self, lb: f64, ub: f64) {
+        self.min.add(if lb.is_finite() { lb } else { f64::NEG_INFINITY });
+        self.max.add(if ub.is_finite() { ub } else { f64::INFINITY });
+    }
+
     /// Compute for a whole row.
     pub fn of_row(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> RowActivity {
         let mut act = RowActivity::default();
         for (&c, &a) in cols.iter().zip(vals) {
             act.accumulate(a, lb[c as usize], ub[c as usize]);
+        }
+        act
+    }
+
+    /// [`RowActivity::of_row`] for unit-coefficient rows (the specialized
+    /// classes): no per-entry multiply, bit-exact with the general path.
+    pub fn of_unit_row(cols: &[u32], lb: &[f64], ub: &[f64]) -> RowActivity {
+        let mut act = RowActivity::default();
+        for &c in cols {
+            act.accumulate_unit(lb[c as usize], ub[c as usize]);
         }
         act
     }
@@ -170,6 +189,24 @@ mod tests {
         a.add(3.0);
         assert_eq!(a.residual(f64::INFINITY, 1.0), f64::INFINITY);
         assert_eq!(a.residual(3.0, 1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn unit_accumulation_matches_general() {
+        let bounds = [
+            (0.0, 1.0),
+            (1.0, 1.0),
+            (0.0, 0.0),
+            (f64::NEG_INFINITY, f64::INFINITY),
+            (f64::NEG_INFINITY, 1.0),
+        ];
+        let cols: Vec<u32> = (0..bounds.len() as u32).collect();
+        let vals = vec![1.0; bounds.len()];
+        let lb: Vec<f64> = bounds.iter().map(|b| b.0).collect();
+        let ub: Vec<f64> = bounds.iter().map(|b| b.1).collect();
+        let general = RowActivity::of_row(&cols, &vals, &lb, &ub);
+        let unit = RowActivity::of_unit_row(&cols, &lb, &ub);
+        assert_eq!(general, unit);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! in rust/tests/xla_differential.rs rely on this.
 
 use super::activity::RowActivity;
+use crate::instance::RowClass;
 use crate::numerics::{improves_lb, improves_ub, INT_ROUND_EPS};
 
 /// Lower/upper bound candidate of one (row, entry) pair. Non-informative
@@ -50,6 +51,82 @@ pub fn candidates(
         }
     }
     Candidate { lb, ub }
+}
+
+/// Specialized candidate rule for the unit-coefficient classes
+/// (set-packing / set-covering / cardinality): every coefficient is
+/// exactly `1.0` and every variable integral, so the general rule's
+/// per-entry multiply and divide drop out and the candidates come
+/// directly from the residual activities. Bit-exact with
+/// [`candidates`]`(1.0, …, true, …)` because `x * 1.0` and `x / 1.0`
+/// are IEEE identities and the infinity cases branch identically.
+#[inline]
+pub fn unit_row_candidates(
+    lbj: f64,
+    ubj: f64,
+    act: &RowActivity,
+    lhs: f64,
+    rhs: f64,
+) -> Candidate {
+    let mut ub = f64::INFINITY;
+    if rhs.is_finite() {
+        let own_min = if lbj.is_finite() { lbj } else { f64::NEG_INFINITY };
+        let num = rhs - act.min.residual(own_min, -1.0);
+        if num.is_finite() {
+            ub = (num + INT_ROUND_EPS).floor();
+        }
+    }
+    let mut lb = f64::NEG_INFINITY;
+    if lhs.is_finite() {
+        let own_max = if ubj.is_finite() { ubj } else { f64::INFINITY };
+        let num = lhs - act.max.residual(own_max, 1.0);
+        if num.is_finite() {
+            lb = (num - INT_ROUND_EPS).ceil();
+        }
+    }
+    Candidate { lb, ub }
+}
+
+/// Specialized candidate rule for binary-knapsack rows
+/// (`sum a_j x_j <= rhs`, all `a_j > 0`, binary variables): the absent
+/// `lhs` side makes the lower-bound candidate `-inf` under the general
+/// rule (never improving), so only the upper-bound side is computed.
+/// Bit-exact with [`candidates`] on such rows: `floor` of `+inf` is
+/// `+inf`, matching the general rule's skip of the integer rounding for
+/// non-finite candidates.
+#[inline]
+pub fn knapsack_row_candidates(a: f64, lbj: f64, act: &RowActivity, rhs: f64) -> Candidate {
+    debug_assert!(a > 0.0);
+    let own_min = if lbj.is_finite() { a * lbj } else { f64::NEG_INFINITY };
+    let num = rhs - act.min.residual(own_min, -1.0);
+    let ub = if num.is_finite() { (num / a + INT_ROUND_EPS).floor() } else { f64::INFINITY };
+    Candidate { lb: f64::NEG_INFINITY, ub }
+}
+
+/// Candidate computation dispatched on the row's constraint class: the
+/// specialized fast paths for the structured classes, the full
+/// [`candidates`] rule as the always-correct fallback. `is_int` is lazy
+/// because the specialized classes guarantee integral variables and skip
+/// the lookup.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn candidates_for_class(
+    class: RowClass,
+    a: f64,
+    lbj: f64,
+    ubj: f64,
+    is_int: impl FnOnce() -> bool,
+    act: &RowActivity,
+    lhs: f64,
+    rhs: f64,
+) -> Candidate {
+    match class {
+        RowClass::SetPacking | RowClass::SetCovering | RowClass::Cardinality => {
+            unit_row_candidates(lbj, ubj, act, lhs, rhs)
+        }
+        RowClass::BinaryKnapsack => knapsack_row_candidates(a, lbj, act, rhs),
+        RowClass::Generic => candidates(a, lbj, ubj, is_int(), act, lhs, rhs),
+    }
 }
 
 /// Apply a candidate to the bound pair; returns (lb_changed, ub_changed).
@@ -146,6 +223,81 @@ mod tests {
         assert!(!l && u);
         assert_eq!(lb, 0.0);
         assert_eq!(ub, 5.0);
+    }
+
+    #[test]
+    fn unit_candidates_bit_exact_with_generic() {
+        use crate::testkit::{prop, Config};
+        prop("unit class candidates == generic", Config::cases(128), |rng| {
+            // a random unit row over (possibly tightened) binary domains
+            let k = rng.range(1, 7);
+            let mut act = RowActivity::default();
+            let mut doms = Vec::new();
+            for _ in 0..k {
+                let l = if rng.chance(0.5) { 0.0 } else { 1.0 };
+                let u = if l == 1.0 || rng.chance(0.6) { 1.0 } else { 0.0 };
+                act.accumulate(1.0, l, u);
+                doms.push((l, u));
+            }
+            // random side shapes: <= r, >= l, == v, ranged
+            let (lhs, rhs) = match rng.below(4) {
+                0 => (f64::NEG_INFINITY, rng.below(k + 1) as f64),
+                1 => (rng.below(k + 1) as f64, f64::INFINITY),
+                2 => {
+                    let v = rng.below(k + 1) as f64;
+                    (v, v)
+                }
+                _ => (0.0, rng.below(k + 1) as f64),
+            };
+            for &(l, u) in &doms {
+                let spec = unit_row_candidates(l, u, &act, lhs, rhs);
+                let general = candidates(1.0, l, u, true, &act, lhs, rhs);
+                assert_eq!(spec.lb.to_bits(), general.lb.to_bits(), "lb for ({l},{u})");
+                assert_eq!(spec.ub.to_bits(), general.ub.to_bits(), "ub for ({l},{u})");
+            }
+        });
+    }
+
+    #[test]
+    fn knapsack_candidates_bit_exact_with_generic() {
+        use crate::testkit::{prop, Config};
+        prop("knapsack class candidates == generic", Config::cases(128), |rng| {
+            let k = rng.range(1, 7);
+            let mut act = RowActivity::default();
+            let mut entries = Vec::new();
+            for _ in 0..k {
+                let a = rng.range(1, 10) as f64;
+                let l = if rng.chance(0.5) { 0.0 } else { 1.0 };
+                let u = if l == 1.0 || rng.chance(0.6) { 1.0 } else { 0.0 };
+                act.accumulate(a, l, u);
+                entries.push((a, l, u));
+            }
+            let rhs = rng.below(6 * k) as f64;
+            for &(a, l, u) in &entries {
+                let spec = knapsack_row_candidates(a, l, &act, rhs);
+                let general = candidates(a, l, u, true, &act, f64::NEG_INFINITY, rhs);
+                assert_eq!(spec.lb.to_bits(), general.lb.to_bits(), "lb for a={a}");
+                assert_eq!(spec.ub.to_bits(), general.ub.to_bits(), "ub for a={a}");
+            }
+        });
+    }
+
+    #[test]
+    fn class_dispatch_falls_back_to_generic() {
+        // a Generic tag must route through the full rule unchanged
+        let act = act_of(&[(2.0, 0.0, 10.0), (3.0, 0.0, 10.0)]);
+        let spec = candidates_for_class(
+            RowClass::Generic,
+            2.0,
+            0.0,
+            10.0,
+            || false,
+            &act,
+            f64::NEG_INFINITY,
+            12.0,
+        );
+        let general = candidates(2.0, 0.0, 10.0, false, &act, f64::NEG_INFINITY, 12.0);
+        assert_eq!(spec, general);
     }
 
     #[test]

@@ -3,17 +3,31 @@
 //! variant over atomic bounds (the `cpu_omp` schedule, paper section
 //! 4.2), and the round-synchronous phases of Algorithm 2 (activity
 //! recompute, per-column candidate reduction, commit).
+//!
+//! Every candidate-producing kernel takes an optional per-row
+//! [`RowClass`] slice (the prepare-time constraint-class analysis,
+//! `instance::classify`): tagged rows dispatch the specialized
+//! tightening rules in `propagation::bounds` (unit rows skip the
+//! per-entry multiply/divide, one-sided rows skip the dead side), which
+//! are bit-exact with the generic rule. `None` forces the generic path
+//! everywhere — the `--no-specialize` differential knob.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::super::activity::RowActivity;
-use super::super::bounds::{apply, candidates};
+use super::super::bounds::{apply, candidates_for_class};
 use super::super::trace::RoundTrace;
 use super::state::AtomicBounds;
 use super::workset::WorkSet;
-use crate::instance::{MipInstance, VarType};
+use crate::instance::{MipInstance, RowClass, VarType};
 use crate::numerics::{improves_lb, improves_ub, FEAS_TOL};
 use crate::sparse::Csc;
+
+/// The class of row `r` under an optional tag slice (absent = generic).
+#[inline]
+fn class_of(classes: Option<&[RowClass]>, r: usize) -> RowClass {
+    classes.map_or(RowClass::Generic, |c| c[r])
+}
 
 /// What one scalar row sweep did.
 pub struct SweepOutcome {
@@ -43,14 +57,21 @@ pub fn sweep_row_marked(
     ub: &mut [f64],
     ws: &WorkSet,
     skip_var: Option<&[bool]>,
+    classes: Option<&[RowClass]>,
     rt: &mut RoundTrace,
     mut on_change: impl FnMut(usize, bool, bool, f64, f64),
 ) -> SweepOutcome {
     let (cols, vals) = inst.matrix.row(r);
     rt.rows_processed += 1;
     rt.nnz_processed += cols.len();
-    // line 8: compute activities
-    let act = RowActivity::of_row(cols, vals, lb, ub);
+    let class = class_of(classes, r);
+    // line 8: compute activities (unit-coefficient classes skip the
+    // per-entry multiply — bit-exact with the general accumulation)
+    let act = if class.unit_coefficients() {
+        RowActivity::of_unit_row(cols, lb, ub)
+    } else {
+        RowActivity::of_row(cols, vals, lb, ub)
+    };
     let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
     // line 9: "can c propagate" — skip redundant rows and rows with no
     // finite side / too many infinities (early termination)
@@ -66,11 +87,12 @@ pub fn sweep_row_marked(
         }
         // line 11 "can v be tightened" is folded into the candidate
         // computation: non-informative candidates are +-inf
-        let cand = candidates(
+        let cand = candidates_for_class(
+            class,
             a,
             lb[j],
             ub[j],
-            inst.var_types[j] == VarType::Integer,
+            || inst.var_types[j] == VarType::Integer,
             &act,
             lhs,
             rhs,
@@ -118,14 +140,23 @@ pub fn sweep_row_atomic(
     r: usize,
     bounds: &AtomicBounds,
     ws: &WorkSet,
+    classes: Option<&[RowClass]>,
 ) -> RowCounters {
     let mut out = RowCounters::default();
     let (cols, vals) = inst.matrix.row(r);
     out.nnz += cols.len();
+    let class = class_of(classes, r);
     let mut act = RowActivity::default();
-    for (&c, &a) in cols.iter().zip(vals) {
-        let j = c as usize;
-        act.accumulate(a, bounds.lb(j), bounds.ub(j));
+    if class.unit_coefficients() {
+        for &c in cols {
+            let j = c as usize;
+            act.accumulate_unit(bounds.lb(j), bounds.ub(j));
+        }
+    } else {
+        for (&c, &a) in cols.iter().zip(vals) {
+            let j = c as usize;
+            act.accumulate(a, bounds.lb(j), bounds.ub(j));
+        }
     }
     let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
     if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
@@ -134,11 +165,12 @@ pub fn sweep_row_atomic(
     out.nnz += cols.len();
     for (&c, &a) in cols.iter().zip(vals) {
         let j = c as usize;
-        let cand = candidates(
+        let cand = candidates_for_class(
+            class,
             a,
             bounds.lb(j),
             bounds.ub(j),
-            inst.var_types[j] == VarType::Integer,
+            || inst.var_types[j] == VarType::Integer,
             &act,
             lhs,
             rhs,
@@ -195,6 +227,7 @@ impl ChunkCounters {
 
 /// One thread's share of a round: sweep the rows of `work` against shared
 /// atomic bounds, bailing out as soon as any thread flags infeasibility.
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_chunk_atomic(
     inst: &MipInstance,
     csc: &Csc,
@@ -202,13 +235,14 @@ pub fn sweep_chunk_atomic(
     bounds: &AtomicBounds,
     ws: &WorkSet,
     infeasible: &AtomicBool,
+    classes: Option<&[RowClass]>,
 ) -> ChunkCounters {
     let mut counters = ChunkCounters::default();
     for &r in work {
         if infeasible.load(Ordering::Relaxed) {
             break;
         }
-        let row = sweep_row_atomic(inst, csc, r as usize, bounds, ws);
+        let row = sweep_row_atomic(inst, csc, r as usize, bounds, ws, classes);
         let infeas = row.infeasible;
         counters.absorb(row);
         if infeas {
@@ -222,6 +256,7 @@ pub fn sweep_chunk_atomic(
 /// Fan `worklist` out over up to `threads` scoped threads, each running
 /// [`sweep_chunk_atomic`]; returns the summed counters. Uses plain
 /// contiguous chunking, like the paper's OpenMP static schedule.
+#[allow(clippy::too_many_arguments)]
 pub fn parallel_sweep(
     inst: &MipInstance,
     csc: &Csc,
@@ -230,10 +265,11 @@ pub fn parallel_sweep(
     ws: &WorkSet,
     infeasible: &AtomicBool,
     threads: usize,
+    classes: Option<&[RowClass]>,
 ) -> ChunkCounters {
     let nthreads = threads.min(worklist.len()).max(1);
     if nthreads == 1 {
-        return sweep_chunk_atomic(inst, csc, worklist, bounds, ws, infeasible);
+        return sweep_chunk_atomic(inst, csc, worklist, bounds, ws, infeasible, classes);
     }
     let chunk = worklist.len().div_ceil(nthreads);
     let mut total = ChunkCounters::default();
@@ -246,8 +282,9 @@ pub fn parallel_sweep(
                 continue;
             }
             let work = &worklist[lo..hi];
-            handles
-                .push(scope.spawn(move || sweep_chunk_atomic(inst, csc, work, bounds, ws, infeasible)));
+            handles.push(scope.spawn(move || {
+                sweep_chunk_atomic(inst, csc, work, bounds, ws, infeasible, classes)
+            }));
         }
         for h in handles {
             total.merge(h.join().expect("sweep thread"));
@@ -257,7 +294,8 @@ pub fn parallel_sweep(
 }
 
 /// Phase 1 of the round-synchronous schedule (Algorithm 2 lines 3-4):
-/// recompute every (active) row's activity against the current bounds.
+/// recompute every (active) row's activity against the current bounds —
+/// unit-coefficient classes through the multiply-free accumulation.
 /// Returns the nonzeros touched.
 pub fn recompute_activities(
     inst: &MipInstance,
@@ -265,6 +303,7 @@ pub fn recompute_activities(
     ub: &[f64],
     acts: &mut [RowActivity],
     active: Option<&[bool]>,
+    classes: Option<&[RowClass]>,
 ) -> usize {
     let mut nnz = 0;
     for r in 0..inst.nrows() {
@@ -272,7 +311,11 @@ pub fn recompute_activities(
             continue;
         }
         let (cols, vals) = inst.matrix.row(r);
-        acts[r] = RowActivity::of_row(cols, vals, lb, ub);
+        acts[r] = if class_of(classes, r).unit_coefficients() {
+            RowActivity::of_unit_row(cols, lb, ub)
+        } else {
+            RowActivity::of_row(cols, vals, lb, ub)
+        };
         nnz += cols.len();
     }
     nnz
@@ -289,6 +332,7 @@ pub fn reduce_candidates(
     lb: &[f64],
     ub: &[f64],
     acts: &[RowActivity],
+    classes: Option<&[RowClass]>,
     best_lb: &mut [f64],
     best_ub: &mut [f64],
     mut col_hits: Option<&mut [u32]>,
@@ -308,14 +352,16 @@ pub fn reduce_candidates(
     for r in 0..inst.nrows() {
         let (cols, vals) = inst.matrix.row(r);
         rt.nnz_processed += cols.len();
+        let class = class_of(classes, r);
         let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
         for (&c, &a) in cols.iter().zip(vals) {
             let j = c as usize;
-            let cand = candidates(
+            let cand = candidates_for_class(
+                class,
                 a,
                 lb[j],
                 ub[j],
-                inst.var_types[j] == VarType::Integer,
+                || inst.var_types[j] == VarType::Integer,
                 &acts[r],
                 lhs,
                 rhs,
@@ -403,8 +449,18 @@ mod tests {
         let mut lb = inst.lb.clone();
         let mut ub = inst.ub.clone();
         let mut rt = RoundTrace::default();
-        let out =
-            sweep_row_marked(&inst, &csc, 0, &mut lb, &mut ub, &ws, None, &mut rt, |_, _, _, _, _| {});
+        let out = sweep_row_marked(
+            &inst,
+            &csc,
+            0,
+            &mut lb,
+            &mut ub,
+            &ws,
+            None,
+            None,
+            &mut rt,
+            |_, _, _, _, _| {},
+        );
         assert!(out.changed && !out.infeasible);
         assert_eq!(ub, vec![6.0, 4.0]);
         assert_eq!(rt.rows_processed, 1);
@@ -420,7 +476,7 @@ mod tests {
         let ws = WorkSet::new(1);
         ws.seed(&csc, Some(&[]));
         let bounds = AtomicBounds::new(&Bounds::of(&inst));
-        let row = sweep_row_atomic(&inst, &csc, 0, &bounds, &ws);
+        let row = sweep_row_atomic(&inst, &csc, 0, &bounds, &ws, None);
         assert_eq!(row.changes, 2);
         assert!(!row.infeasible);
         let snap = bounds.snapshot();
@@ -436,9 +492,9 @@ mod tests {
         let mut best_lb = vec![0.0; 2];
         let mut best_ub = vec![0.0; 2];
         let mut rt = RoundTrace::default();
-        let nnz = recompute_activities(&inst, &lb, &ub, &mut acts, None);
+        let nnz = recompute_activities(&inst, &lb, &ub, &mut acts, None, None);
         assert_eq!(nnz, 2);
-        reduce_candidates(&inst, &lb, &ub, &acts, &mut best_lb, &mut best_ub, None, &mut rt);
+        reduce_candidates(&inst, &lb, &ub, &acts, None, &mut best_lb, &mut best_ub, None, &mut rt);
         let (change, infeas) = commit_round(&mut lb, &mut ub, &best_lb, &best_ub, &mut rt);
         assert!(change && !infeas);
         assert_eq!(ub, vec![6.0, 4.0]);
@@ -463,9 +519,64 @@ mod tests {
         let mut lb = inst.lb.clone();
         let mut ub = inst.ub.clone();
         let mut rt = RoundTrace::default();
-        let out =
-            sweep_row_marked(&inst, &csc, 0, &mut lb, &mut ub, &ws, None, &mut rt, |_, _, _, _, _| {});
+        let out = sweep_row_marked(
+            &inst,
+            &csc,
+            0,
+            &mut lb,
+            &mut ub,
+            &ws,
+            None,
+            None,
+            &mut rt,
+            |_, _, _, _, _| {},
+        );
         assert!(out.infeasible);
         assert!(lb[0] > ub[0]);
+    }
+
+    #[test]
+    fn specialized_sweep_matches_generic_on_packing_row() {
+        use crate::instance::{RowClasses, VarType};
+        // x0 + x1 + x2 <= 1 with x0 fixed to 1: the packing fast path must
+        // fix x1, x2 to 0 exactly like the generic rule
+        let matrix =
+            Csr::from_triplets(1, 3, &[(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "pack",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![1.0],
+            vec![0.0; 3],
+            vec![1.0; 3],
+            vec![VarType::Integer; 3],
+        );
+        let classes = RowClasses::analyze(&inst);
+        assert_eq!(classes.specialized_rows(), 1);
+        let csc = inst.to_csc();
+        let run = |tags: Option<&[crate::instance::RowClass]>| {
+            let ws = WorkSet::new(1);
+            ws.seed(&csc, Some(&[]));
+            let mut lb = vec![1.0, 0.0, 0.0];
+            let mut ub = vec![1.0, 1.0, 1.0];
+            let mut rt = RoundTrace::default();
+            let out = sweep_row_marked(
+                &inst,
+                &csc,
+                0,
+                &mut lb,
+                &mut ub,
+                &ws,
+                None,
+                tags,
+                &mut rt,
+                |_, _, _, _, _| {},
+            );
+            (lb, ub, out.changed, rt.bound_changes)
+        };
+        let spec = run(Some(classes.tags()));
+        let generic = run(None);
+        assert_eq!(spec, generic);
+        assert_eq!(spec.1, vec![1.0, 0.0, 0.0], "x1, x2 fixed to 0");
     }
 }

@@ -19,7 +19,13 @@
 //!   [`kernels::parallel_sweep`] (chunk-parallel variant over atomic
 //!   bounds), and the round-synchronous trio
 //!   [`kernels::recompute_activities`] / [`kernels::reduce_candidates`] /
-//!   [`kernels::commit_round`] (Algorithm 2 phases).
+//!   [`kernels::commit_round`] (Algorithm 2 phases). Every
+//!   candidate-producing sweep dispatches per row on an optional
+//!   constraint-class tag slice ([`crate::instance::RowClasses`],
+//!   computed once at prepare time): structured pseudo-boolean rows
+//!   (set-packing / set-covering / cardinality / binary-knapsack) take
+//!   specialized tightening fast paths that are bit-exact with the
+//!   generic rule, which remains the always-correct fallback.
 //! * [`driver`] — the generic round loop: round counting, the round cap
 //!   (paper section 4.1) and the mapping from per-round
 //!   [`driver::RoundOutcome`]s to a final [`super::Status`], identical

@@ -25,7 +25,7 @@
 use super::core::{self, run_rounds, RoundOutcome, RoundState};
 use super::trace::{RoundTrace, Trace};
 use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance};
+use crate::instance::{Bounds, MipInstance, RowClass, RowClasses};
 use crate::numerics::MAX_ROUNDS;
 use crate::util::timer::Timer;
 
@@ -33,11 +33,13 @@ pub struct GpuModelEngine {
     pub max_rounds: u32,
     /// Record the (more expensive) per-column conflict histogram.
     pub record_conflicts: bool,
+    /// Dispatch class-specialized kernels on tagged rows (on by default).
+    pub specialize: bool,
 }
 
 impl Default for GpuModelEngine {
     fn default() -> Self {
-        GpuModelEngine { max_rounds: MAX_ROUNDS, record_conflicts: true }
+        GpuModelEngine { max_rounds: MAX_ROUNDS, record_conflicts: true, specialize: true }
     }
 }
 
@@ -59,6 +61,7 @@ impl Engine for GpuModelEngine {
             inst,
             max_rounds: self.max_rounds,
             record_conflicts: self.record_conflicts,
+            classes: self.specialize.then(|| RowClasses::analyze(inst)),
             state: RoundState::new(m, true),
             best_lb: vec![f64::NEG_INFINITY; n],
             best_ub: vec![f64::INFINITY; n],
@@ -72,6 +75,8 @@ pub struct GpuModelPrepared<'a> {
     inst: &'a MipInstance,
     pub max_rounds: u32,
     pub record_conflicts: bool,
+    /// Prepare-time constraint-class tags (None = specialization off).
+    classes: Option<RowClasses>,
     state: RoundState,
     best_lb: Vec<f64>,
     best_ub: Vec<f64>,
@@ -81,11 +86,13 @@ pub struct GpuModelPrepared<'a> {
 impl GpuModelPrepared<'_> {
     /// One round-synchronous round over one node's bounds (the shared
     /// Algorithm 2 phases). Returns the outcome for the driver.
+    #[allow(clippy::too_many_arguments)]
     fn round(
         inst: &MipInstance,
         lb: &mut [f64],
         ub: &mut [f64],
         acts: &mut [crate::propagation::activity::RowActivity],
+        classes: Option<&[RowClass]>,
         best_lb: &mut [f64],
         best_ub: &mut [f64],
         col_hits: &mut [u32],
@@ -93,12 +100,13 @@ impl GpuModelPrepared<'_> {
         trace: &mut Trace,
     ) -> RoundOutcome {
         let mut rt = RoundTrace { rows_processed: inst.nrows(), ..Default::default() };
-        rt.nnz_processed += core::recompute_activities(inst, lb, ub, acts, None);
+        rt.nnz_processed += core::recompute_activities(inst, lb, ub, acts, None, classes);
         core::reduce_candidates(
             inst,
             lb,
             ub,
             acts,
+            classes,
             best_lb,
             best_ub,
             if record_conflicts { Some(&mut col_hits[..]) } else { None },
@@ -128,6 +136,7 @@ impl PreparedProblem for GpuModelPrepared<'_> {
         let timer = Timer::start();
         let inst = self.inst;
         self.state.reset(start);
+        let classes = self.classes.as_ref().map(|c| c.tags());
         let state = &mut self.state;
         let best_lb = &mut self.best_lb;
         let best_ub = &mut self.best_ub;
@@ -139,6 +148,7 @@ impl PreparedProblem for GpuModelPrepared<'_> {
                 &mut state.lb,
                 &mut state.ub,
                 &mut state.acts,
+                classes,
                 best_lb,
                 best_ub,
                 col_hits,
@@ -190,6 +200,7 @@ impl PreparedProblem for GpuModelPrepared<'_> {
                     lb,
                     ub,
                     &mut self.state.acts,
+                    self.classes.as_ref().map(|c| c.tags()),
                     &mut self.best_lb,
                     &mut self.best_ub,
                     &mut self.col_hits,

@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use super::core::{self, run_rounds, AtomicBounds, ChunkCounters, RoundOutcome, WorkSet};
 use super::trace::{RoundTrace, Trace};
 use super::{Engine, PreparedProblem, PropResult, Status};
-use crate::instance::{Bounds, MipInstance};
+use crate::instance::{Bounds, MipInstance, RowClasses};
 use crate::numerics::MAX_ROUNDS;
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
@@ -30,6 +30,8 @@ use crate::util::timer::Timer;
 pub struct OmpEngine {
     pub threads: usize,
     pub max_rounds: u32,
+    /// Dispatch class-specialized kernels on tagged rows (on by default).
+    pub specialize: bool,
 }
 
 impl Default for OmpEngine {
@@ -37,6 +39,7 @@ impl Default for OmpEngine {
         OmpEngine {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             max_rounds: MAX_ROUNDS,
+            specialize: true,
         }
     }
 }
@@ -56,11 +59,13 @@ impl Engine for OmpEngine {
         &self,
         inst: &'a MipInstance,
     ) -> anyhow::Result<Box<dyn PreparedProblem + 'a>> {
-        // one-time init (untimed): the column view used for re-marking
-        // plus the reusable marked set and worklist buffer
+        // one-time init (untimed): the column view used for re-marking,
+        // the constraint-class analysis, plus the reusable marked set and
+        // worklist buffer
         Ok(Box::new(OmpPrepared {
             inst,
             csc: inst.to_csc(),
+            classes: self.specialize.then(|| RowClasses::analyze(inst)),
             ws: WorkSet::new(inst.nrows()),
             worklist: Vec::with_capacity(inst.nrows()),
             threads: self.threads,
@@ -73,6 +78,8 @@ impl Engine for OmpEngine {
 pub struct OmpPrepared<'a> {
     inst: &'a MipInstance,
     csc: Csc,
+    /// Prepare-time constraint-class tags (None = specialization off).
+    classes: Option<RowClasses>,
     ws: WorkSet,
     worklist: Vec<u32>,
     pub threads: usize,
@@ -89,6 +96,7 @@ impl OmpPrepared<'_> {
         let bounds = AtomicBounds::new(start);
         self.ws.seed(csc, seed_vars);
         let ws = &self.ws;
+        let classes = self.classes.as_ref().map(|c| c.tags());
         let infeasible = AtomicBool::new(false);
         let mut trace = Trace::default();
         let worklist = &mut self.worklist;
@@ -99,8 +107,16 @@ impl OmpPrepared<'_> {
             if worklist.is_empty() {
                 return RoundOutcome::Empty;
             }
-            let counters =
-                core::parallel_sweep(inst, csc, worklist, &bounds, ws, &infeasible, threads);
+            let counters = core::parallel_sweep(
+                inst,
+                csc,
+                worklist,
+                &bounds,
+                ws,
+                &infeasible,
+                threads,
+                classes,
+            );
             trace.push(RoundTrace {
                 rows_processed: worklist.len(),
                 nnz_processed: counters.nnz,
@@ -133,6 +149,7 @@ impl OmpPrepared<'_> {
         }
         let timer = Timer::start();
         let m = inst.nrows();
+        let classes = self.classes.as_ref().map(|c| c.tags());
         // shared per-node state (bounds lattice, marked set, infeasible
         // flag) plus host-side per-node accounting
         let shared: Vec<(AtomicBounds, WorkSet, AtomicBool)> = starts
@@ -203,7 +220,8 @@ impl OmpPrepared<'_> {
                             if infeasible.load(Ordering::Relaxed) {
                                 continue;
                             }
-                            let row = core::sweep_row_atomic(inst, csc, r as usize, bounds, ws);
+                            let row =
+                                core::sweep_row_atomic(inst, csc, r as usize, bounds, ws, classes);
                             let infeas = row.infeasible;
                             local[b as usize].absorb(row);
                             if infeas {

@@ -19,7 +19,7 @@ use super::core::{self, run_rounds, RoundOutcome, RoundState, WorkSet};
 use super::activity::RowActivity;
 use super::trace::RoundTrace;
 use super::{Engine, PreparedProblem, PropResult};
-use crate::instance::{Bounds, MipInstance};
+use crate::instance::{Bounds, MipInstance, RowClasses};
 use crate::numerics::{FEAS_TOL, MAX_ROUNDS};
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
@@ -37,11 +37,13 @@ pub enum Reduction {
 pub struct PapiloLikeEngine {
     pub threads: usize,
     pub max_rounds: u32,
+    /// Dispatch class-specialized kernels on tagged rows (on by default).
+    pub specialize: bool,
 }
 
 impl Default for PapiloLikeEngine {
     fn default() -> Self {
-        PapiloLikeEngine { threads: 1, max_rounds: MAX_ROUNDS }
+        PapiloLikeEngine { threads: 1, max_rounds: MAX_ROUNDS, specialize: true }
     }
 }
 
@@ -57,6 +59,7 @@ impl PapiloLikeEngine {
         PapiloPrepared {
             inst,
             csc: inst.to_csc(),
+            classes: self.specialize.then(|| RowClasses::analyze(inst)),
             threads: self.threads,
             max_rounds: self.max_rounds,
             state: RoundState::new(m, true),
@@ -84,6 +87,8 @@ impl Engine for PapiloLikeEngine {
 pub struct PapiloPrepared<'a> {
     inst: &'a MipInstance,
     csc: Csc,
+    /// Prepare-time constraint-class tags (None = specialization off).
+    classes: Option<RowClasses>,
     pub threads: usize,
     pub max_rounds: u32,
     state: RoundState,
@@ -110,6 +115,7 @@ impl PreparedProblem for PapiloPrepared<'_> {
         let mut var_fixed = vec![false; n];
         let csc = &self.csc;
         let ws = &self.ws;
+        let classes = self.classes.as_ref().map(|c| c.tags());
         let state = &mut self.state;
         let log = &mut self.log;
 
@@ -125,6 +131,7 @@ impl PreparedProblem for PapiloPrepared<'_> {
                 &state.ub,
                 &mut state.acts,
                 Some(&row_active),
+                classes,
             );
 
             // --- propagation over the marked set: the shared scalar
@@ -144,6 +151,7 @@ impl PreparedProblem for PapiloPrepared<'_> {
                     &mut state.ub,
                     ws,
                     Some(&var_fixed),
+                    classes,
                     &mut rt,
                     |j, lch, uch, lbj, ubj| {
                         if lch {

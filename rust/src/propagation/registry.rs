@@ -46,6 +46,12 @@ pub struct EngineSpec {
     pub jnp: bool,
     /// Propagation round cap (paper section 4.1).
     pub max_rounds: u32,
+    /// Dispatch constraint-class specialized kernels on rows the
+    /// prepare-time analyzer tags (native engines; on by default).
+    /// `--no-specialize` forces the generic path everywhere — the knob
+    /// the registry differential uses to prove the specialized kernels
+    /// bit-exact.
+    pub specialize: bool,
 }
 
 impl EngineSpec {
@@ -57,6 +63,7 @@ impl EngineSpec {
             fastmath: false,
             jnp: false,
             max_rounds: MAX_ROUNDS,
+            specialize: true,
         }
     }
 
@@ -86,8 +93,14 @@ impl EngineSpec {
         self
     }
 
+    /// Force the generic kernels on every row (disable class dispatch).
+    pub fn no_specialize(mut self) -> EngineSpec {
+        self.specialize = false;
+        self
+    }
+
     /// Parse from CLI arguments: `--engine NAME [--threads N] [--f32]
-    /// [--fastmath] [--jnp] [--max-rounds R]`.
+    /// [--fastmath] [--jnp] [--max-rounds R] [--no-specialize]`.
     pub fn from_args(args: &Args) -> EngineSpec {
         let mut spec = EngineSpec::new(args.get_or("engine", "cpu_seq"))
             .max_rounds(args.get_u64("max-rounds", MAX_ROUNDS as u64) as u32);
@@ -104,6 +117,9 @@ impl EngineSpec {
         }
         if args.flag("jnp") {
             spec = spec.jnp();
+        }
+        if args.flag("no-specialize") {
+            spec = spec.no_specialize();
         }
         spec
     }
@@ -171,12 +187,17 @@ pub struct EngineEntry {
     pub needs_artifacts: bool,
     /// How the engine schedules batched multi-node propagation.
     pub batch: BatchMode,
+    /// Does the engine dispatch constraint-class specialized kernels
+    /// (prepare-time row tagging)? The AOT artifacts are fixed programs,
+    /// so the XLA engines always run the generic rule.
+    pub specializes: bool,
     factory: Factory,
 }
 
 fn make_seq(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
     let mut engine = SeqEngine::new();
     engine.max_rounds = spec.max_rounds;
+    engine.specialize = spec.specialize;
     Ok(Box::new(engine))
 }
 
@@ -186,12 +207,14 @@ fn make_omp(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
         None => OmpEngine::default(),
     };
     engine.max_rounds = spec.max_rounds;
+    engine.specialize = spec.specialize;
     Ok(Box::new(engine))
 }
 
 fn make_gpu_model(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
     let mut engine = GpuModelEngine::default();
     engine.max_rounds = spec.max_rounds;
+    engine.specialize = spec.specialize;
     Ok(Box::new(engine))
 }
 
@@ -202,6 +225,7 @@ fn make_papilo(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
         None => PapiloLikeEngine::default(),
     };
     engine.max_rounds = spec.max_rounds;
+    engine.specialize = spec.specialize;
     Ok(Box::new(engine))
 }
 
@@ -246,6 +270,7 @@ impl Registry {
             summary: "Algorithm 1: sequential with constraint marking (baseline)",
             needs_artifacts: false,
             batch: BatchMode::Loop,
+            specializes: true,
             factory: make_seq,
         });
         reg.register(EngineEntry {
@@ -253,6 +278,7 @@ impl Registry {
             summary: "shared-memory parallel Algorithm 1 (scoped threads + atomic bounds)",
             needs_artifacts: false,
             batch: BatchMode::ParallelNodes,
+            specializes: true,
             factory: make_omp,
         });
         reg.register(EngineEntry {
@@ -260,6 +286,7 @@ impl Registry {
             summary: "native round-synchronous Algorithm 2 (oracle + trace recorder)",
             needs_artifacts: false,
             batch: BatchMode::ArrayAxis,
+            specializes: true,
             factory: make_gpu_model,
         });
         reg.register(EngineEntry {
@@ -267,6 +294,7 @@ impl Registry {
             summary: "PaPILO-style presolve baseline (propagation + reductions)",
             needs_artifacts: false,
             batch: BatchMode::Loop,
+            specializes: true,
             factory: make_papilo,
         });
         reg.register(EngineEntry {
@@ -274,6 +302,7 @@ impl Registry {
             summary: "AOT JAX/Pallas artifact via PJRT, host-driven round loop",
             needs_artifacts: true,
             batch: BatchMode::Loop,
+            specializes: false,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -281,6 +310,7 @@ impl Registry {
             summary: "AOT artifact, whole propagation as one device-side loop",
             needs_artifacts: true,
             batch: BatchMode::Loop,
+            specializes: false,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -288,6 +318,7 @@ impl Registry {
             summary: "AOT artifact, fixed-trip masked loop in one dispatch",
             needs_artifacts: true,
             batch: BatchMode::Loop,
+            specializes: false,
             factory: make_xla,
         });
         reg
@@ -342,6 +373,7 @@ impl Registry {
                             ("needs_artifacts", Json::Bool(e.needs_artifacts)),
                             ("batch", Json::Str(e.batch.name().to_string())),
                             ("batch_native", Json::Bool(e.batch.is_native())),
+                            ("specializes", Json::Bool(e.specializes)),
                         ])
                     })
                     .collect(),
@@ -395,9 +427,13 @@ mod tests {
         assert_eq!(spec.threads, Some(3));
         assert!(spec.f32 && !spec.fastmath && !spec.jnp);
         assert_eq!(spec.max_rounds, 7);
+        assert!(spec.specialize, "class dispatch defaults on");
         // without --threads, each engine keeps its own default
         let spec = EngineSpec::from_args(&Args::parse(Vec::new()));
         assert_eq!(spec.threads, None);
+        // --no-specialize forces the generic kernels
+        let spec = EngineSpec::from_args(&Args::parse(vec!["--no-specialize".to_string()]));
+        assert!(!spec.specialize);
     }
 
     #[test]

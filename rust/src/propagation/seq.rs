@@ -11,7 +11,7 @@
 use super::core::{self, run_rounds, RoundOutcome, RoundState, WorkSet};
 use super::trace::RoundTrace;
 use super::{Engine, PreparedProblem, PropResult};
-use crate::instance::{Bounds, MipInstance};
+use crate::instance::{Bounds, MipInstance, RowClasses};
 use crate::numerics::MAX_ROUNDS;
 use crate::sparse::Csc;
 use crate::util::timer::Timer;
@@ -22,11 +22,15 @@ pub struct SeqEngine {
     pub max_rounds: u32,
     /// Record per-round traces (tiny overhead; on by default).
     pub record_trace: bool,
+    /// Dispatch class-specialized kernels on rows the prepare-time
+    /// analyzer tags (on by default; off forces the generic path — the
+    /// differential knob).
+    pub specialize: bool,
 }
 
 impl SeqEngine {
     pub fn new() -> SeqEngine {
-        SeqEngine { max_rounds: MAX_ROUNDS, record_trace: true }
+        SeqEngine { max_rounds: MAX_ROUNDS, record_trace: true, specialize: true }
     }
 
     /// Concrete-typed `prepare` (the trait method boxes this).
@@ -35,6 +39,7 @@ impl SeqEngine {
         SeqPrepared {
             inst,
             csc: inst.to_csc(),
+            classes: self.specialize.then(|| RowClasses::analyze(inst)),
             state: RoundState::new(m, self.record_trace),
             ws: WorkSet::new(m),
             max_rounds: if self.max_rounds == 0 { MAX_ROUNDS } else { self.max_rounds },
@@ -63,6 +68,8 @@ impl Engine for SeqEngine {
 pub struct SeqPrepared<'a> {
     inst: &'a MipInstance,
     csc: Csc,
+    /// Prepare-time constraint-class tags (None = specialization off).
+    classes: Option<RowClasses>,
     state: RoundState,
     ws: WorkSet,
     pub max_rounds: u32,
@@ -78,6 +85,7 @@ impl SeqPrepared<'_> {
         self.ws.seed(&self.csc, seed_vars);
         let csc = &self.csc;
         let ws = &self.ws;
+        let classes = self.classes.as_ref().map(|c| c.tags());
         let state = &mut self.state;
         let (rounds, status) = run_rounds(self.max_rounds, |_| {
             let mut rt = RoundTrace::default();
@@ -94,6 +102,7 @@ impl SeqPrepared<'_> {
                     &mut state.ub,
                     ws,
                     None,
+                    classes,
                     &mut rt,
                     |_, _, _, _, _| {},
                 );

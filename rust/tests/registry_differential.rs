@@ -36,6 +36,8 @@ fn runnable_engines(registry: &Registry) -> Vec<Box<dyn Engine>> {
 }
 
 fn small_suite() -> Vec<gdp::instance::MipInstance> {
+    // Family::ALL includes the pseudo-boolean families, so the whole
+    // differential matrix runs over PB instances too
     let mut suite = Vec::new();
     for family in Family::ALL {
         for seed in 0..3 {
@@ -43,6 +45,26 @@ fn small_suite() -> Vec<gdp::instance::MipInstance> {
                 family,
                 nrows: 40,
                 ncols: 35,
+                seed,
+                ..Default::default()
+            }));
+        }
+    }
+    suite
+}
+
+/// The pseudo-boolean slice: instances where the analyzer tags most rows,
+/// so the specialized kernels actually run.
+fn pb_suite() -> Vec<gdp::instance::MipInstance> {
+    let mut suite = Vec::new();
+    for family in Family::PB {
+        for seed in 0..3 {
+            suite.push(gen::generate(&GenConfig {
+                family,
+                nrows: 40,
+                ncols: 35,
+                int_frac: 1.0,
+                inf_bound_frac: 0.0,
                 seed,
                 ..Default::default()
             }));
@@ -212,6 +234,111 @@ fn propagate_batch_matches_independent_propagates() {
                 let solo = session.propagate_warm(start, vars);
                 assert_batch_slot_agrees(engine.name(), &inst.name, "warm", i, &warm[i], &solo);
             }
+        }
+    }
+}
+
+/// Two runs that must be indistinguishable: identical status, rounds and
+/// bit-identical bounds.
+fn assert_identical(
+    what: &str,
+    specialized: &gdp::propagation::PropResult,
+    generic: &gdp::propagation::PropResult,
+) {
+    assert_eq!(specialized.status, generic.status, "{what}: status");
+    assert_eq!(specialized.rounds, generic.rounds, "{what}: rounds");
+    assert_eq!(specialized.bounds.lb, generic.bounds.lb, "{what}: lb bits");
+    assert_eq!(specialized.bounds.ub, generic.bounds.ub, "{what}: ub bits");
+}
+
+#[test]
+fn specialized_kernels_bit_exact_vs_generic_on_pb_instances() {
+    // the acceptance criterion: every native engine, run single-threaded
+    // (deterministic schedule), must produce IDENTICAL bounds, rounds and
+    // status with class specialization on vs force-disabled — cold, warm
+    // and batched (plain + warm) alike
+    let registry = Registry::with_defaults();
+    let native: Vec<&str> = registry
+        .entries()
+        .iter()
+        .filter(|e| !e.needs_artifacts)
+        .map(|e| e.name)
+        .collect();
+    assert!(native.len() >= 4, "registry lost the native engines");
+
+    for inst in &pb_suite() {
+        for name in &native {
+            let on = registry.create(&EngineSpec::new(name).threads(1)).unwrap();
+            let off = registry
+                .create(&EngineSpec::new(name).threads(1).no_specialize())
+                .unwrap();
+            let mut s_on = on.prepare(inst).unwrap();
+            let mut s_off = off.prepare(inst).unwrap();
+            let start = Bounds::of(inst);
+            let cold_on = s_on.propagate(&start);
+            let cold_off = s_off.propagate(&start);
+            assert_identical(&format!("{name} cold on {}", inst.name), &cold_on, &cold_off);
+            if cold_on.status != Status::Converged {
+                continue;
+            }
+
+            // warm leg: branch one variable and re-propagate both sessions
+            if let Some((v, branched)) = gdp::testkit::branch_first_wide_var(&cold_on.bounds, 0.5)
+            {
+                let warm_on = s_on.propagate_warm(&branched, &[v]);
+                let warm_off = s_off.propagate_warm(&branched, &[v]);
+                assert_identical(
+                    &format!("{name} warm on {}", inst.name),
+                    &warm_on,
+                    &warm_off,
+                );
+            }
+
+            // batch legs: the same branched node domains through both
+            let nodes = gen::branched_nodes(inst, &cold_on.bounds, 4, 13);
+            let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+            let seeds: Vec<Vec<usize>> = nodes.iter().map(|n| n.seed_vars.clone()).collect();
+            let batch_on = s_on.propagate_batch(&starts);
+            let batch_off = s_off.propagate_batch(&starts);
+            assert_eq!(batch_on.len(), batch_off.len());
+            for (i, (a, b)) in batch_on.iter().zip(&batch_off).enumerate() {
+                assert_identical(&format!("{name} batch[{i}] on {}", inst.name), a, b);
+            }
+            let bwarm_on = s_on.propagate_batch_warm(&starts, &seeds);
+            let bwarm_off = s_off.propagate_batch_warm(&starts, &seeds);
+            for (i, (a, b)) in bwarm_on.iter().zip(&bwarm_off).enumerate() {
+                assert_identical(
+                    &format!("{name} batch_warm[{i}] on {}", inst.name),
+                    a,
+                    b,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn specialized_multithreaded_omp_reaches_generic_limit_point_on_pb() {
+    // with real concurrency the schedules are not bit-comparable, but the
+    // converged limit points must still agree within the section 4.3
+    // tolerance, and infeasibility verdicts may not flip
+    let registry = Registry::with_defaults();
+    for inst in &pb_suite() {
+        let on = registry.create(&EngineSpec::new("cpu_omp").threads(4)).unwrap();
+        let off = registry
+            .create(&EngineSpec::new("cpu_omp").threads(4).no_specialize())
+            .unwrap();
+        let a = on.propagate(inst);
+        let b = off.propagate(inst);
+        if a.status == Status::Converged && b.status == Status::Converged {
+            assert!(
+                a.same_limit_point(&b),
+                "cpu_omp specialized diverged from generic on {}",
+                inst.name
+            );
+        }
+        if b.status == Status::Infeasible {
+            assert_ne!(a.status, Status::Converged, "missed infeasibility on {}", inst.name);
         }
     }
 }
