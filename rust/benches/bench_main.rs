@@ -9,7 +9,7 @@
 //! paper's timing protocol (section 4.3). Earlier revisions timed the XLA
 //! engines setup-inclusive, which overstated their per-call cost.
 //!
-//! Four groups:
+//! Five groups:
 //! * micro — hot-path benches per engine/kernel (per-round costs).
 //! * batch — `propagate_batch` (B branched node domains per dispatch)
 //!   vs B sequential `propagate` calls, B in {1, 8, 64}; writes the
@@ -17,14 +17,18 @@
 //! * pb — the pseudo-boolean constraint-class kernels: class-dispatched
 //!   (default) vs force-generic (`--no-specialize` semantics) per native
 //!   engine on the PB families; writes `BENCH_pb.json`.
+//! * service — the propagation service: cold request (pays `prepare`) vs
+//!   session-cache hit vs coalesced concurrent traffic; writes
+//!   `BENCH_service.json`.
 //! * paper — one end-to-end bench per paper table/figure, delegating to
 //!   the experiment harness on a reduced suite and printing the same rows
 //!   the paper reports.
 //!
 //! Filters: `cargo bench -- micro`, `cargo bench -- batch`,
-//! `cargo bench -- pb`, `cargo bench -- table1` etc.
-//! `cargo bench -- smoke` is the CI quick mode: the pb group on tiny
-//! shapes only (seconds, still writes BENCH_pb.json).
+//! `cargo bench -- pb`, `cargo bench -- service`, `cargo bench -- table1`
+//! etc. `cargo bench -- smoke` is the CI quick mode: the pb and service
+//! groups on tiny shapes only (seconds, still writes BENCH_pb.json and
+//! BENCH_service.json).
 
 use gdp::experiments;
 use gdp::gen::{branched_nodes, generate, Family, GenConfig};
@@ -259,6 +263,144 @@ fn pb_bench(smoke: bool) {
     }
 }
 
+/// The serving bench: one instance, three request shapes against a live
+/// in-process service — cold (store evicted first: the request pays
+/// `prepare`), session-cache hit, and coalesced concurrent traffic vs the
+/// same traffic served solo. Writes BENCH_service.json; `smoke` shrinks
+/// the instance for CI.
+fn service_bench(smoke: bool) {
+    use gdp::service::{PropagateRequest, Service, ServiceConfig};
+    use std::time::Duration;
+
+    println!("\n== service: cold vs session-cache hit vs coalesced traffic ==");
+    let (rows, cols) = if smoke { (300, 300) } else { (2000, 2000) };
+    let inst = generate(&GenConfig {
+        family: Family::Mixed,
+        nrows: rows,
+        ncols: cols,
+        mean_row_nnz: 8,
+        seed: 29,
+        ..Default::default()
+    });
+    let iters = if smoke { 3 } else { 5 };
+    let mut records: Vec<Json> = Vec::new();
+
+    // ---- cold vs hit (cpu_seq; immediate flushes)
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::ZERO,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let loaded = handle.load(inst.clone()).expect("load");
+    // cold leg: evict/reload are store maintenance, not request cost —
+    // they run outside the timed region (manual loop; `measure` can't
+    // exclude per-iteration setup)
+    let mut colds = Vec::new();
+    for _ in 0..iters {
+        handle.evict(Some(loaded.session)).expect("evict");
+        handle.load(inst.clone()).expect("reload");
+        let timer = gdp::util::timer::Timer::start();
+        let r = handle.propagate(PropagateRequest::cold(loaded.session)).expect("cold");
+        colds.push(timer.secs());
+        assert!(!r.cache_hit, "cold request found a cached session");
+    }
+    let cold_median = gdp::metrics::percentile(&colds, 50.0);
+    let r = handle.propagate(PropagateRequest::cold(loaded.session)).expect("warmup");
+    assert!(r.cache_hit);
+    let (_, hit_median, _) = measure(1, iters, || {
+        let r = handle.propagate(PropagateRequest::cold(loaded.session)).expect("hit");
+        assert!(r.cache_hit, "hit request missed the session cache");
+    });
+    let hit_speedup = cold_median / hit_median.max(1e-12);
+    println!(
+        "bench service/cpu_seq  cold {:>10}  hit {:>10}  hit_speedup {hit_speedup:.2}x",
+        secs(cold_median),
+        secs(hit_median)
+    );
+    records.push(Json::obj(vec![
+        ("mode", Json::Str("session_cache".to_string())),
+        ("engine", Json::Str("cpu_seq".to_string())),
+        ("cold_s", Json::Num(cold_median)),
+        ("hit_s", Json::Num(hit_median)),
+        ("hit_speedup", Json::Num(hit_speedup)),
+    ]));
+    let root = handle.propagate(PropagateRequest::cold(loaded.session)).expect("root");
+    service.shutdown();
+
+    // ---- coalesced vs solo concurrent traffic (cpu_omp, 8 threads)
+    if root.status != Status::Converged {
+        println!("(root propagation did not converge; skipping the coalescing leg)");
+    } else {
+        let clients = 8;
+        let n = if smoke { 16 } else { 32 };
+        let starts: Vec<Bounds> = branched_nodes(&inst, &root.bounds, n, 7)
+            .into_iter()
+            .map(|b| b.bounds)
+            .collect();
+        let spec = EngineSpec::new("cpu_omp").threads(8);
+        let run_mode = |batch_max: usize, window: Duration| -> f64 {
+            let service = Service::start(ServiceConfig {
+                batch_max,
+                batch_window: window,
+                ..ServiceConfig::default()
+            });
+            let handle = service.handle();
+            let loaded = handle.load(inst.clone()).expect("load");
+            handle
+                .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+                .expect("session warmup");
+            let (_, median, _) = measure(0, iters, || {
+                std::thread::scope(|s| {
+                    for chunk in starts.chunks(starts.len().div_ceil(clients)) {
+                        let handle = handle.clone();
+                        let spec = spec.clone();
+                        s.spawn(move || {
+                            for start in chunk {
+                                handle
+                                    .propagate(
+                                        PropagateRequest::cold(loaded.session)
+                                            .with_spec(spec.clone())
+                                            .with_start(start.clone()),
+                                    )
+                                    .expect("served propagate");
+                            }
+                        });
+                    }
+                });
+            });
+            service.shutdown();
+            median
+        };
+        let solo = run_mode(1, Duration::ZERO);
+        let coalesced = run_mode(clients, Duration::from_millis(10));
+        let speedup = solo / coalesced.max(1e-12);
+        println!(
+            "bench service/cpu_omp8/{n}req  solo {:>10}  coalesced {:>10}  speedup {speedup:.2}x",
+            secs(solo),
+            secs(coalesced)
+        );
+        records.push(Json::obj(vec![
+            ("mode", Json::Str("coalescing".to_string())),
+            ("engine", Json::Str("cpu_omp8".to_string())),
+            ("requests", Json::Num(n as f64)),
+            ("solo_s", Json::Num(solo)),
+            ("coalesced_s", Json::Num(coalesced)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("service".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("instance", Json::Str(inst.name.clone())),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_service.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_service.json"),
+        Err(e) => println!("(could not write BENCH_service.json: {e})"),
+    }
+}
+
 fn paper(filter: Option<&str>) {
     // reduced suite: every table/figure regenerated end-to-end
     // fig5/fig6 rerun the XLA engine several times per instance; the bench
@@ -292,12 +434,17 @@ fn main() {
         Some("micro") => micro(),
         Some("batch") => batch_bench(),
         Some("pb") => pb_bench(false),
-        Some("smoke") => pb_bench(true),
+        Some("service") => service_bench(false),
+        Some("smoke") => {
+            pb_bench(true);
+            service_bench(true);
+        }
         Some(f) => paper(Some(f)),
         None => {
             micro();
             batch_bench();
             pb_bench(false);
+            service_bench(false);
             paper(None);
         }
     }

@@ -6,6 +6,7 @@ pub mod batch_throughput;
 pub mod context;
 pub mod pb;
 pub mod price_par;
+pub mod service_throughput;
 pub mod table1;
 pub mod fig2;
 pub mod fig3;
@@ -22,10 +23,22 @@ use crate::util::cli::Args;
 use crate::util::fmt::Table;
 
 /// All experiment ids, in paper order; `batch` (batched multi-node
-/// throughput) and `pb` (pseudo-boolean constraint-class specialization)
+/// throughput), `pb` (pseudo-boolean constraint-class specialization)
+/// and `service` (served propagation: session cache + micro-batching)
 /// are this reproduction's own section 5 outlook experiments.
-pub const ALL_EXPERIMENTS: [&str; 10] =
-    ["price-par", "table1", "fig2", "roofline", "fig3", "fig4", "fig5", "fig6", "batch", "pb"];
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "price-par",
+    "table1",
+    "fig2",
+    "roofline",
+    "fig3",
+    "fig4",
+    "fig5",
+    "fig6",
+    "batch",
+    "pb",
+    "service",
+];
 
 /// Run one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
@@ -41,6 +54,7 @@ pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
         "fig6" => fig6::run(&ctx),
         "batch" => batch_throughput::run(&ctx),
         "pb" => pb::run(&ctx),
+        "service" => service_throughput::run(&ctx),
         other => anyhow::bail!("unknown experiment {other}; known: {ALL_EXPERIMENTS:?}"),
     }
 }

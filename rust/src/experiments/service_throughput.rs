@@ -1,0 +1,231 @@
+//! Serving-layer throughput (this reproduction's outlook experiment for
+//! the ROADMAP's heavy-concurrent-traffic scenario): the propagation
+//! service measured three ways on one instance —
+//!
+//! 1. **cold vs session-cache hit** — a request that pays `prepare`
+//!    against one that reuses the cached prepared session (the store's
+//!    whole point: §4.3 amortization made cross-request);
+//! 2. **coalesced vs solo** — K concurrent clients whose requests the
+//!    micro-batching scheduler flushes as `propagate_batch` dispatches,
+//!    against the same traffic served one request per dispatch;
+//! 3. **served vs direct** — the served result must be bit-identical to
+//!    the direct session-API call (shape-checked here, proven engine by
+//!    engine in `tests/service_differential.rs`).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::context::ExpContext;
+use super::ExpOutput;
+use crate::gen::branched_nodes;
+use crate::instance::Bounds;
+use crate::metrics::percentile;
+use crate::propagation::registry::EngineSpec;
+use crate::propagation::{Engine as _, Status};
+use crate::service::{PropagateRequest, Service, ServiceConfig, ServiceHandle};
+use crate::util::fmt::{ratio, secs, Table};
+use crate::util::timer::Timer;
+
+/// Concurrent clients in the coalescing leg.
+const CLIENTS: usize = 8;
+/// Requests each client issues per measured run.
+const REQUESTS_PER_CLIENT: usize = 4;
+
+fn err(e: crate::service::ServiceError) -> anyhow::Error {
+    anyhow::anyhow!("service: {e}")
+}
+
+/// Drive `CLIENTS` threads, each issuing its share of `starts` as
+/// propagate requests; returns total wall seconds for all of them.
+fn drive_clients(
+    handle: &ServiceHandle,
+    session: u64,
+    spec: &EngineSpec,
+    starts: &[Bounds],
+) -> f64 {
+    let timer = Timer::start();
+    std::thread::scope(|s| {
+        for chunk in starts.chunks(starts.len().div_ceil(CLIENTS)) {
+            let handle = handle.clone();
+            let spec = spec.clone();
+            s.spawn(move || {
+                for start in chunk {
+                    handle
+                        .propagate(
+                            PropagateRequest::cold(session)
+                                .with_spec(spec.clone())
+                                .with_start(start.clone()),
+                        )
+                        .expect("served propagate failed");
+                }
+            });
+        }
+    });
+    timer.secs()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
+    let mut out = ExpOutput::new("service");
+    let Some(inst) = ctx.suite.iter().max_by_key(|i| i.size_measure()) else {
+        out.check("suite non-empty", false);
+        return Ok(out);
+    };
+    out.note(format!(
+        "instance {} ({}x{}, {} nnz); {} clients x {} requests in the coalescing leg",
+        inst.name,
+        inst.nrows(),
+        inst.ncols(),
+        inst.nnz(),
+        CLIENTS,
+        REQUESTS_PER_CLIENT
+    ));
+
+    // ---- leg 1: cold vs session-cache hit, every servable native engine
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::ZERO, // solo requests flush immediately
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let loaded = handle.load(inst.clone()).map_err(err)?;
+    let mut cache_table = Table::new(vec!["engine", "cold_ms", "hit_ms", "hit_speedup"]);
+    let mut hits_beat_cold = true;
+    let mut served_matches_direct = true;
+    let native: Vec<&str> = ctx
+        .registry
+        .entries()
+        .iter()
+        .filter(|e| e.served && !e.needs_artifacts)
+        .map(|e| e.name)
+        .collect();
+    for &name in &native {
+        let spec = EngineSpec::new(name).threads(ctx.threads);
+        let mut colds = Vec::new();
+        let mut hits = Vec::new();
+        for _ in 0..3 {
+            // cold: drop the cached state, re-load (untimed), request once
+            handle.evict(Some(loaded.session)).map_err(err)?;
+            handle.load(inst.clone()).map_err(err)?;
+            let timer = Timer::start();
+            let r = handle
+                .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+                .map_err(err)?;
+            colds.push(timer.secs());
+            if r.cache_hit {
+                hits_beat_cold = false; // measurement is void; fail the check
+            }
+            for _ in 0..3 {
+                let timer = Timer::start();
+                let r = handle
+                    .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+                    .map_err(err)?;
+                hits.push(timer.secs());
+                if !r.cache_hit {
+                    hits_beat_cold = false;
+                }
+            }
+            // served vs direct (deterministic single-thread run)
+            if name == "cpu_seq" {
+                let direct = ctx.engine(&spec)?.propagate(inst);
+                if r.bounds.lb != direct.bounds.lb
+                    || r.bounds.ub != direct.bounds.ub
+                    || r.rounds != direct.rounds
+                {
+                    served_matches_direct = false;
+                }
+            }
+        }
+        let cold = percentile(&colds, 50.0);
+        let hit = percentile(&hits, 50.0);
+        if hit > cold {
+            hits_beat_cold = false;
+        }
+        cache_table.row(vec![
+            name.to_string(),
+            format!("{:.3}", cold * 1e3),
+            format!("{:.3}", hit * 1e3),
+            ratio(cold / hit.max(1e-12)),
+        ]);
+    }
+    out.tables.push(("session cache: cold vs hit latency (median)".into(), cache_table));
+    service.shutdown();
+
+    // ---- leg 2: coalesced vs solo throughput on batch-capable engines
+    let root = ctx.engine(&EngineSpec::new("cpu_seq"))?.propagate(inst);
+    let mut coalesce_ok = true;
+    let mut omp_speedup = f64::NAN;
+    if root.status == Status::Converged {
+        let n = CLIENTS * REQUESTS_PER_CLIENT;
+        let starts: Vec<Bounds> = branched_nodes(inst, &root.bounds, n, 2017)
+            .into_iter()
+            .map(|b| b.bounds)
+            .collect();
+        let mut table =
+            Table::new(vec!["engine", "solo_s", "coalesced_s", "speedup", "req_per_s"]);
+        let batchable: Vec<&str> = ctx
+            .registry
+            .entries()
+            .iter()
+            .filter(|e| e.served && !e.needs_artifacts && e.batch.is_native())
+            .map(|e| e.name)
+            .collect();
+        for &name in &batchable {
+            let spec = EngineSpec::new(name).threads(ctx.threads);
+            let run_mode = |batch_max: usize, window: Duration| -> Result<f64> {
+                let service = Service::start(ServiceConfig {
+                    batch_max,
+                    batch_window: window,
+                    ..ServiceConfig::default()
+                });
+                let handle = service.handle();
+                let loaded = handle.load(inst.clone()).map_err(err)?;
+                // warm the session so both modes measure only serving
+                handle
+                    .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+                    .map_err(err)?;
+                let wall = drive_clients(&handle, loaded.session, &spec, &starts);
+                service.shutdown();
+                Ok(wall)
+            };
+            let solo = run_mode(1, Duration::ZERO)?;
+            let coalesced = run_mode(CLIENTS, Duration::from_millis(10))?;
+            let speedup = solo / coalesced.max(1e-12);
+            if name == "cpu_omp" {
+                omp_speedup = speedup;
+            }
+            // lenient under CI noise: coalescing must not be catastrophic
+            if speedup < 0.5 {
+                coalesce_ok = false;
+            }
+            table.row(vec![
+                name.to_string(),
+                secs(solo),
+                secs(coalesced),
+                ratio(speedup),
+                format!("{:.1}", n as f64 / coalesced.max(1e-12)),
+            ]);
+        }
+        out.tables.push(("micro-batching: solo vs coalesced dispatches".into(), table));
+    }
+
+    out.check(
+        "session-cache hit is never slower than cold (median, per engine)",
+        hits_beat_cold,
+    );
+    out.check(
+        "served cpu_seq result bit-identical to the direct session call",
+        served_matches_direct,
+    );
+    out.check(
+        "coalesced serving >= 0.5x solo on every batch-capable engine",
+        coalesce_ok,
+    );
+    out.check(
+        "root converged (coalescing leg ran)",
+        root.status == Status::Converged,
+    );
+    if omp_speedup.is_finite() {
+        out.note(format!("cpu_omp coalescing speedup: {}", ratio(omp_speedup)));
+    }
+    Ok(out)
+}

@@ -169,6 +169,19 @@ impl Bounds {
         Bounds { lb: inst.lb.clone(), ub: inst.ub.clone() }
     }
 
+    /// How many bound entries (lower + upper) differ exactly between
+    /// `self` and `other` — the "tightened bounds" count the CLI prints
+    /// and the serving layer reports per request (one definition, so the
+    /// two can be compared field-by-field).
+    pub fn diff_count(&self, other: &Bounds) -> usize {
+        self.lb
+            .iter()
+            .zip(&other.lb)
+            .chain(self.ub.iter().zip(&other.ub))
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
     /// Paper section 4.3: equality of two executions within tolerances,
     /// `self` being the reference.
     pub fn equal_within_tol(&self, other: &Bounds) -> bool {

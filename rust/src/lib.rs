@@ -43,6 +43,7 @@ pub mod runtime;
 pub mod devsim;
 pub mod metrics;
 pub mod experiments;
+pub mod service;
 
 /// Numerical policy shared with python/compile/__init__.py. The two must
 /// stay in lock-step for the differential tests to hold.

@@ -15,10 +15,15 @@
 //!       Generate the benchmark suite as MPS files.
 //!   exp       <id>|all [--scale X] [--smoke] [--sets 1,2] [--out DIR] [--check]
 //!       Reproduce a paper table/figure (price-par, table1, fig2, roofline,
-//!       fig3, fig4, fig5, fig6) or the batched-throughput outlook
-//!       experiment (batch).
-//!   inspect   --mps FILE
-//!       Print instance statistics.
+//!       fig3, fig4, fig5, fig6) or an outlook experiment (batch, pb,
+//!       service).
+//!   inspect   (--mps FILE | --opb FILE)
+//!       Print instance statistics (incl. the row-class histogram).
+//!   serve     [--port P | --stdio] [service options]
+//!       Run the propagation service: cached prepared sessions +
+//!       micro-batching scheduler behind the JSON-line wire protocol.
+//!   request   [--addr HOST:PORT] <load|propagate|stats|evict|shutdown>
+//!       One-shot client for the service (smokes, scripts, CI).
 //!
 //! Engine names and the `--engine` help list both come from the registry
 //! (`gdp::propagation::registry`), so they cannot drift apart.
@@ -49,6 +54,8 @@ fn main() -> ExitCode {
         "suite" => cmd_suite(&args),
         "exp" => cmd_exp(&args),
         "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "request" => cmd_request(&args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(true)
@@ -87,10 +94,17 @@ USAGE:
                --rows M --cols N [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S]
                --out FILE   (a .opb suffix writes OPB; anything else MPS)
   gdp suite [--scale X] [--seed S] --out DIR
-  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|pb|all>
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|pb|service|all>
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
   gdp inspect (--mps FILE | --opb FILE)
+  gdp serve [--port P | --stdio] [--engine NAME] [--batch-max N] [--batch-window-us U]
+            [--max-sessions N] [--max-session-mb MB] [--artifacts DIR]
+  gdp request [--addr HOST:PORT] load (--mps FILE | --opb FILE)
+  gdp request [--addr HOST:PORT] propagate (--session HEX | --mps FILE | --opb FILE)
+              [--engine NAME] [--threads N] [--max-rounds R] [--no-specialize]
+              [--seed-vars 1,2] [--summary]
+  gdp request [--addr HOST:PORT] stats | evict [--session HEX] | shutdown
 "
     )
 }
@@ -122,14 +136,7 @@ fn print_result(name: &str, inst: &MipInstance, r: &PropResult) {
         fmt::secs(r.wall.as_secs_f64()),
         r.trace.total_bound_changes()
     );
-    let tightened = r
-        .bounds
-        .lb
-        .iter()
-        .zip(&inst.lb)
-        .filter(|(a, b)| a != b)
-        .count()
-        + r.bounds.ub.iter().zip(&inst.ub).filter(|(a, b)| a != b).count();
+    let tightened = Bounds::of(inst).diff_count(&r.bounds);
     println!("tightened_bounds={tightened}");
 }
 
@@ -227,11 +234,12 @@ fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
     println!("registered engines (artifacts {}):", registry.artifact_dir().display());
     for entry in registry.entries() {
         println!(
-            "  {:12} {}  [batch: {}]{}{}",
+            "  {:12} {}  [batch: {}]{}{}{}",
             entry.name,
             entry.summary,
             entry.batch.name(),
             if entry.specializes { "  [class-dispatch]" } else { "" },
+            if entry.served { "  [served]" } else { "" },
             if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
         );
     }
@@ -312,6 +320,200 @@ fn cmd_exp(args: &Args) -> anyhow::Result<bool> {
         }
     }
     Ok(all_ok)
+}
+
+fn service_config_from_args(args: &Args) -> gdp::service::ServiceConfig {
+    let defaults = gdp::service::ServiceConfig::default();
+    gdp::service::ServiceConfig {
+        default_engine: args.get_or("engine", &defaults.default_engine).to_string(),
+        batch_max: args.get_usize("batch-max", defaults.batch_max).max(1),
+        batch_window: std::time::Duration::from_micros(
+            args.get_u64("batch-window-us", defaults.batch_window.as_micros() as u64),
+        ),
+        max_sessions: args.get_usize("max-sessions", defaults.max_sessions),
+        max_bytes: args.get_usize("max-session-mb", defaults.max_bytes >> 20) << 20,
+        artifact_dir: args.get("artifacts").map(std::path::PathBuf::from),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<bool> {
+    let service = gdp::service::Service::start(service_config_from_args(args));
+    let handle = service.handle();
+    if args.flag("stdio") {
+        eprintln!(
+            "gdp-serve: stdio mode (one JSON request per line; proto v{})",
+            gdp::service::proto::PROTO_VERSION
+        );
+        gdp::service::server::serve_stdio(&handle)?;
+    } else {
+        let port: u16 = args
+            .get_or("port", "7171")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--port expects a TCP port (0-65535)"))?;
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+        let local = listener.local_addr()?;
+        // scripts (CI readiness loops) wait on this exact line
+        println!("gdp-serve listening on {local} (proto v{})", gdp::service::proto::PROTO_VERSION);
+        use std::io::Write as _;
+        std::io::stdout().flush()?;
+        gdp::service::server::serve_tcp(&handle, listener)?;
+    }
+    service.shutdown();
+    Ok(true)
+}
+
+/// One-shot wire client: build the request line(s) for one op, send over
+/// TCP, print each raw response line; `--summary` additionally prints the
+/// `status=... rounds=... tightened_bounds=...` digest in the same
+/// spelling `gdp propagate` uses, so scripts can diff served against
+/// direct runs.
+fn cmd_request(args: &Args) -> anyhow::Result<bool> {
+    use anyhow::Context as _;
+    use gdp::util::json::Json;
+    use std::io::{BufRead as _, BufReader, Write as _};
+
+    let op = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
+        anyhow::anyhow!("usage: gdp request [--addr HOST:PORT] <load|propagate|stats|evict|shutdown>")
+    })?;
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to gdp-serve at {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+
+    let mut roundtrip = |line: String| -> anyhow::Result<Json> {
+        writeln!(writer, "{line}")?;
+        writer.flush()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        if resp.trim().is_empty() {
+            anyhow::bail!("server closed the connection");
+        }
+        println!("{}", resp.trim());
+        Json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
+    };
+
+    // an instance named on the command line is shipped as a `load`
+    let load_line = |args: &Args| -> anyhow::Result<Option<String>> {
+        let (format, path) = if let Some(p) = args.get("opb") {
+            ("opb", p)
+        } else if let Some(p) = args.get("mps") {
+            ("mps", p)
+        } else {
+            return Ok(None);
+        };
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Ok(Some(
+            Json::obj(vec![
+                ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
+                ("op", Json::Str("load".into())),
+                ("format", Json::Str(format.into())),
+                ("text", Json::Str(text)),
+            ])
+            .to_string(),
+        ))
+    };
+
+    let ok = |resp: &Json| resp.get("ok") == Some(&Json::Bool(true));
+    match op {
+        "load" => {
+            let line = load_line(args)?
+                .ok_or_else(|| anyhow::anyhow!("load needs --mps FILE or --opb FILE"))?;
+            let resp = roundtrip(line)?;
+            Ok(ok(&resp))
+        }
+        "propagate" => {
+            let session = match args.get("session") {
+                Some(hex) => hex.to_string(),
+                None => {
+                    let line = load_line(args)?.ok_or_else(|| {
+                        anyhow::anyhow!("propagate needs --session HEX or --mps/--opb FILE")
+                    })?;
+                    let resp = roundtrip(line)?;
+                    if !ok(&resp) {
+                        return Ok(false);
+                    }
+                    resp.get("result")
+                        .and_then(|r| r.get("session"))
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("load response carried no session id"))?
+                        .to_string()
+                }
+            };
+            let mut pairs = vec![
+                ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
+                ("op", Json::Str("propagate".into())),
+                ("session", Json::Str(session)),
+            ];
+            let knobs_given = args.get("threads").is_some()
+                || args.get("max-rounds").is_some()
+                || args.flag("no-specialize");
+            match args.get("engine") {
+                Some(engine) => {
+                    pairs.push(("engine", Json::Str(engine.into())));
+                    if let Some(t) = args.get("threads") {
+                        pairs.push(("threads", Json::Num(t.parse::<f64>()?)));
+                    }
+                    if let Some(r) = args.get("max-rounds") {
+                        pairs.push(("max_rounds", Json::Num(r.parse::<f64>()?)));
+                    }
+                    if args.flag("no-specialize") {
+                        pairs.push(("no_specialize", Json::Bool(true)));
+                    }
+                }
+                None if knobs_given => anyhow::bail!(
+                    "--threads/--max-rounds/--no-specialize require --engine NAME \
+                     (the server would otherwise run its default engine with \
+                     default settings)"
+                ),
+                None => {}
+            }
+            if let Some(vars) = args.get("seed-vars") {
+                let vars: Result<Vec<Json>, _> = vars
+                    .split(',')
+                    .map(|v| v.trim().parse::<f64>().map(Json::Num))
+                    .collect();
+                pairs.push(("seed_vars", Json::Arr(vars?)));
+            }
+            let resp = roundtrip(Json::obj(pairs).to_string())?;
+            if ok(&resp) && args.flag("summary") {
+                let r = resp.get("result").unwrap();
+                let field = |k: &str| -> String {
+                    match r.get(k) {
+                        Some(Json::Str(s)) => s.clone(),
+                        Some(Json::Num(x)) => format!("{}", *x as i64),
+                        _ => "?".into(),
+                    }
+                };
+                println!(
+                    "status={} rounds={} tightened_bounds={}",
+                    field("status"),
+                    field("rounds"),
+                    field("tightened")
+                );
+            }
+            Ok(ok(&resp))
+        }
+        "stats" | "shutdown" => {
+            let line = Json::obj(vec![
+                ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
+                ("op", Json::Str(op.into())),
+            ])
+            .to_string();
+            Ok(ok(&roundtrip(line)?))
+        }
+        "evict" => {
+            let mut pairs = vec![
+                ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
+                ("op", Json::Str("evict".into())),
+            ];
+            if let Some(hex) = args.get("session") {
+                pairs.push(("session", Json::Str(hex.into())));
+            }
+            Ok(ok(&roundtrip(Json::obj(pairs).to_string())?))
+        }
+        other => anyhow::bail!("unknown request op {other} (load|propagate|stats|evict|shutdown)"),
+    }
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<bool> {

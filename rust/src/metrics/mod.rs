@@ -1,6 +1,8 @@
 //! Evaluation metrics (paper section 4.3): speedups over wall-clock time,
 //! geometric means, percentiles, and the Set-1..Set-8 partition.
 
+pub mod progress;
+
 use crate::gen::suite::set_of;
 
 /// Geometric mean of positive values; 0 when empty.

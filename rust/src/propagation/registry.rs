@@ -99,6 +99,23 @@ impl EngineSpec {
         self
     }
 
+    /// Canonical cache key for this spec: every knob that changes what a
+    /// prepared session computes, in a fixed order. The serving layer's
+    /// `SessionStore` keys prepared sessions on `(instance fingerprint,
+    /// cache_key)`, so two specs with the same key MUST be substitutable.
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}|t{}|f32:{}|fm:{}|jnp:{}|mr:{}|sp:{}",
+            self.name,
+            self.threads.map(|t| t.to_string()).unwrap_or_else(|| "d".into()),
+            self.f32 as u8,
+            self.fastmath as u8,
+            self.jnp as u8,
+            self.max_rounds,
+            self.specialize as u8,
+        )
+    }
+
     /// Parse from CLI arguments: `--engine NAME [--threads N] [--f32]
     /// [--fastmath] [--jnp] [--max-rounds R] [--no-specialize]`.
     pub fn from_args(args: &Args) -> EngineSpec {
@@ -191,6 +208,13 @@ pub struct EngineEntry {
     /// (prepare-time row tagging)? The AOT artifacts are fixed programs,
     /// so the XLA engines always run the generic rule.
     pub specializes: bool,
+    /// Can the propagation service host cached sessions of this engine
+    /// behind its micro-batching scheduler? All current engines can; the
+    /// capability exists so an engine whose sessions need per-call
+    /// external state can opt out, and so `gdp serve` / the service
+    /// differential enroll engines from the registry instead of a
+    /// hand-kept list.
+    pub served: bool,
     factory: Factory,
 }
 
@@ -271,6 +295,7 @@ impl Registry {
             needs_artifacts: false,
             batch: BatchMode::Loop,
             specializes: true,
+            served: true,
             factory: make_seq,
         });
         reg.register(EngineEntry {
@@ -279,6 +304,7 @@ impl Registry {
             needs_artifacts: false,
             batch: BatchMode::ParallelNodes,
             specializes: true,
+            served: true,
             factory: make_omp,
         });
         reg.register(EngineEntry {
@@ -287,6 +313,7 @@ impl Registry {
             needs_artifacts: false,
             batch: BatchMode::ArrayAxis,
             specializes: true,
+            served: true,
             factory: make_gpu_model,
         });
         reg.register(EngineEntry {
@@ -295,6 +322,7 @@ impl Registry {
             needs_artifacts: false,
             batch: BatchMode::Loop,
             specializes: true,
+            served: true,
             factory: make_papilo,
         });
         reg.register(EngineEntry {
@@ -303,6 +331,7 @@ impl Registry {
             needs_artifacts: true,
             batch: BatchMode::Loop,
             specializes: false,
+            served: true,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -311,6 +340,7 @@ impl Registry {
             needs_artifacts: true,
             batch: BatchMode::Loop,
             specializes: false,
+            served: true,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -319,6 +349,7 @@ impl Registry {
             needs_artifacts: true,
             batch: BatchMode::Loop,
             specializes: false,
+            served: true,
             factory: make_xla,
         });
         reg
@@ -374,6 +405,7 @@ impl Registry {
                             ("batch", Json::Str(e.batch.name().to_string())),
                             ("batch_native", Json::Bool(e.batch.is_native())),
                             ("specializes", Json::Bool(e.specializes)),
+                            ("served", Json::Bool(e.served)),
                         ])
                     })
                     .collect(),
@@ -460,6 +492,14 @@ mod tests {
                 j.get("batch").and_then(|v| v.as_str()),
                 Some(entry.batch.name())
             );
+            // the serving capability the propagation service reads
+            assert_eq!(
+                j.get("served").and_then(|v| match v {
+                    crate::util::json::Json::Bool(b) => Some(*b),
+                    _ => None,
+                }),
+                Some(entry.served)
+            );
         }
         // the capability map the batching work relies on
         let mode_of = |name: &str| {
@@ -469,6 +509,30 @@ mod tests {
         assert_eq!(mode_of("gpu_model"), BatchMode::ArrayAxis);
         assert_eq!(mode_of("cpu_seq"), BatchMode::Loop);
         assert!(!BatchMode::Loop.is_native() && BatchMode::ArrayAxis.is_native());
+    }
+
+    #[test]
+    fn cache_keys_distinguish_session_changing_knobs() {
+        // the serving layer substitutes sessions with equal keys; every
+        // knob that changes prepared-session behaviour must split the key
+        let base = EngineSpec::new("cpu_seq");
+        let keys = [
+            base.cache_key(),
+            EngineSpec::new("cpu_omp").cache_key(),
+            base.clone().threads(4).cache_key(),
+            base.clone().max_rounds(7).cache_key(),
+            base.clone().no_specialize().cache_key(),
+            base.clone().f32().cache_key(),
+            base.clone().fastmath().cache_key(),
+            base.clone().jnp().cache_key(),
+        ];
+        for (i, a) in keys.iter().enumerate() {
+            for b in keys.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+        // and an identical spec maps to the identical key
+        assert_eq!(base.cache_key(), EngineSpec::new("cpu_seq").cache_key());
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Serving-layer metrics: per-request latency, propagation rounds,
+//! candidate counts, micro-batch coalescing and the algorithm-independent
+//! progress measure ([`crate::metrics::progress`], arXiv:2106.07573) —
+//! aggregated on the scheduler thread (no locks) and surfaced through the
+//! `stats` wire op.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::session::StoreCounters;
+
+/// Count / total / min / max accumulator for a duration-like series.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DurationStat {
+    pub count: u64,
+    pub total_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl DurationStat {
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        if self.count == 0 || s < self.min_s {
+            self.min_s = s;
+        }
+        if s > self.max_s {
+            self.max_s = s;
+        }
+        self.count += 1;
+        self.total_s += s;
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_s / self.count as f64
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_us", Json::Num(self.mean_s() * 1e6)),
+            ("min_us", Json::Num(self.min_s * 1e6)),
+            ("max_us", Json::Num(self.max_s * 1e6)),
+        ])
+    }
+}
+
+/// Everything the scheduler measures about the requests it served.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    started: Instant,
+    /// Requests seen, by op.
+    pub loads: u64,
+    pub propagates: u64,
+    pub stats_calls: u64,
+    pub evicts: u64,
+    /// Service-side propagate latency: enqueue to response (queue wait +
+    /// coalescing window + engine execution).
+    pub latency: DurationStat,
+    /// Engine-reported wall time of the propagation hot path alone.
+    pub engine_wall: DurationStat,
+    /// Propagation rounds across all served propagate requests.
+    pub rounds_total: u64,
+    /// Improving candidates (trace `atomic_updates`) across all requests.
+    pub candidates_total: u64,
+    /// Bounds tightened (vs request start) across all requests.
+    pub tightened_total: u64,
+    /// Progress-measure (capped-volume reduction) sum and extrema.
+    pub progress_sum: f64,
+    pub progress_min: f64,
+    pub progress_count: u64,
+    /// Scheduler flushes: how many dispatches, how many requests rode
+    /// them, the largest coalesced batch, and how many dispatches used the
+    /// batched session API rather than solo calls.
+    pub flushes: u64,
+    pub coalesced_total: u64,
+    pub coalesced_max: usize,
+    pub batched_flushes: u64,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        ServiceMetrics {
+            started: Instant::now(),
+            loads: 0,
+            propagates: 0,
+            stats_calls: 0,
+            evicts: 0,
+            latency: DurationStat::default(),
+            engine_wall: DurationStat::default(),
+            rounds_total: 0,
+            candidates_total: 0,
+            tightened_total: 0,
+            progress_sum: 0.0,
+            progress_min: f64::INFINITY,
+            progress_count: 0,
+            flushes: 0,
+            coalesced_total: 0,
+            coalesced_max: 0,
+            batched_flushes: 0,
+        }
+    }
+}
+
+impl ServiceMetrics {
+    /// Record one served propagate request.
+    pub fn record_propagate(
+        &mut self,
+        latency: Duration,
+        engine_wall: Duration,
+        rounds: u32,
+        candidates: usize,
+        tightened: usize,
+        progress: f64,
+    ) {
+        self.propagates += 1;
+        self.latency.record(latency);
+        self.engine_wall.record(engine_wall);
+        self.rounds_total += rounds as u64;
+        self.candidates_total += candidates as u64;
+        self.tightened_total += tightened as u64;
+        self.progress_sum += progress;
+        self.progress_min = self.progress_min.min(progress);
+        self.progress_count += 1;
+    }
+
+    /// Record one scheduler flush of `coalesced` requests (`batched` =
+    /// used the batched session API).
+    pub fn record_flush(&mut self, coalesced: usize, batched: bool) {
+        self.flushes += 1;
+        self.coalesced_total += coalesced as u64;
+        self.coalesced_max = self.coalesced_max.max(coalesced);
+        if batched {
+            self.batched_flushes += 1;
+        }
+    }
+
+    pub fn mean_progress(&self) -> f64 {
+        if self.progress_count == 0 {
+            0.0
+        } else {
+            self.progress_sum / self.progress_count as f64
+        }
+    }
+
+    /// Mean requests per dispatch — >1 means micro-batching is working.
+    pub fn mean_coalesced(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.coalesced_total as f64 / self.flushes as f64
+        }
+    }
+
+    /// The `stats` wire-op payload.
+    pub fn to_json(
+        &self,
+        store: &StoreCounters,
+        sessions: usize,
+        instances: usize,
+        bytes: usize,
+    ) -> Json {
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            (
+                "requests",
+                Json::obj(vec![
+                    ("load", Json::Num(self.loads as f64)),
+                    ("propagate", Json::Num(self.propagates as f64)),
+                    ("stats", Json::Num(self.stats_calls as f64)),
+                    ("evict", Json::Num(self.evicts as f64)),
+                ]),
+            ),
+            (
+                "sessions",
+                Json::obj(vec![
+                    ("live", Json::Num(sessions as f64)),
+                    ("instances", Json::Num(instances as f64)),
+                    ("approx_bytes", Json::Num(bytes as f64)),
+                    ("hits", Json::Num(store.hits as f64)),
+                    ("misses", Json::Num(store.misses as f64)),
+                    ("evictions", Json::Num(store.evictions as f64)),
+                    ("instance_hits", Json::Num(store.instance_hits as f64)),
+                    ("instance_loads", Json::Num(store.instance_loads as f64)),
+                ]),
+            ),
+            ("latency", self.latency.to_json()),
+            ("engine_wall", self.engine_wall.to_json()),
+            (
+                "propagation",
+                Json::obj(vec![
+                    ("rounds", Json::Num(self.rounds_total as f64)),
+                    ("candidates", Json::Num(self.candidates_total as f64)),
+                    ("tightened", Json::Num(self.tightened_total as f64)),
+                    ("progress_mean", Json::Num(self.mean_progress())),
+                    (
+                        "progress_min",
+                        Json::Num(if self.progress_count == 0 { 0.0 } else { self.progress_min }),
+                    ),
+                ]),
+            ),
+            (
+                "scheduler",
+                Json::obj(vec![
+                    ("flushes", Json::Num(self.flushes as f64)),
+                    ("batched_flushes", Json::Num(self.batched_flushes as f64)),
+                    ("coalesced_mean", Json::Num(self.mean_coalesced())),
+                    ("coalesced_max", Json::Num(self.coalesced_max as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_stat_tracks_extrema() {
+        let mut s = DurationStat::default();
+        s.record(Duration::from_micros(100));
+        s.record(Duration::from_micros(300));
+        s.record(Duration::from_micros(200));
+        assert_eq!(s.count, 3);
+        assert!((s.min_s - 1e-4).abs() < 1e-9);
+        assert!((s.max_s - 3e-4).abs() < 1e-9);
+        assert!((s.mean_s() - 2e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let mut m = ServiceMetrics::default();
+        m.loads = 2;
+        m.record_propagate(Duration::from_micros(50), Duration::from_micros(40), 3, 7, 2, 0.5);
+        m.record_flush(4, true);
+        let j = m.to_json(&StoreCounters::default(), 1, 1, 1024);
+        assert_eq!(j.get("requests").unwrap().get("propagate").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("scheduler").unwrap().get("coalesced_max").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            j.get("propagation").unwrap().get("progress_mean").unwrap().as_f64(),
+            Some(0.5)
+        );
+        // serializes cleanly
+        assert!(crate::util::json::Json::parse(&j.to_string()).is_ok());
+    }
+}

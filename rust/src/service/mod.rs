@@ -1,0 +1,375 @@
+//! Propagation service: serve domain propagation to concurrent clients
+//! over long-lived prepared sessions (DESIGN.md section 7).
+//!
+//! The paper's timing protocol (section 4.3) splits one-time `prepare`
+//! from the timed `propagate` hot path because a solver amortizes setup
+//! over millions of calls on the same matrix. This subsystem turns that
+//! amortization into a *served* capability — the ROADMAP's
+//! heavy-concurrent-traffic scenario:
+//!
+//! * [`session::SessionStore`] — prepared sessions cached across requests
+//!   and clients, keyed by instance content fingerprint + engine spec,
+//!   LRU-evicted under a count/memory budget.
+//! * [`scheduler`] — a micro-batching scheduler: concurrent `propagate`
+//!   requests on the same session are coalesced and flushed as one
+//!   `propagate_batch(_warm)` dispatch when a batch-size or deadline
+//!   trigger fires (the paper's section 5 "saturate the device with many
+//!   subproblems" outlook, driven by live traffic).
+//! * [`proto`] — a versioned JSON-line wire protocol (`load`,
+//!   `propagate`, `stats`, `evict`, `shutdown`).
+//! * [`server`] — a threaded TCP accept loop plus a stdio mode for pipes
+//!   and tests (`gdp serve`).
+//! * [`metrics`] — per-request latency, rounds, candidate counts and the
+//!   algorithm-independent progress measure (arXiv:2106.07573).
+//!
+//! Everything is std-only. All engine execution happens on one scheduler
+//! thread (prepared sessions are not `Send`; the XLA engines share an
+//! `Rc` runtime); connection threads and in-process clients talk to it
+//! through the cloneable, `Send` [`ServiceHandle`].
+
+pub mod metrics;
+pub mod proto;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Duration;
+
+use crate::instance::{Bounds, MipInstance};
+use crate::propagation::registry::EngineSpec;
+use crate::propagation::Status;
+use crate::util::json::Json;
+
+/// Serving knobs. Defaults favour low latency with visible coalescing
+/// under concurrent load.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Engine used when a propagate request names none.
+    pub default_engine: String,
+    /// Flush a session's queue as soon as this many requests are pending.
+    pub batch_max: usize,
+    /// ... or when the oldest pending request has waited this long.
+    pub batch_window: Duration,
+    /// Session-count budget of the store.
+    pub max_sessions: usize,
+    /// Approximate-bytes budget of the store (instances + sessions).
+    pub max_bytes: usize,
+    /// Artifact directory for the XLA engines (None = default resolution).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            default_engine: "cpu_seq".into(),
+            batch_max: 16,
+            batch_window: Duration::from_millis(2),
+            max_sessions: 32,
+            max_bytes: 256 << 20,
+            artifact_dir: None,
+        }
+    }
+}
+
+/// Service-level error: a failed request, or the service is gone.
+#[derive(Debug, Clone)]
+pub struct ServiceError(pub String);
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+pub type ServiceResult<T> = Result<T, ServiceError>;
+
+/// Reply to a `load`: the session id (instance content fingerprint) and
+/// whether the instance was already resident.
+#[derive(Debug, Clone)]
+pub struct LoadReply {
+    pub session: u64,
+    pub cached: bool,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+}
+
+/// One propagate request against a loaded instance.
+#[derive(Debug, Clone)]
+pub struct PropagateRequest {
+    /// Session id returned by `load`.
+    pub session: u64,
+    /// Engine spec; `None` = the service's default engine.
+    pub spec: Option<EngineSpec>,
+    /// Starting bounds; `None` = the instance's own bounds.
+    pub start: Option<Bounds>,
+    /// Branched variables for warm marking; `None` = cold (all marked).
+    pub seed_vars: Option<Vec<usize>>,
+}
+
+impl PropagateRequest {
+    pub fn cold(session: u64) -> PropagateRequest {
+        PropagateRequest { session, spec: None, start: None, seed_vars: None }
+    }
+
+    pub fn with_spec(mut self, spec: EngineSpec) -> PropagateRequest {
+        self.spec = Some(spec);
+        self
+    }
+
+    pub fn with_start(mut self, start: Bounds) -> PropagateRequest {
+        self.start = Some(start);
+        self
+    }
+
+    pub fn warm(mut self, seed_vars: Vec<usize>) -> PropagateRequest {
+        self.seed_vars = Some(seed_vars);
+        self
+    }
+}
+
+/// Reply to a served propagate request.
+#[derive(Debug, Clone)]
+pub struct PropagateReply {
+    pub bounds: Bounds,
+    pub rounds: u32,
+    pub status: Status,
+    /// Engine wall time of the propagation hot path (for a coalesced
+    /// dispatch: the wall of the whole batch — the nodes ran together).
+    pub wall: Duration,
+    /// Service-side latency: enqueue to response.
+    pub latency: Duration,
+    /// How many requests rode the dispatch that served this one.
+    pub coalesced: usize,
+    /// Did the request reuse a cached prepared session (true) or pay
+    /// `prepare` (false)?
+    pub cache_hit: bool,
+    /// Capped-volume reduction achieved by this run (arXiv:2106.07573;
+    /// see [`crate::metrics::progress`]).
+    pub progress: f64,
+    /// Bounds that differ from the request's starting bounds.
+    pub tightened: usize,
+    /// Improving candidates over the run (trace `atomic_updates`).
+    pub candidates: usize,
+}
+
+/// Reply to an `evict`.
+#[derive(Debug, Clone)]
+pub struct EvictReply {
+    pub dropped: usize,
+}
+
+/// A job on the scheduler queue. Crate-visible: constructed by
+/// [`ServiceHandle`], consumed by [`scheduler::Scheduler`].
+pub(crate) enum Job {
+    Load {
+        inst: MipInstance,
+        reply: Sender<ServiceResult<LoadReply>>,
+    },
+    Propagate {
+        req: PropagateRequest,
+        received: std::time::Instant,
+        reply: Sender<ServiceResult<PropagateReply>>,
+    },
+    Stats {
+        reply: Sender<ServiceResult<Json>>,
+    },
+    Evict {
+        session: Option<u64>,
+        reply: Sender<ServiceResult<EvictReply>>,
+    },
+    Shutdown {
+        reply: Sender<ServiceResult<()>>,
+    },
+}
+
+/// Cloneable, `Send` front door to a running service: every method is a
+/// blocking request/response round trip with the scheduler thread.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Job>,
+}
+
+impl ServiceHandle {
+    fn call<T>(&self, make: impl FnOnce(Sender<ServiceResult<T>>) -> Job) -> ServiceResult<T> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| ServiceError("service stopped".into()))?;
+        reply_rx.recv().map_err(|_| ServiceError("service stopped".into()))?
+    }
+
+    /// Ingest an instance; idempotent (content-addressed).
+    pub fn load(&self, inst: MipInstance) -> ServiceResult<LoadReply> {
+        self.call(|reply| Job::Load { inst, reply })
+    }
+
+    /// Serve one propagation (blocks through the coalescing window).
+    pub fn propagate(&self, req: PropagateRequest) -> ServiceResult<PropagateReply> {
+        self.call(|reply| Job::Propagate { req, received: std::time::Instant::now(), reply })
+    }
+
+    /// Service counters as the `stats` wire payload.
+    pub fn stats(&self) -> ServiceResult<Json> {
+        self.call(|reply| Job::Stats { reply })
+    }
+
+    /// Drop one session id (or everything, with `None`).
+    pub fn evict(&self, session: Option<u64>) -> ServiceResult<EvictReply> {
+        self.call(|reply| Job::Evict { session, reply })
+    }
+
+    /// Stop the scheduler after flushing pending work.
+    pub fn shutdown(&self) -> ServiceResult<()> {
+        self.call(|reply| Job::Shutdown { reply })
+    }
+}
+
+/// A running propagation service: owns the scheduler thread.
+pub struct Service {
+    handle: ServiceHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn the scheduler thread and return the running service.
+    pub fn start(config: ServiceConfig) -> Service {
+        let (tx, rx) = channel();
+        let worker = std::thread::Builder::new()
+            .name("gdp-service".into())
+            .spawn(move || scheduler::Scheduler::new(config).run(rx))
+            .expect("spawning the service scheduler thread");
+        Service { handle: ServiceHandle { tx }, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful stop: flush pending work, join the scheduler.
+    pub fn shutdown(mut self) {
+        let _ = self.handle.shutdown(); // already-stopped is fine
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::propagation::{Engine as _, PreparedProblem as _, Status};
+
+    fn inst(seed: u64) -> MipInstance {
+        gen::generate(&GenConfig { nrows: 25, ncols: 25, seed, ..Default::default() })
+    }
+
+    #[test]
+    fn load_propagate_stats_evict_shutdown_round_trip() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let i = inst(1);
+        let loaded = h.load(i.clone()).unwrap();
+        assert_eq!((loaded.rows, loaded.cols), (25, 25));
+        assert!(!loaded.cached);
+        assert!(h.load(i.clone()).unwrap().cached);
+
+        let direct = crate::propagation::seq::SeqEngine::new().propagate(&i);
+        let r = h.propagate(PropagateRequest::cold(loaded.session)).unwrap();
+        assert_eq!(r.status, direct.status);
+        assert_eq!(r.rounds, direct.rounds);
+        assert_eq!(r.bounds.lb, direct.bounds.lb);
+        assert_eq!(r.bounds.ub, direct.bounds.ub);
+        assert!(!r.cache_hit, "first propagate must pay prepare");
+        let r2 = h.propagate(PropagateRequest::cold(loaded.session)).unwrap();
+        assert!(r2.cache_hit, "second propagate must reuse the session");
+
+        let stats = h.stats().unwrap();
+        assert_eq!(
+            stats.get("requests").unwrap().get("propagate").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(h.evict(Some(loaded.session)).unwrap().dropped, 2);
+        h.shutdown().unwrap();
+        // post-shutdown requests fail cleanly
+        assert!(h.stats().is_err());
+        service.shutdown();
+    }
+
+    #[test]
+    fn unknown_session_and_engine_are_request_errors() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let err = h.propagate(PropagateRequest::cold(0xDEAD)).unwrap_err();
+        assert!(err.0.contains("unknown session"), "{err}");
+        let loaded = h.load(inst(2)).unwrap();
+        let err = h
+            .propagate(
+                PropagateRequest::cold(loaded.session)
+                    .with_spec(EngineSpec::new("warp_drive")),
+            )
+            .unwrap_err();
+        assert!(err.0.contains("warp_drive"), "{err}");
+        // bad start-bounds arity
+        let err = h
+            .propagate(
+                PropagateRequest::cold(loaded.session)
+                    .with_start(Bounds { lb: vec![0.0], ub: vec![1.0] }),
+            )
+            .unwrap_err();
+        assert!(err.0.contains("bounds"), "{err}");
+        // out-of-range warm seed must be a request error, not a panic
+        // that kills the scheduler thread
+        let err = h
+            .propagate(PropagateRequest::cold(loaded.session).warm(vec![usize::MAX]))
+            .unwrap_err();
+        assert!(err.0.contains("out of range"), "{err}");
+        // and the service is still alive afterwards
+        assert!(h.propagate(PropagateRequest::cold(loaded.session)).is_ok());
+    }
+
+    #[test]
+    fn warm_request_matches_direct_warm_call() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let i = inst(3);
+        let loaded = h.load(i.clone()).unwrap();
+        let root = h.propagate(PropagateRequest::cold(loaded.session)).unwrap();
+        if root.status != Status::Converged {
+            return;
+        }
+        let Some((v, branched)) = crate::testkit::branch_first_wide_var(&root.bounds, 1e-3)
+        else {
+            return;
+        };
+        let served = h
+            .propagate(
+                PropagateRequest::cold(loaded.session)
+                    .with_start(branched.clone())
+                    .warm(vec![v]),
+            )
+            .unwrap();
+        let engine = crate::propagation::seq::SeqEngine::new();
+        let mut session = engine.prepare(&i).unwrap();
+        let _ = session.propagate(&Bounds::of(&i));
+        let direct = session.propagate_warm(&branched, &[v]);
+        assert_eq!(served.status, direct.status);
+        assert_eq!(served.rounds, direct.rounds);
+        assert_eq!(served.bounds.lb, direct.bounds.lb);
+        assert_eq!(served.bounds.ub, direct.bounds.ub);
+    }
+}

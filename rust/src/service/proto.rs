@@ -1,0 +1,407 @@
+//! Versioned JSON-line wire protocol for the propagation service.
+//!
+//! One request per line, one response line per request, built on
+//! [`crate::util::json`] (std-only; no serde). Every request carries the
+//! protocol version and an op; an optional `id` is echoed back for client
+//! correlation:
+//!
+//! ```text
+//! {"v":1,"op":"load","format":"mps","text":"NAME test\n..."}
+//! {"v":1,"op":"propagate","session":"00a1b2...","engine":"cpu_omp","threads":8}
+//! {"v":1,"op":"stats"}
+//! {"v":1,"op":"evict","session":"00a1b2..."}
+//! {"v":1,"op":"shutdown"}
+//! ```
+//!
+//! Responses: `{"v":1,"ok":true,"result":{...}}` or
+//! `{"v":1,"ok":false,"error":"..."}`. Propagate results carry the full
+//! bound vectors; finite values round-trip bit-exactly (shortest
+//! representation both ways), infinities as the string sentinels `"inf"`
+//! / `"-inf"` the JSON writer already emits. `status` uses the
+//! [`Status`] debug names (`Converged`, `MaxRounds`, `Infeasible`), the
+//! same spelling the `gdp propagate` CLI prints.
+
+use crate::instance::Bounds;
+use crate::propagation::registry::EngineSpec;
+use crate::propagation::Status;
+use crate::util::json::Json;
+
+use super::{PropagateRequest, ServiceHandle};
+
+/// Protocol version this build speaks. Requests with any other `v` are
+/// rejected so clients fail loudly instead of mis-parsing.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Session ids travel as 16-digit lowercase hex.
+pub fn session_to_hex(session: u64) -> String {
+    format!("{session:016x}")
+}
+
+pub fn session_from_hex(s: &str) -> Result<u64, String> {
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad session id {s:?}: {e}"))
+}
+
+/// Non-finite f64 decode for values the writer emitted as sentinels.
+pub fn json_to_f64(j: &Json) -> Result<f64, String> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "NaN" => Ok(f64::NAN),
+            other => other.parse().map_err(|e| format!("bad number {other:?}: {e}")),
+        },
+        other => Err(format!("expected a number, got {other:?}")),
+    }
+}
+
+fn f64_vec(j: &Json, what: &str) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(json_to_f64)
+        .collect()
+}
+
+fn usize_vec(j: &Json, what: &str) -> Result<Vec<usize>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+                .map(|x| x as usize)
+                .ok_or_else(|| format!("{what} must hold non-negative integers"))
+        })
+        .collect()
+}
+
+/// A parsed request line.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    /// Client correlation id, echoed verbatim in the response.
+    pub id: Option<String>,
+    pub op: WireOp,
+}
+
+#[derive(Debug, Clone)]
+pub enum WireOp {
+    Load { format: String, text: String },
+    Propagate(PropagateRequest),
+    Stats,
+    Evict { session: Option<u64> },
+    Shutdown,
+}
+
+/// Parse one request line (version check included).
+pub fn parse_request(line: &str) -> Result<WireRequest, String> {
+    let j = Json::parse(line.trim()).map_err(|e| format!("bad JSON: {e}"))?;
+    let v = j
+        .get("v")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing protocol version \"v\"")? as u64;
+    if v != PROTO_VERSION {
+        return Err(format!("unsupported protocol version {v} (this build speaks {PROTO_VERSION})"));
+    }
+    let id = j.get("id").and_then(|v| v.as_str()).map(|s| s.to_string());
+    let op = j.get("op").and_then(|v| v.as_str()).ok_or("missing \"op\"")?;
+    let op = match op {
+        "load" => WireOp::Load {
+            format: j
+                .get("format")
+                .and_then(|v| v.as_str())
+                .ok_or("load needs \"format\" (mps|opb)")?
+                .to_string(),
+            text: j
+                .get("text")
+                .and_then(|v| v.as_str())
+                .ok_or("load needs \"text\"")?
+                .to_string(),
+        },
+        "propagate" => {
+            let session = session_from_hex(
+                j.get("session").and_then(|v| v.as_str()).ok_or("propagate needs \"session\"")?,
+            )?;
+            let spec = match j.get("engine").and_then(|v| v.as_str()) {
+                None => {
+                    // engine knobs only make sense against a named engine;
+                    // dropping them silently would serve a result computed
+                    // with different settings than the client asked for
+                    const KNOBS: [&str; 6] =
+                        ["threads", "max_rounds", "no_specialize", "f32", "fastmath", "jnp"];
+                    for knob in KNOBS {
+                        if j.get(knob).is_some() {
+                            return Err(format!("{knob:?} requires \"engine\""));
+                        }
+                    }
+                    None
+                }
+                Some(name) => {
+                    let mut spec = EngineSpec::new(name);
+                    if let Some(t) = j.get("threads").and_then(|v| v.as_f64()) {
+                        spec = spec.threads(t as usize);
+                    }
+                    if let Some(r) = j.get("max_rounds").and_then(|v| v.as_f64()) {
+                        spec = spec.max_rounds(r as u32);
+                    }
+                    if j.get("no_specialize") == Some(&Json::Bool(true)) {
+                        spec = spec.no_specialize();
+                    }
+                    if j.get("fastmath") == Some(&Json::Bool(true)) {
+                        spec = spec.fastmath();
+                    } else if j.get("f32") == Some(&Json::Bool(true)) {
+                        spec = spec.f32();
+                    }
+                    if j.get("jnp") == Some(&Json::Bool(true)) {
+                        spec = spec.jnp();
+                    }
+                    Some(spec)
+                }
+            };
+            let start = match (j.get("lb"), j.get("ub")) {
+                (None, None) => None,
+                (Some(lb), Some(ub)) => {
+                    Some(Bounds { lb: f64_vec(lb, "lb")?, ub: f64_vec(ub, "ub")? })
+                }
+                _ => return Err("lb and ub must be given together".into()),
+            };
+            let seed_vars = match j.get("seed_vars") {
+                None => None,
+                Some(v) => Some(usize_vec(v, "seed_vars")?),
+            };
+            WireOp::Propagate(PropagateRequest { session, spec, start, seed_vars })
+        }
+        "stats" => WireOp::Stats,
+        "evict" => WireOp::Evict {
+            session: j
+                .get("session")
+                .and_then(|v| v.as_str())
+                .map(session_from_hex)
+                .transpose()?,
+        },
+        "shutdown" => WireOp::Shutdown,
+        other => return Err(format!("unknown op {other:?}")),
+    };
+    Ok(WireRequest { id, op })
+}
+
+fn respond(id: &Option<String>, body: Result<Json, String>) -> Json {
+    let mut pairs = vec![("v", Json::Num(PROTO_VERSION as f64))];
+    if let Some(id) = id {
+        pairs.push(("id", Json::Str(id.clone())));
+    }
+    match body {
+        Ok(result) => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("result", result));
+        }
+        Err(e) => {
+            pairs.push(("ok", Json::Bool(false)));
+            pairs.push(("error", Json::Str(e)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+pub fn status_name(status: Status) -> &'static str {
+    match status {
+        Status::Converged => "Converged",
+        Status::MaxRounds => "MaxRounds",
+        Status::Infeasible => "Infeasible",
+    }
+}
+
+fn propagate_result_json(r: &super::PropagateReply) -> Json {
+    Json::obj(vec![
+        ("status", Json::Str(status_name(r.status).to_string())),
+        ("rounds", Json::Num(r.rounds as f64)),
+        ("wall_us", Json::Num(r.wall.as_secs_f64() * 1e6)),
+        ("latency_us", Json::Num(r.latency.as_secs_f64() * 1e6)),
+        ("coalesced", Json::Num(r.coalesced as f64)),
+        ("cache", Json::Str(if r.cache_hit { "hit" } else { "miss" }.into())),
+        ("progress", Json::Num(r.progress)),
+        ("tightened", Json::Num(r.tightened as f64)),
+        ("candidates", Json::Num(r.candidates as f64)),
+        ("lb", Json::Arr(r.bounds.lb.iter().map(|&x| Json::Num(x)).collect())),
+        ("ub", Json::Arr(r.bounds.ub.iter().map(|&x| Json::Num(x)).collect())),
+    ])
+}
+
+/// Handle one request line against a running service: returns the
+/// response line (no trailing newline) and whether the connection loop
+/// should stop serving (a `shutdown` was executed).
+pub fn dispatch(handle: &ServiceHandle, line: &str) -> (String, bool) {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return (respond(&None, Err(e)).to_string(), false),
+    };
+    let mut stop = false;
+    let body: Result<Json, String> = match req.op {
+        WireOp::Load { format, text } => parse_instance(&format, &text).and_then(|inst| {
+            handle
+                .load(inst)
+                .map(|r| {
+                    Json::obj(vec![
+                        ("session", Json::Str(session_to_hex(r.session))),
+                        ("cached", Json::Bool(r.cached)),
+                        ("rows", Json::Num(r.rows as f64)),
+                        ("cols", Json::Num(r.cols as f64)),
+                        ("nnz", Json::Num(r.nnz as f64)),
+                    ])
+                })
+                .map_err(|e| e.0)
+        }),
+        WireOp::Propagate(p) => {
+            handle.propagate(p).map(|r| propagate_result_json(&r)).map_err(|e| e.0)
+        }
+        WireOp::Stats => handle.stats().map_err(|e| e.0),
+        WireOp::Evict { session } => handle
+            .evict(session)
+            .map(|r| Json::obj(vec![("dropped", Json::Num(r.dropped as f64))]))
+            .map_err(|e| e.0),
+        WireOp::Shutdown => {
+            stop = true;
+            handle
+                .shutdown()
+                .map(|()| Json::obj(vec![("stopped", Json::Bool(true))]))
+                .map_err(|e| e.0)
+        }
+    };
+    (respond(&req.id, body).to_string(), stop)
+}
+
+/// Parse an instance from wire text in the named format.
+pub fn parse_instance(format: &str, text: &str) -> Result<crate::instance::MipInstance, String> {
+    match format {
+        "mps" => crate::mps::read_mps_str(text).map_err(|e| format!("mps: {e}")),
+        "opb" => crate::opb::read_opb_str(text).map_err(|e| format!("opb: {e}")),
+        other => Err(format!("unknown format {other:?} (mps|opb)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::service::{Service, ServiceConfig};
+
+    #[test]
+    fn session_hex_round_trip() {
+        for v in [0u64, 1, u64::MAX, 0xDEAD_BEEF_0123_4567] {
+            assert_eq!(session_from_hex(&session_to_hex(v)).unwrap(), v);
+        }
+        assert!(session_from_hex("not-hex").is_err());
+    }
+
+    #[test]
+    fn version_and_op_are_enforced() {
+        assert!(parse_request(r#"{"op":"stats"}"#).unwrap_err().contains("version"));
+        assert!(parse_request(r#"{"v":2,"op":"stats"}"#).unwrap_err().contains("version"));
+        assert!(parse_request(r#"{"v":1}"#).unwrap_err().contains("op"));
+        assert!(parse_request(r#"{"v":1,"op":"dance"}"#).unwrap_err().contains("unknown op"));
+        assert!(parse_request("not json").unwrap_err().contains("bad JSON"));
+    }
+
+    #[test]
+    fn propagate_request_parses_spec_and_bounds() {
+        let line = r#"{"v":1,"id":"r1","op":"propagate","session":"00000000000000ff",
+            "engine":"cpu_omp","threads":4,"max_rounds":9,"no_specialize":true,
+            "lb":[0,"-inf"],"ub":[1,"inf"],"seed_vars":[1]}"#;
+        let req = parse_request(line).unwrap();
+        assert_eq!(req.id.as_deref(), Some("r1"));
+        let WireOp::Propagate(p) = req.op else { panic!("wrong op") };
+        assert_eq!(p.session, 0xff);
+        let spec = p.spec.unwrap();
+        assert_eq!(spec.name, "cpu_omp");
+        assert_eq!(spec.threads, Some(4));
+        assert_eq!(spec.max_rounds, 9);
+        assert!(!spec.specialize);
+        let start = p.start.unwrap();
+        assert_eq!(start.lb, vec![0.0, f64::NEG_INFINITY]);
+        assert_eq!(start.ub, vec![1.0, f64::INFINITY]);
+        assert_eq!(p.seed_vars, Some(vec![1]));
+        // lb without ub is malformed
+        let bad = r#"{"v":1,"op":"propagate","session":"00","lb":[0]}"#;
+        assert!(parse_request(bad).unwrap_err().contains("together"));
+        // engine knobs without an engine would be silently dropped —
+        // reject instead
+        let bad = r#"{"v":1,"op":"propagate","session":"00","threads":4}"#;
+        assert!(parse_request(bad).unwrap_err().contains("engine"));
+        let bad = r#"{"v":1,"op":"propagate","session":"00","max_rounds":3}"#;
+        assert!(parse_request(bad).unwrap_err().contains("engine"));
+    }
+
+    #[test]
+    fn dispatch_full_round_trip_over_the_wire() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let inst =
+            gen::generate(&GenConfig { nrows: 15, ncols: 15, seed: 2, ..Default::default() });
+        let mps = crate::mps::write_mps(&inst);
+        let load_line = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("id", Json::Str("a".into())),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str(mps)),
+        ])
+        .to_string();
+        let (resp, stop) = dispatch(&h, &load_line);
+        assert!(!stop);
+        let resp = Json::parse(&resp).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("id").and_then(|v| v.as_str()), Some("a"));
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+
+        let (resp, _) =
+            dispatch(&h, &format!(r#"{{"v":1,"op":"propagate","session":"{session}"}}"#));
+        let resp = Json::parse(&resp).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let result = resp.get("result").unwrap();
+        // the served bounds must decode to exactly the direct run's bounds
+        use crate::propagation::Engine as _;
+        let direct = crate::propagation::seq::SeqEngine::new().propagate(&inst);
+        let decode = |key: &str| -> Vec<f64> {
+            result
+                .get(key)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| json_to_f64(v).unwrap())
+                .collect()
+        };
+        let (lb, ub) = (decode("lb"), decode("ub"));
+        assert_eq!(lb, direct.bounds.lb);
+        assert_eq!(ub, direct.bounds.ub);
+        assert_eq!(
+            result.get("status").and_then(|v| v.as_str()),
+            Some(status_name(direct.status))
+        );
+
+        let (resp, _) = dispatch(&h, r#"{"v":1,"op":"stats"}"#);
+        assert!(Json::parse(&resp).unwrap().get("result").unwrap().get("sessions").is_some());
+
+        let (resp, stop) = dispatch(&h, r#"{"v":1,"op":"shutdown"}"#);
+        assert!(stop);
+        assert_eq!(Json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn request_level_errors_are_responses_not_panics() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let (resp, _) =
+            dispatch(&h, r#"{"v":1,"op":"propagate","session":"0000000000000bad"}"#);
+        let resp = Json::parse(&resp).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").and_then(|v| v.as_str()).unwrap().contains("unknown session"));
+        let (resp, _) = dispatch(&h, r#"{"v":1,"op":"load","format":"mps","text":"garbage"}"#);
+        assert_eq!(Json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(false)));
+    }
+}

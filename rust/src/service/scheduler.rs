@@ -1,0 +1,494 @@
+//! Cross-request micro-batching scheduler: the service's single engine
+//! thread.
+//!
+//! Concurrent `propagate` requests against the same prepared session are
+//! queued per [`SessionKey`] and flushed together when either trigger
+//! fires:
+//!
+//! * **batch-size** — `ServiceConfig::batch_max` requests are pending, or
+//! * **deadline** — the oldest pending request has waited
+//!   `ServiceConfig::batch_window`.
+//!
+//! A flush on a batch-capable engine (`EngineEntry::batch` is a native
+//! mode) dispatches the whole queue as ONE `propagate_batch` /
+//! `propagate_batch_warm` call — live traffic coalesced into the paper's
+//! section 5 "many subproblems per dispatch" shape. Batch-incapable
+//! engines (`BatchMode::Loop`) fall back to solo calls, which are
+//! semantically identical. Cold (fully marked) and warm (seeded) requests
+//! never mix inside one batched dispatch.
+//!
+//! Everything here runs on one thread: the session store, the registry
+//! (whose XLA runtime is an `Rc`), and all engine execution. Requests
+//! arrive over an mpsc channel and answer through per-request channels,
+//! so no state is shared and no locks exist.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::instance::Bounds;
+use crate::metrics::progress;
+use crate::propagation::registry::{BatchMode, EngineSpec, Registry};
+use crate::propagation::{PreparedProblem as _, PropResult};
+
+use super::metrics::ServiceMetrics;
+use super::session::{SessionKey, SessionStore};
+use super::{
+    EvictReply, Job, LoadReply, PropagateReply, ServiceConfig, ServiceError, ServiceResult,
+};
+
+/// Wake at least this often when no deadline is pending.
+const IDLE_TICK: Duration = Duration::from_millis(250);
+
+/// One queued propagate request.
+struct Pending {
+    start: Bounds,
+    seed_vars: Option<Vec<usize>>,
+    cache_hit: bool,
+    received: Instant,
+    reply: Sender<ServiceResult<PropagateReply>>,
+}
+
+/// Requests pending for one session, plus their flush deadline (set by
+/// the FIRST request to queue — a deadline never moves backwards).
+struct BatchQueue {
+    spec: EngineSpec,
+    pending: Vec<Pending>,
+    deadline: Instant,
+}
+
+pub(crate) struct Scheduler {
+    config: ServiceConfig,
+    registry: Registry,
+    store: SessionStore,
+    queues: HashMap<SessionKey, BatchQueue>,
+    metrics: ServiceMetrics,
+}
+
+impl Scheduler {
+    pub(crate) fn new(config: ServiceConfig) -> Scheduler {
+        let registry = match &config.artifact_dir {
+            Some(dir) => Registry::with_defaults().with_artifact_dir(dir.clone()),
+            None => Registry::with_defaults(),
+        };
+        let store = SessionStore::new(config.max_sessions, config.max_bytes);
+        Scheduler {
+            config,
+            registry,
+            store,
+            queues: HashMap::new(),
+            metrics: ServiceMetrics::default(),
+        }
+    }
+
+    /// The scheduler loop: block until the next flush deadline (or a
+    /// request), handle, flush what's due. Exits on `shutdown` or when
+    /// every handle is gone — pending work is flushed either way, so no
+    /// client is left hanging.
+    pub(crate) fn run(mut self, rx: Receiver<Job>) {
+        loop {
+            let timeout = self
+                .queues
+                .values()
+                .map(|q| q.deadline)
+                .min()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(IDLE_TICK);
+            match rx.recv_timeout(timeout) {
+                Ok(Job::Shutdown { reply }) => {
+                    self.flush_all();
+                    let _ = reply.send(Ok(()));
+                    return;
+                }
+                Ok(job) => self.handle(job),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.flush_all();
+                    return;
+                }
+            }
+            self.flush_due(Instant::now());
+        }
+    }
+
+    fn handle(&mut self, job: Job) {
+        match job {
+            Job::Load { inst, reply } => {
+                self.metrics.loads += 1;
+                let _ = reply.send(self.load(inst));
+            }
+            Job::Propagate { req, received, reply } => {
+                if let Err(e) = self.enqueue(req, received, &reply) {
+                    let _ = reply.send(Err(e));
+                }
+            }
+            Job::Stats { reply } => {
+                self.metrics.stats_calls += 1;
+                let json = self.metrics.to_json(
+                    &self.store.counters,
+                    self.store.num_sessions(),
+                    self.store.num_instances(),
+                    self.store.approx_bytes(),
+                );
+                let _ = reply.send(Ok(json));
+            }
+            Job::Evict { session, reply } => {
+                self.metrics.evicts += 1;
+                // answer queued work before dropping its session
+                self.flush_all();
+                let dropped = match session {
+                    Some(fp) => self.store.evict_fingerprint(fp),
+                    None => self.store.clear(),
+                };
+                let _ = reply.send(Ok(EvictReply { dropped }));
+            }
+            Job::Shutdown { .. } => unreachable!("handled by the run loop"),
+        }
+    }
+
+    fn load(&mut self, inst: crate::instance::MipInstance) -> ServiceResult<LoadReply> {
+        inst.validate().map_err(|e| ServiceError(format!("invalid instance: {e}")))?;
+        let (rows, cols, nnz) = (inst.nrows(), inst.ncols(), inst.nnz());
+        let (session, cached) = self.store.load(inst);
+        Ok(LoadReply { session, cached, rows, cols, nnz })
+    }
+
+    /// Queue one propagate request; flush immediately on the batch-size
+    /// trigger. `prepare` (on a session miss) happens here, so the cache
+    /// outcome is decided at enqueue time and the flush only runs the hot
+    /// path.
+    fn enqueue(
+        &mut self,
+        req: super::PropagateRequest,
+        received: Instant,
+        reply: &Sender<ServiceResult<PropagateReply>>,
+    ) -> ServiceResult<()> {
+        let spec = req
+            .spec
+            .unwrap_or_else(|| EngineSpec::new(&self.config.default_engine));
+        let entry = self
+            .registry
+            .entries()
+            .iter()
+            .find(|e| e.name == spec.name)
+            .ok_or_else(|| {
+                ServiceError(format!(
+                    "unknown engine {} (registered: {})",
+                    spec.name,
+                    self.registry.engine_list()
+                ))
+            })?;
+        if !entry.served {
+            return Err(ServiceError(format!("engine {} is not servable", spec.name)));
+        }
+        let key = SessionKey::new(req.session, &spec);
+        let cache_hit = self
+            .store
+            .session(&key, &spec, &self.registry)
+            .map(|(_, hit)| hit)
+            .map_err(|e| ServiceError(format!("{e:#}")))?;
+        let ncols = self
+            .store
+            .instance(req.session)
+            .map(|i| i.ncols())
+            .expect("instance resident: session() just succeeded");
+        let start = match req.start {
+            Some(b) => {
+                if b.lb.len() != ncols || b.ub.len() != ncols {
+                    return Err(ServiceError(format!(
+                        "start bounds arity {}x{} does not match instance columns {ncols}",
+                        b.lb.len(),
+                        b.ub.len()
+                    )));
+                }
+                b
+            }
+            None => Bounds::of(self.store.instance(req.session).unwrap()),
+        };
+        // a malformed index would panic the one engine thread and kill
+        // the whole service — reject it as a request error instead
+        if let Some(vars) = &req.seed_vars {
+            if let Some(&v) = vars.iter().find(|&&v| v >= ncols) {
+                return Err(ServiceError(format!(
+                    "seed variable {v} out of range (instance has {ncols} columns)"
+                )));
+            }
+        }
+        let window = self.config.batch_window;
+        // a session with queued work must survive until its flush: pin it
+        // so budget pressure from other keys cannot evict it (or its
+        // instance) between enqueue and dispatch
+        self.store.pin(&key);
+        let queue = self.queues.entry(key.clone()).or_insert_with(|| BatchQueue {
+            spec,
+            pending: Vec::new(),
+            deadline: received + window,
+        });
+        queue.pending.push(Pending {
+            start,
+            seed_vars: req.seed_vars,
+            cache_hit,
+            received,
+            reply: reply.clone(),
+        });
+        if queue.pending.len() >= self.config.batch_max {
+            self.flush(&key);
+        }
+        Ok(())
+    }
+
+    fn flush_due(&mut self, now: Instant) {
+        let due: Vec<SessionKey> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.deadline <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in due {
+            self.flush(&key);
+        }
+    }
+
+    fn flush_all(&mut self) {
+        let keys: Vec<SessionKey> = self.queues.keys().cloned().collect();
+        for key in keys {
+            self.flush(&key);
+        }
+    }
+
+    /// Dispatch one session's queue: one batched call on batch-capable
+    /// engines (cold and warm requests in separate dispatches), solo
+    /// calls otherwise.
+    fn flush(&mut self, key: &SessionKey) {
+        let Some(queue) = self.queues.remove(key) else { return };
+        self.store.unpin(key);
+        let n = queue.pending.len();
+        let batch_mode = self
+            .registry
+            .entries()
+            .iter()
+            .find(|e| e.name == queue.spec.name)
+            .map(|e| e.batch)
+            .unwrap_or(BatchMode::Loop);
+        // resolve the session again, uncounted (the per-request hit/miss
+        // was decided at enqueue). The pin above guarantees it is still
+        // resident on this path; the lookup stays fallible for the
+        // explicit-evict path, which flushes before dropping state
+        let session = match self.store.session_uncounted(key, &queue.spec, &self.registry) {
+            Ok(s) => s,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in queue.pending {
+                    let _ = p.reply.send(Err(ServiceError(msg.clone())));
+                }
+                return;
+            }
+        };
+
+        let use_batch = n > 1 && batch_mode.is_native();
+        // results positionally aligned with queue.pending
+        let mut results: Vec<Option<PropResult>> = (0..n).map(|_| None).collect();
+        if use_batch {
+            let cold: Vec<usize> =
+                (0..n).filter(|&i| queue.pending[i].seed_vars.is_none()).collect();
+            let warm: Vec<usize> =
+                (0..n).filter(|&i| queue.pending[i].seed_vars.is_some()).collect();
+            if !cold.is_empty() {
+                let starts: Vec<Bounds> =
+                    cold.iter().map(|&i| queue.pending[i].start.clone()).collect();
+                for (&i, r) in cold.iter().zip(session.propagate_batch(&starts)) {
+                    results[i] = Some(r);
+                }
+            }
+            if !warm.is_empty() {
+                let starts: Vec<Bounds> =
+                    warm.iter().map(|&i| queue.pending[i].start.clone()).collect();
+                let seeds: Vec<Vec<usize>> = warm
+                    .iter()
+                    .map(|&i| queue.pending[i].seed_vars.clone().unwrap())
+                    .collect();
+                for (&i, r) in warm.iter().zip(session.propagate_batch_warm(&starts, &seeds)) {
+                    results[i] = Some(r);
+                }
+            }
+        } else {
+            for (i, p) in queue.pending.iter().enumerate() {
+                results[i] = Some(match &p.seed_vars {
+                    Some(vars) => session.propagate_warm(&p.start, vars),
+                    None => session.propagate(&p.start),
+                });
+            }
+        }
+
+        self.metrics.record_flush(n, use_batch);
+        let now = Instant::now();
+        let coalesced = if use_batch { n } else { 1 };
+        for (p, r) in queue.pending.into_iter().zip(results) {
+            let r = r.expect("every slot filled");
+            let reply = make_reply(&p, r, coalesced, now);
+            self.metrics.record_propagate(
+                reply.latency,
+                reply.wall,
+                reply.rounds,
+                reply.candidates,
+                reply.tightened,
+                reply.progress,
+            );
+            let _ = p.reply.send(Ok(reply));
+        }
+    }
+}
+
+fn make_reply(p: &Pending, r: PropResult, coalesced: usize, now: Instant) -> PropagateReply {
+    let tightened = p.start.diff_count(&r.bounds);
+    let candidates = r.trace.rounds.iter().map(|t| t.atomic_updates).sum();
+    let reduction = progress::reduction(&p.start, &r.bounds, progress::DEFAULT_CAP);
+    PropagateReply {
+        rounds: r.rounds,
+        status: r.status,
+        wall: r.wall,
+        latency: now.saturating_duration_since(p.received),
+        coalesced,
+        cache_hit: p.cache_hit,
+        progress: reduction,
+        tightened,
+        candidates,
+        bounds: r.bounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::propagation::{Engine as _, PreparedProblem as _, Status};
+    use crate::service::{PropagateRequest, Service, ServiceConfig};
+
+    fn inst(seed: u64) -> crate::instance::MipInstance {
+        gen::generate(&GenConfig { nrows: 30, ncols: 30, seed, ..Default::default() })
+    }
+
+    /// A wide-open coalescing window plus `batch_max = B` makes the flush
+    /// deterministic: the scheduler waits until all B in-flight requests
+    /// are queued, then dispatches them as one batch.
+    #[test]
+    fn concurrent_requests_coalesce_into_one_batched_dispatch() {
+        const B: usize = 4;
+        let service = Service::start(ServiceConfig {
+            batch_max: B,
+            batch_window: Duration::from_secs(5),
+            ..ServiceConfig::default()
+        });
+        let h = service.handle();
+        // pick a seed whose instance reaches a fixed point (so branched
+        // node domains exist); the generator makes divergence rare
+        let i = (7..32)
+            .map(inst)
+            .find(|i| {
+                crate::propagation::gpu_model::GpuModelEngine::default().propagate(i).status
+                    == Status::Converged
+            })
+            .expect("no converging instance in 25 seeds");
+        let loaded = h.load(i.clone()).unwrap();
+        let spec = EngineSpec::new("gpu_model");
+        // root fixed point -> B branched node domains
+        let root = h
+            .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+            .unwrap();
+        assert_eq!(root.status, Status::Converged);
+        let nodes = gen::branched_nodes(&i, &root.bounds, B, 11);
+
+        let replies: Vec<PropagateReply> = std::thread::scope(|s| {
+            let handles: Vec<_> = nodes
+                .iter()
+                .map(|node| {
+                    let h = h.clone();
+                    let spec = spec.clone();
+                    let start = node.bounds.clone();
+                    let session = loaded.session;
+                    s.spawn(move || {
+                        h.propagate(
+                            PropagateRequest::cold(session)
+                                .with_spec(spec)
+                                .with_start(start),
+                        )
+                        .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|t| t.join().unwrap()).collect()
+        });
+
+        for r in &replies {
+            assert_eq!(r.coalesced, B, "request did not ride the coalesced dispatch");
+            assert!(r.cache_hit);
+        }
+        // bit-identical to a direct propagate_batch on a fresh session
+        let engine =
+            crate::propagation::registry::Registry::with_defaults().create(&spec).unwrap();
+        let mut direct = engine.prepare(&i).unwrap();
+        let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+        let want = direct.propagate_batch(&starts);
+        for (served, want) in replies.iter().zip(&want) {
+            assert_eq!(served.status, want.status);
+            assert_eq!(served.rounds, want.rounds);
+            assert_eq!(served.bounds.lb, want.bounds.lb);
+            assert_eq!(served.bounds.ub, want.bounds.ub);
+        }
+        let stats = h.stats().unwrap();
+        let sched = stats.get("scheduler").unwrap();
+        assert_eq!(sched.get("coalesced_max").unwrap().as_f64(), Some(B as f64));
+        assert!(sched.get("batched_flushes").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_without_filling_the_batch() {
+        let service = Service::start(ServiceConfig {
+            batch_max: 64,
+            batch_window: Duration::from_millis(5),
+            ..ServiceConfig::default()
+        });
+        let h = service.handle();
+        let loaded = h.load(inst(9)).unwrap();
+        // a single request can never hit the size trigger; the deadline
+        // must release it
+        let r = h.propagate(PropagateRequest::cold(loaded.session)).unwrap();
+        assert_eq!(r.coalesced, 1);
+        assert!(r.latency >= Duration::from_millis(4), "flushed before the window");
+    }
+
+    #[test]
+    fn loop_engines_fall_back_to_solo_dispatches() {
+        const B: usize = 3;
+        let service = Service::start(ServiceConfig {
+            batch_max: B,
+            batch_window: Duration::from_secs(5),
+            ..ServiceConfig::default()
+        });
+        let h = service.handle();
+        let i = inst(13);
+        let loaded = h.load(i).unwrap();
+        let spec = EngineSpec::new("cpu_seq"); // BatchMode::Loop
+        let replies: Vec<PropagateReply> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..B)
+                .map(|_| {
+                    let h = h.clone();
+                    let spec = spec.clone();
+                    let session = loaded.session;
+                    s.spawn(move || {
+                        h.propagate(PropagateRequest::cold(session).with_spec(spec)).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|t| t.join().unwrap()).collect()
+        });
+        for r in &replies {
+            assert_eq!(r.coalesced, 1, "Loop engine must be served solo");
+        }
+        let stats = h.stats().unwrap();
+        assert_eq!(
+            stats.get("scheduler").unwrap().get("batched_flushes").unwrap().as_f64(),
+            Some(0.0)
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Transport layer of the propagation service: a threaded
+//! `std::net::TcpListener` accept loop (one thread per connection) plus a
+//! stdio mode for pipes and tests. Both speak the JSON-line protocol in
+//! [`super::proto`]; all propagation work still happens on the one
+//! scheduler thread — connection threads only parse, forward through the
+//! [`ServiceHandle`], and write the response line back.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::proto;
+use super::ServiceHandle;
+
+/// Serve line-oriented requests from `input`, writing one response line
+/// per request to `output`. Returns when `input` ends or a `shutdown`
+/// request was executed. This is both the `--stdio` mode and the
+/// per-connection loop of the TCP server.
+pub fn serve_lines<R: BufRead, W: Write>(
+    handle: &ServiceHandle,
+    input: R,
+    mut output: W,
+) -> Result<bool> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, stop) = proto::dispatch(handle, &line);
+        output.write_all(response.as_bytes())?;
+        output.write_all(b"\n")?;
+        output.flush()?;
+        if stop {
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+/// The `--stdio` mode: requests on stdin, responses on stdout.
+pub fn serve_stdio(handle: &ServiceHandle) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    serve_lines(handle, stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+/// TCP accept loop: one thread per connection, all sharing the scheduler
+/// through cloned handles. Returns after a client executed `shutdown`
+/// (the handling thread wakes the blocked `accept` with a loopback
+/// connection).
+pub fn serve_tcp(handle: &ServiceHandle, listener: TcpListener) -> Result<()> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let local = listener.local_addr()?;
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("gdp-serve: accept error: {e}");
+                continue;
+            }
+        };
+        let handle = handle.clone();
+        let stop = stop.clone();
+        // connection threads are detached on purpose: joining them here
+        // would let one idle client (open connection, nothing sent) block
+        // shutdown forever. The client that executed `shutdown` has its
+        // response before the flag is set; stragglers get "service
+        // stopped" errors until the process exits.
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(&handle, stream, &stop, local) {
+                eprintln!("gdp-serve: connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_connection(
+    handle: &ServiceHandle,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    local: std::net::SocketAddr,
+) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let shutdown = serve_lines(handle, reader, &stream)?;
+    if shutdown {
+        stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop so it observes the flag
+        let _ = TcpStream::connect(local);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::service::{Service, ServiceConfig};
+    use crate::util::json::Json;
+    use std::io::Cursor;
+
+    fn load_line(inst: &crate::instance::MipInstance) -> String {
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str(crate::mps::write_mps(inst))),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn line_loop_serves_a_session_and_stops_on_shutdown() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let inst =
+            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 4, ..Default::default() });
+        // two-pass script: load first to learn the session id
+        let mut out = Vec::new();
+        let stopped =
+            serve_lines(&h, Cursor::new(load_line(&inst).into_bytes()), &mut out).unwrap();
+        assert!(!stopped);
+        let resp = Json::parse(String::from_utf8(out).unwrap().trim()).unwrap();
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+
+        let propagate = format!(r#"{{"v":1,"op":"propagate","session":"{session}"}}"#);
+        let script = format!(
+            "{propagate}\n\n{}\n{}\nignored-after-shutdown\n",
+            r#"{"v":1,"op":"stats"}"#,
+            r#"{"v":1,"op":"shutdown"}"#,
+        );
+        let mut out = Vec::new();
+        let stopped = serve_lines(&h, Cursor::new(script.into_bytes()), &mut out).unwrap();
+        assert!(stopped, "shutdown must end the loop");
+        let lines: Vec<String> =
+            String::from_utf8(out).unwrap().lines().map(|s| s.to_string()).collect();
+        assert_eq!(lines.len(), 3, "blank line skipped, post-shutdown line unserved");
+        for line in &lines {
+            assert_eq!(Json::parse(line).unwrap().get("ok"), Some(&Json::Bool(true)), "{line}");
+        }
+    }
+
+    #[test]
+    fn tcp_round_trip_with_concurrent_clients() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve_tcp(&h, listener).unwrap());
+
+        let inst =
+            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 5, ..Default::default() });
+        let request = |line: &str| -> Json {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(line.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap()
+        };
+
+        let resp = request(&load_line(&inst));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+
+        // a few parallel TCP clients propagating the same session
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let session = session.clone();
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let line = format!(r#"{{"v":1,"op":"propagate","session":"{session}"}}"#);
+                    stream.write_all(line.as_bytes()).unwrap();
+                    stream.write_all(b"\n").unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    let resp = Json::parse(resp.trim()).unwrap();
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                });
+            }
+        });
+
+        let resp = request(r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        server.join().unwrap();
+        service.shutdown();
+    }
+}

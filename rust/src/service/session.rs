@@ -1,0 +1,546 @@
+//! Session store: the serving layer's cache of prepared propagation
+//! sessions.
+//!
+//! A solver amortizes one-time [`crate::propagation::Engine::prepare`]
+//! over millions of `propagate` calls on the same matrix (paper timing
+//! protocol, section 4.3); a *service* amortizes it across requests and
+//! clients. The store maps a content fingerprint of a [`MipInstance`]
+//! plus an engine-spec key to a live [`OwnedSession`], so a repeat client
+//! skips `prepare` entirely. Entries are evicted least-recently-used under
+//! a configurable session-count and approximate-memory budget, and the
+//! hit/miss/eviction counters feed the `stats` wire op.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::instance::{Bounds, MipInstance};
+use crate::propagation::registry::{EngineSpec, Registry};
+use crate::propagation::{Engine, PreparedProblem, PropResult};
+
+/// Content fingerprint of the propagation-relevant parts of an instance:
+/// matrix structure and coefficients, sides, bounds and integrality.
+/// Names and the objective are excluded — two instances that propagate
+/// identically share sessions. FNV-1a over the raw bit patterns.
+pub fn instance_fingerprint(inst: &MipInstance) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(&(inst.nrows() as u64).to_le_bytes());
+    eat(&(inst.ncols() as u64).to_le_bytes());
+    for &p in &inst.matrix.row_ptr {
+        eat(&(p as u64).to_le_bytes());
+    }
+    for &c in &inst.matrix.col_idx {
+        eat(&(c as u64).to_le_bytes());
+    }
+    for &v in &inst.matrix.vals {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    for vs in [&inst.lhs, &inst.rhs, &inst.lb, &inst.ub] {
+        for &v in vs {
+            eat(&v.to_bits().to_le_bytes());
+        }
+    }
+    for t in &inst.var_types {
+        eat(&[(*t == crate::instance::VarType::Integer) as u8]);
+    }
+    h
+}
+
+/// Approximate resident bytes of one instance (CSR arrays + sides +
+/// bounds + names). Used only for the store's memory budget; the point is
+/// proportionality, not accounting precision.
+pub fn approx_instance_bytes(inst: &MipInstance) -> usize {
+    inst.nnz() * 16                       // data + indices
+        + (inst.nrows() + 1) * 8          // indptr
+        + inst.nrows() * (16 + 24)        // lhs/rhs + row name overhead
+        + inst.ncols() * (16 + 8 + 8 + 24) // lb/ub + types + obj + col names
+}
+
+/// A prepared session that owns its instance. [`Engine::prepare`] borrows
+/// the instance for the session's lifetime; a cache entry must outlive any
+/// single request, so the pair is stored together: the instance on the
+/// heap and the session created over that allocation.
+///
+/// The instance is held as a raw pointer (`Box::into_raw`), not a `Box`:
+/// a `Box` field is `noalias`, so moving the `OwnedSession` (HashMap
+/// inserts, rehashes) would invalidate every reference the session
+/// derived from it under Rust's aliasing rules. Raw pointers carry no
+/// such tag — the allocation's address and the session's borrows stay
+/// valid across moves, and [`Drop`] drops the session before reclaiming
+/// the allocation.
+pub struct OwnedSession {
+    session: std::mem::ManuallyDrop<Box<dyn PreparedProblem + 'static>>,
+    inst: *mut MipInstance,
+}
+
+impl OwnedSession {
+    pub fn prepare(engine: &dyn Engine, inst: MipInstance) -> Result<OwnedSession> {
+        let inst = Box::into_raw(Box::new(inst));
+        // SAFETY: `inst` is a live heap allocation that only Drop (below)
+        // reclaims, after the session. Only shared references are ever
+        // derived from it — no `&mut MipInstance` exists anywhere.
+        let inst_ref: &'static MipInstance = unsafe { &*inst };
+        let session = match engine.prepare(inst_ref) {
+            Ok(s) => s,
+            Err(e) => {
+                // SAFETY: no session borrows the allocation; reclaim it.
+                unsafe { drop(Box::from_raw(inst)) };
+                return Err(e);
+            }
+        };
+        Ok(OwnedSession { session: std::mem::ManuallyDrop::new(session), inst })
+    }
+
+    pub fn instance(&self) -> &MipInstance {
+        // SAFETY: the allocation is live until Drop; shared access only.
+        unsafe { &*self.inst }
+    }
+}
+
+impl Drop for OwnedSession {
+    fn drop(&mut self) {
+        // SAFETY: drop order matters and is made explicit here — first
+        // the session (which borrows the instance), then the instance
+        // allocation itself.
+        unsafe {
+            std::mem::ManuallyDrop::drop(&mut self.session);
+            drop(Box::from_raw(self.inst));
+        }
+    }
+}
+
+// The hot path re-exposed: an OwnedSession IS a prepared session.
+impl PreparedProblem for OwnedSession {
+    fn engine_name(&self) -> &'static str {
+        self.session.engine_name()
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        self.session.propagate(start)
+    }
+
+    fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
+        self.session.propagate_warm(start, seed_vars)
+    }
+
+    fn try_propagate(&mut self, start: &Bounds) -> Result<PropResult> {
+        self.session.try_propagate(start)
+    }
+
+    fn propagate_batch(&mut self, starts: &[Bounds]) -> Vec<PropResult> {
+        self.session.propagate_batch(starts)
+    }
+
+    fn propagate_batch_warm(
+        &mut self,
+        starts: &[Bounds],
+        seed_vars: &[Vec<usize>],
+    ) -> Vec<PropResult> {
+        self.session.propagate_batch_warm(starts, seed_vars)
+    }
+}
+
+/// Cache key: which matrix (content fingerprint) prepared under which
+/// engine configuration ([`EngineSpec::cache_key`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    pub fingerprint: u64,
+    pub engine: String,
+}
+
+impl SessionKey {
+    pub fn new(fingerprint: u64, spec: &EngineSpec) -> SessionKey {
+        SessionKey { fingerprint, engine: spec.cache_key() }
+    }
+}
+
+/// Store counters surfaced through the `stats` wire op.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// `load` requests that found the instance already resident.
+    pub instance_hits: u64,
+    pub instance_loads: u64,
+    /// Propagate requests that found a live prepared session.
+    pub hits: u64,
+    /// Propagate requests that had to pay `prepare`.
+    pub misses: u64,
+    /// Sessions or instances dropped under budget pressure.
+    pub evictions: u64,
+}
+
+struct SessionEntry {
+    session: OwnedSession,
+    last_used: u64,
+    bytes: usize,
+}
+
+struct InstanceEntry {
+    inst: MipInstance,
+    last_used: u64,
+    bytes: usize,
+}
+
+/// LRU cache of loaded instances and prepared sessions under a
+/// count + approximate-bytes budget.
+pub struct SessionStore {
+    max_sessions: usize,
+    max_bytes: usize,
+    tick: u64,
+    instances: HashMap<u64, InstanceEntry>,
+    sessions: HashMap<SessionKey, SessionEntry>,
+    /// Sessions with queued-but-unflushed requests: never victims of
+    /// budget eviction (their instance is protected too, via the live
+    /// set), so an accepted request cannot lose its session between
+    /// enqueue and flush. Explicit `evict`/`clear` ignore pins — the
+    /// scheduler flushes before evicting.
+    pinned: std::collections::HashSet<SessionKey>,
+    pub counters: StoreCounters,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize, max_bytes: usize) -> SessionStore {
+        SessionStore {
+            max_sessions: max_sessions.max(1),
+            max_bytes: max_bytes.max(1),
+            tick: 0,
+            instances: HashMap::new(),
+            sessions: HashMap::new(),
+            pinned: std::collections::HashSet::new(),
+            counters: StoreCounters::default(),
+        }
+    }
+
+    /// Protect `key` from budget eviction until [`SessionStore::unpin`].
+    pub fn pin(&mut self, key: &SessionKey) {
+        self.pinned.insert(key.clone());
+    }
+
+    pub fn unpin(&mut self, key: &SessionKey) {
+        self.pinned.remove(key);
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Ingest an instance; returns `(fingerprint, already_resident)`.
+    pub fn load(&mut self, inst: MipInstance) -> (u64, bool) {
+        let fp = instance_fingerprint(&inst);
+        let tick = self.next_tick();
+        self.counters.instance_loads += 1;
+        if let Some(e) = self.instances.get_mut(&fp) {
+            e.last_used = tick;
+            self.counters.instance_hits += 1;
+            return (fp, true);
+        }
+        let bytes = approx_instance_bytes(&inst);
+        self.instances.insert(fp, InstanceEntry { inst, last_used: tick, bytes });
+        self.enforce_budget();
+        (fp, false)
+    }
+
+    pub fn instance(&self, fingerprint: u64) -> Option<&MipInstance> {
+        self.instances.get(&fingerprint).map(|e| &e.inst)
+    }
+
+    /// The cached session for `key`, or prepare one from the loaded
+    /// instance. Returns `(session, cache_hit)`; errs when the instance
+    /// was never loaded (or has been evicted) or `prepare` fails.
+    /// Counts one hit or miss — call once per client request.
+    pub fn session(
+        &mut self,
+        key: &SessionKey,
+        spec: &EngineSpec,
+        registry: &Registry,
+    ) -> Result<(&mut OwnedSession, bool)> {
+        self.session_inner(key, spec, registry, true)
+    }
+
+    /// Like [`SessionStore::session`] but without touching the hit/miss
+    /// counters: the scheduler re-resolves a session at flush time (it
+    /// may have been evicted since enqueue), and that internal lookup
+    /// must not distort the per-request cache statistics.
+    pub fn session_uncounted(
+        &mut self,
+        key: &SessionKey,
+        spec: &EngineSpec,
+        registry: &Registry,
+    ) -> Result<&mut OwnedSession> {
+        self.session_inner(key, spec, registry, false).map(|(s, _)| s)
+    }
+
+    fn session_inner(
+        &mut self,
+        key: &SessionKey,
+        spec: &EngineSpec,
+        registry: &Registry,
+        count: bool,
+    ) -> Result<(&mut OwnedSession, bool)> {
+        let tick = self.next_tick();
+        if self.sessions.contains_key(key) {
+            if count {
+                self.counters.hits += 1;
+            }
+            let e = self.sessions.get_mut(key).unwrap();
+            e.last_used = tick;
+            return Ok((&mut e.session, true));
+        }
+        let inst = self
+            .instances
+            .get_mut(&key.fingerprint)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown session {:016x} (load the instance first, or it was evicted)",
+                    key.fingerprint
+                )
+            })
+            .map(|e| {
+                e.last_used = tick;
+                e.inst.clone()
+            })?;
+        let engine = registry.create(spec)?;
+        let bytes = 2 * approx_instance_bytes(&inst); // instance clone + scratch
+        let session = OwnedSession::prepare(engine.as_ref(), inst)?;
+        if count {
+            self.counters.misses += 1;
+        }
+        self.sessions.insert(key.clone(), SessionEntry { session, last_used: tick, bytes });
+        self.enforce_budget_keeping(Some(key));
+        Ok((&mut self.sessions.get_mut(key).unwrap().session, false))
+    }
+
+    fn total_bytes(&self) -> usize {
+        self.instances.values().map(|e| e.bytes).sum::<usize>()
+            + self.sessions.values().map(|e| e.bytes).sum::<usize>()
+    }
+
+    fn enforce_budget(&mut self) {
+        self.enforce_budget_keeping(None);
+    }
+
+    /// Evict LRU sessions (never `keep`, the one just inserted) while over
+    /// the count or bytes budget; if sessions alone cannot satisfy the
+    /// bytes budget, evict LRU instances that no live session refers to.
+    fn enforce_budget_keeping(&mut self, keep: Option<&SessionKey>) {
+        loop {
+            let over_count = self.sessions.len() > self.max_sessions;
+            let over_bytes = self.total_bytes() > self.max_bytes;
+            if !over_count && !over_bytes {
+                return;
+            }
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(k, _)| Some(*k) != keep && !self.pinned.contains(*k))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                self.sessions.remove(&k);
+                self.counters.evictions += 1;
+                continue;
+            }
+            if over_bytes {
+                let live: std::collections::HashSet<u64> =
+                    self.sessions.keys().map(|k| k.fingerprint).collect();
+                let victim = self
+                    .instances
+                    .iter()
+                    .filter(|(fp, _)| !live.contains(*fp))
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(fp, _)| *fp);
+                if let Some(fp) = victim {
+                    self.instances.remove(&fp);
+                    self.counters.evictions += 1;
+                    continue;
+                }
+            }
+            return; // only the kept session / live instances remain
+        }
+    }
+
+    /// Drop every session (and the instance) for one fingerprint; returns
+    /// how many entries were dropped. Explicit eviction is not counted in
+    /// the pressure `evictions` counter.
+    pub fn evict_fingerprint(&mut self, fingerprint: u64) -> usize {
+        let before = self.sessions.len() + self.instances.len();
+        self.sessions.retain(|k, _| k.fingerprint != fingerprint);
+        self.pinned.retain(|k| k.fingerprint != fingerprint);
+        self.instances.remove(&fingerprint);
+        before - self.sessions.len() - self.instances.len()
+    }
+
+    /// Drop everything; returns how many entries were dropped.
+    pub fn clear(&mut self) -> usize {
+        let n = self.sessions.len() + self.instances.len();
+        self.sessions.clear();
+        self.pinned.clear();
+        self.instances.clear();
+        n
+    }
+
+    pub fn num_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.total_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::propagation::Status;
+
+    fn inst(seed: u64) -> MipInstance {
+        gen::generate(&GenConfig { nrows: 20, ncols: 20, seed, ..Default::default() })
+    }
+
+    #[test]
+    fn fingerprint_ignores_names_but_not_content() {
+        let a = inst(1);
+        let mut renamed = a.clone();
+        renamed.name = "other".into();
+        renamed.row_names.iter_mut().for_each(|n| n.push('x'));
+        assert_eq!(instance_fingerprint(&a), instance_fingerprint(&renamed));
+        let mut tightened = a.clone();
+        tightened.ub[0] -= 0.5;
+        assert_ne!(instance_fingerprint(&a), instance_fingerprint(&tightened));
+        assert_ne!(instance_fingerprint(&a), instance_fingerprint(&inst(2)));
+    }
+
+    #[test]
+    fn owned_session_propagates_like_a_borrowing_one() {
+        let i = inst(3);
+        let registry = Registry::with_defaults();
+        let spec = EngineSpec::new("cpu_seq");
+        let engine = registry.create(&spec).unwrap();
+        let direct = {
+            let mut s = engine.prepare(&i).unwrap();
+            s.propagate(&Bounds::of(&i))
+        };
+        let mut owned = OwnedSession::prepare(engine.as_ref(), i.clone()).unwrap();
+        let got = owned.propagate(&Bounds::of(&i));
+        assert_eq!(got.status, direct.status);
+        assert_eq!(got.rounds, direct.rounds);
+        assert_eq!(got.bounds.lb, direct.bounds.lb);
+        assert_eq!(got.bounds.ub, direct.bounds.ub);
+        // the entry survives moves (heap instance address is stable)
+        let mut moved = owned;
+        let again = moved.propagate(&Bounds::of(&i));
+        assert_eq!(again.bounds.ub, direct.bounds.ub);
+    }
+
+    #[test]
+    fn hit_miss_counters_and_reuse() {
+        let registry = Registry::with_defaults();
+        let mut store = SessionStore::new(8, usize::MAX);
+        let spec = EngineSpec::new("cpu_seq");
+        let (fp, resident) = store.load(inst(5));
+        assert!(!resident);
+        let (fp2, resident) = store.load(inst(5));
+        assert_eq!((fp, true), (fp2, resident));
+        let key = SessionKey::new(fp, &spec);
+        let (_, hit) = store.session(&key, &spec, &registry).unwrap();
+        assert!(!hit, "first session request must prepare");
+        let start = Bounds::of(store.instance(fp).unwrap());
+        let (s, hit) = store.session(&key, &spec, &registry).unwrap();
+        assert!(hit, "second request must reuse the prepared session");
+        let r = s.propagate(&start);
+        assert_ne!(r.status, Status::MaxRounds);
+        assert_eq!(store.counters.hits, 1);
+        assert_eq!(store.counters.misses, 1);
+        // a different engine spec is a different session
+        let spec2 = EngineSpec::new("gpu_model");
+        let key2 = SessionKey::new(fp, &spec2);
+        let (_, hit) = store.session(&key2, &spec2, &registry).unwrap();
+        assert!(!hit);
+        assert_eq!(store.num_sessions(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_under_count_budget() {
+        let registry = Registry::with_defaults();
+        let mut store = SessionStore::new(2, usize::MAX);
+        let spec = EngineSpec::new("cpu_seq");
+        let fps: Vec<u64> = (0..3).map(|s| store.load(inst(s)).0).collect();
+        for &fp in &fps {
+            store.session(&SessionKey::new(fp, &spec), &spec, &registry).unwrap();
+        }
+        assert_eq!(store.num_sessions(), 2, "count budget not enforced");
+        assert_eq!(store.counters.evictions, 1);
+        // the least-recently-used (first) session was the victim
+        let (_, hit) = store.session(&SessionKey::new(fps[0], &spec), &spec, &registry).unwrap();
+        assert!(!hit, "evicted session must be re-prepared");
+        let (_, hit) = store.session(&SessionKey::new(fps[2], &spec), &spec, &registry).unwrap();
+        assert!(hit, "most recent session should have survived");
+    }
+
+    #[test]
+    fn bytes_budget_evicts_sessions_then_dead_instances() {
+        let registry = Registry::with_defaults();
+        let one = approx_instance_bytes(&inst(0));
+        // room for roughly one instance + one session, not more
+        let mut store = SessionStore::new(64, 4 * one);
+        let spec = EngineSpec::new("cpu_seq");
+        for s in 0..4 {
+            let (fp, _) = store.load(inst(s));
+            store.session(&SessionKey::new(fp, &spec), &spec, &registry).unwrap();
+        }
+        assert!(store.counters.evictions > 0, "bytes budget never triggered");
+        assert!(store.approx_bytes() <= 4 * one + 3 * one, "unbounded growth");
+    }
+
+    #[test]
+    fn pinned_sessions_survive_budget_pressure() {
+        let registry = Registry::with_defaults();
+        let mut store = SessionStore::new(2, usize::MAX);
+        let spec = EngineSpec::new("cpu_seq");
+        let fps: Vec<u64> = (0..3).map(|s| store.load(inst(s)).0).collect();
+        let pinned_key = SessionKey::new(fps[0], &spec);
+        store.session(&pinned_key, &spec, &registry).unwrap();
+        store.pin(&pinned_key);
+        // two more sessions under a budget of 2: the pinned one (the LRU)
+        // must be passed over in favour of the next-oldest victim
+        for &fp in &fps[1..] {
+            store.session(&SessionKey::new(fp, &spec), &spec, &registry).unwrap();
+        }
+        let (_, hit) = store.session(&pinned_key, &spec, &registry).unwrap();
+        assert!(hit, "pinned session was evicted under budget pressure");
+        store.unpin(&pinned_key);
+        // unpinned and LRU again (touch the other survivor first), it is
+        // evictable
+        store.session(&SessionKey::new(fps[2], &spec), &spec, &registry).unwrap();
+        let (fp3, _) = store.load(inst(7));
+        store.session(&SessionKey::new(fp3, &spec), &spec, &registry).unwrap();
+        let (_, hit) = store.session(&pinned_key, &spec, &registry).unwrap();
+        assert!(!hit, "unpinned LRU session should have been the victim");
+    }
+
+    #[test]
+    fn explicit_eviction_and_unknown_session_error() {
+        let registry = Registry::with_defaults();
+        let mut store = SessionStore::new(8, usize::MAX);
+        let spec = EngineSpec::new("cpu_seq");
+        let (fp, _) = store.load(inst(9));
+        let key = SessionKey::new(fp, &spec);
+        store.session(&key, &spec, &registry).unwrap();
+        assert_eq!(store.evict_fingerprint(fp), 2); // instance + session
+        let err = store.session(&key, &spec, &registry).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown session"), "{err:#}");
+    }
+}

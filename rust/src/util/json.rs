@@ -1,6 +1,13 @@
 //! Minimal JSON: a writer with proper escaping and a small recursive-descent
-//! parser. Used for experiment result files and tooling interop (the offline
-//! registry has no serde).
+//! parser. Used for experiment result files, tooling interop, and the
+//! propagation service's wire protocol (the offline registry has no serde).
+//!
+//! The string path is hardened for wire use: the writer escapes every
+//! control character, the parser decodes `\uXXXX` escapes including
+//! UTF-16 surrogate pairs (astral-plane characters as two escapes, the
+//! form every mainstream JSON encoder emits), and arbitrary UTF-8 —
+//! control characters and non-ASCII included — round-trips through
+//! write→parse bit-exactly (property-tested below).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -62,8 +69,11 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    // shortest round-trippable-enough representation
-                    if *x == x.trunc() && x.abs() < 1e15 {
+                    // shortest round-trippable representation; -0.0 must
+                    // skip the integer fast path (it would print as "0"
+                    // and lose its sign bit on the wire)
+                    let neg_zero = *x == 0.0 && x.is_sign_negative();
+                    if *x == x.trunc() && x.abs() < 1e15 && !neg_zero {
                         let _ = write!(out, "{}", *x as i64);
                     } else {
                         let _ = write!(out, "{x}");
@@ -197,17 +207,30 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .b
-                                .get(self.i + 1..self.i + 5)
-                                .ok_or("bad \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
-                                16,
-                            )
-                            .map_err(|e| e.to_string())?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            let code = self.hex4(self.i + 1)?;
+                            if (0xD800..0xDC00).contains(&code)
+                                && self.b.get(self.i + 5..self.i + 7) == Some(&b"\\u"[..])
+                            {
+                                // UTF-16 surrogate pair: a high surrogate
+                                // immediately followed by an escaped low
+                                // surrogate encodes one astral-plane char
+                                let low = self.hex4(self.i + 7)?;
+                                if (0xDC00..0xE000).contains(&low) {
+                                    let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                                    out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    self.i += 10;
+                                } else {
+                                    // lone high surrogate; the second
+                                    // escape is an independent character
+                                    out.push('\u{fffd}');
+                                    self.i += 4;
+                                }
+                            } else {
+                                // BMP scalar, or a lone surrogate half
+                                // (not a Unicode scalar -> replacement)
+                                out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
                         }
                         other => return Err(format!("bad escape {other:?}")),
                     }
@@ -222,6 +245,13 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte `at`.
+    fn hex4(&self, at: usize) -> Result<u32, String> {
+        let hex = self.b.get(at..at + 4).ok_or("bad \\u escape")?;
+        let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+        u32::from_str_radix(hex, 16).map_err(|e| e.to_string())
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -331,8 +361,125 @@ mod tests {
     }
 
     #[test]
+    fn negative_zero_round_trips_with_its_sign_bit() {
+        let text = Json::Num(-0.0).to_string();
+        assert_eq!(text, "-0");
+        let back = Json::parse(&text).unwrap();
+        match back {
+            Json::Num(x) => assert!(x == 0.0 && x.is_sign_negative(), "lost the sign: {x}"),
+            other => panic!("expected a number, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn unicode_escape() {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        // the form every mainstream JSON encoder emits for astral chars
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+        assert_eq!(Json::parse(r#""𝕏""#).unwrap().as_str(), Some("𝕏"));
+        // surrounded by other content
+        let v = Json::parse(r#""a😀b""#).unwrap();
+        assert_eq!(v.as_str(), Some("a😀b"));
+        // lone halves are not scalars: replacement, never a panic
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(
+            Json::parse(r#""\ud83dA""#).unwrap().as_str(),
+            Some("\u{fffd}A"),
+            "high surrogate followed by a BMP escape"
+        );
+        // truncated escapes are errors, not panics
+        assert!(Json::parse(r#""\ud83d\u00""#).is_err());
+        assert!(Json::parse(r#""\u12""#).is_err());
+    }
+
+    #[test]
+    fn control_characters_round_trip() {
+        let s: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = Json::Str(s.clone());
+        let text = v.to_string();
+        // every control char must travel escaped (RFC 8259 §7)
+        assert!(!text.chars().any(|c| (c as u32) < 0x20), "raw control char on the wire");
+        assert_eq!(Json::parse(&text).unwrap().as_str(), Some(s.as_str()));
+    }
+
+    /// Draw one char favouring the hostile regions: controls, quotes and
+    /// backslashes, non-ASCII BMP, astral plane.
+    fn arbitrary_char(rng: &mut crate::util::rng::Rng) -> char {
+        match rng.below(6) {
+            0 => char::from_u32(rng.below(0x20) as u32).unwrap(),
+            1 => ['"', '\\', '/', '\u{7f}'][rng.below(4)],
+            2 => char::from_u32(rng.range(0x20, 0x7f) as u32).unwrap(),
+            3 => ['é', 'ß', 'Ω', '→', '中', '\u{2028}'][rng.below(6)],
+            4 => ['😀', '🦀', '𝕏', '👾'][rng.below(4)],
+            _ => char::from_u32(rng.range(0xA0, 0xD800) as u32).unwrap_or('\u{fffd}'),
+        }
+    }
+
+    #[test]
+    fn string_round_trip_property() {
+        use crate::testkit::{prop, Config};
+        prop("json strings round-trip bit-exactly", Config::cases(256), |rng| {
+            let len = rng.below(48);
+            let s: String = (0..len).map(|_| arbitrary_char(rng)).collect();
+            let v = Json::Str(s.clone());
+            let back = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(back.as_str(), Some(s.as_str()));
+        });
+    }
+
+    /// A random Json tree with finite numbers and hostile strings.
+    fn arbitrary_json(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // mix integers (writer's i64 fast path) and fractions
+                if rng.chance(0.5) {
+                    Json::Num((rng.next_u64() as i64 % 1_000_000_000) as f64)
+                } else {
+                    Json::Num(rng.range_f64(-1e9, 1e9))
+                }
+            }
+            3 => {
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| arbitrary_char(rng)).collect())
+            }
+            4 => {
+                let len = rng.below(4);
+                Json::Arr((0..len).map(|_| arbitrary_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(4);
+                Json::Obj(
+                    (0..len)
+                        .map(|_| {
+                            let klen = rng.below(8);
+                            let k: String = (0..klen).map(|_| arbitrary_char(rng)).collect();
+                            (k, arbitrary_json(rng, depth - 1))
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    #[test]
+    fn document_round_trip_property() {
+        use crate::testkit::{prop, Config};
+        prop("json documents round-trip", Config::cases(128), |rng| {
+            let v = arbitrary_json(rng, 3);
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back, v, "document {text}");
+            // serialization is a fixed point
+            assert_eq!(back.to_string(), text);
+        });
     }
 }

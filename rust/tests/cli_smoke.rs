@@ -1,0 +1,155 @@
+//! CLI end-to-end smokes driving the real `gdp` binary
+//! (`CARGO_BIN_EXE_gdp`): the `inspect` row-class histogram on BOTH
+//! input formats (one code path for MPS and OPB), `engines --json`
+//! carrying the `served` capability, and the serving stack through
+//! `gdp serve --stdio` — load, propagate, stats, shutdown over the wire
+//! with the propagate response checked against a direct in-process run.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+use gdp::gen::{self, Family, GenConfig};
+use gdp::propagation::Engine as _;
+use gdp::util::json::Json;
+
+fn gdp_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gdp"))
+}
+
+fn write_mps(dir: &std::path::Path, name: &str, inst: &gdp::instance::MipInstance) -> String {
+    let path = dir.join(name);
+    gdp::mps::write_mps_file(inst, &path).expect("write mps fixture");
+    path.to_string_lossy().into_owned()
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gdp_cli_smoke_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn inspect_prints_row_class_histogram_for_mps_and_opb() {
+    let dir = tmpdir("inspect");
+    let inst = gen::generate(&GenConfig {
+        family: Family::PbMixed,
+        nrows: 40,
+        ncols: 40,
+        int_frac: 1.0,
+        inf_bound_frac: 0.0,
+        seed: 3,
+        ..Default::default()
+    });
+    let mps_path = write_mps(&dir, "inspect.mps", &inst);
+    let opb_path = dir.join("inspect.opb");
+    gdp::opb::write_opb_file(&inst, &opb_path).expect("write opb fixture");
+
+    // one code path for both formats: the histogram must show up for MPS
+    // inputs too, not only --opb
+    for args in [
+        vec!["inspect", "--mps", mps_path.as_str()],
+        vec!["inspect", "--opb", opb_path.to_str().unwrap()],
+    ] {
+        let out = gdp_bin().args(&args).output().expect("run gdp inspect");
+        assert!(out.status.success(), "{args:?}: {}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("row classes:"), "{args:?} lost the histogram:\n{stdout}");
+        assert!(stdout.contains("specialized rows:"), "{args:?}:\n{stdout}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engines_json_exposes_served_capability() {
+    let out = gdp_bin().args(["engines", "--json"]).output().expect("run gdp engines");
+    assert!(out.status.success());
+    let json = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).expect("engines json");
+    let engines = json.get("engines").and_then(|e| e.as_arr()).expect("engines array");
+    assert!(!engines.is_empty());
+    for e in engines {
+        assert!(
+            matches!(e.get("served"), Some(Json::Bool(_))),
+            "entry without served capability: {e:?}"
+        );
+    }
+}
+
+#[test]
+fn serve_stdio_load_propagate_stats_shutdown_round_trip() {
+    let inst =
+        gen::generate(&GenConfig { nrows: 30, ncols: 30, seed: 11, ..Default::default() });
+    // the server sees the instance after an MPS round-trip (RANGES rows
+    // can perturb a side's last bit); fingerprint and oracle both use
+    // exactly what the server ingests
+    let wire_text = gdp::mps::write_mps(&inst);
+    let inst = gdp::mps::read_mps_str(&wire_text).expect("round-trip");
+    let direct = gdp::propagation::seq::SeqEngine::new().propagate(&inst);
+
+    let mut child = gdp_bin()
+        .args(["serve", "--stdio", "--batch-window-us", "0"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn gdp serve --stdio");
+
+    let mut stdin = child.stdin.take().unwrap();
+    let load = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("op", Json::Str("load".into())),
+        ("format", Json::Str("mps".into())),
+        ("text", Json::Str(wire_text)),
+    ]);
+    writeln!(stdin, "{}", load.to_string()).unwrap();
+    // the session id is the content fingerprint: compute it locally
+    let session = gdp::service::proto::session_to_hex(
+        gdp::service::session::instance_fingerprint(&inst),
+    );
+    writeln!(stdin, r#"{{"v":1,"op":"propagate","session":"{session}"}}"#).unwrap();
+    writeln!(stdin, r#"{{"v":1,"op":"stats"}}"#).unwrap();
+    writeln!(stdin, r#"{{"v":1,"op":"shutdown"}}"#).unwrap();
+    drop(stdin);
+
+    let out = child.wait_with_output().expect("serve exited");
+    assert!(out.status.success(), "gdp serve failed");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<Json> =
+        stdout.lines().map(|l| Json::parse(l).expect("response line")).collect();
+    assert_eq!(lines.len(), 4, "one response per request:\n{stdout}");
+    for l in &lines {
+        assert_eq!(l.get("ok"), Some(&Json::Bool(true)), "{l:?}");
+    }
+    // load echoed the locally computed fingerprint
+    assert_eq!(
+        lines[0].get("result").unwrap().get("session").unwrap().as_str(),
+        Some(session.as_str())
+    );
+    // the served propagate equals the direct in-process run
+    let result = lines[1].get("result").unwrap();
+    assert_eq!(
+        result.get("status").unwrap().as_str(),
+        Some(gdp::service::proto::status_name(direct.status))
+    );
+    assert_eq!(result.get("rounds").unwrap().as_f64(), Some(direct.rounds as f64));
+    let lb: Vec<f64> = result
+        .get("lb")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| gdp::service::proto::json_to_f64(v).unwrap())
+        .collect();
+    assert_eq!(lb, direct.bounds.lb, "served lb diverged from the direct run");
+    // stats saw the one propagate
+    assert_eq!(
+        lines[2]
+            .get("result")
+            .unwrap()
+            .get("requests")
+            .unwrap()
+            .get("propagate")
+            .unwrap()
+            .as_f64(),
+        Some(1.0)
+    );
+}

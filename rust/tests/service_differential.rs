@@ -1,0 +1,289 @@
+//! Serving-layer differential: anything the propagation service returns
+//! must be exactly what the direct session API computes.
+//!
+//! Registry-driven like `registry_differential.rs`: the engine list comes
+//! from `Registry::entries()` filtered on the `served` capability, so a
+//! newly registered engine is enrolled in the served-vs-direct matrix
+//! automatically (XLA engines skip, with a note, when no PJRT runtime /
+//! artifacts are present). Engines run single-threaded here so the
+//! schedule is deterministic and the comparison can be bit-identical —
+//! cold, warm and coalesced-batch alike; a multi-threaded cpu_omp leg
+//! checks the section 4.3 tolerance instead.
+//!
+//! Also under test: the `SessionStore` under concurrency (parallel
+//! clients on mixed instances) and LRU eviction under budget pressure.
+
+use std::time::Duration;
+
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::{Bounds, MipInstance};
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::{Engine as _, PreparedProblem as _, PropResult, Status};
+use gdp::service::{PropagateReply, PropagateRequest, Service, ServiceConfig, ServiceHandle};
+
+fn small_suite() -> Vec<MipInstance> {
+    let mut suite = Vec::new();
+    for family in [Family::Mixed, Family::Cascade, Family::PbMixed] {
+        for seed in 0..2 {
+            suite.push(gen::generate(&GenConfig {
+                family,
+                nrows: 35,
+                ncols: 30,
+                seed,
+                ..Default::default()
+            }));
+        }
+    }
+    suite
+}
+
+/// Served engines this checkout can actually run (the automatic
+/// enrollment): native always; XLA only with a PJRT runtime.
+fn servable_specs(registry: &Registry) -> Vec<EngineSpec> {
+    let xla_ok = registry.runtime().is_ok();
+    registry
+        .entries()
+        .iter()
+        .filter(|e| {
+            if !e.served {
+                return false;
+            }
+            if e.needs_artifacts && !xla_ok {
+                eprintln!("service_differential: skipping {} (no PJRT runtime)", e.name);
+                return false;
+            }
+            true
+        })
+        .map(|e| EngineSpec::new(e.name).threads(1))
+        .collect()
+}
+
+fn assert_identical(what: &str, served: &PropagateReply, direct: &PropResult) {
+    assert_eq!(served.status, direct.status, "{what}: status");
+    assert_eq!(served.rounds, direct.rounds, "{what}: rounds");
+    assert_eq!(served.bounds.lb, direct.bounds.lb, "{what}: lb bits");
+    assert_eq!(served.bounds.ub, direct.bounds.ub, "{what}: ub bits");
+}
+
+/// The acceptance criterion: served cold, warm and coalesced-batch
+/// propagation bit-identical to the corresponding direct session-API
+/// calls for every servable engine.
+#[test]
+fn served_results_bit_identical_to_direct_session_calls() {
+    let registry = Registry::with_defaults();
+    let specs = servable_specs(&registry);
+    assert!(specs.len() >= 4, "registry lost the native served engines");
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::ZERO,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+
+    for inst in &small_suite() {
+        let loaded = handle.load(inst.clone()).expect("load");
+        for spec in &specs {
+            let engine = registry.create(spec).unwrap();
+            let mut direct = match engine.prepare(inst) {
+                Ok(s) => s,
+                Err(e) => panic!("{}: prepare failed: {e:#}", spec.name),
+            };
+
+            // cold
+            let served = handle
+                .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+                .expect("served cold");
+            let want = direct.propagate(&Bounds::of(inst));
+            assert_identical(&format!("{} cold on {}", spec.name, inst.name), &served, &want);
+            if want.status != Status::Converged {
+                continue;
+            }
+
+            // warm: branch one variable, re-propagate with the seed named
+            if let Some((v, branched)) = gdp::testkit::branch_first_wide_var(&want.bounds, 1e-3)
+            {
+                let served = handle
+                    .propagate(
+                        PropagateRequest::cold(loaded.session)
+                            .with_spec(spec.clone())
+                            .with_start(branched.clone())
+                            .warm(vec![v]),
+                    )
+                    .expect("served warm");
+                let want = direct.propagate_warm(&branched, &[v]);
+                assert_identical(
+                    &format!("{} warm on {}", spec.name, inst.name),
+                    &served,
+                    &want,
+                );
+            }
+
+            // coalesced batch: B concurrent clients, size-triggered flush
+            let nodes = gen::branched_nodes(inst, &want.bounds, 4, 99);
+            let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+            let coalescing = Service::start(ServiceConfig {
+                batch_max: starts.len(),
+                batch_window: Duration::from_secs(10),
+                ..ServiceConfig::default()
+            });
+            let chandle = coalescing.handle();
+            let closed = chandle.load(inst.clone()).expect("load");
+            let served: Vec<PropagateReply> = std::thread::scope(|s| {
+                let threads: Vec<_> = starts
+                    .iter()
+                    .map(|start| {
+                        let chandle = chandle.clone();
+                        let spec = spec.clone();
+                        let start = start.clone();
+                        let session = closed.session;
+                        s.spawn(move || {
+                            chandle
+                                .propagate(
+                                    PropagateRequest::cold(session)
+                                        .with_spec(spec)
+                                        .with_start(start),
+                                )
+                                .expect("served batch slot")
+                        })
+                    })
+                    .collect();
+                threads.into_iter().map(|t| t.join().unwrap()).collect()
+            });
+            let want = direct.propagate_batch(&starts);
+            for (i, (s, w)) in served.iter().zip(&want).enumerate() {
+                assert_identical(
+                    &format!("{} batch[{i}] on {}", spec.name, inst.name),
+                    s,
+                    w,
+                );
+            }
+            coalescing.shutdown();
+        }
+    }
+    service.shutdown();
+}
+
+/// Real concurrency is not bit-comparable, but converged limit points
+/// must agree within the section 4.3 tolerance through the service too.
+#[test]
+fn served_multithreaded_omp_reaches_direct_limit_point() {
+    let registry = Registry::with_defaults();
+    let service = Service::start(ServiceConfig::default());
+    let handle = service.handle();
+    let spec = EngineSpec::new("cpu_omp").threads(4);
+    for inst in &small_suite() {
+        let loaded = handle.load(inst.clone()).expect("load");
+        let served = handle
+            .propagate(PropagateRequest::cold(loaded.session).with_spec(spec.clone()))
+            .expect("served omp");
+        let direct = registry.create(&spec).unwrap().propagate(inst);
+        if served.status == Status::Converged && direct.status == Status::Converged {
+            assert!(
+                direct.bounds.equal_within_tol(&served.bounds),
+                "served cpu_omp diverged from direct on {}",
+                inst.name
+            );
+        }
+        if direct.status == Status::Infeasible {
+            assert_ne!(
+                served.status,
+                Status::Converged,
+                "served cpu_omp missed infeasibility on {}",
+                inst.name
+            );
+        }
+    }
+    service.shutdown();
+}
+
+/// SessionStore under concurrency: parallel clients hammering mixed
+/// instances through one service must each get the exact per-instance
+/// answer, and the counters must balance.
+#[test]
+fn parallel_clients_on_mixed_instances_get_consistent_answers() {
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 5;
+    let service = Service::start(ServiceConfig::default());
+    let handle = service.handle();
+    let suite: Vec<MipInstance> = small_suite().into_iter().take(3).collect();
+
+    // per-instance oracle (cpu_seq is deterministic)
+    let oracles: Vec<PropResult> = suite
+        .iter()
+        .map(|i| gdp::propagation::seq::SeqEngine::new().propagate(i))
+        .collect();
+    let sessions: Vec<u64> =
+        suite.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let handle: ServiceHandle = handle.clone();
+            let sessions = sessions.clone();
+            let oracles = &oracles;
+            s.spawn(move || {
+                for r in 0..REQUESTS {
+                    let k = (c + r) % sessions.len();
+                    let reply = handle
+                        .propagate(PropagateRequest::cold(sessions[k]))
+                        .expect("served propagate under load");
+                    assert_eq!(reply.status, oracles[k].status);
+                    assert_eq!(reply.bounds.lb, oracles[k].bounds.lb);
+                    assert_eq!(reply.bounds.ub, oracles[k].bounds.ub);
+                }
+            });
+        }
+    });
+
+    let stats = handle.stats().expect("stats");
+    let requests = stats.get("requests").unwrap();
+    assert_eq!(
+        requests.get("propagate").unwrap().as_f64(),
+        Some((CLIENTS * REQUESTS) as f64),
+        "every request must be accounted for"
+    );
+    let sessions_stats = stats.get("sessions").unwrap();
+    let hits = sessions_stats.get("hits").unwrap().as_f64().unwrap();
+    let misses = sessions_stats.get("misses").unwrap().as_f64().unwrap();
+    assert_eq!(hits + misses, (CLIENTS * REQUESTS) as f64, "hit/miss must partition requests");
+    assert_eq!(misses, suite.len() as f64, "one prepare per distinct (instance, engine)");
+    service.shutdown();
+}
+
+/// LRU eviction under budget pressure: with room for two sessions, a
+/// third instance evicts the least recently used one; the evicted session
+/// still serves correctly afterwards (transparent re-prepare).
+#[test]
+fn lru_eviction_under_budget_pressure_stays_correct() {
+    let service = Service::start(ServiceConfig {
+        max_sessions: 2,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let suite: Vec<MipInstance> = small_suite().into_iter().take(3).collect();
+    let sessions: Vec<u64> =
+        suite.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+
+    for (i, &session) in sessions.iter().enumerate() {
+        let r = handle.propagate(PropagateRequest::cold(session)).expect("propagate");
+        assert!(!r.cache_hit, "instance {i} should prepare fresh");
+    }
+    let stats = handle.stats().expect("stats");
+    let evictions =
+        stats.get("sessions").unwrap().get("evictions").unwrap().as_f64().unwrap();
+    assert!(evictions >= 1.0, "budget pressure produced no eviction");
+    assert!(
+        stats.get("sessions").unwrap().get("live").unwrap().as_f64().unwrap() <= 2.0,
+        "session budget exceeded"
+    );
+
+    // the evicted (oldest) session is re-prepared transparently and its
+    // answer still matches the oracle
+    let oracle = gdp::propagation::seq::SeqEngine::new().propagate(&suite[0]);
+    let r = handle.propagate(PropagateRequest::cold(sessions[0])).expect("re-propagate");
+    assert!(!r.cache_hit, "evicted session cannot be a cache hit");
+    assert_eq!(r.bounds.lb, oracle.bounds.lb);
+    assert_eq!(r.bounds.ub, oracle.bounds.ub);
+    // the most recently used session survived
+    let r = handle.propagate(PropagateRequest::cold(sessions[2])).expect("survivor");
+    assert!(r.cache_hit, "most recently used session should have survived");
+    service.shutdown();
+}
