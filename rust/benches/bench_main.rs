@@ -263,16 +263,19 @@ fn pb_bench(smoke: bool) {
     }
 }
 
-/// The serving bench: one instance, three request shapes against a live
+/// The serving bench: one instance, four request shapes against a live
 /// in-process service — cold (store evicted first: the request pays
-/// `prepare`), session-cache hit, and coalesced concurrent traffic vs the
-/// same traffic served solo. Writes BENCH_service.json; `smoke` shrinks
-/// the instance for CI.
+/// `prepare`), session-cache hit, coalesced concurrent traffic vs the
+/// same traffic served solo, and the multi-client shard-scaling leg
+/// (the same parallel mixed-instance traffic against a 1-shard vs a
+/// 4-shard worker pool). Writes BENCH_service.json; `smoke` shrinks the
+/// shapes for CI. All legs pin their shard count explicitly so the
+/// GDP_TEST_SHARDS matrix hook cannot skew timings.
 fn service_bench(smoke: bool) {
     use gdp::service::{PropagateRequest, Service, ServiceConfig};
     use std::time::Duration;
 
-    println!("\n== service: cold vs session-cache hit vs coalesced traffic ==");
+    println!("\n== service: cold vs hit vs coalesced vs sharded traffic ==");
     let (rows, cols) = if smoke { (300, 300) } else { (2000, 2000) };
     let inst = generate(&GenConfig {
         family: Family::Mixed,
@@ -288,6 +291,7 @@ fn service_bench(smoke: bool) {
     // ---- cold vs hit (cpu_seq; immediate flushes)
     let service = Service::start(ServiceConfig {
         batch_window: Duration::ZERO,
+        shards: 1,
         ..ServiceConfig::default()
     });
     let handle = service.handle();
@@ -342,6 +346,7 @@ fn service_bench(smoke: bool) {
             let service = Service::start(ServiceConfig {
                 batch_max,
                 batch_window: window,
+                shards: 1,
                 ..ServiceConfig::default()
             });
             let handle = service.handle();
@@ -385,6 +390,78 @@ fn service_bench(smoke: bool) {
             ("requests", Json::Num(n as f64)),
             ("solo_s", Json::Num(solo)),
             ("coalesced_s", Json::Num(coalesced)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- shard scaling: parallel mixed-instance clients, 1 vs 4 shards.
+    // A 1-shard pool serializes every session behind one engine thread;
+    // a 4-shard pool runs each session's propagation on its home shard
+    // concurrently. Instance seeds are picked so the sessions' home
+    // shards cover the whole 4-shard pool — the leg then measures
+    // parallelism, not routing luck. cpu_seq keeps every request
+    // single-threaded, so the speedup is pure cross-session scaling.
+    {
+        use gdp::experiments::service_throughput::{
+            covering_mixed_instances, drive_rotating_clients,
+        };
+        const POOL: usize = 4;
+        const CLIENTS: usize = 8;
+        let (srows, scols) = if smoke { (240, 240) } else { (900, 900) };
+        let reqs_per_client = if smoke { 12 } else { 24 };
+        let spec = EngineSpec::new("cpu_seq");
+        // same instance selection and client rotation as `gdp exp
+        // service`'s shard-scaling leg (shared helpers) — the bench
+        // record and the experiment check measure the same workload
+        let insts = covering_mixed_instances(POOL, 2, srows, scols, &spec);
+        let total = CLIENTS * reqs_per_client;
+        let run_pool = |shards: usize| -> f64 {
+            let service = Service::start(ServiceConfig {
+                batch_window: Duration::ZERO,
+                shards,
+                ..ServiceConfig::default()
+            });
+            let handle = service.handle();
+            let sessions: Vec<u64> = insts
+                .iter()
+                .map(|i| handle.load(i.clone()).expect("load").session)
+                .collect();
+            // pay every prepare outside the measured region
+            for &s in &sessions {
+                handle
+                    .propagate(PropagateRequest::cold(s).with_spec(spec.clone()))
+                    .expect("session warmup");
+            }
+            let (_, median, _) = measure(0, iters, || {
+                drive_rotating_clients(&handle, &sessions, &spec, CLIENTS, reqs_per_client);
+            });
+            service.shutdown();
+            median
+        };
+        let mut walls = Vec::new();
+        for shards in [1usize, POOL] {
+            let wall = run_pool(shards);
+            println!(
+                "bench service/shard_scaling/{total}req/shards{shards}  wall {:>10}  req_per_s {:.1}",
+                secs(wall),
+                total as f64 / wall.max(1e-12)
+            );
+            records.push(Json::obj(vec![
+                ("mode", Json::Str("shard_scaling".to_string())),
+                ("engine", Json::Str("cpu_seq".to_string())),
+                ("shards", Json::Num(shards as f64)),
+                ("clients", Json::Num(CLIENTS as f64)),
+                ("requests", Json::Num(total as f64)),
+                ("wall_s", Json::Num(wall)),
+            ]));
+            walls.push(wall);
+        }
+        let speedup = walls[0] / walls[1].max(1e-12);
+        println!("bench service/shard_scaling  4-shard speedup over 1 shard: {speedup:.2}x");
+        records.push(Json::obj(vec![
+            ("mode", Json::Str("shard_scaling_summary".to_string())),
+            ("shards_lo", Json::Num(1.0)),
+            ("shards_hi", Json::Num(POOL as f64)),
             ("speedup", Json::Num(speedup)),
         ]));
     }

@@ -1,0 +1,385 @@
+//! Benchmark-regression gate (`gdp bench-check`): compare freshly
+//! produced `BENCH_*.json` files against the committed baselines under
+//! `bench/baselines/`, so a perf regression fails the PR instead of only
+//! riding along as an uploaded artifact.
+//!
+//! The gate is deliberately **generous**: CI runners are shared and
+//! noisy, and the smoke-mode shapes are small, so per-record timing
+//! jitter of 2x is normal. A bench group therefore fails only when the
+//! *geometric mean* of its per-metric slowdowns exceeds the tolerance
+//! (default [`DEFAULT_TOLERANCE`], 2.5x) — one noisy record cannot trip
+//! the gate, a systematic slowdown across the group does. Speed-ups
+//! (ratios < 1) pull the mean down symmetrically.
+//!
+//! Mechanics: every `BENCH_*.json` document carries a `results` array of
+//! flat records. Fields ending in `_s` are timing metrics; fields whose
+//! name contains `speedup` are derived ratios and ignored; everything
+//! else (engine, family, mode, batch, shards, ...) identifies the
+//! record. Records are matched across the two files by that identity, so
+//! reordering is harmless and a renamed record shows up as `skipped`
+//! rather than silently comparing apples to oranges.
+//!
+//! `--injected-slowdown F` multiplies every fresh timing by `F` before
+//! comparing — the self-test hook CI uses to prove the gate actually
+//! trips (a gate that cannot fail is decoration).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Fail a group only beyond this geometric-mean slowdown.
+pub const DEFAULT_TOLERANCE: f64 = 2.5;
+
+/// Damping floor (seconds) added to both sides of every ratio so
+/// microsecond-scale smoke timings cannot produce wild ratios out of
+/// pure scheduler noise.
+const FLOOR_S: f64 = 1e-6;
+
+/// Comparison result for one bench group (one `BENCH_*.json` file).
+#[derive(Debug, Clone)]
+pub struct GroupReport {
+    /// File name, e.g. `BENCH_pb.json`.
+    pub file: String,
+    /// The fresh run never produced the file at all.
+    pub missing_fresh: bool,
+    /// Timing metrics compared (baseline ∩ fresh).
+    pub compared: usize,
+    /// Baseline records or metrics with no fresh counterpart.
+    pub skipped: usize,
+    /// Geometric mean of fresh/baseline timing ratios (1.0 = unchanged,
+    /// 2.0 = twice as slow).
+    pub geomean: f64,
+    /// Largest single ratio, for the report.
+    pub worst: f64,
+    /// `record-id :: metric` of the worst ratio.
+    pub worst_metric: String,
+}
+
+impl GroupReport {
+    /// Does this group pass the gate at `tolerance`? A group that could
+    /// not be compared at all (missing fresh file, or zero overlapping
+    /// records — both mean the bench or its record identity drifted)
+    /// fails: a gate that silently compares nothing is no gate.
+    pub fn passes(&self, tolerance: f64) -> bool {
+        !self.missing_fresh && self.compared > 0 && self.geomean <= tolerance
+    }
+}
+
+/// Identity of one record: every field that is not a timing metric or a
+/// derived ratio, in key order (the JSON object is a BTreeMap, so this
+/// is deterministic).
+fn record_id(rec: &Json) -> String {
+    let Json::Obj(map) = rec else { return rec.to_string() };
+    let mut parts = Vec::new();
+    for (k, v) in map {
+        if k.ends_with("_s") || k.contains("speedup") {
+            continue;
+        }
+        parts.push(format!("{k}={}", v.to_string()));
+    }
+    parts.join("|")
+}
+
+/// The timing metrics of one record: `*_s` fields holding numbers.
+fn metrics_of(rec: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Json::Obj(map) = rec {
+        for (k, v) in map {
+            if k.ends_with("_s") {
+                if let Some(x) = v.as_f64() {
+                    out.insert(k.clone(), x);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn results_of(doc: &Json) -> Result<&[Json]> {
+    doc.get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("bench document carries no \"results\" array"))
+}
+
+/// Compare one bench group: `fresh` timings (scaled by
+/// `injected_slowdown`) against `baseline`.
+pub fn compare_group(
+    file: &str,
+    baseline: &Json,
+    fresh: &Json,
+    injected_slowdown: f64,
+) -> Result<GroupReport> {
+    // comparing a smoke run against a full-mode baseline (or vice versa)
+    // would zero the overlap and read as identity drift — name the real
+    // problem instead
+    if let (Some(b), Some(f)) = (baseline.get("smoke"), fresh.get("smoke")) {
+        if b != f {
+            return Err(anyhow!(
+                "{file}: baseline is {} but the fresh run is {} — compare like with like \
+                 (CI gates on `cargo bench -- smoke`)",
+                if b == &Json::Bool(true) { "smoke-mode" } else { "full-mode" },
+                if f == &Json::Bool(true) { "smoke-mode" } else { "full-mode" },
+            ));
+        }
+    }
+    let mut fresh_index: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    for rec in results_of(fresh)? {
+        fresh_index.insert(record_id(rec), metrics_of(rec));
+    }
+    let (mut compared, mut skipped) = (0usize, 0usize);
+    let mut log_sum = 0.0f64;
+    let (mut worst, mut worst_metric) = (0.0f64, String::new());
+    for rec in results_of(baseline)? {
+        let id = record_id(rec);
+        let base_metrics = metrics_of(rec);
+        let Some(fresh_metrics) = fresh_index.get(&id) else {
+            skipped += base_metrics.len().max(1);
+            continue;
+        };
+        for (metric, base) in &base_metrics {
+            let Some(new) = fresh_metrics.get(metric) else {
+                skipped += 1;
+                continue;
+            };
+            let ratio = (new * injected_slowdown + FLOOR_S) / (base + FLOOR_S);
+            log_sum += ratio.ln();
+            compared += 1;
+            if ratio > worst {
+                worst = ratio;
+                worst_metric = format!("{id} :: {metric}");
+            }
+        }
+    }
+    let geomean = if compared == 0 { f64::NAN } else { (log_sum / compared as f64).exp() };
+    Ok(GroupReport {
+        file: file.to_string(),
+        missing_fresh: false,
+        compared,
+        skipped,
+        geomean,
+        worst,
+        worst_metric,
+    })
+}
+
+/// Compare every `BENCH_*.json` under `baseline_dir` against its fresh
+/// counterpart in `fresh_dir`. Returns one report per baseline file;
+/// `fresh_dir` files with no baseline are ignored (a new bench group can
+/// land before its baseline does — commit the baseline to arm the gate).
+pub fn check_dirs(
+    baseline_dir: &Path,
+    fresh_dir: &Path,
+    injected_slowdown: f64,
+) -> Result<Vec<GroupReport>> {
+    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)
+        .with_context(|| format!("reading baseline dir {}", baseline_dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(anyhow!(
+            "no BENCH_*.json baselines in {} (run `cargo bench -- smoke` and \
+             `gdp bench-check --write-baseline` to seed them)",
+            baseline_dir.display()
+        ));
+    }
+    let mut reports = Vec::new();
+    for name in names {
+        let base_path = baseline_dir.join(&name);
+        let fresh_path = fresh_dir.join(&name);
+        let baseline = Json::parse(
+            std::fs::read_to_string(&base_path)
+                .with_context(|| format!("reading {}", base_path.display()))?
+                .trim(),
+        )
+        .map_err(|e| anyhow!("unparseable baseline {}: {e}", base_path.display()))?;
+        let report = match std::fs::read_to_string(&fresh_path) {
+            Err(_) => GroupReport {
+                file: name.clone(),
+                missing_fresh: true,
+                compared: 0,
+                skipped: results_of(&baseline).map(|r| r.len()).unwrap_or(0),
+                geomean: f64::NAN,
+                worst: f64::NAN,
+                worst_metric: String::new(),
+            },
+            Ok(text) => {
+                let fresh = Json::parse(text.trim())
+                    .map_err(|e| anyhow!("unparseable {}: {e}", fresh_path.display()))?;
+                compare_group(&name, &baseline, &fresh, injected_slowdown)?
+            }
+        };
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
+/// Copy the fresh `BENCH_*.json` files over the committed baselines
+/// (creating the baseline directory if needed). Returns the file names
+/// written.
+pub fn write_baselines(baseline_dir: &Path, fresh_dir: &Path) -> Result<Vec<String>> {
+    std::fs::create_dir_all(baseline_dir)
+        .with_context(|| format!("creating {}", baseline_dir.display()))?;
+    let mut written: Vec<String> = std::fs::read_dir(fresh_dir)
+        .with_context(|| format!("reading {}", fresh_dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    written.sort();
+    if written.is_empty() {
+        return Err(anyhow!(
+            "no BENCH_*.json in {} (run `cargo bench -- smoke` first)",
+            fresh_dir.display()
+        ));
+    }
+    for name in &written {
+        std::fs::copy(fresh_dir.join(name), baseline_dir.join(name))
+            .with_context(|| format!("copying {name}"))?;
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(records: Vec<Vec<(&str, Json)>>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("pb".into())),
+            ("results", Json::Arr(records.into_iter().map(Json::obj).collect())),
+        ])
+    }
+
+    fn rec(
+        engine: &str,
+        family: &str,
+        generic_s: f64,
+        specialized_s: f64,
+    ) -> Vec<(&'static str, Json)> {
+        vec![
+            ("engine", Json::Str(engine.to_string())),
+            ("family", Json::Str(family.to_string())),
+            ("generic_s", Json::Num(generic_s)),
+            ("specialized_s", Json::Num(specialized_s)),
+            ("speedup", Json::Num(generic_s / specialized_s)),
+        ]
+    }
+
+    #[test]
+    fn identical_runs_pass_with_geomean_one() {
+        let base = doc(vec![
+            rec("cpu_seq", "pb_packing", 1e-4, 5e-5),
+            rec("cpu_omp8", "pb_mixed", 2e-4, 1e-4),
+        ]);
+        let r = compare_group("BENCH_pb.json", &base, &base, 1.0).unwrap();
+        assert_eq!(r.compared, 4);
+        assert_eq!(r.skipped, 0);
+        assert!((r.geomean - 1.0).abs() < 1e-9, "geomean {}", r.geomean);
+        assert!(r.passes(DEFAULT_TOLERANCE));
+    }
+
+    #[test]
+    fn injected_slowdown_trips_the_gate() {
+        let base = doc(vec![rec("cpu_seq", "pb_packing", 1e-3, 5e-4)]);
+        // 3x systematic slowdown on every metric: geomean ~3 > 2.5
+        let r = compare_group("BENCH_pb.json", &base, &base, 3.0).unwrap();
+        assert!(r.geomean > DEFAULT_TOLERANCE, "geomean {}", r.geomean);
+        assert!(!r.passes(DEFAULT_TOLERANCE));
+        assert!(r.worst > DEFAULT_TOLERANCE);
+        assert!(r.worst_metric.contains("generic_s") || r.worst_metric.contains("specialized_s"));
+    }
+
+    #[test]
+    fn one_noisy_record_does_not_trip_a_group() {
+        let base = doc(vec![
+            rec("cpu_seq", "a", 1e-3, 1e-3),
+            rec("cpu_seq", "b", 1e-3, 1e-3),
+            rec("cpu_seq", "c", 1e-3, 1e-3),
+            rec("cpu_seq", "d", 1e-3, 1e-3),
+        ]);
+        let fresh = doc(vec![
+            rec("cpu_seq", "a", 1e-3, 1e-3),
+            rec("cpu_seq", "b", 1e-3, 1e-3),
+            rec("cpu_seq", "c", 1e-3, 1e-3),
+            // one record 4x slower — real per-record jitter on CI
+            rec("cpu_seq", "d", 4e-3, 4e-3),
+        ]);
+        let r = compare_group("BENCH_pb.json", &base, &fresh, 1.0).unwrap();
+        // geomean = 4^(2/8) = sqrt(2) ~ 1.41: comfortably inside the gate
+        assert!(r.geomean < DEFAULT_TOLERANCE, "geomean {}", r.geomean);
+        assert!(r.passes(DEFAULT_TOLERANCE));
+        assert!((r.worst - 4.0).abs() < 0.2, "worst {}", r.worst);
+    }
+
+    #[test]
+    fn speedups_pass_and_derived_ratio_fields_are_ignored() {
+        let base = doc(vec![rec("cpu_seq", "a", 2e-3, 1e-3)]);
+        // twice as fast, with a wildly different (ignored) speedup field
+        let fresh = doc(vec![vec![
+            ("engine", Json::Str("cpu_seq".into())),
+            ("family", Json::Str("a".into())),
+            ("generic_s", Json::Num(1e-3)),
+            ("specialized_s", Json::Num(5e-4)),
+            ("speedup", Json::Num(99.0)),
+        ]]);
+        let r = compare_group("BENCH_pb.json", &base, &fresh, 1.0).unwrap();
+        assert!(r.geomean < 1.0);
+        assert!(r.passes(DEFAULT_TOLERANCE));
+    }
+
+    #[test]
+    fn renamed_records_are_skipped_and_empty_overlap_fails() {
+        let base = doc(vec![rec("cpu_seq", "a", 1e-3, 1e-3)]);
+        let fresh = doc(vec![rec("cpu_seq", "renamed", 1e-3, 1e-3)]);
+        let r = compare_group("BENCH_pb.json", &base, &fresh, 1.0).unwrap();
+        assert_eq!(r.compared, 0);
+        assert!(r.skipped > 0);
+        assert!(!r.passes(DEFAULT_TOLERANCE), "a gate comparing nothing must fail");
+    }
+
+    #[test]
+    fn identity_includes_non_timing_numeric_fields() {
+        // batch size is identity: B=8 must not match B=64
+        let mk = |b: f64, t: f64| {
+            vec![
+                ("engine", Json::Str("cpu_seq".into())),
+                ("batch", Json::Num(b)),
+                ("batch_s", Json::Num(t)),
+            ]
+        };
+        let base = doc(vec![mk(8.0, 1e-3), mk(64.0, 8e-3)]);
+        let fresh = doc(vec![mk(64.0, 8e-3), mk(8.0, 1e-3)]); // reordered
+        let r = compare_group("BENCH_batch.json", &base, &fresh, 1.0).unwrap();
+        assert_eq!(r.compared, 2);
+        assert!((r.geomean - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn check_dirs_round_trip_and_missing_fresh_fails() {
+        let dir = std::env::temp_dir().join(format!("gdp_bench_check_{}", std::process::id()));
+        let (base_dir, fresh_dir) = (dir.join("base"), dir.join("fresh"));
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&fresh_dir).unwrap();
+        let payload = doc(vec![rec("cpu_seq", "a", 1e-3, 1e-3)]).to_string();
+        std::fs::write(base_dir.join("BENCH_pb.json"), &payload).unwrap();
+        std::fs::write(fresh_dir.join("BENCH_pb.json"), &payload).unwrap();
+        std::fs::write(base_dir.join("BENCH_service.json"), &payload).unwrap();
+        // BENCH_service.json missing on the fresh side -> that group fails
+        let reports = check_dirs(&base_dir, &fresh_dir, 1.0).unwrap();
+        assert_eq!(reports.len(), 2);
+        let by_name = |n: &str| reports.iter().find(|r| r.file == n).unwrap();
+        assert!(by_name("BENCH_pb.json").passes(DEFAULT_TOLERANCE));
+        let missing = by_name("BENCH_service.json");
+        assert!(missing.missing_fresh && !missing.passes(DEFAULT_TOLERANCE));
+        // write-baseline copies the fresh files over
+        let written = write_baselines(&base_dir, &fresh_dir).unwrap();
+        assert_eq!(written, vec!["BENCH_pb.json".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -10,7 +10,17 @@
 //!    against the same traffic served one request per dispatch;
 //! 3. **served vs direct** — the served result must be bit-identical to
 //!    the direct session-API call (shape-checked here, proven engine by
-//!    engine in `tests/service_differential.rs`).
+//!    engine in `tests/service_differential.rs`);
+//! 4. **shard scaling** — parallel clients over mixed instances against
+//!    a 1-shard vs a 4-shard worker pool: the pool parallelizes across
+//!    *sessions* the way the GPU algorithm parallelizes across rows, so
+//!    a 1-shard pool serializes the whole mixed workload behind one
+//!    engine thread while a 4-shard pool runs the sessions' home shards
+//!    concurrently (`cargo bench -- service` records the same leg into
+//!    BENCH_service.json).
+//!
+//! Deterministic legs pin `shards: 1` explicitly so the GDP_TEST_SHARDS
+//! matrix hook cannot skew the comparison.
 
 use std::time::Duration;
 
@@ -19,13 +29,76 @@ use anyhow::Result;
 use super::context::ExpContext;
 use super::ExpOutput;
 use crate::gen::branched_nodes;
-use crate::instance::Bounds;
+use crate::instance::{Bounds, MipInstance};
 use crate::metrics::percentile;
 use crate::propagation::registry::EngineSpec;
 use crate::propagation::{Engine as _, Status};
 use crate::service::{PropagateRequest, Service, ServiceConfig, ServiceHandle};
 use crate::util::fmt::{ratio, secs, Table};
 use crate::util::timer::Timer;
+
+/// Mixed-family instances whose (cpu_seq-spec) sessions cover every
+/// shard of a `pool`-wide worker pool, `per_shard` instances each —
+/// deterministic (seeds from 100 up, routing via
+/// [`crate::service::session::shard_for`]). Shared by this experiment's
+/// shard-scaling leg and the `cargo bench -- service` leg so the two
+/// select identical workloads and cannot drift apart.
+pub fn covering_mixed_instances(
+    pool: usize,
+    per_shard: usize,
+    nrows: usize,
+    ncols: usize,
+    spec: &EngineSpec,
+) -> Vec<MipInstance> {
+    let mut cover = vec![0usize; pool];
+    let mut insts = Vec::new();
+    let mut seed = 100u64;
+    while insts.len() < pool * per_shard && seed < 500 {
+        let cand = crate::gen::generate(&crate::gen::GenConfig {
+            family: crate::gen::Family::Mixed,
+            nrows,
+            ncols,
+            mean_row_nnz: 8,
+            seed,
+            ..Default::default()
+        });
+        let fp = crate::service::session::instance_fingerprint(&cand);
+        let home = crate::service::session::shard_for(fp, &spec.cache_key(), pool);
+        if cover[home] < per_shard {
+            cover[home] += 1;
+            insts.push(cand);
+        }
+        seed += 1;
+    }
+    insts
+}
+
+/// Drive `clients` threads, each issuing `reqs_per_client` cold
+/// propagates rotating over `sessions` (client c's r-th request goes to
+/// session `(c + r) % len`). The other shared half of the shard-scaling
+/// leg.
+pub fn drive_rotating_clients(
+    handle: &ServiceHandle,
+    sessions: &[u64],
+    spec: &EngineSpec,
+    clients: usize,
+    reqs_per_client: usize,
+) {
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let handle = handle.clone();
+            let spec = spec.clone();
+            scope.spawn(move || {
+                for r in 0..reqs_per_client {
+                    let s = sessions[(c + r) % sessions.len()];
+                    handle
+                        .propagate(PropagateRequest::cold(s).with_spec(spec.clone()))
+                        .expect("served propagate in the shard-scaling leg");
+                }
+            });
+        }
+    });
+}
 
 /// Concurrent clients in the coalescing leg.
 const CLIENTS: usize = 8;
@@ -84,6 +157,7 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     // ---- leg 1: cold vs session-cache hit, every servable native engine
     let service = Service::start(ServiceConfig {
         batch_window: Duration::ZERO, // solo requests flush immediately
+        shards: 1,
         ..ServiceConfig::default()
     });
     let handle = service.handle();
@@ -175,6 +249,7 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
                 let service = Service::start(ServiceConfig {
                     batch_max,
                     batch_window: window,
+                    shards: 1,
                     ..ServiceConfig::default()
                 });
                 let handle = service.handle();
@@ -208,6 +283,67 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
         out.tables.push(("micro-batching: solo vs coalesced dispatches".into(), table));
     }
 
+    // ---- leg 3: shard scaling — parallel clients over mixed instances,
+    // 1-shard pool vs 4-shard pool. Instances are picked so their home
+    // shards cover the whole pool; cpu_seq keeps every request
+    // single-threaded so the speedup is pure cross-session parallelism.
+    const POOL: usize = 4;
+    let shard_speedup: f64 = {
+        let spec = EngineSpec::new("cpu_seq");
+        let (srows, scols) = (inst.nrows().min(400), inst.ncols().min(400));
+        let insts = covering_mixed_instances(POOL, 2, srows, scols, &spec);
+        let reqs_per_client = 6;
+        let total = CLIENTS * reqs_per_client;
+        let run_pool = |shards: usize| -> Result<f64> {
+            let service = Service::start(ServiceConfig {
+                batch_window: Duration::ZERO,
+                shards,
+                ..ServiceConfig::default()
+            });
+            let handle = service.handle();
+            let sessions: Vec<u64> = insts
+                .iter()
+                .map(|i| handle.load(i.clone()).map(|l| l.session).map_err(err))
+                .collect::<Result<_>>()?;
+            for &s in &sessions {
+                handle
+                    .propagate(PropagateRequest::cold(s).with_spec(spec.clone()))
+                    .map_err(err)?;
+            }
+            let timer = Timer::start();
+            drive_rotating_clients(&handle, &sessions, &spec, CLIENTS, reqs_per_client);
+            let wall = timer.secs();
+            service.shutdown();
+            Ok(wall)
+        };
+        let mut table = Table::new(vec!["shards", "wall_s", "req_per_s", "speedup"]);
+        let mut walls = Vec::new();
+        for shards in [1usize, POOL] {
+            let wall = run_pool(shards)?;
+            walls.push(wall);
+            table.row(vec![
+                shards.to_string(),
+                secs(wall),
+                format!("{:.1}", total as f64 / wall.max(1e-12)),
+                ratio(walls[0] / wall.max(1e-12)),
+            ]);
+        }
+        let shard_speedup = walls[0] / walls[1].max(1e-12);
+        out.tables.push((
+            format!(
+                "shard scaling: {CLIENTS} clients x {reqs_per_client} requests over {} mixed instances",
+                insts.len()
+            ),
+            table,
+        ));
+        out.note(format!(
+            "4-shard speedup over 1 shard: {} ({} sessions spread over {POOL} shards)",
+            ratio(shard_speedup),
+            insts.len()
+        ));
+        shard_speedup
+    };
+
     out.check(
         "session-cache hit is never slower than cold (median, per engine)",
         hits_beat_cold,
@@ -223,6 +359,13 @@ pub fn run(ctx: &ExpContext) -> Result<ExpOutput> {
     out.check(
         "root converged (coalescing leg ran)",
         root.status == Status::Converged,
+    );
+    // lenient under CI noise and low-core hosts: the pool must not make
+    // the mixed workload slower; the real scaling number is recorded in
+    // the table/note and in BENCH_service.json by `cargo bench -- service`
+    out.check(
+        "4-shard pool is not slower than 1 shard on mixed parallel traffic (>= 0.9x)",
+        shard_speedup.is_finite() && shard_speedup >= 0.9,
     );
     if omp_speedup.is_finite() {
         out.note(format!("cpu_omp coalescing speedup: {}", ratio(omp_speedup)));

@@ -33,6 +33,7 @@
 
 pub mod util;
 pub mod testkit;
+pub mod bench_check;
 pub mod sparse;
 pub mod instance;
 pub mod mps;

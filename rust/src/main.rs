@@ -19,11 +19,16 @@
 //!       service).
 //!   inspect   (--mps FILE | --opb FILE)
 //!       Print instance statistics (incl. the row-class histogram).
-//!   serve     [--port P | --stdio] [service options]
-//!       Run the propagation service: cached prepared sessions +
-//!       micro-batching scheduler behind the JSON-line wire protocol.
+//!   serve     [--port P | --stdio] [--shards N] [service options]
+//!       Run the propagation service: a sharded pool of scheduler
+//!       workers, each with cached prepared sessions + micro-batching,
+//!       behind the JSON-line wire protocol.
 //!   request   [--addr HOST:PORT] <load|propagate|stats|evict|shutdown>
-//!       One-shot client for the service (smokes, scripts, CI).
+//!       One-shot client for the service (smokes, scripts, CI);
+//!       `stats --check` verifies the hit/miss accounting client-side.
+//!   bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
+//!       Benchmark-regression gate: compare fresh BENCH_*.json against
+//!       the committed baselines; fail beyond the tolerated slowdown.
 //!
 //! Engine names and the `--engine` help list both come from the registry
 //! (`gdp::propagation::registry`), so they cannot drift apart.
@@ -56,6 +61,7 @@ fn main() -> ExitCode {
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "request" => cmd_request(&args),
+        "bench-check" => cmd_bench_check(&args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(true)
@@ -98,13 +104,16 @@ USAGE:
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
   gdp inspect (--mps FILE | --opb FILE)
-  gdp serve [--port P | --stdio] [--engine NAME] [--batch-max N] [--batch-window-us U]
-            [--max-sessions N] [--max-session-mb MB] [--artifacts DIR]
+  gdp serve [--port P | --stdio] [--shards N] [--engine NAME] [--batch-max N]
+            [--batch-window-us U] [--max-sessions N] [--max-session-mb MB]
+            [--artifacts DIR]
   gdp request [--addr HOST:PORT] load (--mps FILE | --opb FILE)
   gdp request [--addr HOST:PORT] propagate (--session HEX | --mps FILE | --opb FILE)
               [--engine NAME] [--threads N] [--max-rounds R] [--no-specialize]
               [--seed-vars 1,2] [--summary]
-  gdp request [--addr HOST:PORT] stats | evict [--session HEX] | shutdown
+  gdp request [--addr HOST:PORT] stats [--check] | evict [--session HEX] | shutdown
+  gdp bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
+                  [--injected-slowdown F] [--write-baseline]
 "
     )
 }
@@ -234,12 +243,13 @@ fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
     println!("registered engines (artifacts {}):", registry.artifact_dir().display());
     for entry in registry.entries() {
         println!(
-            "  {:12} {}  [batch: {}]{}{}{}",
+            "  {:12} {}  [batch: {}]{}{}{}{}",
             entry.name,
             entry.summary,
             entry.batch.name(),
             if entry.specializes { "  [class-dispatch]" } else { "" },
             if entry.served { "  [served]" } else { "" },
+            if !entry.send_safe { "  [pinned to shard 0]" } else { "" },
             if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
         );
     }
@@ -333,15 +343,18 @@ fn service_config_from_args(args: &Args) -> gdp::service::ServiceConfig {
         max_sessions: args.get_usize("max-sessions", defaults.max_sessions),
         max_bytes: args.get_usize("max-session-mb", defaults.max_bytes >> 20) << 20,
         artifact_dir: args.get("artifacts").map(std::path::PathBuf::from),
+        // serving default: one scheduler worker per core, capped at 8
+        shards: args.get_usize("shards", gdp::service::default_shards()).max(1),
     }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<bool> {
     let service = gdp::service::Service::start(service_config_from_args(args));
+    let shards = service.shards();
     let handle = service.handle();
     if args.flag("stdio") {
         eprintln!(
-            "gdp-serve: stdio mode (one JSON request per line; proto v{})",
+            "gdp-serve: stdio mode (one JSON request per line; proto v{}; {shards} shards)",
             gdp::service::proto::PROTO_VERSION
         );
         gdp::service::server::serve_stdio(&handle)?;
@@ -352,8 +365,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<bool> {
             .map_err(|_| anyhow::anyhow!("--port expects a TCP port (0-65535)"))?;
         let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
         let local = listener.local_addr()?;
-        // scripts (CI readiness loops) wait on this exact line
-        println!("gdp-serve listening on {local} (proto v{})", gdp::service::proto::PROTO_VERSION);
+        // scripts (CI readiness loops) wait on the "listening on" prefix
+        println!(
+            "gdp-serve listening on {local} (proto v{}, {shards} shards)",
+            gdp::service::proto::PROTO_VERSION
+        );
         use std::io::Write as _;
         std::io::stdout().flush()?;
         gdp::service::server::serve_tcp(&handle, listener)?;
@@ -500,7 +516,12 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
                 ("op", Json::Str(op.into())),
             ])
             .to_string();
-            Ok(ok(&roundtrip(line)?))
+            let resp = roundtrip(line)?;
+            if op == "stats" && ok(&resp) && args.flag("check") {
+                let result = resp.get("result").unwrap();
+                return check_stats_consistency(result);
+            }
+            Ok(ok(&resp))
         }
         "evict" => {
             let mut pairs = vec![
@@ -514,6 +535,128 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
         }
         other => anyhow::bail!("unknown request op {other} (load|propagate|stats|evict|shutdown)"),
     }
+}
+
+/// `gdp request stats --check`: verify the serving accounting from the
+/// client side — `hits + misses == propagate requests + pending` per
+/// shard and in the aggregate rollup (hit/miss is counted at enqueue,
+/// `propagate` at flush, so requests still inside a micro-batch window
+/// sit in `pending`), and the per-shard blocks summing to the aggregate.
+/// Exit failure on any violation, so CI can gate on a live server's
+/// bookkeeping.
+fn check_stats_consistency(result: &gdp::util::json::Json) -> anyhow::Result<bool> {
+    let num = |j: &gdp::util::json::Json, path: &[&str]| -> anyhow::Result<f64> {
+        let mut cur = j;
+        for p in path {
+            cur = cur
+                .get(p)
+                .ok_or_else(|| anyhow::anyhow!("stats payload misses {}", path.join(".")))?;
+        }
+        cur.as_f64().ok_or_else(|| anyhow::anyhow!("{} is not a number", path.join(".")))
+    };
+    let mut all_ok = true;
+    let mut check = |what: &str, got: f64, want: f64| {
+        if got != want {
+            eprintln!("stats-check FAILED: {what}: {got} != {want}");
+            all_ok = false;
+        }
+    };
+    let agg_prop = num(result, &["requests", "propagate"])?;
+    let agg_hits = num(result, &["sessions", "hits"])?;
+    let agg_misses = num(result, &["sessions", "misses"])?;
+    let agg_pending = num(result, &["pending"])?;
+    check(
+        "aggregate hits+misses vs propagate+pending",
+        agg_hits + agg_misses,
+        agg_prop + agg_pending,
+    );
+    let shards = num(result, &["shards"])? as usize;
+    let per = result
+        .get("per_shard")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("stats payload misses per_shard"))?;
+    check("per_shard block count", per.len() as f64, shards as f64);
+    let (mut sum_prop, mut sum_hits, mut sum_misses) = (0.0, 0.0, 0.0);
+    for (i, shard) in per.iter().enumerate() {
+        let prop = num(shard, &["requests", "propagate"])?;
+        let hits = num(shard, &["sessions", "hits"])?;
+        let misses = num(shard, &["sessions", "misses"])?;
+        let pending = num(shard, &["pending"])?;
+        check(
+            &format!("shard {i} hits+misses vs propagate+pending"),
+            hits + misses,
+            prop + pending,
+        );
+        sum_prop += prop;
+        sum_hits += hits;
+        sum_misses += misses;
+    }
+    check("shard propagate sum vs aggregate", sum_prop, agg_prop);
+    check("shard hits sum vs aggregate", sum_hits, agg_hits);
+    check("shard misses sum vs aggregate", sum_misses, agg_misses);
+    if all_ok {
+        println!(
+            "stats-check: ok (shards={shards} propagate={agg_prop} hits={agg_hits} \
+             misses={agg_misses} pending={agg_pending})"
+        );
+    }
+    Ok(all_ok)
+}
+
+/// The benchmark-regression gate (CI `bench-regression` job): compare
+/// fresh smoke-mode `BENCH_*.json` against the committed baselines and
+/// fail beyond the tolerated geometric-mean slowdown.
+fn cmd_bench_check(args: &Args) -> anyhow::Result<bool> {
+    let baseline = std::path::PathBuf::from(args.get_or("baseline", "bench/baselines"));
+    let fresh = std::path::PathBuf::from(args.get_or("fresh", "."));
+    if args.flag("write-baseline") {
+        let written = gdp::bench_check::write_baselines(&baseline, &fresh)?;
+        println!("bench-check: wrote {} baseline(s) to {}", written.len(), baseline.display());
+        for name in written {
+            println!("  {name}");
+        }
+        return Ok(true);
+    }
+    let tolerance = args.get_f64("tolerance", gdp::bench_check::DEFAULT_TOLERANCE);
+    let slowdown = args.get_f64("injected-slowdown", 1.0);
+    if slowdown != 1.0 {
+        println!("bench-check: injecting a synthetic {slowdown}x slowdown (gate self-test)");
+    }
+    let reports = gdp::bench_check::check_dirs(&baseline, &fresh, slowdown)?;
+    let mut all_pass = true;
+    println!(
+        "bench-check: fresh {} vs baselines {} (tolerance {tolerance}x geomean)",
+        fresh.display(),
+        baseline.display()
+    );
+    for r in &reports {
+        let pass = r.passes(tolerance);
+        all_pass &= pass;
+        if r.missing_fresh {
+            println!("  FAIL {:22} fresh file missing (did the bench smoke run?)", r.file);
+        } else if r.compared == 0 {
+            println!("  FAIL {:22} no overlapping records (bench identity drifted?)", r.file);
+        } else {
+            println!(
+                "  {} {:22} geomean {:.2}x over {} metrics ({} skipped), worst {:.2}x at {}",
+                if pass { "ok  " } else { "FAIL" },
+                r.file,
+                r.geomean,
+                r.compared,
+                r.skipped,
+                r.worst,
+                r.worst_metric
+            );
+        }
+    }
+    if !all_pass {
+        eprintln!(
+            "bench-check: REGRESSION GATE FAILED (>{tolerance}x geomean slowdown). If this \
+             is an intended trade-off, refresh the baselines with \
+             `cargo bench -- smoke && gdp bench-check --write-baseline` and commit them."
+        );
+    }
+    Ok(all_pass)
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<bool> {

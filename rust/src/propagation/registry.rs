@@ -215,6 +215,13 @@ pub struct EngineEntry {
     /// differential enroll engines from the registry instead of a
     /// hand-kept list.
     pub served: bool,
+    /// May the service place this engine's sessions on ANY shard of its
+    /// worker pool? Native engines hold only owned `Send` state, so the
+    /// sharded scheduler routes them by session hash. The XLA engines
+    /// share a per-registry `Rc<Runtime>` (PJRT client + executable
+    /// cache) — not `Send` — so the service pins them to its dedicated
+    /// shard 0 and never opens a second PJRT client.
+    pub send_safe: bool,
     factory: Factory,
 }
 
@@ -296,6 +303,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: true,
             served: true,
+            send_safe: true,
             factory: make_seq,
         });
         reg.register(EngineEntry {
@@ -305,6 +313,7 @@ impl Registry {
             batch: BatchMode::ParallelNodes,
             specializes: true,
             served: true,
+            send_safe: true,
             factory: make_omp,
         });
         reg.register(EngineEntry {
@@ -314,6 +323,7 @@ impl Registry {
             batch: BatchMode::ArrayAxis,
             specializes: true,
             served: true,
+            send_safe: true,
             factory: make_gpu_model,
         });
         reg.register(EngineEntry {
@@ -323,6 +333,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: true,
             served: true,
+            send_safe: true,
             factory: make_papilo,
         });
         reg.register(EngineEntry {
@@ -332,6 +343,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
+            send_safe: false,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -341,6 +353,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
+            send_safe: false,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -350,6 +363,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
+            send_safe: false,
             factory: make_xla,
         });
         reg
@@ -406,6 +420,7 @@ impl Registry {
                             ("batch_native", Json::Bool(e.batch.is_native())),
                             ("specializes", Json::Bool(e.specializes)),
                             ("served", Json::Bool(e.served)),
+                            ("send_safe", Json::Bool(e.send_safe)),
                         ])
                     })
                     .collect(),
@@ -500,6 +515,19 @@ mod tests {
                 }),
                 Some(entry.served)
             );
+            // the shard-placement capability the sharded scheduler reads
+            assert_eq!(
+                j.get("send_safe").and_then(|v| match v {
+                    crate::util::json::Json::Bool(b) => Some(*b),
+                    _ => None,
+                }),
+                Some(entry.send_safe)
+            );
+        }
+        // XLA engines (Rc runtime) must be pinned to the XLA shard; all
+        // native engines must be free to roam the pool
+        for e in reg.entries() {
+            assert_eq!(e.send_safe, !e.needs_artifacts, "{}: send_safe drifted", e.name);
         }
         // the capability map the batching work relies on
         let mode_of = |name: &str| {

@@ -1,8 +1,11 @@
 //! Serving-layer metrics: per-request latency, propagation rounds,
 //! candidate counts, micro-batch coalescing and the algorithm-independent
 //! progress measure ([`crate::metrics::progress`], arXiv:2106.07573) —
-//! aggregated on the scheduler thread (no locks) and surfaced through the
-//! `stats` wire op.
+//! aggregated on each shard's scheduler thread (no locks) and surfaced
+//! through the `stats` wire op as per-shard blocks plus an aggregate
+//! rollup ([`rollup`]): counters sum, duration stats merge, the rollup's
+//! top level keeps the exact pre-sharding shape so PR 4 clients read
+//! aggregate numbers without change.
 
 use std::time::{Duration, Instant};
 
@@ -38,6 +41,22 @@ impl DurationStat {
         } else {
             self.total_s / self.count as f64
         }
+    }
+
+    /// Fold another series into this one (cross-shard rollup): counts and
+    /// totals add, extrema widen; an empty side is the identity.
+    pub fn merge(&mut self, other: &DurationStat) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+        self.count += other.count;
+        self.total_s += other.total_s;
     }
 
     fn to_json(self) -> Json {
@@ -148,6 +167,30 @@ impl ServiceMetrics {
         }
     }
 
+    /// Fold another shard's metrics into this one: request and
+    /// propagation counters sum, duration series merge, `coalesced_max`
+    /// takes the pool-wide maximum, and `started` keeps the earliest
+    /// start so aggregate uptime is the pool's uptime.
+    pub fn merge(&mut self, other: &ServiceMetrics) {
+        self.started = self.started.min(other.started);
+        self.loads += other.loads;
+        self.propagates += other.propagates;
+        self.stats_calls += other.stats_calls;
+        self.evicts += other.evicts;
+        self.latency.merge(&other.latency);
+        self.engine_wall.merge(&other.engine_wall);
+        self.rounds_total += other.rounds_total;
+        self.candidates_total += other.candidates_total;
+        self.tightened_total += other.tightened_total;
+        self.progress_sum += other.progress_sum;
+        self.progress_min = self.progress_min.min(other.progress_min);
+        self.progress_count += other.progress_count;
+        self.flushes += other.flushes;
+        self.coalesced_total += other.coalesced_total;
+        self.coalesced_max = self.coalesced_max.max(other.coalesced_max);
+        self.batched_flushes += other.batched_flushes;
+    }
+
     /// Mean requests per dispatch — >1 means micro-batching is working.
     pub fn mean_coalesced(&self) -> f64 {
         if self.flushes == 0 {
@@ -184,6 +227,7 @@ impl ServiceMetrics {
                     ("approx_bytes", Json::Num(bytes as f64)),
                     ("hits", Json::Num(store.hits as f64)),
                     ("misses", Json::Num(store.misses as f64)),
+                    ("flush_resolves", Json::Num(store.flush_resolves as f64)),
                     ("evictions", Json::Num(store.evictions as f64)),
                     ("instance_hits", Json::Num(store.instance_hits as f64)),
                     ("instance_loads", Json::Num(store.instance_loads as f64)),
@@ -217,6 +261,73 @@ impl ServiceMetrics {
     }
 }
 
+/// One shard's full measurement state, snapshotted on its scheduler
+/// thread and sent to the caller, who rolls the pool up with [`rollup`].
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// Shard index in the pool (0 = the primary / XLA shard).
+    pub shard: usize,
+    pub metrics: ServiceMetrics,
+    pub counters: StoreCounters,
+    /// Live prepared sessions in this shard's store slice.
+    pub sessions: usize,
+    /// Resident instances in this shard's store slice.
+    pub instances: usize,
+    /// Approximate resident bytes of this shard's store slice.
+    pub bytes: usize,
+    /// Propagate requests enqueued but not yet flushed (waiting in a
+    /// micro-batch window). Hit/miss is counted at enqueue and
+    /// `propagates` at flush, so the live-server invariant is
+    /// `hits + misses == propagates + pending` — without this field a
+    /// stats snapshot taken mid-window would look inconsistent.
+    pub pending: usize,
+}
+
+impl ShardSnapshot {
+    /// This shard's stats block: the same shape as the aggregate, plus
+    /// the shard index.
+    pub fn to_json(&self) -> Json {
+        let mut j =
+            self.metrics.to_json(&self.counters, self.sessions, self.instances, self.bytes);
+        if let Json::Obj(map) = &mut j {
+            map.insert("shard".into(), Json::Num(self.shard as f64));
+            map.insert("pending".into(), Json::Num(self.pending as f64));
+        }
+        j
+    }
+}
+
+/// The sharded `stats` payload: the aggregate rollup at the top level
+/// (bit-compatible with the pre-sharding shape — counters summed,
+/// duration stats merged, `coalesced_max` maxed) plus `shards` (pool
+/// size) and `per_shard` (one block per shard, each carrying its own
+/// hit/miss partition so `hits + misses == propagates` can be checked
+/// per shard AND in the aggregate).
+pub fn rollup(snaps: &[ShardSnapshot]) -> Json {
+    let mut metrics = snaps[0].metrics.clone();
+    let mut counters = snaps[0].counters;
+    let (mut sessions, mut instances, mut bytes, mut pending) =
+        (snaps[0].sessions, snaps[0].instances, snaps[0].bytes, snaps[0].pending);
+    for s in &snaps[1..] {
+        metrics.merge(&s.metrics);
+        counters.merge(&s.counters);
+        sessions += s.sessions;
+        instances += s.instances;
+        bytes += s.bytes;
+        pending += s.pending;
+    }
+    let mut j = metrics.to_json(&counters, sessions, instances, bytes);
+    if let Json::Obj(map) = &mut j {
+        map.insert("shards".into(), Json::Num(snaps.len() as f64));
+        map.insert("pending".into(), Json::Num(pending as f64));
+        map.insert(
+            "per_shard".into(),
+            Json::Arr(snaps.iter().map(ShardSnapshot::to_json).collect()),
+        );
+    }
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +357,81 @@ mod tests {
             j.get("propagation").unwrap().get("progress_mean").unwrap().as_f64(),
             Some(0.5)
         );
+        // serializes cleanly
+        assert!(crate::util::json::Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn duration_stat_merge_widens_extrema_and_sums() {
+        let mut a = DurationStat::default();
+        a.record(Duration::from_micros(100));
+        a.record(Duration::from_micros(200));
+        let mut b = DurationStat::default();
+        b.record(Duration::from_micros(50));
+        b.record(Duration::from_micros(400));
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert!((a.min_s - 5e-5).abs() < 1e-9);
+        assert!((a.max_s - 4e-4).abs() < 1e-9);
+        // empty is the identity on both sides
+        let empty = DurationStat::default();
+        let before = a;
+        a.merge(&empty);
+        assert_eq!(a.count, before.count);
+        let mut c = DurationStat::default();
+        c.merge(&b);
+        assert_eq!(c.count, b.count);
+        assert_eq!(c.min_s, b.min_s);
+    }
+
+    #[test]
+    fn rollup_sums_shards_and_keeps_per_shard_partitions() {
+        let snap = |shard: usize, propagates: u64, hits: u64, misses: u64| {
+            let mut m = ServiceMetrics::default();
+            for _ in 0..propagates {
+                m.record_propagate(
+                    Duration::from_micros(100),
+                    Duration::from_micros(80),
+                    2,
+                    3,
+                    1,
+                    0.25,
+                );
+            }
+            m.record_flush(propagates.max(1) as usize, propagates > 1);
+            ShardSnapshot {
+                shard,
+                metrics: m,
+                counters: StoreCounters { hits, misses, ..StoreCounters::default() },
+                sessions: 1,
+                instances: 1,
+                bytes: 100,
+                pending: 0,
+            }
+        };
+        let snaps = vec![snap(0, 3, 2, 1), snap(1, 5, 4, 1)];
+        let j = rollup(&snaps);
+        // aggregate keeps the pre-sharding shape: summed counters
+        assert_eq!(j.get("requests").unwrap().get("propagate").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("sessions").unwrap().get("hits").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("sessions").unwrap().get("misses").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("sessions").unwrap().get("live").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("shards").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            j.get("scheduler").unwrap().get("coalesced_max").unwrap().as_f64(),
+            Some(5.0)
+        );
+        // per-shard blocks keep their own exact partitions
+        let per = j.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        for (i, p) in per.iter().enumerate() {
+            assert_eq!(p.get("shard").unwrap().as_f64(), Some(i as f64));
+            let h = p.get("sessions").unwrap().get("hits").unwrap().as_f64().unwrap();
+            let m = p.get("sessions").unwrap().get("misses").unwrap().as_f64().unwrap();
+            let req =
+                p.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+            assert_eq!(h + m, req, "shard {i} hit/miss partition broke");
+        }
         // serializes cleanly
         assert!(crate::util::json::Json::parse(&j.to_string()).is_ok());
     }

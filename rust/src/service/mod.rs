@@ -20,12 +20,25 @@
 //! * [`server`] — a threaded TCP accept loop plus a stdio mode for pipes
 //!   and tests (`gdp serve`).
 //! * [`metrics`] — per-request latency, rounds, candidate counts and the
-//!   algorithm-independent progress measure (arXiv:2106.07573).
+//!   algorithm-independent progress measure (arXiv:2106.07573), kept per
+//!   shard and rolled up into one aggregate `stats` payload.
 //!
-//! Everything is std-only. All engine execution happens on one scheduler
-//! thread (prepared sessions are not `Send`; the XLA engines share an
-//! `Rc` runtime); connection threads and in-process clients talk to it
-//! through the cloneable, `Send` [`ServiceHandle`].
+//! Everything is std-only. Engine execution happens on a **sharded
+//! worker pool**: `ServiceConfig::shards` scheduler threads, each owning
+//! its own [`session::SessionStore`] slice and micro-batching queues.
+//! Sessions are pinned to a shard by a deterministic hash of
+//! `instance_fingerprint × EngineSpec::cache_key` ([`session::shard_for`]),
+//! so warm-start reuse and coalescing semantics are exactly the 1-shard
+//! semantics, per shard — concurrent sessions merely stop serializing
+//! behind one engine thread. Engines whose sessions are not `Send`-safe
+//! (the XLA engines share an `Rc` PJRT runtime; `EngineEntry::send_safe`
+//! is false) are pinned to the dedicated shard 0, so every other shard
+//! holds only native sessions and no second PJRT client is ever opened.
+//! Connection threads and in-process clients talk to the pool through
+//! the cloneable, `Send` [`ServiceHandle`], which routes `propagate` to
+//! the session's home shard and broadcasts `load`/`stats`/`evict`/
+//! `shutdown` (one designated *primary* shard counts each broadcast
+//! request so aggregate counters stay client-accurate).
 
 pub mod metrics;
 pub mod proto;
@@ -33,12 +46,14 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::instance::{Bounds, MipInstance};
-use crate::propagation::registry::EngineSpec;
+use crate::propagation::registry::{EngineSpec, Registry};
 use crate::propagation::Status;
 use crate::util::json::Json;
 
@@ -52,12 +67,20 @@ pub struct ServiceConfig {
     pub batch_max: usize,
     /// ... or when the oldest pending request has waited this long.
     pub batch_window: Duration,
-    /// Session-count budget of the store.
+    /// Session-count budget of the store, split evenly across shards.
     pub max_sessions: usize,
-    /// Approximate-bytes budget of the store (instances + sessions).
+    /// Approximate-bytes budget of the store (instances + sessions),
+    /// split evenly across shards.
     pub max_bytes: usize,
     /// Artifact directory for the XLA engines (None = default resolution).
     pub artifact_dir: Option<PathBuf>,
+    /// Worker-pool size: independent scheduler threads, each owning a
+    /// `SessionStore` slice. `ServiceConfig::default()` uses 1 (the PR 4
+    /// single-thread semantics) unless the `GDP_TEST_SHARDS` environment
+    /// variable overrides it — the CI matrix hook that re-runs every
+    /// service test at a different pool size. `gdp serve` defaults to
+    /// [`default_shards`] instead.
+    pub shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -69,8 +92,29 @@ impl Default for ServiceConfig {
             max_sessions: 32,
             max_bytes: 256 << 20,
             artifact_dir: None,
+            shards: test_shards(),
         }
     }
+}
+
+/// The serving default for `gdp serve --shards`:
+/// `min(available_parallelism, 8)` — one scheduler thread per core up to
+/// a pool of eight (past that, store fragmentation costs more than the
+/// extra threads buy on typical hosts).
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Shard count for [`ServiceConfig::default`]: 1, unless `GDP_TEST_SHARDS`
+/// overrides it. The CI build-test job runs the suite under a
+/// `{shards: [1, 4]}` matrix through this hook, so the 1-shard path stays
+/// covered after the sharded refactor without duplicating every test.
+pub fn test_shards() -> usize {
+    std::env::var("GDP_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 /// Service-level error: a failed request, or the service is gone.
@@ -163,12 +207,26 @@ pub struct EvictReply {
     pub dropped: usize,
 }
 
-/// A job on the scheduler queue. Crate-visible: constructed by
+/// A job on a shard's scheduler queue. Crate-visible: constructed by
 /// [`ServiceHandle`], consumed by [`scheduler::Scheduler`].
+///
+/// `primary` on the broadcast jobs marks the ONE shard that counts the
+/// client-visible request (and, for `load`, answers it): a broadcast
+/// reaches every shard, but the aggregate `stats` rollup sums per-shard
+/// counters, so counting on all of them would report N× the requests the
+/// clients actually issued.
 pub(crate) enum Job {
     Load {
-        inst: MipInstance,
-        reply: Sender<ServiceResult<LoadReply>>,
+        /// Shared across the pool: the broadcast hands every shard the
+        /// SAME allocation, so pool memory holds one copy per instance
+        /// regardless of the shard count.
+        inst: Arc<MipInstance>,
+        /// Precomputed [`session::instance_fingerprint`] of `inst`: the
+        /// handle validates and fingerprints ONCE per client load (both
+        /// are O(nnz) passes) instead of once per shard.
+        fingerprint: u64,
+        primary: bool,
+        reply: Option<Sender<ServiceResult<LoadReply>>>,
     },
     Propagate {
         req: PropagateRequest,
@@ -176,10 +234,12 @@ pub(crate) enum Job {
         reply: Sender<ServiceResult<PropagateReply>>,
     },
     Stats {
-        reply: Sender<ServiceResult<Json>>,
+        primary: bool,
+        reply: Sender<ServiceResult<metrics::ShardSnapshot>>,
     },
     Evict {
         session: Option<u64>,
+        primary: bool,
         reply: Sender<ServiceResult<EvictReply>>,
     },
     Shutdown {
@@ -187,73 +247,220 @@ pub(crate) enum Job {
     },
 }
 
+/// Shard-routing table, shared by every clone of a [`ServiceHandle`]:
+/// the default engine (a request naming no engine still needs a cache
+/// key to route on) and each engine's `send_safe` capability from the
+/// registry (non-`send_safe` engines — XLA — always route to shard 0).
+struct RouteTable {
+    default_engine: String,
+    send_safe: HashMap<String, bool>,
+}
+
+impl RouteTable {
+    fn new(config: &ServiceConfig) -> RouteTable {
+        // capability lookup only — building a registry opens no runtime
+        let registry = Registry::with_defaults();
+        RouteTable {
+            default_engine: config.default_engine.clone(),
+            send_safe: registry
+                .entries()
+                .iter()
+                .map(|e| (e.name.to_string(), e.send_safe))
+                .collect(),
+        }
+    }
+}
+
 /// Cloneable, `Send` front door to a running service: every method is a
-/// blocking request/response round trip with the scheduler thread.
+/// blocking request/response round trip with the worker pool.
+/// `propagate` goes to the session's home shard; `load`, `stats`,
+/// `evict` and `shutdown` broadcast to every shard.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Job>,
+    txs: Vec<Sender<Job>>,
+    route: Arc<RouteTable>,
 }
 
 impl ServiceHandle {
-    fn call<T>(&self, make: impl FnOnce(Sender<ServiceResult<T>>) -> Job) -> ServiceResult<T> {
+    /// Home shard of one propagate request: shard 0 for engines whose
+    /// sessions must not leave the XLA shard (or for unknown engine
+    /// names, which any shard rejects identically), the deterministic
+    /// `fingerprint × cache_key` hash otherwise.
+    fn shard_of(&self, req: &PropagateRequest) -> usize {
+        let key = match &req.spec {
+            Some(spec) => {
+                if !self.route.send_safe.get(spec.name.as_str()).copied().unwrap_or(false) {
+                    return 0;
+                }
+                session::SessionKey::new(req.session, spec)
+            }
+            None => {
+                let spec = EngineSpec::new(&self.route.default_engine);
+                if !self.route.send_safe.get(spec.name.as_str()).copied().unwrap_or(false) {
+                    return 0;
+                }
+                session::SessionKey::new(req.session, &spec)
+            }
+        };
+        key.shard(self.txs.len())
+    }
+
+    fn call<T>(
+        &self,
+        shard: usize,
+        make: impl FnOnce(Sender<ServiceResult<T>>) -> Job,
+    ) -> ServiceResult<T> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
+        self.txs[shard]
             .send(make(reply_tx))
             .map_err(|_| ServiceError("service stopped".into()))?;
         reply_rx.recv().map_err(|_| ServiceError("service stopped".into()))?
     }
 
-    /// Ingest an instance; idempotent (content-addressed).
+    /// Ingest an instance; idempotent (content-addressed). Broadcast:
+    /// every shard holds the (shared, `Arc`) instance so whichever shard
+    /// a later engine spec routes to can prepare a session from it;
+    /// shard 0 answers and counts the request. Validation and the
+    /// content fingerprint (both O(nnz)) run here, on the calling
+    /// thread, once — not on every shard.
     pub fn load(&self, inst: MipInstance) -> ServiceResult<LoadReply> {
-        self.call(|reply| Job::Load { inst, reply })
+        inst.validate().map_err(|e| ServiceError(format!("invalid instance: {e}")))?;
+        let fingerprint = session::instance_fingerprint(&inst);
+        let inst = Arc::new(inst);
+        for tx in &self.txs[1..] {
+            tx.send(Job::Load {
+                inst: Arc::clone(&inst),
+                fingerprint,
+                primary: false,
+                reply: None,
+            })
+            .map_err(|_| ServiceError("service stopped".into()))?;
+        }
+        self.call(0, |reply| Job::Load { inst, fingerprint, primary: true, reply: Some(reply) })
     }
 
-    /// Serve one propagation (blocks through the coalescing window).
+    /// Serve one propagation (blocks through the coalescing window) on
+    /// the session's home shard.
     pub fn propagate(&self, req: PropagateRequest) -> ServiceResult<PropagateReply> {
-        self.call(|reply| Job::Propagate { req, received: std::time::Instant::now(), reply })
+        let shard = self.shard_of(&req);
+        self.call(shard, |reply| Job::Propagate {
+            req,
+            received: std::time::Instant::now(),
+            reply,
+        })
     }
 
-    /// Service counters as the `stats` wire payload.
+    /// Pool counters as the `stats` wire payload: per-shard blocks plus
+    /// the aggregate rollup ([`metrics::rollup`]).
     pub fn stats(&self) -> ServiceResult<Json> {
-        self.call(|reply| Job::Stats { reply })
+        let mut pending = Vec::with_capacity(self.txs.len());
+        for (i, tx) in self.txs.iter().enumerate() {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(Job::Stats { primary: i == 0, reply: reply_tx })
+                .map_err(|_| ServiceError("service stopped".into()))?;
+            pending.push(reply_rx);
+        }
+        let mut snaps = Vec::with_capacity(pending.len());
+        for rx in pending {
+            snaps.push(rx.recv().map_err(|_| ServiceError("service stopped".into()))??);
+        }
+        Ok(metrics::rollup(&snaps))
     }
 
-    /// Drop one session id (or everything, with `None`).
+    /// Drop one session id (or everything, with `None`) on every shard;
+    /// `dropped` sums the entries dropped pool-wide (the home shard's
+    /// session plus each shard's broadcast instance copy).
     pub fn evict(&self, session: Option<u64>) -> ServiceResult<EvictReply> {
-        self.call(|reply| Job::Evict { session, reply })
+        let mut pending = Vec::with_capacity(self.txs.len());
+        for (i, tx) in self.txs.iter().enumerate() {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(Job::Evict { session, primary: i == 0, reply: reply_tx })
+                .map_err(|_| ServiceError("service stopped".into()))?;
+            pending.push(reply_rx);
+        }
+        let mut dropped = 0;
+        for rx in pending {
+            dropped +=
+                rx.recv().map_err(|_| ServiceError("service stopped".into()))??.dropped;
+        }
+        Ok(EvictReply { dropped })
     }
 
-    /// Stop the scheduler after flushing pending work.
+    /// Stop every shard after flushing pending work.
     pub fn shutdown(&self) -> ServiceResult<()> {
-        self.call(|reply| Job::Shutdown { reply })
+        let mut pending = Vec::with_capacity(self.txs.len());
+        for tx in &self.txs {
+            let (reply_tx, reply_rx) = channel();
+            // a shard that already exited is fine — keep stopping the rest
+            if tx.send(Job::Shutdown { reply: reply_tx }).is_ok() {
+                pending.push(reply_rx);
+            }
+        }
+        if pending.is_empty() {
+            return Err(ServiceError("service stopped".into()));
+        }
+        for rx in pending {
+            rx.recv().map_err(|_| ServiceError("service stopped".into()))??;
+        }
+        Ok(())
     }
 }
 
-/// A running propagation service: owns the scheduler thread.
+/// A running propagation service: owns the pool of shard scheduler
+/// threads.
 pub struct Service {
     handle: ServiceHandle,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Spawn the scheduler thread and return the running service.
+    /// Spawn `config.shards` scheduler threads and return the running
+    /// service. Hash-routed shards receive the store budgets divided by
+    /// the pool size; shard 0 keeps the UNDIVIDED budgets, because every
+    /// non-`send_safe` (XLA) session in the whole pool is pinned there —
+    /// a split budget would shrink XLA session capacity by the pool size
+    /// and thrash exactly the expensive `prepare`s the cache exists to
+    /// amortize. (Shard 0 also takes its share of hash-routed native
+    /// sessions, so with `shards == 1` this is exactly the PR 4 store.)
     pub fn start(config: ServiceConfig) -> Service {
-        let (tx, rx) = channel();
-        let worker = std::thread::Builder::new()
-            .name("gdp-service".into())
-            .spawn(move || scheduler::Scheduler::new(config).run(rx))
-            .expect("spawning the service scheduler thread");
-        Service { handle: ServiceHandle { tx }, worker: Some(worker) }
+        let shards = config.shards.max(1);
+        let route = Arc::new(RouteTable::new(&config));
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let cfg = if shard == 0 {
+                config.clone()
+            } else {
+                ServiceConfig {
+                    max_sessions: (config.max_sessions / shards).max(1),
+                    max_bytes: (config.max_bytes / shards).max(1),
+                    ..config.clone()
+                }
+            };
+            let (tx, rx) = channel();
+            let worker = std::thread::Builder::new()
+                .name(format!("gdp-shard-{shard}"))
+                .spawn(move || scheduler::Scheduler::new(cfg, shard).run(rx))
+                .expect("spawning a service shard thread");
+            txs.push(tx);
+            workers.push(worker);
+        }
+        Service { handle: ServiceHandle { txs, route }, workers }
     }
 
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
     }
 
-    /// Graceful stop: flush pending work, join the scheduler.
+    /// Pool size of this service (for logs and experiments).
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful stop: flush pending work, join every shard.
     pub fn shutdown(mut self) {
         let _ = self.handle.shutdown(); // already-stopped is fine
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -262,7 +469,7 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         let _ = self.handle.shutdown();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -303,7 +510,14 @@ mod tests {
             stats.get("requests").unwrap().get("propagate").unwrap().as_f64(),
             Some(2.0)
         );
-        assert_eq!(h.evict(Some(loaded.session)).unwrap().dropped, 2);
+        // the aggregate rollup names the pool size and carries one block
+        // per shard
+        let shards = ServiceConfig::default().shards;
+        assert_eq!(stats.get("shards").unwrap().as_f64(), Some(shards as f64));
+        assert_eq!(stats.get("per_shard").unwrap().as_arr().unwrap().len(), shards);
+        // evict drops the home shard's session plus every shard's
+        // broadcast instance copy
+        assert_eq!(h.evict(Some(loaded.session)).unwrap().dropped, shards + 1);
         h.shutdown().unwrap();
         // post-shutdown requests fail cleanly
         assert!(h.stats().is_err());
@@ -340,6 +554,17 @@ mod tests {
         assert!(err.0.contains("out of range"), "{err}");
         // and the service is still alive afterwards
         assert!(h.propagate(PropagateRequest::cold(loaded.session)).is_ok());
+        // rejected requests are validated BEFORE the counted session
+        // resolve, so the accounting invariant survives every error
+        // above: hits + misses == served propagates + pending
+        let stats = h.stats().unwrap();
+        let s = stats.get("sessions").unwrap();
+        let hits = s.get("hits").unwrap().as_f64().unwrap();
+        let misses = s.get("misses").unwrap().as_f64().unwrap();
+        let prop = stats.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+        let pending = stats.get("pending").unwrap().as_f64().unwrap();
+        assert_eq!(hits + misses, prop + pending, "a rejected request leaked a hit/miss");
+        assert_eq!(prop, 1.0, "only the one successful propagate is counted");
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Cross-request micro-batching scheduler: the service's single engine
-//! thread.
+//! Cross-request micro-batching scheduler: ONE SHARD of the service's
+//! worker pool (the whole pool, when `shards == 1` — the PR 4 shape).
 //!
 //! Concurrent `propagate` requests against the same prepared session are
 //! queued per [`SessionKey`] and flushed together when either trigger
@@ -17,10 +17,15 @@
 //! semantically identical. Cold (fully marked) and warm (seeded) requests
 //! never mix inside one batched dispatch.
 //!
-//! Everything here runs on one thread: the session store, the registry
-//! (whose XLA runtime is an `Rc`), and all engine execution. Requests
-//! arrive over an mpsc channel and answer through per-request channels,
-//! so no state is shared and no locks exist.
+//! Everything here runs on this shard's one thread: its session-store
+//! slice, its registry (each shard owns one, but only shard 0 is ever
+//! routed a non-`send_safe` engine, so only shard 0 can open the `Rc`
+//! PJRT runtime), and all engine execution for the sessions the
+//! [`ServiceHandle`](super::ServiceHandle) routes here. Requests arrive
+//! over the shard's mpsc channel and answer through per-request
+//! channels, so no state is shared between shards and no locks exist —
+//! the same freedom-from-synchronization argument the paper makes for
+//! rows, applied across sessions.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -31,7 +36,7 @@ use crate::metrics::progress;
 use crate::propagation::registry::{BatchMode, EngineSpec, Registry};
 use crate::propagation::{PreparedProblem as _, PropResult};
 
-use super::metrics::ServiceMetrics;
+use super::metrics::{ServiceMetrics, ShardSnapshot};
 use super::session::{SessionKey, SessionStore};
 use super::{
     EvictReply, Job, LoadReply, PropagateReply, ServiceConfig, ServiceError, ServiceResult,
@@ -59,6 +64,8 @@ struct BatchQueue {
 
 pub(crate) struct Scheduler {
     config: ServiceConfig,
+    /// This shard's index in the pool (0 = primary / XLA shard).
+    shard: usize,
     registry: Registry,
     store: SessionStore,
     queues: HashMap<SessionKey, BatchQueue>,
@@ -66,7 +73,11 @@ pub(crate) struct Scheduler {
 }
 
 impl Scheduler {
-    pub(crate) fn new(config: ServiceConfig) -> Scheduler {
+    /// One pool shard. `config` arrives with the store budgets already
+    /// sized for this shard (hash-routed shards get the pool split;
+    /// shard 0, which hosts every pinned XLA session, keeps the full
+    /// budgets — see [`super::Service::start`]).
+    pub(crate) fn new(config: ServiceConfig, shard: usize) -> Scheduler {
         let registry = match &config.artifact_dir {
             Some(dir) => Registry::with_defaults().with_artifact_dir(dir.clone()),
             None => Registry::with_defaults(),
@@ -74,6 +85,7 @@ impl Scheduler {
         let store = SessionStore::new(config.max_sessions, config.max_bytes);
         Scheduler {
             config,
+            shard,
             registry,
             store,
             queues: HashMap::new(),
@@ -113,27 +125,44 @@ impl Scheduler {
 
     fn handle(&mut self, job: Job) {
         match job {
-            Job::Load { inst, reply } => {
-                self.metrics.loads += 1;
-                let _ = reply.send(self.load(inst));
+            Job::Load { inst, fingerprint, primary, reply } => {
+                if primary {
+                    self.metrics.loads += 1;
+                }
+                let r = self.load(inst, fingerprint, primary);
+                // broadcast copies carry no reply channel; their result
+                // (an already-validated instance) needs no second answer
+                if let Some(reply) = reply {
+                    let _ = reply.send(r);
+                }
             }
             Job::Propagate { req, received, reply } => {
                 if let Err(e) = self.enqueue(req, received, &reply) {
                     let _ = reply.send(Err(e));
                 }
             }
-            Job::Stats { reply } => {
-                self.metrics.stats_calls += 1;
-                let json = self.metrics.to_json(
-                    &self.store.counters,
-                    self.store.num_sessions(),
-                    self.store.num_instances(),
-                    self.store.approx_bytes(),
-                );
-                let _ = reply.send(Ok(json));
+            Job::Stats { primary, reply } => {
+                if primary {
+                    self.metrics.stats_calls += 1;
+                }
+                let _ = reply.send(Ok(ShardSnapshot {
+                    shard: self.shard,
+                    metrics: self.metrics.clone(),
+                    counters: self.store.counters,
+                    sessions: self.store.num_sessions(),
+                    instances: self.store.num_instances(),
+                    bytes: self.store.approx_bytes(),
+                    // requests sitting in a micro-batch window: their
+                    // hit/miss was counted at enqueue, their `propagates`
+                    // tick comes at flush — stats readers balance with
+                    // hits + misses == propagates + pending
+                    pending: self.queues.values().map(|q| q.pending.len()).sum(),
+                }));
             }
-            Job::Evict { session, reply } => {
-                self.metrics.evicts += 1;
+            Job::Evict { session, primary, reply } => {
+                if primary {
+                    self.metrics.evicts += 1;
+                }
                 // answer queued work before dropping its session
                 self.flush_all();
                 let dropped = match session {
@@ -146,10 +175,16 @@ impl Scheduler {
         }
     }
 
-    fn load(&mut self, inst: crate::instance::MipInstance) -> ServiceResult<LoadReply> {
-        inst.validate().map_err(|e| ServiceError(format!("invalid instance: {e}")))?;
+    /// Ingest one (already handle-validated) instance under its
+    /// precomputed fingerprint.
+    fn load(
+        &mut self,
+        inst: std::sync::Arc<crate::instance::MipInstance>,
+        fingerprint: u64,
+        count: bool,
+    ) -> ServiceResult<LoadReply> {
         let (rows, cols, nnz) = (inst.nrows(), inst.ncols(), inst.nnz());
-        let (session, cached) = self.store.load(inst);
+        let (session, cached) = self.store.load_fingerprinted(inst, fingerprint, count);
         Ok(LoadReply { session, cached, rows, cols, nnz })
     }
 
@@ -181,17 +216,22 @@ impl Scheduler {
         if !entry.served {
             return Err(ServiceError(format!("engine {} is not servable", spec.name)));
         }
-        let key = SessionKey::new(req.session, &spec);
-        let cache_hit = self
-            .store
-            .session(&key, &spec, &self.registry)
-            .map(|(_, hit)| hit)
-            .map_err(|e| ServiceError(format!("{e:#}")))?;
+        // validate the request BEFORE the counted session resolve: a
+        // rejected request never reaches a flush, so a hit/miss counted
+        // for it would permanently break the
+        // `hits + misses == propagates + pending` invariant that
+        // `gdp request stats --check` gates on (and a miss would pay a
+        // wasted `prepare`)
         let ncols = self
             .store
             .instance(req.session)
             .map(|i| i.ncols())
-            .expect("instance resident: session() just succeeded");
+            .ok_or_else(|| {
+                ServiceError(format!(
+                    "unknown session {:016x} (load the instance first, or it was evicted)",
+                    req.session
+                ))
+            })?;
         let start = match req.start {
             Some(b) => {
                 if b.lb.len() != ncols || b.ub.len() != ncols {
@@ -203,10 +243,12 @@ impl Scheduler {
                 }
                 b
             }
-            None => Bounds::of(self.store.instance(req.session).unwrap()),
+            None => {
+                Bounds::of(self.store.instance(req.session).expect("resident: checked above"))
+            }
         };
-        // a malformed index would panic the one engine thread and kill
-        // the whole service — reject it as a request error instead
+        // a malformed index would panic the shard's engine thread and
+        // kill its sessions — reject it as a request error instead
         if let Some(vars) = &req.seed_vars {
             if let Some(&v) = vars.iter().find(|&&v| v >= ncols) {
                 return Err(ServiceError(format!(
@@ -214,6 +256,12 @@ impl Scheduler {
                 )));
             }
         }
+        let key = SessionKey::new(req.session, &spec);
+        let cache_hit = self
+            .store
+            .session(&key, &spec, &self.registry)
+            .map(|(_, hit)| hit)
+            .map_err(|e| ServiceError(format!("{e:#}")))?;
         let window = self.config.batch_window;
         // a session with queued work must survive until its flush: pin it
         // so budget pressure from other keys cannot evict it (or its
@@ -270,9 +318,10 @@ impl Scheduler {
             .find(|e| e.name == queue.spec.name)
             .map(|e| e.batch)
             .unwrap_or(BatchMode::Loop);
-        // resolve the session again, uncounted (the per-request hit/miss
-        // was decided at enqueue). The pin above guarantees it is still
-        // resident on this path; the lookup stays fallible for the
+        // resolve the session again, counted under `flush_resolves` (the
+        // per-request hit/miss was decided at enqueue and must keep
+        // partitioning requests exactly). The pin above guarantees it is
+        // still resident on this path; the lookup stays fallible for the
         // explicit-evict path, which flushes before dropping state
         let session = match self.store.session_uncounted(key, &queue.spec, &self.registry) {
             Ok(s) => s,
@@ -439,6 +488,19 @@ mod tests {
         let sched = stats.get("scheduler").unwrap();
         assert_eq!(sched.get("coalesced_max").unwrap().as_f64(), Some(B as f64));
         assert!(sched.get("batched_flushes").unwrap().as_f64().unwrap() >= 1.0);
+        // flush-time re-resolve accounting (the PR 4 gap, now explicit):
+        // one flush_resolves per dispatch, and hit/miss still partitions
+        // the propagate requests exactly
+        let sessions = stats.get("sessions").unwrap();
+        assert_eq!(
+            sessions.get("flush_resolves").unwrap().as_f64(),
+            sched.get("flushes").unwrap().as_f64(),
+            "every flush resolves its session exactly once"
+        );
+        let hits = sessions.get("hits").unwrap().as_f64().unwrap();
+        let misses = sessions.get("misses").unwrap().as_f64().unwrap();
+        let requests = stats.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+        assert_eq!(hits + misses, requests, "flush resolves leaked into hit/miss");
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Transport layer of the propagation service: a threaded
 //! `std::net::TcpListener` accept loop (one thread per connection) plus a
 //! stdio mode for pipes and tests. Both speak the JSON-line protocol in
-//! [`super::proto`]; all propagation work still happens on the one
-//! scheduler thread — connection threads only parse, forward through the
-//! [`ServiceHandle`], and write the response line back.
+//! [`super::proto`]; all propagation work happens on the sharded
+//! scheduler pool — connection threads only parse, forward through the
+//! [`ServiceHandle`] (which routes each propagate to its session's home
+//! shard), and write the response line back.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

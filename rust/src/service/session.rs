@@ -11,6 +11,7 @@
 //! hit/miss/eviction counters feed the `stats` wire op.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -18,40 +19,57 @@ use crate::instance::{Bounds, MipInstance};
 use crate::propagation::registry::{EngineSpec, Registry};
 use crate::propagation::{Engine, PreparedProblem, PropResult};
 
+/// The one FNV-1a core shared by [`instance_fingerprint`] and
+/// [`shard_for`]: both must stay deterministic across processes, and a
+/// fix to the fold must reach both.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Fnv1a {
+        Fnv1a(Self::OFFSET)
+    }
+
+    fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
 /// Content fingerprint of the propagation-relevant parts of an instance:
 /// matrix structure and coefficients, sides, bounds and integrality.
 /// Names and the objective are excluded — two instances that propagate
 /// identically share sessions. FNV-1a over the raw bit patterns.
 pub fn instance_fingerprint(inst: &MipInstance) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
-    };
-    eat(&(inst.nrows() as u64).to_le_bytes());
-    eat(&(inst.ncols() as u64).to_le_bytes());
+    let mut h = Fnv1a::new();
+    h.eat(&(inst.nrows() as u64).to_le_bytes());
+    h.eat(&(inst.ncols() as u64).to_le_bytes());
     for &p in &inst.matrix.row_ptr {
-        eat(&(p as u64).to_le_bytes());
+        h.eat(&(p as u64).to_le_bytes());
     }
     for &c in &inst.matrix.col_idx {
-        eat(&(c as u64).to_le_bytes());
+        h.eat(&(c as u64).to_le_bytes());
     }
     for &v in &inst.matrix.vals {
-        eat(&v.to_bits().to_le_bytes());
+        h.eat(&v.to_bits().to_le_bytes());
     }
     for vs in [&inst.lhs, &inst.rhs, &inst.lb, &inst.ub] {
         for &v in vs {
-            eat(&v.to_bits().to_le_bytes());
+            h.eat(&v.to_bits().to_le_bytes());
         }
     }
     for t in &inst.var_types {
-        eat(&[(*t == crate::instance::VarType::Integer) as u8]);
+        h.eat(&[(*t == crate::instance::VarType::Integer) as u8]);
     }
-    h
+    h.finish()
 }
 
 /// Approximate resident bytes of one instance (CSR arrays + sides +
@@ -160,6 +178,26 @@ impl SessionKey {
     pub fn new(fingerprint: u64, spec: &EngineSpec) -> SessionKey {
         SessionKey { fingerprint, engine: spec.cache_key() }
     }
+
+    /// Home shard of this session in a pool of `shards` workers:
+    /// FNV-1a over `fingerprint × cache_key`, reduced mod the pool size.
+    /// A pure function of the key — the same instance under the same
+    /// engine spec lands on the same shard in every process, across
+    /// restarts, so warm-start reuse and coalescing semantics survive
+    /// sharding unchanged. Callers must pin non-`send_safe` engines
+    /// (XLA) to shard 0 instead of calling this.
+    pub fn shard(&self, shards: usize) -> usize {
+        shard_for(self.fingerprint, &self.engine, shards)
+    }
+}
+
+/// See [`SessionKey::shard`]. Deterministic (FNV-1a, no per-process
+/// seeding) so routing is stable across restarts.
+pub fn shard_for(fingerprint: u64, cache_key: &str, shards: usize) -> usize {
+    let mut h = Fnv1a::new();
+    h.eat(&fingerprint.to_le_bytes());
+    h.eat(cache_key.as_bytes());
+    (h.finish() % shards.max(1) as u64) as usize
 }
 
 /// Store counters surfaced through the `stats` wire op.
@@ -172,8 +210,29 @@ pub struct StoreCounters {
     pub hits: u64,
     /// Propagate requests that had to pay `prepare`.
     pub misses: u64,
+    /// Internal flush-time session re-resolves
+    /// ([`SessionStore::session_uncounted`]). The per-request cache
+    /// outcome is decided at enqueue, so these lookups must NOT move
+    /// `hits`/`misses` (which partition propagate requests exactly) —
+    /// but they are counted here explicitly instead of vanishing, so
+    /// `stats` can show the scheduler's internal lookup traffic and a
+    /// test can pin the accounting.
+    pub flush_resolves: u64,
     /// Sessions or instances dropped under budget pressure.
     pub evictions: u64,
+}
+
+impl StoreCounters {
+    /// Fold another shard's store counters into this one (all counters
+    /// are monotone sums, so the cross-shard rollup is plain addition).
+    pub fn merge(&mut self, other: &StoreCounters) {
+        self.instance_hits += other.instance_hits;
+        self.instance_loads += other.instance_loads;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.flush_resolves += other.flush_resolves;
+        self.evictions += other.evictions;
+    }
 }
 
 struct SessionEntry {
@@ -182,8 +241,15 @@ struct SessionEntry {
     bytes: usize,
 }
 
+/// A resident instance. Held as an `Arc`: the sharded service broadcasts
+/// every `load` to all shards (any engine spec may route its session to
+/// any shard), and sharing the allocation keeps pool memory at ONE copy
+/// per instance instead of one per shard. Each shard still *charges* the
+/// full approximate bytes against its own budget — conservative on
+/// purpose: real pool memory is at most what any single shard accounts
+/// for, at the cost of under-reporting pool-wide instance capacity.
 struct InstanceEntry {
-    inst: MipInstance,
+    inst: Arc<MipInstance>,
     last_used: u64,
     bytes: usize,
 }
@@ -233,13 +299,37 @@ impl SessionStore {
     }
 
     /// Ingest an instance; returns `(fingerprint, already_resident)`.
-    pub fn load(&mut self, inst: MipInstance) -> (u64, bool) {
+    /// `count` drives the instance hit/load counters: the sharded service
+    /// broadcasts every `load` to all shards so any shard can later
+    /// prepare a session for it, but only the primary shard counts the
+    /// client-visible request — otherwise the aggregate rollup would
+    /// report N× the loads the clients actually issued.
+    pub fn load(&mut self, inst: Arc<MipInstance>, count: bool) -> (u64, bool) {
         let fp = instance_fingerprint(&inst);
+        self.load_fingerprinted(inst, fp, count)
+    }
+
+    /// [`SessionStore::load`] with the fingerprint precomputed by the
+    /// caller: the sharded service fingerprints once per client load and
+    /// broadcasts the result, instead of re-hashing O(nnz) on every
+    /// shard. `fingerprint` MUST be [`instance_fingerprint`] of `inst`
+    /// (crate-internal callers only compute it with that function).
+    pub fn load_fingerprinted(
+        &mut self,
+        inst: Arc<MipInstance>,
+        fingerprint: u64,
+        count: bool,
+    ) -> (u64, bool) {
+        let fp = fingerprint;
         let tick = self.next_tick();
-        self.counters.instance_loads += 1;
+        if count {
+            self.counters.instance_loads += 1;
+        }
         if let Some(e) = self.instances.get_mut(&fp) {
             e.last_used = tick;
-            self.counters.instance_hits += 1;
+            if count {
+                self.counters.instance_hits += 1;
+            }
             return (fp, true);
         }
         let bytes = approx_instance_bytes(&inst);
@@ -249,7 +339,7 @@ impl SessionStore {
     }
 
     pub fn instance(&self, fingerprint: u64) -> Option<&MipInstance> {
-        self.instances.get(&fingerprint).map(|e| &e.inst)
+        self.instances.get(&fingerprint).map(|e| e.inst.as_ref())
     }
 
     /// The cached session for `key`, or prepare one from the loaded
@@ -265,10 +355,13 @@ impl SessionStore {
         self.session_inner(key, spec, registry, true)
     }
 
-    /// Like [`SessionStore::session`] but without touching the hit/miss
-    /// counters: the scheduler re-resolves a session at flush time (it
-    /// may have been evicted since enqueue), and that internal lookup
-    /// must not distort the per-request cache statistics.
+    /// Like [`SessionStore::session`] but counting under
+    /// `flush_resolves` instead of hit/miss: the scheduler re-resolves a
+    /// session at flush time (it may have been evicted since enqueue),
+    /// and that internal lookup must not distort the per-request cache
+    /// statistics — `hits + misses` partitions propagate requests
+    /// exactly. It is still accounted, explicitly, so the lookup traffic
+    /// is visible in `stats`.
     pub fn session_uncounted(
         &mut self,
         key: &SessionKey,
@@ -285,6 +378,9 @@ impl SessionStore {
         registry: &Registry,
         count: bool,
     ) -> Result<(&mut OwnedSession, bool)> {
+        if !count {
+            self.counters.flush_resolves += 1;
+        }
         let tick = self.next_tick();
         if self.sessions.contains_key(key) {
             if count {
@@ -305,11 +401,13 @@ impl SessionStore {
             })
             .map(|e| {
                 e.last_used = tick;
-                e.inst.clone()
+                Arc::clone(&e.inst)
             })?;
         let engine = registry.create(spec)?;
         let bytes = 2 * approx_instance_bytes(&inst); // instance clone + scratch
-        let session = OwnedSession::prepare(engine.as_ref(), inst)?;
+        // the session owns a deep copy (it must outlive store eviction of
+        // the shared instance entry)
+        let session = OwnedSession::prepare(engine.as_ref(), (*inst).clone())?;
         if count {
             self.counters.misses += 1;
         }
@@ -450,9 +548,9 @@ mod tests {
         let registry = Registry::with_defaults();
         let mut store = SessionStore::new(8, usize::MAX);
         let spec = EngineSpec::new("cpu_seq");
-        let (fp, resident) = store.load(inst(5));
+        let (fp, resident) = store.load(Arc::new(inst(5)), true);
         assert!(!resident);
-        let (fp2, resident) = store.load(inst(5));
+        let (fp2, resident) = store.load(Arc::new(inst(5)), true);
         assert_eq!((fp, true), (fp2, resident));
         let key = SessionKey::new(fp, &spec);
         let (_, hit) = store.session(&key, &spec, &registry).unwrap();
@@ -477,7 +575,7 @@ mod tests {
         let registry = Registry::with_defaults();
         let mut store = SessionStore::new(2, usize::MAX);
         let spec = EngineSpec::new("cpu_seq");
-        let fps: Vec<u64> = (0..3).map(|s| store.load(inst(s)).0).collect();
+        let fps: Vec<u64> = (0..3).map(|s| store.load(Arc::new(inst(s)), true).0).collect();
         for &fp in &fps {
             store.session(&SessionKey::new(fp, &spec), &spec, &registry).unwrap();
         }
@@ -498,7 +596,7 @@ mod tests {
         let mut store = SessionStore::new(64, 4 * one);
         let spec = EngineSpec::new("cpu_seq");
         for s in 0..4 {
-            let (fp, _) = store.load(inst(s));
+            let (fp, _) = store.load(Arc::new(inst(s)), true);
             store.session(&SessionKey::new(fp, &spec), &spec, &registry).unwrap();
         }
         assert!(store.counters.evictions > 0, "bytes budget never triggered");
@@ -510,7 +608,7 @@ mod tests {
         let registry = Registry::with_defaults();
         let mut store = SessionStore::new(2, usize::MAX);
         let spec = EngineSpec::new("cpu_seq");
-        let fps: Vec<u64> = (0..3).map(|s| store.load(inst(s)).0).collect();
+        let fps: Vec<u64> = (0..3).map(|s| store.load(Arc::new(inst(s)), true).0).collect();
         let pinned_key = SessionKey::new(fps[0], &spec);
         store.session(&pinned_key, &spec, &registry).unwrap();
         store.pin(&pinned_key);
@@ -525,10 +623,76 @@ mod tests {
         // unpinned and LRU again (touch the other survivor first), it is
         // evictable
         store.session(&SessionKey::new(fps[2], &spec), &spec, &registry).unwrap();
-        let (fp3, _) = store.load(inst(7));
+        let (fp3, _) = store.load(Arc::new(inst(7)), true);
         store.session(&SessionKey::new(fp3, &spec), &spec, &registry).unwrap();
         let (_, hit) = store.session(&pinned_key, &spec, &registry).unwrap();
         assert!(!hit, "unpinned LRU session should have been the victim");
+    }
+
+    /// The PR 4 fix, pinned: flush-time re-resolves are accounted under
+    /// `flush_resolves`, and NEVER move `hits`/`misses` — those must keep
+    /// partitioning client propagate requests exactly.
+    #[test]
+    fn flush_time_resolve_is_counted_explicitly_not_as_hit_or_miss() {
+        let registry = Registry::with_defaults();
+        let mut store = SessionStore::new(8, usize::MAX);
+        let spec = EngineSpec::new("cpu_seq");
+        let (fp, _) = store.load(Arc::new(inst(4)), true);
+        let key = SessionKey::new(fp, &spec);
+        // two client requests: one miss (prepare), one hit
+        store.session(&key, &spec, &registry).unwrap();
+        store.session(&key, &spec, &registry).unwrap();
+        assert_eq!((store.counters.hits, store.counters.misses), (1, 1));
+        assert_eq!(store.counters.flush_resolves, 0);
+        // three scheduler-internal flush resolves: counted explicitly,
+        // hit/miss untouched
+        for _ in 0..3 {
+            store.session_uncounted(&key, &spec, &registry).unwrap();
+        }
+        assert_eq!(store.counters.flush_resolves, 3);
+        assert_eq!((store.counters.hits, store.counters.misses), (1, 1));
+        // even a flush resolve that has to re-prepare (evicted session)
+        // counts as a flush resolve, not a miss
+        store.evict_fingerprint(fp);
+        store.load(Arc::new(inst(4)), true);
+        store.session_uncounted(&key, &spec, &registry).unwrap();
+        assert_eq!(store.counters.flush_resolves, 4);
+        assert_eq!((store.counters.hits, store.counters.misses), (1, 1));
+    }
+
+    /// Uncounted broadcast ingest (non-primary shards) leaves the
+    /// instance counters alone but still makes the instance resident.
+    #[test]
+    fn uncounted_load_ingests_without_counting() {
+        let mut store = SessionStore::new(8, usize::MAX);
+        let (fp, resident) = store.load(Arc::new(inst(6)), false);
+        assert!(!resident);
+        let (_, resident) = store.load(Arc::new(inst(6)), false);
+        assert!(resident, "uncounted load must still ingest");
+        assert_eq!(store.counters.instance_loads, 0);
+        assert_eq!(store.counters.instance_hits, 0);
+        assert!(store.instance(fp).is_some());
+    }
+
+    #[test]
+    fn shard_routing_is_deterministic_and_in_range() {
+        let spec = EngineSpec::new("cpu_seq");
+        for fp in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            let key = SessionKey::new(fp, &spec);
+            for shards in [1usize, 2, 3, 4, 8] {
+                let s = key.shard(shards);
+                assert!(s < shards);
+                // pure function: same key, same pool size, same shard —
+                // "across restarts" by construction (no process seeding)
+                assert_eq!(s, SessionKey::new(fp, &spec).shard(shards));
+                assert_eq!(s, shard_for(fp, &spec.cache_key(), shards));
+            }
+            assert_eq!(key.shard(1), 0, "a 1-shard pool has one home");
+        }
+        // different engine specs may (and for these keys do not have to)
+        // differ; the cache key is part of the hash input
+        let a = shard_for(7, &EngineSpec::new("cpu_seq").cache_key(), 4);
+        assert!(a < 4);
     }
 
     #[test]
@@ -536,7 +700,7 @@ mod tests {
         let registry = Registry::with_defaults();
         let mut store = SessionStore::new(8, usize::MAX);
         let spec = EngineSpec::new("cpu_seq");
-        let (fp, _) = store.load(inst(9));
+        let (fp, _) = store.load(Arc::new(inst(9)), true);
         let key = SessionKey::new(fp, &spec);
         store.session(&key, &spec, &registry).unwrap();
         assert_eq!(store.evict_fingerprint(fp), 2); // instance + session

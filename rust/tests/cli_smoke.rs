@@ -1,9 +1,12 @@
 //! CLI end-to-end smokes driving the real `gdp` binary
 //! (`CARGO_BIN_EXE_gdp`): the `inspect` row-class histogram on BOTH
 //! input formats (one code path for MPS and OPB), `engines --json`
-//! carrying the `served` capability, and the serving stack through
-//! `gdp serve --stdio` — load, propagate, stats, shutdown over the wire
-//! with the propagate response checked against a direct in-process run.
+//! carrying the `served` + `send_safe` capabilities, the serving stack
+//! through `gdp serve --stdio` — load, propagate, stats, shutdown over
+//! the wire with the propagate response checked against a direct
+//! in-process run, a sharded (`--shards 4`) variant whose stats rollup
+//! must stay consistent, and the `gdp bench-check` regression gate
+//! (including the injected-slowdown self-test that proves it can fail).
 
 use std::io::Write as _;
 use std::process::{Command, Stdio};
@@ -70,6 +73,10 @@ fn engines_json_exposes_served_capability() {
         assert!(
             matches!(e.get("served"), Some(Json::Bool(_))),
             "entry without served capability: {e:?}"
+        );
+        assert!(
+            matches!(e.get("send_safe"), Some(Json::Bool(_))),
+            "entry without send_safe capability: {e:?}"
         );
     }
 }
@@ -152,4 +159,139 @@ fn serve_stdio_load_propagate_stats_shutdown_round_trip() {
             .as_f64(),
         Some(1.0)
     );
+}
+
+/// The sharded server over the real binary: `gdp serve --stdio
+/// --shards 4`, several propagates on mixed instances, and a stats
+/// rollup whose aggregate AND per-shard hit/miss partitions must balance.
+#[test]
+fn serve_stdio_sharded_pool_keeps_stats_consistent() {
+    let insts: Vec<gdp::instance::MipInstance> = (0..3)
+        .map(|seed| {
+            let i = gen::generate(&GenConfig { nrows: 25, ncols: 25, seed, ..Default::default() });
+            // the server sees the instance after an MPS round-trip
+            gdp::mps::read_mps_str(&gdp::mps::write_mps(&i)).expect("round-trip")
+        })
+        .collect();
+
+    let mut child = gdp_bin()
+        .args(["serve", "--stdio", "--shards", "4", "--batch-window-us", "0"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn gdp serve --stdio --shards 4");
+
+    let mut stdin = child.stdin.take().unwrap();
+    let mut expected_requests = 0usize;
+    for inst in &insts {
+        let load = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str(gdp::mps::write_mps(inst))),
+        ]);
+        writeln!(stdin, "{}", load.to_string()).unwrap();
+        let session = gdp::service::proto::session_to_hex(
+            gdp::service::session::instance_fingerprint(inst),
+        );
+        // two propagates per instance: one miss + one hit on its home shard
+        for _ in 0..2 {
+            writeln!(stdin, r#"{{"v":1,"op":"propagate","session":"{session}"}}"#).unwrap();
+            expected_requests += 1;
+        }
+    }
+    writeln!(stdin, r#"{{"v":1,"op":"stats"}}"#).unwrap();
+    writeln!(stdin, r#"{{"v":1,"op":"shutdown"}}"#).unwrap();
+    drop(stdin);
+
+    let out = child.wait_with_output().expect("serve exited");
+    assert!(out.status.success(), "gdp serve --shards 4 failed");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<Json> =
+        stdout.lines().map(|l| Json::parse(l).expect("response line")).collect();
+    for l in &lines {
+        assert_eq!(l.get("ok"), Some(&Json::Bool(true)), "{l:?}");
+    }
+    let stats = lines[lines.len() - 2].get("result").unwrap();
+    assert_eq!(stats.get("shards").unwrap().as_f64(), Some(4.0));
+    let agg = |path: [&str; 2]| stats.get(path[0]).unwrap().get(path[1]).unwrap().as_f64().unwrap();
+    assert_eq!(agg(["requests", "propagate"]), expected_requests as f64);
+    let (hits, misses) = (agg(["sessions", "hits"]), agg(["sessions", "misses"]));
+    assert_eq!(hits + misses, expected_requests as f64, "aggregate partition broke");
+    assert_eq!(misses, insts.len() as f64, "one prepare per instance, pool-wide");
+    let per = stats.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), 4);
+    for (i, shard) in per.iter().enumerate() {
+        let p = shard.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+        let h = shard.get("sessions").unwrap().get("hits").unwrap().as_f64().unwrap();
+        let m = shard.get("sessions").unwrap().get("misses").unwrap().as_f64().unwrap();
+        assert_eq!(h + m, p, "shard {i} partition broke");
+    }
+}
+
+/// The benchmark-regression gate end to end: identical JSON passes, an
+/// injected 3x slowdown fails — proving the gate can actually trip.
+#[test]
+fn bench_check_gate_passes_clean_and_trips_on_injected_slowdown() {
+    let dir = tmpdir("bench_check");
+    let (base, fresh) = (dir.join("baselines"), dir.join("fresh"));
+    std::fs::create_dir_all(&base).unwrap();
+    std::fs::create_dir_all(&fresh).unwrap();
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("pb".into())),
+        (
+            "results",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("engine", Json::Str("cpu_seq".into())),
+                    ("family", Json::Str("pb_packing".into())),
+                    ("generic_s", Json::Num(1.2e-3)),
+                    ("specialized_s", Json::Num(8.0e-4)),
+                    ("speedup", Json::Num(1.5)),
+                ]),
+                Json::obj(vec![
+                    ("engine", Json::Str("gpu_model".into())),
+                    ("family", Json::Str("pb_mixed".into())),
+                    ("generic_s", Json::Num(2.0e-3)),
+                    ("specialized_s", Json::Num(1.5e-3)),
+                    ("speedup", Json::Num(1.33)),
+                ]),
+            ]),
+        ),
+    ])
+    .to_string();
+    std::fs::write(base.join("BENCH_pb.json"), &payload).unwrap();
+    std::fs::write(fresh.join("BENCH_pb.json"), &payload).unwrap();
+
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "bench-check".to_string(),
+            "--baseline".to_string(),
+            base.to_string_lossy().into_owned(),
+            "--fresh".to_string(),
+            fresh.to_string_lossy().into_owned(),
+        ];
+        args.extend(extra.iter().map(|s| s.to_string()));
+        gdp_bin().args(&args).output().expect("run gdp bench-check")
+    };
+
+    let clean = run(&[]);
+    assert!(
+        clean.status.success(),
+        "identical timings must pass the gate:\n{}{}",
+        String::from_utf8_lossy(&clean.stdout),
+        String::from_utf8_lossy(&clean.stderr)
+    );
+    let tripped = run(&["--injected-slowdown", "3.0"]);
+    assert!(
+        !tripped.status.success(),
+        "a 3x systematic slowdown must fail the 2.5x gate:\n{}",
+        String::from_utf8_lossy(&tripped.stdout)
+    );
+    assert!(
+        String::from_utf8_lossy(&tripped.stderr).contains("REGRESSION GATE FAILED"),
+        "gate failure must be loud"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

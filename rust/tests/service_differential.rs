@@ -11,7 +11,15 @@
 //! checks the section 4.3 tolerance instead.
 //!
 //! Also under test: the `SessionStore` under concurrency (parallel
-//! clients on mixed instances) and LRU eviction under budget pressure.
+//! clients on mixed instances), LRU eviction under budget pressure, and
+//! the sharded worker pool — a 4-shard server under parallel
+//! mixed-instance, mixed-engine clients must return bit-identical
+//! results with `hits + misses == requests` per shard and in the
+//! aggregate rollup, and with no session ever prepared on two shards.
+//!
+//! `ServiceConfig::default()` reads `GDP_TEST_SHARDS` (the CI matrix
+//! hook), so every test here that does not pin `shards` explicitly runs
+//! at both pool sizes of the build-test matrix.
 
 use std::time::Duration;
 
@@ -248,13 +256,155 @@ fn parallel_clients_on_mixed_instances_get_consistent_answers() {
     service.shutdown();
 }
 
+/// The tentpole acceptance test: a 4-shard server under parallel
+/// mixed-instance, mixed-engine clients. Every reply must be
+/// bit-identical to the deterministic direct run, the hit/miss partition
+/// must hold per shard AND in the aggregate rollup, and no session may
+/// be prepared on more than one shard (deterministic routing means each
+/// distinct (instance, engine) pair pays exactly one `prepare`,
+/// pool-wide).
+#[test]
+fn four_shard_pool_serves_parallel_mixed_clients_exactly() {
+    const SHARDS: usize = 4;
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 6;
+    let service = Service::start(ServiceConfig {
+        shards: SHARDS,
+        // roomy budget: every (instance, engine) session fits its home
+        // shard even under a pathological routing skew, so the
+        // one-prepare-per-pair assertion below cannot be blurred by
+        // budget eviction
+        max_sessions: 64 * SHARDS,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let suite: Vec<MipInstance> = small_suite();
+    // deterministic engines only (threads(1)), so every reply is
+    // bit-comparable even under real cross-shard concurrency
+    let specs =
+        [EngineSpec::new("cpu_seq").threads(1), EngineSpec::new("gpu_model").threads(1)];
+
+    // oracle per (instance, engine)
+    let registry = Registry::with_defaults();
+    let oracles: Vec<Vec<PropResult>> = suite
+        .iter()
+        .map(|i| specs.iter().map(|s| registry.create(s).unwrap().propagate(i)).collect())
+        .collect();
+    let sessions: Vec<u64> =
+        suite.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let handle: ServiceHandle = handle.clone();
+            let sessions = sessions.clone();
+            let specs = &specs;
+            let oracles = &oracles;
+            s.spawn(move || {
+                // engine fixed per client, instance rotating: together the
+                // 8 clients x 6 requests cover every (instance, engine)
+                // pair (a rotating `e = (c + r) % 2` would correlate with
+                // `k` — 2 divides 6 — and silently skip half the pairs)
+                let e = c % specs.len();
+                for r in 0..REQUESTS {
+                    let k = (c + r) % sessions.len();
+                    let reply = handle
+                        .propagate(
+                            PropagateRequest::cold(sessions[k]).with_spec(specs[e].clone()),
+                        )
+                        .expect("served propagate under sharded load");
+                    assert_eq!(reply.status, oracles[k][e].status);
+                    assert_eq!(reply.rounds, oracles[k][e].rounds);
+                    assert_eq!(reply.bounds.lb, oracles[k][e].bounds.lb);
+                    assert_eq!(reply.bounds.ub, oracles[k][e].bounds.ub);
+                }
+            });
+        }
+    });
+
+    let stats = handle.stats().expect("stats");
+    assert_eq!(stats.get("shards").unwrap().as_f64(), Some(SHARDS as f64));
+    let total = (CLIENTS * REQUESTS) as f64;
+    assert_eq!(
+        stats.get("requests").unwrap().get("propagate").unwrap().as_f64(),
+        Some(total)
+    );
+    // aggregate partition
+    let sessions_stats = stats.get("sessions").unwrap();
+    let hits = sessions_stats.get("hits").unwrap().as_f64().unwrap();
+    let misses = sessions_stats.get("misses").unwrap().as_f64().unwrap();
+    assert_eq!(hits + misses, total, "aggregate hit/miss must partition requests");
+    // no cross-shard session duplication: one prepare per distinct
+    // (instance, engine) pair across the WHOLE pool, and exactly that
+    // many live sessions pool-wide
+    let distinct = (suite.len() * specs.len()) as f64;
+    assert_eq!(misses, distinct, "a session was prepared on more than one shard");
+    assert_eq!(
+        sessions_stats.get("live").unwrap().as_f64(),
+        Some(distinct),
+        "pool-wide live sessions != distinct (instance, engine) pairs"
+    );
+    // per-shard partition, and shard blocks summing to the aggregate
+    let per = stats.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per.len(), SHARDS);
+    let (mut sum_prop, mut sum_live) = (0.0, 0.0);
+    for (i, shard) in per.iter().enumerate() {
+        let p = shard.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+        let h = shard.get("sessions").unwrap().get("hits").unwrap().as_f64().unwrap();
+        let m = shard.get("sessions").unwrap().get("misses").unwrap().as_f64().unwrap();
+        assert_eq!(h + m, p, "shard {i}: hits+misses != its propagate requests");
+        sum_prop += p;
+        sum_live += shard.get("sessions").unwrap().get("live").unwrap().as_f64().unwrap();
+    }
+    assert_eq!(sum_prop, total, "shard propagate counts must sum to the total");
+    assert_eq!(sum_live, distinct, "shard live sessions must sum to the distinct pairs");
+    service.shutdown();
+}
+
+/// Shard isolation: evicting one fingerprint drops state on its home
+/// shard (and the broadcast instance copies) but never disturbs another
+/// fingerprint's session on any other shard — those must still be cache
+/// hits afterwards.
+#[test]
+fn evicting_one_fingerprint_leaves_other_shards_sessions_alone() {
+    const SHARDS: usize = 4;
+    let service = Service::start(ServiceConfig {
+        shards: SHARDS,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let suite: Vec<MipInstance> = small_suite();
+    let sessions: Vec<u64> =
+        suite.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+    for &s in &sessions {
+        let r = handle.propagate(PropagateRequest::cold(s)).expect("prepare");
+        assert!(!r.cache_hit);
+    }
+    // drop the first fingerprint everywhere
+    let dropped = handle.evict(Some(sessions[0])).expect("evict").dropped;
+    assert!(dropped >= 2, "home shard session + instance copies, got {dropped}");
+    // every OTHER session is untouched: still a hit, wherever it lives
+    for &s in &sessions[1..] {
+        let r = handle.propagate(PropagateRequest::cold(s)).expect("survivor");
+        assert!(r.cache_hit, "evict leaked across sessions/shards");
+    }
+    // and the evicted one is gone (re-load, re-prepare)
+    handle.load(suite[0].clone()).expect("reload");
+    let r = handle.propagate(PropagateRequest::cold(sessions[0])).expect("re-propagate");
+    assert!(!r.cache_hit, "evicted session cannot be a cache hit");
+    service.shutdown();
+}
+
 /// LRU eviction under budget pressure: with room for two sessions, a
 /// third instance evicts the least recently used one; the evicted session
-/// still serves correctly afterwards (transparent re-prepare).
+/// still serves correctly afterwards (transparent re-prepare). Pinned to
+/// one shard: the LRU order is a per-shard property, and with a sharded
+/// pool the three sessions could land on distinct shards and never feel
+/// the pressure this test is about.
 #[test]
 fn lru_eviction_under_budget_pressure_stays_correct() {
     let service = Service::start(ServiceConfig {
         max_sessions: 2,
+        shards: 1,
         ..ServiceConfig::default()
     });
     let handle = service.handle();

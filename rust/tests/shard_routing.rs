@@ -1,0 +1,105 @@
+//! Shard-routing determinism: the worker pool pins a session to its home
+//! shard by a pure hash of `instance_fingerprint × cache_key`
+//! (`gdp::service::session::shard_for`), so routing must be stable
+//! across processes ("restarts"), independent of request order, and
+//! in-range for any pool size. Property-tested over random keys, and
+//! end-to-end over two freshly started 4-shard services.
+
+use gdp::gen::{self, GenConfig};
+use gdp::instance::MipInstance;
+use gdp::propagation::registry::EngineSpec;
+use gdp::service::session::{instance_fingerprint, shard_for, SessionKey};
+use gdp::service::{PropagateRequest, Service, ServiceConfig};
+use gdp::testkit::{prop, Config};
+
+#[test]
+fn shard_for_is_pure_in_range_and_key_sensitive() {
+    prop("shard_for determinism", Config::cases(128), |rng| {
+        let fingerprint = rng.next_u64();
+        // a cache-key-shaped string with random knob content
+        let spec = EngineSpec::new(["cpu_seq", "cpu_omp", "gpu_model"][rng.below(3)])
+            .threads(rng.range(1, 16))
+            .max_rounds(rng.range(1, 500) as u32);
+        let key = SessionKey::new(fingerprint, &spec);
+        for shards in [1usize, 2, 3, 4, 5, 8] {
+            let home = key.shard(shards);
+            assert!(home < shards, "shard {home} out of range for pool {shards}");
+            // pure: recomputing from scratch (a "restart") agrees
+            assert_eq!(home, SessionKey::new(fingerprint, &spec).shard(shards));
+            assert_eq!(home, shard_for(fingerprint, &spec.cache_key(), shards));
+        }
+        // the engine cache key is part of the routing input: two specs
+        // with different cache keys are allowed to land apart (and do,
+        // for enough keys — checked in aggregate below)
+        assert_eq!(key.shard(1), 0);
+    });
+}
+
+#[test]
+fn shard_for_spreads_keys_over_the_pool() {
+    // not a uniformity proof — just that the hash is not degenerate:
+    // 256 random keys over 4 shards must touch every shard
+    const SHARDS: usize = 4;
+    let mut counts = [0usize; SHARDS];
+    let spec = EngineSpec::new("cpu_seq");
+    let mut x = 0x1234_5678_9abc_def0u64;
+    for _ in 0..256 {
+        // splitmix64 step
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        counts[shard_for(z ^ (z >> 31), &spec.cache_key(), SHARDS)] += 1;
+    }
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(c > 0, "shard {i} never chosen in 256 keys: degenerate hash");
+    }
+}
+
+/// Per-shard misses after one propagate per instance tell which shard
+/// prepared (owns) each session.
+fn shard_miss_profile(shards: usize, insts: &[MipInstance], order: &[usize]) -> Vec<f64> {
+    let service = Service::start(ServiceConfig { shards, ..ServiceConfig::default() });
+    let handle = service.handle();
+    let sessions: Vec<u64> =
+        insts.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+    for &k in order {
+        let r = handle.propagate(PropagateRequest::cold(sessions[k])).expect("propagate");
+        assert!(!r.cache_hit, "fresh service cannot have a cached session");
+    }
+    let stats = handle.stats().expect("stats");
+    let profile = stats
+        .get("per_shard")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("sessions").unwrap().get("misses").unwrap().as_f64().unwrap())
+        .collect();
+    service.shutdown();
+    profile
+}
+
+/// The restart property, end to end: two freshly started 4-shard
+/// services, fed the same instances in different request orders, place
+/// every session on the same shard (identical per-shard miss profiles).
+#[test]
+fn same_fingerprints_land_on_same_shards_across_restarts() {
+    const SHARDS: usize = 4;
+    let insts: Vec<MipInstance> = (0..6)
+        .map(|seed| {
+            gen::generate(&GenConfig { nrows: 25, ncols: 25, seed, ..Default::default() })
+        })
+        .collect();
+    let first = shard_miss_profile(SHARDS, &insts, &[0, 1, 2, 3, 4, 5]);
+    let second = shard_miss_profile(SHARDS, &insts, &[5, 3, 1, 4, 2, 0]);
+    assert_eq!(first, second, "routing changed across a restart / request reorder");
+    assert_eq!(first.iter().sum::<f64>(), insts.len() as f64, "one prepare per instance");
+    // and the observed placement matches the pure routing function
+    let spec = EngineSpec::new("cpu_seq");
+    let mut expected = vec![0.0; SHARDS];
+    for inst in &insts {
+        expected[shard_for(instance_fingerprint(inst), &spec.cache_key(), SHARDS)] += 1.0;
+    }
+    assert_eq!(first, expected, "service placement disagrees with shard_for");
+}
