@@ -38,6 +38,18 @@ pub const DEFAULT_TOLERANCE: f64 = 2.5;
 /// pure scheduler noise.
 const FLOOR_S: f64 = 1e-6;
 
+/// Reject a nonsense `--tolerance` before any files are read. The gate
+/// compares a geometric mean of slowdown ratios against this bound, so
+/// anything that is not a finite ratio strictly above 1.0 is a dead
+/// gate: NaN/inf pass everything, and a bound at or below 1.0 fails
+/// even a bit-identical rerun.
+pub fn validate_tolerance(tolerance: f64) -> Result<()> {
+    if !tolerance.is_finite() || tolerance <= 1.0 {
+        return Err(anyhow!("--tolerance must be a finite slowdown ratio > 1.0, got {tolerance}"));
+    }
+    Ok(())
+}
+
 /// Comparison result for one bench group (one `BENCH_*.json` file).
 #[derive(Debug, Clone)]
 pub struct GroupReport {
@@ -83,19 +95,34 @@ fn record_id(rec: &Json) -> String {
     parts.join("|")
 }
 
-/// The timing metrics of one record: `*_s` fields holding numbers.
-fn metrics_of(rec: &Json) -> BTreeMap<String, f64> {
+/// The timing metrics of one record: `*_s` fields. A timing that is
+/// not a finite number is an error, not a skip: silently dropping it
+/// would shrink the comparison set and weaken the gate unnoticed. This
+/// also catches the JSON writer's `"NaN"`/`"inf"` string sentinels
+/// (`as_f64` returns `None` for strings), which is how a poisoned
+/// timing actually looks on disk.
+fn metrics_of(rec: &Json) -> Result<BTreeMap<String, f64>> {
     let mut out = BTreeMap::new();
     if let Json::Obj(map) = rec {
         for (k, v) in map {
-            if k.ends_with("_s") {
-                if let Some(x) = v.as_f64() {
+            if !k.ends_with("_s") {
+                continue;
+            }
+            match v.as_f64() {
+                Some(x) if x.is_finite() => {
                     out.insert(k.clone(), x);
+                }
+                _ => {
+                    return Err(anyhow!(
+                        "record [{}]: timing metric {k} is {}, not a finite number",
+                        record_id(rec),
+                        v.to_string()
+                    ));
                 }
             }
         }
     }
-    out
+    Ok(out)
 }
 
 fn results_of(doc: &Json) -> Result<&[Json]> {
@@ -127,14 +154,15 @@ pub fn compare_group(
     }
     let mut fresh_index: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
     for rec in results_of(fresh)? {
-        fresh_index.insert(record_id(rec), metrics_of(rec));
+        let metrics = metrics_of(rec).with_context(|| format!("{file}: fresh run"))?;
+        fresh_index.insert(record_id(rec), metrics);
     }
     let (mut compared, mut skipped) = (0usize, 0usize);
     let mut log_sum = 0.0f64;
     let (mut worst, mut worst_metric) = (0.0f64, String::new());
     for rec in results_of(baseline)? {
         let id = record_id(rec);
-        let base_metrics = metrics_of(rec);
+        let base_metrics = metrics_of(rec).with_context(|| format!("{file}: baseline"))?;
         let Some(fresh_metrics) = fresh_index.get(&id) else {
             skipped += base_metrics.len().max(1);
             continue;
@@ -381,5 +409,42 @@ mod tests {
         let written = write_baselines(&base_dir, &fresh_dir).unwrap();
         assert_eq!(written, vec!["BENCH_pb.json".to_string()]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tolerance_validation_rejects_nonsense() {
+        assert!(validate_tolerance(2.5).is_ok());
+        assert!(validate_tolerance(1.0 + 1e-9).is_ok());
+        for bad in [1.0, 0.5, 0.0, -3.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = validate_tolerance(bad).unwrap_err().to_string();
+            assert!(err.contains("--tolerance"), "bad={bad}: {err}");
+            assert!(err.contains("> 1.0"), "bad={bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn nan_timing_values_are_rejected_not_skipped() {
+        let good = doc(vec![rec("cpu_seq", "a", 1e-3, 1e-3)]);
+        // a NaN Json::Num in the fresh run
+        let fresh = doc(vec![rec("cpu_seq", "a", f64::NAN, 1e-3)]);
+        let err = compare_group("BENCH_pb.json", &good, &fresh, 1.0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("generic_s"), "{msg}");
+        assert!(msg.contains("fresh"), "{msg}");
+        // the writer's "NaN" string sentinel — what a poisoned timing
+        // actually looks like on disk — must be an error too, not a
+        // silently skipped metric
+        let fresh = doc(vec![vec![
+            ("engine", Json::Str("cpu_seq".into())),
+            ("family", Json::Str("a".into())),
+            ("generic_s", Json::Str("NaN".into())),
+            ("specialized_s", Json::Num(1e-3)),
+        ]]);
+        let err = compare_group("BENCH_pb.json", &good, &fresh, 1.0).unwrap_err();
+        assert!(format!("{err:#}").contains("generic_s"), "{err:#}");
+        // and a poisoned baseline is attributed to the baseline side
+        let bad_base = doc(vec![rec("cpu_seq", "a", f64::NAN, 1e-3)]);
+        let err = compare_group("BENCH_pb.json", &bad_base, &good, 1.0).unwrap_err();
+        assert!(format!("{err:#}").contains("baseline"), "{err:#}");
     }
 }

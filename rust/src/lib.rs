@@ -31,9 +31,16 @@
 //! println!("warm rounds: {}", warm.rounds);
 //! ```
 
+// Machine-checked unsafe hygiene (`gdp lint` + DESIGN.md §8): every
+// unsafe operation needs its own unsafe block even inside `unsafe fn`,
+// and unsafe blocks that guard nothing are flagged.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(unused_unsafe)]
+
 pub mod util;
 pub mod testkit;
 pub mod bench_check;
+pub mod lint;
 pub mod sparse;
 pub mod instance;
 pub mod mps;

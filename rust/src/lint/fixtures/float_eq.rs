@@ -1,0 +1,20 @@
+// Lint fixture (not compiled): bare float equality in propagation code.
+
+pub fn bad(x: f64) -> bool {
+    x == 0.0
+}
+
+pub fn also_bad(x: f64) -> bool {
+    x != f64::INFINITY
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good(x: f64) -> bool {
+    // FLOAT-EQ: exact infinity sentinel compare (fixture).
+    x == f64::INFINITY
+}
+
+pub fn integral(n: usize) -> bool {
+    n == 0
+}

@@ -1,0 +1,30 @@
+// Lint fixture (not compiled): panicking shapes in the service request
+// path, which would kill a shard worker on a malformed frame.
+
+pub fn bad(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("present");
+    if a + b == 0 {
+        panic!("boom");
+    }
+    unreachable!("fell through")
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+pub fn init(v: Option<u32>) -> u32 {
+    // PANIC-OK: init-time code a request can never reach (fixture).
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(super::good(None).checked_add(1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+// Lint fixture (not compiled): a bare Ordering::Relaxed outside the
+// approved monotone-CAS files, with no ORDERING justification.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub fn bad(flag: &AtomicBool) {
+    flag.store(true, Ordering::Relaxed);
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good(flag: &AtomicBool) {
+    // ORDERING: monotone one-way flag; the round join publishes it (fixture).
+    flag.store(true, Ordering::Relaxed);
+    flag.store(false, Ordering::SeqCst);
+}

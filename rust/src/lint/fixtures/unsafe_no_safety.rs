@@ -1,0 +1,13 @@
+// Lint fixture (not compiled): unsafe in an allowlisted module but
+// missing the mandatory SAFETY comment directly above it.
+
+pub fn bad(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good(p: *const u32) -> u32 {
+    // SAFETY: the caller guarantees `p` is valid (fixture).
+    unsafe { *p }
+}

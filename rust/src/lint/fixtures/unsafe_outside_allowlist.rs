@@ -1,0 +1,13 @@
+// Lint fixture (not compiled): unsafe outside the allowlisted modules;
+// even a SAFETY comment does not make it legal there.
+
+pub fn bad(p: *const u32) -> u32 {
+    // SAFETY: justified, but this module is not allowlisted (fixture).
+    unsafe { *p }
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good(x: u32) -> u32 {
+    x + 1
+}

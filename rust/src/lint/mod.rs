@@ -1,0 +1,598 @@
+//! `gdp lint`: project-specific static analysis over the crate's own
+//! sources (std-only, no proc-macro or `syn` dependency).
+//!
+//! The generic compiler lints cannot express *project* invariants — that
+//! `unsafe` is confined to the one module whose aliasing story is argued
+//! in DESIGN.md §8, that the service request path never panics a shard
+//! worker, that `Ordering::Relaxed` only appears where the monotone-CAS
+//! soundness argument applies, or that the engine registry never drifts
+//! out of the differential test roster. This module enforces those as
+//! named, individually-testable rules over a lightweight line scanner.
+//!
+//! The scanner splits every line into three channels: `raw` (the
+//! verbatim text), `code` (string/char literals and comments blanked to
+//! spaces, so token checks cannot be fooled by `"panic!"` inside a
+//! string), and `comment` (the comment text alone, where justification
+//! markers like `// SAFETY:` live). A small cross-line state machine
+//! tracks multi-line strings, raw strings (`r#"..."#`), and nested block
+//! comments; a brace-depth pass marks everything under `#[cfg(test)]` —
+//! and every line of the integration-test tree `rust/tests/` — as test
+//! code, which the rules exempt.
+//!
+//! This is deliberately a *linter*, not a parser: it is sound for the
+//! shapes `rustfmt`-formatted code actually takes, and every rule has a
+//! bad-fixture self-test (`gdp lint --self-test`, also run in CI) that
+//! proves it still trips.
+
+mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// One source line, split into the channels the rules care about.
+#[derive(Debug)]
+pub struct Line {
+    /// Verbatim line text.
+    pub raw: String,
+    /// Code with string/char literals and comments blanked to spaces.
+    pub code: String,
+    /// Comment text carried by this line (line or block comments).
+    pub comment: String,
+    /// True when the line is test code (`#[cfg(test)]` or `rust/tests/`).
+    pub in_test: bool,
+}
+
+/// A scanned source file, addressed by its repo-relative path.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+/// One rule hit: rule name, location, and a human-readable message.
+#[derive(Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Result of linting a tree: file count plus every rule hit.
+#[derive(Debug)]
+pub struct LintReport {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+/// Name and one-line summary of every rule, for `gdp lint --list-rules`.
+pub const RULES: &[(&str, &str)] = &[
+    ("unsafe-allowlist", "unsafe only in allowlisted modules (today: service/session.rs)"),
+    ("safety-comment", "every unsafe block is immediately preceded by // SAFETY:"),
+    ("no-panic-request-path", "no unwrap/expect/panic in the service request path"),
+    ("relaxed-ordering", "Relaxed only in core/state.rs + core/kernels.rs (// ORDERING:)"),
+    ("float-eq", "no bare float ==/!= in propagation/ (// FLOAT-EQ:)"),
+    ("registry-coverage", "every engine is in registry_differential.rs and DESIGN.md"),
+];
+
+// ---------------------------------------------------------------------------
+// scanner
+
+#[derive(Clone, Copy)]
+enum ScanState {
+    Code,
+    /// Inside a string literal; `Some(h)` for raw strings with `h` hashes.
+    Str(Option<usize>),
+    /// Inside a block comment, with nesting depth.
+    Block(usize),
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Count `#` characters starting at `i`.
+fn hashes_at(chars: &[char], i: usize) -> usize {
+    chars[i..].iter().take_while(|&&c| c == '#').count()
+}
+
+/// If `chars[i..]` opens a raw (or raw byte) string like `r##"`, return
+/// `(prefix_len, hash_count)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let h = hashes_at(chars, j);
+    j += h;
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, h))
+    } else {
+        None
+    }
+}
+
+/// Split `text` into per-line `raw`/`code`/`comment` channels and mark
+/// test lines. `path` is the repo-relative path used for rule dispatch.
+pub fn scan_source(path: &str, text: &str) -> SourceFile {
+    let mut state = ScanState::Code;
+    let mut lines: Vec<Line> = Vec::new();
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                ScanState::Code => {
+                    let c = chars[i];
+                    let prev_ident =
+                        code.as_bytes().last().map(|&b| is_ident_byte(b)).unwrap_or(false);
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // line comment: the rest of the line is comment text
+                        comment.extend(&chars[i + 2..]);
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = ScanState::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        state = ScanState::Str(None);
+                        code.push(' ');
+                        i += 1;
+                    } else if !prev_ident && raw_string_open(&chars, i).is_some() {
+                        let (len, h) = raw_string_open(&chars, i).unwrap_or((1, 0));
+                        state = ScanState::Str(Some(h));
+                        for _ in 0..len {
+                            code.push(' ');
+                        }
+                        i += len;
+                    } else if c == '\'' {
+                        // char literal vs lifetime: a lifetime is `'` + ident
+                        // with no closing quote right after one char
+                        if chars.get(i + 1) == Some(&'\\') {
+                            // escaped char literal: skip to its closing quote
+                            let mut j = i + 2;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            for _ in i..=j.min(chars.len().saturating_sub(1)) {
+                                code.push(' ');
+                            }
+                            i = j + 1;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            // plain char literal like 'x'
+                            code.push_str("   ");
+                            i += 3;
+                        } else {
+                            // lifetime: keep as code
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                ScanState::Str(None) => {
+                    let c = chars[i];
+                    if c == '\\' {
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        state = ScanState::Code;
+                        code.push(' ');
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                ScanState::Str(Some(h)) => {
+                    if chars[i] == '"' && hashes_at(&chars, i + 1) >= h {
+                        state = ScanState::Code;
+                        for _ in 0..=h {
+                            code.push(' ');
+                        }
+                        i += 1 + h;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                ScanState::Block(depth) => {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = ScanState::Block(depth + 1);
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = match depth {
+                            1 => ScanState::Code,
+                            d => ScanState::Block(d - 1),
+                        };
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(Line { raw: raw.to_string(), code, comment, in_test: false });
+    }
+    mark_test_lines(path, &mut lines);
+    SourceFile { path: path.to_string(), lines }
+}
+
+/// Mark every line under a `#[cfg(test)]` item (brace-depth tracked), and
+/// every line of an integration-test file, as test code.
+fn mark_test_lines(path: &str, lines: &mut [Line]) {
+    if path.contains("rust/tests/") {
+        for line in lines.iter_mut() {
+            line.in_test = true;
+        }
+        return;
+    }
+    let mut depth: i64 = 0;
+    // brace depth at which the `#[cfg(test)]` item opened, while inside it
+    let mut test_depth: Option<i64> = None;
+    // saw `#[cfg(test)]` and waiting for the item's opening brace
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        line.in_test = test_depth.is_some() || pending;
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+            line.in_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        pending = false;
+                        test_depth = Some(depth);
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth -= 1;
+                }
+                // a brace-less `#[cfg(test)]` item (e.g. a `use`) ends here
+                ';' if pending && test_depth.is_none() => pending = false,
+                _ => {}
+            }
+        }
+    }
+}
+
+/// True when line `idx` carries `marker` in its own comment or in the
+/// contiguous comment block immediately above it (no blank or code line
+/// in between) — the shape `// SAFETY: ...` justifications take.
+pub(crate) fn justified(sf: &SourceFile, idx: usize, marker: &str) -> bool {
+    if sf.lines[idx].comment.contains(marker) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let l = &sf.lines[i];
+        if !l.code.trim().is_empty() || l.comment.is_empty() {
+            return false; // a code or blank line ends the comment block
+        }
+        if l.comment.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// tree walking
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry.with_context(|| format!("listing {}", dir.display()))?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// All `.rs` files under `rust/src` and `rust/tests` of `root`, sorted.
+pub fn collect_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for dir in ["rust/src", "rust/tests"] {
+        let d = root.join(dir);
+        if !d.is_dir() {
+            return Err(anyhow!("{} not found under {} (not a repo root?)", dir, root.display()));
+        }
+        walk(&d, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Walk upward from the current directory to the repo root (the first
+/// ancestor containing `rust/src`).
+pub fn find_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("reading the current directory")?;
+    let mut dir = cwd.as_path();
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        // inside rust/: the parent of the dir containing src/ is the root
+        if dir.join("src").is_dir() && dir.file_name().map(|n| n == "rust").unwrap_or(false) {
+            if let Some(parent) = dir.parent() {
+                return Ok(parent.to_path_buf());
+            }
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => {
+                return Err(anyhow!(
+                    "no repo root (a directory containing rust/src) above {}",
+                    cwd.display()
+                ))
+            }
+        }
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    // normalize to forward slashes so rule path matching is portable
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Lint the tree at `root`: scan every source file, apply the per-file
+/// rules, then the cross-file registry-coverage rule.
+pub fn run(root: &Path) -> Result<LintReport> {
+    let mut violations = Vec::new();
+    let mut files = 0;
+    let mut registry: Option<SourceFile> = None;
+    for path in collect_files(root)? {
+        let rel = rel_path(root, &path);
+        if rel.contains("lint/fixtures/") {
+            continue; // deliberately-bad inputs for the self-test
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let sf = scan_source(&rel, &text);
+        violations.extend(rules::check_file(&sf));
+        if rel.ends_with("propagation/registry.rs") {
+            registry = Some(sf);
+        }
+        files += 1;
+    }
+    let registry = registry.ok_or_else(|| anyhow!("rust/src/propagation/registry.rs not found"))?;
+    let tests_path = root.join("rust/tests/registry_differential.rs");
+    let tests_text = std::fs::read_to_string(&tests_path)
+        .with_context(|| format!("reading {}", tests_path.display()))?;
+    let design_path = root.join("DESIGN.md");
+    let design_text = std::fs::read_to_string(&design_path)
+        .with_context(|| format!("reading {}", design_path.display()))?;
+    violations.extend(rules::check_registry_coverage(&registry, &tests_text, &design_text));
+    violations.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(LintReport { files, violations })
+}
+
+// ---------------------------------------------------------------------------
+// self-test: prove every rule still trips on known-bad fixtures
+
+struct FixtureCase {
+    /// Virtual path the fixture is scanned under (rules dispatch on path).
+    path: &'static str,
+    text: &'static str,
+    /// Rule that must fire on the fixture.
+    must_trip: &'static str,
+    /// Rules that must NOT fire (the fixture's "good twin" aspect).
+    must_not_trip: &'static [&'static str],
+}
+
+const FIXTURES: &[FixtureCase] = &[
+    FixtureCase {
+        path: "rust/src/service/session.rs",
+        text: include_str!("fixtures/unsafe_no_safety.rs"),
+        must_trip: "safety-comment",
+        must_not_trip: &["unsafe-allowlist"],
+    },
+    FixtureCase {
+        path: "rust/src/propagation/core/driver.rs",
+        text: include_str!("fixtures/unsafe_outside_allowlist.rs"),
+        must_trip: "unsafe-allowlist",
+        must_not_trip: &["safety-comment"],
+    },
+    FixtureCase {
+        path: "rust/src/service/scheduler.rs",
+        text: include_str!("fixtures/panic_in_request_path.rs"),
+        must_trip: "no-panic-request-path",
+        must_not_trip: &[],
+    },
+    FixtureCase {
+        path: "rust/src/propagation/core/workset.rs",
+        text: include_str!("fixtures/relaxed_unjustified.rs"),
+        must_trip: "relaxed-ordering",
+        must_not_trip: &[],
+    },
+    FixtureCase {
+        path: "rust/src/propagation/bounds.rs",
+        text: include_str!("fixtures/float_eq.rs"),
+        must_trip: "float-eq",
+        must_not_trip: &[],
+    },
+];
+
+/// Run the bad-fixture suite: every rule must trip on its fixture and
+/// stay quiet on the fixture's justified/allowlisted twin. Returns the
+/// number of checks performed.
+pub fn self_test() -> Result<usize> {
+    let mut checks = 0;
+    for case in FIXTURES {
+        let sf = scan_source(case.path, case.text);
+        let hits = rules::check_file(&sf);
+        if !hits.iter().any(|v| v.rule == case.must_trip) {
+            return Err(anyhow!(
+                "rule {} did not trip on its bad fixture ({})",
+                case.must_trip,
+                case.path
+            ));
+        }
+        checks += 1;
+        for rule in case.must_not_trip {
+            if hits.iter().any(|v| v.rule == *rule) {
+                return Err(anyhow!(
+                    "rule {} tripped on a fixture that should only trip {} ({})",
+                    rule,
+                    case.must_trip,
+                    case.path
+                ));
+            }
+            checks += 1;
+        }
+        // the GOOD region of each fixture (below the marker line) must be
+        // clean: justification comments and test code are honored
+        let good = case.text.lines().position(|l| l.contains("GOOD fixture region"));
+        let good = good.ok_or_else(|| anyhow!("fixture {} has no GOOD region", case.path))?;
+        for v in &hits {
+            if v.line > good {
+                return Err(anyhow!(
+                    "fixture {} tripped {} at line {} inside its GOOD region",
+                    case.path,
+                    v.rule,
+                    v.line
+                ));
+            }
+        }
+        checks += 1;
+    }
+    // registry-coverage: a fabricated engine missing from the test roster
+    // and the design doc must trip in both directions
+    let registry = scan_source(
+        "rust/src/propagation/registry.rs",
+        "fn entries() {\n    Entry {\n        name: \"ghost_engine\",\n    };\n}\n",
+    );
+    let hits = rules::check_registry_coverage(&registry, "no roster here", "no mention here");
+    let missing_tests = hits.iter().filter(|v| v.msg.contains("registry_differential")).count();
+    let missing_design = hits.iter().filter(|v| v.msg.contains("DESIGN.md")).count();
+    if missing_tests != 1 || missing_design != 1 {
+        return Err(anyhow!(
+            "registry-coverage self-test expected 1+1 violations, got {} (tests) + {} (design)",
+            missing_tests,
+            missing_design
+        ));
+    }
+    checks += 2;
+    let clean = rules::check_registry_coverage(&registry, "\"ghost_engine\"", "`ghost_engine`");
+    if !clean.is_empty() {
+        return Err(anyhow!("registry-coverage fired on a fully covered roster"));
+    }
+    checks += 1;
+    Ok(checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(text: &str) -> SourceFile {
+        scan_source("rust/src/propagation/core/driver.rs", text)
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked_out_of_code() {
+        let sf = scan("let x = \"panic!\"; // SAFETY: not code\n");
+        assert!(!sf.lines[0].code.contains("panic!"));
+        assert!(sf.lines[0].comment.contains("SAFETY:"));
+        assert!(sf.lines[0].code.contains("let x ="));
+    }
+
+    #[test]
+    fn raw_strings_span_lines_and_hide_tokens() {
+        let sf = scan("let s = r#\"first .unwrap()\nsecond \"# ; let y = 1;\n");
+        assert!(!sf.lines[0].code.contains(".unwrap()"));
+        assert!(sf.lines[1].code.contains("let y = 1;"));
+        assert!(!sf.lines[1].code.contains("second"));
+    }
+
+    #[test]
+    fn plain_strings_span_lines_and_escapes_do_not_terminate() {
+        let sf = scan("let s = \"a \\\" b\nc\" ; let z = 2;\n");
+        assert!(!sf.lines[0].code.contains('b'));
+        assert!(sf.lines[1].code.contains("let z = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_land_in_the_comment_channel() {
+        let sf = scan("/* outer /* inner */ still comment */ let a = 1;\n");
+        assert!(sf.lines[0].code.contains("let a = 1;"));
+        assert!(sf.lines[0].comment.contains("still comment"));
+        assert!(!sf.lines[0].code.contains("outer"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked_but_lifetimes_survive() {
+        let sf = scan("let q = '\"'; fn f<'a>(x: &'a str) {}\n");
+        assert!(sf.lines[0].code.contains("<'a>"));
+        // the quote char literal must not open a string state
+        assert!(sf.lines[0].code.contains("fn f"));
+    }
+
+    #[test]
+    fn cfg_test_marks_the_whole_module() {
+        let sf = scan("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n");
+        let flags: Vec<bool> = sf.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn integration_test_files_are_entirely_test_code() {
+        let sf = scan_source("rust/tests/foo.rs", "fn a() {}\n");
+        assert!(sf.lines[0].in_test);
+    }
+
+    #[test]
+    fn justification_blocks_of_any_length_are_honored() {
+        let sf = scan("// SAFETY: a\n// b\n// c\n// d\nunsafe { x() }\n");
+        assert!(justified(&sf, 4, "SAFETY:"));
+        assert!(!justified(&sf, 4, "ORDERING:"));
+        let sf = scan("// SAFETY: stale\n\nunsafe { x() }\n");
+        assert!(!justified(&sf, 2, "SAFETY:"), "a blank line ends the justification block");
+    }
+
+    #[test]
+    fn self_test_trips_every_rule() {
+        let checks = self_test().expect("self-test must pass");
+        assert!(checks >= 10, "expected a meaningful number of checks, got {checks}");
+    }
+
+    #[test]
+    fn lint_passes_on_this_tree() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent");
+        let report = run(root).expect("lint run");
+        assert!(report.files > 40, "walker found too few files: {}", report.files);
+        let rendered: Vec<String> = report.violations.iter().map(|v| v.to_string()).collect();
+        assert!(
+            report.violations.is_empty(),
+            "lint violations in the tree:\n{}",
+            rendered.join("\n")
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! The lint rules. Each rule is a function over a scanned [`SourceFile`]
+//! (plus one cross-file rule over the engine registry), kept separately
+//! testable so `gdp lint --self-test` can prove each one still trips on
+//! its bad fixture.
+
+use super::{justified, SourceFile, Violation};
+
+/// Modules allowed to contain `unsafe` at all. Everything here must have
+/// a provenance/aliasing argument in DESIGN.md §8 and be covered by the
+/// Miri CI job.
+const UNSAFE_ALLOWLIST: &[&str] = &["src/service/session.rs"];
+
+/// The service request path: code a malformed or hostile frame can reach.
+/// A panic here kills a shard worker, so fallible shapes are mandatory
+/// (init-time code escapes with `// PANIC-OK:`).
+const REQUEST_PATH: &[&str] = &[
+    "src/service/proto.rs",
+    "src/service/scheduler.rs",
+    "src/service/server.rs",
+    "src/service/session.rs",
+];
+
+/// Files whose `Ordering::Relaxed` uses are covered by the monotone-CAS
+/// soundness argument in DESIGN.md §8: the f64 bound lattice in
+/// `core/state.rs` and the one-way `infeasible` flag in
+/// `core/kernels.rs`. Anywhere else needs an `// ORDERING:` comment.
+const RELAXED_ALLOWLIST: &[&str] =
+    &["src/propagation/core/state.rs", "src/propagation/core/kernels.rs"];
+
+fn path_in(sf: &SourceFile, set: &[&str]) -> bool {
+    set.iter().any(|p| sf.path.ends_with(p))
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when `code` contains `word` as a standalone identifier (so
+/// `unsafe_op_in_unsafe_fn` does not count as `unsafe`).
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let b = start + pos;
+        let e = b + word.len();
+        let before = b == 0 || !is_ident(bytes[b - 1]);
+        let after = e == bytes.len() || !is_ident(bytes[e]);
+        if before && after {
+            return true;
+        }
+        start = e;
+    }
+    false
+}
+
+/// `unsafe-allowlist` + `safety-comment`: every `unsafe` keyword must be
+/// in an allowlisted module AND sit under a `// SAFETY:` comment block.
+fn rule_unsafe(sf: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !path_in(sf, UNSAFE_ALLOWLIST) {
+            out.push(Violation {
+                rule: "unsafe-allowlist",
+                path: sf.path.clone(),
+                line: i + 1,
+                msg: "unsafe outside the allowlisted modules (service/session.rs)".into(),
+            });
+        }
+        if !justified(sf, i, "SAFETY:") {
+            out.push(Violation {
+                rule: "safety-comment",
+                path: sf.path.clone(),
+                line: i + 1,
+                msg: "unsafe without an immediately preceding // SAFETY: comment".into(),
+            });
+        }
+    }
+}
+
+/// `no-panic-request-path`: no `unwrap()`/`expect()`/panicking macro in
+/// the service request path (escape hatch: `// PANIC-OK:` for init-time
+/// code a request cannot reach).
+fn rule_no_panic(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if !path_in(sf, REQUEST_PATH) {
+        return;
+    }
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut token = None;
+        if code.contains(".unwrap()") {
+            token = Some(".unwrap()");
+        } else if code.contains(".expect(") {
+            token = Some(".expect(");
+        } else {
+            for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+                let word = &mac[..mac.len() - 1];
+                if has_word(code, word) && code.contains(mac) {
+                    token = Some(mac);
+                    break;
+                }
+            }
+        }
+        let Some(token) = token else { continue };
+        if justified(sf, i, "PANIC-OK:") {
+            continue;
+        }
+        out.push(Violation {
+            rule: "no-panic-request-path",
+            path: sf.path.clone(),
+            line: i + 1,
+            msg: format!("{token} in the request path; return ServiceError or mark // PANIC-OK:"),
+        });
+    }
+}
+
+/// `relaxed-ordering`: `Ordering::Relaxed` only in the allowlisted
+/// monotone-CAS files; elsewhere each use needs an `// ORDERING:`
+/// justification comment.
+fn rule_ordering(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if path_in(sf, RELAXED_ALLOWLIST) {
+        return;
+    }
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test || !line.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        if justified(sf, i, "ORDERING:") {
+            continue;
+        }
+        out.push(Violation {
+            rule: "relaxed-ordering",
+            path: sf.path.clone(),
+            line: i + 1,
+            msg: "Relaxed outside core/state+kernels needs an // ORDERING: comment".into(),
+        });
+    }
+}
+
+/// Heuristic for "this comparison involves floats": a float literal like
+/// `0.0` or an `f64::INFINITY`-family constant on the same line.
+fn has_float_operand(code: &str) -> bool {
+    if code.contains("f64::INFINITY") || code.contains("f64::NEG_INFINITY") {
+        return true;
+    }
+    if code.contains("f64::NAN") {
+        return true;
+    }
+    let b = code.as_bytes();
+    b.windows(3).any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
+}
+
+/// `float-eq`: no bare `==`/`!=` on floats inside `propagation/` — exact
+/// comparisons are reserved for the bit-exactness helpers; intentional
+/// sites carry a `// FLOAT-EQ:` comment explaining why no tolerance
+/// applies.
+fn rule_float_eq(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if !sf.path.contains("src/propagation/") {
+        return;
+    }
+    for (i, line) in sf.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        if !(code.contains("==") || code.contains("!=")) || !has_float_operand(code) {
+            continue;
+        }
+        if justified(sf, i, "FLOAT-EQ:") {
+            continue;
+        }
+        out.push(Violation {
+            rule: "float-eq",
+            path: sf.path.clone(),
+            line: i + 1,
+            msg: "bare float ==/!= in propagation code; justify with // FLOAT-EQ:".into(),
+        });
+    }
+}
+
+/// All per-file rules, in one pass.
+pub(crate) fn check_file(sf: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    rule_unsafe(sf, &mut out);
+    rule_no_panic(sf, &mut out);
+    rule_ordering(sf, &mut out);
+    rule_float_eq(sf, &mut out);
+    out
+}
+
+/// Engine names declared in `propagation/registry.rs`, with their
+/// 1-based line numbers (extracted from the raw text, since string
+/// literals are blanked out of the `code` channel).
+fn engine_names(registry: &SourceFile) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in registry.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        if let Some(rest) = line.raw.trim().strip_prefix("name: \"") {
+            if let Some(end) = rest.find('"') {
+                out.push((i + 1, rest[..end].to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// `registry-coverage`: every engine registered in
+/// `propagation/registry.rs` must appear (quoted) in the differential
+/// test roster and (anywhere) in DESIGN.md, so adding an engine without
+/// wiring it into the bit-exactness tests and docs fails the lint.
+pub(crate) fn check_registry_coverage(
+    registry: &SourceFile,
+    tests_text: &str,
+    design_text: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (line, name) in engine_names(registry) {
+        if !tests_text.contains(&format!("\"{name}\"")) {
+            out.push(Violation {
+                rule: "registry-coverage",
+                path: registry.path.clone(),
+                line,
+                msg: format!("engine {name:?} missing from the registry_differential.rs roster"),
+            });
+        }
+        if !design_text.contains(name.as_str()) {
+            out.push(Violation {
+                rule: "registry-coverage",
+                path: registry.path.clone(),
+                line,
+                msg: format!("engine {name:?} is not mentioned in DESIGN.md"),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan_source;
+
+    fn check(path: &str, text: &str) -> Vec<&'static str> {
+        let sf = scan_source(path, text);
+        check_file(&sf).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_allowlist_and_safety_comment() {
+        let hits = check("rust/src/propagation/seq.rs", "unsafe { f() }\n");
+        assert!(hits.contains(&"unsafe-allowlist"));
+        assert!(hits.contains(&"safety-comment"));
+        let hits = check("rust/src/service/session.rs", "// SAFETY: ok\nunsafe { f() }\n");
+        assert!(hits.is_empty(), "{hits:?}");
+    }
+
+    #[test]
+    fn unsafe_word_boundaries_do_not_false_positive() {
+        let attr = "#![deny(unsafe_op_in_unsafe_fn)]\n#![warn(unused_unsafe)]\n";
+        assert!(check("rust/src/lib.rs", attr).is_empty());
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("unsafe_op_in_unsafe_fn", "unsafe"));
+    }
+
+    #[test]
+    fn request_path_panics_are_flagged_with_escapes() {
+        for bad in [".unwrap()", ".expect(\"x\")", "panic!(\"x\")", "unreachable!()"] {
+            let text = format!("fn f() {{ let _ = g(){bad}; }}\n");
+            let hits = check("rust/src/service/proto.rs", &text);
+            assert_eq!(hits, vec!["no-panic-request-path"], "{bad}");
+        }
+        // unwrap_or family is fine, PANIC-OK escapes, other files are free
+        assert!(check("rust/src/service/proto.rs", "let x = g().unwrap_or(0);\n").is_empty());
+        let ok = "// PANIC-OK: init-time only\nlet x = g().unwrap();\n";
+        assert!(check("rust/src/service/proto.rs", ok).is_empty());
+        assert!(check("rust/src/propagation/seq.rs", "let x = g().unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn relaxed_ordering_needs_justification_outside_core() {
+        let bad = "x.store(true, Ordering::Relaxed);\n";
+        assert_eq!(check("rust/src/propagation/omp.rs", bad), vec!["relaxed-ordering"]);
+        assert!(check("rust/src/propagation/core/state.rs", bad).is_empty());
+        let ok = "// ORDERING: monotone flag, join publishes\nx.store(true, Ordering::Relaxed);\n";
+        assert!(check("rust/src/propagation/omp.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn float_eq_flags_bare_compares_only_in_propagation() {
+        let bad = "if x == 0.0 {}\n";
+        assert_eq!(check("rust/src/propagation/bounds.rs", bad), vec!["float-eq"]);
+        assert!(check("rust/src/mps/mod.rs", bad).is_empty());
+        let ok = "// FLOAT-EQ: exact sentinel compare\nif x == f64::INFINITY {}\n";
+        assert!(check("rust/src/propagation/bounds.rs", ok).is_empty());
+        // integer compares and tuple indexing do not look like floats
+        assert!(check("rust/src/propagation/seq.rs", "if n == 0 { q.1 += 1; }\n").is_empty());
+    }
+
+    #[test]
+    fn registry_coverage_catches_drift_in_both_directions() {
+        let reg = "fn e() {\n    Entry {\n        name: \"cpu_seq\",\n    };\n}\n";
+        let registry = scan_source("rust/src/propagation/registry.rs", reg);
+        let hits = check_registry_coverage(&registry, "\"cpu_seq\"", "cpu_seq docs");
+        assert!(hits.is_empty(), "{hits:?}");
+        let hits = check_registry_coverage(&registry, "nothing", "cpu_seq docs");
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].msg.contains("registry_differential"));
+        let hits = check_registry_coverage(&registry, "\"cpu_seq\"", "nothing");
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].msg.contains("DESIGN.md"));
+    }
+}

@@ -29,6 +29,10 @@
 //!   bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
 //!       Benchmark-regression gate: compare fresh BENCH_*.json against
 //!       the committed baselines; fail beyond the tolerated slowdown.
+//!   lint [--root DIR] [--self-test] [--list-rules]
+//!       Project-specific static analysis: unsafe hygiene, request-path
+//!       panic-freedom, atomic-ordering and float-equality audits, and
+//!       registry drift (rules documented in DESIGN.md §8).
 //!
 //! Engine names and the `--engine` help list both come from the registry
 //! (`gdp::propagation::registry`), so they cannot drift apart.
@@ -62,6 +66,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "request" => cmd_request(&args),
         "bench-check" => cmd_bench_check(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(true)
@@ -114,6 +119,7 @@ USAGE:
   gdp request [--addr HOST:PORT] stats [--check] | evict [--session HEX] | shutdown
   gdp bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
                   [--injected-slowdown F] [--write-baseline]
+  gdp lint [--root DIR] [--self-test | --list-rules]
 "
     )
 }
@@ -618,6 +624,7 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<bool> {
         return Ok(true);
     }
     let tolerance = args.get_f64("tolerance", gdp::bench_check::DEFAULT_TOLERANCE);
+    gdp::bench_check::validate_tolerance(tolerance)?;
     let slowdown = args.get_f64("injected-slowdown", 1.0);
     if slowdown != 1.0 {
         println!("bench-check: injecting a synthetic {slowdown}x slowdown (gate self-test)");
@@ -657,6 +664,38 @@ fn cmd_bench_check(args: &Args) -> anyhow::Result<bool> {
         );
     }
     Ok(all_pass)
+}
+
+/// Project-specific static analysis (CI `lint` job): enforce the rules in
+/// [`gdp::lint`] over `rust/src` + `rust/tests`, or prove they still trip
+/// with `--self-test`.
+fn cmd_lint(args: &Args) -> anyhow::Result<bool> {
+    if args.flag("list-rules") {
+        for (name, summary) in gdp::lint::RULES {
+            println!("{name:22} {summary}");
+        }
+        return Ok(true);
+    }
+    if args.flag("self-test") {
+        let checks = gdp::lint::self_test()?;
+        println!("lint self-test: ok ({checks} checks, every rule trips on its bad fixture)");
+        return Ok(true);
+    }
+    let root = match args.get("root") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => gdp::lint::find_root()?,
+    };
+    let report = gdp::lint::run(&root)?;
+    for v in &report.violations {
+        eprintln!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!("lint: ok ({} files, {} rules)", report.files, gdp::lint::RULES.len());
+        Ok(true)
+    } else {
+        eprintln!("lint: {} violation(s) across {} files", report.violations.len(), report.files);
+        Ok(false)
+    }
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<bool> {

@@ -28,6 +28,8 @@ pub fn candidates(
     lhs: f64,
     rhs: f64,
 ) -> Candidate {
+    // FLOAT-EQ: guards against a literal zero coefficient only — any
+    // nonzero value, however small, is numerically meaningful here
     debug_assert!(a != 0.0);
     // this entry's own contributions to the min/max activity
     let (bmin, bmax) = if a > 0.0 { (lbj, ubj) } else { (ubj, lbj) };

@@ -176,12 +176,15 @@ pub fn sweep_row_atomic(
             rhs,
         );
         let mut changed = false;
+        // FLOAT-EQ: exact infinity compare — +inf is the "row proves the
+        // variable empty from above" sentinel and admits no tolerance
         if cand.lb.is_finite() || cand.lb == f64::INFINITY {
             if improves_lb(bounds.lb(j), cand.lb) {
                 out.atomics += 1;
                 changed |= bounds.try_improve_lb(j, cand.lb);
             }
         }
+        // FLOAT-EQ: exact infinity compare, mirrored for the upper bound
         if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
             if improves_ub(bounds.ub(j), cand.ub) {
                 out.atomics += 1;

@@ -38,25 +38,32 @@ impl WorkSet {
     /// constraint (cold start), or — warm-started after branching — only
     /// the constraints containing a seed variable. Clears the next set.
     pub fn seed(&self, csc: &Csc, seed_vars: Option<&[usize]>) {
+        // ORDERING: Relaxed throughout — seeding runs on the scheduling
+        // thread before any round worker is spawned; the spawn itself is
+        // the synchronization point that publishes these stores
         match seed_vars {
             None => {
                 for f in &self.marked {
+                    // ORDERING: Relaxed — pre-spawn, see above
                     f.store(true, Ordering::Relaxed);
                 }
             }
             Some(vars) => {
                 for f in &self.marked {
+                    // ORDERING: Relaxed — pre-spawn, see above
                     f.store(false, Ordering::Relaxed);
                 }
                 for &v in vars {
                     let (rows_v, _) = csc.col(v);
                     for &r in rows_v {
+                        // ORDERING: Relaxed — pre-spawn, see above
                         self.marked[r as usize].store(true, Ordering::Relaxed);
                     }
                 }
             }
         }
         for f in &self.next {
+            // ORDERING: Relaxed — pre-spawn, see above
             f.store(false, Ordering::Relaxed);
         }
     }
@@ -68,9 +75,13 @@ impl WorkSet {
     /// race-free because `marked` is only written between rounds by the
     /// scheduling thread (in-round re-marks go to the next set).
     pub fn take(&self, r: usize) -> bool {
+        // ORDERING: Relaxed — `marked` is only written between rounds by
+        // the scheduling thread (thread join/spawn are the sync points);
+        // in-round re-marks go to the next set, never this one
         if !self.marked[r].load(Ordering::Relaxed) {
             return false;
         }
+        // ORDERING: Relaxed — same between-rounds argument as the load
         self.marked[r].swap(false, Ordering::Relaxed)
     }
 
@@ -78,6 +89,8 @@ impl WorkSet {
     /// Thread-safe: the chunk-parallel sweep calls this through a shared
     /// reference.
     pub fn mark_next(&self, r: usize) {
+        // ORDERING: Relaxed — a monotone one-way mark; the round barrier
+        // (scoped-thread join) publishes it before `advance` reads it
         self.next[r].store(true, Ordering::Relaxed);
     }
 
@@ -88,7 +101,10 @@ impl WorkSet {
         out.clear();
         for (r, f) in self.marked.iter().enumerate() {
             // load-first keeps the unmarked path a plain read (see `take`)
+            // ORDERING: Relaxed — runs between rounds on the scheduling
+            // thread, after the previous round's workers have joined
             if f.load(Ordering::Relaxed) {
+                // ORDERING: Relaxed — between rounds, see above
                 f.store(false, Ordering::Relaxed);
                 out.push(r as u32);
             }
@@ -97,6 +113,7 @@ impl WorkSet {
 
     /// Is anything marked for the current round?
     pub fn any_marked(&self) -> bool {
+        // ORDERING: Relaxed — read between rounds on the scheduling thread
         self.marked.iter().any(|f| f.load(Ordering::Relaxed))
     }
 
@@ -104,6 +121,8 @@ impl WorkSet {
     /// is cleared).
     pub fn advance(&self) {
         for (m, n) in self.marked.iter().zip(&self.next) {
+            // ORDERING: Relaxed — runs between rounds on the scheduling
+            // thread, after the round's workers have joined
             m.store(n.swap(false, Ordering::Relaxed), Ordering::Relaxed);
         }
     }

@@ -124,6 +124,9 @@ impl OmpPrepared<'_> {
                 atomic_updates: counters.atomics,
                 max_col_conflicts: 0,
             });
+            // ORDERING: Relaxed is enough — the flag is monotone (set
+            // once, never cleared) and the round's scoped-thread join has
+            // already ordered every worker store before this read
             if infeasible.load(Ordering::Relaxed) {
                 return RoundOutcome::Infeasible;
             }
@@ -217,6 +220,9 @@ impl OmpPrepared<'_> {
                             vec![ChunkCounters::default(); b_count];
                         for &(b, r) in work {
                             let (bounds, ws, infeasible) = &shared_ref[b as usize];
+                            // ORDERING: Relaxed — an in-round skip hint; a
+                            // missed `true` costs one redundant sweep,
+                            // never correctness
                             if infeasible.load(Ordering::Relaxed) {
                                 continue;
                             }
@@ -225,6 +231,8 @@ impl OmpPrepared<'_> {
                             let infeas = row.infeasible;
                             local[b as usize].absorb(row);
                             if infeas {
+                                // ORDERING: Relaxed — monotone one-way
+                                // set; the round join publishes it
                                 infeasible.store(true, Ordering::Relaxed);
                             }
                         }
@@ -253,6 +261,8 @@ impl OmpPrepared<'_> {
                     atomic_updates: merged[b].atomics,
                     max_col_conflicts: 0,
                 });
+                // ORDERING: Relaxed — read after the round's scoped join,
+                // which ordered every worker store before this
                 if shared[b].2.load(Ordering::Relaxed) {
                     statuses[b] = Some(Status::Infeasible);
                 } else if merged[b].changes == 0 {

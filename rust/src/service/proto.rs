@@ -42,9 +42,16 @@ pub fn session_from_hex(s: &str) -> Result<u64, String> {
 }
 
 /// Non-finite f64 decode for values the writer emitted as sentinels.
+/// A *bare* non-finite number is rejected: the JSON grammar has no
+/// infinity/nan tokens, so one can only arrive via a silently overflowing
+/// literal like `1e999` — almost certainly a client bug, not an intended
+/// infinite bound.
 pub fn json_to_f64(j: &Json) -> Result<f64, String> {
     match j {
-        Json::Num(x) => Ok(*x),
+        Json::Num(x) if x.is_finite() => Ok(*x),
+        Json::Num(x) => {
+            Err(format!("non-finite number {x} (use the \"inf\"/\"-inf\" string sentinels)"))
+        }
         Json::Str(s) => match s.as_str() {
             "inf" => Ok(f64::INFINITY),
             "-inf" => Ok(f64::NEG_INFINITY),
@@ -56,11 +63,18 @@ pub fn json_to_f64(j: &Json) -> Result<f64, String> {
 }
 
 fn f64_vec(j: &Json, what: &str) -> Result<Vec<f64>, String> {
-    j.as_arr()
+    let vals: Vec<f64> = j
+        .as_arr()
         .ok_or_else(|| format!("{what} must be an array"))?
         .iter()
         .map(json_to_f64)
-        .collect()
+        .collect::<Result<_, _>>()?;
+    // NaN is representable on the wire (the writer's sentinel for it) but
+    // meaningless as a bound: it would poison every min/max in the lattice
+    if vals.iter().any(|x| x.is_nan()) {
+        return Err(format!("{what} must not contain NaN"));
+    }
+    Ok(vals)
 }
 
 fn usize_vec(j: &Json, what: &str) -> Result<Vec<usize>, String> {
@@ -403,5 +417,30 @@ mod tests {
         assert!(resp.get("error").and_then(|v| v.as_str()).unwrap().contains("unknown session"));
         let (resp, _) = dispatch(&h, r#"{"v":1,"op":"load","format":"mps","text":"garbage"}"#);
         assert_eq!(Json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn malformed_frames_get_structured_error_replies() {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let expect_err = |line: &str, needle: &str| {
+            let (resp, stop) = dispatch(&h, line);
+            assert!(!stop, "a malformed frame must not stop the serve loop: {line}");
+            let resp = Json::parse(&resp).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{line}");
+            let err = resp.get("error").and_then(|v| v.as_str()).unwrap().to_string();
+            assert!(err.contains(needle), "{line}: error {err:?} does not mention {needle:?}");
+        };
+        // a truncated frame (connection dropped mid-line)
+        let full = r#"{"v":1,"op":"propagate","session":"00000000000000ff"}"#;
+        expect_err(&full[..full.len() / 2], "bad JSON");
+        // unknown protocol version
+        expect_err(r#"{"v":99,"op":"stats"}"#, "version");
+        // a bare non-finite bound: JSON has no infinity literal, so one
+        // can only arrive as a silently overflowing number like 1e999
+        expect_err(r#"{"v":1,"op":"propagate","session":"00","lb":[1e999],"ub":[0]}"#, "sentinel");
+        // NaN (the writer's own sentinel spelling) is representable on
+        // the wire but meaningless as a bound
+        expect_err(r#"{"v":1,"op":"propagate","session":"00","lb":["NaN"],"ub":[0]}"#, "NaN");
     }
 }

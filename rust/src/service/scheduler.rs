@@ -171,7 +171,13 @@ impl Scheduler {
                 };
                 let _ = reply.send(Ok(EvictReply { dropped }));
             }
-            Job::Shutdown { .. } => unreachable!("handled by the run loop"),
+            Job::Shutdown { reply } => {
+                // run() intercepts Shutdown before handle() ever sees it;
+                // should one slip through anyway, flush and acknowledge
+                // instead of panicking the shard worker
+                self.flush_all();
+                let _ = reply.send(Ok(()));
+            }
         }
     }
 
@@ -222,16 +228,13 @@ impl Scheduler {
         // `hits + misses == propagates + pending` invariant that
         // `gdp request stats --check` gates on (and a miss would pay a
         // wasted `prepare`)
-        let ncols = self
-            .store
-            .instance(req.session)
-            .map(|i| i.ncols())
-            .ok_or_else(|| {
-                ServiceError(format!(
-                    "unknown session {:016x} (load the instance first, or it was evicted)",
-                    req.session
-                ))
-            })?;
+        let Some(inst) = self.store.instance(req.session) else {
+            return Err(ServiceError(format!(
+                "unknown session {:016x} (load the instance first, or it was evicted)",
+                req.session
+            )));
+        };
+        let ncols = inst.ncols();
         let start = match req.start {
             Some(b) => {
                 if b.lb.len() != ncols || b.ub.len() != ncols {
@@ -243,9 +246,7 @@ impl Scheduler {
                 }
                 b
             }
-            None => {
-                Bounds::of(self.store.instance(req.session).expect("resident: checked above"))
-            }
+            None => Bounds::of(inst),
         };
         // a malformed index would panic the shard's engine thread and
         // kill its sessions — reject it as a request error instead
@@ -352,9 +353,12 @@ impl Scheduler {
             if !warm.is_empty() {
                 let starts: Vec<Bounds> =
                     warm.iter().map(|&i| queue.pending[i].start.clone()).collect();
+                // `warm` holds exactly the `is_some` indices, so the
+                // default arm is dead; spelled without unwrap to keep the
+                // request path panic-free
                 let seeds: Vec<Vec<usize>> = warm
                     .iter()
-                    .map(|&i| queue.pending[i].seed_vars.clone().unwrap())
+                    .map(|&i| queue.pending[i].seed_vars.clone().unwrap_or_default())
                     .collect();
                 for (&i, r) in warm.iter().zip(session.propagate_batch_warm(&starts, &seeds)) {
                     results[i] = Some(r);
@@ -373,7 +377,15 @@ impl Scheduler {
         let now = Instant::now();
         let coalesced = if use_batch { n } else { 1 };
         for (p, r) in queue.pending.into_iter().zip(results) {
-            let r = r.expect("every slot filled");
+            let Some(r) = r else {
+                // defensive: every dispatch shape above fills every slot;
+                // a hole answers with an error instead of killing the
+                // shard worker mid-flush
+                let _ = p.reply.send(Err(ServiceError(
+                    "internal: batched dispatch left a request unanswered".into(),
+                )));
+                continue;
+            };
             let reply = make_reply(&p, r, coalesced, now);
             self.metrics.record_propagate(
                 reply.latency,

@@ -87,30 +87,42 @@ pub fn approx_instance_bytes(inst: &MipInstance) -> usize {
 /// single request, so the pair is stored together: the instance on the
 /// heap and the session created over that allocation.
 ///
-/// The instance is held as a raw pointer (`Box::into_raw`), not a `Box`:
-/// a `Box` field is `noalias`, so moving the `OwnedSession` (HashMap
-/// inserts, rehashes) would invalidate every reference the session
-/// derived from it under Rust's aliasing rules. Raw pointers carry no
-/// such tag — the allocation's address and the session's borrows stay
-/// valid across moves, and [`Drop`] drops the session before reclaiming
-/// the allocation.
+/// The instance is held as a [`NonNull`](std::ptr::NonNull) pointer, not
+/// a `Box`: a `Box` field is `noalias`, so moving the `OwnedSession`
+/// (HashMap inserts, rehashes) would invalidate every reference the
+/// session derived from it under Rust's aliasing rules. `NonNull` carries
+/// no uniqueness tag — the allocation's address and the session's borrows
+/// stay valid across moves.
+///
+/// Provenance (checked by the Miri CI job under
+/// `-Zmiri-strict-provenance`, argued in DESIGN.md §8): the pointer is
+/// created exactly once, from the `&mut` that [`Box::leak`] returns, so
+/// it carries the whole allocation's provenance. That `&mut` is never
+/// used again; every later access — [`Self::instance`], the session's own
+/// borrows, the final [`Box::from_raw`] — derives from this one pointer,
+/// and only *shared* references are ever created from it. [`Drop`] makes
+/// the teardown order explicit: first the session (which borrows the
+/// instance), then the instance allocation.
 pub struct OwnedSession {
     session: std::mem::ManuallyDrop<Box<dyn PreparedProblem + 'static>>,
-    inst: *mut MipInstance,
+    inst: std::ptr::NonNull<MipInstance>,
 }
 
 impl OwnedSession {
     pub fn prepare(engine: &dyn Engine, inst: MipInstance) -> Result<OwnedSession> {
-        let inst = Box::into_raw(Box::new(inst));
-        // SAFETY: `inst` is a live heap allocation that only Drop (below)
-        // reclaims, after the session. Only shared references are ever
-        // derived from it — no `&mut MipInstance` exists anywhere.
-        let inst_ref: &'static MipInstance = unsafe { &*inst };
+        let inst = std::ptr::NonNull::from(Box::leak(Box::new(inst)));
+        // SAFETY: `inst` points at the live allocation leaked above and
+        // only Drop (below) reclaims it, after the session. The leaked
+        // `&mut` is gone; from here on only shared references are derived
+        // from the pointer, so handing out `&'static` is sound for as
+        // long as the session (which holds it) lives inside `self`.
+        let inst_ref: &'static MipInstance = unsafe { inst.as_ref() };
         let session = match engine.prepare(inst_ref) {
             Ok(s) => s,
             Err(e) => {
-                // SAFETY: no session borrows the allocation; reclaim it.
-                unsafe { drop(Box::from_raw(inst)) };
+                // SAFETY: no session exists, so nothing borrows the
+                // allocation; reclaim it through the original pointer.
+                unsafe { drop(Box::from_raw(inst.as_ptr())) };
                 return Err(e);
             }
         };
@@ -119,7 +131,7 @@ impl OwnedSession {
 
     pub fn instance(&self) -> &MipInstance {
         // SAFETY: the allocation is live until Drop; shared access only.
-        unsafe { &*self.inst }
+        unsafe { self.inst.as_ref() }
     }
 }
 
@@ -127,10 +139,11 @@ impl Drop for OwnedSession {
     fn drop(&mut self) {
         // SAFETY: drop order matters and is made explicit here — first
         // the session (which borrows the instance), then the instance
-        // allocation itself.
+        // allocation, reclaimed through the pointer that has carried the
+        // allocation's provenance since `prepare`.
         unsafe {
             std::mem::ManuallyDrop::drop(&mut self.session);
-            drop(Box::from_raw(self.inst));
+            drop(Box::from_raw(self.inst.as_ptr()));
         }
     }
 }
@@ -382,12 +395,23 @@ impl SessionStore {
             self.counters.flush_resolves += 1;
         }
         let tick = self.next_tick();
-        if self.sessions.contains_key(key) {
+        // split lookup: NLL cannot return a conditional `get_mut` borrow
+        // while keeping the miss path below borrowable, so a hit updates
+        // its entry in a scoped borrow and re-resolves on the way out —
+        // the second lookup is fallible instead of unwrapped, keeping the
+        // request path panic-free
+        let hit = match self.sessions.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                true
+            }
+            None => false,
+        };
+        if hit {
             if count {
                 self.counters.hits += 1;
             }
-            let e = self.sessions.get_mut(key).unwrap();
-            e.last_used = tick;
+            let e = self.sessions.get_mut(key).ok_or_else(|| anyhow!("session entry vanished"))?;
             return Ok((&mut e.session, true));
         }
         let inst = self
@@ -413,7 +437,12 @@ impl SessionStore {
         }
         self.sessions.insert(key.clone(), SessionEntry { session, last_used: tick, bytes });
         self.enforce_budget_keeping(Some(key));
-        Ok((&mut self.sessions.get_mut(key).unwrap().session, false))
+        // `enforce_budget_keeping(Some(key))` never evicts `key`, so the
+        // entry just inserted is still resident; stay fallible anyway
+        let e = self.sessions.get_mut(key).ok_or_else(|| {
+            anyhow!("session {:016x} evicted by its own budget enforcement", key.fingerprint)
+        })?;
+        Ok((&mut e.session, false))
     }
 
     fn total_bytes(&self) -> usize {

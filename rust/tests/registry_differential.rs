@@ -344,6 +344,19 @@ fn specialized_multithreaded_omp_reaches_generic_limit_point_on_pb() {
 }
 
 #[test]
+fn registry_roster_is_exactly_the_documented_engines() {
+    // the full engine roster, spelled out name by name: `gdp lint`'s
+    // registry-coverage rule checks that every registry entry appears
+    // here literally, so an engine added to the registry without being
+    // enrolled in this differential suite fails lint AND this assert
+    let registry = Registry::with_defaults();
+    let names: Vec<&str> = registry.entries().iter().map(|e| e.name).collect();
+    let roster =
+        ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like", "gpu_atomic", "gpu_loop", "megakernel"];
+    assert_eq!(names, roster, "registry roster drifted — enroll the new engine here");
+}
+
+#[test]
 fn help_list_and_registry_agree() {
     // the CLI HELP text is generated from the registry; both must contain
     // the same names (the satellite fix for HELP drift)
