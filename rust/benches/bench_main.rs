@@ -20,20 +20,26 @@
 //! * service — the propagation service: cold request (pays `prepare`) vs
 //!   session-cache hit vs coalesced concurrent traffic; writes
 //!   `BENCH_service.json`.
+//! * precision — the mixed-precision core (DESIGN.md section 9): the
+//!   guarded f32 pre-pass + f64 verification vs the pure-f64 engine, and
+//!   the u32/SoA sweep layout vs the usize-CSR instance sweep, on the
+//!   integer-exact `int_chain`/`int_knapsack` families at million-row
+//!   scale (smoke shrinks the shapes); writes `BENCH_precision.json`.
 //! * paper — one end-to-end bench per paper table/figure, delegating to
 //!   the experiment harness on a reduced suite and printing the same rows
 //!   the paper reports.
 //!
 //! Filters: `cargo bench -- micro`, `cargo bench -- batch`,
-//! `cargo bench -- pb`, `cargo bench -- service`, `cargo bench -- table1`
-//! etc. `cargo bench -- smoke` is the CI quick mode: the pb and service
-//! groups on tiny shapes only (seconds, still writes BENCH_pb.json and
-//! BENCH_service.json).
+//! `cargo bench -- pb`, `cargo bench -- service`,
+//! `cargo bench -- precision`, `cargo bench -- table1` etc.
+//! `cargo bench -- smoke` is the CI quick mode: the pb, service and
+//! precision groups on tiny shapes only (seconds, still writes the
+//! BENCH_*.json files).
 
 use gdp::experiments;
 use gdp::gen::{branched_nodes, generate, Family, GenConfig};
 use gdp::instance::Bounds;
-use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::registry::{EngineSpec, Precision, Registry};
 use gdp::propagation::{Engine as _, PreparedProblem as _, Status};
 use gdp::util::cli::Args;
 use gdp::util::fmt::secs;
@@ -478,6 +484,133 @@ fn service_bench(smoke: bool) {
     }
 }
 
+/// The mixed-precision bench (DESIGN.md section 9), on the integer-exact
+/// families where the f32 pre-pass verifies without escalation:
+///
+/// * `f32_vs_f64` — a cold `propagate` through the registry-created
+///   engine at `--precision f32` (guarded f32 pre-pass + one f64
+///   verification sweep) vs the same engine at f64, per native engine.
+/// * `sweep_layout` — one full marked sweep over every row, u32-index
+///   SoA layout vs the usize-CSR `MipInstance` view, same kernel body.
+///
+/// Full mode runs million-row shapes; `smoke` shrinks them for CI.
+/// Writes BENCH_precision.json.
+fn precision_bench(smoke: bool) {
+    use gdp::propagation::core::kernels::sweep_row_marked;
+    use gdp::propagation::core::workset::WorkSet;
+    use gdp::propagation::core::SoaProblem;
+    use gdp::propagation::trace::RoundTrace;
+
+    let registry = Registry::with_defaults();
+    println!("\n== precision: f32 pre-pass + f64 verify vs pure f64; SoA/u32 vs usize CSR ==");
+    let iters = if smoke { 3 } else { 3 };
+    let mut records: Vec<Json> = Vec::new();
+    for family in [Family::IntChain, Family::IntKnapsack] {
+        let (rows, cols) = if smoke { (4000usize, 4000usize) } else { (1_000_000, 1_000_000) };
+        let inst = generate(&GenConfig {
+            family,
+            nrows: rows,
+            ncols: cols,
+            mean_row_nnz: 6,
+            int_frac: 1.0,
+            inf_bound_frac: 0.0,
+            seed: 33,
+        });
+        let start = Bounds::of(&inst);
+
+        // ---- f32 (guarded) vs f64 propagation per native engine
+        for (tag, spec) in [
+            ("cpu_seq", EngineSpec::new("cpu_seq")),
+            ("cpu_omp8", EngineSpec::new("cpu_omp").threads(8)),
+            ("gpu_model", EngineSpec::new("gpu_model")),
+        ] {
+            let e64 = registry.create(&spec).expect("native engine");
+            let e32 =
+                registry.create(&spec.clone().precision(Precision::F32)).expect("f32 engine");
+            let mut s64 = e64.prepare(&inst).expect("native prepare");
+            let mut s32 = e32.prepare(&inst).expect("f32 prepare");
+            // sanity outside the timed region: the guarded path must land
+            // on the same status as pure f64
+            assert_eq!(s32.propagate(&start).status, s64.propagate(&start).status);
+            let (_, f64_median, _) = measure(1, iters, || {
+                let _ = s64.propagate(&start);
+            });
+            let (_, f32_median, _) = measure(1, iters, || {
+                let _ = s32.propagate(&start);
+            });
+            let speedup = f64_median / f32_median.max(1e-12);
+            println!(
+                "bench precision/{}/{tag}/{rows}r  f64 {:>10}  f32 {:>10}  speedup {speedup:.2}x",
+                family.name(),
+                secs(f64_median),
+                secs(f32_median)
+            );
+            records.push(Json::obj(vec![
+                ("mode", Json::Str("f32_vs_f64".to_string())),
+                ("family", Json::Str(family.name().to_string())),
+                ("engine", Json::Str(tag.to_string())),
+                ("rows", Json::Num(rows as f64)),
+                ("f64_s", Json::Num(f64_median)),
+                ("f32_s", Json::Num(f32_median)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+
+        // ---- one full marked sweep: SoA/u32 layout vs usize-CSR view
+        let soa: SoaProblem = SoaProblem::from_instance(&inst);
+        let csc = inst.to_csc();
+        let nrows = inst.nrows();
+        let run_sweep = |use_soa: bool| {
+            let ws = WorkSet::new(nrows);
+            let mut lb = start.lb.clone();
+            let mut ub = start.ub.clone();
+            let mut rt = RoundTrace::default();
+            for r in 0..nrows {
+                let out = if use_soa {
+                    sweep_row_marked(
+                        &soa, &csc, r, &mut lb, &mut ub, &ws, None, None, &mut rt,
+                        |_, _, _, _, _| {},
+                    )
+                } else {
+                    sweep_row_marked(
+                        &inst, &csc, r, &mut lb, &mut ub, &ws, None, None, &mut rt,
+                        |_, _, _, _, _| {},
+                    )
+                };
+                if out.infeasible {
+                    break;
+                }
+            }
+        };
+        let (_, soa_median, _) = measure(1, iters, || run_sweep(true));
+        let (_, usize_median, _) = measure(1, iters, || run_sweep(false));
+        let speedup = usize_median / soa_median.max(1e-12);
+        println!(
+            "bench precision/{}/sweep/{rows}r  usize {:>10}  soa_u32 {:>10}  speedup {speedup:.2}x",
+            family.name(),
+            secs(usize_median),
+            secs(soa_median)
+        );
+        records.push(Json::obj(vec![
+            ("mode", Json::Str("sweep_layout".to_string())),
+            ("family", Json::Str(family.name().to_string())),
+            ("rows", Json::Num(rows as f64)),
+            ("usize_s", Json::Num(usize_median)),
+            ("soa_s", Json::Num(soa_median)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("precision".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_precision.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_precision.json"),
+        Err(e) => println!("(could not write BENCH_precision.json: {e})"),
+    }
+}
+
 fn paper(filter: Option<&str>) {
     // reduced suite: every table/figure regenerated end-to-end
     // fig5/fig6 rerun the XLA engine several times per instance; the bench
@@ -512,9 +645,11 @@ fn main() {
         Some("batch") => batch_bench(),
         Some("pb") => pb_bench(false),
         Some("service") => service_bench(false),
+        Some("precision") => precision_bench(false),
         Some("smoke") => {
             pb_bench(true);
             service_bench(true);
+            precision_bench(true);
         }
         Some(f) => paper(Some(f)),
         None => {
@@ -522,6 +657,7 @@ fn main() {
             batch_bench();
             pb_bench(false);
             service_bench(false);
+            precision_bench(false);
             paper(None);
         }
     }

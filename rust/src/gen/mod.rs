@@ -35,10 +35,19 @@ pub enum Family {
     /// Pseudo-boolean mix: packing/covering/cardinality plus binary
     /// knapsack and implication (generic-class) rows.
     PbMixed,
+    /// Integer-exact unit-coefficient chains (segmented cascades) plus
+    /// positive-integer noise rows. Every coefficient, bound and side is
+    /// a small integer, so single-precision sweeps are exact — the
+    /// mixed-precision benchmark family (DESIGN.md section 9).
+    IntChain,
+    /// Integer knapsacks: weights in 1..10, integer vars on small integer
+    /// boxes, integer capacities. Same exactness property as
+    /// [`Family::IntChain`], with wider rows.
+    IntKnapsack,
 }
 
 impl Family {
-    pub const ALL: [Family; 9] = [
+    pub const ALL: [Family; 11] = [
         Family::Knapsack,
         Family::SetCover,
         Family::Cascade,
@@ -48,6 +57,8 @@ impl Family {
         Family::PbCovering,
         Family::PbCardinality,
         Family::PbMixed,
+        Family::IntChain,
+        Family::IntKnapsack,
     ];
 
     /// The pseudo-boolean subset of [`Family::ALL`] (all-binary instances
@@ -70,6 +81,8 @@ impl Family {
             Family::PbCovering => "pb_covering",
             Family::PbCardinality => "pb_cardinality",
             Family::PbMixed => "pb_mixed",
+            Family::IntChain => "int_chain",
+            Family::IntKnapsack => "int_knapsack",
         }
     }
 }
@@ -122,6 +135,8 @@ pub fn generate(cfg: &GenConfig) -> MipInstance {
         Family::PbPacking | Family::PbCovering | Family::PbCardinality | Family::PbMixed => {
             gen_pb(cfg, &mut rng, &name)
         }
+        Family::IntChain => gen_int_chain(cfg, &mut rng, &name),
+        Family::IntKnapsack => gen_int_knapsack(cfg, &mut rng, &name),
     };
     debug_assert!(inst.validate().is_ok(), "generator produced invalid instance");
     inst
@@ -479,6 +494,76 @@ fn gen_pb(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
     MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
 }
 
+/// Integer-exact cascade family: segmented unit-coefficient chains
+/// `x_i <= x_{i-1}` with an integer anchor `x_h <= c` at each segment
+/// head, padded to `nrows` with positive-integer noise rows satisfied at
+/// `x = 0`. Every datum is a small integer, so f32 sweeps are bit-exact
+/// relative to f64 (DESIGN.md section 9); segments stay short enough to
+/// converge round-synchronously well inside the round cap.
+fn gen_int_chain(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols.max(1);
+    let lb = vec![0.0; n];
+    let ub: Vec<f64> = (0..n).map(|_| rng.range(4, 1000) as f64).collect();
+    let vt = vec![VarType::Integer; n];
+    let mut rows: Vec<(Vec<u32>, Vec<f64>)> = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for i in 0..n {
+        if rows.len() >= cfg.nrows {
+            break;
+        }
+        if i % 24 == 0 {
+            // segment head anchor: the tightening that cascades downward
+            rows.push((vec![i as u32], vec![1.0]));
+            lhs.push(f64::NEG_INFINITY);
+            rhs.push(rng.range(1, 16) as f64);
+        } else {
+            rows.push((vec![(i - 1) as u32, i as u32], vec![-1.0, 1.0]));
+            lhs.push(f64::NEG_INFINITY);
+            rhs.push(0.0);
+        }
+    }
+    // noise rows: positive integer coefficients, satisfied at x = 0
+    while rows.len() < cfg.nrows {
+        let k = row_len(cfg, rng);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..cols.len()).map(|_| rng.range(1, 5) as f64).collect();
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(rng.range(8, 64) as f64);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
+/// Integer-exact knapsack family: positive weights in 1..10 over integer
+/// variables on small integer boxes, capacity anchored at an integer
+/// feasible point plus integer slack. All magnitudes stay far below
+/// 2^24, so every activity and residual is exactly representable in f32
+/// — the second mixed-precision benchmark family (DESIGN.md section 9).
+fn gen_int_knapsack(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols.max(1);
+    let lb = vec![0.0; n];
+    let ub: Vec<f64> = (0..n).map(|_| rng.range(1, 16) as f64).collect();
+    let vt = vec![VarType::Integer; n];
+    // integer anchor point inside the box
+    let x: Vec<f64> = ub.iter().map(|&u| rng.below(u as usize + 1) as f64).collect();
+    let mut rows = Vec::with_capacity(cfg.nrows);
+    let mut lhs = Vec::with_capacity(cfg.nrows);
+    let mut rhs = Vec::with_capacity(cfg.nrows);
+    for _ in 0..cfg.nrows {
+        let k = row_len(cfg, rng);
+        let cols: Vec<u32> = rng.sample_distinct(n, k).iter().map(|&c| c as u32).collect();
+        let vals: Vec<f64> = (0..cols.len()).map(|_| rng.range(1, 10) as f64).collect();
+        let v = activity_at(&cols, &vals, &x);
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(v + rng.below(4) as f64);
+        rows.push((cols, vals));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
+}
+
 /// (min activity, max activity) of a row under the given bounds,
 /// treating infinite contributions as +-inf.
 fn activity_range(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> (f64, f64) {
@@ -685,6 +770,32 @@ mod tests {
                 }
                 _ => {}
             }
+        }
+    }
+
+    #[test]
+    fn int_families_are_integer_exact() {
+        let int_exact = |v: f64| v.fract() == 0.0 && v.abs() < (1u64 << 20) as f64;
+        for family in [Family::IntChain, Family::IntKnapsack] {
+            let cfg = GenConfig { family, nrows: 60, ncols: 50, seed: 4, ..Default::default() };
+            let inst = generate(&cfg);
+            inst.validate().unwrap_or_else(|e| panic!("{}: {e}", family.name()));
+            assert!(inst.var_types.iter().all(|t| *t == VarType::Integer), "{}", family.name());
+            assert!(inst.matrix.vals.iter().all(|&v| int_exact(v)), "{}", family.name());
+            assert!(
+                inst.lb.iter().chain(inst.ub.iter()).all(|&v| !v.is_finite() || int_exact(v)),
+                "{}",
+                family.name()
+            );
+            assert!(
+                inst.lhs.iter().chain(inst.rhs.iter()).all(|&v| !v.is_finite() || int_exact(v)),
+                "{}",
+                family.name()
+            );
+            // the anchors actually drive propagation
+            use crate::propagation::Engine as _;
+            let r = crate::propagation::seq::SeqEngine::new().propagate(&inst);
+            assert_eq!(r.status, crate::propagation::Status::Converged, "{}", family.name());
         }
     }
 

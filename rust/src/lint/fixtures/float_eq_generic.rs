@@ -1,0 +1,31 @@
+// Lint fixture (not compiled): bare equality on generic `Scalar`
+// operands in propagation code. `S::ZERO`-style associated consts make
+// a line a float compare even though no float literal appears on it.
+
+pub fn bad<S: Scalar>(x: S) -> bool {
+    x == S::ZERO
+}
+
+pub fn also_bad<S: Scalar>(lo: S) -> bool {
+    lo != S::NEG_INFINITY
+}
+
+pub fn bad_f32(x: f32) -> bool {
+    x == f32::INFINITY
+}
+
+// --- GOOD fixture region: everything below must stay clean ---
+
+pub fn good<S: Scalar>(x: S) -> bool {
+    // FLOAT-EQ: exact infinity sentinel compare (fixture).
+    x == S::INFINITY
+}
+
+pub fn not_a_float_const(n: usize) -> bool {
+    // a path segment merely starting with a const name is not a float
+    n == cfg::ZEROED
+}
+
+pub fn unqualified(kind: u8) -> bool {
+    kind == ZERO_KIND
+}

@@ -80,7 +80,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("safety-comment", "every unsafe block is immediately preceded by // SAFETY:"),
     ("no-panic-request-path", "no unwrap/expect/panic in the service request path"),
     ("relaxed-ordering", "Relaxed only in core/state.rs + core/kernels.rs (// ORDERING:)"),
-    ("float-eq", "no bare float ==/!= in propagation/ (// FLOAT-EQ:)"),
+    ("float-eq", "no bare float/Scalar ==/!= in propagation/ (// FLOAT-EQ:)"),
     ("registry-coverage", "every engine is in registry_differential.rs and DESIGN.md"),
 ];
 
@@ -435,6 +435,12 @@ const FIXTURES: &[FixtureCase] = &[
     FixtureCase {
         path: "rust/src/propagation/bounds.rs",
         text: include_str!("fixtures/float_eq.rs"),
+        must_trip: "float-eq",
+        must_not_trip: &[],
+    },
+    FixtureCase {
+        path: "rust/src/propagation/core/mixed.rs",
+        text: include_str!("fixtures/float_eq_generic.rs"),
         must_trip: "float-eq",
         must_not_trip: &[],
     },

@@ -141,23 +141,55 @@ fn rule_ordering(sf: &SourceFile, out: &mut Vec<Violation>) {
     }
 }
 
-/// Heuristic for "this comparison involves floats": a float literal like
-/// `0.0` or an `f64::INFINITY`-family constant on the same line.
-fn has_float_operand(code: &str) -> bool {
-    if code.contains("f64::INFINITY") || code.contains("f64::NEG_INFINITY") {
-        return true;
+/// Float-valued associated consts a comparison operand can take:
+/// `f64::INFINITY`-family paths and the sealed `Scalar` trait's consts,
+/// which make a line like `x == S::ZERO` a float compare with no float
+/// literal in sight.
+const FLOAT_CONSTS: &[&str] = &[
+    "ZERO",
+    "ONE",
+    "INFINITY",
+    "NEG_INFINITY",
+    "NAN",
+    "INT_ROUND_EPS",
+    "FEAS_TOL",
+    "EPS_IMPROVE_REL",
+];
+
+/// True when `code` contains `name` as a full path-qualified segment —
+/// `S::ZERO` or `f32::INFINITY` match, `path::ZEROED` does not (the
+/// segment continues past the const name).
+fn has_const_segment(code: &str, name: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(name) {
+        let b = start + pos;
+        let e = b + name.len();
+        let prefixed = b >= 2 && bytes[b - 1] == b':' && bytes[b - 2] == b':';
+        let after = e == bytes.len() || !is_ident(bytes[e]);
+        if prefixed && after {
+            return true;
+        }
+        start = e;
     }
-    if code.contains("f64::NAN") {
+    false
+}
+
+/// Heuristic for "this comparison involves floats": a float literal like
+/// `0.0`, or a path-qualified float const (`f64::NAN`, `f32::INFINITY`,
+/// or a generic `Scalar` const like `S::ZERO`) on the same line.
+fn has_float_operand(code: &str) -> bool {
+    if FLOAT_CONSTS.iter().any(|c| has_const_segment(code, c)) {
         return true;
     }
     let b = code.as_bytes();
     b.windows(3).any(|w| w[0].is_ascii_digit() && w[1] == b'.' && w[2].is_ascii_digit())
 }
 
-/// `float-eq`: no bare `==`/`!=` on floats inside `propagation/` — exact
-/// comparisons are reserved for the bit-exactness helpers; intentional
-/// sites carry a `// FLOAT-EQ:` comment explaining why no tolerance
-/// applies.
+/// `float-eq`: no bare `==`/`!=` on floats inside `propagation/` —
+/// concrete (`f64`/`f32`) or generic over `Scalar` — exact comparisons
+/// are reserved for the bit-exactness helpers; intentional sites carry a
+/// `// FLOAT-EQ:` comment explaining why no tolerance applies.
 fn rule_float_eq(sf: &SourceFile, out: &mut Vec<Violation>) {
     if !sf.path.contains("src/propagation/") {
         return;
@@ -300,6 +332,26 @@ mod tests {
         assert!(check("rust/src/propagation/bounds.rs", ok).is_empty());
         // integer compares and tuple indexing do not look like floats
         assert!(check("rust/src/propagation/seq.rs", "if n == 0 { q.1 += 1; }\n").is_empty());
+    }
+
+    #[test]
+    fn float_eq_catches_generic_scalar_consts() {
+        // `Scalar` associated consts are float operands without a literal
+        let bad = "if x == S::ZERO {}\n";
+        assert_eq!(check("rust/src/propagation/core/mixed.rs", bad), vec!["float-eq"]);
+        let bad = "if lo != S::NEG_INFINITY {}\n";
+        assert_eq!(check("rust/src/propagation/core/kernels.rs", bad), vec!["float-eq"]);
+        // f32 paths count the same as the historical f64 ones
+        let bad = "if x == f32::INFINITY {}\n";
+        assert_eq!(check("rust/src/propagation/scalar.rs", bad), vec!["float-eq"]);
+        let ok = "// FLOAT-EQ: exact sentinel compare\nif x == S::INFINITY {}\n";
+        assert!(check("rust/src/propagation/core/mixed.rs", ok).is_empty());
+        // a segment merely starting with a const name is not a float, and
+        // the consts only count when path-qualified
+        assert!(check("rust/src/propagation/seq.rs", "if n == cfg::ZEROED {}\n").is_empty());
+        assert!(check("rust/src/propagation/seq.rs", "if kind == ZERO_KIND {}\n").is_empty());
+        assert!(has_const_segment("a == S::FEAS_TOL", "FEAS_TOL"));
+        assert!(!has_const_segment("a == FEAS_TOL", "FEAS_TOL"));
     }
 
     #[test]

@@ -97,11 +97,12 @@ gdp - GPU-parallel domain propagation (paper reproduction)
 
 USAGE:
   gdp propagate (--mps FILE | --opb FILE) [--engine {engines}]
-                [--threads N] [--f32] [--fastmath] [--jnp] [--max-rounds R]
-                [--no-specialize] [--warm-var J] [--batch N] [--artifacts DIR] [--bounds]
+                [--precision f64|f32] [--threads N] [--f32] [--fastmath] [--jnp]
+                [--max-rounds R] [--no-specialize] [--warm-var J] [--batch N]
+                [--artifacts DIR] [--bounds]
   gdp engines [--json]
   gdp --engines-json
-  gdp generate --family mixed|knapsack|setcover|cascade|denseconn|pb_packing|pb_covering|pb_cardinality|pb_mixed
+  gdp generate --family mixed|knapsack|setcover|cascade|denseconn|pb_packing|pb_covering|pb_cardinality|pb_mixed|int_chain|int_knapsack
                --rows M --cols N [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S]
                --out FILE   (a .opb suffix writes OPB; anything else MPS)
   gdp suite [--scale X] [--seed S] --out DIR
@@ -109,13 +110,13 @@ USAGE:
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
   gdp inspect (--mps FILE | --opb FILE)
-  gdp serve [--port P | --stdio] [--shards N] [--engine NAME] [--batch-max N]
-            [--batch-window-us U] [--max-sessions N] [--max-session-mb MB]
-            [--artifacts DIR]
+  gdp serve [--port P | --stdio] [--shards N] [--engine NAME] [--precision f64|f32]
+            [--batch-max N] [--batch-window-us U] [--max-sessions N]
+            [--max-session-mb MB] [--artifacts DIR]
   gdp request [--addr HOST:PORT] load (--mps FILE | --opb FILE)
   gdp request [--addr HOST:PORT] propagate (--session HEX | --mps FILE | --opb FILE)
-              [--engine NAME] [--threads N] [--max-rounds R] [--no-specialize]
-              [--seed-vars 1,2] [--summary]
+              [--engine NAME] [--precision f64|f32] [--threads N] [--max-rounds R]
+              [--no-specialize] [--seed-vars 1,2] [--summary]
   gdp request [--addr HOST:PORT] stats [--check] | evict [--session HEX] | shutdown
   gdp bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
                   [--injected-slowdown F] [--write-baseline]
@@ -273,6 +274,8 @@ fn cmd_generate(args: &Args) -> anyhow::Result<bool> {
         "pb_covering" => Family::PbCovering,
         "pb_cardinality" => Family::PbCardinality,
         "pb_mixed" => Family::PbMixed,
+        "int_chain" => Family::IntChain,
+        "int_knapsack" => Family::IntKnapsack,
         other => anyhow::bail!("unknown family {other}"),
     };
     let cfg = GenConfig {
@@ -342,6 +345,11 @@ fn service_config_from_args(args: &Args) -> gdp::service::ServiceConfig {
     let defaults = gdp::service::ServiceConfig::default();
     gdp::service::ServiceConfig {
         default_engine: args.get_or("engine", &defaults.default_engine).to_string(),
+        default_precision: match args.get("precision") {
+            Some(p) => gdp::propagation::registry::Precision::parse(p)
+                .unwrap_or_else(|e| panic!("{e:#}")),
+            None => defaults.default_precision,
+        },
         batch_max: args.get_usize("batch-max", defaults.batch_max).max(1),
         batch_window: std::time::Duration::from_micros(
             args.get_u64("batch-window-us", defaults.batch_window.as_micros() as u64),
@@ -469,6 +477,7 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
             ];
             let knobs_given = args.get("threads").is_some()
                 || args.get("max-rounds").is_some()
+                || args.get("precision").is_some()
                 || args.flag("no-specialize");
             match args.get("engine") {
                 Some(engine) => {
@@ -482,11 +491,14 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
                     if args.flag("no-specialize") {
                         pairs.push(("no_specialize", Json::Bool(true)));
                     }
+                    if let Some(p) = args.get("precision") {
+                        pairs.push(("precision", Json::Str(p.into())));
+                    }
                 }
                 None if knobs_given => anyhow::bail!(
-                    "--threads/--max-rounds/--no-specialize require --engine NAME \
-                     (the server would otherwise run its default engine with \
-                     default settings)"
+                    "--threads/--max-rounds/--no-specialize/--precision require \
+                     --engine NAME (the server would otherwise run its default \
+                     engine with default settings)"
                 ),
                 None => {}
             }

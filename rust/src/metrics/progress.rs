@@ -17,8 +17,10 @@
 //! yields two normalized measures:
 //!
 //! * [`reduction`] — the fraction of the starting capped volume a run
-//!   removed, `(Γ(D⁰) - Γ(D)) / Γ(D⁰)` in `[0, 1]`. Needs only the start
-//!   and end domains; this is what the serving layer reports per request.
+//!   removed, `Σ_j max(0, w⁰_j - w_j) / Γ(D⁰)` in `[0, 1]` (per-variable
+//!   clamped, so mixed-precision runs that widen individual intervals
+//!   cannot cancel tightening elsewhere). Needs only the start and end
+//!   domains; this is what the serving layer reports per request.
 //! * [`progress_to_limit`] — the paper's measure proper: with the limit
 //!   point `D*` known, `(Γ(D⁰) - Γ(D)) / (Γ(D⁰) - Γ(D*))` tells how much
 //!   of the *achievable* tightening a (possibly truncated, e.g.
@@ -49,14 +51,27 @@ pub fn gamma(bounds: &Bounds, cap: f64) -> f64 {
 }
 
 /// Fraction of the starting capped volume removed going `start -> end`,
-/// clamped to `[0, 1]`. A start with no capped volume (all variables
-/// fixed) returns 0: there was nothing to remove.
+/// in `[0, 1]`. The numerator is summed **per variable** with each
+/// term clamped at 0, `Σ_j max(0, w⁰_j - w_j)`: an interval the run
+/// *widened* (the f32 pre-pass reports outward-rounded boxes, which can
+/// exceed the start on individual variables) contributes nothing instead
+/// of cancelling genuine tightening elsewhere. A start with no capped
+/// volume (all variables fixed) returns 0: there was nothing to remove.
 pub fn reduction(start: &Bounds, end: &Bounds, cap: f64) -> f64 {
     let g0 = gamma(start, cap);
     if g0 <= 0.0 {
         return 0.0;
     }
-    ((g0 - gamma(end, cap)) / g0).clamp(0.0, 1.0)
+    let removed: f64 = start
+        .lb
+        .iter()
+        .zip(&start.ub)
+        .zip(end.lb.iter().zip(&end.ub))
+        .map(|((&l0, &u0), (&l1, &u1))| {
+            (capped_width(l0, u0, cap) - capped_width(l1, u1, cap)).max(0.0)
+        })
+        .sum();
+    (removed / g0).clamp(0.0, 1.0)
 }
 
 /// The paper's progress measure with a known limit point: the fraction of
@@ -104,6 +119,21 @@ mod tests {
         // fully fixed start: nothing to remove
         let fixed = b(vec![1.0], vec![1.0]);
         assert_eq!(reduction(&fixed, &fixed, DEFAULT_CAP), 0.0);
+    }
+
+    #[test]
+    fn widened_intervals_do_not_cancel_progress() {
+        // an f32 pre-pass box is outward-rounded and can exceed the start
+        // on individual variables; that widening must contribute zero to
+        // the measure, not cancel the genuine tightening on the others
+        let start = b(vec![0.0, 0.0], vec![10.0, 10.0]);
+        let mixed = b(vec![0.0, -5.0], vec![5.0, 15.0]);
+        let r = reduction(&start, &mixed, DEFAULT_CAP);
+        // var 0 removed 5 of the 20 total; var 1's widening is ignored
+        assert!((r - 0.25).abs() < 1e-12, "{r}");
+        // every interval widened: zero progress, never negative
+        let all_wider = b(vec![-1.0, -1.0], vec![11.0, 11.0]);
+        assert_eq!(reduction(&start, &all_wider, DEFAULT_CAP), 0.0);
     }
 
     #[test]

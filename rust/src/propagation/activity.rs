@@ -1,19 +1,24 @@
 //! Activity arithmetic with infinity-contribution counters (paper
-//! sections 1.1 and 3.4). Shared by every engine.
+//! sections 1.1 and 3.4). Shared by every engine, generic over the
+//! propagation [`Scalar`] (f64 reference precision, f32 bandwidth
+//! precision); every type defaults to `S = f64` so existing call sites
+//! are unchanged.
+
+use super::scalar::Scalar;
 
 /// One directed activity: the finite part of the sum plus the number of
 //  infinite contributions.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct Act {
-    pub fin: f64,
+pub struct Act<S: Scalar = f64> {
+    pub fin: S,
     pub cnt: u32,
 }
 
-impl Act {
+impl<S: Scalar> Act<S> {
     #[inline]
-    pub fn add(&mut self, contribution: f64) {
+    pub fn add(&mut self, contribution: S) {
         if contribution.is_finite() {
-            self.fin += contribution;
+            self.fin = self.fin + contribution;
         } else {
             self.cnt += 1;
         }
@@ -23,11 +28,11 @@ impl Act {
     /// infinite (`sign` picks which infinity an `inf_count > 0` means:
     /// -1 for minimum activity, +1 for maximum activity).
     #[inline]
-    pub fn value(&self, sign: f64) -> f64 {
+    pub fn value(&self, sign: S) -> S {
         if self.cnt == 0 {
             self.fin
         } else {
-            sign * f64::INFINITY
+            sign * S::INFINITY
         }
     }
 
@@ -35,50 +40,50 @@ impl Act {
     /// (paper eqs. (5a)/(5b) with the section 3.4 counter trick):
     /// finite iff every *other* contribution is finite.
     #[inline]
-    pub fn residual(&self, own_contribution: f64, sign: f64) -> f64 {
+    pub fn residual(&self, own_contribution: S, sign: S) -> S {
         if own_contribution.is_finite() {
             if self.cnt == 0 {
                 self.fin - own_contribution
             } else {
-                sign * f64::INFINITY
+                sign * S::INFINITY
             }
         } else if self.cnt == 1 {
             self.fin
         } else {
-            sign * f64::INFINITY
+            sign * S::INFINITY
         }
     }
 }
 
 /// Min/max activity pair of one constraint.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct RowActivity {
-    pub min: Act,
-    pub max: Act,
+pub struct RowActivity<S: Scalar = f64> {
+    pub min: Act<S>,
+    pub max: Act<S>,
 }
 
-impl RowActivity {
+impl<S: Scalar> RowActivity<S> {
     /// Accumulate one entry given coefficient `a` and the variable's
     /// current bounds: minimum activity uses lb for a>0 / ub for a<=0,
     /// maximum activity the opposite (paper eq. (3a)/(3b)).
     #[inline]
-    pub fn accumulate(&mut self, a: f64, lb: f64, ub: f64) {
-        let (bmin, bmax) = if a > 0.0 { (lb, ub) } else { (ub, lb) };
-        self.min.add(if bmin.is_finite() { a * bmin } else { f64::NEG_INFINITY });
-        self.max.add(if bmax.is_finite() { a * bmax } else { f64::INFINITY });
+    pub fn accumulate(&mut self, a: S, lb: S, ub: S) {
+        let (bmin, bmax) = if a > S::ZERO { (lb, ub) } else { (ub, lb) };
+        self.min.add(if bmin.is_finite() { a * bmin } else { S::NEG_INFINITY });
+        self.max.add(if bmax.is_finite() { a * bmax } else { S::INFINITY });
     }
 
     /// Accumulate one unit-coefficient entry (`a == 1.0`): the bounds
     /// contribute directly, skipping the multiply. Bit-exact with
     /// `accumulate(1.0, lb, ub)` (`x * 1.0` is an IEEE identity).
     #[inline]
-    pub fn accumulate_unit(&mut self, lb: f64, ub: f64) {
-        self.min.add(if lb.is_finite() { lb } else { f64::NEG_INFINITY });
-        self.max.add(if ub.is_finite() { ub } else { f64::INFINITY });
+    pub fn accumulate_unit(&mut self, lb: S, ub: S) {
+        self.min.add(if lb.is_finite() { lb } else { S::NEG_INFINITY });
+        self.max.add(if ub.is_finite() { ub } else { S::INFINITY });
     }
 
     /// Compute for a whole row.
-    pub fn of_row(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> RowActivity {
+    pub fn of_row(cols: &[u32], vals: &[S], lb: &[S], ub: &[S]) -> RowActivity<S> {
         let mut act = RowActivity::default();
         for (&c, &a) in cols.iter().zip(vals) {
             act.accumulate(a, lb[c as usize], ub[c as usize]);
@@ -88,7 +93,7 @@ impl RowActivity {
 
     /// [`RowActivity::of_row`] for unit-coefficient rows (the specialized
     /// classes): no per-entry multiply, bit-exact with the general path.
-    pub fn of_unit_row(cols: &[u32], lb: &[f64], ub: &[f64]) -> RowActivity {
+    pub fn of_unit_row(cols: &[u32], lb: &[S], ub: &[S]) -> RowActivity<S> {
         let mut act = RowActivity::default();
         for &c in cols {
             act.accumulate_unit(lb[c as usize], ub[c as usize]);
@@ -96,23 +101,23 @@ impl RowActivity {
         act
     }
 
-    pub fn min_value(&self) -> f64 {
-        self.min.value(-1.0)
+    pub fn min_value(&self) -> S {
+        self.min.value(-S::ONE)
     }
 
-    pub fn max_value(&self) -> f64 {
-        self.max.value(1.0)
+    pub fn max_value(&self) -> S {
+        self.max.value(S::ONE)
     }
 
     /// Paper Step 1: constraint is redundant under [lhs, rhs].
     #[inline]
-    pub fn redundant(&self, lhs: f64, rhs: f64) -> bool {
+    pub fn redundant(&self, lhs: S, rhs: S) -> bool {
         lhs <= self.min_value() && self.max_value() <= rhs
     }
 
     /// Paper Step 2: constraint cannot be satisfied.
     #[inline]
-    pub fn infeasible(&self, lhs: f64, rhs: f64) -> bool {
+    pub fn infeasible(&self, lhs: S, rhs: S) -> bool {
         self.min_value() > rhs || lhs > self.max_value()
     }
 
@@ -120,7 +125,7 @@ impl RowActivity {
     /// of Algorithm 1 line 9: a finite side with at most one infinite
     /// contribution on the relevant activity)
     #[inline]
-    pub fn can_propagate(&self, lhs: f64, rhs: f64) -> bool {
+    pub fn can_propagate(&self, lhs: S, rhs: S) -> bool {
         (rhs.is_finite() && self.min.cnt <= 1) || (lhs.is_finite() && self.max.cnt <= 1)
     }
 }
@@ -230,5 +235,22 @@ mod tests {
         let act1 = RowActivity::of_row(&[0], &[1.0], &[f64::NEG_INFINITY], &[f64::INFINITY]);
         assert!(act1.can_propagate(0.0, 1.0)); // single infinity: residual finite
         assert!(!act1.can_propagate(f64::NEG_INFINITY, f64::INFINITY)); // free row
+    }
+
+    #[test]
+    fn generic_f32_activity_matches_f64_on_exact_values() {
+        // integer-valued data is exact at both widths
+        let cols = [0u32, 1, 2];
+        let vals64 = [2.0f64, -3.0, 1.0];
+        let lb64 = [0.0f64, -1.0, 2.0];
+        let ub64 = [4.0f64, 5.0, 8.0];
+        let vals32: Vec<f32> = vals64.iter().map(|&v| v as f32).collect();
+        let lb32: Vec<f32> = lb64.iter().map(|&v| v as f32).collect();
+        let ub32: Vec<f32> = ub64.iter().map(|&v| v as f32).collect();
+        let a64 = RowActivity::of_row(&cols, &vals64, &lb64, &ub64);
+        let a32: RowActivity<f32> = RowActivity::of_row(&cols, &vals32, &lb32, &ub32);
+        assert_eq!(a32.min_value() as f64, a64.min_value());
+        assert_eq!(a32.max_value() as f64, a64.max_value());
+        assert!(a32.can_propagate(-100.0, 100.0));
     }
 }

@@ -1,55 +1,57 @@
 //! Bound-candidate computation (paper eqs. (4a)/(4b) in residual form
-//! (5a)/(5b)) and the update rule. Mirrors the candidate kernel
-//! (python/compile/kernels/candidates.py) exactly; the differential tests
-//! in rust/tests/xla_differential.rs rely on this.
+//! (5a)/(5b)) and the update rule, generic over the propagation
+//! [`Scalar`] (types default to `S = f64`, keeping existing call sites
+//! and the python mirror bit-identical). Mirrors the candidate kernel
+//! (python/compile/kernels/candidates.py) exactly at f64; the
+//! differential tests in rust/tests/xla_differential.rs rely on this.
 
 use super::activity::RowActivity;
+use super::scalar::Scalar;
 use crate::instance::RowClass;
-use crate::numerics::{improves_lb, improves_ub, INT_ROUND_EPS};
 
 /// Lower/upper bound candidate of one (row, entry) pair. Non-informative
 /// candidates are -inf/+inf (they never pass the improvement check).
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Candidate {
-    pub lb: f64,
-    pub ub: f64,
+pub struct Candidate<S: Scalar = f64> {
+    pub lb: S,
+    pub ub: S,
 }
 
 /// Compute the candidates variable `j` (coefficient `a`, bounds `lbj/ubj`,
 /// integrality `is_int`) receives from a row with activity `act` and sides
 /// `[lhs, rhs]`.
 #[inline]
-pub fn candidates(
-    a: f64,
-    lbj: f64,
-    ubj: f64,
+pub fn candidates<S: Scalar>(
+    a: S,
+    lbj: S,
+    ubj: S,
     is_int: bool,
-    act: &RowActivity,
-    lhs: f64,
-    rhs: f64,
-) -> Candidate {
+    act: &RowActivity<S>,
+    lhs: S,
+    rhs: S,
+) -> Candidate<S> {
     // FLOAT-EQ: guards against a literal zero coefficient only — any
     // nonzero value, however small, is numerically meaningful here
-    debug_assert!(a != 0.0);
+    debug_assert!(a != S::ZERO);
     // this entry's own contributions to the min/max activity
-    let (bmin, bmax) = if a > 0.0 { (lbj, ubj) } else { (ubj, lbj) };
-    let own_min = if bmin.is_finite() { a * bmin } else { f64::NEG_INFINITY };
-    let own_max = if bmax.is_finite() { a * bmax } else { f64::INFINITY };
-    let resmin = act.min.residual(own_min, -1.0);
-    let resmax = act.max.residual(own_max, 1.0);
+    let (bmin, bmax) = if a > S::ZERO { (lbj, ubj) } else { (ubj, lbj) };
+    let own_min = if bmin.is_finite() { a * bmin } else { S::NEG_INFINITY };
+    let own_max = if bmax.is_finite() { a * bmax } else { S::INFINITY };
+    let resmin = act.min.residual(own_min, -S::ONE);
+    let resmax = act.max.residual(own_max, S::ONE);
 
     // a > 0:  x_j <= (rhs - resmin)/a,  x_j >= (lhs - resmax)/a
     // a < 0:  x_j <= (lhs - resmax)/a,  x_j >= (rhs - resmin)/a
-    let ub_num = if a > 0.0 { rhs - resmin } else { lhs - resmax };
-    let lb_num = if a > 0.0 { lhs - resmax } else { rhs - resmin };
-    let mut ub = if ub_num.is_finite() { ub_num / a } else { f64::INFINITY };
-    let mut lb = if lb_num.is_finite() { lb_num / a } else { f64::NEG_INFINITY };
+    let ub_num = if a > S::ZERO { rhs - resmin } else { lhs - resmax };
+    let lb_num = if a > S::ZERO { lhs - resmax } else { rhs - resmin };
+    let mut ub = if ub_num.is_finite() { ub_num / a } else { S::INFINITY };
+    let mut lb = if lb_num.is_finite() { lb_num / a } else { S::NEG_INFINITY };
     if is_int {
         if ub.is_finite() {
-            ub = (ub + INT_ROUND_EPS).floor();
+            ub = (ub + S::INT_ROUND_EPS).floor();
         }
         if lb.is_finite() {
-            lb = (lb - INT_ROUND_EPS).ceil();
+            lb = (lb - S::INT_ROUND_EPS).ceil();
         }
     }
     Candidate { lb, ub }
@@ -63,27 +65,27 @@ pub fn candidates(
 /// [`candidates`]`(1.0, …, true, …)` because `x * 1.0` and `x / 1.0`
 /// are IEEE identities and the infinity cases branch identically.
 #[inline]
-pub fn unit_row_candidates(
-    lbj: f64,
-    ubj: f64,
-    act: &RowActivity,
-    lhs: f64,
-    rhs: f64,
-) -> Candidate {
-    let mut ub = f64::INFINITY;
+pub fn unit_row_candidates<S: Scalar>(
+    lbj: S,
+    ubj: S,
+    act: &RowActivity<S>,
+    lhs: S,
+    rhs: S,
+) -> Candidate<S> {
+    let mut ub = S::INFINITY;
     if rhs.is_finite() {
-        let own_min = if lbj.is_finite() { lbj } else { f64::NEG_INFINITY };
-        let num = rhs - act.min.residual(own_min, -1.0);
+        let own_min = if lbj.is_finite() { lbj } else { S::NEG_INFINITY };
+        let num = rhs - act.min.residual(own_min, -S::ONE);
         if num.is_finite() {
-            ub = (num + INT_ROUND_EPS).floor();
+            ub = (num + S::INT_ROUND_EPS).floor();
         }
     }
-    let mut lb = f64::NEG_INFINITY;
+    let mut lb = S::NEG_INFINITY;
     if lhs.is_finite() {
-        let own_max = if ubj.is_finite() { ubj } else { f64::INFINITY };
-        let num = lhs - act.max.residual(own_max, 1.0);
+        let own_max = if ubj.is_finite() { ubj } else { S::INFINITY };
+        let num = lhs - act.max.residual(own_max, S::ONE);
         if num.is_finite() {
-            lb = (num - INT_ROUND_EPS).ceil();
+            lb = (num - S::INT_ROUND_EPS).ceil();
         }
     }
     Candidate { lb, ub }
@@ -97,12 +99,17 @@ pub fn unit_row_candidates(
 /// `+inf`, matching the general rule's skip of the integer rounding for
 /// non-finite candidates.
 #[inline]
-pub fn knapsack_row_candidates(a: f64, lbj: f64, act: &RowActivity, rhs: f64) -> Candidate {
-    debug_assert!(a > 0.0);
-    let own_min = if lbj.is_finite() { a * lbj } else { f64::NEG_INFINITY };
-    let num = rhs - act.min.residual(own_min, -1.0);
-    let ub = if num.is_finite() { (num / a + INT_ROUND_EPS).floor() } else { f64::INFINITY };
-    Candidate { lb: f64::NEG_INFINITY, ub }
+pub fn knapsack_row_candidates<S: Scalar>(
+    a: S,
+    lbj: S,
+    act: &RowActivity<S>,
+    rhs: S,
+) -> Candidate<S> {
+    debug_assert!(a > S::ZERO);
+    let own_min = if lbj.is_finite() { a * lbj } else { S::NEG_INFINITY };
+    let num = rhs - act.min.residual(own_min, -S::ONE);
+    let ub = if num.is_finite() { (num / a + S::INT_ROUND_EPS).floor() } else { S::INFINITY };
+    Candidate { lb: S::NEG_INFINITY, ub }
 }
 
 /// Candidate computation dispatched on the row's constraint class: the
@@ -112,16 +119,16 @@ pub fn knapsack_row_candidates(a: f64, lbj: f64, act: &RowActivity, rhs: f64) ->
 /// the lookup.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-pub fn candidates_for_class(
+pub fn candidates_for_class<S: Scalar>(
     class: RowClass,
-    a: f64,
-    lbj: f64,
-    ubj: f64,
+    a: S,
+    lbj: S,
+    ubj: S,
     is_int: impl FnOnce() -> bool,
-    act: &RowActivity,
-    lhs: f64,
-    rhs: f64,
-) -> Candidate {
+    act: &RowActivity<S>,
+    lhs: S,
+    rhs: S,
+) -> Candidate<S> {
     match class {
         RowClass::SetPacking | RowClass::SetCovering | RowClass::Cardinality => {
             unit_row_candidates(lbj, ubj, act, lhs, rhs)
@@ -133,12 +140,12 @@ pub fn candidates_for_class(
 
 /// Apply a candidate to the bound pair; returns (lb_changed, ub_changed).
 #[inline]
-pub fn apply(cand: Candidate, lb: &mut f64, ub: &mut f64) -> (bool, bool) {
-    let l = improves_lb(*lb, cand.lb);
+pub fn apply<S: Scalar>(cand: Candidate<S>, lb: &mut S, ub: &mut S) -> (bool, bool) {
+    let l = S::improves_lb(*lb, cand.lb);
     if l {
         *lb = cand.lb;
     }
-    let u = improves_ub(*ub, cand.ub);
+    let u = S::improves_ub(*ub, cand.ub);
     if u {
         *ub = cand.ub;
     }
@@ -309,5 +316,19 @@ mod tests {
         let c = candidates(1.0, 0.0, 5.0, false, &act, 5.0, 5.0);
         assert_eq!(c.lb, 0.0);
         assert_eq!(c.ub, 0.0);
+    }
+
+    #[test]
+    fn f32_candidates_match_f64_on_integer_data() {
+        // integer coefficients/bounds/sides are exact at both widths, so
+        // the generic rule must agree bit-for-bit after widening.
+        let act64 = act_of(&[(2.0, 0.0, 10.0), (3.0, -1.0, 4.0)]);
+        let mut act32: RowActivity<f32> = RowActivity::default();
+        act32.accumulate(2.0, 0.0, 10.0);
+        act32.accumulate(3.0, -1.0, 4.0);
+        let c64 = candidates(2.0, 0.0, 10.0, true, &act64, f64::NEG_INFINITY, 12.0);
+        let c32 = candidates(2.0f32, 0.0, 10.0, true, &act32, f32::NEG_INFINITY, 12.0);
+        assert_eq!(c32.ub as f64, c64.ub);
+        assert_eq!(c32.lb as f64, c64.lb);
     }
 }

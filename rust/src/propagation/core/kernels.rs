@@ -4,6 +4,20 @@
 //! 4.2), and the round-synchronous phases of Algorithm 2 (activity
 //! recompute, per-column candidate reduction, commit).
 //!
+//! All kernels are generic along two axes:
+//!
+//! * the propagation [`Scalar`] `S` (f64 reference precision, f32
+//!   bandwidth precision — the paper ships `Double`/`Float` kernel
+//!   variants for the same reason), and
+//! * the matrix view [`SweepProblem`], so the same kernel body runs over
+//!   a [`MipInstance`] (the classic AoS CSR with usize row pointers) or
+//!   the flat SoA / u32-CSR layout in [`super::layout`].
+//!
+//! [`MipInstance`] implements only `SweepProblem<f64>`, which keeps type
+//! inference at every pre-existing call site unchanged (engines pass
+//! `&MipInstance` and `&mut [f64]` slices and everything resolves to
+//! `S = f64`).
+//!
 //! Every candidate-producing kernel takes an optional per-row
 //! [`RowClass`] slice (the prepare-time constraint-class analysis,
 //! `instance::classify`): tagged rows dispatch the specialized
@@ -16,12 +30,53 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::super::activity::RowActivity;
 use super::super::bounds::{apply, candidates_for_class};
+use super::super::scalar::Scalar;
 use super::super::trace::RoundTrace;
 use super::state::AtomicBounds;
 use super::workset::WorkSet;
 use crate::instance::{MipInstance, RowClass, VarType};
-use crate::numerics::{improves_lb, improves_ub, FEAS_TOL};
 use crate::sparse::Csc;
+
+/// Read-only matrix view the sweep kernels run over: row slices,
+/// constraint sides and variable integrality at scalar width `S`.
+/// Implemented by [`MipInstance`] (at f64 only) and by the SoA layout
+/// in [`super::layout`] (at both widths).
+pub trait SweepProblem<S: Scalar> {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    /// (col_idx, vals) of one row.
+    fn row(&self, r: usize) -> (&[u32], &[S]);
+    fn lhs(&self, r: usize) -> S;
+    fn rhs(&self, r: usize) -> S;
+    fn is_int(&self, j: usize) -> bool;
+}
+
+impl SweepProblem<f64> for MipInstance {
+    #[inline]
+    fn nrows(&self) -> usize {
+        self.matrix.nrows
+    }
+    #[inline]
+    fn ncols(&self) -> usize {
+        self.matrix.ncols
+    }
+    #[inline]
+    fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        self.matrix.row(r)
+    }
+    #[inline]
+    fn lhs(&self, r: usize) -> f64 {
+        self.lhs[r]
+    }
+    #[inline]
+    fn rhs(&self, r: usize) -> f64 {
+        self.rhs[r]
+    }
+    #[inline]
+    fn is_int(&self, j: usize) -> bool {
+        self.var_types[j] == VarType::Integer
+    }
+}
 
 /// The class of row `r` under an optional tag slice (absent = generic).
 #[inline]
@@ -49,19 +104,19 @@ pub struct SweepOutcome {
 /// Returns early on an empty domain, per the [`super::super::Status::Infeasible`]
 /// contract.
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_row_marked(
-    inst: &MipInstance,
+pub fn sweep_row_marked<S: Scalar, P: SweepProblem<S>>(
+    prob: &P,
     csc: &Csc,
     r: usize,
-    lb: &mut [f64],
-    ub: &mut [f64],
+    lb: &mut [S],
+    ub: &mut [S],
     ws: &WorkSet,
     skip_var: Option<&[bool]>,
     classes: Option<&[RowClass]>,
     rt: &mut RoundTrace,
-    mut on_change: impl FnMut(usize, bool, bool, f64, f64),
+    mut on_change: impl FnMut(usize, bool, bool, S, S),
 ) -> SweepOutcome {
-    let (cols, vals) = inst.matrix.row(r);
+    let (cols, vals) = prob.row(r);
     rt.rows_processed += 1;
     rt.nnz_processed += cols.len();
     let class = class_of(classes, r);
@@ -72,7 +127,7 @@ pub fn sweep_row_marked(
     } else {
         RowActivity::of_row(cols, vals, lb, ub)
     };
-    let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+    let (lhs, rhs) = (prob.lhs(r), prob.rhs(r));
     // line 9: "can c propagate" — skip redundant rows and rows with no
     // finite side / too many infinities (early termination)
     if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
@@ -87,22 +142,14 @@ pub fn sweep_row_marked(
         }
         // line 11 "can v be tightened" is folded into the candidate
         // computation: non-informative candidates are +-inf
-        let cand = candidates_for_class(
-            class,
-            a,
-            lb[j],
-            ub[j],
-            || inst.var_types[j] == VarType::Integer,
-            &act,
-            lhs,
-            rhs,
-        );
+        let cand =
+            candidates_for_class(class, a, lb[j], ub[j], || prob.is_int(j), &act, lhs, rhs);
         let (lch, uch) = apply(cand, &mut lb[j], &mut ub[j]);
         if lch || uch {
             changed = true;
             rt.bound_changes += (lch as usize) + (uch as usize);
             on_change(j, lch, uch, lb[j], ub[j]);
-            if lb[j] > ub[j] + FEAS_TOL {
+            if lb[j] > ub[j] + S::FEAS_TOL {
                 // empty domain: stop immediately
                 return SweepOutcome { changed: true, infeasible: true };
             }
@@ -134,16 +181,16 @@ pub struct RowCounters {
 /// bounds. Like the OpenMP original, bound changes made by other threads
 /// *within* a round may or may not be observed — the update lattice is
 /// monotone, so every interleaving converges to a valid state.
-pub fn sweep_row_atomic(
-    inst: &MipInstance,
+pub fn sweep_row_atomic<S: Scalar, P: SweepProblem<S>>(
+    prob: &P,
     csc: &Csc,
     r: usize,
-    bounds: &AtomicBounds,
+    bounds: &AtomicBounds<S>,
     ws: &WorkSet,
     classes: Option<&[RowClass]>,
 ) -> RowCounters {
     let mut out = RowCounters::default();
-    let (cols, vals) = inst.matrix.row(r);
+    let (cols, vals) = prob.row(r);
     out.nnz += cols.len();
     let class = class_of(classes, r);
     let mut act = RowActivity::default();
@@ -158,7 +205,7 @@ pub fn sweep_row_atomic(
             act.accumulate(a, bounds.lb(j), bounds.ub(j));
         }
     }
-    let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+    let (lhs, rhs) = (prob.lhs(r), prob.rhs(r));
     if !act.can_propagate(lhs, rhs) || act.redundant(lhs, rhs) {
         return out;
     }
@@ -170,7 +217,7 @@ pub fn sweep_row_atomic(
             a,
             bounds.lb(j),
             bounds.ub(j),
-            || inst.var_types[j] == VarType::Integer,
+            || prob.is_int(j),
             &act,
             lhs,
             rhs,
@@ -178,22 +225,22 @@ pub fn sweep_row_atomic(
         let mut changed = false;
         // FLOAT-EQ: exact infinity compare — +inf is the "row proves the
         // variable empty from above" sentinel and admits no tolerance
-        if cand.lb.is_finite() || cand.lb == f64::INFINITY {
-            if improves_lb(bounds.lb(j), cand.lb) {
+        if cand.lb.is_finite() || cand.lb == S::INFINITY {
+            if S::improves_lb(bounds.lb(j), cand.lb) {
                 out.atomics += 1;
                 changed |= bounds.try_improve_lb(j, cand.lb);
             }
         }
         // FLOAT-EQ: exact infinity compare, mirrored for the upper bound
-        if cand.ub.is_finite() || cand.ub == f64::NEG_INFINITY {
-            if improves_ub(bounds.ub(j), cand.ub) {
+        if cand.ub.is_finite() || cand.ub == S::NEG_INFINITY {
+            if S::improves_ub(bounds.ub(j), cand.ub) {
                 out.atomics += 1;
                 changed |= bounds.try_improve_ub(j, cand.ub);
             }
         }
         if changed {
             out.changes += 1;
-            if bounds.lb(j) > bounds.ub(j) + FEAS_TOL {
+            if bounds.lb(j) > bounds.ub(j) + S::FEAS_TOL {
                 out.infeasible = true;
                 return out;
             }
@@ -231,11 +278,11 @@ impl ChunkCounters {
 /// One thread's share of a round: sweep the rows of `work` against shared
 /// atomic bounds, bailing out as soon as any thread flags infeasibility.
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_chunk_atomic(
-    inst: &MipInstance,
+pub fn sweep_chunk_atomic<S: Scalar, P: SweepProblem<S>>(
+    prob: &P,
     csc: &Csc,
     work: &[u32],
-    bounds: &AtomicBounds,
+    bounds: &AtomicBounds<S>,
     ws: &WorkSet,
     infeasible: &AtomicBool,
     classes: Option<&[RowClass]>,
@@ -245,7 +292,7 @@ pub fn sweep_chunk_atomic(
         if infeasible.load(Ordering::Relaxed) {
             break;
         }
-        let row = sweep_row_atomic(inst, csc, r as usize, bounds, ws, classes);
+        let row = sweep_row_atomic(prob, csc, r as usize, bounds, ws, classes);
         let infeas = row.infeasible;
         counters.absorb(row);
         if infeas {
@@ -256,15 +303,22 @@ pub fn sweep_chunk_atomic(
     counters
 }
 
+/// Worklist chunks are rounded up to a multiple of this many `u32`
+/// entries (64 bytes = one cache line), so two sweep threads never share
+/// a line of the worklist and chunk boundaries stay SIMD-friendly.
+pub const CHUNK_ALIGN: usize = 16;
+
 /// Fan `worklist` out over up to `threads` scoped threads, each running
-/// [`sweep_chunk_atomic`]; returns the summed counters. Uses plain
-/// contiguous chunking, like the paper's OpenMP static schedule.
+/// [`sweep_chunk_atomic`]; returns the summed counters. Uses contiguous
+/// chunking like the paper's OpenMP static schedule, with chunk
+/// boundaries padded to [`CHUNK_ALIGN`] so no two chunks split a cache
+/// line of the worklist.
 #[allow(clippy::too_many_arguments)]
-pub fn parallel_sweep(
-    inst: &MipInstance,
+pub fn parallel_sweep<S: Scalar, P: SweepProblem<S> + Sync>(
+    prob: &P,
     csc: &Csc,
     worklist: &[u32],
-    bounds: &AtomicBounds,
+    bounds: &AtomicBounds<S>,
     ws: &WorkSet,
     infeasible: &AtomicBool,
     threads: usize,
@@ -272,9 +326,9 @@ pub fn parallel_sweep(
 ) -> ChunkCounters {
     let nthreads = threads.min(worklist.len()).max(1);
     if nthreads == 1 {
-        return sweep_chunk_atomic(inst, csc, worklist, bounds, ws, infeasible, classes);
+        return sweep_chunk_atomic(prob, csc, worklist, bounds, ws, infeasible, classes);
     }
-    let chunk = worklist.len().div_ceil(nthreads);
+    let chunk = worklist.len().div_ceil(nthreads).next_multiple_of(CHUNK_ALIGN);
     let mut total = ChunkCounters::default();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -286,7 +340,7 @@ pub fn parallel_sweep(
             }
             let work = &worklist[lo..hi];
             handles.push(scope.spawn(move || {
-                sweep_chunk_atomic(inst, csc, work, bounds, ws, infeasible, classes)
+                sweep_chunk_atomic(prob, csc, work, bounds, ws, infeasible, classes)
             }));
         }
         for h in handles {
@@ -300,20 +354,20 @@ pub fn parallel_sweep(
 /// recompute every (active) row's activity against the current bounds —
 /// unit-coefficient classes through the multiply-free accumulation.
 /// Returns the nonzeros touched.
-pub fn recompute_activities(
-    inst: &MipInstance,
-    lb: &[f64],
-    ub: &[f64],
-    acts: &mut [RowActivity],
+pub fn recompute_activities<S: Scalar, P: SweepProblem<S>>(
+    prob: &P,
+    lb: &[S],
+    ub: &[S],
+    acts: &mut [RowActivity<S>],
     active: Option<&[bool]>,
     classes: Option<&[RowClass]>,
 ) -> usize {
     let mut nnz = 0;
-    for r in 0..inst.nrows() {
+    for r in 0..prob.nrows() {
         if active.map(|a| !a[r]).unwrap_or(false) {
             continue;
         }
-        let (cols, vals) = inst.matrix.row(r);
+        let (cols, vals) = prob.row(r);
         acts[r] = if class_of(classes, r).unit_coefficients() {
             RowActivity::of_unit_row(cols, lb, ub)
         } else {
@@ -330,55 +384,47 @@ pub fn recompute_activities(
 /// `col_hits`, when present, counts improving candidates per column (the
 /// atomic-serialization hot-spot histogram of section 3.6).
 #[allow(clippy::too_many_arguments)]
-pub fn reduce_candidates(
-    inst: &MipInstance,
-    lb: &[f64],
-    ub: &[f64],
-    acts: &[RowActivity],
+pub fn reduce_candidates<S: Scalar, P: SweepProblem<S>>(
+    prob: &P,
+    lb: &[S],
+    ub: &[S],
+    acts: &[RowActivity<S>],
     classes: Option<&[RowClass]>,
-    best_lb: &mut [f64],
-    best_ub: &mut [f64],
+    best_lb: &mut [S],
+    best_ub: &mut [S],
     mut col_hits: Option<&mut [u32]>,
     rt: &mut RoundTrace,
 ) {
     for x in best_lb.iter_mut() {
-        *x = f64::NEG_INFINITY;
+        *x = S::NEG_INFINITY;
     }
     for x in best_ub.iter_mut() {
-        *x = f64::INFINITY;
+        *x = S::INFINITY;
     }
     if let Some(h) = col_hits.as_deref_mut() {
         for v in h.iter_mut() {
             *v = 0;
         }
     }
-    for r in 0..inst.nrows() {
-        let (cols, vals) = inst.matrix.row(r);
+    for r in 0..prob.nrows() {
+        let (cols, vals) = prob.row(r);
         rt.nnz_processed += cols.len();
         let class = class_of(classes, r);
-        let (lhs, rhs) = (inst.lhs[r], inst.rhs[r]);
+        let (lhs, rhs) = (prob.lhs(r), prob.rhs(r));
         for (&c, &a) in cols.iter().zip(vals) {
             let j = c as usize;
-            let cand = candidates_for_class(
-                class,
-                a,
-                lb[j],
-                ub[j],
-                || inst.var_types[j] == VarType::Integer,
-                &acts[r],
-                lhs,
-                rhs,
-            );
+            let cand =
+                candidates_for_class(class, a, lb[j], ub[j], || prob.is_int(j), &acts[r], lhs, rhs);
             // pre-filter before the "atomic" (section 3.5)
             let mut hit = false;
-            if improves_lb(lb[j], cand.lb) {
+            if S::improves_lb(lb[j], cand.lb) {
                 rt.atomic_updates += 1;
                 hit = true;
                 if cand.lb > best_lb[j] {
                     best_lb[j] = cand.lb;
                 }
             }
-            if improves_ub(ub[j], cand.ub) {
+            if S::improves_ub(ub[j], cand.ub) {
                 rt.atomic_updates += 1;
                 hit = true;
                 if cand.ub < best_ub[j] {
@@ -396,27 +442,27 @@ pub fn reduce_candidates(
 
 /// Commit (the round-synchronous bound swap): apply each column's winning
 /// candidate. Returns `(any_change, any_empty_domain)`.
-pub fn commit_round(
-    lb: &mut [f64],
-    ub: &mut [f64],
-    best_lb: &[f64],
-    best_ub: &[f64],
+pub fn commit_round<S: Scalar>(
+    lb: &mut [S],
+    ub: &mut [S],
+    best_lb: &[S],
+    best_ub: &[S],
     rt: &mut RoundTrace,
 ) -> (bool, bool) {
     let mut change = false;
     let mut infeas = false;
     for j in 0..lb.len() {
-        if improves_lb(lb[j], best_lb[j]) {
+        if S::improves_lb(lb[j], best_lb[j]) {
             lb[j] = best_lb[j];
             change = true;
             rt.bound_changes += 1;
         }
-        if improves_ub(ub[j], best_ub[j]) {
+        if S::improves_ub(ub[j], best_ub[j]) {
             ub[j] = best_ub[j];
             change = true;
             rt.bound_changes += 1;
         }
-        if lb[j] > ub[j] + FEAS_TOL {
+        if lb[j] > ub[j] + S::FEAS_TOL {
             infeas = true;
         }
     }
@@ -478,7 +524,7 @@ mod tests {
         let csc = inst.to_csc();
         let ws = WorkSet::new(1);
         ws.seed(&csc, Some(&[]));
-        let bounds = AtomicBounds::new(&Bounds::of(&inst));
+        let bounds: AtomicBounds = AtomicBounds::new(&Bounds::of(&inst));
         let row = sweep_row_atomic(&inst, &csc, 0, &bounds, &ws, None);
         assert_eq!(row.changes, 2);
         assert!(!row.infeasible);
@@ -581,5 +627,42 @@ mod tests {
         let generic = run(None);
         assert_eq!(spec, generic);
         assert_eq!(spec.1, vec![1.0, 0.0, 0.0], "x1, x2 fixed to 0");
+    }
+
+    #[test]
+    fn padded_chunks_cover_every_row() {
+        // a worklist long enough to split: padded chunking must process
+        // every row exactly once (counters equal the single-thread run)
+        let rows = 40usize;
+        let mut triplets = Vec::new();
+        for r in 0..rows {
+            triplets.push((r, r % 8, 1.0));
+            triplets.push((r, (r + 1) % 8, 1.0));
+        }
+        let matrix = Csr::from_triplets(rows, 8, &triplets).unwrap();
+        let inst = MipInstance::from_parts(
+            "wide",
+            matrix,
+            vec![f64::NEG_INFINITY; rows],
+            vec![1.5; rows],
+            vec![0.0; 8],
+            vec![1.0; 8],
+            vec![VarType::Continuous; 8],
+        );
+        let csc = inst.to_csc();
+        let worklist: Vec<u32> = (0..rows as u32).collect();
+        let run = |threads: usize| {
+            let ws = WorkSet::new(rows);
+            let bounds: AtomicBounds = AtomicBounds::new(&Bounds::of(&inst));
+            let infeasible = AtomicBool::new(false);
+            let c =
+                parallel_sweep(&inst, &csc, &worklist, &bounds, &ws, &infeasible, threads, None);
+            (c.nnz, bounds.snapshot())
+        };
+        let (nnz1, snap1) = run(1);
+        let (nnz4, snap4) = run(4);
+        assert_eq!(nnz1, nnz4, "padded chunks must not drop or duplicate rows");
+        assert_eq!(snap1.lb, snap4.lb);
+        assert_eq!(snap1.ub, snap4.ub);
     }
 }

@@ -1,0 +1,249 @@
+//! Bandwidth-oriented sweep layout: a structure-of-arrays (SoA) view of
+//! one instance with u32 CSR indices, generic over the propagation
+//! [`Scalar`].
+//!
+//! The hot sweep is memory-bandwidth bound (paper section 3.5), so the
+//! layout matters as much as the element type:
+//!
+//! * **u32 indices** — `row_ptr` shrinks from 8 to 4 bytes per row
+//!   (mirroring [`crate::sparse::CsrU32`]), halving the index traffic of
+//!   the usize CSR in [`MipInstance`].
+//! * **SoA row data** — `row_lhs[]` / `row_rhs[]` are flat parallel
+//!   arrays indexed by row (no per-row structs), the stride-1 layout
+//!   that coalesces on GPUs and autovectorizes on CPUs.
+//! * **outward side conversion** — when `S = f32`, every `lhs` is
+//!   rounded toward −∞ and every `rhs` toward +∞
+//!   ([`Scalar::from_f64_lb`]/[`Scalar::from_f64_ub`]), so the narrowed
+//!   constraint system is a relaxation of the f64 one. Coefficients are
+//!   rounded to nearest; the f32 pre-pass in [`super::mixed`] accounts
+//!   for that perturbation in its per-row error margin.
+//!
+//! `SoaProblem<S>` implements [`SweepProblem`], so every kernel in
+//! [`super::kernels`] runs over it unchanged; at `S = f64` the results
+//! are bit-identical to running over the `MipInstance` itself (the
+//! conversions are identities and the kernel body is shared).
+
+use super::super::scalar::Scalar;
+use super::kernels::SweepProblem;
+use crate::instance::MipInstance;
+
+/// Structure-of-arrays instance view with u32 CSR indices. See module
+/// docs; built once per prepared session, read-only afterwards.
+#[derive(Debug, Clone)]
+pub struct SoaProblem<S: Scalar = f64> {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// u32 CSR pattern: `row_ptr` (len nrows+1) into `col_idx`/`vals`.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    /// Coefficients at scalar width (round-to-nearest conversion).
+    pub vals: Vec<S>,
+    /// Flat parallel per-row side arrays (outward-converted for f32).
+    pub row_lhs: Vec<S>,
+    pub row_rhs: Vec<S>,
+    /// Per-variable integrality flags.
+    pub is_int: Vec<bool>,
+    /// u32 transpose pattern for constraint re-marking: `col_ptr`
+    /// (len ncols+1) into `row_of` (the rows containing each variable).
+    pub col_ptr: Vec<u32>,
+    pub row_of: Vec<u32>,
+}
+
+impl<S: Scalar> SoaProblem<S> {
+    /// Build from an instance. Panics if the instance has more than
+    /// `u32::MAX` nonzeros (the u32-index layout cannot address it; the
+    /// usize-CSR path in `MipInstance` has no such limit).
+    pub fn from_instance(inst: &MipInstance) -> SoaProblem<S> {
+        let csr = &inst.matrix;
+        assert!(
+            csr.nnz() <= u32::MAX as usize,
+            "SoaProblem: {} nonzeros exceed the u32 index range",
+            csr.nnz()
+        );
+        let row_ptr: Vec<u32> = csr.row_ptr.iter().map(|&p| p as u32).collect();
+        let vals: Vec<S> = csr.vals.iter().map(|&v| S::from_f64_nearest(v)).collect();
+        let row_lhs: Vec<S> = inst.lhs.iter().map(|&v| S::from_f64_lb(v)).collect();
+        let row_rhs: Vec<S> = inst.rhs.iter().map(|&v| S::from_f64_ub(v)).collect();
+        let is_int: Vec<bool> =
+            (0..csr.ncols).map(|j| SweepProblem::<f64>::is_int(inst, j)).collect();
+        // u32 transpose pattern (counting sort over columns).
+        let mut col_ptr = vec![0u32; csr.ncols + 1];
+        for &c in &csr.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for i in 0..csr.ncols {
+            col_ptr[i + 1] += col_ptr[i];
+        }
+        let mut next = col_ptr.clone();
+        let mut row_of = vec![0u32; csr.nnz()];
+        for r in 0..csr.nrows {
+            let (cols, _) = csr.row(r);
+            for &c in cols {
+                let slot = next[c as usize] as usize;
+                row_of[slot] = r as u32;
+                next[c as usize] += 1;
+            }
+        }
+        SoaProblem {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            row_ptr,
+            col_idx: csr.col_idx.clone(),
+            vals,
+            row_lhs,
+            row_rhs,
+            is_int,
+            col_ptr,
+            row_of,
+        }
+    }
+
+    /// The rows containing variable `j` (re-marking fan-out).
+    #[inline]
+    pub fn rows_of(&self, j: usize) -> &[u32] {
+        let lo = self.col_ptr[j] as usize;
+        let hi = self.col_ptr[j + 1] as usize;
+        &self.row_of[lo..hi]
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+}
+
+impl<S: Scalar> SweepProblem<S> for SoaProblem<S> {
+    #[inline]
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    #[inline]
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    #[inline]
+    fn row(&self, r: usize) -> (&[u32], &[S]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+    #[inline]
+    fn lhs(&self, r: usize) -> S {
+        self.row_lhs[r]
+    }
+    #[inline]
+    fn rhs(&self, r: usize) -> S {
+        self.row_rhs[r]
+    }
+    #[inline]
+    fn is_int(&self, j: usize) -> bool {
+        self.is_int[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernels::{recompute_activities, reduce_candidates, sweep_row_marked};
+    use super::super::workset::WorkSet;
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::propagation::activity::RowActivity;
+    use crate::propagation::trace::RoundTrace;
+
+    #[test]
+    fn soa_f64_view_matches_instance_bitwise() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 60, ncols: 50, seed: 11, ..Default::default() });
+        let soa: SoaProblem = SoaProblem::from_instance(&inst);
+        assert_eq!(soa.nnz(), inst.matrix.nnz());
+        for r in 0..inst.matrix.nrows {
+            let (ci, vi) = inst.matrix.row(r);
+            let (cs, vs) = SweepProblem::<f64>::row(&soa, r);
+            assert_eq!(ci, cs);
+            assert_eq!(vi, vs);
+            assert_eq!(inst.lhs[r], SweepProblem::<f64>::lhs(&soa, r));
+            assert_eq!(inst.rhs[r], SweepProblem::<f64>::rhs(&soa, r));
+        }
+        // transpose pattern matches the f64 CSC
+        let csc = inst.to_csc();
+        for j in 0..inst.matrix.ncols {
+            let (rows, _) = csc.col(j);
+            assert_eq!(rows, soa.rows_of(j));
+        }
+    }
+
+    #[test]
+    fn soa_f64_sweep_bit_identical_to_instance_sweep() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 40, ncols: 35, seed: 3, ..Default::default() });
+        let soa: SoaProblem = SoaProblem::from_instance(&inst);
+        let csc = inst.to_csc();
+        let run = |use_soa: bool| {
+            let ws = WorkSet::new(inst.matrix.nrows);
+            let mut lb = inst.lb.clone();
+            let mut ub = inst.ub.clone();
+            let mut rt = RoundTrace::default();
+            for r in 0..inst.matrix.nrows {
+                let out = if use_soa {
+                    sweep_row_marked(
+                        &soa, &csc, r, &mut lb, &mut ub, &ws, None, None, &mut rt,
+                        |_, _, _, _, _| {},
+                    )
+                } else {
+                    sweep_row_marked(
+                        &inst, &csc, r, &mut lb, &mut ub, &ws, None, None, &mut rt,
+                        |_, _, _, _, _| {},
+                    )
+                };
+                if out.infeasible {
+                    break;
+                }
+            }
+            (lb, ub)
+        };
+        let (lb_soa, ub_soa) = run(true);
+        let (lb_ref, ub_ref) = run(false);
+        for j in 0..lb_ref.len() {
+            assert_eq!(lb_soa[j].to_bits(), lb_ref[j].to_bits(), "lb[{j}]");
+            assert_eq!(ub_soa[j].to_bits(), ub_ref[j].to_bits(), "ub[{j}]");
+        }
+    }
+
+    #[test]
+    fn soa_round_synchronous_phases_run_at_f32() {
+        // smoke: the generic Algorithm 2 phases accept the f32 SoA view
+        let inst =
+            gen::generate(&GenConfig { nrows: 20, ncols: 20, seed: 5, ..Default::default() });
+        let soa: SoaProblem<f32> = SoaProblem::from_instance(&inst);
+        let lb: Vec<f32> = inst.lb.iter().map(|&v| f32::from_f64_lb(v)).collect();
+        let ub: Vec<f32> = inst.ub.iter().map(|&v| f32::from_f64_ub(v)).collect();
+        let mut acts: Vec<RowActivity<f32>> = vec![RowActivity::default(); soa.nrows];
+        let mut best_lb = vec![0.0f32; soa.ncols];
+        let mut best_ub = vec![0.0f32; soa.ncols];
+        let mut rt = RoundTrace::default();
+        let nnz = recompute_activities(&soa, &lb, &ub, &mut acts, None, None);
+        assert_eq!(nnz, soa.nnz());
+        reduce_candidates(&soa, &lb, &ub, &acts, None, &mut best_lb, &mut best_ub, None, &mut rt);
+        // candidates at the outward-converted start can only point inward
+        // of (or equal to) the start box, never outside the f32 range
+        for j in 0..soa.ncols {
+            assert!(!best_lb[j].is_nan() && !best_ub[j].is_nan());
+        }
+    }
+
+    #[test]
+    fn f32_sides_convert_outward() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 50, ncols: 40, seed: 9, ..Default::default() });
+        let soa: SoaProblem<f32> = SoaProblem::from_instance(&inst);
+        for r in 0..inst.matrix.nrows {
+            assert!(soa.row_lhs[r].to_f64() <= inst.lhs[r], "lhs[{r}] must round down");
+            assert!(soa.row_rhs[r].to_f64() >= inst.rhs[r], "rhs[{r}] must round up");
+        }
+    }
+}

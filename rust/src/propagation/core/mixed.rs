@@ -1,0 +1,542 @@
+//! Mixed-precision propagation: a guarded f32 pre-pass over the SoA
+//! layout, one f64 verification sweep, and escalation to the wrapped
+//! engine's pure-f64 path whenever the cheap result cannot be proven
+//! equivalent.
+//!
+//! # Protocol
+//!
+//! 1. **f32 pre-pass** — the starting box is converted outward
+//!    ([`Scalar::from_f64_lb`]/[`Scalar::from_f64_ub`]) and swept to an
+//!    f32 fixed point over [`SoaProblem<f32>`] (half the memory traffic
+//!    of the f64 sweep; the paper's motivation for its `Float` kernels).
+//!    Every tightened candidate is relaxed **outward** by a per-row
+//!    error margin before committing (see below), so the f32 box is at
+//!    all times a relaxation of what exact arithmetic — and hence the
+//!    f64 engine — would produce: no feasible point is ever cut off.
+//! 2. **Widen and intersect** — the f32 box widens exactly to f64 and is
+//!    intersected with the original start (outward conversion can step
+//!    just past the start; the intersection W is then still a relaxation
+//!    of the f64 fixed point, which lies inside the start).
+//! 3. **f64 verification** — one full f64 sweep over all rows at W with
+//!    a *bit-strict* improvement test (plain `<`/`>`, no tolerance). If
+//!    no candidate strictly tightens W and no row is infeasible at W,
+//!    then W is a fixed point of the f64 round operator; together with
+//!    "W contains the f64 fixed point" (step 1) and "W inside the start"
+//!    (step 2) this pins W to the pure-f64 result (DESIGN.md §9 has the
+//!    monotone-operator argument).
+//! 4. **Escalation** — if the f32 pass did not converge, produced an
+//!    empty or infeasible box, or verification found any strictly
+//!    tighter candidate, the pre-pass result is discarded and the
+//!    wrapped engine runs its normal pure-f64 propagation from the
+//!    ORIGINAL start. Infeasibility in particular is never reported from
+//!    f32 evidence alone.
+//!
+//! # The outward margin
+//!
+//! A committed f32 bound must dominate anything exact arithmetic could
+//! derive at the current box. Each row sweep accumulates
+//! `absmag = Σ |a_k·b_k|` alongside its activities and relaxes every
+//! candidate by `margin/|a| + max(1,|c|)·PAD_REL` plus two ulp nudges,
+//! where `margin = 4·(n+8)·ε_f32·absmag` dominates the f32 summation
+//! error (a γ_n-style bound with 4× headroom) and the `PAD_REL` term
+//! covers the f64 engine's own rounding and its sub-threshold fixpoint
+//! slack (`EPS_IMPROVE_REL`). Non-finite intermediates (overflow to
+//! ±∞, NaN from ∞·0) poison the margin and simply yield non-improving
+//! candidates — degraded precision degrades to *less tightening*, never
+//! to an unsound bound.
+//!
+//! On integer-friendly instances (integral data below ~2^20) f32
+//! arithmetic is exact, the margins vanish under integer rounding, and
+//! the pre-pass lands on the exact f64 fixed point — verification
+//! passes and the engine never touches f64 bound vectors. On generic
+//! continuous instances the coarser f32 improvement threshold usually
+//! stops short of the f64 fixed point and the run escalates; the
+//! `precision` bench group reports both regimes honestly.
+
+use anyhow::Result;
+
+use super::super::activity::RowActivity;
+use super::super::bounds::candidates;
+use super::super::scalar::{next_down32, next_up32, Scalar};
+use super::super::trace::{RoundTrace, Trace};
+use super::super::{Engine, PreparedProblem, PropResult, Status};
+use super::kernels::{recompute_activities, SweepProblem};
+use super::layout::SoaProblem;
+use crate::instance::{Bounds, MipInstance};
+use crate::util::timer::Timer;
+
+/// Relative pad covering the f64 engine's rounding error and its
+/// sub-threshold fixpoint slack (`numerics::EPS_IMPROVE_REL = 1e-9`,
+/// padded 10×). Applied per candidate as `max(1,|c|)·PAD_REL`.
+const PAD_REL: f32 = 1e-8;
+
+/// The f32 pre-pass state: the SoA problem view, the f32 bound vectors,
+/// the marking worklist, and the f64 verification scratch. Sized once
+/// per prepared session, reused across propagations.
+pub struct MixedPrePass {
+    soa: SoaProblem<f32>,
+    lb: Vec<f32>,
+    ub: Vec<f32>,
+    marked: Vec<bool>,
+    worklist: Vec<u32>,
+    max_rounds: u32,
+    /// f64 activity scratch for the verification sweep.
+    acts: Vec<RowActivity>,
+}
+
+impl MixedPrePass {
+    /// Build the f32 session view. Panics if the instance exceeds the
+    /// u32 index range of the SoA layout (see [`SoaProblem`]).
+    pub fn new(inst: &MipInstance, max_rounds: u32) -> MixedPrePass {
+        let soa: SoaProblem<f32> = SoaProblem::from_instance(inst);
+        let m = soa.nrows;
+        MixedPrePass {
+            soa,
+            lb: Vec::new(),
+            ub: Vec::new(),
+            marked: vec![false; m],
+            worklist: Vec::new(),
+            max_rounds,
+            acts: vec![RowActivity::default(); m],
+        }
+    }
+
+    /// Run the full mixed protocol. `Some(result)` carries a verified
+    /// result bit-identical to the pure-f64 fixed point; `None` means
+    /// the caller must escalate to its pure-f64 path from the original
+    /// `start`.
+    pub fn attempt(
+        &mut self,
+        inst: &MipInstance,
+        start: &Bounds,
+        seed_vars: Option<&[usize]>,
+    ) -> Option<PropResult> {
+        let timer = Timer::start();
+        let mut trace = Trace::default();
+        let (status, rounds) = self.run_f32(start, seed_vars, &mut trace);
+        if status != Status::Converged {
+            return None;
+        }
+        // Widen exactly and intersect with the original f64 start.
+        let n = self.soa.ncols;
+        let mut wlb = Vec::with_capacity(n);
+        let mut wub = Vec::with_capacity(n);
+        for j in 0..n {
+            let l = self.lb[j].to_f64().max(start.lb[j]);
+            let u = self.ub[j].to_f64().min(start.ub[j]);
+            if l > u {
+                return None; // empty after intersection: escalate
+            }
+            wlb.push(l);
+            wub.push(u);
+        }
+        let mut vrt = RoundTrace::default();
+        if !self.verify_bit_fixpoint(inst, &wlb, &wub, &mut vrt) {
+            return None;
+        }
+        trace.push(vrt);
+        Some(PropResult {
+            bounds: Bounds { lb: wlb, ub: wub },
+            rounds: rounds + 1, // + the f64 verification sweep
+            status: Status::Converged,
+            wall: timer.elapsed(),
+            trace,
+        })
+    }
+
+    /// Test hook: the raw f32 fixed point widened to f64 (NOT intersected
+    /// with the start, NOT verified) plus how the pass stopped. The
+    /// outward contract says this box contains the pure-f64 fixed point
+    /// whenever the status is `Converged`.
+    pub fn f32_box(
+        &mut self,
+        start: &Bounds,
+        seed_vars: Option<&[usize]>,
+    ) -> (Bounds, Status, u32) {
+        let mut trace = Trace::default();
+        let (status, rounds) = self.run_f32(start, seed_vars, &mut trace);
+        let bounds = Bounds {
+            lb: self.lb.iter().map(|&v| v.to_f64()).collect(),
+            ub: self.ub.iter().map(|&v| v.to_f64()).collect(),
+        };
+        (bounds, status, rounds)
+    }
+
+    /// The guarded f32 marked sweep to a fixed point. Returns
+    /// `Infeasible` on *apparent* f32 infeasibility — the caller treats
+    /// anything but `Converged` as an escalation trigger, so an
+    /// over-eager verdict costs a wasted pre-pass, never a wrong answer.
+    fn run_f32(
+        &mut self,
+        start: &Bounds,
+        seed_vars: Option<&[usize]>,
+        trace: &mut Trace,
+    ) -> (Status, u32) {
+        let m = self.soa.nrows;
+        self.lb.clear();
+        self.lb.extend(start.lb.iter().map(|&v| f32::from_f64_lb(v)));
+        self.ub.clear();
+        self.ub.extend(start.ub.iter().map(|&v| f32::from_f64_ub(v)));
+        for f in self.marked.iter_mut() {
+            *f = false;
+        }
+        let mut cur = std::mem::take(&mut self.worklist);
+        cur.clear();
+        match seed_vars {
+            None => {
+                cur.extend(0..m as u32);
+                for f in self.marked.iter_mut() {
+                    *f = true;
+                }
+            }
+            Some(vars) => {
+                for &j in vars {
+                    for &r in self.soa.rows_of(j) {
+                        if !self.marked[r as usize] {
+                            self.marked[r as usize] = true;
+                            cur.push(r);
+                        }
+                    }
+                }
+            }
+        }
+        let mut rounds = 0u32;
+        let mut status = Status::Converged;
+        'outer: while !cur.is_empty() {
+            if rounds >= self.max_rounds {
+                status = Status::MaxRounds;
+                break;
+            }
+            rounds += 1;
+            let mut rt = RoundTrace::default();
+            for &r in &cur {
+                self.marked[r as usize] = false;
+                if self.sweep_row_guarded(r as usize, &mut rt) {
+                    status = Status::Infeasible;
+                    trace.push(rt);
+                    break 'outer;
+                }
+            }
+            trace.push(rt);
+            // rows re-marked during this round form the next worklist
+            std::mem::swap(&mut cur, &mut self.worklist);
+            self.worklist.clear();
+        }
+        cur.clear();
+        self.worklist = cur;
+        (status, rounds)
+    }
+
+    /// Sweep one row at f32 with the outward error margin; commits
+    /// improved bounds and re-marks affected rows. Returns true on
+    /// apparent infeasibility.
+    fn sweep_row_guarded(&mut self, r: usize, rt: &mut RoundTrace) -> bool {
+        let lo = self.soa.row_ptr[r] as usize;
+        let hi = self.soa.row_ptr[r + 1] as usize;
+        rt.rows_processed += 1;
+        rt.nnz_processed += hi - lo;
+        let lhs = self.soa.row_lhs[r];
+        let rhs = self.soa.row_rhs[r];
+        // Activity + absolute-magnitude accumulation in one sweep. A
+        // non-finite absmag (overflow) poisons the margin and makes
+        // every candidate of this row non-improving: safe degradation.
+        let mut act: RowActivity<f32> = RowActivity::default();
+        let mut absmag: f32 = 0.0;
+        for k in lo..hi {
+            let a = self.soa.vals[k];
+            let j = self.soa.col_idx[k] as usize;
+            let (l, u) = (self.lb[j], self.ub[j]);
+            act.accumulate(a, l, u);
+            if l.is_finite() {
+                absmag += (a * l).abs();
+            }
+            if u.is_finite() {
+                absmag += (a * u).abs();
+            }
+        }
+        if act.infeasible(lhs, rhs) {
+            return true;
+        }
+        let n_entries = (hi - lo) as f32;
+        let margin = 4.0 * (n_entries + 8.0) * f32::EPSILON * absmag;
+        // Margin-robust redundancy: skip only when the row is redundant
+        // by more than the accumulation error could account for.
+        if lhs <= act.min_value() - margin && act.max_value() + margin <= rhs {
+            return false;
+        }
+        if !act.can_propagate(lhs, rhs) {
+            return false;
+        }
+        for k in lo..hi {
+            let a = self.soa.vals[k];
+            let j = self.soa.col_idx[k] as usize;
+            let (l, u) = (self.lb[j], self.ub[j]);
+            let (bmin, bmax) = if a > 0.0 { (l, u) } else { (u, l) };
+            let own_min = if bmin.is_finite() { a * bmin } else { f32::NEG_INFINITY };
+            let own_max = if bmax.is_finite() { a * bmax } else { f32::INFINITY };
+            let resmin = act.min.residual(own_min, -1.0);
+            let resmax = act.max.residual(own_max, 1.0);
+            let ub_num = if a > 0.0 { rhs - resmin } else { lhs - resmax };
+            let lb_num = if a > 0.0 { lhs - resmax } else { rhs - resmin };
+            let mut cu = f32::INFINITY;
+            if ub_num.is_finite() {
+                let c = ub_num / a;
+                let relax = margin / a.abs() + c.abs().max(1.0) * PAD_REL;
+                cu = next_up32(next_up32(c + relax));
+                if self.soa.is_int[j] && cu.is_finite() {
+                    cu = (cu + <f32 as Scalar>::INT_ROUND_EPS).floor();
+                }
+            }
+            let mut cl = f32::NEG_INFINITY;
+            if lb_num.is_finite() {
+                let c = lb_num / a;
+                let relax = margin / a.abs() + c.abs().max(1.0) * PAD_REL;
+                cl = next_down32(next_down32(c - relax));
+                if self.soa.is_int[j] && cl.is_finite() {
+                    cl = (cl - <f32 as Scalar>::INT_ROUND_EPS).ceil();
+                }
+            }
+            let mut changed = false;
+            if <f32 as Scalar>::improves_ub(u, cu) {
+                self.ub[j] = cu;
+                changed = true;
+                rt.bound_changes += 1;
+            }
+            if <f32 as Scalar>::improves_lb(l, cl) {
+                self.lb[j] = cl;
+                changed = true;
+                rt.bound_changes += 1;
+            }
+            if changed {
+                if self.lb[j] > self.ub[j] + <f32 as Scalar>::FEAS_TOL {
+                    return true;
+                }
+                for &rr in self.soa.rows_of(j) {
+                    if !self.marked[rr as usize] {
+                        self.marked[rr as usize] = true;
+                        self.worklist.push(rr);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// One full f64 sweep over all rows at the widened box W with a
+    /// bit-strict improvement test: true iff W is a fixed point of the
+    /// f64 round operator and no row is infeasible at W.
+    fn verify_bit_fixpoint(
+        &mut self,
+        inst: &MipInstance,
+        wlb: &[f64],
+        wub: &[f64],
+        rt: &mut RoundTrace,
+    ) -> bool {
+        recompute_activities(inst, wlb, wub, &mut self.acts, None, None);
+        for r in 0..inst.matrix.nrows {
+            let (cols, vals) = inst.matrix.row(r);
+            rt.rows_processed += 1;
+            rt.nnz_processed += cols.len();
+            let act = self.acts[r];
+            let lhs = inst.lhs[r];
+            let rhs = inst.rhs[r];
+            if act.infeasible(lhs, rhs) {
+                return false; // f64 sees infeasibility: escalate
+            }
+            if act.redundant(lhs, rhs) || !act.can_propagate(lhs, rhs) {
+                continue;
+            }
+            for (&c, &a) in cols.iter().zip(vals) {
+                let j = c as usize;
+                let is_int = SweepProblem::<f64>::is_int(inst, j);
+                let cand = candidates(a, wlb[j], wub[j], is_int, &act, lhs, rhs);
+                // bit-strict: any strictly tighter candidate, however
+                // small the improvement, disproves the fixed point
+                if cand.lb > wlb[j] || cand.ub < wub[j] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Engine wrapper implementing the mixed-precision protocol around any
+/// native pure-f64 engine. `prepare` builds the wrapped engine's own
+/// session PLUS the f32 pre-pass view; each propagation first attempts
+/// the verified f32 path and falls back to the inner session untouched.
+///
+/// Escalated runs return the inner engine's result verbatim (bounds,
+/// rounds, trace); verified runs report the f32 pass's rounds + 1 and
+/// its trace. Engine-specific side products that only exist on the
+/// inner path (the PaPILO-style reduction log) are not produced when
+/// the verified path short-circuits.
+pub struct MixedEngine {
+    inner: Box<dyn Engine>,
+    max_rounds: u32,
+}
+
+impl MixedEngine {
+    pub fn wrap(inner: Box<dyn Engine>, max_rounds: u32) -> MixedEngine {
+        MixedEngine { inner, max_rounds }
+    }
+}
+
+impl Engine for MixedEngine {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn prepare<'a>(&self, inst: &'a MipInstance) -> Result<Box<dyn PreparedProblem + 'a>> {
+        let inner = self.inner.prepare(inst)?;
+        Ok(Box::new(MixedPrepared { inner, pre: MixedPrePass::new(inst, self.max_rounds), inst }))
+    }
+}
+
+/// Prepared session of [`MixedEngine`]: the wrapped engine's session and
+/// the shared f32 pre-pass state. Batch calls route through the default
+/// per-node loop, so each node independently takes the verified path or
+/// escalates.
+pub struct MixedPrepared<'a> {
+    inner: Box<dyn PreparedProblem + 'a>,
+    pre: MixedPrePass,
+    inst: &'a MipInstance,
+}
+
+impl<'a> PreparedProblem for MixedPrepared<'a> {
+    fn engine_name(&self) -> &'static str {
+        self.inner.engine_name()
+    }
+
+    fn propagate(&mut self, start: &Bounds) -> PropResult {
+        match self.pre.attempt(self.inst, start, None) {
+            Some(res) => res,
+            None => self.inner.propagate(start),
+        }
+    }
+
+    fn propagate_warm(&mut self, start: &Bounds, seed_vars: &[usize]) -> PropResult {
+        match self.pre.attempt(self.inst, start, Some(seed_vars)) {
+            Some(res) => res,
+            None => self.inner.propagate_warm(start, seed_vars),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::instance::VarType;
+    use crate::propagation::seq::SeqEngine;
+    use crate::sparse::Csr;
+
+    fn int_instance() -> MipInstance {
+        // 2x + 3y <= 12, x - y >= -2; integer vars in [0, 10]: every
+        // coefficient and bound exact at f32
+        let matrix =
+            Csr::from_triplets(2, 2, &[(0, 0, 2.0), (0, 1, 3.0), (1, 0, 1.0), (1, 1, -1.0)])
+                .unwrap();
+        MipInstance::from_parts(
+            "int2x2",
+            matrix,
+            vec![f64::NEG_INFINITY, -2.0],
+            vec![12.0, f64::INFINITY],
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            vec![VarType::Integer, VarType::Integer],
+        )
+    }
+
+    #[test]
+    fn verified_path_matches_pure_f64_bitwise() {
+        let inst = int_instance();
+        let start = Bounds::of(&inst);
+        let mut pre = MixedPrePass::new(&inst, 100);
+        let res = pre.attempt(&inst, &start, None).expect("exact integer data must verify");
+        let reference = SeqEngine::new().propagate(&inst);
+        assert_eq!(res.status, Status::Converged);
+        assert_eq!(res.bounds.lb, reference.bounds.lb);
+        assert_eq!(res.bounds.ub, reference.bounds.ub);
+    }
+
+    #[test]
+    fn f32_box_is_outward_of_f64_fixpoint() {
+        let inst =
+            gen::generate(&GenConfig { nrows: 50, ncols: 40, seed: 21, ..Default::default() });
+        let reference = SeqEngine::new().propagate(&inst);
+        if reference.status != Status::Converged {
+            return;
+        }
+        let mut pre = MixedPrePass::new(&inst, 100);
+        let (bx, status, _) = pre.f32_box(&Bounds::of(&inst), None);
+        if status != Status::Converged {
+            return; // escalation case: nothing claimed about the box
+        }
+        for j in 0..inst.ncols() {
+            assert!(bx.lb[j] <= reference.bounds.lb[j], "lb[{j}] tighter than f64");
+            assert!(bx.ub[j] >= reference.bounds.ub[j], "ub[{j}] tighter than f64");
+        }
+    }
+
+    #[test]
+    fn mixed_engine_wrapper_agrees_with_inner() {
+        let inst = int_instance();
+        let wrapped = MixedEngine::wrap(Box::new(SeqEngine::new()), 100);
+        assert_eq!(wrapped.name(), "cpu_seq");
+        let mut session = wrapped.prepare(&inst).unwrap();
+        let res = session.propagate(&Bounds::of(&inst));
+        let reference = SeqEngine::new().propagate(&inst);
+        assert_eq!(res.bounds.lb, reference.bounds.lb);
+        assert_eq!(res.bounds.ub, reference.bounds.ub);
+        // warm re-propagation from the fixed point is a no-op
+        let warm = session.propagate_warm(&res.bounds, &[0]);
+        assert_eq!(warm.bounds.lb, res.bounds.lb);
+        assert_eq!(warm.bounds.ub, res.bounds.ub);
+    }
+
+    #[test]
+    fn escalation_never_reports_f32_only_infeasibility() {
+        // x + y >= 5 with x,y in [0,1] is infeasible at both widths; the
+        // mixed path must escalate (None) rather than decide from f32
+        let matrix = Csr::from_triplets(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "infeas",
+            matrix,
+            vec![5.0],
+            vec![f64::INFINITY],
+            vec![0.0, 0.0],
+            vec![1.0, 1.0],
+            vec![VarType::Continuous, VarType::Continuous],
+        );
+        let mut pre = MixedPrePass::new(&inst, 100);
+        assert!(pre.attempt(&inst, &Bounds::of(&inst), None).is_none());
+        // the wrapper surfaces the inner engine's f64 verdict
+        let wrapped = MixedEngine::wrap(Box::new(SeqEngine::new()), 100);
+        let mut session = wrapped.prepare(&inst).unwrap();
+        let res = session.propagate(&Bounds::of(&inst));
+        assert_eq!(res.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn escalation_falls_back_to_exact_f64_result() {
+        // non-representable coefficients force margins > 0; whatever path
+        // is taken, the result must equal the pure-f64 engine's
+        let matrix = Csr::from_triplets(1, 2, &[(0, 0, 0.1), (0, 1, 0.3)]).unwrap();
+        let inst = MipInstance::from_parts(
+            "cont",
+            matrix,
+            vec![f64::NEG_INFINITY],
+            vec![1.2],
+            vec![0.0, 0.0],
+            vec![10.0, 10.0],
+            vec![VarType::Continuous, VarType::Continuous],
+        );
+        let wrapped = MixedEngine::wrap(Box::new(SeqEngine::new()), 100);
+        let mut session = wrapped.prepare(&inst).unwrap();
+        let res = session.propagate(&Bounds::of(&inst));
+        let reference = SeqEngine::new().propagate(&inst);
+        assert_eq!(res.bounds.lb, reference.bounds.lb);
+        assert_eq!(res.bounds.ub, reference.bounds.ub);
+    }
+}

@@ -39,16 +39,30 @@
 //! engines' host loop runs device rounds under the same driver. The
 //! batched session API ([`super::PreparedProblem::propagate_batch`])
 //! schedules many B&B node domains over these same kernels.
+//!
+//! Two mixed-precision layers complete the core: every kernel, state
+//! container and activity type is generic over the propagation
+//! [`super::scalar::Scalar`] (f64 reference / f32 bandwidth precision,
+//! defaulting to f64 everywhere), [`layout::SoaProblem`] provides the
+//! u32-index structure-of-arrays instance view the narrow sweeps run
+//! over, and [`mixed::MixedEngine`] wraps any native engine with the
+//! outward-safe f32 pre-pass + f64 verification + escalation protocol
+//! (DESIGN.md §9).
 
 pub mod driver;
 pub mod kernels;
+pub mod layout;
+pub mod mixed;
 pub mod state;
 pub mod workset;
 
 pub use driver::{run_rounds, run_rounds_fallible, RoundOutcome};
 pub use kernels::{
     commit_round, parallel_sweep, recompute_activities, reduce_candidates, sweep_chunk_atomic,
-    sweep_row_atomic, sweep_row_marked, ChunkCounters, RowCounters, SweepOutcome,
+    sweep_row_atomic, sweep_row_marked, ChunkCounters, RowCounters, SweepOutcome, SweepProblem,
+    CHUNK_ALIGN,
 };
+pub use layout::SoaProblem;
+pub use mixed::{MixedEngine, MixedPrePass};
 pub use state::{AtomicBounds, RoundState};
 pub use workset::WorkSet;

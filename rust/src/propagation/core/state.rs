@@ -1,34 +1,38 @@
 //! Per-run propagation state shared by the engines: scalar bounds with
 //! activity scratch and trace accumulation ([`RoundState`]), and the
 //! lock-free atomic bound lattice the shared-memory engines update from
-//! many threads ([`AtomicBounds`]).
+//! many threads ([`AtomicBounds`]). Both are generic over the
+//! propagation [`Scalar`] and default to `S = f64`; the f32 instantiation
+//! converts f64 starting bounds **outward** on entry
+//! ([`Scalar::from_f64_lb`]/[`Scalar::from_f64_ub`]) so a narrowed state
+//! never tightens the original box.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use super::super::activity::RowActivity;
+use super::super::scalar::Scalar;
 use super::super::trace::{RoundTrace, Trace};
 use super::super::{PropResult, Status};
 use crate::instance::Bounds;
-use crate::numerics::{improves_lb, improves_ub};
 
 /// Scalar run state: the bound vectors being tightened, per-row activity
 /// scratch (sized once per session, reused across propagations) and the
 /// accumulating trace. Lives inside a prepared session so repeated
 /// `propagate` calls reuse the allocations.
-pub struct RoundState {
-    pub lb: Vec<f64>,
-    pub ub: Vec<f64>,
+pub struct RoundState<S: Scalar = f64> {
+    pub lb: Vec<S>,
+    pub ub: Vec<S>,
     /// Per-row activity scratch for the round-synchronous phases and the
     /// PaPILO-style framework cache.
-    pub acts: Vec<RowActivity>,
+    pub acts: Vec<RowActivity<S>>,
     pub trace: Trace,
     /// Record per-round traces (tiny overhead; on by default).
     pub record_trace: bool,
 }
 
-impl RoundState {
-    pub fn new(m: usize, record_trace: bool) -> RoundState {
+impl<S: Scalar> RoundState<S> {
+    pub fn new(m: usize, record_trace: bool) -> RoundState<S> {
         RoundState {
             lb: Vec::new(),
             ub: Vec::new(),
@@ -38,12 +42,14 @@ impl RoundState {
         }
     }
 
-    /// Load `start` bounds and clear the trace, reusing allocations.
+    /// Load `start` bounds and clear the trace, reusing allocations. For
+    /// S = f64 this is a plain copy; for f32 every bound is rounded
+    /// outward so the narrowed start contains the f64 start.
     pub fn reset(&mut self, start: &Bounds) {
         self.lb.clear();
-        self.lb.extend_from_slice(&start.lb);
+        self.lb.extend(start.lb.iter().map(|&v| S::from_f64_lb(v)));
         self.ub.clear();
-        self.ub.extend_from_slice(&start.ub);
+        self.ub.extend(start.ub.iter().map(|&v| S::from_f64_ub(v)));
         self.trace = Trace::default();
     }
 
@@ -55,12 +61,14 @@ impl RoundState {
     }
 
     /// Move the run's outcome (bounds + trace) into a [`PropResult`],
-    /// leaving the state reusable for the next propagate call.
+    /// leaving the state reusable for the next propagate call. For
+    /// S = f64 the bound vectors move without copying; for f32 they are
+    /// widened exactly.
     pub fn take_result(&mut self, rounds: u32, status: Status, wall: Duration) -> PropResult {
         PropResult {
             bounds: Bounds {
-                lb: std::mem::take(&mut self.lb),
-                ub: std::mem::take(&mut self.ub),
+                lb: S::vec_to_f64(std::mem::take(&mut self.lb)),
+                ub: S::vec_to_f64(std::mem::take(&mut self.ub)),
             },
             rounds,
             status,
@@ -77,19 +85,18 @@ pub fn load_f64(a: &AtomicU64) -> f64 {
 }
 
 /// Atomic lower-bound max-update; returns true if this call improved it.
-/// The CAS loop on the f64 bit patterns has the same monotone-lattice
+/// The CAS loop on the scalar bit patterns has the same monotone-lattice
 /// semantics as the paper's OpenMP locks: every interleaving converges to
 /// a valid (possibly tighter-earlier) state.
 #[inline]
-pub fn atomic_update_lb(a: &AtomicU64, new: f64) -> bool {
-    let mut cur = a.load(Ordering::Relaxed);
+pub fn atomic_update_lb<S: Scalar>(a: &S::Atomic, new: S) -> bool {
+    let mut cur = S::atomic_load(a);
     loop {
-        let curf = f64::from_bits(cur);
-        if !improves_lb(curf, new) {
+        if !S::improves_lb(cur, new) {
             return false;
         }
-        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => return true,
+        match S::atomic_cas(a, cur, new) {
+            Ok(()) => return true,
             Err(actual) => cur = actual,
         }
     }
@@ -97,15 +104,14 @@ pub fn atomic_update_lb(a: &AtomicU64, new: f64) -> bool {
 
 /// Atomic upper-bound min-update; returns true if this call improved it.
 #[inline]
-pub fn atomic_update_ub(a: &AtomicU64, new: f64) -> bool {
-    let mut cur = a.load(Ordering::Relaxed);
+pub fn atomic_update_ub<S: Scalar>(a: &S::Atomic, new: S) -> bool {
+    let mut cur = S::atomic_load(a);
     loop {
-        let curf = f64::from_bits(cur);
-        if !improves_ub(curf, new) {
+        if !S::improves_ub(cur, new) {
             return false;
         }
-        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => return true,
+        match S::atomic_cas(a, cur, new) {
+            Ok(()) => return true,
             Err(actual) => cur = actual,
         }
     }
@@ -113,46 +119,47 @@ pub fn atomic_update_ub(a: &AtomicU64, new: f64) -> bool {
 
 /// The shared-memory bound lattice: one atomic per bound, updated with
 /// lock-free CAS min/max from any number of threads.
-pub struct AtomicBounds {
-    lb: Vec<AtomicU64>,
-    ub: Vec<AtomicU64>,
+pub struct AtomicBounds<S: Scalar = f64> {
+    lb: Vec<S::Atomic>,
+    ub: Vec<S::Atomic>,
 }
 
-impl AtomicBounds {
-    pub fn new(start: &Bounds) -> AtomicBounds {
+impl<S: Scalar> AtomicBounds<S> {
+    pub fn new(start: &Bounds) -> AtomicBounds<S> {
         AtomicBounds {
-            lb: start.lb.iter().map(|&v| AtomicU64::new(v.to_bits())).collect(),
-            ub: start.ub.iter().map(|&v| AtomicU64::new(v.to_bits())).collect(),
+            lb: start.lb.iter().map(|&v| S::atomic_new(S::from_f64_lb(v))).collect(),
+            ub: start.ub.iter().map(|&v| S::atomic_new(S::from_f64_ub(v))).collect(),
         }
     }
 
     #[inline]
-    pub fn lb(&self, j: usize) -> f64 {
-        load_f64(&self.lb[j])
+    pub fn lb(&self, j: usize) -> S {
+        S::atomic_load(&self.lb[j])
     }
 
     #[inline]
-    pub fn ub(&self, j: usize) -> f64 {
-        load_f64(&self.ub[j])
+    pub fn ub(&self, j: usize) -> S {
+        S::atomic_load(&self.ub[j])
     }
 
     /// CAS max-update of `lb[j]`; true if this call improved it.
     #[inline]
-    pub fn try_improve_lb(&self, j: usize, new: f64) -> bool {
-        atomic_update_lb(&self.lb[j], new)
+    pub fn try_improve_lb(&self, j: usize, new: S) -> bool {
+        atomic_update_lb::<S>(&self.lb[j], new)
     }
 
     /// CAS min-update of `ub[j]`; true if this call improved it.
     #[inline]
-    pub fn try_improve_ub(&self, j: usize, new: f64) -> bool {
-        atomic_update_ub(&self.ub[j], new)
+    pub fn try_improve_ub(&self, j: usize, new: S) -> bool {
+        atomic_update_ub::<S>(&self.ub[j], new)
     }
 
-    /// Copy the current lattice state out as plain bounds.
+    /// Copy the current lattice state out as plain f64 bounds (exact
+    /// widening for f32).
     pub fn snapshot(&self) -> Bounds {
         Bounds {
-            lb: self.lb.iter().map(load_f64).collect(),
-            ub: self.ub.iter().map(load_f64).collect(),
+            lb: self.lb.iter().map(|a| S::atomic_load(a).to_f64()).collect(),
+            ub: self.ub.iter().map(|a| S::atomic_load(a).to_f64()).collect(),
         }
     }
 }
@@ -164,24 +171,24 @@ mod tests {
     #[test]
     fn atomic_lb_monotone() {
         let a = AtomicU64::new(0.0f64.to_bits());
-        assert!(atomic_update_lb(&a, 2.0));
-        assert!(!atomic_update_lb(&a, 1.0));
-        assert!(atomic_update_lb(&a, 3.0));
+        assert!(atomic_update_lb::<f64>(&a, 2.0));
+        assert!(!atomic_update_lb::<f64>(&a, 1.0));
+        assert!(atomic_update_lb::<f64>(&a, 3.0));
         assert_eq!(load_f64(&a), 3.0);
     }
 
     #[test]
     fn atomic_ub_monotone() {
         let a = AtomicU64::new(f64::INFINITY.to_bits());
-        assert!(atomic_update_ub(&a, 5.0));
-        assert!(!atomic_update_ub(&a, 6.0));
+        assert!(atomic_update_ub::<f64>(&a, 5.0));
+        assert!(!atomic_update_ub::<f64>(&a, 6.0));
         assert_eq!(load_f64(&a), 5.0);
     }
 
     #[test]
     fn atomic_bounds_snapshot_round_trips() {
         let start = Bounds { lb: vec![0.0, f64::NEG_INFINITY], ub: vec![5.0, f64::INFINITY] };
-        let ab = AtomicBounds::new(&start);
+        let ab: AtomicBounds = AtomicBounds::new(&start);
         assert!(ab.try_improve_lb(0, 1.0));
         assert!(ab.try_improve_ub(1, 9.0));
         let snap = ab.snapshot();
@@ -190,8 +197,20 @@ mod tests {
     }
 
     #[test]
+    fn f32_atomic_bounds_start_outward() {
+        let start = Bounds { lb: vec![0.1, -2.0], ub: vec![0.2, f64::INFINITY] };
+        let ab: AtomicBounds<f32> = AtomicBounds::new(&start);
+        assert!(ab.lb(0).to_f64() <= 0.1);
+        assert!(ab.ub(0).to_f64() >= 0.2);
+        assert_eq!(ab.lb(1), -2.0f32);
+        assert_eq!(ab.ub(1), f32::INFINITY);
+        let snap = ab.snapshot();
+        assert!(snap.lb[0] <= start.lb[0] && snap.ub[0] >= start.ub[0]);
+    }
+
+    #[test]
     fn round_state_reuses_allocations_across_runs() {
-        let mut state = RoundState::new(3, true);
+        let mut state: RoundState = RoundState::new(3, true);
         let start = Bounds { lb: vec![0.0; 2], ub: vec![1.0; 2] };
         state.reset(&start);
         state.push_round(RoundTrace { rows_processed: 3, ..Default::default() });
@@ -206,7 +225,7 @@ mod tests {
 
     #[test]
     fn record_trace_off_drops_rounds() {
-        let mut state = RoundState::new(1, false);
+        let mut state: RoundState = RoundState::new(1, false);
         state.reset(&Bounds { lb: vec![0.0], ub: vec![1.0] });
         state.push_round(RoundTrace::default());
         assert_eq!(state.trace.num_rounds(), 0);

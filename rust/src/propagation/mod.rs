@@ -44,6 +44,7 @@
 pub mod activity;
 pub mod bounds;
 pub mod core;
+pub mod scalar;
 pub mod trace;
 pub mod registry;
 pub mod seq;

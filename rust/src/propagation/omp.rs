@@ -93,7 +93,7 @@ impl OmpPrepared<'_> {
         let inst = self.inst;
         let csc = &self.csc;
         let threads = self.threads;
-        let bounds = AtomicBounds::new(start);
+        let bounds: AtomicBounds = AtomicBounds::new(start);
         self.ws.seed(csc, seed_vars);
         let ws = &self.ws;
         let classes = self.classes.as_ref().map(|c| c.tags());

@@ -14,6 +14,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::core::mixed::MixedEngine;
 use super::gpu_model::GpuModelEngine;
 use super::omp::OmpEngine;
 use super::papilo_like::PapiloLikeEngine;
@@ -25,6 +26,37 @@ use crate::runtime::{Manifest, Runtime};
 use crate::util::cli::Args;
 
 pub use crate::runtime::default_artifact_dir;
+
+/// Bound-vector precision of a propagation session. `F64` is the
+/// reference path every engine runs natively. `F32` enrolls the engine
+/// in the mixed-precision protocol (`core::mixed`): an outward-safe f32
+/// pre-pass over the SoA layout, one f64 verification sweep, and
+/// escalation to the engine's pure-f64 path whenever the cheap result
+/// cannot be proven bit-identical. Distinct from the [`EngineSpec::f32`]
+/// XLA artifact knob, which swaps in single-precision device programs
+/// WITHOUT the outward-rounding safety net (paper section 4.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f64" | "F64" | "double" => Ok(Precision::F64),
+            "f32" | "F32" | "single" => Ok(Precision::F32),
+            other => Err(anyhow!("unknown precision {other:?} (expected f64 or f32)")),
+        }
+    }
+}
 
 /// Parsed engine specification: which engine, plus the knobs every
 /// construction site used to hand-roll (thread count, precision, sync
@@ -52,6 +84,9 @@ pub struct EngineSpec {
     /// the registry differential uses to prove the specialized kernels
     /// bit-exact.
     pub specialize: bool,
+    /// Bound-vector precision: `F64` native, `F32` mixed-precision
+    /// protocol (outward-safe pre-pass + verification + escalation).
+    pub precision: Precision,
 }
 
 impl EngineSpec {
@@ -64,6 +99,7 @@ impl EngineSpec {
             jnp: false,
             max_rounds: MAX_ROUNDS,
             specialize: true,
+            precision: Precision::F64,
         }
     }
 
@@ -99,13 +135,19 @@ impl EngineSpec {
         self
     }
 
+    /// Select the session's bound-vector precision.
+    pub fn precision(mut self, precision: Precision) -> EngineSpec {
+        self.precision = precision;
+        self
+    }
+
     /// Canonical cache key for this spec: every knob that changes what a
     /// prepared session computes, in a fixed order. The serving layer's
     /// `SessionStore` keys prepared sessions on `(instance fingerprint,
     /// cache_key)`, so two specs with the same key MUST be substitutable.
     pub fn cache_key(&self) -> String {
         format!(
-            "{}|t{}|f32:{}|fm:{}|jnp:{}|mr:{}|sp:{}",
+            "{}|t{}|f32:{}|fm:{}|jnp:{}|mr:{}|sp:{}|p:{}",
             self.name,
             self.threads.map(|t| t.to_string()).unwrap_or_else(|| "d".into()),
             self.f32 as u8,
@@ -113,11 +155,13 @@ impl EngineSpec {
             self.jnp as u8,
             self.max_rounds,
             self.specialize as u8,
+            self.precision.name(),
         )
     }
 
     /// Parse from CLI arguments: `--engine NAME [--threads N] [--f32]
-    /// [--fastmath] [--jnp] [--max-rounds R] [--no-specialize]`.
+    /// [--fastmath] [--jnp] [--max-rounds R] [--no-specialize]
+    /// [--precision f64|f32]`.
     pub fn from_args(args: &Args) -> EngineSpec {
         let mut spec = EngineSpec::new(args.get_or("engine", "cpu_seq"))
             .max_rounds(args.get_u64("max-rounds", MAX_ROUNDS as u64) as u32);
@@ -137,6 +181,9 @@ impl EngineSpec {
         }
         if args.flag("no-specialize") {
             spec = spec.no_specialize();
+        }
+        if let Some(p) = args.get("precision") {
+            spec = spec.precision(Precision::parse(p).unwrap_or_else(|e| panic!("{e:#}")));
         }
         spec
     }
@@ -222,8 +269,19 @@ pub struct EngineEntry {
     /// cache) — not `Send` — so the service pins them to its dedicated
     /// shard 0 and never opens a second PJRT client.
     pub send_safe: bool,
+    /// Bound-vector precisions this engine can serve. Native engines
+    /// support `[F64, F32]` — the f32 path is the shared mixed-precision
+    /// wrapper, not engine code. The XLA engines stay `[F64]`: their
+    /// single-precision story is the `--f32` artifact knob, which lacks
+    /// the outward-rounding safety net and is reported separately.
+    pub precisions: &'static [Precision],
     factory: Factory,
 }
+
+/// The native engines' precision capability (shared mixed wrapper).
+const NATIVE_PRECISIONS: &[Precision] = &[Precision::F64, Precision::F32];
+/// The XLA engines': fixed AOT programs, f64 only.
+const F64_ONLY: &[Precision] = &[Precision::F64];
 
 fn make_seq(_reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
     let mut engine = SeqEngine::new();
@@ -304,6 +362,7 @@ impl Registry {
             specializes: true,
             served: true,
             send_safe: true,
+            precisions: NATIVE_PRECISIONS,
             factory: make_seq,
         });
         reg.register(EngineEntry {
@@ -314,6 +373,7 @@ impl Registry {
             specializes: true,
             served: true,
             send_safe: true,
+            precisions: NATIVE_PRECISIONS,
             factory: make_omp,
         });
         reg.register(EngineEntry {
@@ -324,6 +384,7 @@ impl Registry {
             specializes: true,
             served: true,
             send_safe: true,
+            precisions: NATIVE_PRECISIONS,
             factory: make_gpu_model,
         });
         reg.register(EngineEntry {
@@ -334,6 +395,7 @@ impl Registry {
             specializes: true,
             served: true,
             send_safe: true,
+            precisions: NATIVE_PRECISIONS,
             factory: make_papilo,
         });
         reg.register(EngineEntry {
@@ -344,6 +406,7 @@ impl Registry {
             specializes: false,
             served: true,
             send_safe: false,
+            precisions: F64_ONLY,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -354,6 +417,7 @@ impl Registry {
             specializes: false,
             served: true,
             send_safe: false,
+            precisions: F64_ONLY,
             factory: make_xla,
         });
         reg.register(EngineEntry {
@@ -364,6 +428,7 @@ impl Registry {
             specializes: false,
             served: true,
             send_safe: false,
+            precisions: F64_ONLY,
             factory: make_xla,
         });
         reg
@@ -421,6 +486,15 @@ impl Registry {
                             ("specializes", Json::Bool(e.specializes)),
                             ("served", Json::Bool(e.served)),
                             ("send_safe", Json::Bool(e.send_safe)),
+                            (
+                                "precisions",
+                                Json::Arr(
+                                    e.precisions
+                                        .iter()
+                                        .map(|p| Json::Str(p.name().to_string()))
+                                        .collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect(),
@@ -428,12 +502,27 @@ impl Registry {
         )])
     }
 
-    /// Construct the engine `spec` describes.
+    /// Construct the engine `spec` describes. An `F32` precision spec
+    /// wraps the engine in the shared mixed-precision protocol; engines
+    /// that only advertise `F64` (the fixed AOT programs) reject it
+    /// before any factory work happens.
     pub fn create(&self, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
         let entry = self.entries.iter().find(|e| e.name == spec.name).ok_or_else(|| {
             anyhow!("unknown engine {} (registered: {})", spec.name, self.engine_list())
         })?;
-        (entry.factory)(self, spec)
+        if !entry.precisions.contains(&spec.precision) {
+            return Err(anyhow!(
+                "engine {} does not support --precision {} (supported: {})",
+                entry.name,
+                spec.precision.name(),
+                entry.precisions.iter().map(|p| p.name()).collect::<Vec<_>>().join(", ")
+            ));
+        }
+        let engine = (entry.factory)(self, spec)?;
+        Ok(match spec.precision {
+            Precision::F64 => engine,
+            Precision::F32 => Box::new(MixedEngine::wrap(engine, spec.max_rounds)),
+        })
     }
 
     /// The shared PJRT runtime, opened on first use and reused by every
@@ -529,6 +618,24 @@ mod tests {
         for e in reg.entries() {
             assert_eq!(e.send_safe, !e.needs_artifacts, "{}: send_safe drifted", e.name);
         }
+        // precision capability: natives serve both widths via the mixed
+        // wrapper, the fixed AOT programs stay f64-only
+        for (e, j) in reg.entries().iter().zip(engines) {
+            let ps: Vec<&str> = j
+                .get("precisions")
+                .and_then(|v| v.as_arr())
+                .expect("precisions array")
+                .iter()
+                .filter_map(|p| p.as_str())
+                .collect();
+            assert!(ps.contains(&"f64"), "{}: f64 missing", e.name);
+            assert_eq!(
+                ps.contains(&"f32"),
+                !e.needs_artifacts,
+                "{}: f32 capability drifted",
+                e.name
+            );
+        }
         // the capability map the batching work relies on
         let mode_of = |name: &str| {
             reg.entries().iter().find(|e| e.name == name).map(|e| e.batch).unwrap()
@@ -553,6 +660,7 @@ mod tests {
             base.clone().f32().cache_key(),
             base.clone().fastmath().cache_key(),
             base.clone().jnp().cache_key(),
+            base.clone().precision(Precision::F32).cache_key(),
         ];
         for (i, a) in keys.iter().enumerate() {
             for b in keys.iter().skip(i + 1) {
@@ -561,6 +669,45 @@ mod tests {
         }
         // and an identical spec maps to the identical key
         assert_eq!(base.cache_key(), EngineSpec::new("cpu_seq").cache_key());
+    }
+
+    #[test]
+    fn f32_precision_wraps_natives_and_rejects_xla() {
+        let reg = Registry::with_defaults();
+        let inst =
+            gen::generate(&GenConfig { nrows: 25, ncols: 25, seed: 4, ..Default::default() });
+        for name in ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like"] {
+            let spec = EngineSpec::new(name).threads(2).precision(Precision::F32);
+            let engine = reg.create(&spec).unwrap();
+            assert_eq!(engine.name(), name, "wrapper must keep the engine name");
+            let f64_result =
+                reg.create(&EngineSpec::new(name).threads(1)).unwrap().propagate(&inst);
+            let mut session = engine.prepare(&inst).unwrap();
+            let r = session.propagate(&Bounds::of(&inst));
+            assert_eq!(r.status, f64_result.status, "{name}: status drifted under f32");
+        }
+        // the fixed AOT programs reject the mixed protocol up front,
+        // without touching the PJRT runtime
+        for name in ["gpu_atomic", "gpu_loop", "megakernel"] {
+            let err = reg
+                .create(&EngineSpec::new(name).precision(Precision::F32))
+                .expect_err("XLA engines are f64-only");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("precision"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn precision_parse_round_trips() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("f64").unwrap(), Precision::F64);
+        assert_eq!(Precision::parse("single").unwrap(), Precision::F32);
+        assert!(Precision::parse("f16").is_err());
+        let spec = EngineSpec::from_args(&Args::parse(
+            vec!["--engine".into(), "cpu_seq".into(), "--precision".into(), "f32".into()],
+        ));
+        assert_eq!(spec.precision, Precision::F32);
+        assert!(spec.cache_key().ends_with("|p:f32"));
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! The sealed [`Scalar`] abstraction the shared propagation core is
+//! generic over (f64 and f32).
+//!
+//! The paper's reference implementation ships `Double` and `Float` kernel
+//! variants because the sweep is memory-bandwidth bound; this trait is the
+//! Rust-side analogue. Everything the core's kernels need from a bound /
+//! coefficient type is collected here:
+//!
+//! * arithmetic + comparisons (supertraits),
+//! * the sentinel constants (`INFINITY`, tolerances),
+//! * threshold-based improvement tests ([`Scalar::improves_lb`] /
+//!   [`Scalar::improves_ub`]; the f64 impl delegates to
+//!   [`crate::numerics`] so genericized kernels keep bit-identical f64
+//!   semantics),
+//! * **outward** conversions from f64 ([`Scalar::from_f64_lb`] rounds
+//!   toward −∞, [`Scalar::from_f64_ub`] toward +∞) so a narrowed scalar
+//!   can never make a starting box tighter than its f64 original, and
+//! * a lock-free atomic cell ([`Scalar::Atomic`]) so the chunk-parallel
+//!   CAS bound lattice in `core::state` works at either width.
+//!
+//! The trait is sealed: exactly f64 and f32 implement it, which keeps
+//! inference working at every existing call site (types default to
+//! `S = f64`) and keeps the outward-rounding soundness argument in
+//! DESIGN.md §9 a two-case analysis.
+
+use std::fmt::Debug;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// A propagation scalar: f64 (reference precision) or f32 (bandwidth
+/// precision, outward-safe). See module docs.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Clone
+    + Debug
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const INFINITY: Self;
+    const NEG_INFINITY: Self;
+    /// Slack used when rounding integer-variable bound candidates. The
+    /// f32 value is wider than f64's: rounding an integer candidate with
+    /// MORE slack only moves the rounded bound outward, never inward.
+    const INT_ROUND_EPS: Self;
+    /// Empty-domain detection tolerance (`lb > ub + FEAS_TOL`).
+    const FEAS_TOL: Self;
+    /// Minimal relative improvement that counts as a bound change. The
+    /// f32 threshold is coarser than f64's 1e-9 (which is below f32
+    /// resolution); a coarser threshold only makes f32 stop earlier,
+    /// i.e. at wider (outward) bounds.
+    const EPS_IMPROVE_REL: Self;
+
+    /// Lock-free cell holding one bound of this width.
+    type Atomic: Send + Sync;
+
+    fn is_finite(self) -> bool;
+    fn abs(self) -> Self;
+    fn floor(self) -> Self;
+    fn ceil(self) -> Self;
+    fn maxv(self, other: Self) -> Self;
+    fn minv(self, other: Self) -> Self;
+    /// Exact widening (f32 → f64 is exact; f64 is identity).
+    fn to_f64(self) -> f64;
+
+    /// Convert a f64 value rounding to nearest (coefficient conversion;
+    /// the mixed-precision pre-pass covers the perturbation with its
+    /// per-row error margin). f64 is identity.
+    fn from_f64_nearest(v: f64) -> Self;
+    /// Convert a f64 lower bound, rounding outward (toward −∞).
+    /// Non-finite values pass through unchanged.
+    fn from_f64_lb(v: f64) -> Self;
+    /// Convert a f64 upper bound, rounding outward (toward +∞).
+    fn from_f64_ub(v: f64) -> Self;
+    /// Next representable value toward −∞ (identity for f64 and for
+    /// non-finite values).
+    fn outward_lb(self) -> Self;
+    /// Next representable value toward +∞ (identity for f64 and for
+    /// non-finite values).
+    fn outward_ub(self) -> Self;
+
+    /// Does `new` improve on lower bound `old`? f64 delegates to
+    /// [`crate::numerics::improves_lb`] (bit-identical semantics).
+    fn improves_lb(old: Self, new: Self) -> bool;
+    /// Does `new` improve on upper bound `old`?
+    fn improves_ub(old: Self, new: Self) -> bool;
+
+    /// Widen a whole vector. The f64 impl returns the vector unchanged
+    /// (no copy), preserving allocation reuse in `RoundState`.
+    fn vec_to_f64(v: Vec<Self>) -> Vec<f64>;
+
+    fn atomic_new(v: Self) -> Self::Atomic;
+    fn atomic_load(a: &Self::Atomic) -> Self;
+    /// Single CAS attempt `current -> new`; `Err` carries the observed
+    /// value (may spuriously equal `current`: this is a weak exchange,
+    /// callers loop).
+    fn atomic_cas(a: &Self::Atomic, current: Self, new: Self) -> Result<(), Self>;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const INFINITY: f64 = f64::INFINITY;
+    const NEG_INFINITY: f64 = f64::NEG_INFINITY;
+    const INT_ROUND_EPS: f64 = crate::numerics::INT_ROUND_EPS;
+    const FEAS_TOL: f64 = crate::numerics::FEAS_TOL;
+    const EPS_IMPROVE_REL: f64 = crate::numerics::EPS_IMPROVE_REL;
+
+    type Atomic = AtomicU64;
+
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline]
+    fn floor(self) -> f64 {
+        f64::floor(self)
+    }
+    #[inline]
+    fn ceil(self) -> f64 {
+        f64::ceil(self)
+    }
+    #[inline]
+    fn maxv(self, other: f64) -> f64 {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn minv(self, other: f64) -> f64 {
+        f64::min(self, other)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn from_f64_nearest(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn from_f64_lb(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn from_f64_ub(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn outward_lb(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn outward_ub(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn improves_lb(old: f64, new: f64) -> bool {
+        crate::numerics::improves_lb(old, new)
+    }
+    #[inline]
+    fn improves_ub(old: f64, new: f64) -> bool {
+        crate::numerics::improves_ub(old, new)
+    }
+    #[inline]
+    fn vec_to_f64(v: Vec<f64>) -> Vec<f64> {
+        v
+    }
+    #[inline]
+    fn atomic_new(v: f64) -> AtomicU64 {
+        AtomicU64::new(v.to_bits())
+    }
+    #[inline]
+    fn atomic_load(a: &AtomicU64) -> f64 {
+        // ORDERING: Relaxed load of one bound cell; the CAS bound lattice
+        // is commutative/monotone, freshness is best-effort (see
+        // core::state docs and DESIGN.md §8.3).
+        f64::from_bits(a.load(Ordering::Relaxed))
+    }
+    #[inline]
+    fn atomic_cas(a: &AtomicU64, current: f64, new: f64) -> Result<(), f64> {
+        // ORDERING: Relaxed CAS; callers re-check the improvement
+        // predicate against the returned value and loop, so no ordering
+        // beyond the cell's own atomicity is required.
+        a.compare_exchange_weak(
+            current.to_bits(),
+            new.to_bits(),
+            Ordering::Relaxed, // ORDERING: see the block comment above
+            Ordering::Relaxed, // ORDERING: see the block comment above
+        )
+        .map(|_| ())
+        .map_err(f64::from_bits)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const INFINITY: f32 = f32::INFINITY;
+    const NEG_INFINITY: f32 = f32::NEG_INFINITY;
+    // Wider than f64's 1e-6: extra integer-rounding slack is outward.
+    const INT_ROUND_EPS: f32 = 2e-6;
+    const FEAS_TOL: f32 = 1e-6;
+    // Coarser than f64's 1e-9 (below f32 resolution); stops earlier at
+    // wider bounds, which the outward contract allows.
+    const EPS_IMPROVE_REL: f32 = 1e-5;
+
+    type Atomic = AtomicU32;
+
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+    #[inline]
+    fn floor(self) -> f32 {
+        f32::floor(self)
+    }
+    #[inline]
+    fn ceil(self) -> f32 {
+        f32::ceil(self)
+    }
+    #[inline]
+    fn maxv(self, other: f32) -> f32 {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn minv(self, other: f32) -> f32 {
+        f32::min(self, other)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn from_f64_nearest(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn from_f64_lb(v: f64) -> f32 {
+        if !v.is_finite() {
+            return v as f32; // ±inf pass through; NaN rejected upstream
+        }
+        let n = v as f32; // rounds to nearest
+        if (n as f64) > v {
+            next_down32(n)
+        } else {
+            n
+        }
+    }
+    #[inline]
+    fn from_f64_ub(v: f64) -> f32 {
+        if !v.is_finite() {
+            return v as f32;
+        }
+        let n = v as f32;
+        if (n as f64) < v {
+            next_up32(n)
+        } else {
+            n
+        }
+    }
+    #[inline]
+    fn outward_lb(self) -> f32 {
+        next_down32(self)
+    }
+    #[inline]
+    fn outward_ub(self) -> f32 {
+        next_up32(self)
+    }
+    #[inline]
+    fn improves_lb(old: f32, new: f32) -> bool {
+        if old.is_finite() {
+            new > old + old.abs().max(1.0) * Self::EPS_IMPROVE_REL
+        } else {
+            new > old
+        }
+    }
+    #[inline]
+    fn improves_ub(old: f32, new: f32) -> bool {
+        if old.is_finite() {
+            new < old - old.abs().max(1.0) * Self::EPS_IMPROVE_REL
+        } else {
+            new < old
+        }
+    }
+    fn vec_to_f64(v: Vec<f32>) -> Vec<f64> {
+        v.into_iter().map(|x| x as f64).collect()
+    }
+    #[inline]
+    fn atomic_new(v: f32) -> AtomicU32 {
+        AtomicU32::new(v.to_bits())
+    }
+    #[inline]
+    fn atomic_load(a: &AtomicU32) -> f32 {
+        // ORDERING: Relaxed; same monotone-lattice argument as the f64
+        // cell (DESIGN.md §8.3).
+        f32::from_bits(a.load(Ordering::Relaxed))
+    }
+    #[inline]
+    fn atomic_cas(a: &AtomicU32, current: f32, new: f32) -> Result<(), f32> {
+        // ORDERING: Relaxed weak CAS; callers re-validate and loop.
+        a.compare_exchange_weak(
+            current.to_bits(),
+            new.to_bits(),
+            Ordering::Relaxed, // ORDERING: see the block comment above
+            Ordering::Relaxed, // ORDERING: see the block comment above
+        )
+        .map(|_| ())
+        .map_err(f32::from_bits)
+    }
+}
+
+/// Next representable f32 toward +∞. Hand-rolled on the bit encoding so
+/// the behaviour is pinned regardless of toolchain: +inf and NaN pass
+/// through, ±0 steps to the smallest positive subnormal.
+#[inline]
+pub fn next_up32(x: f32) -> f32 {
+    // FLOAT-EQ: exact +inf sentinel — stepping past +inf is identity.
+    if x.is_nan() || x == f32::INFINITY {
+        return x;
+    }
+    // FLOAT-EQ: exact ±0 — both step to the smallest subnormal.
+    if x == 0.0 {
+        return f32::from_bits(1);
+    }
+    let b = x.to_bits();
+    if x > 0.0 {
+        f32::from_bits(b + 1)
+    } else {
+        f32::from_bits(b - 1)
+    }
+}
+
+/// Next representable f32 toward −∞ (mirror of [`next_up32`]).
+#[inline]
+pub fn next_down32(x: f32) -> f32 {
+    // FLOAT-EQ: exact −inf sentinel — stepping past −inf is identity.
+    if x.is_nan() || x == f32::NEG_INFINITY {
+        return x;
+    }
+    // FLOAT-EQ: exact ±0 — both step to the smallest negative subnormal.
+    if x == 0.0 {
+        return f32::from_bits(1 | (1 << 31));
+    }
+    let b = x.to_bits();
+    if x > 0.0 {
+        f32::from_bits(b - 1)
+    } else {
+        f32::from_bits(b + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_up_down_step_one_ulp() {
+        assert!(next_up32(1.0) > 1.0);
+        assert_eq!(next_up32(1.0), f32::from_bits(1.0f32.to_bits() + 1));
+        assert!(next_down32(1.0) < 1.0);
+        assert!(next_up32(-1.0) > -1.0);
+        assert!(next_down32(-1.0) < -1.0);
+        assert_eq!(next_up32(f32::INFINITY), f32::INFINITY);
+        assert_eq!(next_down32(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(next_up32(0.0) > 0.0);
+        assert!(next_down32(0.0) < 0.0);
+        assert_eq!(next_up32(f32::MAX), f32::INFINITY);
+        assert_eq!(next_down32(f32::MIN), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f64_conversions_are_identity() {
+        for v in [0.0, -3.5, f64::INFINITY, f64::NEG_INFINITY, 1e300] {
+            assert_eq!(<f64 as Scalar>::from_f64_lb(v), v);
+            assert_eq!(<f64 as Scalar>::from_f64_ub(v), v);
+            assert_eq!(Scalar::outward_lb(v), v);
+            assert_eq!(Scalar::outward_ub(v), v);
+        }
+    }
+
+    #[test]
+    fn f32_conversion_is_outward() {
+        // exhaustively-ish: representable values convert exactly...
+        for v in [0.0, 1.0, -2.5, 1024.0, -3.0] {
+            assert_eq!(<f32 as Scalar>::from_f64_lb(v) as f64, v);
+            assert_eq!(<f32 as Scalar>::from_f64_ub(v) as f64, v);
+        }
+        // ...non-representable values straddle the original.
+        for v in [0.1, -0.1, 1.0 / 3.0, 1e-11, 12345.678901, -9876.54321] {
+            let lo = <f32 as Scalar>::from_f64_lb(v) as f64;
+            let hi = <f32 as Scalar>::from_f64_ub(v) as f64;
+            assert!(lo <= v, "lb conversion must round down: {lo} vs {v}");
+            assert!(hi >= v, "ub conversion must round up: {hi} vs {v}");
+            assert!(hi > lo);
+        }
+        // magnitudes beyond f32 range saturate outward, never inward.
+        assert_eq!(<f32 as Scalar>::from_f64_lb(1e300), f32::MAX);
+        assert_eq!(<f32 as Scalar>::from_f64_ub(1e300), f32::INFINITY);
+        assert_eq!(<f32 as Scalar>::from_f64_lb(-1e300), f32::NEG_INFINITY);
+        assert_eq!(<f32 as Scalar>::from_f64_ub(-1e300), f32::MIN);
+        // infinities pass through.
+        assert_eq!(<f32 as Scalar>::from_f64_lb(f64::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(<f32 as Scalar>::from_f64_ub(f64::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn f64_improves_matches_numerics() {
+        for (old, new) in [(0.0, 1.0), (0.0, 5e-10), (1e12, 1e12 + 2e3)] {
+            assert_eq!(
+                <f64 as Scalar>::improves_lb(old, new),
+                crate::numerics::improves_lb(old, new)
+            );
+            assert_eq!(
+                <f64 as Scalar>::improves_ub(old, -new),
+                crate::numerics::improves_ub(old, -new)
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_cells_round_trip() {
+        let a = <f64 as Scalar>::atomic_new(-2.5);
+        assert_eq!(<f64 as Scalar>::atomic_load(&a), -2.5);
+        let b = <f32 as Scalar>::atomic_new(7.25f32);
+        assert_eq!(<f32 as Scalar>::atomic_load(&b), 7.25f32);
+        // a successful CAS lands the new value
+        let mut cur = <f32 as Scalar>::atomic_load(&b);
+        loop {
+            match <f32 as Scalar>::atomic_cas(&b, cur, 8.0) {
+                Ok(()) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        assert_eq!(<f32 as Scalar>::atomic_load(&b), 8.0f32);
+    }
+}

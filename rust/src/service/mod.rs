@@ -53,7 +53,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::instance::{Bounds, MipInstance};
-use crate::propagation::registry::{EngineSpec, Registry};
+use crate::propagation::registry::{EngineSpec, Precision, Registry};
 use crate::propagation::Status;
 use crate::util::json::Json;
 
@@ -63,6 +63,10 @@ use crate::util::json::Json;
 pub struct ServiceConfig {
     /// Engine used when a propagate request names none.
     pub default_engine: String,
+    /// Precision applied to the default engine when a propagate request
+    /// names no engine (requests that do name one carry their own
+    /// precision; absent on the wire means f64).
+    pub default_precision: Precision,
     /// Flush a session's queue as soon as this many requests are pending.
     pub batch_max: usize,
     /// ... or when the oldest pending request has waited this long.
@@ -87,6 +91,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             default_engine: "cpu_seq".into(),
+            default_precision: Precision::F64,
             batch_max: 16,
             batch_window: Duration::from_millis(2),
             max_sessions: 32,
@@ -253,6 +258,7 @@ pub(crate) enum Job {
 /// registry (non-`send_safe` engines — XLA — always route to shard 0).
 struct RouteTable {
     default_engine: String,
+    default_precision: Precision,
     send_safe: HashMap<String, bool>,
 }
 
@@ -262,6 +268,7 @@ impl RouteTable {
         let registry = Registry::with_defaults();
         RouteTable {
             default_engine: config.default_engine.clone(),
+            default_precision: config.default_precision,
             send_safe: registry
                 .entries()
                 .iter()
@@ -295,7 +302,8 @@ impl ServiceHandle {
                 session::SessionKey::new(req.session, spec)
             }
             None => {
-                let spec = EngineSpec::new(&self.route.default_engine);
+                let spec = EngineSpec::new(&self.route.default_engine)
+                    .precision(self.route.default_precision);
                 if !self.route.send_safe.get(spec.name.as_str()).copied().unwrap_or(false) {
                     return 0;
                 }

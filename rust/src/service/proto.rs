@@ -22,7 +22,7 @@
 //! same spelling the `gdp propagate` CLI prints.
 
 use crate::instance::Bounds;
-use crate::propagation::registry::EngineSpec;
+use crate::propagation::registry::{EngineSpec, Precision};
 use crate::propagation::Status;
 use crate::util::json::Json;
 
@@ -141,8 +141,15 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
                     // engine knobs only make sense against a named engine;
                     // dropping them silently would serve a result computed
                     // with different settings than the client asked for
-                    const KNOBS: [&str; 6] =
-                        ["threads", "max_rounds", "no_specialize", "f32", "fastmath", "jnp"];
+                    const KNOBS: [&str; 7] = [
+                        "threads",
+                        "max_rounds",
+                        "no_specialize",
+                        "f32",
+                        "fastmath",
+                        "jnp",
+                        "precision",
+                    ];
                     for knob in KNOBS {
                         if j.get(knob).is_some() {
                             return Err(format!("{knob:?} requires \"engine\""));
@@ -168,6 +175,13 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
                     }
                     if j.get("jnp") == Some(&Json::Bool(true)) {
                         spec = spec.jnp();
+                    }
+                    // absent field keeps the f64 default (wire
+                    // compatibility with pre-precision clients)
+                    if let Some(p) = j.get("precision").and_then(|v| v.as_str()) {
+                        spec = spec.precision(
+                            Precision::parse(p).map_err(|e| format!("{e:#}"))?,
+                        );
                     }
                     Some(spec)
                 }
@@ -343,6 +357,25 @@ mod tests {
         assert!(parse_request(bad).unwrap_err().contains("engine"));
         let bad = r#"{"v":1,"op":"propagate","session":"00","max_rounds":3}"#;
         assert!(parse_request(bad).unwrap_err().contains("engine"));
+        let bad = r#"{"v":1,"op":"propagate","session":"00","precision":"f32"}"#;
+        assert!(parse_request(bad).unwrap_err().contains("engine"));
+    }
+
+    #[test]
+    fn propagate_request_parses_precision() {
+        let line = r#"{"v":1,"op":"propagate","session":"00",
+            "engine":"cpu_seq","precision":"f32"}"#;
+        let req = parse_request(line).unwrap();
+        let WireOp::Propagate(p) = req.op else { panic!("wrong op") };
+        assert_eq!(p.spec.unwrap().precision, Precision::F32);
+        // absent field keeps the f64 default
+        let line = r#"{"v":1,"op":"propagate","session":"00","engine":"cpu_seq"}"#;
+        let req = parse_request(line).unwrap();
+        let WireOp::Propagate(p) = req.op else { panic!("wrong op") };
+        assert_eq!(p.spec.unwrap().precision, Precision::F64);
+        // junk precision is a parse error, not a silent default
+        let bad = r#"{"v":1,"op":"propagate","session":"00","engine":"cpu_seq","precision":"f16"}"#;
+        assert!(parse_request(bad).unwrap_err().contains("precision"));
     }
 
     #[test]

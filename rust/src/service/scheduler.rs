@@ -204,9 +204,10 @@ impl Scheduler {
         received: Instant,
         reply: &Sender<ServiceResult<PropagateReply>>,
     ) -> ServiceResult<()> {
-        let spec = req
-            .spec
-            .unwrap_or_else(|| EngineSpec::new(&self.config.default_engine));
+        let spec = req.spec.unwrap_or_else(|| {
+            EngineSpec::new(&self.config.default_engine)
+                .precision(self.config.default_precision)
+        });
         let entry = self
             .registry
             .entries()

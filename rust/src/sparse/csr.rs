@@ -138,6 +138,56 @@ impl Csr {
     }
 }
 
+/// CSR with a u32 row-pointer array: same pattern and values as [`Csr`]
+/// but 4-byte instead of 8-byte row offsets, halving the pointer traffic
+/// of the bandwidth-bound sweep (the matrix is read once per round, the
+/// pointer array once per row). Only representable when the matrix has
+/// at most `u32::MAX` nonzeros; [`CsrU32::from_csr`] returns `None`
+/// beyond that and callers keep the usize CSR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrU32 {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointer array, length nrows+1, u32 offsets.
+    pub row_ptr: Vec<u32>,
+    /// Column indices, length nnz, sorted within each row.
+    pub col_idx: Vec<u32>,
+    /// Coefficients, length nnz, all nonzero.
+    pub vals: Vec<f64>,
+}
+
+impl CsrU32 {
+    /// Narrow a CSR's row pointers to u32. `None` if the nonzero count
+    /// exceeds the u32 index range.
+    pub fn from_csr(csr: &Csr) -> Option<CsrU32> {
+        if csr.nnz() > u32::MAX as usize {
+            return None;
+        }
+        Some(CsrU32 {
+            nrows: csr.nrows,
+            ncols: csr.ncols,
+            row_ptr: csr.row_ptr.iter().map(|&p| p as u32).collect(),
+            col_idx: csr.col_idx.clone(),
+            vals: csr.vals.clone(),
+        })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Column indices and values of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        (self.row_ptr[r + 1] - self.row_ptr[r]) as usize
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,5 +255,38 @@ mod tests {
                 }
             }
         });
+    }
+}
+
+#[cfg(test)]
+mod u32_tests {
+    use super::*;
+
+    #[test]
+    fn u32_variant_mirrors_csr() {
+        let m = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (0, 3, -1.5), (1, 0, 4.0), (2, 2, 7.0)],
+        )
+        .unwrap();
+        let n = CsrU32::from_csr(&m).unwrap();
+        assert_eq!(n.nnz(), m.nnz());
+        assert_eq!(n.nrows, m.nrows);
+        assert_eq!(n.ncols, m.ncols);
+        for r in 0..m.nrows {
+            assert_eq!(n.row(r), m.row(r));
+            assert_eq!(n.row_nnz(r), m.row_nnz(r));
+        }
+    }
+
+    #[test]
+    fn u32_variant_handles_empty_rows() {
+        let m = Csr::from_triplets(3, 3, &[(1, 1, 5.0)]).unwrap();
+        let n = CsrU32::from_csr(&m).unwrap();
+        assert_eq!(n.row_nnz(0), 0);
+        assert_eq!(n.row_nnz(1), 1);
+        assert_eq!(n.row_nnz(2), 0);
+        assert_eq!(n.row_ptr.len(), 4);
     }
 }

@@ -11,4 +11,4 @@ pub mod permute;
 
 pub use blocked_ell::BlockedEll;
 pub use csc::Csc;
-pub use csr::Csr;
+pub use csr::{Csr, CsrU32};

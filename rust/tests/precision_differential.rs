@@ -1,0 +1,200 @@
+//! Mixed-precision differential matrix (ISSUE 7 acceptance suite).
+//!
+//! Three contracts, checked over every generator family:
+//!
+//! 1. **Outwardness** — the raw f32 fixed point, widened to f64, contains
+//!    the pure-f64 fixed point bound-for-bound. This is the soundness
+//!    lemma the whole mixed protocol rests on (DESIGN.md §9).
+//! 2. **Bit-identity** — a registry-created `--precision f32` engine
+//!    produces bit-identical final bounds to its pure-f64 twin on the
+//!    cold, warm and batch paths: the verification sweep only accepts an
+//!    exact f64 fixpoint, and every other outcome escalates to the inner
+//!    engine verbatim.
+//! 3. **No fabricated infeasibility** — apparent f32 infeasibility is an
+//!    escalation trigger, never a verdict, so the f32 engine's status
+//!    always equals the f64 engine's.
+
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::Bounds;
+use gdp::propagation::core::MixedPrePass;
+use gdp::propagation::registry::{EngineSpec, Precision, Registry};
+use gdp::propagation::{Engine, PreparedProblem, Status};
+
+fn suite() -> Vec<gdp::instance::MipInstance> {
+    let mut suite = Vec::new();
+    for family in Family::ALL {
+        for seed in 0..3 {
+            suite.push(gen::generate(&GenConfig {
+                family,
+                nrows: 40,
+                ncols: 35,
+                seed,
+                ..Default::default()
+            }));
+        }
+    }
+    suite
+}
+
+/// Names of the engines that advertise native f32 support (exactly the
+/// non-XLA ones; the registry test pins that invariant).
+fn f32_capable(registry: &Registry) -> Vec<&'static str> {
+    let names: Vec<&'static str> = registry
+        .entries()
+        .iter()
+        .filter(|e| e.precisions.contains(&Precision::F32))
+        .map(|e| e.name)
+        .collect();
+    assert!(names.len() >= 4, "registry lost the f32-capable native engines: {names:?}");
+    names
+}
+
+#[test]
+fn f32_box_is_outward_of_f64_fixpoint_on_every_family() {
+    let registry = Registry::with_defaults();
+    let reference = registry.create(&EngineSpec::new("cpu_seq")).unwrap();
+    let mut converged = 0;
+    for inst in &suite() {
+        let want = reference.propagate(inst);
+        if want.status != Status::Converged {
+            continue;
+        }
+        let mut pre = MixedPrePass::new(inst, 100);
+        let (bx, status, _rounds) = pre.f32_box(&Bounds::of(inst), None);
+        if status != Status::Converged {
+            continue; // escalation: the protocol claims nothing about the box
+        }
+        converged += 1;
+        for j in 0..inst.ncols() {
+            assert!(
+                bx.lb[j] <= want.bounds.lb[j],
+                "{}: f32 lb[{j}] = {} tighter than f64 {}",
+                inst.name,
+                bx.lb[j],
+                want.bounds.lb[j]
+            );
+            assert!(
+                bx.ub[j] >= want.bounds.ub[j],
+                "{}: f32 ub[{j}] = {} tighter than f64 {}",
+                inst.name,
+                bx.ub[j],
+                want.bounds.ub[j]
+            );
+        }
+    }
+    // the lemma must actually have been exercised, not skipped to death
+    assert!(converged >= 10, "only {converged} f32 passes converged across the suite");
+}
+
+/// Status + bit-identical bounds (rounds are allowed to differ: the
+/// verified path reports f32 rounds + 1).
+fn assert_same_result(
+    what: &str,
+    f32_run: &gdp::propagation::PropResult,
+    f64_run: &gdp::propagation::PropResult,
+) {
+    assert_eq!(f32_run.status, f64_run.status, "{what}: status");
+    if f64_run.status == Status::Converged {
+        assert_eq!(f32_run.bounds.lb, f64_run.bounds.lb, "{what}: lb bits");
+        assert_eq!(f32_run.bounds.ub, f64_run.bounds.ub, "{what}: ub bits");
+    }
+}
+
+#[test]
+fn f32_engines_bit_identical_to_pure_f64_cold_warm_and_batch() {
+    // single-threaded so every native engine is schedule-deterministic;
+    // the bit-identity then isolates exactly the mixed-precision protocol
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        for name in f32_capable(&registry) {
+            let e64 = registry.create(&EngineSpec::new(name).threads(1)).unwrap();
+            let e32 = registry
+                .create(&EngineSpec::new(name).threads(1).precision(Precision::F32))
+                .unwrap();
+            let mut s64 = e64.prepare(inst).unwrap();
+            let mut s32 = e32.prepare(inst).unwrap();
+            let start = Bounds::of(inst);
+
+            let cold64 = s64.propagate(&start);
+            let cold32 = s32.propagate(&start);
+            assert_same_result(&format!("{name} cold on {}", inst.name), &cold32, &cold64);
+            if cold64.status != Status::Converged {
+                continue;
+            }
+
+            if let Some((v, branched)) = gdp::testkit::branch_first_wide_var(&cold64.bounds, 0.5) {
+                let warm64 = s64.propagate_warm(&branched, &[v]);
+                let warm32 = s32.propagate_warm(&branched, &[v]);
+                assert_same_result(&format!("{name} warm on {}", inst.name), &warm32, &warm64);
+            }
+
+            let nodes = gen::branched_nodes(inst, &cold64.bounds, 4, 7);
+            let starts: Vec<Bounds> = nodes.iter().map(|n| n.bounds.clone()).collect();
+            let seeds: Vec<Vec<usize>> = nodes.iter().map(|n| n.seed_vars.clone()).collect();
+            let batch64 = s64.propagate_batch(&starts);
+            let batch32 = s32.propagate_batch(&starts);
+            assert_eq!(batch64.len(), batch32.len(), "{name}: batch arity");
+            for (i, (a, b)) in batch32.iter().zip(&batch64).enumerate() {
+                assert_same_result(&format!("{name} batch[{i}] on {}", inst.name), a, b);
+            }
+            let bwarm64 = s64.propagate_batch_warm(&starts, &seeds);
+            let bwarm32 = s32.propagate_batch_warm(&starts, &seeds);
+            for (i, (a, b)) in bwarm32.iter().zip(&bwarm64).enumerate() {
+                assert_same_result(&format!("{name} batch_warm[{i}] on {}", inst.name), a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_engines_never_fabricate_infeasibility() {
+    // apparent f32 infeasibility must escalate to the f64 path, never
+    // surface as a verdict — so across the whole suite there is no
+    // instance where the f32 engine says Infeasible and f64 does not
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        for name in f32_capable(&registry) {
+            let e64 = registry.create(&EngineSpec::new(name).threads(1)).unwrap();
+            let e32 = registry
+                .create(&EngineSpec::new(name).threads(1).precision(Precision::F32))
+                .unwrap();
+            let r64 = e64.propagate(inst);
+            let r32 = e32.propagate(inst);
+            if r32.status == Status::Infeasible {
+                assert_eq!(
+                    r64.status,
+                    Status::Infeasible,
+                    "{name} fabricated infeasibility from f32 evidence on {}",
+                    inst.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multithreaded_f32_omp_reaches_the_f64_limit_point() {
+    // with real concurrency bit-comparability is off the table, but the
+    // converged limit points must still agree within the section 4.3
+    // tolerance and infeasibility verdicts may not flip
+    let registry = Registry::with_defaults();
+    for inst in &suite() {
+        let e64 = registry.create(&EngineSpec::new("cpu_omp").threads(4)).unwrap();
+        let e32 = registry
+            .create(&EngineSpec::new("cpu_omp").threads(4).precision(Precision::F32))
+            .unwrap();
+        let a = e32.propagate(inst);
+        let b = e64.propagate(inst);
+        if a.status == Status::Converged && b.status == Status::Converged {
+            assert!(a.same_limit_point(&b), "cpu_omp f32 diverged from f64 on {}", inst.name);
+        }
+        if a.status == Status::Infeasible {
+            assert_ne!(
+                b.status,
+                Status::Converged,
+                "cpu_omp f32 fabricated infeasibility on {}",
+                inst.name
+            );
+        }
+    }
+}
