@@ -472,6 +472,163 @@ fn service_bench(smoke: bool) {
         ]));
     }
 
+    // ---- connections scaling: 64 concurrent pipelined TCP clients
+    // through the reactor front end. Each client writes its whole
+    // 4-deep pipeline before reading a byte, so the leg measures the
+    // multiplexed front end (readiness loop + admission control), not
+    // per-request round trips. Crossed axes: wire (JSON lines vs binary
+    // frames — the requests carry full start-bound arrays, the payload
+    // the binary wire moves as raw f64 bits) and pool size (1 vs 4
+    // shards). Sessions are warmed first: the leg is about the
+    // connection boundary, not `prepare`.
+    {
+        use gdp::experiments::service_throughput::covering_mixed_instances;
+        use gdp::service::proto;
+        use gdp::service::reactor::{serve, ReactorConfig};
+        use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+        use std::net::{TcpListener, TcpStream};
+
+        const POOL: usize = 4;
+        const CONNS: usize = 64;
+        const PIPELINE: usize = 4;
+        let (crows, ccols) = if smoke { (240, 240) } else { (600, 600) };
+        let spec = EngineSpec::new("cpu_seq");
+        let insts = covering_mixed_instances(POOL, 2, crows, ccols, &spec);
+        let starts: Vec<Bounds> = insts.iter().map(Bounds::of).collect();
+
+        let run_leg = |binary: bool, shards: usize| -> f64 {
+            let service = Service::start(ServiceConfig {
+                batch_window: Duration::ZERO,
+                shards,
+                ..ServiceConfig::default()
+            });
+            let handle = service.handle();
+            let sessions: Vec<u64> = insts
+                .iter()
+                .map(|i| handle.load(i.clone()).expect("load").session)
+                .collect();
+            for &s in &sessions {
+                handle
+                    .propagate(PropagateRequest::cold(s).with_spec(spec.clone()))
+                    .expect("session warmup");
+            }
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+            let addr = listener.local_addr().expect("local addr");
+            let rhandle = service.handle();
+            let server = std::thread::spawn(move || {
+                serve(&rhandle, listener, &ReactorConfig::default()).expect("reactor");
+            });
+
+            // request bytes prebuilt per client (client-side encode cost
+            // stays outside the measured region)
+            let bufs: Vec<Vec<u8>> = (0..CONNS)
+                .map(|c| {
+                    let k = c % sessions.len();
+                    let req = Json::obj(vec![
+                        ("v", Json::Num(1.0)),
+                        ("op", Json::Str("propagate".to_string())),
+                        ("session", Json::Str(proto::session_to_hex(sessions[k]))),
+                        ("engine", Json::Str("cpu_seq".to_string())),
+                        (
+                            "lb",
+                            Json::Arr(starts[k].lb.iter().map(|&x| Json::Num(x)).collect()),
+                        ),
+                        (
+                            "ub",
+                            Json::Arr(starts[k].ub.iter().map(|&x| Json::Num(x)).collect()),
+                        ),
+                    ]);
+                    let one = if binary {
+                        proto::request_to_frame(&req).expect("encode frame")
+                    } else {
+                        let mut line = req.to_string().into_bytes();
+                        line.push(b'\n');
+                        line
+                    };
+                    one.repeat(PIPELINE)
+                })
+                .collect();
+
+            let (_, median, _) = measure(0, iters, || {
+                std::thread::scope(|s| {
+                    for buf in &bufs {
+                        s.spawn(move || {
+                            let mut stream = TcpStream::connect(addr).expect("connect");
+                            stream.write_all(buf).expect("write pipeline");
+                            if binary {
+                                for _ in 0..PIPELINE {
+                                    let mut pre = [0u8; proto::FRAME_PREAMBLE];
+                                    stream.read_exact(&mut pre).expect("reply preamble");
+                                    let hlen =
+                                        u32::from_le_bytes([pre[8], pre[9], pre[10], pre[11]]);
+                                    let blen =
+                                        u32::from_le_bytes([pre[12], pre[13], pre[14], pre[15]]);
+                                    let mut rest = vec![0u8; (hlen + blen) as usize];
+                                    stream.read_exact(&mut rest).expect("reply payload");
+                                    let header = std::str::from_utf8(&rest[..hlen as usize])
+                                        .expect("reply header utf8");
+                                    assert!(header.contains("\"ok\":true"), "{header}");
+                                }
+                            } else {
+                                let mut reader = BufReader::new(&mut stream);
+                                for _ in 0..PIPELINE {
+                                    let mut line = String::new();
+                                    reader.read_line(&mut line).expect("reply line");
+                                    assert!(line.contains("\"ok\":true"), "{line}");
+                                }
+                            }
+                        });
+                    }
+                });
+            });
+
+            // stop the reactor over the wire, then the pool
+            let mut stream = TcpStream::connect(addr).expect("connect for shutdown");
+            stream.write_all(b"{\"op\":\"shutdown\",\"v\":1}\n").expect("shutdown");
+            let mut line = String::new();
+            BufReader::new(&mut stream).read_line(&mut line).expect("shutdown reply");
+            server.join().expect("reactor thread");
+            service.shutdown();
+            median
+        };
+
+        let total = CONNS * PIPELINE;
+        let mut walls = Vec::new();
+        for (binary, shards) in
+            [(false, 1usize), (false, POOL), (true, 1usize), (true, POOL)]
+        {
+            let wire = if binary { "binary" } else { "json" };
+            let wall = run_leg(binary, shards);
+            println!(
+                "bench service/connections_scaling/{CONNS}conn x{PIPELINE}/{wire}/shards{shards}  \
+                 wall {:>10}  req_per_s {:.1}",
+                secs(wall),
+                total as f64 / wall.max(1e-12)
+            );
+            records.push(Json::obj(vec![
+                ("mode", Json::Str("connections_scaling".to_string())),
+                ("wire", Json::Str(wire.to_string())),
+                ("shards", Json::Num(shards as f64)),
+                ("connections", Json::Num(CONNS as f64)),
+                ("pipeline", Json::Num(PIPELINE as f64)),
+                ("wall_s", Json::Num(wall)),
+            ]));
+            walls.push(wall);
+        }
+        let binary_speedup = walls[1] / walls[3].max(1e-12);
+        let shard_speedup = walls[0] / walls[1].max(1e-12);
+        println!(
+            "bench service/connections_scaling  binary-over-json ({POOL} shards): \
+             {binary_speedup:.2}x; {POOL}-shard-over-1 (json): {shard_speedup:.2}x"
+        );
+        records.push(Json::obj(vec![
+            ("mode", Json::Str("connections_scaling_summary".to_string())),
+            ("connections", Json::Num(CONNS as f64)),
+            ("binary_speedup", Json::Num(binary_speedup)),
+            ("shard_speedup", Json::Num(shard_speedup)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("service".to_string())),
         ("smoke", Json::Bool(smoke)),

@@ -15,6 +15,7 @@ const UNSAFE_ALLOWLIST: &[&str] = &["src/service/session.rs"];
 /// (init-time code escapes with `// PANIC-OK:`).
 const REQUEST_PATH: &[&str] = &[
     "src/service/proto.rs",
+    "src/service/reactor.rs",
     "src/service/scheduler.rs",
     "src/service/server.rs",
     "src/service/session.rs",

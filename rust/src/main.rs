@@ -112,12 +112,15 @@ USAGE:
   gdp inspect (--mps FILE | --opb FILE)
   gdp serve [--port P | --stdio] [--shards N] [--engine NAME] [--precision f64|f32]
             [--batch-max N] [--batch-window-us U] [--max-sessions N]
-            [--max-session-mb MB] [--artifacts DIR]
-  gdp request [--addr HOST:PORT] load (--mps FILE | --opb FILE)
-  gdp request [--addr HOST:PORT] propagate (--session HEX | --mps FILE | --opb FILE)
+            [--max-session-mb MB] [--artifacts DIR] [--max-conns N]
+            [--conn-inflight N] [--max-inflight N] [--max-frame-mb MB]
+  gdp request [--addr HOST:PORT] [--wire json|binary] load (--mps FILE | --opb FILE)
+  gdp request [--addr HOST:PORT] [--wire json|binary] propagate
+              (--session HEX | --mps FILE | --opb FILE)
               [--engine NAME] [--precision f64|f32] [--threads N] [--max-rounds R]
-              [--no-specialize] [--seed-vars 1,2] [--summary]
-  gdp request [--addr HOST:PORT] stats [--check] | evict [--session HEX] | shutdown
+              [--no-specialize] [--seed-vars 1,2] [--summary] [--digest]
+  gdp request [--addr HOST:PORT] [--wire json|binary]
+              stats [--check] | evict [--session HEX] | shutdown
   gdp bench-check [--baseline DIR] [--fresh DIR] [--tolerance X]
                   [--injected-slowdown F] [--write-baseline]
   gdp lint [--root DIR] [--self-test | --list-rules]
@@ -379,52 +382,98 @@ fn cmd_serve(args: &Args) -> anyhow::Result<bool> {
             .map_err(|_| anyhow::anyhow!("--port expects a TCP port (0-65535)"))?;
         let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
         let local = listener.local_addr()?;
+        let defaults = gdp::service::reactor::ReactorConfig::default();
+        let config = gdp::service::reactor::ReactorConfig {
+            max_connections: args.get_usize("max-conns", defaults.max_connections).max(1),
+            max_inflight_per_conn: args
+                .get_usize("conn-inflight", defaults.max_inflight_per_conn)
+                .max(1),
+            max_inflight_global: args
+                .get_usize("max-inflight", defaults.max_inflight_global)
+                .max(1),
+            max_frame_bytes: args.get_usize("max-frame-mb", defaults.max_frame_bytes >> 20).max(1)
+                << 20,
+            ..defaults
+        };
         // scripts (CI readiness loops) wait on the "listening on" prefix
-        println!(
-            "gdp-serve listening on {local} (proto v{}, {shards} shards)",
-            gdp::service::proto::PROTO_VERSION
-        );
+        println!("gdp-serve listening on {local} (proto v1/v2, {shards} shards)");
         use std::io::Write as _;
         std::io::stdout().flush()?;
-        gdp::service::server::serve_tcp(&handle, listener)?;
+        gdp::service::reactor::serve(&handle, listener, &config)?;
     }
     service.shutdown();
     Ok(true)
 }
 
-/// One-shot wire client: build the request line(s) for one op, send over
-/// TCP, print each raw response line; `--summary` additionally prints the
-/// `status=... rounds=... tightened_bounds=...` digest in the same
-/// spelling `gdp propagate` uses, so scripts can diff served against
-/// direct runs.
+/// One-shot wire client: build the request(s) for one op, send over TCP
+/// on either wire (`--wire json|binary`), print each decoded response;
+/// `--summary` additionally prints the `status=... rounds=...
+/// tightened_bounds=...` digest in the same spelling `gdp propagate`
+/// uses, so scripts can diff served against direct runs. `--digest` (on
+/// propagate) prints a fully deterministic one-line digest of the
+/// propagation answer — status, counts, and an FNV-1a hash over the
+/// result bound bits — identical across wires and across runs, so CI
+/// can assert the binary wire is bit-exact against JSON lines.
 fn cmd_request(args: &Args) -> anyhow::Result<bool> {
     use anyhow::Context as _;
+    use gdp::service::proto;
     use gdp::util::json::Json;
-    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::io::{BufRead as _, BufReader, Read as _, Write as _};
 
     let op = args.positional.get(1).map(|s| s.as_str()).ok_or_else(|| {
         anyhow::anyhow!("usage: gdp request [--addr HOST:PORT] <load|propagate|stats|evict|shutdown>")
     })?;
+    let binary = match args.get_or("wire", "json").as_str() {
+        "json" => false,
+        "binary" => true,
+        other => anyhow::bail!("--wire expects json or binary, got {other}"),
+    };
     let addr = args.get_or("addr", "127.0.0.1:7171");
-    let stream = std::net::TcpStream::connect(addr)
+    let stream = std::net::TcpStream::connect(&addr)
         .with_context(|| format!("connecting to gdp-serve at {addr}"))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
 
-    let mut roundtrip = |line: String| -> anyhow::Result<Json> {
-        writeln!(writer, "{line}")?;
-        writer.flush()?;
-        let mut resp = String::new();
-        reader.read_line(&mut resp)?;
-        if resp.trim().is_empty() {
-            anyhow::bail!("server closed the connection");
+    let mut roundtrip = |req: Json| -> anyhow::Result<Json> {
+        if binary {
+            // pack into a v2 frame: bulk payloads (instance text, bound
+            // arrays) travel as raw bytes, everything else in the header
+            let frame = proto::request_to_frame(&req).map_err(|e| anyhow::anyhow!("{e}"))?;
+            writer.write_all(&frame)?;
+            writer.flush()?;
+            let mut preamble = [0u8; proto::FRAME_PREAMBLE];
+            reader.read_exact(&mut preamble).context("reading response frame preamble")?;
+            let hlen =
+                u32::from_le_bytes([preamble[8], preamble[9], preamble[10], preamble[11]]) as usize;
+            let blen = u32::from_le_bytes([preamble[12], preamble[13], preamble[14], preamble[15]])
+                as usize;
+            let mut buf = preamble.to_vec();
+            buf.resize(proto::FRAME_PREAMBLE + hlen + blen, 0);
+            reader
+                .read_exact(&mut buf[proto::FRAME_PREAMBLE..])
+                .context("reading response frame payload")?;
+            let (frame, _) = proto::decode_frame(&buf, usize::MAX)
+                .map_err(|e| anyhow::anyhow!("bad response frame: {e}"))?
+                .ok_or_else(|| anyhow::anyhow!("truncated response frame"))?;
+            let resp = proto::response_from_frame(&frame)
+                .map_err(|e| anyhow::anyhow!("bad response frame: {e}"))?;
+            println!("{}", resp.to_string());
+            Ok(resp)
+        } else {
+            writeln!(writer, "{}", req.to_string())?;
+            writer.flush()?;
+            let mut resp = String::new();
+            reader.read_line(&mut resp)?;
+            if resp.trim().is_empty() {
+                anyhow::bail!("server closed the connection");
+            }
+            println!("{}", resp.trim());
+            Json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
         }
-        println!("{}", resp.trim());
-        Json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
     };
 
     // an instance named on the command line is shipped as a `load`
-    let load_line = |args: &Args| -> anyhow::Result<Option<String>> {
+    let load_req = |args: &Args| -> anyhow::Result<Option<Json>> {
         let (format, path) = if let Some(p) = args.get("opb") {
             ("opb", p)
         } else if let Some(p) = args.get("mps") {
@@ -433,33 +482,30 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
             return Ok(None);
         };
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Ok(Some(
-            Json::obj(vec![
-                ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
-                ("op", Json::Str("load".into())),
-                ("format", Json::Str(format.into())),
-                ("text", Json::Str(text)),
-            ])
-            .to_string(),
-        ))
+        Ok(Some(Json::obj(vec![
+            ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str(format.into())),
+            ("text", Json::Str(text)),
+        ])))
     };
 
     let ok = |resp: &Json| resp.get("ok") == Some(&Json::Bool(true));
     match op {
         "load" => {
-            let line = load_line(args)?
+            let req = load_req(args)?
                 .ok_or_else(|| anyhow::anyhow!("load needs --mps FILE or --opb FILE"))?;
-            let resp = roundtrip(line)?;
+            let resp = roundtrip(req)?;
             Ok(ok(&resp))
         }
         "propagate" => {
             let session = match args.get("session") {
                 Some(hex) => hex.to_string(),
                 None => {
-                    let line = load_line(args)?.ok_or_else(|| {
+                    let req = load_req(args)?.ok_or_else(|| {
                         anyhow::anyhow!("propagate needs --session HEX or --mps/--opb FILE")
                     })?;
-                    let resp = roundtrip(line)?;
+                    let resp = roundtrip(req)?;
                     if !ok(&resp) {
                         return Ok(false);
                     }
@@ -509,7 +555,7 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
                     .collect();
                 pairs.push(("seed_vars", Json::Arr(vars?)));
             }
-            let resp = roundtrip(Json::obj(pairs).to_string())?;
+            let resp = roundtrip(Json::obj(pairs))?;
             if ok(&resp) && args.flag("summary") {
                 let r = resp.get("result").unwrap();
                 let field = |k: &str| -> String {
@@ -526,15 +572,49 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
                     field("tightened")
                 );
             }
+            if ok(&resp) && args.flag("digest") {
+                let r = resp
+                    .get("result")
+                    .ok_or_else(|| anyhow::anyhow!("propagate reply carried no result"))?;
+                // the JSON wire parses non-finite bounds into their
+                // string sentinels, the binary wire splices them back as
+                // bare numbers — accept both spellings of the same f64
+                let nums = |k: &str| -> anyhow::Result<Vec<f64>> {
+                    r.get(k)
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("propagate result misses {k}"))?
+                        .iter()
+                        .map(|j| match j {
+                            Json::Num(x) => Ok(*x),
+                            other => proto::json_to_f64(other)
+                                .map_err(|e| anyhow::anyhow!("{k}: {e}")),
+                        })
+                        .collect()
+                };
+                let (lb, ub) = (nums("lb")?, nums("ub")?);
+                let int = |k: &str| r.get(k).and_then(|v| v.as_f64()).map_or(-1, |x| x as i64);
+                // every field is a pure function of the propagation
+                // answer (no timings), so the line compares equal across
+                // wires, shard counts, and runs
+                println!(
+                    "digest status={} rounds={} tightened={} candidates={} \
+                     progress_bits={:016x} bounds_digest={:016x}",
+                    r.get("status").and_then(|v| v.as_str()).unwrap_or("?"),
+                    int("rounds"),
+                    int("tightened"),
+                    int("candidates"),
+                    r.get("progress").and_then(|v| v.as_f64()).map_or(0, f64::to_bits),
+                    proto::bounds_digest(&lb, &ub),
+                );
+            }
             Ok(ok(&resp))
         }
         "stats" | "shutdown" => {
-            let line = Json::obj(vec![
+            let req = Json::obj(vec![
                 ("v", Json::Num(gdp::service::proto::PROTO_VERSION as f64)),
                 ("op", Json::Str(op.into())),
-            ])
-            .to_string();
-            let resp = roundtrip(line)?;
+            ]);
+            let resp = roundtrip(req)?;
             if op == "stats" && ok(&resp) && args.flag("check") {
                 let result = resp.get("result").unwrap();
                 return check_stats_consistency(result);
@@ -549,7 +629,7 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
             if let Some(hex) = args.get("session") {
                 pairs.push(("session", Json::Str(hex.into())));
             }
-            Ok(ok(&roundtrip(Json::obj(pairs).to_string())?))
+            Ok(ok(&roundtrip(Json::obj(pairs))?))
         }
         other => anyhow::bail!("unknown request op {other} (load|propagate|stats|evict|shutdown)"),
     }

@@ -297,6 +297,52 @@ impl ShardSnapshot {
     }
 }
 
+/// Connection-level counters kept by the reactor front end (one value,
+/// not per shard: the reactor is a single thread) and injected into
+/// every `stats` reply it serves as a `"frontend"` block — both wires
+/// see the identical object.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontendSnapshot {
+    /// Connections accepted into the multiplexer.
+    pub accepted: u64,
+    /// Connections turned away at the `max_connections` admission cap.
+    pub rejected: u64,
+    /// Requests parsed off the JSON-lines wire (v1).
+    pub requests_json: u64,
+    /// Requests parsed off the binary-frame wire (v2).
+    pub requests_binary: u64,
+    /// Requests answered with a structured error before reaching a
+    /// shard (parse/framing/admission failures).
+    pub request_errors: u64,
+    /// Loop iterations on which at least one connection had a complete
+    /// request buffered but deferred by the in-flight budget.
+    pub backpressure_stalls: u64,
+    /// Requests answered during a shutdown drain (in flight or queued
+    /// when the shutdown arrived, served before sockets closed).
+    pub drained: u64,
+}
+
+impl FrontendSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("requests_json", Json::Num(self.requests_json as f64)),
+            ("requests_binary", Json::Num(self.requests_binary as f64)),
+            ("request_errors", Json::Num(self.request_errors as f64)),
+            ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
+            ("drained", Json::Num(self.drained as f64)),
+        ])
+    }
+
+    /// Add this snapshot to a `stats` payload as its `"frontend"` block.
+    pub fn inject(&self, stats: &mut Json) {
+        if let Json::Obj(map) = stats {
+            map.insert("frontend".into(), self.to_json());
+        }
+    }
+}
+
 /// The sharded `stats` payload: the aggregate rollup at the top level
 /// (bit-compatible with the pre-sharding shape — counters summed,
 /// duration stats merged, `coalesced_max` maxed) plus `shards` (pool

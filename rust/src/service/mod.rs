@@ -15,10 +15,17 @@
 //!   `propagate_batch(_warm)` dispatch when a batch-size or deadline
 //!   trigger fires (the paper's section 5 "saturate the device with many
 //!   subproblems" outlook, driven by live traffic).
-//! * [`proto`] — a versioned JSON-line wire protocol (`load`,
-//!   `propagate`, `stats`, `evict`, `shutdown`).
-//! * [`server`] — a threaded TCP accept loop plus a stdio mode for pipes
-//!   and tests (`gdp serve`).
+//! * [`proto`] — a versioned wire protocol (`load`, `propagate`,
+//!   `stats`, `evict`, `shutdown`) with two formats behind one
+//!   execution core: v1 JSON lines, and v2 length-prefixed binary
+//!   frames carrying the bulk f64 bound arrays bit-exactly with zero
+//!   parse cost. The first byte of a connection negotiates the format.
+//! * [`reactor`] — the nonblocking, event-driven TCP front end
+//!   (`gdp serve`): one thread multiplexes every connection with
+//!   per-connection read/write buffers, request pipelining, and
+//!   explicit backpressure/admission control, feeding the shard queues
+//!   through the `*_submit` handle methods below.
+//! * [`server`] — the stdio line-serving mode for pipes and tests.
 //! * [`metrics`] — per-request latency, rounds, candidate counts and the
 //!   algorithm-independent progress measure (arXiv:2106.07573), kept per
 //!   shard and rolled up into one aggregate `stats` payload.
@@ -34,21 +41,25 @@
 //! (the XLA engines share an `Rc` PJRT runtime; `EngineEntry::send_safe`
 //! is false) are pinned to the dedicated shard 0, so every other shard
 //! holds only native sessions and no second PJRT client is ever opened.
-//! Connection threads and in-process clients talk to the pool through
-//! the cloneable, `Send` [`ServiceHandle`], which routes `propagate` to
+//! The reactor and in-process clients talk to the pool through the
+//! cloneable, `Send` [`ServiceHandle`], which routes `propagate` to
 //! the session's home shard and broadcasts `load`/`stats`/`evict`/
 //! `shutdown` (one designated *primary* shard counts each broadcast
-//! request so aggregate counters stay client-accurate).
+//! request so aggregate counters stay client-accurate). Every blocking
+//! method has a `*_submit` twin that returns the reply channel(s)
+//! instead of waiting — the seam that lets the single-threaded reactor
+//! keep thousands of requests in flight without blocking its loop.
 
 pub mod metrics;
 pub mod proto;
+pub mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -278,10 +289,13 @@ impl RouteTable {
     }
 }
 
-/// Cloneable, `Send` front door to a running service: every method is a
-/// blocking request/response round trip with the worker pool.
-/// `propagate` goes to the session's home shard; `load`, `stats`,
-/// `evict` and `shutdown` broadcast to every shard.
+/// Cloneable, `Send` front door to a running service. `propagate` goes
+/// to the session's home shard; `load`, `stats`, `evict` and
+/// `shutdown` broadcast to every shard. Each op comes in two flavours:
+/// a blocking request/response round trip, and a `*_submit` variant
+/// that returns the reply channel(s) immediately — the reactor polls
+/// those with `try_recv` so one thread can keep every connection's
+/// requests in flight at once.
 #[derive(Clone)]
 pub struct ServiceHandle {
     txs: Vec<Sender<Job>>,
@@ -313,25 +327,16 @@ impl ServiceHandle {
         key.shard(self.txs.len())
     }
 
-    fn call<T>(
-        &self,
-        shard: usize,
-        make: impl FnOnce(Sender<ServiceResult<T>>) -> Job,
-    ) -> ServiceResult<T> {
-        let (reply_tx, reply_rx) = channel();
-        self.txs[shard]
-            .send(make(reply_tx))
-            .map_err(|_| ServiceError("service stopped".into()))?;
-        reply_rx.recv().map_err(|_| ServiceError("service stopped".into()))?
-    }
-
-    /// Ingest an instance; idempotent (content-addressed). Broadcast:
-    /// every shard holds the (shared, `Arc`) instance so whichever shard
-    /// a later engine spec routes to can prepare a session from it;
-    /// shard 0 answers and counts the request. Validation and the
+    /// Submit a load without waiting for the reply: validation and the
     /// content fingerprint (both O(nnz)) run here, on the calling
-    /// thread, once — not on every shard.
-    pub fn load(&self, inst: MipInstance) -> ServiceResult<LoadReply> {
+    /// thread, once — not on every shard. Broadcast: every shard holds
+    /// the (shared, `Arc`) instance so whichever shard a later engine
+    /// spec routes to can prepare a session from it; shard 0 answers
+    /// and counts the request on the returned channel.
+    pub fn load_submit(
+        &self,
+        inst: MipInstance,
+    ) -> ServiceResult<Receiver<ServiceResult<LoadReply>>> {
         inst.validate().map_err(|e| ServiceError(format!("invalid instance: {e}")))?;
         let fingerprint = session::instance_fingerprint(&inst);
         let inst = Arc::new(inst);
@@ -344,23 +349,38 @@ impl ServiceHandle {
             })
             .map_err(|_| ServiceError("service stopped".into()))?;
         }
-        self.call(0, |reply| Job::Load { inst, fingerprint, primary: true, reply: Some(reply) })
+        let (reply_tx, reply_rx) = channel();
+        self.txs[0]
+            .send(Job::Load { inst, fingerprint, primary: true, reply: Some(reply_tx) })
+            .map_err(|_| ServiceError("service stopped".into()))?;
+        Ok(reply_rx)
     }
 
-    /// Serve one propagation (blocks through the coalescing window) on
-    /// the session's home shard.
-    pub fn propagate(&self, req: PropagateRequest) -> ServiceResult<PropagateReply> {
+    /// Submit a propagate to the session's home shard without waiting;
+    /// the reply arrives on the returned channel after the coalescing
+    /// window.
+    pub fn propagate_submit(
+        &self,
+        req: PropagateRequest,
+    ) -> ServiceResult<Receiver<ServiceResult<PropagateReply>>> {
         let shard = self.shard_of(&req);
-        self.call(shard, |reply| Job::Propagate {
-            req,
-            received: std::time::Instant::now(),
-            reply,
-        })
+        let (reply_tx, reply_rx) = channel();
+        self.txs[shard]
+            .send(Job::Propagate {
+                req,
+                received: std::time::Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| ServiceError("service stopped".into()))?;
+        Ok(reply_rx)
     }
 
-    /// Pool counters as the `stats` wire payload: per-shard blocks plus
-    /// the aggregate rollup ([`metrics::rollup`]).
-    pub fn stats(&self) -> ServiceResult<Json> {
+    /// Submit a stats broadcast without waiting: one reply channel per
+    /// shard, in shard order (roll the snapshots up with
+    /// [`metrics::rollup`]).
+    pub fn stats_submit(
+        &self,
+    ) -> ServiceResult<Vec<Receiver<ServiceResult<metrics::ShardSnapshot>>>> {
         let mut pending = Vec::with_capacity(self.txs.len());
         for (i, tx) in self.txs.iter().enumerate() {
             let (reply_tx, reply_rx) = channel();
@@ -368,8 +388,44 @@ impl ServiceHandle {
                 .map_err(|_| ServiceError("service stopped".into()))?;
             pending.push(reply_rx);
         }
-        let mut snaps = Vec::with_capacity(pending.len());
-        for rx in pending {
+        Ok(pending)
+    }
+
+    /// Submit an evict broadcast without waiting: one reply channel per
+    /// shard; `dropped` is the sum over all of them.
+    pub fn evict_submit(
+        &self,
+        session: Option<u64>,
+    ) -> ServiceResult<Vec<Receiver<ServiceResult<EvictReply>>>> {
+        let mut pending = Vec::with_capacity(self.txs.len());
+        for (i, tx) in self.txs.iter().enumerate() {
+            let (reply_tx, reply_rx) = channel();
+            tx.send(Job::Evict { session, primary: i == 0, reply: reply_tx })
+                .map_err(|_| ServiceError("service stopped".into()))?;
+            pending.push(reply_rx);
+        }
+        Ok(pending)
+    }
+
+    /// Ingest an instance; idempotent (content-addressed). Blocking
+    /// twin of [`ServiceHandle::load_submit`].
+    pub fn load(&self, inst: MipInstance) -> ServiceResult<LoadReply> {
+        self.load_submit(inst)?.recv().map_err(|_| ServiceError("service stopped".into()))?
+    }
+
+    /// Serve one propagation (blocks through the coalescing window) on
+    /// the session's home shard.
+    pub fn propagate(&self, req: PropagateRequest) -> ServiceResult<PropagateReply> {
+        self.propagate_submit(req)?
+            .recv()
+            .map_err(|_| ServiceError("service stopped".into()))?
+    }
+
+    /// Pool counters as the `stats` wire payload: per-shard blocks plus
+    /// the aggregate rollup ([`metrics::rollup`]).
+    pub fn stats(&self) -> ServiceResult<Json> {
+        let mut snaps = Vec::with_capacity(self.txs.len());
+        for rx in self.stats_submit()? {
             snaps.push(rx.recv().map_err(|_| ServiceError("service stopped".into()))??);
         }
         Ok(metrics::rollup(&snaps))
@@ -379,15 +435,8 @@ impl ServiceHandle {
     /// `dropped` sums the entries dropped pool-wide (the home shard's
     /// session plus each shard's broadcast instance copy).
     pub fn evict(&self, session: Option<u64>) -> ServiceResult<EvictReply> {
-        let mut pending = Vec::with_capacity(self.txs.len());
-        for (i, tx) in self.txs.iter().enumerate() {
-            let (reply_tx, reply_rx) = channel();
-            tx.send(Job::Evict { session, primary: i == 0, reply: reply_tx })
-                .map_err(|_| ServiceError("service stopped".into()))?;
-            pending.push(reply_rx);
-        }
         let mut dropped = 0;
-        for rx in pending {
+        for rx in self.evict_submit(session)? {
             dropped +=
                 rx.recv().map_err(|_| ServiceError("service stopped".into()))??.dropped;
         }

@@ -1,9 +1,10 @@
-//! Versioned JSON-line wire protocol for the propagation service.
+//! Versioned wire protocol for the propagation service: JSON lines (v1)
+//! and length-prefixed binary frames (v2).
 //!
-//! One request per line, one response line per request, built on
-//! [`crate::util::json`] (std-only; no serde). Every request carries the
-//! protocol version and an op; an optional `id` is echoed back for client
-//! correlation:
+//! **v1 — JSON lines.** One request per line, one response line per
+//! request, built on [`crate::util::json`] (std-only; no serde). Every
+//! request carries the protocol version and an op; an optional `id` is
+//! echoed back for client correlation:
 //!
 //! ```text
 //! {"v":1,"op":"load","format":"mps","text":"NAME test\n..."}
@@ -20,6 +21,39 @@
 //! / `"-inf"` the JSON writer already emits. `status` uses the
 //! [`Status`] debug names (`Converged`, `MaxRounds`, `Infeasible`), the
 //! same spelling the `gdp propagate` CLI prints.
+//!
+//! **v2 — binary frames.** Same ops and response shapes, but the bulk
+//! f64 bound arrays travel as raw little-endian `f64::to_bits` patterns
+//! with zero parse cost (the v1 shortest-representation round trip
+//! defines the correctness bar; v2 meets it trivially). Each frame is a
+//! 16-byte preamble, a JSON header (the v1 object minus the bulk
+//! fields), and a raw body:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "GDP2"
+//! 4       1     version (2)
+//! 5       1     kind (1 = request, 2 = response)
+//! 6       2     reserved (0)
+//! 8       4     header_len (u32 LE)
+//! 12      4     body_len   (u32 LE)
+//! 16      ...   JSON header (UTF-8, header_len bytes)
+//! ...     ...   raw body (body_len bytes)
+//! ```
+//!
+//! Body layout by op: `load` requests carry the instance text as the
+//! body; `propagate` requests/responses with a `"bounds": n` count in
+//! the header carry `n` lb then `n` ub values as `8n + 8n` bytes of LE
+//! f64 bit patterns; every other frame has an empty body. The first
+//! byte a client sends picks its wire: `'G'` (the magic) selects v2
+//! frames, anything else selects v1 JSON lines — v1 clients keep
+//! working unchanged, with no handshake round trip.
+//!
+//! Both wires share one execution/rendering core ([`execute`],
+//! [`ReplyResult`], [`render_json`] / [`render_binary`]), so a v2 reply
+//! is field-identical (f64 bit-exact) to the v1 reply for the same
+//! request by construction — and `tests/wire_v2.rs` proves it over real
+//! sockets per served engine.
 
 use crate::instance::Bounds;
 use crate::propagation::registry::{EngineSpec, Precision};
@@ -28,9 +62,25 @@ use crate::util::json::Json;
 
 use super::{PropagateRequest, ServiceHandle};
 
-/// Protocol version this build speaks. Requests with any other `v` are
+/// JSON-lines protocol version. Text requests with any other `v` are
 /// rejected so clients fail loudly instead of mis-parsing.
 pub const PROTO_VERSION: u64 = 1;
+
+/// Binary-frame protocol version (the `version` preamble byte and the
+/// `"v"` field of frame headers).
+pub const PROTO_V2: u64 = 2;
+
+/// Frame magic: also the negotiation byte. No JSON line starts with
+/// `'G'`, so the first byte of a connection picks the wire.
+pub const FRAME_MAGIC: [u8; 4] = *b"GDP2";
+
+/// Preamble size of a v2 frame.
+pub const FRAME_PREAMBLE: usize = 16;
+
+/// Frame kind byte: a client request.
+pub const KIND_REQUEST: u8 = 1;
+/// Frame kind byte: a server response.
+pub const KIND_RESPONSE: u8 = 2;
 
 /// Session ids travel as 16-digit lowercase hex.
 pub fn session_to_hex(session: u64) -> String {
@@ -77,6 +127,26 @@ fn f64_vec(j: &Json, what: &str) -> Result<Vec<f64>, String> {
     Ok(vals)
 }
 
+/// Client-side variant of [`f64_vec`] for objects built in memory
+/// rather than parsed from text: a bare `Json::Num` may legitimately
+/// hold an infinity there (the text writer is what turns it into a
+/// sentinel), so non-finite numbers are accepted; NaN stays rejected.
+fn f64_vec_lax(j: &Json, what: &str) -> Result<Vec<f64>, String> {
+    let vals: Vec<f64> = j
+        .as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|v| match v {
+            Json::Num(x) => Ok(*x),
+            other => json_to_f64(other),
+        })
+        .collect::<Result<_, _>>()?;
+    if vals.iter().any(|x| x.is_nan()) {
+        return Err(format!("{what} must not contain NaN"));
+    }
+    Ok(vals)
+}
+
 fn usize_vec(j: &Json, what: &str) -> Result<Vec<usize>, String> {
     j.as_arr()
         .ok_or_else(|| format!("{what} must be an array"))?
@@ -90,7 +160,7 @@ fn usize_vec(j: &Json, what: &str) -> Result<Vec<usize>, String> {
         .collect()
 }
 
-/// A parsed request line.
+/// A parsed request (either wire).
 #[derive(Debug, Clone)]
 pub struct WireRequest {
     /// Client correlation id, echoed verbatim in the response.
@@ -107,7 +177,17 @@ pub enum WireOp {
     Shutdown,
 }
 
-/// Parse one request line (version check included).
+/// Bulk payload decoded from a v2 frame body, consumed by
+/// [`parse_request_json`] in place of the corresponding JSON fields.
+#[derive(Debug, Clone, Default)]
+pub struct BulkData {
+    /// Start bounds decoded from raw f64 bit patterns (`propagate`).
+    pub start: Option<Bounds>,
+    /// Instance text carried as the frame body (`load`).
+    pub text: Option<String>,
+}
+
+/// Parse one v1 request line (version check included).
 pub fn parse_request(line: &str) -> Result<WireRequest, String> {
     let j = Json::parse(line.trim()).map_err(|e| format!("bad JSON: {e}"))?;
     let v = j
@@ -115,8 +195,19 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
         .and_then(|v| v.as_f64())
         .ok_or("missing protocol version \"v\"")? as u64;
     if v != PROTO_VERSION {
-        return Err(format!("unsupported protocol version {v} (this build speaks {PROTO_VERSION})"));
+        return Err(format!(
+            "unsupported protocol version {v} (JSON lines speak {PROTO_VERSION}; \
+             v{PROTO_V2} is the binary frame wire)"
+        ));
     }
+    parse_request_json(&j, BulkData::default())
+}
+
+/// Parse a request object shared by both wires: the v1 line (no bulk
+/// data) and the v2 frame header (bulk arrays arrive pre-decoded from
+/// the body). Version checking is the caller's job — the two wires
+/// reject different versions.
+pub fn parse_request_json(j: &Json, bulk: BulkData) -> Result<WireRequest, String> {
     let id = j.get("id").and_then(|v| v.as_str()).map(|s| s.to_string());
     let op = j.get("op").and_then(|v| v.as_str()).ok_or("missing \"op\"")?;
     let op = match op {
@@ -126,11 +217,14 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
                 .and_then(|v| v.as_str())
                 .ok_or("load needs \"format\" (mps|opb)")?
                 .to_string(),
-            text: j
-                .get("text")
-                .and_then(|v| v.as_str())
-                .ok_or("load needs \"text\"")?
-                .to_string(),
+            text: match bulk.text {
+                Some(t) => t,
+                None => j
+                    .get("text")
+                    .and_then(|v| v.as_str())
+                    .ok_or("load needs \"text\"")?
+                    .to_string(),
+            },
         },
         "propagate" => {
             let session = session_from_hex(
@@ -186,12 +280,15 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
                     Some(spec)
                 }
             };
-            let start = match (j.get("lb"), j.get("ub")) {
-                (None, None) => None,
-                (Some(lb), Some(ub)) => {
-                    Some(Bounds { lb: f64_vec(lb, "lb")?, ub: f64_vec(ub, "ub")? })
-                }
-                _ => return Err("lb and ub must be given together".into()),
+            let start = match bulk.start {
+                Some(b) => Some(b),
+                None => match (j.get("lb"), j.get("ub")) {
+                    (None, None) => None,
+                    (Some(lb), Some(ub)) => {
+                        Some(Bounds { lb: f64_vec(lb, "lb")?, ub: f64_vec(ub, "ub")? })
+                    }
+                    _ => return Err("lb and ub must be given together".into()),
+                },
             };
             let seed_vars = match j.get("seed_vars") {
                 None => None,
@@ -213,8 +310,8 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
     Ok(WireRequest { id, op })
 }
 
-fn respond(id: &Option<String>, body: Result<Json, String>) -> Json {
-    let mut pairs = vec![("v", Json::Num(PROTO_VERSION as f64))];
+fn respond_with(version: u64, id: &Option<String>, body: Result<Json, String>) -> Json {
+    let mut pairs = vec![("v", Json::Num(version as f64))];
     if let Some(id) = id {
         pairs.push(("id", Json::Str(id.clone())));
     }
@@ -239,8 +336,11 @@ pub fn status_name(status: Status) -> &'static str {
     }
 }
 
-fn propagate_result_json(r: &super::PropagateReply) -> Json {
-    Json::obj(vec![
+/// The scalar (non-bulk) fields of a propagate result — shared between
+/// the v1 JSON result and the v2 frame header, so the wires cannot
+/// drift apart.
+fn propagate_scalar_fields(r: &super::PropagateReply) -> Vec<(&'static str, Json)> {
+    vec![
         ("status", Json::Str(status_name(r.status).to_string())),
         ("rounds", Json::Num(r.rounds as f64)),
         ("wall_us", Json::Num(r.wall.as_secs_f64() * 1e6)),
@@ -250,52 +350,367 @@ fn propagate_result_json(r: &super::PropagateReply) -> Json {
         ("progress", Json::Num(r.progress)),
         ("tightened", Json::Num(r.tightened as f64)),
         ("candidates", Json::Num(r.candidates as f64)),
-        ("lb", Json::Arr(r.bounds.lb.iter().map(|&x| Json::Num(x)).collect())),
-        ("ub", Json::Arr(r.bounds.ub.iter().map(|&x| Json::Num(x)).collect())),
-    ])
+    ]
 }
 
-/// Handle one request line against a running service: returns the
+fn propagate_result_json(r: &super::PropagateReply) -> Json {
+    let mut pairs = propagate_scalar_fields(r);
+    pairs.push(("lb", Json::Arr(r.bounds.lb.iter().map(|&x| Json::Num(x)).collect())));
+    pairs.push(("ub", Json::Arr(r.bounds.ub.iter().map(|&x| Json::Num(x)).collect())));
+    Json::obj(pairs)
+}
+
+/// The result of one executed op, before wire rendering. Both wires
+/// render from this one type so their payloads agree field-for-field.
+#[derive(Debug, Clone)]
+pub enum ReplyResult {
+    Load(super::LoadReply),
+    Propagate(super::PropagateReply),
+    Stats(Json),
+    Evict(super::EvictReply),
+    Stopped,
+}
+
+/// Execute one op against a running service (blocking). Returns the
+/// reply body and whether a `shutdown` was executed.
+pub fn execute(handle: &ServiceHandle, op: WireOp) -> (Result<ReplyResult, String>, bool) {
+    match op {
+        WireOp::Load { format, text } => (
+            parse_instance(&format, &text)
+                .and_then(|inst| handle.load(inst).map(ReplyResult::Load).map_err(|e| e.0)),
+            false,
+        ),
+        WireOp::Propagate(p) => {
+            (handle.propagate(p).map(ReplyResult::Propagate).map_err(|e| e.0), false)
+        }
+        WireOp::Stats => (handle.stats().map(ReplyResult::Stats).map_err(|e| e.0), false),
+        WireOp::Evict { session } => {
+            (handle.evict(session).map(ReplyResult::Evict).map_err(|e| e.0), false)
+        }
+        WireOp::Shutdown => {
+            (handle.shutdown().map(|()| ReplyResult::Stopped).map_err(|e| e.0), true)
+        }
+    }
+}
+
+/// The `result` object of a successful reply (v1 shape, bulk fields
+/// included).
+pub fn result_json(r: &ReplyResult) -> Json {
+    match r {
+        ReplyResult::Load(l) => Json::obj(vec![
+            ("session", Json::Str(session_to_hex(l.session))),
+            ("cached", Json::Bool(l.cached)),
+            ("rows", Json::Num(l.rows as f64)),
+            ("cols", Json::Num(l.cols as f64)),
+            ("nnz", Json::Num(l.nnz as f64)),
+        ]),
+        ReplyResult::Propagate(p) => propagate_result_json(p),
+        ReplyResult::Stats(j) => j.clone(),
+        ReplyResult::Evict(e) => Json::obj(vec![("dropped", Json::Num(e.dropped as f64))]),
+        ReplyResult::Stopped => Json::obj(vec![("stopped", Json::Bool(true))]),
+    }
+}
+
+/// Render a reply as one v1 JSON line (no trailing newline).
+pub fn render_json(id: &Option<String>, body: &Result<ReplyResult, String>) -> String {
+    let body = match body {
+        Ok(r) => Ok(result_json(r)),
+        Err(e) => Err(e.clone()),
+    };
+    respond_with(PROTO_VERSION, id, body).to_string()
+}
+
+/// Render a reply as one v2 response frame. Propagate bounds travel in
+/// the raw body (`"bounds": n` in the header result names the count);
+/// every other reply is header-only.
+pub fn render_binary(id: &Option<String>, body: &Result<ReplyResult, String>) -> Vec<u8> {
+    let (header, raw) = match body {
+        Ok(ReplyResult::Propagate(p)) => {
+            let mut pairs = propagate_scalar_fields(p);
+            pairs.push(("bounds", Json::Num(p.bounds.lb.len() as f64)));
+            let mut raw = Vec::with_capacity(16 * p.bounds.lb.len());
+            f64_bits_to_bytes(&p.bounds.lb, &mut raw);
+            f64_bits_to_bytes(&p.bounds.ub, &mut raw);
+            (respond_with(PROTO_V2, id, Ok(Json::obj(pairs))), raw)
+        }
+        Ok(r) => (respond_with(PROTO_V2, id, Ok(result_json(r))), Vec::new()),
+        Err(e) => (respond_with(PROTO_V2, id, Err(e.clone())), Vec::new()),
+    };
+    match encode_frame(KIND_RESPONSE, &header, &raw) {
+        Ok(frame) => frame,
+        Err(e) => {
+            let fallback =
+                respond_with(PROTO_V2, id, Err(format!("cannot encode response: {e}")));
+            encode_frame(KIND_RESPONSE, &fallback, &[]).unwrap_or_default()
+        }
+    }
+}
+
+/// Append the raw little-endian bit patterns of `xs` to `out`.
+pub fn f64_bits_to_bytes(xs: &[f64], out: &mut Vec<u8>) {
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode raw little-endian f64 bit patterns. The caller checks the
+/// length is a multiple of 8.
+pub fn f64s_from_bits(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            f64::from_bits(u64::from_le_bytes(a))
+        })
+        .collect()
+}
+
+/// FNV-1a over the LE `to_bits` bytes of lb then ub: the deterministic
+/// bound digest `gdp request --digest` prints, shared by both wires (a
+/// reply is bit-identical iff the digests match).
+pub fn bounds_digest(lb: &[f64], ub: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |xs: &[f64]| {
+        for x in xs {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    };
+    eat(lb);
+    eat(ub);
+    h
+}
+
+/// One decoded v2 frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub kind: u8,
+    pub header: Json,
+    pub body: Vec<u8>,
+}
+
+/// Encode one v2 frame.
+pub fn encode_frame(kind: u8, header: &Json, body: &[u8]) -> Result<Vec<u8>, String> {
+    let header = header.to_string().into_bytes();
+    let hlen = u32::try_from(header.len()).map_err(|_| "frame header too large".to_string())?;
+    let blen = u32::try_from(body.len()).map_err(|_| "frame body too large".to_string())?;
+    let mut out = Vec::with_capacity(FRAME_PREAMBLE + header.len() + body.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(PROTO_V2 as u8);
+    out.push(kind);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&hlen.to_le_bytes());
+    out.extend_from_slice(&blen.to_le_bytes());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(body);
+    Ok(out)
+}
+
+fn read_u32_le(buf: &[u8], at: usize) -> u32 {
+    let mut a = [0u8; 4];
+    if let Some(s) = buf.get(at..at + 4) {
+        a.copy_from_slice(s);
+    }
+    u32::from_le_bytes(a)
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; drop `consumed`
+///   bytes from the buffer.
+/// * `Ok(None)` — the data so far is a valid prefix; read more.
+/// * `Err(_)` — malformed (bad magic/version/kind, or a declared length
+///   over `max_frame`): frame sync is lost, the connection must close
+///   after a structured error reply. Malformations are detected as
+///   early as the bytes allow, so an oversized declared length is
+///   rejected without buffering `max_frame` bytes first.
+pub fn decode_frame(buf: &[u8], max_frame: usize) -> Result<Option<(Frame, usize)>, String> {
+    let avail = buf.len().min(4);
+    if buf[..avail] != FRAME_MAGIC[..avail] {
+        return Err(format!("bad frame magic (expected {:?})", FRAME_MAGIC));
+    }
+    if let Some(&v) = buf.get(4) {
+        if v as u64 != PROTO_V2 {
+            return Err(format!("unsupported frame version {v} (this build speaks {PROTO_V2})"));
+        }
+    }
+    if let Some(&k) = buf.get(5) {
+        if k != KIND_REQUEST && k != KIND_RESPONSE {
+            return Err(format!("unknown frame kind {k}"));
+        }
+    }
+    if buf.len() < FRAME_PREAMBLE {
+        return Ok(None);
+    }
+    if buf[6] != 0 || buf[7] != 0 {
+        return Err("nonzero reserved bytes in frame preamble".into());
+    }
+    let hlen = read_u32_le(buf, 8) as u64;
+    let blen = read_u32_le(buf, 12) as u64;
+    let total = FRAME_PREAMBLE as u64 + hlen + blen;
+    if total > max_frame as u64 {
+        return Err(format!(
+            "declared frame length {total} exceeds the admission cap {max_frame}"
+        ));
+    }
+    let total = total as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let (hlen, blen) = (hlen as usize, blen as usize);
+    let header = std::str::from_utf8(&buf[FRAME_PREAMBLE..FRAME_PREAMBLE + hlen])
+        .map_err(|e| format!("frame header is not UTF-8: {e}"))?;
+    let header = Json::parse(header).map_err(|e| format!("bad frame header JSON: {e}"))?;
+    let body = buf[FRAME_PREAMBLE + hlen..total].to_vec();
+    Ok(Some((Frame { kind: buf[5], header, body }, total)))
+}
+
+/// Decode a request frame into the shared [`WireRequest`]: validates
+/// version/kind, splits the bulk body per the header's counts, then
+/// reuses the v1 field parser on the header.
+pub fn request_from_frame(frame: &Frame) -> Result<WireRequest, String> {
+    if frame.kind != KIND_REQUEST {
+        return Err(format!("expected a request frame, got kind {}", frame.kind));
+    }
+    let v = frame
+        .header
+        .get("v")
+        .and_then(|v| v.as_f64())
+        .ok_or("missing protocol version \"v\" in frame header")? as u64;
+    if v != PROTO_V2 {
+        return Err(format!("frame header speaks v{v}, frames are v{PROTO_V2}"));
+    }
+    let op = frame.header.get("op").and_then(|v| v.as_str()).unwrap_or("");
+    let mut bulk = BulkData::default();
+    match op {
+        "load" => {
+            bulk.text = Some(
+                String::from_utf8(frame.body.clone())
+                    .map_err(|e| format!("load body is not UTF-8: {e}"))?,
+            );
+        }
+        "propagate" if frame.header.get("bounds").is_some() => {
+            let n = frame
+                .header
+                .get("bounds")
+                .and_then(|v| v.as_f64())
+                .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+                .ok_or("\"bounds\" must be a non-negative integer count")?
+                as usize;
+            if frame.body.len() != 16 * n {
+                return Err(format!(
+                    "frame body holds {} bytes, header declares {n} bound pairs ({} bytes)",
+                    frame.body.len(),
+                    16 * n
+                ));
+            }
+            let lb = f64s_from_bits(&frame.body[..8 * n]);
+            let ub = f64s_from_bits(&frame.body[8 * n..]);
+            // same bar as the JSON wire: NaN is encodable but meaningless
+            // as a bound
+            if lb.iter().chain(ub.iter()).any(|x| x.is_nan()) {
+                return Err("bounds must not contain NaN".into());
+            }
+            bulk.start = Some(Bounds { lb, ub });
+        }
+        _ => {
+            if !frame.body.is_empty() {
+                return Err(format!("op {op:?} takes no frame body"));
+            }
+        }
+    }
+    parse_request_json(&frame.header, bulk)
+}
+
+/// Client-side: turn a v1-shaped request object into a v2 request
+/// frame, moving the bulk fields (`text`, `lb`/`ub`) into the raw body.
+pub fn request_to_frame(req: &Json) -> Result<Vec<u8>, String> {
+    let Json::Obj(map) = req else {
+        return Err("request must be a JSON object".into());
+    };
+    let mut header = map.clone();
+    header.insert("v".into(), Json::Num(PROTO_V2 as f64));
+    let mut body = Vec::new();
+    let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("");
+    if op == "load" {
+        if let Some(text) = req.get("text").and_then(|v| v.as_str()) {
+            body.extend_from_slice(text.as_bytes());
+            header.remove("text");
+        }
+    } else if op == "propagate" {
+        match (req.get("lb"), req.get("ub")) {
+            (Some(lb), Some(ub)) => {
+                let lb = f64_vec_lax(lb, "lb")?;
+                let ub = f64_vec_lax(ub, "ub")?;
+                if lb.len() != ub.len() {
+                    return Err("lb and ub must have the same length".into());
+                }
+                header.insert("bounds".into(), Json::Num(lb.len() as f64));
+                header.remove("lb");
+                header.remove("ub");
+                f64_bits_to_bytes(&lb, &mut body);
+                f64_bits_to_bytes(&ub, &mut body);
+            }
+            (None, None) => {}
+            _ => return Err("lb and ub must be given together".into()),
+        }
+    }
+    encode_frame(KIND_REQUEST, &Json::Obj(header), &body)
+}
+
+/// Client-side: reconstruct the full JSON response object from a v2
+/// response frame (bound arrays spliced back from the raw body). The
+/// result differs from the v1 line only in its `"v"` field.
+pub fn response_from_frame(frame: &Frame) -> Result<Json, String> {
+    if frame.kind != KIND_RESPONSE {
+        return Err(format!("expected a response frame, got kind {}", frame.kind));
+    }
+    let mut resp = frame.header.clone();
+    let n = resp
+        .get("result")
+        .and_then(|r| r.get("bounds"))
+        .and_then(|v| v.as_f64())
+        .map(|x| x as usize);
+    match n {
+        None => {
+            if !frame.body.is_empty() {
+                return Err("unexpected body on a response with no bound count".into());
+            }
+        }
+        Some(n) => {
+            if frame.body.len() != 16 * n {
+                return Err(format!(
+                    "response body holds {} bytes, header declares {n} bound pairs",
+                    frame.body.len()
+                ));
+            }
+            let lb = f64s_from_bits(&frame.body[..8 * n]);
+            let ub = f64s_from_bits(&frame.body[8 * n..]);
+            if let Json::Obj(map) = &mut resp {
+                if let Some(Json::Obj(result)) = map.get_mut("result") {
+                    result.remove("bounds");
+                    result.insert("lb".into(), Json::Arr(lb.into_iter().map(Json::Num).collect()));
+                    result.insert("ub".into(), Json::Arr(ub.into_iter().map(Json::Num).collect()));
+                }
+            }
+        }
+    }
+    Ok(resp)
+}
+
+/// Handle one v1 request line against a running service: returns the
 /// response line (no trailing newline) and whether the connection loop
 /// should stop serving (a `shutdown` was executed).
 pub fn dispatch(handle: &ServiceHandle, line: &str) -> (String, bool) {
     let req = match parse_request(line) {
         Ok(r) => r,
-        Err(e) => return (respond(&None, Err(e)).to_string(), false),
+        Err(e) => return (render_json(&None, &Err(e)), false),
     };
-    let mut stop = false;
-    let body: Result<Json, String> = match req.op {
-        WireOp::Load { format, text } => parse_instance(&format, &text).and_then(|inst| {
-            handle
-                .load(inst)
-                .map(|r| {
-                    Json::obj(vec![
-                        ("session", Json::Str(session_to_hex(r.session))),
-                        ("cached", Json::Bool(r.cached)),
-                        ("rows", Json::Num(r.rows as f64)),
-                        ("cols", Json::Num(r.cols as f64)),
-                        ("nnz", Json::Num(r.nnz as f64)),
-                    ])
-                })
-                .map_err(|e| e.0)
-        }),
-        WireOp::Propagate(p) => {
-            handle.propagate(p).map(|r| propagate_result_json(&r)).map_err(|e| e.0)
-        }
-        WireOp::Stats => handle.stats().map_err(|e| e.0),
-        WireOp::Evict { session } => handle
-            .evict(session)
-            .map(|r| Json::obj(vec![("dropped", Json::Num(r.dropped as f64))]))
-            .map_err(|e| e.0),
-        WireOp::Shutdown => {
-            stop = true;
-            handle
-                .shutdown()
-                .map(|()| Json::obj(vec![("stopped", Json::Bool(true))]))
-                .map_err(|e| e.0)
-        }
-    };
-    (respond(&req.id, body).to_string(), stop)
+    let (body, stop) = execute(handle, req.op);
+    (render_json(&req.id, &body), stop)
 }
 
 /// Parse an instance from wire text in the named format.
@@ -475,5 +890,177 @@ mod tests {
         // NaN (the writer's own sentinel spelling) is representable on
         // the wire but meaningless as a bound
         expect_err(r#"{"v":1,"op":"propagate","session":"00","lb":["NaN"],"ub":[0]}"#, "NaN");
+    }
+
+    #[test]
+    fn frame_encode_decode_round_trip() {
+        let header = Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("op", Json::Str("stats".into())),
+        ]);
+        let frame = encode_frame(KIND_REQUEST, &header, b"xyz").unwrap();
+        assert_eq!(&frame[..4], b"GDP2");
+        let (decoded, used) = decode_frame(&frame, 1 << 20).unwrap().unwrap();
+        assert_eq!(used, frame.len());
+        assert_eq!(decoded.kind, KIND_REQUEST);
+        assert_eq!(decoded.header, header);
+        assert_eq!(decoded.body, b"xyz");
+        // every strict prefix is incomplete, never an error
+        for cut in 0..frame.len() {
+            assert!(
+                matches!(decode_frame(&frame[..cut], 1 << 20), Ok(None)),
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_decode_errors() {
+        let header = Json::obj(vec![("v", Json::Num(2.0)), ("op", Json::Str("stats".into()))]);
+        let good = encode_frame(KIND_REQUEST, &header, &[]).unwrap();
+        // wrong magic fails on the very first byte
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode_frame(&bad[..1], 1 << 20).unwrap_err().contains("magic"));
+        // wrong version / kind fail as soon as the byte arrives
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(decode_frame(&bad[..5], 1 << 20).unwrap_err().contains("version"));
+        let mut bad = good.clone();
+        bad[5] = 7;
+        assert!(decode_frame(&bad[..6], 1 << 20).unwrap_err().contains("kind"));
+        // an oversized declared length is rejected from the preamble
+        // alone — no buffering to the cap first
+        let mut bad = good.clone();
+        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&bad[..16], 1 << 20).unwrap_err().contains("cap"));
+        // garbage header JSON
+        let mut bad = encode_frame(KIND_REQUEST, &header, &[]).unwrap();
+        let at = FRAME_PREAMBLE;
+        bad[at] = b'!';
+        assert!(decode_frame(&bad, 1 << 20).unwrap_err().contains("JSON"));
+    }
+
+    #[test]
+    fn request_frame_round_trip_preserves_bounds_bits() {
+        let req = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("op", Json::Str("propagate".into())),
+            ("session", Json::Str("00000000000000ff".into())),
+            ("lb", Json::Arr(vec![Json::Num(0.1), Json::Str("-inf".into())])),
+            ("ub", Json::Arr(vec![Json::Num(0.3), Json::Str("inf".into())])),
+            ("seed_vars", Json::Arr(vec![Json::Num(1.0)])),
+        ]);
+        let bytes = request_to_frame(&req).unwrap();
+        let (frame, _) = decode_frame(&bytes, 1 << 20).unwrap().unwrap();
+        let parsed = request_from_frame(&frame).unwrap();
+        let WireOp::Propagate(p) = parsed.op else { panic!("wrong op") };
+        let start = p.start.unwrap();
+        assert_eq!(start.lb[0].to_bits(), 0.1f64.to_bits());
+        assert_eq!(start.lb[1], f64::NEG_INFINITY);
+        assert_eq!(start.ub[1], f64::INFINITY);
+        assert_eq!(p.seed_vars, Some(vec![1]));
+        // NaN bounds are rejected on the binary wire like on JSON
+        let mut raw = Vec::new();
+        f64_bits_to_bytes(&[f64::NAN], &mut raw);
+        f64_bits_to_bytes(&[0.0], &mut raw);
+        let header = Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("op", Json::Str("propagate".into())),
+            ("session", Json::Str("00".into())),
+            ("bounds", Json::Num(1.0)),
+        ]);
+        let bytes = encode_frame(KIND_REQUEST, &header, &raw).unwrap();
+        let (frame, _) = decode_frame(&bytes, 1 << 20).unwrap().unwrap();
+        assert!(request_from_frame(&frame).unwrap_err().contains("NaN"));
+    }
+
+    #[test]
+    fn load_frame_carries_text_in_the_body() {
+        let req = Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str("NAME t\nROWS\n...".into())),
+        ]);
+        let bytes = request_to_frame(&req).unwrap();
+        let (frame, _) = decode_frame(&bytes, 1 << 20).unwrap().unwrap();
+        assert!(frame.header.get("text").is_none(), "bulk text must leave the header");
+        assert_eq!(frame.body, b"NAME t\nROWS\n...");
+        let parsed = request_from_frame(&frame).unwrap();
+        let WireOp::Load { format, text } = parsed.op else { panic!("wrong op") };
+        assert_eq!(format, "mps");
+        assert_eq!(text, "NAME t\nROWS\n...");
+    }
+
+    #[test]
+    fn binary_response_rendering_matches_json_rendering() {
+        use std::time::Duration;
+        let reply = super::super::PropagateReply {
+            bounds: Bounds {
+                lb: vec![0.1, f64::NEG_INFINITY, -0.0],
+                ub: vec![0.30000000000000004, f64::INFINITY, 2e-308],
+            },
+            rounds: 3,
+            status: Status::Converged,
+            wall: Duration::from_micros(5),
+            latency: Duration::from_micros(9),
+            coalesced: 2,
+            cache_hit: true,
+            progress: 0.25,
+            tightened: 4,
+            candidates: 7,
+        };
+        let id = Some("r9".to_string());
+        let body = Ok(ReplyResult::Propagate(reply.clone()));
+        let json_line = render_json(&id, &body);
+        let frame_bytes = render_binary(&id, &body);
+        let (frame, used) = decode_frame(&frame_bytes, 1 << 20).unwrap().unwrap();
+        assert_eq!(used, frame_bytes.len());
+        // splice the raw body back: the reconstruction differs from the
+        // JSON line ONLY in its "v" field
+        let mut reconstructed = response_from_frame(&frame).unwrap();
+        if let Json::Obj(map) = &mut reconstructed {
+            map.insert("v".into(), Json::Num(1.0));
+        }
+        assert_eq!(reconstructed.to_string(), json_line);
+        // and the reconstructed bounds are bit-exact
+        let result = reconstructed.get("result").unwrap();
+        let lb: Vec<f64> = result
+            .get("lb")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (a, b) in lb.iter().zip(reply.bounds.lb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // non-propagate replies are header-only frames
+        let body = Ok(ReplyResult::Stopped);
+        let (frame, _) =
+            decode_frame(&render_binary(&None, &body), 1 << 20).unwrap().unwrap();
+        assert!(frame.body.is_empty());
+        assert_eq!(
+            frame.header.get("result").and_then(|r| r.get("stopped")),
+            Some(&Json::Bool(true))
+        );
+        // errors render as ok:false headers on both wires
+        let body: Result<ReplyResult, String> = Err("boom".into());
+        assert!(render_json(&None, &body).contains("\"ok\":false"));
+        let (frame, _) =
+            decode_frame(&render_binary(&None, &body), 1 << 20).unwrap().unwrap();
+        assert_eq!(frame.header.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn bounds_digest_is_bit_sensitive() {
+        let a = bounds_digest(&[0.1, 0.2], &[0.3, 0.4]);
+        assert_eq!(a, bounds_digest(&[0.1, 0.2], &[0.3, 0.4]));
+        assert_ne!(a, bounds_digest(&[0.1, 0.2], &[0.3, 0.4000000000000001]));
+        // -0.0 and 0.0 compare equal but are different bit patterns —
+        // the digest must see the difference
+        assert_ne!(bounds_digest(&[0.0], &[1.0]), bounds_digest(&[-0.0], &[1.0]));
     }
 }

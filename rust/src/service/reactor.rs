@@ -1,0 +1,839 @@
+//! Nonblocking, event-driven TCP front end for the propagation service
+//! (`gdp serve` without `--stdio`).
+//!
+//! One reactor thread multiplexes every client connection — no
+//! thread-per-connection, no locks. It is an epoll-*style* readiness
+//! loop built from std alone (no `poll(2)` FFI, no `mio`; the lint's
+//! no-unsafe rule holds here): the listener and every stream are
+//! nonblocking, each iteration sweeps accept → read → parse/admit →
+//! poll completions → write, and a sweep that made no progress sleeps
+//! [`ReactorConfig::idle_wait`] so an idle server costs microseconds of
+//! CPU per wakeup instead of a spinning core.
+//!
+//! * **Connection multiplexing** — each connection owns a read buffer
+//!   (bytes off the socket, parsed into requests in place) and a write
+//!   buffer (rendered replies drained as the socket accepts them).
+//! * **Format negotiation** — the first byte of a connection picks its
+//!   wire, sticky for the connection's lifetime: `'G'` (the
+//!   [`proto::FRAME_MAGIC`] prefix) selects v2 binary frames, anything
+//!   else v1 JSON lines. v1 clients connect and speak exactly as
+//!   before.
+//! * **Request pipelining** — clients may write any number of requests
+//!   without waiting. Parsed requests are submitted to the shard pool
+//!   immediately through the `*_submit` handle methods ([`super::ServiceHandle`])
+//!   and their reply channels queue per connection in FIFO order; only
+//!   the queue head is polled, so responses always return in request
+//!   order even though the shards execute concurrently.
+//! * **Backpressure / admission control** — parsing stops while a
+//!   connection has [`ReactorConfig::max_inflight_per_conn`] requests
+//!   in flight (or the pool has [`ReactorConfig::max_inflight_global`]),
+//!   and the socket is not read past a buffered
+//!   [`ReactorConfig::max_frame_bytes`] — TCP flow control pushes back
+//!   on the client instead of the server buffering without bound.
+//!   Connections beyond [`ReactorConfig::max_connections`] get a
+//!   best-effort error line and a close.
+//! * **Graceful drain** — a `shutdown` request stops accepting and
+//!   reading, but every request already in flight or parsed from the
+//!   buffers (on any connection) is answered first; only then does the
+//!   pool stop and the sockets close. The `stats` accounting invariant
+//!   `hits + misses == propagates + pending` therefore holds at drain:
+//!   no submitted request is abandoned.
+//!
+//! Framing errors on the binary wire (bad magic/version/kind, a
+//! declared length over the admission cap, garbage header JSON) lose
+//! frame sync, so the connection is answered with a structured error
+//! and closed — after any earlier pipelined requests complete. A
+//! malformed v1 line only loses that line (resync at the newline), as
+//! in the threaded server this reactor replaces.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::{self, FrontendSnapshot, ShardSnapshot};
+use super::proto::{self, ReplyResult, WireOp};
+use super::{EvictReply, LoadReply, PropagateReply, ServiceHandle, ServiceResult};
+
+/// Front-end knobs. The defaults serve hundreds of concurrent pipelined
+/// clients on one thread while bounding memory: at most
+/// `max_connections × max_frame_bytes` of read buffer and
+/// `max_inflight_global` requests inside the shard pool.
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// Admission cap on concurrent connections; over-capacity clients
+    /// get a best-effort error reply and an immediate close.
+    pub max_connections: usize,
+    /// Per-connection in-flight request budget: parsing (and then the
+    /// socket read) stops until replies drain below it.
+    pub max_inflight_per_conn: usize,
+    /// Pool-wide in-flight request budget across all connections.
+    pub max_inflight_global: usize,
+    /// Largest request the server will buffer: a v2 frame's declared
+    /// total length or one v1 JSON line. Larger requests are structured
+    /// errors, not allocations.
+    pub max_frame_bytes: usize,
+    /// Sleep between sweeps that made no progress (readiness poll
+    /// granularity when idle).
+    pub idle_wait: Duration,
+    /// After a drain completes, how long to keep trying to flush
+    /// response bytes to slow clients before force-closing.
+    pub drain_grace: Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_connections: 1024,
+            max_inflight_per_conn: 32,
+            max_inflight_global: 1024,
+            max_frame_bytes: 64 << 20,
+            idle_wait: Duration::from_micros(250),
+            drain_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Wire format of one connection, decided by its first byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Wire {
+    /// Nothing received yet.
+    Undecided,
+    /// v1 JSON lines.
+    Json,
+    /// v2 binary frames.
+    Binary,
+}
+
+/// One queued in-flight request on a connection, FIFO. Only the queue
+/// head is polled so replies keep request order.
+enum Pending {
+    /// Answered before reaching a shard (parse/admission errors, and
+    /// replies computed inline).
+    Ready(Option<String>, Result<ReplyResult, String>),
+    Load { id: Option<String>, rx: Receiver<ServiceResult<LoadReply>> },
+    Propagate { id: Option<String>, rx: Receiver<ServiceResult<PropagateReply>> },
+    Stats {
+        id: Option<String>,
+        rxs: Vec<Receiver<ServiceResult<ShardSnapshot>>>,
+        got: Vec<ShardSnapshot>,
+    },
+    Evict {
+        id: Option<String>,
+        rxs: Vec<Receiver<ServiceResult<EvictReply>>>,
+        next: usize,
+        dropped: usize,
+    },
+    /// Sentinel: executed by the drain logic in [`serve`] once every
+    /// other pending request pool-wide has been answered.
+    Shutdown { id: Option<String> },
+}
+
+impl Pending {
+    /// Occupies a slot in the shard pool (counts against the global
+    /// in-flight budget)?
+    fn is_job(&self) -> bool {
+        !matches!(self, Pending::Ready(..) | Pending::Shutdown { .. })
+    }
+
+    fn is_shutdown(&self) -> bool {
+        matches!(self, Pending::Shutdown { .. })
+    }
+}
+
+const STOPPED: &str = "service stopped";
+
+/// Poll one non-shutdown pending entry without blocking. `Some` hands
+/// back the correlation id and reply body; `None` means not ready yet.
+fn poll_pending(p: &mut Pending) -> Option<(Option<String>, Result<ReplyResult, String>)> {
+    match p {
+        Pending::Ready(id, body) => {
+            Some((id.take(), std::mem::replace(body, Err(String::new()))))
+        }
+        Pending::Load { id, rx } => match rx.try_recv() {
+            Ok(Ok(r)) => Some((id.take(), Ok(ReplyResult::Load(r)))),
+            Ok(Err(e)) => Some((id.take(), Err(e.0))),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some((id.take(), Err(STOPPED.into()))),
+        },
+        Pending::Propagate { id, rx } => match rx.try_recv() {
+            Ok(Ok(r)) => Some((id.take(), Ok(ReplyResult::Propagate(r)))),
+            Ok(Err(e)) => Some((id.take(), Err(e.0))),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some((id.take(), Err(STOPPED.into()))),
+        },
+        Pending::Stats { id, rxs, got } => loop {
+            if got.len() == rxs.len() {
+                return Some((id.take(), Ok(ReplyResult::Stats(metrics::rollup(got)))));
+            }
+            match rxs[got.len()].try_recv() {
+                Ok(Ok(snap)) => got.push(snap),
+                Ok(Err(e)) => return Some((id.take(), Err(e.0))),
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => {
+                    return Some((id.take(), Err(STOPPED.into())))
+                }
+            }
+        },
+        Pending::Evict { id, rxs, next, dropped } => loop {
+            if *next == rxs.len() {
+                return Some((
+                    id.take(),
+                    Ok(ReplyResult::Evict(EvictReply { dropped: *dropped })),
+                ));
+            }
+            match rxs[*next].try_recv() {
+                Ok(Ok(r)) => {
+                    *dropped += r.dropped;
+                    *next += 1;
+                }
+                Ok(Err(e)) => return Some((id.take(), Err(e.0))),
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => {
+                    return Some((id.take(), Err(STOPPED.into())))
+                }
+            }
+        },
+        // executed centrally by the drain logic, never polled here
+        Pending::Shutdown { .. } => None,
+    }
+}
+
+/// One multiplexed client connection.
+struct Conn {
+    stream: TcpStream,
+    wire: Wire,
+    /// Bytes off the socket, not yet parsed into requests.
+    rbuf: Vec<u8>,
+    /// Rendered reply bytes, not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// In-flight requests, FIFO (response order == request order).
+    pending: VecDeque<Pending>,
+    /// Still pulling bytes from the socket (false after EOF, a fatal
+    /// error, or once a drain starts).
+    reading: bool,
+    /// Frame sync lost or socket broken: stop parsing, close after the
+    /// pending replies flush.
+    fatal: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            wire: Wire::Undecided,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            pending: VecDeque::new(),
+            reading: true,
+            fatal: false,
+        }
+    }
+
+    /// Render one reply onto the write buffer in this connection's wire
+    /// format.
+    fn write_reply(&mut self, id: &Option<String>, body: &Result<ReplyResult, String>) {
+        match self.wire {
+            Wire::Binary => self.wbuf.extend_from_slice(&proto::render_binary(id, body)),
+            _ => {
+                self.wbuf.extend_from_slice(proto::render_json(id, body).as_bytes());
+                self.wbuf.push(b'\n');
+            }
+        }
+    }
+
+    /// Drain the socket into `rbuf` up to the buffering and in-flight
+    /// gates. Returns true if any bytes arrived.
+    fn pump_read(&mut self, config: &ReactorConfig) -> bool {
+        let mut progress = false;
+        let mut chunk = [0u8; 65536];
+        while self.reading
+            && self.rbuf.len() < config.max_frame_bytes
+            && self.pending.len() < config.max_inflight_per_conn
+        {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    // EOF: whatever is buffered still gets parsed and
+                    // answered; a trailing partial request is dropped
+                    // (clean close, mid-frame disconnects included)
+                    self.reading = false;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.reading = false;
+                    self.fatal = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Push buffered reply bytes into the socket. Returns true if any
+    /// bytes moved.
+    fn pump_write(&mut self) -> bool {
+        let mut progress = false;
+        while !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => {
+                    self.fatal = true;
+                    self.reading = false;
+                    self.wbuf.clear();
+                    break;
+                }
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.fatal = true;
+                    self.reading = false;
+                    self.wbuf.clear();
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// A connection closes once it will never produce another byte:
+    /// not reading, nothing in flight, nothing left to flush.
+    fn closable(&self) -> bool {
+        !self.reading && self.pending.is_empty() && self.wbuf.is_empty()
+    }
+
+    /// Does `rbuf` hold at least one complete (parseable) request? Used
+    /// by the drain gate: fully received requests must be answered
+    /// before the pool stops, while a trailing partial frame must not
+    /// stall the drain forever (with reading stopped it can never
+    /// complete).
+    fn has_complete_request(&self, max_frame: usize) -> bool {
+        match self.wire {
+            Wire::Json => self.rbuf.contains(&b'\n') || self.rbuf.len() >= max_frame,
+            // a decode *error* also counts: the next parse sweep turns
+            // it into a structured error reply that must go out
+            Wire::Binary => !matches!(proto::decode_frame(&self.rbuf, max_frame), Ok(None)),
+            Wire::Undecided => false,
+        }
+    }
+}
+
+/// Cross-connection loop state threaded through the sweep phases.
+struct Shared<'a> {
+    handle: &'a ServiceHandle,
+    config: &'a ReactorConfig,
+    frontend: FrontendSnapshot,
+    /// Requests currently inside the shard pool, across all connections.
+    active_jobs: usize,
+    /// A shutdown request has been parsed somewhere: stop accepting and
+    /// reading, answer what is already in, then stop the pool.
+    draining: bool,
+}
+
+/// Submit one parsed request to the shard pool (or answer it inline).
+/// Returns the queue entry and whether it was a shutdown.
+fn submit(handle: &ServiceHandle, req: proto::WireRequest) -> (Pending, bool) {
+    let id = req.id;
+    match req.op {
+        WireOp::Load { format, text } => match proto::parse_instance(&format, &text) {
+            Err(e) => (Pending::Ready(id, Err(e)), false),
+            Ok(inst) => match handle.load_submit(inst) {
+                Ok(rx) => (Pending::Load { id, rx }, false),
+                Err(e) => (Pending::Ready(id, Err(e.0)), false),
+            },
+        },
+        WireOp::Propagate(p) => match handle.propagate_submit(p) {
+            Ok(rx) => (Pending::Propagate { id, rx }, false),
+            Err(e) => (Pending::Ready(id, Err(e.0)), false),
+        },
+        WireOp::Stats => match handle.stats_submit() {
+            Ok(rxs) => {
+                let n = rxs.len();
+                (Pending::Stats { id, rxs, got: Vec::with_capacity(n) }, false)
+            }
+            Err(e) => (Pending::Ready(id, Err(e.0)), false),
+        },
+        WireOp::Evict { session } => match handle.evict_submit(session) {
+            Ok(rxs) => (Pending::Evict { id, rxs, next: 0, dropped: 0 }, false),
+            Err(e) => (Pending::Ready(id, Err(e.0)), false),
+        },
+        WireOp::Shutdown => (Pending::Shutdown { id }, true),
+    }
+}
+
+/// Parse as many buffered requests as the admission budgets allow and
+/// submit them. Returns true on progress; sets `sh.draining` when a
+/// shutdown request is parsed.
+fn parse_and_submit(conn: &mut Conn, sh: &mut Shared) -> bool {
+    let mut progress = false;
+    if conn.fatal {
+        return false;
+    }
+    if conn.wire == Wire::Undecided {
+        match conn.rbuf.first() {
+            None => return false,
+            Some(&b) if b == proto::FRAME_MAGIC[0] => conn.wire = Wire::Binary,
+            Some(_) => conn.wire = Wire::Json,
+        }
+    }
+    loop {
+        if conn.rbuf.is_empty() {
+            break;
+        }
+        // admission control: a full in-flight budget defers parsing (and
+        // pump_read then defers the socket — TCP backpressure on the
+        // client) until replies drain
+        if conn.pending.len() >= sh.config.max_inflight_per_conn
+            || sh.active_jobs >= sh.config.max_inflight_global
+        {
+            sh.frontend.backpressure_stalls += 1;
+            break;
+        }
+        let req = match conn.wire {
+            Wire::Json => {
+                let Some(nl) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+                    if conn.rbuf.len() >= sh.config.max_frame_bytes {
+                        sh.frontend.request_errors += 1;
+                        conn.write_reply(
+                            &None,
+                            &Err(format!(
+                                "request line exceeds {} bytes",
+                                sh.config.max_frame_bytes
+                            )),
+                        );
+                        conn.fatal = true;
+                        conn.reading = false;
+                        conn.rbuf.clear();
+                    }
+                    break;
+                };
+                let line: Vec<u8> = conn.rbuf.drain(..=nl).collect();
+                let line = String::from_utf8_lossy(&line[..nl]).into_owned();
+                if line.trim().is_empty() {
+                    progress = true;
+                    continue;
+                }
+                sh.frontend.requests_json += 1;
+                match proto::parse_request(&line) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        // a bad line loses only itself: resync at the
+                        // newline, keep serving the connection
+                        sh.frontend.request_errors += 1;
+                        conn.pending.push_back(Pending::Ready(None, Err(e)));
+                        progress = true;
+                        continue;
+                    }
+                }
+            }
+            _ => match proto::decode_frame(&conn.rbuf, sh.config.max_frame_bytes) {
+                Ok(None) => break,
+                Ok(Some((frame, used))) => {
+                    conn.rbuf.drain(..used);
+                    sh.frontend.requests_binary += 1;
+                    match proto::request_from_frame(&frame) {
+                        Ok(req) => req,
+                        Err(e) => {
+                            // the frame boundary was sound, only its
+                            // content was bad — answer and keep going
+                            sh.frontend.request_errors += 1;
+                            conn.pending.push_back(Pending::Ready(None, Err(e)));
+                            progress = true;
+                            continue;
+                        }
+                    }
+                }
+                Err(e) => {
+                    // framing lost: structured error, then close once
+                    // the earlier pipelined replies have flushed
+                    sh.frontend.request_errors += 1;
+                    conn.pending.push_back(Pending::Ready(None, Err(e)));
+                    conn.fatal = true;
+                    conn.reading = false;
+                    conn.rbuf.clear();
+                    progress = true;
+                    break;
+                }
+            },
+        };
+        let (entry, is_shutdown) = submit(sh.handle, req);
+        if entry.is_job() {
+            sh.active_jobs += 1;
+        }
+        conn.pending.push_back(entry);
+        progress = true;
+        if is_shutdown {
+            // serve_lines semantics: requests pipelined after a shutdown
+            // on the same connection go unserved
+            sh.draining = true;
+            conn.reading = false;
+            conn.rbuf.clear();
+            break;
+        }
+    }
+    progress
+}
+
+/// Poll this connection's queue head(s) and render every completed
+/// reply, preserving request order. Returns true on progress.
+fn complete_replies(conn: &mut Conn, sh: &mut Shared) -> bool {
+    let mut progress = false;
+    loop {
+        let Some(front) = conn.pending.front_mut() else { break };
+        if front.is_shutdown() {
+            break; // answered centrally once the pool-wide drain is done
+        }
+        let was_job = front.is_job();
+        let Some((id, mut body)) = poll_pending(front) else { break };
+        if was_job {
+            sh.active_jobs -= 1;
+        }
+        if let Ok(ReplyResult::Stats(stats)) = &mut body {
+            sh.frontend.inject(stats);
+        }
+        conn.write_reply(&id, &body);
+        if sh.draining {
+            sh.frontend.drained += 1;
+        }
+        conn.pending.pop_front();
+        progress = true;
+    }
+    progress
+}
+
+/// Turn away a connection over the admission cap: best-effort error
+/// line (the wire is unknown before the first byte, so v1 JSON), then
+/// drop.
+fn reject(mut stream: TcpStream) {
+    let line = proto::render_json(&None, &Err("server at connection capacity".into()));
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+/// Run the reactor until a client executes `shutdown` and the drain
+/// completes. Everything runs on the calling thread.
+pub fn serve(handle: &ServiceHandle, listener: TcpListener, config: &ReactorConfig) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut sh = Shared {
+        handle,
+        config,
+        frontend: FrontendSnapshot::default(),
+        active_jobs: 0,
+        draining: false,
+    };
+    let mut shutdown_result: Option<Result<(), String>> = None;
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let mut progress = false;
+
+        // accept (nothing new once draining)
+        while !sh.draining {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    if conns.len() >= config.max_connections
+                        || stream.set_nonblocking(true).is_err()
+                    {
+                        sh.frontend.rejected += 1;
+                        reject(stream);
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    sh.frontend.accepted += 1;
+                    conns.push(Conn::new(stream));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("gdp-serve: accept error: {e}");
+                    break;
+                }
+            }
+        }
+
+        // read, parse/admit/submit, complete in-order replies
+        for conn in conns.iter_mut() {
+            progress |= conn.pump_read(config);
+            progress |= parse_and_submit(conn, &mut sh);
+            progress |= complete_replies(conn, &mut sh);
+        }
+        if sh.draining && drain_deadline.is_none() {
+            // reading stops everywhere; buffered requests still parse
+            // and get answered above on later sweeps
+            for conn in conns.iter_mut() {
+                conn.reading = false;
+            }
+        }
+
+        // drain: once nothing but shutdown sentinels is pending anywhere
+        // (every in-flight AND queued request answered), stop the pool
+        // and answer the sentinels
+        if sh.draining && shutdown_result.is_none() {
+            let work_left = conns.iter().any(|c| {
+                c.pending.iter().any(|p| !p.is_shutdown())
+                    || (!c.fatal && c.has_complete_request(config.max_frame_bytes))
+            });
+            if !work_left {
+                let result = handle.shutdown().map_err(|e| e.0);
+                for conn in conns.iter_mut() {
+                    while conn.pending.front().is_some_and(Pending::is_shutdown) {
+                        if let Some(Pending::Shutdown { id }) = conn.pending.pop_front() {
+                            let body = match &result {
+                                Ok(()) => Ok(ReplyResult::Stopped),
+                                Err(e) => Err(e.clone()),
+                            };
+                            conn.write_reply(&id, &body);
+                            sh.frontend.drained += 1;
+                        }
+                    }
+                }
+                shutdown_result = Some(result);
+                drain_deadline = Some(Instant::now() + config.drain_grace);
+                progress = true;
+            }
+        }
+
+        // flush and reap
+        for conn in conns.iter_mut() {
+            progress |= conn.pump_write();
+        }
+        let before = conns.len();
+        conns.retain_mut(|c| {
+            if c.closable() {
+                let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                false
+            } else {
+                true
+            }
+        });
+        progress |= conns.len() != before;
+
+        if shutdown_result.is_some() {
+            let grace_over = drain_deadline.is_some_and(|d| Instant::now() > d);
+            if conns.is_empty() || grace_over {
+                // force-close whatever a slow client left unflushed
+                for c in conns.drain(..) {
+                    let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                }
+                return Ok(());
+            }
+        }
+
+        if !progress {
+            std::thread::sleep(config.idle_wait);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::service::{Service, ServiceConfig};
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader};
+
+    fn start(
+        config: ReactorConfig,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>, Service) {
+        let service = Service::start(ServiceConfig::default());
+        let h = service.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve(&h, listener, &config).unwrap());
+        (addr, server, service)
+    }
+
+    fn load_line(inst: &crate::instance::MipInstance) -> String {
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str(crate::mps::write_mps(inst))),
+        ])
+        .to_string()
+    }
+
+    fn request(addr: std::net::SocketAddr, line: &str) -> Json {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    }
+
+    #[test]
+    fn tcp_round_trip_with_concurrent_clients() {
+        let (addr, server, service) = start(ReactorConfig::default());
+        let inst =
+            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 5, ..Default::default() });
+
+        let resp = request(addr, &load_line(&inst));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+
+        // a few parallel TCP clients propagating the same session
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let session = session.clone();
+                s.spawn(move || {
+                    let line = format!(r#"{{"v":1,"op":"propagate","session":"{session}"}}"#);
+                    let resp = request(addr, &line);
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+                });
+            }
+        });
+
+        // stats over the reactor carries the frontend block both wires
+        // share
+        let resp = request(addr, r#"{"v":1,"op":"stats"}"#);
+        let fe = resp.get("result").and_then(|r| r.get("frontend")).unwrap();
+        assert!(fe.get("accepted").unwrap().as_f64().unwrap() >= 5.0);
+        assert_eq!(fe.get("rejected").unwrap().as_f64(), Some(0.0));
+
+        let resp = request(addr, r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        server.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_come_back_in_order() {
+        let (addr, server, service) = start(ReactorConfig::default());
+        let inst =
+            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 6, ..Default::default() });
+        let resp = request(addr, &load_line(&inst));
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+
+        // write 8 correlated requests back-to-back (no reads in
+        // between), alternating ops so completion times differ wildly
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut script = String::new();
+        for i in 0..8 {
+            if i % 2 == 0 {
+                script.push_str(&format!(
+                    "{{\"v\":1,\"id\":\"r{i}\",\"op\":\"propagate\",\"session\":\"{session}\"}}\n"
+                ));
+            } else {
+                script.push_str(&format!("{{\"v\":1,\"id\":\"r{i}\",\"op\":\"stats\"}}\n"));
+            }
+        }
+        stream.write_all(script.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for i in 0..8 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+            assert_eq!(
+                resp.get("id").and_then(|v| v.as_str()),
+                Some(format!("r{i}").as_str()),
+                "reply order must match request order"
+            );
+        }
+
+        let resp = request(addr, r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        server.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn connection_cap_rejects_with_an_error_line() {
+        let config = ReactorConfig { max_connections: 1, ..ReactorConfig::default() };
+        let (addr, server, service) = start(config);
+        // first connection occupies the only slot (and proves liveness)
+        let mut first = TcpStream::connect(addr).unwrap();
+        first.write_all(b"{\"v\":1,\"op\":\"stats\"}\n").unwrap();
+        let mut reader = BufReader::new(first.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+        // second connection is turned away with a structured error
+        let second = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(second);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert!(resp
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("capacity"));
+        // the first connection still works, and can shut the server down
+        first.write_all(b"{\"v\":1,\"op\":\"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        reader = BufReader::new(first.try_clone().unwrap());
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().get("ok"), Some(&Json::Bool(true)));
+        server.join().unwrap();
+        service.shutdown();
+    }
+
+    #[test]
+    fn tight_inflight_budget_still_serves_everything() {
+        let config = ReactorConfig {
+            max_inflight_per_conn: 2,
+            max_inflight_global: 2,
+            ..ReactorConfig::default()
+        };
+        let (addr, server, service) = start(config);
+        let inst =
+            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 7, ..Default::default() });
+        let resp = request(addr, &load_line(&inst));
+        let session = resp
+            .get("result")
+            .and_then(|r| r.get("session"))
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+        // 10 pipelined requests against an in-flight budget of 2: the
+        // reactor must defer parsing, not drop or deadlock
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut script = String::new();
+        for i in 0..10 {
+            script.push_str(&format!(
+                "{{\"v\":1,\"id\":\"q{i}\",\"op\":\"propagate\",\"session\":\"{session}\"}}\n"
+            ));
+        }
+        stream.write_all(script.as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for i in 0..10 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "q{i}: {resp:?}");
+        }
+        let resp = request(addr, r#"{"v":1,"op":"shutdown"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        server.join().unwrap();
+        service.shutdown();
+    }
+}

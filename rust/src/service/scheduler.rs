@@ -22,10 +22,12 @@
 //! routed a non-`send_safe` engine, so only shard 0 can open the `Rc`
 //! PJRT runtime), and all engine execution for the sessions the
 //! [`ServiceHandle`](super::ServiceHandle) routes here. Requests arrive
-//! over the shard's mpsc channel and answer through per-request
-//! channels, so no state is shared between shards and no locks exist —
-//! the same freedom-from-synchronization argument the paper makes for
-//! rows, applied across sessions.
+//! over the shard's mpsc channel — fed either by blocking callers or by
+//! the [`reactor`](super::reactor) front end, whose admission control
+//! bounds how many requests can be in these queues at once — and answer
+//! through per-request channels, so no state is shared between shards
+//! and no locks exist — the same freedom-from-synchronization argument
+//! the paper makes for rows, applied across sessions.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};

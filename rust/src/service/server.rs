@@ -1,15 +1,13 @@
-//! Transport layer of the propagation service: a threaded
-//! `std::net::TcpListener` accept loop (one thread per connection) plus a
-//! stdio mode for pipes and tests. Both speak the JSON-line protocol in
+//! Line-oriented transport of the propagation service: the `--stdio`
+//! mode for pipes and tests. Speaks the v1 JSON-line protocol in
 //! [`super::proto`]; all propagation work happens on the sharded
-//! scheduler pool — connection threads only parse, forward through the
+//! scheduler pool — this loop only parses, forwards through the
 //! [`ServiceHandle`] (which routes each propagate to its session's home
-//! shard), and write the response line back.
+//! shard), and writes the response line back. TCP serving lives in
+//! [`super::reactor`], the nonblocking multiplexed front end that
+//! replaced the old thread-per-connection accept loop.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::io::{BufRead, Write};
 
 use anyhow::Result;
 
@@ -18,8 +16,7 @@ use super::ServiceHandle;
 
 /// Serve line-oriented requests from `input`, writing one response line
 /// per request to `output`. Returns when `input` ends or a `shutdown`
-/// request was executed. This is both the `--stdio` mode and the
-/// per-connection loop of the TCP server.
+/// request was executed.
 pub fn serve_lines<R: BufRead, W: Write>(
     handle: &ServiceHandle,
     input: R,
@@ -46,56 +43,6 @@ pub fn serve_stdio(handle: &ServiceHandle) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     serve_lines(handle, stdin.lock(), stdout.lock())?;
-    Ok(())
-}
-
-/// TCP accept loop: one thread per connection, all sharing the scheduler
-/// through cloned handles. Returns after a client executed `shutdown`
-/// (the handling thread wakes the blocked `accept` with a loopback
-/// connection).
-pub fn serve_tcp(handle: &ServiceHandle, listener: TcpListener) -> Result<()> {
-    let stop = Arc::new(AtomicBool::new(false));
-    let local = listener.local_addr()?;
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let stream = match conn {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("gdp-serve: accept error: {e}");
-                continue;
-            }
-        };
-        let handle = handle.clone();
-        let stop = stop.clone();
-        // connection threads are detached on purpose: joining them here
-        // would let one idle client (open connection, nothing sent) block
-        // shutdown forever. The client that executed `shutdown` has its
-        // response before the flag is set; stragglers get "service
-        // stopped" errors until the process exits.
-        std::thread::spawn(move || {
-            if let Err(e) = handle_connection(&handle, stream, &stop, local) {
-                eprintln!("gdp-serve: connection error: {e:#}");
-            }
-        });
-    }
-    Ok(())
-}
-
-fn handle_connection(
-    handle: &ServiceHandle,
-    stream: TcpStream,
-    stop: &AtomicBool,
-    local: std::net::SocketAddr,
-) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
-    let shutdown = serve_lines(handle, reader, &stream)?;
-    if shutdown {
-        stop.store(true, Ordering::SeqCst);
-        // unblock the accept loop so it observes the flag
-        let _ = TcpStream::connect(local);
-    }
     Ok(())
 }
 
@@ -151,58 +98,5 @@ mod tests {
         for line in &lines {
             assert_eq!(Json::parse(line).unwrap().get("ok"), Some(&Json::Bool(true)), "{line}");
         }
-    }
-
-    #[test]
-    fn tcp_round_trip_with_concurrent_clients() {
-        let service = Service::start(ServiceConfig::default());
-        let h = service.handle();
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let server = std::thread::spawn(move || serve_tcp(&h, listener).unwrap());
-
-        let inst =
-            gen::generate(&GenConfig { nrows: 12, ncols: 12, seed: 5, ..Default::default() });
-        let request = |line: &str| -> Json {
-            let mut stream = TcpStream::connect(addr).unwrap();
-            stream.write_all(line.as_bytes()).unwrap();
-            stream.write_all(b"\n").unwrap();
-            let mut reader = BufReader::new(stream.try_clone().unwrap());
-            let mut resp = String::new();
-            reader.read_line(&mut resp).unwrap();
-            Json::parse(resp.trim()).unwrap()
-        };
-
-        let resp = request(&load_line(&inst));
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
-        let session = resp
-            .get("result")
-            .and_then(|r| r.get("session"))
-            .and_then(|v| v.as_str())
-            .unwrap()
-            .to_string();
-
-        // a few parallel TCP clients propagating the same session
-        std::thread::scope(|s| {
-            for _ in 0..4 {
-                let session = session.clone();
-                s.spawn(move || {
-                    let mut stream = TcpStream::connect(addr).unwrap();
-                    let line = format!(r#"{{"v":1,"op":"propagate","session":"{session}"}}"#);
-                    stream.write_all(line.as_bytes()).unwrap();
-                    stream.write_all(b"\n").unwrap();
-                    let mut reader = BufReader::new(stream.try_clone().unwrap());
-                    let mut resp = String::new();
-                    reader.read_line(&mut resp).unwrap();
-                    let resp = Json::parse(resp.trim()).unwrap();
-                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
-                });
-            }
-        });
-
-        let resp = request(r#"{"v":1,"op":"shutdown"}"#);
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
-        server.join().unwrap();
-        service.shutdown();
     }
 }

@@ -1,0 +1,533 @@
+//! Wire protocol v2 (binary frames) over the reactor front end, against
+//! a real TCP socket.
+//!
+//! * The acceptance differential: binary-wire replies field-identical
+//!   (f64 bit-exact — the arrays travel as raw bit patterns) to the
+//!   JSON-lines replies for every engine this checkout can serve, over
+//!   cold, warm (seeded) and coalesced-batch propagation.
+//! * The malformed-frame suite: truncated length prefix, oversized
+//!   declared length vs the admission cap, wrong magic/version,
+//!   mid-frame disconnect, interleaved valid+broken pipelining — every
+//!   case a structured error or a clean close, never a panic, and the
+//!   server keeps serving afterwards.
+//! * Graceful drain: a shutdown pipelined behind in-flight propagates
+//!   answers everything in request order before the sockets close, and
+//!   the stats accounting invariant holds at drain.
+
+use std::io::{BufRead as _, BufReader, Read, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use gdp::gen::{self, GenConfig};
+use gdp::instance::{Bounds, MipInstance};
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::propagation::Engine as _;
+use gdp::service::proto;
+use gdp::service::reactor::{serve, ReactorConfig};
+use gdp::service::{Service, ServiceConfig};
+use gdp::util::json::Json;
+
+fn start_server(
+    config: ServiceConfig,
+    rcfg: ReactorConfig,
+) -> (SocketAddr, std::thread::JoinHandle<()>, Service) {
+    let service = Service::start(config);
+    let handle = service.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || serve(&handle, listener, &rcfg).unwrap());
+    (addr, server, service)
+}
+
+fn load_req(inst: &MipInstance) -> Json {
+    Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("op", Json::Str("load".into())),
+        ("format", Json::Str("mps".into())),
+        ("text", Json::Str(gdp::mps::write_mps(inst))),
+    ])
+}
+
+fn propagate_req(session: &str, spec: &EngineSpec, warm: Option<(&Bounds, usize)>) -> Json {
+    let mut pairs = vec![
+        ("v", Json::Num(1.0)),
+        ("op", Json::Str("propagate".into())),
+        ("session", Json::Str(session.into())),
+        ("engine", Json::Str(spec.name.clone())),
+        ("threads", Json::Num(1.0)),
+    ];
+    if let Some((start, seed)) = warm {
+        pairs.push(("lb", Json::Arr(start.lb.iter().map(|&x| Json::Num(x)).collect())));
+        pairs.push(("ub", Json::Arr(start.ub.iter().map(|&x| Json::Num(x)).collect())));
+        pairs.push(("seed_vars", Json::Arr(vec![Json::Num(seed as f64)])));
+    }
+    Json::obj(pairs)
+}
+
+/// One JSON-lines exchange on an open connection.
+fn json_roundtrip(stream: &mut TcpStream, req: &Json) -> Json {
+    stream.write_all(req.to_string().as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).expect("response line must parse")
+}
+
+/// Read one v2 response frame; `None` on a clean close before any byte
+/// of the next frame (and a panic on a torn frame — the server must
+/// never send one).
+fn read_frame(stream: &mut TcpStream) -> Option<Json> {
+    let mut preamble = [0u8; proto::FRAME_PREAMBLE];
+    let mut got = 0;
+    while got < preamble.len() {
+        match stream.read(&mut preamble[got..]) {
+            Ok(0) if got == 0 => return None,
+            Ok(0) => panic!("server closed mid-frame after {got} bytes"),
+            Ok(n) => got += n,
+            Err(e) => panic!("reading response preamble: {e}"),
+        }
+    }
+    let hlen = u32::from_le_bytes([preamble[8], preamble[9], preamble[10], preamble[11]]) as usize;
+    let blen =
+        u32::from_le_bytes([preamble[12], preamble[13], preamble[14], preamble[15]]) as usize;
+    let mut buf = preamble.to_vec();
+    buf.resize(preamble.len() + hlen + blen, 0);
+    stream.read_exact(&mut buf[preamble.len()..]).unwrap();
+    let (frame, used) = proto::decode_frame(&buf, usize::MAX).unwrap().unwrap();
+    assert_eq!(used, buf.len());
+    Some(proto::response_from_frame(&frame).expect("well-formed response frame"))
+}
+
+/// One binary-frame exchange on an open connection.
+fn binary_roundtrip(stream: &mut TcpStream, req: &Json) -> Json {
+    let frame = proto::request_to_frame(req).expect("encode request");
+    stream.write_all(&frame).unwrap();
+    read_frame(stream).expect("server closed instead of replying")
+}
+
+fn is_ok(resp: &Json) -> bool {
+    resp.get("ok") == Some(&Json::Bool(true))
+}
+
+fn session_of(resp: &Json) -> String {
+    resp.get("result")
+        .and_then(|r| r.get("session"))
+        .and_then(|v| v.as_str())
+        .expect("load reply carries a session id")
+        .to_string()
+}
+
+/// The `result` payload with the two timing fields (the only
+/// legitimately run-dependent ones) removed, rendered to its canonical
+/// text. The JSON writer spells an in-memory `Num(inf)` and a parsed
+/// `Str("inf")` identically, so string equality here is f64 bit
+/// equality for the bound arrays (shortest-repr round-trip) plus field
+/// equality for everything else.
+fn comparable_result(resp: &Json) -> String {
+    let mut result = resp.get("result").expect("ok reply carries a result").clone();
+    if let Json::Obj(map) = &mut result {
+        map.remove("wall_us");
+        map.remove("latency_us");
+    }
+    result.to_string()
+}
+
+/// Served engines this checkout can run (same enrollment rule as
+/// service_differential.rs): native always, XLA only with a PJRT
+/// runtime.
+fn servable_specs(registry: &Registry) -> Vec<EngineSpec> {
+    let xla_ok = registry.runtime().is_ok();
+    registry
+        .entries()
+        .iter()
+        .filter(|e| {
+            if !e.served {
+                return false;
+            }
+            if e.needs_artifacts && !xla_ok {
+                eprintln!("wire_v2: skipping {} (no PJRT runtime)", e.name);
+                return false;
+            }
+            true
+        })
+        .map(|e| EngineSpec::new(e.name).threads(1))
+        .collect()
+}
+
+fn bounds_of_result(resp: &Json) -> Bounds {
+    let r = resp.get("result").unwrap();
+    let nums = |k: &str| -> Vec<f64> {
+        r.get(k)
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|j| match j {
+                Json::Num(x) => *x,
+                other => proto::json_to_f64(other).unwrap(),
+            })
+            .collect()
+    };
+    Bounds { lb: nums("lb"), ub: nums("ub") }
+}
+
+/// Acceptance differential: for every servable engine, drive the same
+/// cold and warm propagation once per wire (evicting in between so both
+/// runs pay the same cold prepare) and require the reply payloads to be
+/// field-identical, bound arrays bit-exact.
+#[test]
+fn binary_replies_field_identical_to_json_for_every_served_engine() {
+    let registry = Registry::with_defaults();
+    let specs = servable_specs(&registry);
+    assert!(specs.len() >= 4, "registry lost the native served engines");
+    let (addr, server, service) = start_server(
+        ServiceConfig { batch_window: Duration::ZERO, ..ServiceConfig::default() },
+        ReactorConfig::default(),
+    );
+    let inst = gen::generate(&GenConfig { nrows: 35, ncols: 30, seed: 11, ..Default::default() });
+
+    let mut json = TcpStream::connect(addr).unwrap();
+    let mut bin = TcpStream::connect(addr).unwrap();
+    let evict_all = Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("evict".into()))]);
+
+    for spec in &specs {
+        // JSON leg, from a cold store
+        json_roundtrip(&mut json, &evict_all);
+        let j_load = json_roundtrip(&mut json, &load_req(&inst));
+        assert!(is_ok(&j_load), "{spec:?}: {j_load:?}");
+        let session = session_of(&j_load);
+        let j_cold = json_roundtrip(&mut json, &propagate_req(&session, spec, None));
+        assert!(is_ok(&j_cold), "{spec:?}: {j_cold:?}");
+        let branch = gdp::testkit::branch_first_wide_var(&bounds_of_result(&j_cold), 1e-3);
+        let j_warm = branch.as_ref().map(|(v, b)| {
+            json_roundtrip(&mut json, &propagate_req(&session, spec, Some((b, *v))))
+        });
+
+        // binary leg, from an equally cold store
+        json_roundtrip(&mut json, &evict_all);
+        let b_load = binary_roundtrip(&mut bin, &load_req(&inst));
+        assert!(is_ok(&b_load), "{spec:?}: {b_load:?}");
+        let b_cold = binary_roundtrip(&mut bin, &propagate_req(&session, spec, None));
+        let b_warm = branch.as_ref().map(|(v, b)| {
+            binary_roundtrip(&mut bin, &propagate_req(&session, spec, Some((b, *v))))
+        });
+
+        assert_eq!(
+            comparable_result(&j_load),
+            comparable_result(&b_load),
+            "{}: load replies differ across wires",
+            spec.name
+        );
+        assert_eq!(
+            comparable_result(&j_cold),
+            comparable_result(&b_cold),
+            "{}: cold propagate replies differ across wires",
+            spec.name
+        );
+        if let (Some(jw), Some(bw)) = (&j_warm, &b_warm) {
+            assert!(is_ok(jw) && is_ok(bw), "{}: warm leg failed", spec.name);
+            assert_eq!(
+                comparable_result(jw),
+                comparable_result(bw),
+                "{}: warm propagate replies differ across wires",
+                spec.name
+            );
+        }
+    }
+
+    let resp = json_roundtrip(&mut json, &Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("op", Json::Str("shutdown".into())),
+    ]));
+    assert!(is_ok(&resp));
+    server.join().unwrap();
+    service.shutdown();
+}
+
+/// The coalesced leg of the differential: one pipelined burst per wire
+/// against a size-triggered micro-batch (window long, `batch_max` =
+/// burst size), replies compared pairwise. The burst composition is
+/// identical on both wires, so the batched dispatch is too.
+#[test]
+fn coalesced_batches_field_identical_across_wires() {
+    let inst = gen::generate(&GenConfig { nrows: 35, ncols: 30, seed: 12, ..Default::default() });
+    let spec = EngineSpec::new("cpu_seq").threads(1);
+    const B: usize = 3;
+    // branch points from a direct run, so neither leg needs a solo
+    // propagate (which would sit out the long coalescing window)
+    let direct = Registry::with_defaults().create(&spec).unwrap().propagate(&inst);
+    let nodes = gen::branched_nodes(&inst, &direct.bounds, B, 99);
+    assert_eq!(nodes.len(), B);
+
+    let leg = |binary: bool| -> Vec<String> {
+        let (addr, server, service) = start_server(
+            ServiceConfig {
+                shards: 1,
+                batch_max: B,
+                batch_window: Duration::from_secs(10),
+                ..ServiceConfig::default()
+            },
+            ReactorConfig::default(),
+        );
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let load = if binary {
+            binary_roundtrip(&mut stream, &load_req(&inst))
+        } else {
+            json_roundtrip(&mut stream, &load_req(&inst))
+        };
+        assert!(is_ok(&load), "{load:?}");
+        let session = session_of(&load);
+
+        // the pipelined burst: all B requests written before any read
+        // (the first flush also pays the prepare, identically per leg)
+        let reqs: Vec<Json> = nodes
+            .iter()
+            .map(|n| {
+                let mut req = propagate_req(&session, &spec, None);
+                if let Json::Obj(map) = &mut req {
+                    map.insert(
+                        "lb".into(),
+                        Json::Arr(n.bounds.lb.iter().map(|&x| Json::Num(x)).collect()),
+                    );
+                    map.insert(
+                        "ub".into(),
+                        Json::Arr(n.bounds.ub.iter().map(|&x| Json::Num(x)).collect()),
+                    );
+                }
+                req
+            })
+            .collect();
+        let mut replies = Vec::with_capacity(B);
+        if binary {
+            let mut burst = Vec::new();
+            for req in &reqs {
+                burst.extend_from_slice(&proto::request_to_frame(req).unwrap());
+            }
+            stream.write_all(&burst).unwrap();
+            for _ in 0..B {
+                replies.push(read_frame(&mut stream).expect("burst reply"));
+            }
+        } else {
+            let mut burst = String::new();
+            for req in &reqs {
+                burst.push_str(&req.to_string());
+                burst.push('\n');
+            }
+            stream.write_all(burst.as_bytes()).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for _ in 0..B {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                replies.push(Json::parse(line.trim()).unwrap());
+            }
+        }
+        let out: Vec<String> = replies
+            .iter()
+            .map(|r| {
+                assert!(is_ok(r), "{r:?}");
+                comparable_result(r)
+            })
+            .collect();
+        let bye = if binary {
+            binary_roundtrip(
+                &mut stream,
+                &Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("shutdown".into()))]),
+            )
+        } else {
+            json_roundtrip(
+                &mut stream,
+                &Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("shutdown".into()))]),
+            )
+        };
+        assert!(is_ok(&bye));
+        server.join().unwrap();
+        service.shutdown();
+        out
+    };
+
+    let json_replies = leg(false);
+    let binary_replies = leg(true);
+    for (i, (j, b)) in json_replies.iter().zip(&binary_replies).enumerate() {
+        assert_eq!(j, b, "coalesced reply {i} differs across wires");
+    }
+}
+
+/// Malformed binary frames: structured errors or clean closes, never a
+/// panic — and the server keeps serving other connections afterwards.
+#[test]
+fn malformed_frames_get_structured_errors_never_a_panic() {
+    let rcfg = ReactorConfig { max_frame_bytes: 1 << 20, ..ReactorConfig::default() };
+    let (addr, server, service) = start_server(ServiceConfig::default(), rcfg);
+
+    // wrong magic (still starting with 'G', so the binary wire is
+    // negotiated): structured error frame, then close
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GXYZ____________").unwrap();
+    let resp = read_frame(&mut s).expect("error frame");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    assert!(read_frame(&mut s).is_none(), "framing lost: must close");
+
+    // wrong version byte
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut frame = proto::request_to_frame(&Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("op", Json::Str("stats".into())),
+    ]))
+    .unwrap();
+    frame[4] = 9;
+    s.write_all(&frame).unwrap();
+    let resp = read_frame(&mut s).expect("error frame");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        resp.get("error").and_then(|v| v.as_str()).unwrap().contains("version"),
+        "{resp:?}"
+    );
+    assert!(read_frame(&mut s).is_none());
+
+    // declared length over the admission cap: rejected from the header
+    // alone, no buffering of the phantom payload
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut oversized = Vec::new();
+    oversized.extend_from_slice(&proto::FRAME_MAGIC);
+    oversized.push(2); // version
+    oversized.push(1); // kind: request
+    oversized.extend_from_slice(&[0, 0]); // reserved
+    oversized.extend_from_slice(&2u32.to_le_bytes()); // header "{}"
+    oversized.extend_from_slice(&(512u32 << 20).to_le_bytes()); // 512 MiB body
+    oversized.extend_from_slice(b"{}");
+    s.write_all(&oversized).unwrap();
+    let resp = read_frame(&mut s).expect("error frame");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    assert!(read_frame(&mut s).is_none());
+
+    // truncated length prefix + disconnect: clean close, no reply owed
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GDP2\x02\x01\x00\x00\x10\x00").unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(read_frame(&mut s).is_none(), "partial preamble: close without reply");
+
+    // mid-frame disconnect: preamble promises a body that never comes
+    let mut s = TcpStream::connect(addr).unwrap();
+    let frame = proto::request_to_frame(&load_req(&gen::generate(&GenConfig {
+        nrows: 12,
+        ncols: 12,
+        seed: 3,
+        ..Default::default()
+    })))
+    .unwrap();
+    s.write_all(&frame[..frame.len() / 2]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(read_frame(&mut s).is_none(), "mid-frame disconnect: close without reply");
+
+    // interleaved pipelining: a valid stats frame then a broken one in
+    // a single write — the valid request is answered before the close
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut burst = proto::request_to_frame(&Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Str("good".into())),
+        ("op", Json::Str("stats".into())),
+    ]))
+    .unwrap();
+    burst.extend_from_slice(b"GONE");
+    s.write_all(&burst).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let good = read_frame(&mut s).expect("the valid pipelined request is still answered");
+    assert_eq!(good.get("ok"), Some(&Json::Bool(true)), "{good:?}");
+    assert_eq!(good.get("id").and_then(|v| v.as_str()), Some("good"));
+    let bad = read_frame(&mut s).expect("then the framing error");
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    assert!(read_frame(&mut s).is_none());
+
+    // garbage that does not start with 'G' negotiates the JSON wire: a
+    // bad line costs only itself, the connection keeps serving
+    let mut s = TcpStream::connect(addr).unwrap();
+    let resp = json_roundtrip(&mut s, &Json::Str("not a request".into()));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    let resp = json_roundtrip(
+        &mut s,
+        &Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("stats".into()))]),
+    );
+    assert!(is_ok(&resp), "JSON connection must survive a bad line: {resp:?}");
+
+    // after all of the above, the server still serves and stops cleanly
+    let resp = json_roundtrip(
+        &mut s,
+        &Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("shutdown".into()))]),
+    );
+    assert!(is_ok(&resp));
+    server.join().unwrap();
+    service.shutdown();
+}
+
+/// Graceful drain: a shutdown pipelined behind a burst of propagates
+/// and a stats answers every request, in order, before the socket
+/// closes — and the accounting invariant `hits + misses == propagates +
+/// pending` holds in the stats taken mid-burst.
+#[test]
+fn shutdown_drains_inflight_and_queued_requests_in_order() {
+    let (addr, server, service) = start_server(
+        ServiceConfig { batch_window: Duration::ZERO, ..ServiceConfig::default() },
+        ReactorConfig::default(),
+    );
+    let inst = gen::generate(&GenConfig { nrows: 30, ncols: 30, seed: 13, ..Default::default() });
+    let mut s = TcpStream::connect(addr).unwrap();
+    let load = binary_roundtrip(&mut s, &load_req(&inst));
+    assert!(is_ok(&load), "{load:?}");
+    let session = session_of(&load);
+
+    // one write: three propagates, a stats, and the shutdown
+    let mut ids = Vec::new();
+    let mut burst = Vec::new();
+    for i in 0..3 {
+        let mut req = propagate_req(&session, &EngineSpec::new("cpu_seq").threads(1), None);
+        if let Json::Obj(map) = &mut req {
+            map.insert("id".into(), Json::Str(format!("p{i}")));
+        }
+        ids.push(format!("p{i}"));
+        burst.extend_from_slice(&proto::request_to_frame(&req).unwrap());
+    }
+    for (id, op) in [("the-stats", "stats"), ("bye", "shutdown")] {
+        burst.extend_from_slice(
+            &proto::request_to_frame(&Json::obj(vec![
+                ("v", Json::Num(1.0)),
+                ("id", Json::Str(id.into())),
+                ("op", Json::Str(op.into())),
+            ]))
+            .unwrap(),
+        );
+        ids.push(id.to_string());
+    }
+    s.write_all(&burst).unwrap();
+
+    let mut stats = None;
+    for want in &ids {
+        let resp = read_frame(&mut s).expect("drained reply");
+        assert!(is_ok(&resp), "{want}: {resp:?}");
+        assert_eq!(resp.get("id").and_then(|v| v.as_str()), Some(want.as_str()));
+        if want == "the-stats" {
+            stats = resp.get("result").cloned();
+        }
+    }
+    assert!(read_frame(&mut s).is_none(), "socket must close after the drain");
+    server.join().unwrap();
+
+    // the invariant at drain, from the mid-burst stats snapshot
+    let stats = stats.expect("stats reply captured");
+    let num = |path: &[&str]| -> f64 {
+        let mut cur = &stats;
+        for p in path {
+            cur = cur.get(p).unwrap_or_else(|| panic!("stats misses {}", path.join(".")));
+        }
+        cur.as_f64().unwrap()
+    };
+    assert_eq!(
+        num(&["sessions", "hits"]) + num(&["sessions", "misses"]),
+        num(&["requests", "propagate"]) + num(&["pending"]),
+        "hits+misses == propagates+pending must hold at drain"
+    );
+    // the reactor's own counters ride along in the stats payload
+    assert!(num(&["frontend", "accepted"]) >= 1.0);
+    assert_eq!(num(&["frontend", "requests_json"]), 0.0);
+    assert!(num(&["frontend", "requests_binary"]) >= ids.len() as f64);
+    service.shutdown();
+}
