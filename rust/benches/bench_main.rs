@@ -9,7 +9,7 @@
 //! paper's timing protocol (section 4.3). Earlier revisions timed the XLA
 //! engines setup-inclusive, which overstated their per-call cost.
 //!
-//! Five groups:
+//! Seven groups:
 //! * micro — hot-path benches per engine/kernel (per-round costs).
 //! * batch — `propagate_batch` (B branched node domains per dispatch)
 //!   vs B sequential `propagate` calls, B in {1, 8, 64}; writes the
@@ -25,16 +25,21 @@
 //!   the u32/SoA sweep layout vs the usize-CSR instance sweep, on the
 //!   integer-exact `int_chain`/`int_knapsack` families at million-row
 //!   scale (smoke shrinks the shapes); writes `BENCH_precision.json`.
+//! * bnb — the branch-and-bound driver: solo vs speculatively batched
+//!   node flushes, local evaluator vs the in-process service backend at
+//!   1 vs 4 shards, all legs asserted tree-identical by digest; writes
+//!   `BENCH_bnb.json`.
 //! * paper — one end-to-end bench per paper table/figure, delegating to
 //!   the experiment harness on a reduced suite and printing the same rows
 //!   the paper reports.
 //!
 //! Filters: `cargo bench -- micro`, `cargo bench -- batch`,
 //! `cargo bench -- pb`, `cargo bench -- service`,
-//! `cargo bench -- precision`, `cargo bench -- table1` etc.
-//! `cargo bench -- smoke` is the CI quick mode: the pb, service and
-//! precision groups on tiny shapes only (seconds, still writes the
-//! BENCH_*.json files).
+//! `cargo bench -- precision`, `cargo bench -- bnb`,
+//! `cargo bench -- table1` etc.
+//! `cargo bench -- smoke` is the CI quick mode: the pb, service,
+//! precision and bnb groups on tiny shapes only (seconds, still writes
+//! the BENCH_*.json files).
 
 use gdp::experiments;
 use gdp::gen::{branched_nodes, generate, Family, GenConfig};
@@ -768,6 +773,132 @@ fn precision_bench(smoke: bool) {
     }
 }
 
+/// The branch-and-bound bench: best-first solves of one known-optimum
+/// `opt_knapsack` instance, solo (`--batch 1`) vs speculatively batched
+/// (`--batch 8`) node flushes, on the in-process local evaluator and on
+/// the service backend at 1 vs 4 shards. Every leg must walk the
+/// bit-identical tree (same digest) and prove the family's greedy
+/// optimum — the timings compare transports, never different searches.
+/// Writes BENCH_bnb.json; `smoke` shrinks the instance for CI.
+fn bnb_bench(smoke: bool) {
+    use gdp::bnb::{solve, LocalEvaluator, ServiceEvaluator, SolveConfig, SolveStatus};
+    use gdp::service::{Service, ServiceConfig};
+    use std::time::Duration;
+
+    println!("\n== bnb: solo vs batched node flushes x local vs sharded service ==");
+    let (nrows, ncols) = if smoke { (20usize, 10usize) } else { (60, 14) };
+    let inst = generate(&GenConfig {
+        family: Family::OptKnapsack,
+        nrows,
+        ncols,
+        seed: 1,
+        ..Default::default()
+    });
+    let optimum = gdp::gen::known_optimum(&inst).expect("opt_knapsack carries a known optimum");
+    let iters = if smoke { 3 } else { 5 };
+    let registry = Registry::with_defaults();
+    let spec = EngineSpec::new("cpu_seq");
+    let mut records: Vec<Json> = Vec::new();
+    let mut digests: Vec<(String, u64)> = Vec::new();
+
+    // binary domains cap the tree at 2^(ncols+1) nodes; stay above it so
+    // every leg proves exhaustion
+    let config = |batch: usize| SolveConfig { batch, node_limit: 40_000, ..Default::default() };
+    let check = |label: &str, r: &gdp::bnb::SolveResult| {
+        assert_eq!(r.status, SolveStatus::Exhausted, "bnb/{label}: tree not exhausted");
+        assert!(
+            r.incumbent.is_some_and(|v| (v - optimum).abs() <= 1e-6),
+            "bnb/{label}: incumbent {:?} != known optimum {optimum}",
+            r.incumbent
+        );
+    };
+
+    // ---- local evaluator: one prepared session, direct flushes
+    {
+        let engine = registry.create(&spec).expect("cpu_seq");
+        let mut evaluator = LocalEvaluator::prepare(engine.as_ref(), &inst).expect("prepare");
+        for batch in [1usize, 8] {
+            let cfg = config(batch);
+            let r = solve(&inst, &mut evaluator, &cfg).expect("solve");
+            let label = format!("local/b{batch}");
+            check(&label, &r);
+            let (_, median, _) = measure(1, iters, || {
+                let _ = solve(&inst, &mut evaluator, &cfg).expect("solve");
+            });
+            println!(
+                "bench bnb/{label:24} nodes {:>6}  flushes {:>6}  solve {:>10}",
+                r.nodes,
+                r.flushes,
+                secs(median)
+            );
+            digests.push((label, r.digest));
+            records.push(Json::obj(vec![
+                ("mode", Json::Str("local".to_string())),
+                ("engine", Json::Str("cpu_seq".to_string())),
+                ("batch", Json::Num(batch as f64)),
+                ("solve_s", Json::Num(median)),
+            ]));
+        }
+    }
+
+    // ---- service evaluator: same flushes through the shard scheduler
+    for shards in [1usize, 4] {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::ZERO,
+            shards,
+            ..ServiceConfig::default()
+        });
+        let mut evaluator =
+            ServiceEvaluator::load(service.handle(), &inst, spec.clone()).expect("service load");
+        for batch in [1usize, 8] {
+            let cfg = config(batch);
+            let r = solve(&inst, &mut evaluator, &cfg).expect("solve");
+            let label = format!("service{shards}/b{batch}");
+            check(&label, &r);
+            let (_, median, _) = measure(1, iters, || {
+                let _ = solve(&inst, &mut evaluator, &cfg).expect("solve");
+            });
+            println!(
+                "bench bnb/{label:24} nodes {:>6}  flushes {:>6}  solve {:>10}",
+                r.nodes,
+                r.flushes,
+                secs(median)
+            );
+            digests.push((label, r.digest));
+            records.push(Json::obj(vec![
+                ("mode", Json::Str("service".to_string())),
+                ("engine", Json::Str("cpu_seq".to_string())),
+                ("shards", Json::Num(shards as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("solve_s", Json::Num(median)),
+            ]));
+        }
+        service.shutdown();
+    }
+
+    // every leg walked the identical tree, or the timings are meaningless
+    let reference = digests[0].1;
+    for (label, digest) in &digests {
+        assert_eq!(
+            *digest,
+            reference,
+            "bnb/{label}: tree digest {digest:016x} != {reference:016x}"
+        );
+    }
+    println!("bench bnb: tree digest {reference:016x} identical across {} legs", digests.len());
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bnb".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("instance", Json::Str(inst.name.clone())),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_bnb.json", doc.to_string() + "\n") {
+        Ok(()) => println!("wrote BENCH_bnb.json"),
+        Err(e) => println!("(could not write BENCH_bnb.json: {e})"),
+    }
+}
+
 fn paper(filter: Option<&str>) {
     // reduced suite: every table/figure regenerated end-to-end
     // fig5/fig6 rerun the XLA engine several times per instance; the bench
@@ -803,10 +934,12 @@ fn main() {
         Some("pb") => pb_bench(false),
         Some("service") => service_bench(false),
         Some("precision") => precision_bench(false),
+        Some("bnb") => bnb_bench(false),
         Some("smoke") => {
             pb_bench(true);
             service_bench(true);
             precision_bench(true);
+            bnb_bench(true);
         }
         Some(f) => paper(Some(f)),
         None => {
@@ -815,6 +948,7 @@ fn main() {
             pb_bench(false);
             service_bench(false);
             precision_bench(false);
+            bnb_bench(false);
             paper(None);
         }
     }

@@ -1,0 +1,258 @@
+//! Node evaluation backends for the branch-and-bound driver: one trait,
+//! three interchangeable transports (in-process session, in-process
+//! service handle, remote wire client) — all proven tree-identical by
+//! `tests/bnb_differential.rs`, because each per-node result equals what
+//! an independent `propagate(_warm)` call from the same start would
+//! produce.
+
+use crate::instance::{Bounds, MipInstance};
+use crate::propagation::registry::EngineSpec;
+use crate::propagation::{Engine, PreparedProblem, Status};
+use crate::service::{PropagateRequest, ServiceHandle};
+
+/// What one node propagation produced — the slice of
+/// [`crate::propagation::PropResult`] the search loop consumes (no
+/// timings: the tree must not depend on the clock).
+#[derive(Debug, Clone)]
+pub struct NodeOutcome {
+    pub bounds: Bounds,
+    pub status: Status,
+    pub rounds: u32,
+}
+
+/// A backend that propagates a slice of frontier nodes in one flush.
+///
+/// Contract: `starts[i]` is node `i`'s branched box and `seeds[i]` the
+/// variables its branching decisions changed relative to the parent's
+/// propagated fixpoint. An empty seed set means a cold propagation (the
+/// root); a non-empty one a warm re-propagation — backends must never
+/// translate an empty seed set into a warm call, which would mark no
+/// constraints at all. Outcomes are positionally aligned with `starts`,
+/// and each must equal an independent `propagate(_warm)` call from the
+/// same start (bit-exact for deterministic engines) — the property that
+/// makes the search tree independent of batch size and backend.
+pub trait NodeEvaluator {
+    /// Backend name for logs and result tables.
+    fn name(&self) -> &'static str;
+
+    fn evaluate(
+        &mut self,
+        starts: &[Bounds],
+        seeds: &[Vec<usize>],
+    ) -> Result<Vec<NodeOutcome>, String>;
+}
+
+/// Split a flush into cold (empty seed set) and warm sub-calls and
+/// reassemble the outcomes in request order — shared by the local and
+/// service backends. `eval_cold` / `eval_warm` receive the sub-slices.
+fn partition_flush<E>(
+    starts: &[Bounds],
+    seeds: &[Vec<usize>],
+    mut eval_cold: impl FnMut(Vec<Bounds>) -> Result<Vec<NodeOutcome>, E>,
+    mut eval_warm: impl FnMut(Vec<Bounds>, Vec<Vec<usize>>) -> Result<Vec<NodeOutcome>, E>,
+) -> Result<Vec<NodeOutcome>, E> {
+    let cold_idx: Vec<usize> = (0..starts.len()).filter(|&i| seeds[i].is_empty()).collect();
+    let warm_idx: Vec<usize> = (0..starts.len()).filter(|&i| !seeds[i].is_empty()).collect();
+    let cold = if cold_idx.is_empty() {
+        Vec::new()
+    } else {
+        eval_cold(cold_idx.iter().map(|&i| starts[i].clone()).collect())?
+    };
+    let warm = if warm_idx.is_empty() {
+        Vec::new()
+    } else {
+        eval_warm(
+            warm_idx.iter().map(|&i| starts[i].clone()).collect(),
+            warm_idx.iter().map(|&i| seeds[i].clone()).collect(),
+        )?
+    };
+    let mut out: Vec<Option<NodeOutcome>> = vec![None; starts.len()];
+    for (&i, o) in cold_idx.iter().zip(cold) {
+        out[i] = Some(o);
+    }
+    for (&i, o) in warm_idx.iter().zip(warm) {
+        out[i] = Some(o);
+    }
+    Ok(out.into_iter().flatten().collect())
+}
+
+/// In-process backend: one prepared session, flushes go straight through
+/// `propagate_batch(_warm)`. Warm-start reuse parent→child comes from
+/// the session itself — every child start is its parent's propagated
+/// fixpoint plus one branched bound, with the branch variable as the
+/// warm seed.
+pub struct LocalEvaluator<'a> {
+    session: Box<dyn PreparedProblem + 'a>,
+}
+
+impl<'a> LocalEvaluator<'a> {
+    /// Pay `prepare` once; every flush reuses the session.
+    pub fn prepare(
+        engine: &dyn Engine,
+        inst: &'a MipInstance,
+    ) -> Result<LocalEvaluator<'a>, String> {
+        let session = engine
+            .prepare(inst)
+            .map_err(|e| format!("{}: prepare failed: {e:#}", engine.name()))?;
+        Ok(LocalEvaluator { session })
+    }
+}
+
+impl NodeEvaluator for LocalEvaluator<'_> {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn evaluate(
+        &mut self,
+        starts: &[Bounds],
+        seeds: &[Vec<usize>],
+    ) -> Result<Vec<NodeOutcome>, String> {
+        let session = &mut self.session;
+        partition_flush(
+            starts,
+            seeds,
+            |cold| {
+                Ok(session
+                    .propagate_batch(&cold)
+                    .into_iter()
+                    .map(|r| NodeOutcome { bounds: r.bounds, status: r.status, rounds: r.rounds })
+                    .collect())
+            },
+            |warm, warm_seeds| {
+                Ok(session
+                    .propagate_batch_warm(&warm, &warm_seeds)
+                    .into_iter()
+                    .map(|r| NodeOutcome { bounds: r.bounds, status: r.status, rounds: r.rounds })
+                    .collect())
+            },
+        )
+    }
+}
+
+/// In-process service backend: flushes are submitted through
+/// [`ServiceHandle::propagate_many`], so the shard's micro-batching
+/// scheduler coalesces the slice into one `propagate_batch(_warm)`
+/// dispatch — the same execution path a remote client exercises, minus
+/// the wire. The bench's 1-vs-4-shard legs run on this backend.
+pub struct ServiceEvaluator {
+    handle: ServiceHandle,
+    session: u64,
+    spec: EngineSpec,
+}
+
+impl ServiceEvaluator {
+    /// Load `inst` into the running service and bind flushes to
+    /// `(session, spec)`.
+    pub fn load(
+        handle: ServiceHandle,
+        inst: &MipInstance,
+        spec: EngineSpec,
+    ) -> Result<ServiceEvaluator, String> {
+        let reply = handle.load(inst.clone()).map_err(|e| format!("service load: {e}"))?;
+        Ok(ServiceEvaluator { handle, session: reply.session, spec })
+    }
+}
+
+impl NodeEvaluator for ServiceEvaluator {
+    fn name(&self) -> &'static str {
+        "service"
+    }
+
+    fn evaluate(
+        &mut self,
+        starts: &[Bounds],
+        seeds: &[Vec<usize>],
+    ) -> Result<Vec<NodeOutcome>, String> {
+        let reqs: Vec<PropagateRequest> = starts
+            .iter()
+            .zip(seeds)
+            .map(|(start, seed)| {
+                let mut req = PropagateRequest::cold(self.session)
+                    .with_spec(self.spec.clone())
+                    .with_start(start.clone());
+                if !seed.is_empty() {
+                    req = req.warm(seed.clone());
+                }
+                req
+            })
+            .collect();
+        Ok(self
+            .handle
+            .propagate_many(reqs)
+            .map_err(|e| format!("service propagate: {e}"))?
+            .into_iter()
+            .map(|r| NodeOutcome { bounds: r.bounds, status: r.status, rounds: r.rounds })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, Family, GenConfig};
+    use crate::propagation::seq::SeqEngine;
+    use crate::service::{Service, ServiceConfig};
+
+    fn inst() -> MipInstance {
+        gen::generate(&GenConfig {
+            family: Family::OptKnapsack,
+            nrows: 10,
+            ncols: 8,
+            seed: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn local_and_service_backends_agree_bitwise() {
+        let i = inst();
+        let root = Bounds::of(&i);
+        let nodes = gen::branched_nodes(&i, &root, 6, 9);
+        let mut starts = vec![root];
+        let mut seeds = vec![Vec::new()];
+        for n in &nodes {
+            starts.push(n.bounds.clone());
+            seeds.push(n.seed_vars.clone());
+        }
+
+        let engine = SeqEngine::new();
+        let mut local = LocalEvaluator::prepare(&engine, &i).unwrap();
+        let a = local.evaluate(&starts, &seeds).unwrap();
+
+        let service = Service::start(ServiceConfig::default());
+        let mut served =
+            ServiceEvaluator::load(service.handle(), &i, EngineSpec::new("cpu_seq")).unwrap();
+        let b = served.evaluate(&starts, &seeds).unwrap();
+        service.shutdown();
+
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.rounds, y.rounds);
+            assert_eq!(x.bounds.lb, y.bounds.lb);
+            assert_eq!(x.bounds.ub, y.bounds.ub);
+        }
+    }
+
+    #[test]
+    fn empty_seed_sets_run_cold_not_warm() {
+        // a flush mixing cold and warm entries must keep positional
+        // alignment through the cold/warm partition
+        let i = inst();
+        let root = Bounds::of(&i);
+        let engine = SeqEngine::new();
+        let mut local = LocalEvaluator::prepare(&engine, &i).unwrap();
+        let cold_alone = local.evaluate(&[root.clone()], &[Vec::new()]).unwrap();
+        let node = &gen::branched_nodes(&i, &cold_alone[0].bounds, 1, 3)[0];
+        let mixed = local
+            .evaluate(
+                &[node.bounds.clone(), root.clone()],
+                &[node.seed_vars.clone(), Vec::new()],
+            )
+            .unwrap();
+        assert_eq!(mixed[1].bounds.lb, cold_alone[0].bounds.lb);
+        assert_eq!(mixed[1].bounds.ub, cold_alone[0].bounds.ub);
+        assert_eq!(mixed[1].rounds, cold_alone[0].rounds);
+    }
+}

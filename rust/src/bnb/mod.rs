@@ -1,0 +1,834 @@
+//! Best-first branch-and-bound over [`MipInstance`] with domain
+//! propagation as the node-pruning engine — the paper's section 5
+//! outlook ("many B&B node domains over one shared matrix") driven as a
+//! real closed-loop search (DESIGN.md section 10).
+//!
+//! Architecture:
+//!
+//! * [`solve`] — the deterministic best-first driver: a binary-heap
+//!   frontier keyed on the LP-free objective bound of each node's
+//!   *branched* (pre-propagation) box, objective-bound pruning against
+//!   the incumbent, integral-point incumbent extraction with an explicit
+//!   feasibility check, and pluggable [`BranchRule`]s.
+//! * [`evaluator`] — the [`NodeEvaluator`] seam: nodes are propagated in
+//!   flushed slices through `propagate_batch(_warm)`, either on an
+//!   in-process prepared session ([`LocalEvaluator`]), through a running
+//!   [`crate::service::ServiceHandle`] ([`ServiceEvaluator`]), or as a
+//!   wire client of `gdp serve` ([`remote::RemoteEvaluator`]).
+//! * [`remote`] — the v1/v2 wire client backend (panic-free; enrolled in
+//!   the `no-panic-request-path` lint).
+//!
+//! # Batch invariance
+//!
+//! The tree is a pure function of `(instance, seed, engine, branch
+//! rule)` — independent of the batch size and of which evaluator backend
+//! ran the propagations. The driver always *expands* exactly one node at
+//! a time, in strict best-first order (priority: pre-propagation bound,
+//! ties broken by node id = creation order). Batching is speculative
+//! prefetch only: when the popped node has no cached evaluation, up to
+//! `batch - 1` additional next-best frontier nodes ride the same
+//! `propagate_batch(_warm)` flush and their results are cached for their
+//! own later pop. Because every batched result equals what an
+//! independent `propagate` call from the same start would produce (the
+//! documented [`crate::propagation::PreparedProblem::propagate_batch`]
+//! contract), a cached result is indistinguishable from a fresh one —
+//! so `--batch 1` and `--batch 16` walk bit-identical trees, and so do
+//! the local and remote backends (served propagation is proven
+//! bit-identical to direct session calls by the service differential
+//! suites). A wall-clock `time_limit` is the one determinism-breaking
+//! knob: it cuts the search at a timer tick, so differential runs must
+//! not set it.
+
+pub mod evaluator;
+pub mod remote;
+
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Instant;
+
+use crate::instance::{Bounds, MipInstance, VarType};
+use crate::numerics::{FEAS_TOL, INT_ROUND_EPS};
+use crate::propagation::Status;
+use crate::util::rng::Rng;
+
+pub use evaluator::{LocalEvaluator, NodeEvaluator, NodeOutcome, ServiceEvaluator};
+pub use remote::RemoteEvaluator;
+
+/// Margin for objective-bound pruning: a node survives only if its bound
+/// improves on the incumbent by more than this.
+pub const PRUNE_TOL: f64 = 1e-9;
+
+/// How the driver picks the branching variable of an expanded node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchRule {
+    /// Integer variable whose domain midpoint is closest to half-integral
+    /// (ties: lowest index); falls back to the widest branchable variable
+    /// when no integer variable is branchable.
+    MostFractional,
+    /// Uniformly pseudo-random branchable variable, drawn from an
+    /// [`Rng`] seeded by `solve seed XOR node id` — a pure function of
+    /// the node, so the choice replays identically across runs, batch
+    /// sizes and backends.
+    PseudoRandom,
+    /// Widest branchable variable in the row most violated at the box
+    /// midpoint (ties: lowest row / lowest column index); falls back to
+    /// the widest branchable variable when no violated row contains one.
+    MaxViolation,
+}
+
+impl BranchRule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BranchRule::MostFractional => "most-fractional",
+            BranchRule::PseudoRandom => "pseudo-random",
+            BranchRule::MaxViolation => "max-violation",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BranchRule, String> {
+        match s {
+            "most-fractional" | "most_fractional" => Ok(BranchRule::MostFractional),
+            "pseudo-random" | "pseudo_random" | "random" => Ok(BranchRule::PseudoRandom),
+            "max-violation" | "max_violation" => Ok(BranchRule::MaxViolation),
+            other => Err(format!(
+                "unknown branch rule {other:?} (expected most-fractional, \
+                 pseudo-random or max-violation)"
+            )),
+        }
+    }
+}
+
+/// Search knobs. `batch` only changes how many propagations share a
+/// flush; `time_limit` is the one knob that breaks run-to-run
+/// determinism (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SolveConfig {
+    /// Max nodes per evaluator flush (>= 1).
+    pub batch: usize,
+    /// Stop after expanding this many nodes.
+    pub node_limit: usize,
+    /// Wall-clock cutoff in seconds (`None` = no cutoff).
+    pub time_limit: Option<f64>,
+    pub branch_rule: BranchRule,
+    /// Seed for the pseudo-random branch rule.
+    pub seed: u64,
+}
+
+impl Default for SolveConfig {
+    fn default() -> Self {
+        SolveConfig {
+            batch: 1,
+            node_limit: 10_000,
+            time_limit: None,
+            branch_rule: BranchRule::MostFractional,
+            seed: 0,
+        }
+    }
+}
+
+/// Why the search stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Frontier exhausted: the incumbent (if any) is proven optimal.
+    Exhausted,
+    /// Node limit reached with frontier nodes remaining.
+    NodeLimit,
+    /// Time limit reached with frontier nodes remaining.
+    TimeLimit,
+}
+
+impl SolveStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolveStatus::Exhausted => "exhausted",
+            SolveStatus::NodeLimit => "node-limit",
+            SolveStatus::TimeLimit => "time-limit",
+        }
+    }
+}
+
+/// What the driver did with one expanded node — one record per pop, the
+/// unit of the pruning trace that [`SolveResult::digest`] hashes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeAction {
+    /// Pruned against the incumbent before evaluation (branched-box bound).
+    PrunedBeforeEval,
+    /// Propagation produced an empty domain.
+    Infeasible,
+    /// Pruned against the incumbent after evaluation (propagated-box bound).
+    PrunedAfterEval,
+    /// Every variable fixed by propagation: a leaf (its point either
+    /// became the incumbent or was dominated).
+    Leaf,
+    /// No branchable variable despite unfixed ones (infinite domains):
+    /// fathomed without children.
+    Fathomed,
+    /// Branched into two children.
+    Branched,
+}
+
+impl NodeAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeAction::PrunedBeforeEval => "pruned-before-eval",
+            NodeAction::Infeasible => "infeasible",
+            NodeAction::PrunedAfterEval => "pruned-after-eval",
+            NodeAction::Leaf => "leaf",
+            NodeAction::Fathomed => "fathomed",
+            NodeAction::Branched => "branched",
+        }
+    }
+}
+
+/// One entry of the deterministic pruning trace: everything is a pure
+/// function of the search decisions (no timings), so the trace — and its
+/// digest — compares bit-equal across runs, batch sizes and backends.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub id: u64,
+    /// Parent node id (the root's parent is itself).
+    pub parent: u64,
+    pub depth: u32,
+    /// Pre-propagation (branched box) objective bound.
+    pub pre_bound: f64,
+    /// Post-propagation objective bound (pre_bound if never evaluated).
+    pub post_bound: f64,
+    /// Propagation status (`None` when pruned before evaluation).
+    pub status: Option<Status>,
+    /// Propagation rounds (0 when pruned before evaluation).
+    pub rounds: u32,
+    pub action: NodeAction,
+    /// Branching variable (`usize::MAX` when the node was not branched).
+    pub branch_var: usize,
+}
+
+/// Result of one [`solve`] run.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub status: SolveStatus,
+    /// Nodes expanded (popped and processed; prefetched-but-unexpanded
+    /// nodes are not counted).
+    pub nodes: usize,
+    /// Nodes created (root + children pushed).
+    pub created: usize,
+    /// Propagations actually executed through the evaluator.
+    pub evaluations: usize,
+    /// Evaluator flushes issued.
+    pub flushes: usize,
+    /// Best feasible objective value found (minimization).
+    pub incumbent: Option<f64>,
+    /// The incumbent point itself.
+    pub incumbent_point: Option<Vec<f64>>,
+    /// Nodes expanded when the final incumbent was installed.
+    pub nodes_to_incumbent: Option<usize>,
+    /// Wall-clock seconds when the final incumbent was installed.
+    pub secs_to_incumbent: Option<f64>,
+    /// Best lower bound over the remaining frontier (equals the incumbent
+    /// when the frontier is exhausted and an incumbent exists; `+inf`
+    /// when the whole tree was proven infeasible).
+    pub best_bound: f64,
+    /// Total wall-clock seconds of the search.
+    pub secs: f64,
+    /// The deterministic pruning trace, one record per expanded node.
+    pub trace: Vec<TraceRecord>,
+    /// FNV-1a digest of the pruning trace (node count, incumbent bits,
+    /// per-node decisions) — the value the differential suite compares.
+    pub digest: u64,
+}
+
+/// A search node: the *branched* (un-propagated) box plus the variables
+/// the branching decisions changed relative to the parent's propagated
+/// fixpoint (the warm-start seed set of the parent→child contract).
+struct Node {
+    parent: u64,
+    depth: u32,
+    bounds: Bounds,
+    seed_vars: Vec<usize>,
+    /// LP-free objective bound of `bounds` (the heap priority).
+    pre_bound: f64,
+}
+
+/// Frontier entry: best-first = lowest bound pops first, ties broken by
+/// creation order (lowest id). `BinaryHeap` is a max-heap, so the `Ord`
+/// is reversed.
+struct FrontierEntry {
+    bound: f64,
+    id: u64,
+}
+
+impl PartialEq for FrontierEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound.to_bits() == other.bound.to_bits() && self.id == other.id
+    }
+}
+impl Eq for FrontierEntry {}
+impl PartialOrd for FrontierEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for FrontierEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed on both keys: the max-heap then pops the lowest
+        // bound, and among equal bounds the lowest id
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+/// LP-free objective lower bound of a box (minimization): each variable
+/// sits at whichever bound its objective coefficient favours. `-inf`
+/// when a favoured bound is infinite; 0-coefficient variables contribute
+/// nothing regardless of their bounds.
+pub fn box_bound(obj: &[f64], bounds: &Bounds) -> f64 {
+    let mut sum = 0.0;
+    for (j, &c) in obj.iter().enumerate() {
+        if c > 0.0 {
+            sum += c * bounds.lb[j];
+        } else if c < 0.0 {
+            sum += c * bounds.ub[j];
+        }
+    }
+    if sum.is_nan() {
+        // inf - inf across terms: no usable bound
+        f64::NEG_INFINITY
+    } else {
+        sum
+    }
+}
+
+/// The objective-minimizing corner of a box: `lb` where the coefficient
+/// is nonnegative, `ub` where it is negative (integer variables keep the
+/// propagated integral bounds).
+fn corner_point(obj: &[f64], bounds: &Bounds) -> Vec<f64> {
+    obj.iter()
+        .enumerate()
+        .map(|(j, &c)| if c < 0.0 { bounds.ub[j] } else { bounds.lb[j] })
+        .collect()
+}
+
+/// Is `x` a feasible (and integral where required) point of `inst`?
+fn point_feasible(inst: &MipInstance, x: &[f64]) -> bool {
+    for (j, &v) in x.iter().enumerate() {
+        if !v.is_finite() {
+            return false;
+        }
+        if inst.var_types[j] == VarType::Integer && (v - v.round()).abs() > INT_ROUND_EPS {
+            return false;
+        }
+    }
+    for r in 0..inst.nrows() {
+        let (cols, vals) = inst.matrix.row(r);
+        let activity: f64 = cols.iter().zip(vals).map(|(&c, &a)| a * x[c as usize]).sum();
+        if activity < inst.lhs[r] - FEAS_TOL || activity > inst.rhs[r] + FEAS_TOL {
+            return false;
+        }
+    }
+    true
+}
+
+/// Objective value of a point.
+fn obj_value(obj: &[f64], x: &[f64]) -> f64 {
+    obj.iter().zip(x).map(|(&c, &v)| c * v).sum()
+}
+
+/// Can this variable's domain be split at its midpoint? Requires finite
+/// bounds; integer domains need at least two values in them.
+fn branchable(vt: VarType, l: f64, u: f64) -> bool {
+    if !(l.is_finite() && u.is_finite()) {
+        return false;
+    }
+    match vt {
+        VarType::Integer => u - l >= 1.0 - INT_ROUND_EPS,
+        VarType::Continuous => u - l > FEAS_TOL,
+    }
+}
+
+/// Pick the branching variable of an expanded node (over its propagated
+/// box), or `None` when nothing is branchable.
+fn pick_branch_var(
+    inst: &MipInstance,
+    bounds: &Bounds,
+    rule: BranchRule,
+    seed: u64,
+    id: u64,
+) -> Option<usize> {
+    let n = inst.ncols();
+    let is_branchable = |j: usize| branchable(inst.var_types[j], bounds.lb[j], bounds.ub[j]);
+    match rule {
+        BranchRule::MostFractional => {
+            // integer variable with the most-fractional midpoint first
+            let mut best: Option<(f64, usize)> = None;
+            for j in 0..n {
+                if inst.var_types[j] != VarType::Integer || !is_branchable(j) {
+                    continue;
+                }
+                let mid = (bounds.lb[j] + bounds.ub[j]) / 2.0;
+                let dist = (mid - mid.floor() - 0.5).abs(); // 0 = half-integral
+                if best.is_none_or(|(d, _)| dist < d) {
+                    best = Some((dist, j));
+                }
+            }
+            if let Some((_, j)) = best {
+                return Some(j);
+            }
+            widest_branchable(inst, bounds)
+        }
+        BranchRule::PseudoRandom => {
+            let candidates: Vec<usize> = (0..n).filter(|&j| is_branchable(j)).collect();
+            if candidates.is_empty() {
+                return None;
+            }
+            // a pure function of (solve seed, node id): replays
+            // identically whatever order nodes were evaluated in
+            let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            Some(candidates[rng.below(candidates.len())])
+        }
+        BranchRule::MaxViolation => {
+            // midpoint of the box, with infinite bounds clamped
+            let mid: Vec<f64> = (0..n)
+                .map(|j| {
+                    let (l, u) = (bounds.lb[j], bounds.ub[j]);
+                    match (l.is_finite(), u.is_finite()) {
+                        (true, true) => (l + u) / 2.0,
+                        (true, false) => l,
+                        (false, true) => u,
+                        (false, false) => 0.0,
+                    }
+                })
+                .collect();
+            let mut best: Option<(f64, usize)> = None; // (violation, row)
+            for r in 0..inst.nrows() {
+                let (cols, vals) = inst.matrix.row(r);
+                if !cols.iter().any(|&c| is_branchable(c as usize)) {
+                    continue;
+                }
+                let act: f64 = cols.iter().zip(vals).map(|(&c, &a)| a * mid[c as usize]).sum();
+                let viol = (act - inst.rhs[r]).max(inst.lhs[r] - act).max(0.0);
+                if best.is_none_or(|(v, _)| viol > v) {
+                    best = Some((viol, r));
+                }
+            }
+            let (_, row) = best?;
+            let (cols, _) = inst.matrix.row(row);
+            let mut widest: Option<(f64, usize)> = None;
+            for &c in cols {
+                let j = c as usize;
+                if !is_branchable(j) {
+                    continue;
+                }
+                let w = bounds.ub[j] - bounds.lb[j];
+                if widest.is_none_or(|(bw, _)| w > bw) {
+                    widest = Some((w, j));
+                }
+            }
+            widest.map(|(_, j)| j)
+        }
+    }
+}
+
+/// Widest branchable variable (ties: lowest index).
+fn widest_branchable(inst: &MipInstance, bounds: &Bounds) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for j in 0..inst.ncols() {
+        if !branchable(inst.var_types[j], bounds.lb[j], bounds.ub[j]) {
+            continue;
+        }
+        let w = bounds.ub[j] - bounds.lb[j];
+        if best.is_none_or(|(bw, _)| w > bw) {
+            best = Some((w, j));
+        }
+    }
+    best.map(|(_, j)| j)
+}
+
+/// Split a propagated box at variable `v`'s midpoint into the (down, up)
+/// child boxes. Integer domains split at `floor(mid)` / `floor(mid)+1`,
+/// continuous at the midpoint itself.
+fn split(bounds: &Bounds, vt: VarType, v: usize) -> (Bounds, Bounds) {
+    let (l, u) = (bounds.lb[v], bounds.ub[v]);
+    let mid = (l + u) / 2.0;
+    let mut down = bounds.clone();
+    let mut up = bounds.clone();
+    match vt {
+        VarType::Integer => {
+            down.ub[v] = mid.floor().max(l);
+            up.lb[v] = (mid.floor() + 1.0).min(u);
+        }
+        VarType::Continuous => {
+            down.ub[v] = mid;
+            up.lb[v] = mid;
+        }
+    }
+    (down, up)
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// FNV-1a over the pruning trace plus the headline answers — everything
+/// a tree-identity claim cares about, nothing timing-dependent.
+fn trace_digest(trace: &[TraceRecord], incumbent: Option<f64>, nodes: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv1a(&mut h, &(nodes as u64).to_le_bytes());
+    fnv1a(&mut h, &incumbent.map_or(u64::MAX, f64::to_bits).to_le_bytes());
+    for t in trace {
+        fnv1a(&mut h, &t.id.to_le_bytes());
+        fnv1a(&mut h, &t.parent.to_le_bytes());
+        fnv1a(&mut h, &t.pre_bound.to_bits().to_le_bytes());
+        fnv1a(&mut h, &t.post_bound.to_bits().to_le_bytes());
+        let status = match t.status {
+            None => 0u8,
+            Some(Status::Converged) => 1,
+            Some(Status::MaxRounds) => 2,
+            Some(Status::Infeasible) => 3,
+        };
+        fnv1a(&mut h, &[status]);
+        fnv1a(&mut h, &t.rounds.to_le_bytes());
+        fnv1a(&mut h, &[t.action as u8]);
+        fnv1a(&mut h, &(t.branch_var as u64).to_le_bytes());
+    }
+    h
+}
+
+/// Run a best-first branch-and-bound search on `inst`, propagating node
+/// boxes through `evaluator`. Returns an error only when the evaluator
+/// itself fails (a dead server, a wire error); search-side conditions
+/// (limits, infeasibility) are reported in the [`SolveResult`].
+pub fn solve(
+    inst: &MipInstance,
+    evaluator: &mut dyn NodeEvaluator,
+    config: &SolveConfig,
+) -> Result<SolveResult, String> {
+    let batch = config.batch.max(1);
+    let started = Instant::now();
+
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut frontier: BinaryHeap<FrontierEntry> = BinaryHeap::new();
+    let mut cache: HashMap<u64, NodeOutcome> = HashMap::new();
+    let mut trace: Vec<TraceRecord> = Vec::new();
+
+    let root_bounds = Bounds::of(inst);
+    let root_bound = box_bound(&inst.obj, &root_bounds);
+    nodes.push(Node {
+        parent: 0,
+        depth: 0,
+        bounds: root_bounds,
+        seed_vars: Vec::new(),
+        pre_bound: root_bound,
+    });
+    frontier.push(FrontierEntry { bound: root_bound, id: 0 });
+
+    let mut incumbent: Option<f64> = None;
+    let mut incumbent_point: Option<Vec<f64>> = None;
+    let mut nodes_to_incumbent: Option<usize> = None;
+    let mut secs_to_incumbent: Option<f64> = None;
+    let mut expanded = 0usize;
+    let mut evaluations = 0usize;
+    let mut flushes = 0usize;
+    let mut status = SolveStatus::Exhausted;
+
+    while let Some(entry) = frontier.pop() {
+        if expanded >= config.node_limit {
+            frontier.push(entry);
+            status = SolveStatus::NodeLimit;
+            break;
+        }
+        if let Some(limit) = config.time_limit {
+            if started.elapsed().as_secs_f64() >= limit {
+                frontier.push(entry);
+                status = SolveStatus::TimeLimit;
+                break;
+            }
+        }
+        let id = entry.id;
+        expanded += 1;
+
+        // objective-bound pruning on the branched-box bound, before
+        // spending a propagation on the node
+        let prunable = |bound: f64, inc: &Option<f64>| inc.is_some_and(|v| bound >= v - PRUNE_TOL);
+        if prunable(entry.bound, &incumbent) {
+            trace.push(TraceRecord {
+                id,
+                parent: nodes[id as usize].parent,
+                depth: nodes[id as usize].depth,
+                pre_bound: entry.bound,
+                post_bound: entry.bound,
+                status: None,
+                rounds: 0,
+                action: NodeAction::PrunedBeforeEval,
+                branch_var: usize::MAX,
+            });
+            continue;
+        }
+
+        // ensure the node is evaluated; an uncached node triggers a
+        // flush that speculatively prefetches the next-best frontier
+        // nodes into the same propagate_batch(_warm) dispatch
+        if !cache.contains_key(&id) {
+            let mut slice = vec![id];
+            let mut put_back = Vec::new();
+            while slice.len() < batch {
+                match frontier.pop() {
+                    Some(extra) => {
+                        // already-evaluated or already-prunable extras
+                        // would waste a propagation; skipping them never
+                        // changes the tree (they are re-judged at their
+                        // own pop)
+                        if !cache.contains_key(&extra.id)
+                            && !prunable(extra.bound, &incumbent)
+                        {
+                            slice.push(extra.id);
+                        }
+                        put_back.push(extra);
+                    }
+                    None => break,
+                }
+            }
+            for extra in put_back {
+                frontier.push(extra);
+            }
+            let starts: Vec<Bounds> =
+                slice.iter().map(|&i| nodes[i as usize].bounds.clone()).collect();
+            let seeds: Vec<Vec<usize>> =
+                slice.iter().map(|&i| nodes[i as usize].seed_vars.clone()).collect();
+            let outcomes = evaluator.evaluate(&starts, &seeds)?;
+            if outcomes.len() != slice.len() {
+                return Err(format!(
+                    "evaluator returned {} outcomes for {} nodes",
+                    outcomes.len(),
+                    slice.len()
+                ));
+            }
+            evaluations += slice.len();
+            flushes += 1;
+            for (i, outcome) in slice.iter().zip(outcomes) {
+                cache.insert(*i, outcome);
+            }
+        }
+        let outcome = match cache.get(&id) {
+            Some(o) => o,
+            None => return Err("evaluator flush lost the expanded node".into()),
+        };
+        let node = &nodes[id as usize];
+        let (parent, depth, pre_bound) = (node.parent, node.depth, node.pre_bound);
+        let mut record = TraceRecord {
+            id,
+            parent,
+            depth,
+            pre_bound,
+            post_bound: pre_bound,
+            status: Some(outcome.status),
+            rounds: outcome.rounds,
+            action: NodeAction::Infeasible,
+            branch_var: usize::MAX,
+        };
+
+        if outcome.status == Status::Infeasible {
+            trace.push(record);
+            continue;
+        }
+
+        // tighter bound from the propagated box; MaxRounds bounds are
+        // still outward-safe, so the bound (and any incumbent the
+        // explicit feasibility check below admits) remains valid
+        let post_bound = box_bound(&inst.obj, &outcome.bounds).max(pre_bound);
+        record.post_bound = post_bound;
+
+        // incumbent extraction: the objective-minimizing corner of the
+        // propagated box, admitted only by an explicit integrality +
+        // row-activity check
+        let candidate = corner_point(&inst.obj, &outcome.bounds);
+        if point_feasible(inst, &candidate) {
+            let value = obj_value(&inst.obj, &candidate);
+            if incumbent.is_none_or(|v| value < v - PRUNE_TOL) {
+                incumbent = Some(value);
+                incumbent_point = Some(candidate);
+                nodes_to_incumbent = Some(expanded);
+                secs_to_incumbent = Some(started.elapsed().as_secs_f64());
+            }
+        }
+
+        if prunable(post_bound, &incumbent) {
+            record.action = NodeAction::PrunedAfterEval;
+            trace.push(record);
+            continue;
+        }
+
+        match pick_branch_var(inst, &outcome.bounds, config.branch_rule, config.seed, id) {
+            Some(v) => {
+                record.action = NodeAction::Branched;
+                record.branch_var = v;
+                let (down, up) = split(&outcome.bounds, inst.var_types[v], v);
+                for child_bounds in [down, up] {
+                    let child_id = nodes.len() as u64;
+                    let child_bound = box_bound(&inst.obj, &child_bounds).max(post_bound);
+                    nodes.push(Node {
+                        parent: id,
+                        depth: depth + 1,
+                        bounds: child_bounds,
+                        seed_vars: vec![v],
+                        pre_bound: child_bound,
+                    });
+                    frontier.push(FrontierEntry { bound: child_bound, id: child_id });
+                }
+            }
+            None => {
+                // nothing branchable: a true leaf when everything is
+                // fixed, otherwise fathomed (infinite unfixed domains)
+                let all_fixed = (0..inst.ncols()).all(|j| {
+                    outcome.bounds.ub[j] - outcome.bounds.lb[j] <= FEAS_TOL
+                });
+                record.action = if all_fixed {
+                    NodeAction::Leaf
+                } else {
+                    NodeAction::Fathomed
+                };
+            }
+        }
+        trace.push(record);
+    }
+
+    // the remaining frontier's best bound caps the optimality gap
+    let frontier_best = frontier.iter().map(|e| e.bound).fold(f64::INFINITY, f64::min);
+    let best_bound = match status {
+        SolveStatus::Exhausted => incumbent.unwrap_or(f64::INFINITY),
+        _ => frontier_best.min(incumbent.unwrap_or(f64::INFINITY)),
+    };
+
+    let digest = trace_digest(&trace, incumbent, expanded);
+    Ok(SolveResult {
+        status,
+        nodes: expanded,
+        created: nodes.len(),
+        evaluations,
+        flushes,
+        incumbent,
+        incumbent_point,
+        nodes_to_incumbent,
+        secs_to_incumbent,
+        best_bound,
+        secs: started.elapsed().as_secs_f64(),
+        trace,
+        digest,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, Family, GenConfig};
+    use crate::propagation::seq::SeqEngine;
+
+    fn knapsack(seed: u64) -> MipInstance {
+        gen::generate(&GenConfig {
+            family: Family::OptKnapsack,
+            nrows: 12,
+            ncols: 10,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    fn run(inst: &MipInstance, config: &SolveConfig) -> SolveResult {
+        let engine = SeqEngine::new();
+        let mut evaluator = LocalEvaluator::prepare(&engine, inst).unwrap();
+        solve(inst, &mut evaluator, config).unwrap()
+    }
+
+    #[test]
+    fn finds_known_optimum_and_proves_it() {
+        for seed in 0..4 {
+            let inst = knapsack(seed);
+            let want = gen::known_optimum(&inst).unwrap();
+            let r = run(&inst, &SolveConfig::default());
+            assert_eq!(r.status, SolveStatus::Exhausted, "seed {seed}");
+            let got = r.incumbent.unwrap_or_else(|| panic!("seed {seed}: no incumbent"));
+            assert!(
+                (got - want).abs() <= 1e-6,
+                "seed {seed}: incumbent {got} != known optimum {want}"
+            );
+            assert!((r.best_bound - got).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn batch_sizes_walk_identical_trees() {
+        let inst = knapsack(7);
+        let base = run(&inst, &SolveConfig::default());
+        for batch in [2, 4, 16] {
+            let r = run(&inst, &SolveConfig { batch, ..Default::default() });
+            assert_eq!(r.digest, base.digest, "batch {batch}");
+            assert_eq!(r.nodes, base.nodes);
+            assert_eq!(r.incumbent.map(f64::to_bits), base.incumbent.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn every_branch_rule_reaches_the_optimum() {
+        let inst = knapsack(3);
+        let want = gen::known_optimum(&inst).unwrap();
+        for rule in
+            [BranchRule::MostFractional, BranchRule::PseudoRandom, BranchRule::MaxViolation]
+        {
+            let r = run(
+                &inst,
+                &SolveConfig { branch_rule: rule, seed: 11, ..Default::default() },
+            );
+            assert_eq!(r.status, SolveStatus::Exhausted, "{}", rule.name());
+            assert!(
+                (r.incumbent.unwrap() - want).abs() <= 1e-6,
+                "{}: {:?} != {want}",
+                rule.name(),
+                r.incumbent
+            );
+        }
+    }
+
+    #[test]
+    fn node_limit_stops_the_search() {
+        let inst = knapsack(5);
+        let r = run(&inst, &SolveConfig { node_limit: 3, ..Default::default() });
+        assert_eq!(r.status, SolveStatus::NodeLimit);
+        assert_eq!(r.nodes, 3);
+    }
+
+    #[test]
+    fn branch_rule_parse_round_trips() {
+        for rule in
+            [BranchRule::MostFractional, BranchRule::PseudoRandom, BranchRule::MaxViolation]
+        {
+            assert_eq!(BranchRule::parse(rule.name()).unwrap(), rule);
+        }
+        assert!(BranchRule::parse("strong").is_err());
+    }
+
+    #[test]
+    fn box_bound_follows_coefficient_signs() {
+        let bounds = Bounds { lb: vec![1.0, -2.0, 0.0], ub: vec![3.0, 5.0, 9.0] };
+        // c>0 uses lb, c<0 uses ub, c=0 ignores (even an infinite domain)
+        assert_eq!(box_bound(&[2.0, -1.0, 0.0], &bounds), 2.0 * 1.0 - 5.0);
+        let free = Bounds { lb: vec![f64::NEG_INFINITY], ub: vec![f64::INFINITY] };
+        assert_eq!(box_bound(&[1.0], &free), f64::NEG_INFINITY);
+        assert_eq!(box_bound(&[0.0], &free), 0.0);
+    }
+
+    #[test]
+    fn frontier_orders_by_bound_then_id() {
+        let mut heap = BinaryHeap::new();
+        heap.push(FrontierEntry { bound: 2.0, id: 0 });
+        heap.push(FrontierEntry { bound: 1.0, id: 2 });
+        heap.push(FrontierEntry { bound: 1.0, id: 1 });
+        heap.push(FrontierEntry { bound: f64::NEG_INFINITY, id: 3 });
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|e| e.id)).collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+}

@@ -1,0 +1,366 @@
+//! Remote node-evaluation backend: a wire client of `gdp serve`
+//! speaking either protocol format (v1 JSON lines or v2 binary frames),
+//! pipelining each branch-and-bound flush as a window of propagate
+//! requests so the server's micro-batching scheduler coalesces them
+//! into one `propagate_batch(_warm)` dispatch.
+//!
+//! This module is on the request path of a long-lived client loop and
+//! is enrolled in the `no-panic-request-path` lint: a malformed reply
+//! or a dropped connection must surface as `Err`, never a panic.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::instance::{Bounds, MipInstance};
+use crate::propagation::registry::EngineSpec;
+use crate::propagation::Status;
+use crate::service::proto;
+use crate::util::json::Json;
+
+use super::evaluator::{NodeEvaluator, NodeOutcome};
+
+/// Wire format selector (`--wire json|binary`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    Json,
+    Binary,
+}
+
+impl Wire {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Wire::Json => "json",
+            Wire::Binary => "binary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Wire, String> {
+        match s {
+            "json" => Ok(Wire::Json),
+            "binary" => Ok(Wire::Binary),
+            other => Err(format!("--wire expects json or binary, got {other:?}")),
+        }
+    }
+}
+
+/// Default connect-retry schedule: 8 attempts with doubling backoff
+/// from 50ms (~7s worst case), matching the patience of the CI
+/// readiness loops it replaces.
+pub const RETRY_ATTEMPTS: u32 = 8;
+pub const RETRY_BASE_DELAY: Duration = Duration::from_millis(50);
+
+/// Largest reply frame this client will buffer (matches the reactor's
+/// request-side default).
+const MAX_REPLY_BYTES: usize = 64 << 20;
+
+/// Requests pipelined per write/read cycle: enough for the server to
+/// coalesce a whole default flush, comfortably under the reactor's
+/// per-connection in-flight cap, and small enough that the unread reply
+/// backlog cannot wedge both sides' socket buffers.
+const PIPELINE_WINDOW: usize = 16;
+
+/// Connect with bounded retry and exponential backoff — the fix for
+/// service-mode startup races (a `gdp serve` child that has not bound
+/// its listener yet refuses or resets the first connect).
+pub fn connect_with_retry(
+    addr: &str,
+    attempts: u32,
+    base_delay: Duration,
+) -> Result<TcpStream, String> {
+    let mut delay = base_delay;
+    let mut last_err = String::from("no connect attempts made");
+    for attempt in 0..attempts.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last_err = e.to_string(),
+        }
+        if attempt + 1 < attempts.max(1) {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_secs(2));
+        }
+    }
+    Err(format!(
+        "connecting to gdp-serve at {addr}: {last_err} (after {} attempts)",
+        attempts.max(1)
+    ))
+}
+
+/// Remote [`NodeEvaluator`]: one connection, one loaded instance, one
+/// engine spec; every flush pipelines its nodes over the wire.
+pub struct RemoteEvaluator {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    wire: Wire,
+    session: String,
+    spec: EngineSpec,
+}
+
+impl RemoteEvaluator {
+    /// Connect (with retry), ship `inst` as a `load`, and bind flushes
+    /// to the returned session and `spec`.
+    pub fn connect(
+        addr: &str,
+        wire: Wire,
+        inst: &MipInstance,
+        spec: EngineSpec,
+    ) -> Result<RemoteEvaluator, String> {
+        if spec.f32 || spec.fastmath || spec.jnp {
+            return Err(
+                "the remote evaluator cannot express --f32/--fastmath/--jnp artifact \
+                 flags on the wire (use --precision f32 for mixed precision)"
+                    .into(),
+            );
+        }
+        let stream = connect_with_retry(addr, RETRY_ATTEMPTS, RETRY_BASE_DELAY)?;
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| format!("cloning the connection: {e}"))?,
+        );
+        let mut this =
+            RemoteEvaluator { reader, writer: stream, wire, session: String::new(), spec };
+        let load = Json::obj(vec![
+            ("v", Json::Num(proto::PROTO_VERSION as f64)),
+            ("op", Json::Str("load".into())),
+            ("format", Json::Str("mps".into())),
+            ("text", Json::Str(crate::mps::write_mps(inst))),
+        ]);
+        let mut wbuf = Vec::new();
+        this.encode_request(&load, &mut wbuf)?;
+        this.send(&wbuf)?;
+        let resp = this.read_response()?;
+        let result = ok_result(&resp)?;
+        this.session = result
+            .get("session")
+            .and_then(|v| v.as_str())
+            .ok_or("load reply carried no session id")?
+            .to_string();
+        Ok(this)
+    }
+
+    /// The server-assigned session id (hex), for logs.
+    pub fn session(&self) -> &str {
+        &self.session
+    }
+
+    fn propagate_request(&self, start: &Bounds, seed: &[usize]) -> Json {
+        let mut pairs = vec![
+            ("v", Json::Num(proto::PROTO_VERSION as f64)),
+            ("op", Json::Str("propagate".into())),
+            ("session", Json::Str(self.session.clone())),
+            ("engine", Json::Str(self.spec.name.clone())),
+            ("max_rounds", Json::Num(self.spec.max_rounds as f64)),
+        ];
+        if let Some(t) = self.spec.threads {
+            pairs.push(("threads", Json::Num(t as f64)));
+        }
+        if !self.spec.specialize {
+            pairs.push(("no_specialize", Json::Bool(true)));
+        }
+        pairs.push(("precision", Json::Str(self.spec.precision.name().into())));
+        // non-finite bounds serialize as the protocol's string sentinels
+        pairs.push(("lb", Json::Arr(start.lb.iter().map(|&x| Json::Num(x)).collect())));
+        pairs.push(("ub", Json::Arr(start.ub.iter().map(|&x| Json::Num(x)).collect())));
+        if !seed.is_empty() {
+            pairs.push((
+                "seed_vars",
+                Json::Arr(seed.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    fn encode_request(&self, req: &Json, wbuf: &mut Vec<u8>) -> Result<(), String> {
+        match self.wire {
+            Wire::Json => {
+                wbuf.extend_from_slice(req.to_string().as_bytes());
+                wbuf.push(b'\n');
+            }
+            Wire::Binary => wbuf.extend_from_slice(&proto::request_to_frame(req)?),
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, wbuf: &[u8]) -> Result<(), String> {
+        self.writer.write_all(wbuf).map_err(|e| format!("writing request: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flushing request: {e}"))
+    }
+
+    fn read_response(&mut self) -> Result<Json, String> {
+        match self.wire {
+            Wire::Json => {
+                let mut line = String::new();
+                self.reader
+                    .read_line(&mut line)
+                    .map_err(|e| format!("reading response: {e}"))?;
+                if line.trim().is_empty() {
+                    return Err("server closed the connection".into());
+                }
+                Json::parse(line.trim()).map_err(|e| format!("unparseable response: {e}"))
+            }
+            Wire::Binary => {
+                let mut preamble = [0u8; proto::FRAME_PREAMBLE];
+                self.reader
+                    .read_exact(&mut preamble)
+                    .map_err(|e| format!("reading response frame preamble: {e}"))?;
+                let hlen = u32::from_le_bytes([
+                    preamble[8],
+                    preamble[9],
+                    preamble[10],
+                    preamble[11],
+                ]) as usize;
+                let blen = u32::from_le_bytes([
+                    preamble[12],
+                    preamble[13],
+                    preamble[14],
+                    preamble[15],
+                ]) as usize;
+                if hlen.saturating_add(blen) > MAX_REPLY_BYTES {
+                    return Err(format!(
+                        "response frame of {} bytes exceeds the {MAX_REPLY_BYTES}-byte cap",
+                        hlen.saturating_add(blen)
+                    ));
+                }
+                let mut buf = preamble.to_vec();
+                buf.resize(proto::FRAME_PREAMBLE + hlen + blen, 0);
+                self.reader
+                    .read_exact(&mut buf[proto::FRAME_PREAMBLE..])
+                    .map_err(|e| format!("reading response frame payload: {e}"))?;
+                let (frame, _) = proto::decode_frame(&buf, MAX_REPLY_BYTES)
+                    .map_err(|e| format!("bad response frame: {e}"))?
+                    .ok_or("truncated response frame")?;
+                proto::response_from_frame(&frame)
+                    .map_err(|e| format!("bad response frame: {e}"))
+            }
+        }
+    }
+}
+
+/// Unwrap `{"ok":true,"result":{...}}`, surfacing the server's error
+/// string otherwise.
+fn ok_result(resp: &Json) -> Result<&Json, String> {
+    if resp.get("ok") == Some(&Json::Bool(true)) {
+        resp.get("result").ok_or_else(|| "ok reply carried no result".to_string())
+    } else {
+        Err(match resp.get("error").and_then(|e| e.as_str()) {
+            Some(msg) => format!("server error: {msg}"),
+            None => "server error (no message)".to_string(),
+        })
+    }
+}
+
+fn status_from_name(s: &str) -> Result<Status, String> {
+    match s {
+        "Converged" => Ok(Status::Converged),
+        "MaxRounds" => Ok(Status::MaxRounds),
+        "Infeasible" => Ok(Status::Infeasible),
+        other => Err(format!("unknown propagation status {other:?}")),
+    }
+}
+
+/// Parse one propagate reply into a [`NodeOutcome`]. The JSON wire
+/// parses non-finite bounds into their string sentinels, the binary
+/// wire splices them back as bare numbers — both spellings decode here.
+fn parse_outcome(resp: &Json) -> Result<NodeOutcome, String> {
+    let result = ok_result(resp)?;
+    let status = status_from_name(
+        result.get("status").and_then(|v| v.as_str()).ok_or("reply misses status")?,
+    )?;
+    let rounds = result
+        .get("rounds")
+        .and_then(|v| v.as_f64())
+        .ok_or("reply misses rounds")? as u32;
+    let nums = |key: &str| -> Result<Vec<f64>, String> {
+        result
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("reply misses {key}"))?
+            .iter()
+            .map(|j| match j {
+                Json::Num(x) => Ok(*x),
+                other => proto::json_to_f64(other).map_err(|e| format!("{key}: {e}")),
+            })
+            .collect()
+    };
+    let bounds = Bounds { lb: nums("lb")?, ub: nums("ub")? };
+    Ok(NodeOutcome { bounds, status, rounds })
+}
+
+impl NodeEvaluator for RemoteEvaluator {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn evaluate(
+        &mut self,
+        starts: &[Bounds],
+        seeds: &[Vec<usize>],
+    ) -> Result<Vec<NodeOutcome>, String> {
+        if starts.len() != seeds.len() {
+            return Err("one seed-variable set per node required".into());
+        }
+        let mut out = Vec::with_capacity(starts.len());
+        let mut wbuf = Vec::new();
+        for window in (0..starts.len()).step_by(PIPELINE_WINDOW) {
+            let end = (window + PIPELINE_WINDOW).min(starts.len());
+            wbuf.clear();
+            for i in window..end {
+                let req = self.propagate_request(&starts[i], &seeds[i]);
+                self.encode_request(&req, &mut wbuf)?;
+            }
+            // one write for the whole window: the requests land inside
+            // the server's micro-batch window and coalesce
+            let send_buf = std::mem::take(&mut wbuf);
+            self.send(&send_buf)?;
+            wbuf = send_buf;
+            for _ in window..end {
+                out.push(parse_outcome(&self.read_response()?)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_parse_round_trips() {
+        assert_eq!(Wire::parse("json").unwrap(), Wire::Json);
+        assert_eq!(Wire::parse("binary").unwrap(), Wire::Binary);
+        assert!(Wire::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn connect_with_retry_reports_the_last_error() {
+        // a port from the TEST-NET range nothing listens on; one attempt
+        // keeps the test fast
+        let err = connect_with_retry("127.0.0.1:1", 1, Duration::from_millis(1)).unwrap_err();
+        assert!(err.contains("127.0.0.1:1"), "{err}");
+        assert!(err.contains("1 attempts"), "{err}");
+    }
+
+    #[test]
+    fn status_names_round_trip() {
+        for s in [Status::Converged, Status::MaxRounds, Status::Infeasible] {
+            assert_eq!(status_from_name(proto::status_name(s)).unwrap(), s);
+        }
+        assert!(status_from_name("Warp").is_err());
+    }
+
+    #[test]
+    fn parse_outcome_accepts_both_bound_spellings() {
+        let resp = Json::parse(
+            r#"{"v":1,"ok":true,"result":{"status":"Converged","rounds":2,
+                "lb":[0,"-inf"],"ub":[1.5,"inf"]}}"#,
+        )
+        .unwrap();
+        let o = parse_outcome(&resp).unwrap();
+        assert_eq!(o.status, Status::Converged);
+        assert_eq!(o.rounds, 2);
+        assert_eq!(o.bounds.lb, vec![0.0, f64::NEG_INFINITY]);
+        assert_eq!(o.bounds.ub, vec![1.5, f64::INFINITY]);
+        let err = Json::parse(r#"{"v":1,"ok":false,"error":"unknown session"}"#).unwrap();
+        assert!(parse_outcome(&err).unwrap_err().contains("unknown session"));
+    }
+}

@@ -3,6 +3,7 @@
 //! reports, written as aligned text + CSV + Markdown into `results/`.
 
 pub mod batch_throughput;
+pub mod bnb_exp;
 pub mod context;
 pub mod pb;
 pub mod price_par;
@@ -23,10 +24,11 @@ use crate::util::cli::Args;
 use crate::util::fmt::Table;
 
 /// All experiment ids, in paper order; `batch` (batched multi-node
-/// throughput), `pb` (pseudo-boolean constraint-class specialization)
-/// and `service` (served propagation: session cache + micro-batching)
-/// are this reproduction's own section 5 outlook experiments.
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+/// throughput), `pb` (pseudo-boolean constraint-class specialization),
+/// `service` (served propagation: session cache + micro-batching) and
+/// `bnb` (closed-loop branch-and-bound driver) are this reproduction's
+/// own section 5 outlook experiments.
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "price-par",
     "table1",
     "fig2",
@@ -38,6 +40,7 @@ pub const ALL_EXPERIMENTS: [&str; 11] = [
     "batch",
     "pb",
     "service",
+    "bnb",
 ];
 
 /// Run one experiment by id.
@@ -55,6 +58,7 @@ pub fn run(id: &str, args: &Args) -> Result<ExpOutput> {
         "batch" => batch_throughput::run(&ctx),
         "pb" => pb::run(&ctx),
         "service" => service_throughput::run(&ctx),
+        "bnb" => bnb_exp::run(&ctx),
         other => anyhow::bail!("unknown experiment {other}; known: {ALL_EXPERIMENTS:?}"),
     }
 }

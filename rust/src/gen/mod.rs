@@ -44,10 +44,20 @@ pub enum Family {
     /// boxes, integer capacities. Same exactness property as
     /// [`Family::IntChain`], with wider rows.
     IntKnapsack,
+    /// Knapsack with a *known optimum*: one global unit-coefficient
+    /// cardinality row `sum x_j <= k` over binary variables, padded with
+    /// implied (redundant) subset rows for propagation work, and
+    /// negated-profit objective coefficients. With a single cardinality
+    /// constraint the greedy assignment by profit is provably optimal,
+    /// so [`known_optimum`] recomputes the optimum from the instance —
+    /// the checkable incumbent the branch-and-bound driver asserts
+    /// against. Binary domains also cap the search tree at `2^(n+1)`
+    /// nodes, so B&B tests can assert exhaustion under a node limit.
+    OptKnapsack,
 }
 
 impl Family {
-    pub const ALL: [Family; 11] = [
+    pub const ALL: [Family; 12] = [
         Family::Knapsack,
         Family::SetCover,
         Family::Cascade,
@@ -59,6 +69,7 @@ impl Family {
         Family::PbMixed,
         Family::IntChain,
         Family::IntKnapsack,
+        Family::OptKnapsack,
     ];
 
     /// The pseudo-boolean subset of [`Family::ALL`] (all-binary instances
@@ -83,6 +94,7 @@ impl Family {
             Family::PbMixed => "pb_mixed",
             Family::IntChain => "int_chain",
             Family::IntKnapsack => "int_knapsack",
+            Family::OptKnapsack => "opt_knapsack",
         }
     }
 }
@@ -137,6 +149,7 @@ pub fn generate(cfg: &GenConfig) -> MipInstance {
         }
         Family::IntChain => gen_int_chain(cfg, &mut rng, &name),
         Family::IntKnapsack => gen_int_knapsack(cfg, &mut rng, &name),
+        Family::OptKnapsack => gen_opt_knapsack(cfg, &mut rng, &name),
     };
     debug_assert!(inst.validate().is_ok(), "generator produced invalid instance");
     inst
@@ -564,6 +577,105 @@ fn gen_int_knapsack(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
     MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt)
 }
 
+/// Known-optimum knapsack family (the branch-and-bound check family):
+/// binary variables, row 0 the one binding constraint — a full-support
+/// cardinality row `sum_j x_j <= k` — and every remaining row an
+/// *implied* subset cardinality row `sum_{j in S} x_j <= min(k, |S|)`,
+/// redundant relative to row 0 and the boxes (since `x >= 0`), so
+/// propagation has rows to work without the optimum moving. Objective
+/// coefficients are negated integer profits (minimization), set after
+/// `from_parts` (which zeroes `obj`); [`known_optimum`] recomputes the
+/// provable optimum from the instance data.
+fn gen_opt_knapsack(cfg: &GenConfig, rng: &mut Rng, name: &str) -> MipInstance {
+    let n = cfg.ncols.max(1);
+    let lb = vec![0.0; n];
+    let ub = vec![1.0; n];
+    let vt = vec![VarType::Integer; n];
+    // k around a third of the variables forces real branching while
+    // keeping search trees small enough for test node limits
+    let k = (n / 3).max(1) as f64;
+    let nrows = cfg.nrows.max(1);
+    let mut rows: Vec<(Vec<u32>, Vec<f64>)> = Vec::with_capacity(nrows);
+    let mut lhs = Vec::with_capacity(nrows);
+    let mut rhs = Vec::with_capacity(nrows);
+    rows.push(((0..n as u32).collect(), vec![1.0; n]));
+    lhs.push(f64::NEG_INFINITY);
+    rhs.push(k);
+    while rows.len() < nrows {
+        let len = row_len(cfg, rng).clamp(1, n);
+        let cols: Vec<u32> = rng.sample_distinct(n, len).iter().map(|&c| c as u32).collect();
+        let cap: f64 = cols.iter().map(|&c| ub[c as usize]).sum();
+        lhs.push(f64::NEG_INFINITY);
+        rhs.push(k.min(cap));
+        let len = cols.len();
+        rows.push((cols, vec![1.0; len]));
+    }
+    let matrix = Csr::from_rows(n, &rows).unwrap();
+    let mut inst = MipInstance::from_parts(name, matrix, lhs, rhs, lb, ub, vt);
+    inst.obj = (0..n).map(|_| -(rng.range(1, 100) as f64)).collect();
+    inst
+}
+
+/// The provable optimum of a [`Family::OptKnapsack`]-shaped instance, or
+/// `None` when the instance doesn't have the family's shape. Recomputed
+/// from the instance data alone: with one binding cardinality constraint
+/// over independent integer boxes and a non-positive objective, the
+/// greedy assignment by profit (most negative coefficient first, ties to
+/// the lower index) is optimal — an exchange argument: any solution that
+/// skips a unit of a more profitable variable for a less profitable one
+/// can be improved by swapping the units. Every row past 0 is verified
+/// to be implied by row 0 and the boxes before trusting the greedy.
+pub fn known_optimum(inst: &MipInstance) -> Option<f64> {
+    let n = inst.ncols();
+    if n == 0 || inst.nrows() == 0 {
+        return None;
+    }
+    // integer boxes [0, u] with finite u, minimization objective
+    for j in 0..n {
+        if inst.var_types[j] != VarType::Integer
+            || inst.lb[j] != 0.0
+            || !inst.ub[j].is_finite()
+            || inst.obj[j] > 0.0
+        {
+            return None;
+        }
+    }
+    // row 0: full-support all-unit `sum x_j <= k`
+    let (cols0, vals0) = inst.matrix.row(0);
+    if cols0.len() != n || vals0.iter().any(|&v| v != 1.0) || inst.lhs[0].is_finite() {
+        return None;
+    }
+    let k = inst.rhs[0];
+    if !k.is_finite() || k < 0.0 {
+        return None;
+    }
+    // remaining rows must be implied by row 0 plus the boxes: all-unit
+    // subset rows with rhs >= min(k, sum of the subset's upper bounds)
+    for r in 1..inst.nrows() {
+        let (cols, vals) = inst.matrix.row(r);
+        if vals.iter().any(|&v| v != 1.0) || inst.lhs[r].is_finite() {
+            return None;
+        }
+        let cap: f64 = cols.iter().map(|&c| inst.ub[c as usize]).sum();
+        if inst.rhs[r] < k.min(cap) {
+            return None;
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| inst.obj[a].total_cmp(&inst.obj[b]).then_with(|| a.cmp(&b)));
+    let mut remaining = k;
+    let mut value = 0.0;
+    for j in order {
+        if remaining <= 0.0 || inst.obj[j] >= 0.0 {
+            break;
+        }
+        let take = inst.ub[j].min(remaining);
+        value += inst.obj[j] * take;
+        remaining -= take;
+    }
+    Some(value)
+}
+
 /// (min activity, max activity) of a row under the given bounds,
 /// treating infinite contributions as +-inf.
 fn activity_range(cols: &[u32], vals: &[f64], lb: &[f64], ub: &[f64]) -> (f64, f64) {
@@ -797,6 +909,68 @@ mod tests {
             let r = crate::propagation::seq::SeqEngine::new().propagate(&inst);
             assert_eq!(r.status, crate::propagation::Status::Converged, "{}", family.name());
         }
+    }
+
+    #[test]
+    fn opt_knapsack_greedy_matches_brute_force() {
+        // odometer enumeration of every integer point in the boxes —
+        // tiny dims keep this in the hundreds of points
+        fn brute_force(inst: &MipInstance) -> f64 {
+            let n = inst.ncols();
+            let mut x = vec![0.0f64; n];
+            let mut best = f64::INFINITY;
+            loop {
+                let feasible = (0..inst.nrows()).all(|r| {
+                    let (cols, vals) = inst.matrix.row(r);
+                    let v = activity_at(cols, vals, &x);
+                    v >= inst.lhs[r] - 1e-9 && v <= inst.rhs[r] + 1e-9
+                });
+                if feasible {
+                    let val: f64 = inst.obj.iter().zip(&x).map(|(&c, &xi)| c * xi).sum();
+                    best = best.min(val);
+                }
+                let mut j = 0;
+                loop {
+                    if j == n {
+                        return best;
+                    }
+                    if x[j] < inst.ub[j] {
+                        x[j] += 1.0;
+                        break;
+                    }
+                    x[j] = 0.0;
+                    j += 1;
+                }
+            }
+        }
+        for seed in 0..6 {
+            let cfg = GenConfig {
+                family: Family::OptKnapsack,
+                nrows: 6,
+                ncols: 6,
+                seed,
+                ..Default::default()
+            };
+            let inst = generate(&cfg);
+            let want = known_optimum(&inst).expect("family shape recognized");
+            assert!(want < 0.0, "optimum should take something (seed {seed})");
+            let got = brute_force(&inst);
+            assert_eq!(got, want, "greedy vs brute force, seed {seed}");
+        }
+    }
+
+    #[test]
+    fn known_optimum_rejects_other_shapes() {
+        let mixed = generate(&GenConfig { nrows: 10, ncols: 10, seed: 1, ..Default::default() });
+        assert_eq!(known_optimum(&mixed), None);
+        let cover = generate(&GenConfig {
+            family: Family::SetCover,
+            nrows: 10,
+            ncols: 10,
+            seed: 1,
+            ..Default::default()
+        });
+        assert_eq!(known_optimum(&cover), None);
     }
 
     #[test]

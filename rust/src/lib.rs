@@ -52,6 +52,7 @@ pub mod devsim;
 pub mod metrics;
 pub mod experiments;
 pub mod service;
+pub mod bnb;
 
 /// Numerical policy shared with python/compile/__init__.py. The two must
 /// stay in lock-step for the differential tests to hold.

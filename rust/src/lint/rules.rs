@@ -14,6 +14,7 @@ const UNSAFE_ALLOWLIST: &[&str] = &["src/service/session.rs"];
 /// A panic here kills a shard worker, so fallible shapes are mandatory
 /// (init-time code escapes with `// PANIC-OK:`).
 const REQUEST_PATH: &[&str] = &[
+    "src/bnb/remote.rs",
     "src/service/proto.rs",
     "src/service/reactor.rs",
     "src/service/scheduler.rs",

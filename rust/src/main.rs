@@ -5,6 +5,13 @@
 //!       Run one instance through a registered engine and print the result;
 //!       with --batch N, additionally propagate N branched B&B node
 //!       domains through the batched session API.
+//!   solve (--mps FILE | --opb FILE) [--engine NAME] [--batch N] [--node-limit N]
+//!         [--time-limit S] [--branch-rule R] [--seed S]
+//!         [--remote HOST:PORT [--wire json|binary]]
+//!       Deterministic best-first branch and bound with domain propagation
+//!       as the node-pruning engine — nodes evaluated in speculative
+//!       batches through the session API, in-process or against a running
+//!       `gdp serve` pool.
 //!   engines [--json]
 //!       List the registered engines (names + one-line summaries);
 //!       --json (or the global --engines-json flag) emits the
@@ -16,7 +23,7 @@
 //!   exp       <id>|all [--scale X] [--smoke] [--sets 1,2] [--out DIR] [--check]
 //!       Reproduce a paper table/figure (price-par, table1, fig2, roofline,
 //!       fig3, fig4, fig5, fig6) or an outlook experiment (batch, pb,
-//!       service).
+//!       service, bnb).
 //!   inspect   (--mps FILE | --opb FILE)
 //!       Print instance statistics (incl. the row-class histogram).
 //!   serve     [--port P | --stdio] [--shards N] [service options]
@@ -58,6 +65,7 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "propagate" => cmd_propagate(&args),
+        "solve" => cmd_solve(&args),
         "engines" => cmd_engines(&args),
         "generate" => cmd_generate(&args),
         "suite" => cmd_suite(&args),
@@ -100,13 +108,18 @@ USAGE:
                 [--precision f64|f32] [--threads N] [--f32] [--fastmath] [--jnp]
                 [--max-rounds R] [--no-specialize] [--warm-var J] [--batch N]
                 [--artifacts DIR] [--bounds]
+  gdp solve (--mps FILE | --opb FILE) [--engine {engines}]
+            [--precision f64|f32] [--threads N] [--max-rounds R] [--no-specialize]
+            [--batch N] [--node-limit N] [--time-limit SECS]
+            [--branch-rule most-fractional|pseudo-random|max-violation] [--seed S]
+            [--remote HOST:PORT [--wire json|binary]] [--artifacts DIR]
   gdp engines [--json]
   gdp --engines-json
-  gdp generate --family mixed|knapsack|setcover|cascade|denseconn|pb_packing|pb_covering|pb_cardinality|pb_mixed|int_chain|int_knapsack
+  gdp generate --family mixed|knapsack|setcover|cascade|denseconn|pb_packing|pb_covering|pb_cardinality|pb_mixed|int_chain|int_knapsack|opt_knapsack
                --rows M --cols N [--mean-nnz K] [--int-frac F] [--inf-frac F] [--seed S]
                --out FILE   (a .opb suffix writes OPB; anything else MPS)
   gdp suite [--scale X] [--seed S] --out DIR
-  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|pb|service|all>
+  gdp exp <price-par|table1|fig2|roofline|fig3|fig4|fig5|fig6|batch|pb|service|bnb|all>
           [--scale X] [--smoke] [--sets 1,2] [--seed S] [--threads N]
           [--artifacts DIR] [--out DIR] [--check]
   gdp inspect (--mps FILE | --opb FILE)
@@ -244,6 +257,90 @@ fn cmd_propagate(args: &Args) -> anyhow::Result<bool> {
     Ok(true)
 }
 
+/// Deterministic best-first branch and bound (DESIGN.md section 10):
+/// frontier keyed on the LP-free objective bound, nodes propagated in
+/// speculative batches through `propagate_batch(_warm)` — in-process, or
+/// against a running `gdp serve` pool with `--remote HOST:PORT`. The
+/// printed `digest=` line hashes the full pruning trace and nothing
+/// timing-dependent, so scripts can assert two runs (or two backends)
+/// walked the same tree.
+fn cmd_solve(args: &Args) -> anyhow::Result<bool> {
+    use gdp::bnb::{self, BranchRule, SolveConfig};
+
+    let inst = load_instance(args)?;
+    let spec = EngineSpec::from_args(args);
+    let config = SolveConfig {
+        batch: args.get_usize("batch", 1).max(1),
+        node_limit: args.get_usize("node-limit", SolveConfig::default().node_limit),
+        time_limit: args
+            .get("time-limit")
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--time-limit expects seconds, got {s:?}"))
+            })
+            .transpose()?,
+        branch_rule: match args.get("branch-rule") {
+            Some(r) => BranchRule::parse(r).map_err(|e| anyhow::anyhow!("{e}"))?,
+            None => BranchRule::MostFractional,
+        },
+        seed: args.get_u64("seed", 0),
+    };
+
+    let result = if let Some(addr) = args.get("remote") {
+        let wire = bnb::remote::Wire::parse(args.get_or("wire", "json"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut evaluator = bnb::RemoteEvaluator::connect(addr, wire, &inst, spec.clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "solve: remote {} wire={} session={} engine={}",
+            addr,
+            wire.name(),
+            evaluator.session(),
+            spec.name
+        );
+        bnb::solve(&inst, &mut evaluator, &config).map_err(|e| anyhow::anyhow!("{e}"))?
+    } else {
+        let registry = Registry::with_defaults().with_artifact_dir(
+            args.get_or("artifacts", &default_artifact_dir().to_string_lossy()),
+        );
+        let engine = registry.create(&spec)?;
+        let mut evaluator = gdp::bnb::LocalEvaluator::prepare(engine.as_ref(), &inst)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        bnb::solve(&inst, &mut evaluator, &config).map_err(|e| anyhow::anyhow!("{e}"))?
+    };
+
+    println!(
+        "engine={} instance={} rows={} cols={} nnz={}",
+        spec.name,
+        inst.name,
+        inst.nrows(),
+        inst.ncols(),
+        inst.nnz()
+    );
+    println!(
+        "status={} nodes={} created={} evaluations={} flushes={} batch={} rule={} wall={}",
+        result.status.name(),
+        result.nodes,
+        result.created,
+        result.evaluations,
+        result.flushes,
+        config.batch,
+        config.branch_rule.name(),
+        fmt::secs(result.secs)
+    );
+    match result.incumbent {
+        Some(v) => println!(
+            "incumbent={v} best_bound={} nodes_to_incumbent={} secs_to_incumbent={}",
+            result.best_bound,
+            result.nodes_to_incumbent.unwrap_or(0),
+            fmt::secs(result.secs_to_incumbent.unwrap_or(0.0))
+        ),
+        None => println!("incumbent=none best_bound={}", result.best_bound),
+    }
+    println!("digest={:016x}", result.digest);
+    Ok(true)
+}
+
 fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
     let registry = Registry::with_defaults();
     if args.flag("json") {
@@ -279,6 +376,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<bool> {
         "pb_mixed" => Family::PbMixed,
         "int_chain" => Family::IntChain,
         "int_knapsack" => Family::IntKnapsack,
+        "opt_knapsack" => Family::OptKnapsack,
         other => anyhow::bail!("unknown family {other}"),
     };
     let cfg = GenConfig {
@@ -429,8 +527,14 @@ fn cmd_request(args: &Args) -> anyhow::Result<bool> {
         other => anyhow::bail!("--wire expects json or binary, got {other}"),
     };
     let addr = args.get_or("addr", "127.0.0.1:7171");
-    let stream = std::net::TcpStream::connect(&addr)
-        .with_context(|| format!("connecting to gdp-serve at {addr}"))?;
+    // bounded retry-with-backoff: absorbs server startup races in CI
+    // service legs instead of flaking on connection-refused
+    let stream = gdp::bnb::remote::connect_with_retry(
+        addr,
+        gdp::bnb::remote::RETRY_ATTEMPTS,
+        gdp::bnb::remote::RETRY_BASE_DELAY,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
 

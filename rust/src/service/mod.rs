@@ -421,6 +421,25 @@ impl ServiceHandle {
             .map_err(|_| ServiceError("service stopped".into()))?
     }
 
+    /// Serve a slice of propagations: submit them all before collecting
+    /// any reply, so requests landing on the same shard inside the
+    /// coalescing window are micro-batched into one
+    /// `propagate_batch(_warm)` dispatch — the in-process twin of a
+    /// pipelining wire client. Replies come back in request order.
+    pub fn propagate_many(
+        &self,
+        reqs: Vec<PropagateRequest>,
+    ) -> ServiceResult<Vec<PropagateReply>> {
+        let mut pending = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            pending.push(self.propagate_submit(req)?);
+        }
+        pending
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| ServiceError("service stopped".into()))?)
+            .collect()
+    }
+
     /// Pool counters as the `stats` wire payload: per-shard blocks plus
     /// the aggregate rollup ([`metrics::rollup`]).
     pub fn stats(&self) -> ServiceResult<Json> {

@@ -1,0 +1,204 @@
+//! Branch-and-bound differential suite: the search tree is a pure
+//! function of (instance, config, inner engine) — bit-identical across
+//! repeated runs, across `--batch 1` vs `--batch 16` speculative
+//! flushes, and across the local / in-process-service / remote-wire
+//! evaluation backends (the remote legs run against a real 4-shard
+//! `serve` reactor over TCP, on both wire formats). Every solve on the
+//! known-optimum `opt_knapsack` family must also prove the family's
+//! greedy optimum within the node limit.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use gdp::bnb::remote::Wire;
+use gdp::bnb::{
+    solve, LocalEvaluator, NodeEvaluator, RemoteEvaluator, ServiceEvaluator, SolveConfig,
+    SolveResult, SolveStatus,
+};
+use gdp::gen::{self, Family, GenConfig};
+use gdp::instance::MipInstance;
+use gdp::propagation::registry::{EngineSpec, Registry};
+use gdp::service::reactor::{serve, ReactorConfig};
+use gdp::service::{Service, ServiceConfig};
+use gdp::util::json::Json;
+
+/// Every f64 native engine (deterministic, artifact-free).
+const ENGINES: [&str; 4] = ["cpu_seq", "cpu_omp", "gpu_model", "papilo_like"];
+
+/// Binary domains cap the tree at `2^(ncols+1)` nodes; stay above it so
+/// every solve can prove exhaustion.
+const NODE_LIMIT: usize = 40_000;
+
+fn instance(nrows: usize, ncols: usize, seed: u64) -> MipInstance {
+    gen::generate(&GenConfig {
+        family: Family::OptKnapsack,
+        nrows,
+        ncols,
+        seed,
+        ..Default::default()
+    })
+}
+
+fn config(batch: usize) -> SolveConfig {
+    SolveConfig { batch, node_limit: NODE_LIMIT, ..Default::default() }
+}
+
+/// Solve and assert the run proved the family's known optimum.
+fn solve_proving_optimum(
+    inst: &MipInstance,
+    evaluator: &mut dyn NodeEvaluator,
+    cfg: &SolveConfig,
+    label: &str,
+) -> SolveResult {
+    let optimum = gen::known_optimum(inst).expect("opt_knapsack carries a known optimum");
+    let r = solve(inst, evaluator, cfg).expect(label);
+    assert_eq!(r.status, SolveStatus::Exhausted, "{label}: tree not exhausted");
+    assert!(
+        r.incumbent.is_some_and(|v| (v - optimum).abs() <= 1e-6),
+        "{label}: incumbent {:?} != known optimum {optimum}",
+        r.incumbent
+    );
+    r
+}
+
+/// Assert two solves walked the bit-identical tree: digest (which hashes
+/// the full pruning trace), node counts and the incumbent's exact bits.
+fn assert_same_tree(a: &SolveResult, b: &SolveResult, what: &str) {
+    assert_eq!(a.digest, b.digest, "{what}: trace digests diverge");
+    assert_eq!(a.nodes, b.nodes, "{what}: expanded node counts diverge");
+    assert_eq!(a.created, b.created, "{what}: created node counts diverge");
+    assert_eq!(
+        a.incumbent.map(f64::to_bits),
+        b.incumbent.map(f64::to_bits),
+        "{what}: incumbents diverge"
+    );
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace lengths diverge");
+}
+
+#[test]
+fn same_seed_same_tree_across_repeated_runs() {
+    let inst = instance(14, 9, 5);
+    let registry = Registry::with_defaults();
+    let engine = registry.create(&EngineSpec::new("cpu_seq")).unwrap();
+    let mut evaluator = LocalEvaluator::prepare(engine.as_ref(), &inst).unwrap();
+    let cfg = config(4);
+    let a = solve_proving_optimum(&inst, &mut evaluator, &cfg, "run A");
+    let b = solve_proving_optimum(&inst, &mut evaluator, &cfg, "run B (same session)");
+    // a fresh session must replay the identical search too
+    let engine2 = registry.create(&EngineSpec::new("cpu_seq")).unwrap();
+    let mut fresh = LocalEvaluator::prepare(engine2.as_ref(), &inst).unwrap();
+    let c = solve_proving_optimum(&inst, &mut fresh, &cfg, "run C (fresh session)");
+    assert_same_tree(&a, &b, "repeated run, same session");
+    assert_same_tree(&a, &c, "repeated run, fresh session");
+    // the pruning trace replays record-for-record, not just in digest
+    assert_eq!(format!("{:?}", a.trace), format!("{:?}", b.trace), "trace records diverge");
+}
+
+#[test]
+fn batch_1_and_16_walk_identical_trees_on_every_engine() {
+    let registry = Registry::with_defaults();
+    for (nrows, ncols, seed) in [(14usize, 9usize, 5u64), (20, 11, 7)] {
+        let inst = instance(nrows, ncols, seed);
+        let mut reference: Option<SolveResult> = None;
+        for name in ENGINES {
+            let engine = registry.create(&EngineSpec::new(name)).unwrap();
+            let mut evaluator = LocalEvaluator::prepare(engine.as_ref(), &inst).unwrap();
+            let solo =
+                solve_proving_optimum(&inst, &mut evaluator, &config(1), &format!("{name}/b1"));
+            let batched =
+                solve_proving_optimum(&inst, &mut evaluator, &config(16), &format!("{name}/b16"));
+            assert_same_tree(&solo, &batched, &format!("{}: batch 1 vs 16", name));
+            // batching coalesces flushes; speculative prefetch may only
+            // ever ADD evaluations (extras pruned at their own pop), and
+            // neither may leak into the tree
+            assert!(batched.flushes <= solo.flushes, "{name}: batching added flushes");
+            assert!(
+                batched.evaluations >= solo.evaluations,
+                "{name}: batching lost evaluations"
+            );
+            // ...and every engine walks the same tree as every other
+            if let Some(r) = &reference {
+                assert_same_tree(r, &solo, &format!("cpu_seq vs {name}"));
+            } else {
+                reference = Some(solo);
+            }
+        }
+    }
+}
+
+/// Spin up a real `serve` reactor on an OS-assigned port, backed by a
+/// 4-shard service — the same front end `gdp serve --shards 4` runs.
+fn start_server() -> (SocketAddr, std::thread::JoinHandle<()>, Service) {
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::ZERO,
+        shards: 4,
+        ..ServiceConfig::default()
+    });
+    let handle = service.handle();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server =
+        std::thread::spawn(move || serve(&handle, listener, &ReactorConfig::default()).unwrap());
+    (addr, server, service)
+}
+
+fn shutdown_server(addr: SocketAddr, server: std::thread::JoinHandle<()>, service: Service) {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = Json::obj(vec![("v", Json::Num(1.0)), ("op", Json::Str("shutdown".into()))]);
+    stream.write_all((req.to_string() + "\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    server.join().unwrap();
+    service.shutdown();
+}
+
+#[test]
+fn local_service_and_remote_backends_walk_identical_trees() {
+    let inst = instance(16, 10, 3);
+    let registry = Registry::with_defaults();
+    let (addr, server, service) = start_server();
+
+    for name in ENGINES {
+        let spec = EngineSpec::new(name);
+        let cfg = config(16);
+
+        let engine = registry.create(&spec).unwrap();
+        let mut local = LocalEvaluator::prepare(engine.as_ref(), &inst).unwrap();
+        let reference = solve_proving_optimum(&inst, &mut local, &cfg, &format!("{name}/local"));
+
+        // in-process service handle (the shard scheduler, minus the wire)
+        let mut served = ServiceEvaluator::load(service.handle(), &inst, spec.clone()).unwrap();
+        let via_handle =
+            solve_proving_optimum(&inst, &mut served, &cfg, &format!("{name}/service"));
+        assert_same_tree(&reference, &via_handle, &format!("{name}: local vs service handle"));
+
+        // remote wire client against the 4-shard reactor, both formats
+        for wire in [Wire::Json, Wire::Binary] {
+            let mut remote =
+                RemoteEvaluator::connect(&addr.to_string(), wire, &inst, spec.clone()).unwrap();
+            let label = format!("{name}/remote/{}", wire.name());
+            let via_wire = solve_proving_optimum(&inst, &mut remote, &cfg, &label);
+            assert_same_tree(&reference, &via_wire, &format!("{name}: local vs {label}"));
+        }
+    }
+
+    shutdown_server(addr, server, service);
+}
+
+#[test]
+fn remote_solo_nodes_match_batched_pipelining() {
+    // batch 1 sends one request per flush, batch 16 pipelines a window —
+    // the wire transport must not leak into the search either way
+    let inst = instance(12, 8, 9);
+    let (addr, server, service) = start_server();
+    let spec = EngineSpec::new("cpu_seq");
+    let mut solo_client =
+        RemoteEvaluator::connect(&addr.to_string(), Wire::Binary, &inst, spec.clone()).unwrap();
+    let solo = solve_proving_optimum(&inst, &mut solo_client, &config(1), "remote/b1");
+    let mut batched_client =
+        RemoteEvaluator::connect(&addr.to_string(), Wire::Binary, &inst, spec).unwrap();
+    let batched = solve_proving_optimum(&inst, &mut batched_client, &config(16), "remote/b16");
+    assert_same_tree(&solo, &batched, "remote: batch 1 vs 16");
+    shutdown_server(addr, server, service);
+}
