@@ -2,7 +2,7 @@
 //! its shared PJRT runtime, and measured/modeled execution helpers reused
 //! by every experiment.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -72,7 +72,7 @@ impl ExpContext {
     }
 
     /// The shared PJRT runtime (artifacts must be built).
-    pub fn runtime(&self) -> Result<Rc<Runtime>> {
+    pub fn runtime(&self) -> Result<Arc<Runtime>> {
         self.registry.runtime()
     }
 

@@ -125,8 +125,8 @@ USAGE:
   gdp inspect (--mps FILE | --opb FILE)
   gdp serve [--port P | --stdio] [--shards N] [--engine NAME] [--precision f64|f32]
             [--batch-max N] [--batch-window-us U] [--max-sessions N]
-            [--max-session-mb MB] [--artifacts DIR] [--max-conns N]
-            [--conn-inflight N] [--max-inflight N] [--max-frame-mb MB]
+            [--max-session-mb MB] [--artifacts DIR] [--cache-dir DIR]
+            [--max-conns N] [--conn-inflight N] [--max-inflight N] [--max-frame-mb MB]
   gdp request [--addr HOST:PORT] [--wire json|binary] load (--mps FILE | --opb FILE)
   gdp request [--addr HOST:PORT] [--wire json|binary] propagate
               (--session HEX | --mps FILE | --opb FILE)
@@ -356,7 +356,9 @@ fn cmd_engines(args: &Args) -> anyhow::Result<bool> {
             entry.batch.name(),
             if entry.specializes { "  [class-dispatch]" } else { "" },
             if entry.served { "  [served]" } else { "" },
-            if !entry.send_safe { "  [pinned to shard 0]" } else { "" },
+            // every engine has been send-safe since the Arc runtime
+            // refactor; keep the marker for a future opt-out engine
+            if !entry.send_safe { "  [not send-safe]" } else { "" },
             if entry.needs_artifacts { "  [needs artifacts]" } else { "" }
         );
     }
@@ -460,6 +462,9 @@ fn service_config_from_args(args: &Args) -> gdp::service::ServiceConfig {
         artifact_dir: args.get("artifacts").map(std::path::PathBuf::from),
         // serving default: one scheduler worker per core, capped at 8
         shards: args.get_usize("shards", gdp::service::default_shards()).max(1),
+        // warm-restart persistence: off unless --cache-dir names a
+        // directory (or the GDP_TEST_CACHE_DIR default applies)
+        cache_dir: args.get("cache-dir").map(std::path::PathBuf::from).or(defaults.cache_dir),
     }
 }
 

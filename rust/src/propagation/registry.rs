@@ -8,9 +8,8 @@
 //! [`Runtime`]: all XLA engine variants created through one registry reuse
 //! the same client, artifact manifest and compiled-executable cache.
 
-use std::cell::RefCell;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -263,11 +262,14 @@ pub struct EngineEntry {
     /// hand-kept list.
     pub served: bool,
     /// May the service place this engine's sessions on ANY shard of its
-    /// worker pool? Native engines hold only owned `Send` state, so the
-    /// sharded scheduler routes them by session hash. The XLA engines
-    /// share a per-registry `Rc<Runtime>` (PJRT client + executable
-    /// cache) — not `Send` — so the service pins them to its dedicated
-    /// shard 0 and never opens a second PJRT client.
+    /// worker pool? Universally `true` since the runtime handle moved to
+    /// `Arc<Runtime>` with a `Mutex`-guarded executable cache: native
+    /// engines hold only owned state, and the XLA engines share one
+    /// thread-safe PJRT runtime, so the sharded scheduler hash-routes
+    /// every engine's sessions identically. The capability is kept on
+    /// the entry (and on the `engines --json` surface) so a future
+    /// engine with genuinely thread-bound sessions can opt out without
+    /// a protocol change.
     pub send_safe: bool,
     /// Bound-vector precisions this engine can serve. Native engines
     /// support `[F64, F32]` — the f32 path is the shared mixed-precision
@@ -332,7 +334,7 @@ fn make_xla(reg: &Registry, spec: &EngineSpec) -> Result<Box<dyn Engine>> {
 pub struct Registry {
     entries: Vec<EngineEntry>,
     artifact_dir: PathBuf,
-    runtime: RefCell<Option<Rc<Runtime>>>,
+    runtime: Mutex<Option<Arc<Runtime>>>,
 }
 
 impl Default for Registry {
@@ -347,7 +349,7 @@ impl Registry {
         Registry {
             entries: Vec::new(),
             artifact_dir: default_artifact_dir(),
-            runtime: RefCell::new(None),
+            runtime: Mutex::new(None),
         }
     }
 
@@ -405,7 +407,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
-            send_safe: false,
+            send_safe: true,
             precisions: F64_ONLY,
             factory: make_xla,
         });
@@ -416,7 +418,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
-            send_safe: false,
+            send_safe: true,
             precisions: F64_ONLY,
             factory: make_xla,
         });
@@ -427,7 +429,7 @@ impl Registry {
             batch: BatchMode::Loop,
             specializes: false,
             served: true,
-            send_safe: false,
+            send_safe: true,
             precisions: F64_ONLY,
             factory: make_xla,
         });
@@ -526,13 +528,14 @@ impl Registry {
     }
 
     /// The shared PJRT runtime, opened on first use and reused by every
-    /// XLA engine created through this registry.
-    pub fn runtime(&self) -> Result<Rc<Runtime>> {
-        let mut slot = self.runtime.borrow_mut();
+    /// XLA engine created through this registry (across threads: the
+    /// handle is `Arc`, the executable cache inside is mutex-guarded).
+    pub fn runtime(&self) -> Result<Arc<Runtime>> {
+        let mut slot = self.runtime.lock().unwrap_or_else(|p| p.into_inner());
         if slot.is_none() {
             let rt = Runtime::open(&self.artifact_dir)
                 .with_context(|| "opening artifacts (run `make -C python artifacts`)")?;
-            *slot = Some(Rc::new(rt));
+            *slot = Some(Arc::new(rt));
         }
         Ok(slot.as_ref().unwrap().clone())
     }
@@ -613,10 +616,11 @@ mod tests {
                 Some(entry.send_safe)
             );
         }
-        // XLA engines (Rc runtime) must be pinned to the XLA shard; all
-        // native engines must be free to roam the pool
+        // every engine is free to roam the pool: the Arc runtime made
+        // the XLA sessions placeable on any shard, so nothing may
+        // reintroduce a shard-pinning capability by accident
         for e in reg.entries() {
-            assert_eq!(e.send_safe, !e.needs_artifacts, "{}: send_safe drifted", e.name);
+            assert!(e.send_safe, "{}: send_safe regressed — shard pinning is gone", e.name);
         }
         // precision capability: natives serve both widths via the mixed
         // wrapper, the fixed AOT programs stay f64-only

@@ -16,7 +16,7 @@
 //! which is the paper's "necessary memory is sent to the GPU" protocol
 //! (section 4.3) and the warm-start shape branch-and-bound needs.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -104,12 +104,12 @@ impl XlaConfig {
 }
 
 pub struct XlaEngine {
-    pub runtime: Rc<Runtime>,
+    pub runtime: Arc<Runtime>,
     pub config: XlaConfig,
 }
 
 impl XlaEngine {
-    pub fn new(runtime: Rc<Runtime>, config: XlaConfig) -> XlaEngine {
+    pub fn new(runtime: Arc<Runtime>, config: XlaConfig) -> XlaEngine {
         XlaEngine { runtime, config }
     }
 
@@ -170,10 +170,10 @@ impl Engine for XlaEngine {
 /// A prepared XLA session: compiled executable + device-resident statics.
 pub struct XlaPrepared<'a> {
     inst: &'a MipInstance,
-    runtime: Rc<Runtime>,
+    runtime: Arc<Runtime>,
     config: XlaConfig,
     meta: ArtifactMeta,
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
     device: DeviceStatic,
 }
 

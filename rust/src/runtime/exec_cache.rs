@@ -2,11 +2,14 @@
 //! across propagation sessions (compilation is one-time setup, excluded
 //! from the paper's timing protocol, section 4.3).
 //!
-//! Executables are handed out as `Rc` so prepared sessions can hold them
-//! while the cache lives inside the shared [`Runtime`] behind a `RefCell`.
+//! Executables are handed out as `Arc` so prepared sessions on any shard
+//! thread can hold them while the cache lives inside the shared
+//! [`Runtime`] behind a `Mutex` — the cache is touched only at `prepare`
+//! time, never on the propagation hot path, so the lock is uncontended
+//! in steady state.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -15,7 +18,7 @@ use super::Runtime;
 
 #[derive(Default)]
 pub struct ExecCache {
-    compiled: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+    compiled: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
 }
 
 impl ExecCache {
@@ -28,11 +31,11 @@ impl ExecCache {
         &mut self,
         rt: &Runtime,
         meta: &ArtifactMeta,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.compiled.get(&meta.name) {
             return Ok(exe.clone());
         }
-        let exe = Rc::new(rt.compile(meta)?);
+        let exe = Arc::new(rt.compile(meta)?);
         self.compiled.insert(meta.name.clone(), exe.clone());
         Ok(exe)
     }

@@ -6,18 +6,21 @@
 //! (see DESIGN.md for why text, not serialized protos).
 //!
 //! One `Runtime` is meant to be shared per process (the engine registry
-//! hands out an `Rc<Runtime>`): it owns the PJRT client, the artifact
+//! hands out an `Arc<Runtime>`): it owns the PJRT client, the artifact
 //! manifest, and the compiled-executable cache, so every XLA engine
-//! variant reuses the same compilation work.
+//! variant — on every service shard thread — reuses the same compilation
+//! work. PJRT client handles are thread-safe (the C API serializes on
+//! the device where it must), and the one piece of interior mutability,
+//! the executable cache, sits behind a `Mutex` touched only at
+//! `prepare`/compile time.
 
 pub mod manifest;
 pub mod buckets;
 pub mod literal;
 pub mod exec_cache;
 
-use std::cell::RefCell;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -36,7 +39,7 @@ pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     pub artifact_dir: PathBuf,
-    exec_cache: RefCell<ExecCache>,
+    exec_cache: Mutex<ExecCache>,
 }
 
 impl Runtime {
@@ -56,7 +59,7 @@ impl Runtime {
             client,
             manifest,
             artifact_dir: dir.to_path_buf(),
-            exec_cache: RefCell::new(ExecCache::new()),
+            exec_cache: Mutex::new(ExecCache::new()),
         })
     }
 
@@ -73,13 +76,15 @@ impl Runtime {
     }
 
     /// The cached executable for an artifact, compiling on first use.
-    /// Shared across every engine holding this `Runtime`.
-    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        self.exec_cache.borrow_mut().get(self, meta)
+    /// Shared across every engine (and shard thread) holding this
+    /// `Runtime`.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.exec_cache.lock().unwrap_or_else(|p| p.into_inner());
+        cache.get(self, meta)
     }
 
     /// Number of distinct artifacts compiled so far.
     pub fn compiled_count(&self) -> usize {
-        self.exec_cache.borrow().len()
+        self.exec_cache.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }

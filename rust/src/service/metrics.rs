@@ -228,6 +228,7 @@ impl ServiceMetrics {
                     ("hits", Json::Num(store.hits as f64)),
                     ("misses", Json::Num(store.misses as f64)),
                     ("flush_resolves", Json::Num(store.flush_resolves as f64)),
+                    ("warm_restores", Json::Num(store.warm_restores as f64)),
                     ("evictions", Json::Num(store.evictions as f64)),
                     ("instance_hits", Json::Num(store.instance_hits as f64)),
                     ("instance_loads", Json::Num(store.instance_loads as f64)),
@@ -265,7 +266,9 @@ impl ServiceMetrics {
 /// thread and sent to the caller, who rolls the pool up with [`rollup`].
 #[derive(Debug, Clone)]
 pub struct ShardSnapshot {
-    /// Shard index in the pool (0 = the primary / XLA shard).
+    /// Shard index in the pool (0 = the primary shard, which counts
+    /// broadcast requests; sessions of every engine hash-route, so no
+    /// shard is otherwise special).
     pub shard: usize,
     pub metrics: ServiceMetrics,
     pub counters: StoreCounters,

@@ -30,17 +30,25 @@
 //!   algorithm-independent progress measure (arXiv:2106.07573), kept per
 //!   shard and rolled up into one aggregate `stats` payload.
 //!
+//! * [`persist`] — the warm-restart artifact store behind
+//!   `gdp serve --cache-dir`: loaded instances and prepared-session
+//!   manifests persisted incrementally, replayed at startup so a
+//!   restarted server re-hits its sessions (`warm_restores` in stats)
+//!   without a single request-path re-prepare or recompile.
+//!
 //! Everything is std-only. Engine execution happens on a **sharded
 //! worker pool**: `ServiceConfig::shards` scheduler threads, each owning
 //! its own [`session::SessionStore`] slice and micro-batching queues.
-//! Sessions are pinned to a shard by a deterministic hash of
+//! EVERY session routes to its shard by a deterministic hash of
 //! `instance_fingerprint × EngineSpec::cache_key` ([`session::shard_for`]),
 //! so warm-start reuse and coalescing semantics are exactly the 1-shard
 //! semantics, per shard — concurrent sessions merely stop serializing
-//! behind one engine thread. Engines whose sessions are not `Send`-safe
-//! (the XLA engines share an `Rc` PJRT runtime; `EngineEntry::send_safe`
-//! is false) are pinned to the dedicated shard 0, so every other shard
-//! holds only native sessions and no second PJRT client is ever opened.
+//! behind one engine thread. That includes the XLA engines: since the
+//! PJRT runtime handle became `Arc` with an interior `Mutex`ed
+//! executable cache, their sessions are `Send` like every native one
+//! (`EngineEntry::send_safe` is universally true), they hash-route and
+//! LRU-account identically, and the pool still opens at most one PJRT
+//! client because shards share the registry-owned runtime.
 //! The reactor and in-process clients talk to the pool through the
 //! cloneable, `Send` [`ServiceHandle`], which routes `propagate` to
 //! the session's home shard and broadcasts `load`/`stats`/`evict`/
@@ -51,13 +59,13 @@
 //! keep thousands of requests in flight without blocking its loop.
 
 pub mod metrics;
+pub mod persist;
 pub mod proto;
 pub mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -96,6 +104,14 @@ pub struct ServiceConfig {
     /// service test at a different pool size. `gdp serve` defaults to
     /// [`default_shards`] instead.
     pub shards: usize,
+    /// Warm-restart artifact directory (`gdp serve --cache-dir`):
+    /// loaded instances and prepared-session manifests are persisted
+    /// here and replayed at startup, so a restarted server re-hits its
+    /// sessions without re-preparing. `None` disables persistence.
+    /// `ServiceConfig::default()` honours the `GDP_TEST_CACHE_DIR`
+    /// environment variable — the CI `persist: [on, off]` matrix hook
+    /// that re-runs the service suites with persistence active.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -109,8 +125,27 @@ impl Default for ServiceConfig {
             max_bytes: 256 << 20,
             artifact_dir: None,
             shards: test_shards(),
+            cache_dir: test_cache_dir(),
         }
     }
+}
+
+/// Cache dir for [`ServiceConfig::default`]: `None`, unless
+/// `GDP_TEST_CACHE_DIR` names one. Like [`test_shards`], this is a CI
+/// matrix hook: the build-test job re-runs the service suites with
+/// `persist: on` through it, so every test doubles as a
+/// persistence-write exercise without duplicating the suite. Each call
+/// yields a FRESH subdirectory of the named root — concurrent tests
+/// must not share an artifact store, or one test's persisted instances
+/// would warm-restore into another's "cold" service and break its
+/// cached/miss assertions. Tests that exercise the warm restart itself
+/// set an explicit shared `cache_dir` instead.
+pub fn test_cache_dir() -> Option<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let root = std::env::var("GDP_TEST_CACHE_DIR").ok().filter(|s| !s.is_empty())?;
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    Some(PathBuf::from(root).join(format!("svc_{}_{n}", std::process::id())))
 }
 
 /// The serving default for `gdp serve --shards`:
@@ -264,27 +299,20 @@ pub(crate) enum Job {
 }
 
 /// Shard-routing table, shared by every clone of a [`ServiceHandle`]:
-/// the default engine (a request naming no engine still needs a cache
-/// key to route on) and each engine's `send_safe` capability from the
-/// registry (non-`send_safe` engines — XLA — always route to shard 0).
+/// just the default engine spec — a request naming no engine still needs
+/// a cache key to route on. (It once also carried per-engine `send_safe`
+/// capabilities to pin XLA sessions to shard 0; the `Arc` runtime
+/// refactor made every engine `Send`-safe, so every engine hash-routes.)
 struct RouteTable {
     default_engine: String,
     default_precision: Precision,
-    send_safe: HashMap<String, bool>,
 }
 
 impl RouteTable {
     fn new(config: &ServiceConfig) -> RouteTable {
-        // capability lookup only — building a registry opens no runtime
-        let registry = Registry::with_defaults();
         RouteTable {
             default_engine: config.default_engine.clone(),
             default_precision: config.default_precision,
-            send_safe: registry
-                .entries()
-                .iter()
-                .map(|e| (e.name.to_string(), e.send_safe))
-                .collect(),
         }
     }
 }
@@ -303,24 +331,16 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Home shard of one propagate request: shard 0 for engines whose
-    /// sessions must not leave the XLA shard (or for unknown engine
-    /// names, which any shard rejects identically), the deterministic
-    /// `fingerprint × cache_key` hash otherwise.
+    /// Home shard of one propagate request: the deterministic
+    /// `fingerprint × cache_key` hash, for every engine — XLA included
+    /// (unknown engine names route like any other and are rejected
+    /// identically by whichever shard they land on).
     fn shard_of(&self, req: &PropagateRequest) -> usize {
         let key = match &req.spec {
-            Some(spec) => {
-                if !self.route.send_safe.get(spec.name.as_str()).copied().unwrap_or(false) {
-                    return 0;
-                }
-                session::SessionKey::new(req.session, spec)
-            }
+            Some(spec) => session::SessionKey::new(req.session, spec),
             None => {
                 let spec = EngineSpec::new(&self.route.default_engine)
                     .precision(self.route.default_precision);
-                if !self.route.send_safe.get(spec.name.as_str()).copied().unwrap_or(false) {
-                    return 0;
-                }
                 session::SessionKey::new(req.session, &spec)
             }
         };
@@ -491,32 +511,35 @@ pub struct Service {
 
 impl Service {
     /// Spawn `config.shards` scheduler threads and return the running
-    /// service. Hash-routed shards receive the store budgets divided by
-    /// the pool size; shard 0 keeps the UNDIVIDED budgets, because every
-    /// non-`send_safe` (XLA) session in the whole pool is pinned there —
-    /// a split budget would shrink XLA session capacity by the pool size
-    /// and thrash exactly the expensive `prepare`s the cache exists to
-    /// amortize. (Shard 0 also takes its share of hash-routed native
-    /// sessions, so with `shards == 1` this is exactly the PR 4 store.)
+    /// service. Every shard receives the store budgets divided evenly by
+    /// the pool size — sessions of every engine hash-route uniformly, so
+    /// no shard needs a privileged share. (With `shards == 1` this is
+    /// exactly the PR 4 single-store semantics.) When
+    /// `config.cache_dir` is set, each shard replays its slice of the
+    /// persisted artifacts before serving its first request.
     pub fn start(config: ServiceConfig) -> Service {
         let shards = config.shards.max(1);
         let route = Arc::new(RouteTable::new(&config));
+        // ONE registry for the whole pool: it owns the lazily-opened
+        // `Arc<Runtime>` PJRT handle, so XLA sessions on any shard share
+        // one client and one executable cache
+        let registry = Arc::new(match &config.artifact_dir {
+            Some(dir) => Registry::with_defaults().with_artifact_dir(dir.clone()),
+            None => Registry::with_defaults(),
+        });
         let mut txs = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
-            let cfg = if shard == 0 {
-                config.clone()
-            } else {
-                ServiceConfig {
-                    max_sessions: (config.max_sessions / shards).max(1),
-                    max_bytes: (config.max_bytes / shards).max(1),
-                    ..config.clone()
-                }
+            let cfg = ServiceConfig {
+                max_sessions: (config.max_sessions / shards).max(1),
+                max_bytes: (config.max_bytes / shards).max(1),
+                ..config.clone()
             };
+            let reg = Arc::clone(&registry);
             let (tx, rx) = channel();
             let worker = std::thread::Builder::new()
                 .name(format!("gdp-shard-{shard}"))
-                .spawn(move || scheduler::Scheduler::new(cfg, shard).run(rx))
+                .spawn(move || scheduler::Scheduler::new(cfg, shard, reg).run(rx))
                 .expect("spawning a service shard thread");
             txs.push(tx);
             workers.push(worker);
@@ -641,6 +664,51 @@ mod tests {
         let pending = stats.get("pending").unwrap().as_f64().unwrap();
         assert_eq!(hits + misses, prop + pending, "a rejected request leaked a hit/miss");
         assert_eq!(prop, 1.0, "only the one successful propagate is counted");
+    }
+
+    #[test]
+    fn warm_restart_from_cache_dir_re_hits_sessions() {
+        let dir = std::env::temp_dir().join(format!("gdp_svc_restart_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ServiceConfig { cache_dir: Some(dir.clone()), ..ServiceConfig::default() };
+        let i = inst(7);
+        let first = {
+            let service = Service::start(cfg.clone());
+            let h = service.handle();
+            let loaded = h.load(i.clone()).unwrap();
+            let r = h.propagate(PropagateRequest::cold(loaded.session)).unwrap();
+            assert!(!r.cache_hit, "first boot pays the prepare");
+            service.shutdown();
+            (loaded.session, r.bounds)
+        };
+        // second boot over the same dir: instance AND session come back
+        // warm, before any request arrives
+        let service = Service::start(cfg);
+        let h = service.handle();
+        let s = h.stats().unwrap();
+        let sessions = s.get("sessions").unwrap();
+        assert!(
+            sessions.get("warm_restores").unwrap().as_f64().unwrap() >= 1.0,
+            "restart did not restore the prepared session"
+        );
+        assert_eq!(sessions.get("misses").unwrap().as_f64(), Some(0.0));
+        // no re-load needed: propagate straight at the persisted id,
+        // serving as a HIT with byte-identical bounds
+        let r = h.propagate(PropagateRequest::cold(first.0)).unwrap();
+        assert!(r.cache_hit, "restored session must serve as a hit");
+        assert_eq!(r.bounds.lb, first.1.lb);
+        assert_eq!(r.bounds.ub, first.1.ub);
+        // the accounting invariant holds with warm_restores in play:
+        // restores are neither hits nor misses
+        let s = h.stats().unwrap();
+        let sess = s.get("sessions").unwrap();
+        let hits = sess.get("hits").unwrap().as_f64().unwrap();
+        let misses = sess.get("misses").unwrap().as_f64().unwrap();
+        let prop = s.get("requests").unwrap().get("propagate").unwrap().as_f64().unwrap();
+        let pending = s.get("pending").unwrap().as_f64().unwrap();
+        assert_eq!(hits + misses, prop + pending, "warm_restores leaked into hit/miss");
+        service.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! Warm-restart persistence: the versioned on-disk artifact store behind
+//! `gdp serve --cache-dir`.
+//!
+//! The paper's prepare/propagate split (section 4.3) makes one-time setup
+//! a cold-start tax the serving layer would otherwise pay again on every
+//! process restart. This module persists, incrementally and crash-safely,
+//! everything a restarted server needs to warm up without recompiling or
+//! re-preparing:
+//!
+//! * **Instances** — `instances/inst_<fp>.bin`, a bit-exact binary
+//!   encoding (f64 payloads as raw bit patterns; the MPS text format is
+//!   NOT bit-exact) of every loaded [`MipInstance`], keyed by its
+//!   content fingerprint ([`super::session::instance_fingerprint`]).
+//! * **Prepared-session manifests** — `sessions/sess_<fp>_<spec>.txt`,
+//!   one small key=value record per `(instance fingerprint, engine
+//!   spec)` pair that a client ever paid `prepare` for. At startup each
+//!   shard replays the records that hash-route to it
+//!   ([`super::session::shard_for`] under the *current* pool size, so a
+//!   restart with a different `--shards` still restores correctly) and
+//!   re-prepares the session, counted under the `warm_restores` stats
+//!   counter — never as a miss.
+//!
+//! Staleness/corruption contract: every artifact is self-describing
+//! (magic + format version) and fingerprint-checked on read — the
+//! decoder recomputes the content fingerprint of the decoded instance
+//! and compares it against the file name. Truncated, corrupt, stale or
+//! version-skewed entries are silently discarded (and deleted
+//! best-effort) and simply rebuilt by later traffic; a cache dir can
+//! never make the server serve wrong bounds, only cost it a re-prepare.
+//! Writes go through a temp-file + rename so a SIGTERM mid-write leaves
+//! no torn entry behind.
+//!
+//! Compiled XLA executables need no separate store: the AOT artifacts
+//! already live on disk (`artifacts/*.txt`), and restoring an XLA
+//! session re-compiles through the shared [`crate::runtime::Runtime`]
+//! executable cache at startup — before any request is timed — which is
+//! exactly the "zero recompiles on the request path" property the
+//! restart-persistence CI gate asserts.
+//!
+//! Everything here is fallible-and-quiet by design: persistence is an
+//! operability optimization, so an I/O error degrades to a cold start,
+//! never to a failed request (this module is on the service's no-panic
+//! request path and is lint-gated as such).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::instance::{MipInstance, VarType};
+use crate::propagation::registry::{EngineSpec, Precision};
+use crate::sparse::Csr;
+
+use super::session::instance_fingerprint;
+
+/// Format version of the whole cache dir; bump on any layout change.
+const CACHE_VERSION: &str = "gdp-cache v1";
+/// Magic + version of one binary instance file.
+const INST_MAGIC: &[u8; 4] = b"GDPI";
+const INST_VERSION: u32 = 1;
+/// First line of one session record.
+const SESSION_HEADER: &str = "gdp-session v1";
+
+/// FNV-1a over a spec cache key — file-name disambiguation only (the
+/// record body carries the full spec; the hash just keeps distinct specs
+/// in distinct files).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Handle to an opened cache directory. Cheap to clone per shard.
+#[derive(Clone)]
+pub struct CacheDir {
+    root: PathBuf,
+}
+
+impl CacheDir {
+    /// Open (creating if needed) a cache dir. A version-skewed dir is
+    /// wiped — stale formats are rebuilt, not migrated — and re-stamped.
+    pub fn open(root: &Path) -> std::io::Result<CacheDir> {
+        std::fs::create_dir_all(root)?;
+        let version_file = root.join("VERSION");
+        let stamp = std::fs::read_to_string(&version_file).unwrap_or_default();
+        if stamp.trim() != CACHE_VERSION {
+            // foreign or stale layout: drop our sub-stores, keep nothing
+            let _ = std::fs::remove_dir_all(root.join("instances"));
+            let _ = std::fs::remove_dir_all(root.join("sessions"));
+            write_atomic(&version_file, format!("{CACHE_VERSION}\n").as_bytes())?;
+        }
+        std::fs::create_dir_all(root.join("instances"))?;
+        std::fs::create_dir_all(root.join("sessions"))?;
+        Ok(CacheDir { root: root.to_path_buf() })
+    }
+
+    fn instance_path(&self, fp: u64) -> PathBuf {
+        self.root.join("instances").join(format!("inst_{fp:016x}.bin"))
+    }
+
+    fn session_path(&self, fp: u64, cache_key: &str) -> PathBuf {
+        let h = fnv1a(cache_key.as_bytes());
+        self.root.join("sessions").join(format!("sess_{fp:016x}_{h:016x}.txt"))
+    }
+
+    /// Persist one instance (idempotent; existing files are trusted —
+    /// they are fingerprint-checked on read, not on write).
+    pub fn store_instance(&self, inst: &MipInstance, fp: u64) -> std::io::Result<()> {
+        let path = self.instance_path(fp);
+        if path.exists() {
+            return Ok(());
+        }
+        write_atomic(&path, &encode_instance(inst, fp))
+    }
+
+    /// Persist one prepared-session record (idempotent).
+    pub fn store_session(&self, fp: u64, spec: &EngineSpec) -> std::io::Result<()> {
+        let path = self.session_path(fp, &spec.cache_key());
+        if path.exists() {
+            return Ok(());
+        }
+        write_atomic(&path, encode_spec(spec).as_bytes())
+    }
+
+    /// Drop the persisted artifacts of one fingerprint (explicit client
+    /// `evict` should not resurrect on the next boot).
+    pub fn remove_fingerprint(&self, fp: u64) {
+        let _ = std::fs::remove_file(self.instance_path(fp));
+        let prefix = format!("sess_{fp:016x}_");
+        for entry in list_dir(&self.root.join("sessions")) {
+            if entry.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with(&prefix))
+            {
+                let _ = std::fs::remove_file(&entry);
+            }
+        }
+    }
+
+    /// Drop everything (explicit `evict` of the whole store).
+    pub fn clear(&self) {
+        for dir in ["instances", "sessions"] {
+            for entry in list_dir(&self.root.join(dir)) {
+                let _ = std::fs::remove_file(&entry);
+            }
+        }
+    }
+
+    /// Every restorable instance: decoded, fingerprint-verified, shared.
+    /// Corrupt/stale files are deleted best-effort and skipped.
+    pub fn instances(&self) -> Vec<(u64, Arc<MipInstance>)> {
+        let mut out = Vec::new();
+        for path in list_dir(&self.root.join("instances")) {
+            let Some(fp) = parse_fp(&path, "inst_") else { continue };
+            let Ok(bytes) = std::fs::read(&path) else { continue };
+            match decode_instance(&bytes, fp) {
+                Some(inst) => out.push((fp, Arc::new(inst))),
+                None => {
+                    let _ = std::fs::remove_file(&path); // corrupt or stale
+                }
+            }
+        }
+        out.sort_by_key(|(fp, _)| *fp); // deterministic restore order
+        out
+    }
+
+    /// Every restorable prepared-session record as `(fingerprint, spec)`.
+    /// Unparseable records are deleted best-effort and skipped; records
+    /// whose instance is missing are skipped by the caller.
+    pub fn sessions(&self) -> Vec<(u64, EngineSpec)> {
+        let mut out = Vec::new();
+        for path in list_dir(&self.root.join("sessions")) {
+            let Some(fp) = parse_fp(&path, "sess_") else { continue };
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            match decode_spec(&text) {
+                Some(spec) => out.push((fp, spec)),
+                None => {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        out.sort_by(|a, b| (a.0, a.1.cache_key()).cmp(&(b.0, b.1.cache_key())));
+        out
+    }
+}
+
+/// Temp-file + rename: a crash mid-write leaves no torn entry.
+fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+fn list_dir(dir: &Path) -> Vec<PathBuf> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| rd.flatten().map(|e| e.path()).collect())
+        .unwrap_or_default();
+    entries.retain(|p| p.extension().is_none_or(|e| e != "tmp"));
+    entries.sort();
+    entries
+}
+
+/// The `<fp>` from `inst_<fp:016x>.bin` / `sess_<fp:016x>_<h>.txt`.
+fn parse_fp(path: &Path, prefix: &str) -> Option<u64> {
+    let stem = path.file_stem()?.to_str()?;
+    let rest = stem.strip_prefix(prefix)?;
+    let hex = rest.split('_').next()?;
+    u64::from_str_radix(hex, 16).ok()
+}
+
+// ---------------------------------------------------------------------
+// binary instance encoding
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64_bits(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+fn encode_instance(inst: &MipInstance, fp: u64) -> Vec<u8> {
+    let mut w = Writer(Vec::with_capacity(64 + inst.nnz() * 16));
+    w.0.extend_from_slice(INST_MAGIC);
+    w.u32(INST_VERSION);
+    w.u64(fp);
+    let name = inst.name.as_bytes();
+    w.u64(name.len() as u64);
+    w.0.extend_from_slice(name);
+    w.u64(inst.nrows() as u64);
+    w.u64(inst.ncols() as u64);
+    w.u64(inst.nnz() as u64);
+    for &p in &inst.matrix.row_ptr {
+        w.u64(p as u64);
+    }
+    for &c in &inst.matrix.col_idx {
+        w.u32(c);
+    }
+    for &v in &inst.matrix.vals {
+        w.f64_bits(v);
+    }
+    for vs in [&inst.lhs, &inst.rhs, &inst.lb, &inst.ub, &inst.obj] {
+        for &v in vs {
+            w.f64_bits(v);
+        }
+    }
+    for t in &inst.var_types {
+        w.0.push((*t == VarType::Integer) as u8);
+    }
+    w.0
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.bytes.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).and_then(|b| b.try_into().ok()).map(u64::from_le_bytes)
+    }
+    fn f64_vec(&mut self, n: usize) -> Option<Vec<f64>> {
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f64::from_bits(self.u64()?));
+        }
+        Some(v)
+    }
+}
+
+/// Decode and verify one instance file. `None` on any structural problem
+/// or when the decoded content does not hash back to `expected_fp` (the
+/// staleness/corruption gate).
+fn decode_instance(bytes: &[u8], expected_fp: u64) -> Option<MipInstance> {
+    let mut r = Reader { bytes, pos: 0 };
+    if r.take(4)? != INST_MAGIC || r.u32()? != INST_VERSION {
+        return None;
+    }
+    let declared_fp = r.u64()?;
+    let name_len = r.u64()? as usize;
+    // names are bounded sanity, not content: refuse absurd lengths before
+    // allocating
+    if name_len > 1 << 20 {
+        return None;
+    }
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).ok()?;
+    let nrows = r.u64()? as usize;
+    let ncols = r.u64()? as usize;
+    let nnz = r.u64()? as usize;
+    // structural bound: the file must be big enough for what it declares
+    let need = (nrows + 1) * 8 + nnz * 12 + (2 * nrows + 3 * ncols) * 8 + ncols;
+    if bytes.len().checked_sub(r.pos)? < need {
+        return None;
+    }
+    let mut row_ptr = Vec::with_capacity(nrows + 1);
+    for _ in 0..=nrows {
+        row_ptr.push(r.u64()? as usize);
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        col_idx.push(r.u32()?);
+    }
+    let vals = r.f64_vec(nnz)?;
+    let lhs = r.f64_vec(nrows)?;
+    let rhs = r.f64_vec(nrows)?;
+    let lb = r.f64_vec(ncols)?;
+    let ub = r.f64_vec(ncols)?;
+    let obj = r.f64_vec(ncols)?;
+    let var_types: Vec<VarType> = r
+        .take(ncols)?
+        .iter()
+        .map(|&b| if b == 1 { VarType::Integer } else { VarType::Continuous })
+        .collect();
+    // CSR consistency (decoder-level; the fingerprint check below seals
+    // content, this seals indexability so propagation cannot go
+    // out of bounds)
+    if row_ptr.first() != Some(&0)
+        || row_ptr.last() != Some(&nnz)
+        || row_ptr.windows(2).any(|w| w[0] > w[1])
+        || col_idx.iter().any(|&c| c as usize >= ncols)
+    {
+        return None;
+    }
+    let inst = MipInstance {
+        name,
+        matrix: Csr { nrows, ncols, row_ptr, col_idx, vals },
+        lhs,
+        rhs,
+        lb,
+        ub,
+        var_types,
+        obj,
+        // derived names, exactly as `MipInstance::from_parts` generates
+        // them — excluded from the fingerprint, so not persisted
+        row_names: (0..nrows).map(|i| format!("c{i}")).collect(),
+        col_names: (0..ncols).map(|i| format!("x{i}")).collect(),
+    };
+    if declared_fp != expected_fp || instance_fingerprint(&inst) != expected_fp {
+        return None; // stale content under this name, or torn write
+    }
+    Some(inst)
+}
+
+// ---------------------------------------------------------------------
+// session-record encoding (line-oriented key=value, like manifest.txt)
+
+fn encode_spec(spec: &EngineSpec) -> String {
+    format!(
+        "{SESSION_HEADER}\nname={}\nthreads={}\nf32={}\nfastmath={}\njnp={}\nmax_rounds={}\nspecialize={}\nprecision={}\n",
+        spec.name,
+        spec.threads.map(|t| t.to_string()).unwrap_or_else(|| "d".into()),
+        spec.f32 as u8,
+        spec.fastmath as u8,
+        spec.jnp as u8,
+        spec.max_rounds,
+        spec.specialize as u8,
+        spec.precision.name(),
+    )
+}
+
+fn decode_spec(text: &str) -> Option<EngineSpec> {
+    let mut lines = text.lines();
+    if lines.next()? != SESSION_HEADER {
+        return None;
+    }
+    let mut name = None;
+    let mut spec = EngineSpec::new("");
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=')?;
+        match k {
+            "name" => name = Some(v.to_string()),
+            "threads" => {
+                spec.threads = if v == "d" { None } else { Some(v.parse().ok()?) };
+            }
+            "f32" => spec.f32 = v == "1",
+            "fastmath" => spec.fastmath = v == "1",
+            "jnp" => spec.jnp = v == "1",
+            "max_rounds" => spec.max_rounds = v.parse().ok()?,
+            "specialize" => spec.specialize = v == "1",
+            "precision" => spec.precision = Precision::parse(v).ok()?,
+            _ => return None, // unknown key: a future format, not ours
+        }
+    }
+    spec.name = name?;
+    if spec.name.is_empty() {
+        return None;
+    }
+    Some(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+
+    fn inst(seed: u64) -> MipInstance {
+        gen::generate(&GenConfig { nrows: 20, ncols: 20, seed, ..Default::default() })
+    }
+
+    /// Unique-but-deterministic temp dir per test (Miri-friendly: no
+    /// clock or RNG).
+    fn tmp(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("gdp_persist_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn instance_round_trip_is_bit_exact() {
+        let cache = CacheDir::open(&tmp("round_trip")).unwrap();
+        let i = inst(1);
+        let fp = instance_fingerprint(&i);
+        cache.store_instance(&i, fp).unwrap();
+        let restored = cache.instances();
+        assert_eq!(restored.len(), 1);
+        let (got_fp, got) = &restored[0];
+        assert_eq!(*got_fp, fp);
+        // bit-exact payloads (fingerprint already proves most of this;
+        // spot-check the raw vectors and the non-fingerprinted extras)
+        assert_eq!(got.matrix.vals, i.matrix.vals);
+        assert_eq!(got.lb, i.lb);
+        assert_eq!(got.ub, i.ub);
+        assert_eq!(got.obj, i.obj);
+        assert_eq!(got.name, i.name);
+        assert_eq!(instance_fingerprint(got), fp);
+        // idempotent store
+        cache.store_instance(&i, fp).unwrap();
+        assert_eq!(cache.instances().len(), 1);
+    }
+
+    #[test]
+    fn corrupt_and_stale_instances_are_silently_dropped() {
+        let dir = tmp("corrupt");
+        let cache = CacheDir::open(&dir).unwrap();
+        let i = inst(2);
+        let fp = instance_fingerprint(&i);
+        cache.store_instance(&i, fp).unwrap();
+        // truncated copy under a second name
+        let good = std::fs::read(dir.join("instances").join(format!("inst_{fp:016x}.bin")))
+            .unwrap();
+        std::fs::write(
+            dir.join("instances").join("inst_00000000000000aa.bin"),
+            &good[..good.len() / 2],
+        )
+        .unwrap();
+        // stale: valid bytes filed under the wrong fingerprint
+        std::fs::write(dir.join("instances").join("inst_00000000000000bb.bin"), &good)
+            .unwrap();
+        // garbage
+        std::fs::write(dir.join("instances").join("inst_00000000000000cc.bin"), b"nope")
+            .unwrap();
+        let restored = cache.instances();
+        assert_eq!(restored.len(), 1, "only the intact entry survives");
+        assert_eq!(restored[0].0, fp);
+        // and the bad files were reaped
+        assert_eq!(list_dir(&dir.join("instances")).len(), 1);
+    }
+
+    #[test]
+    fn session_records_round_trip_and_reject_garbage() {
+        let dir = tmp("sessions");
+        let cache = CacheDir::open(&dir).unwrap();
+        let spec =
+            EngineSpec::new("cpu_omp").threads(3).max_rounds(7).precision(Precision::F32);
+        cache.store_session(42, &spec).unwrap();
+        cache.store_session(42, &EngineSpec::new("cpu_seq")).unwrap();
+        std::fs::write(dir.join("sessions").join("sess_002a_dead.txt"), "not a record")
+            .unwrap();
+        let got = cache.sessions();
+        assert_eq!(got.len(), 2, "two valid records, garbage dropped");
+        let omp = got.iter().find(|(_, s)| s.name == "cpu_omp").unwrap();
+        assert_eq!(omp.0, 42);
+        assert_eq!(omp.1.cache_key(), spec.cache_key(), "spec survives exactly");
+    }
+
+    #[test]
+    fn version_skew_wipes_the_store() {
+        let dir = tmp("version");
+        let cache = CacheDir::open(&dir).unwrap();
+        let i = inst(3);
+        cache.store_instance(&i, instance_fingerprint(&i)).unwrap();
+        std::fs::write(dir.join("VERSION"), "gdp-cache v0\n").unwrap();
+        let cache = CacheDir::open(&dir).unwrap();
+        assert!(cache.instances().is_empty(), "stale format must be wiped, not read");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("VERSION")).unwrap().trim(),
+            CACHE_VERSION
+        );
+    }
+
+    #[test]
+    fn remove_and_clear_reap_files() {
+        let dir = tmp("remove");
+        let cache = CacheDir::open(&dir).unwrap();
+        let (a, b) = (inst(4), inst(5));
+        let (fa, fb) = (instance_fingerprint(&a), instance_fingerprint(&b));
+        cache.store_instance(&a, fa).unwrap();
+        cache.store_instance(&b, fb).unwrap();
+        cache.store_session(fa, &EngineSpec::new("cpu_seq")).unwrap();
+        cache.store_session(fb, &EngineSpec::new("cpu_seq")).unwrap();
+        cache.remove_fingerprint(fa);
+        assert_eq!(cache.instances().len(), 1);
+        assert_eq!(cache.sessions().len(), 1);
+        assert_eq!(cache.sessions()[0].0, fb);
+        cache.clear();
+        assert!(cache.instances().is_empty() && cache.sessions().is_empty());
+    }
+}

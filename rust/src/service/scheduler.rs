@@ -18,27 +18,41 @@
 //! never mix inside one batched dispatch.
 //!
 //! Everything here runs on this shard's one thread: its session-store
-//! slice, its registry (each shard owns one, but only shard 0 is ever
-//! routed a non-`send_safe` engine, so only shard 0 can open the `Rc`
-//! PJRT runtime), and all engine execution for the sessions the
-//! [`ServiceHandle`](super::ServiceHandle) routes here. Requests arrive
+//! slice and all engine execution for the sessions the
+//! [`ServiceHandle`](super::ServiceHandle) routes here. The engine
+//! registry is the ONE pool-wide shared piece (an `Arc`): it owns the
+//! lazily-opened `Arc<Runtime>` PJRT handle, so XLA sessions can hash
+//! to any shard while the pool still opens at most one PJRT client —
+//! the `Mutex` inside the runtime is touched only at prepare/compile
+//! time, never on the propagate hot path. Requests arrive
 //! over the shard's mpsc channel — fed either by blocking callers or by
 //! the [`reactor`](super::reactor) front end, whose admission control
 //! bounds how many requests can be in these queues at once — and answer
-//! through per-request channels, so no state is shared between shards
-//! and no locks exist — the same freedom-from-synchronization argument
-//! the paper makes for rows, applied across sessions.
+//! through per-request channels, so no mutable state is shared between
+//! shards — the same freedom-from-synchronization argument the paper
+//! makes for rows, applied across sessions.
+//!
+//! When the service runs with a warm-restart cache dir
+//! ([`super::persist`]), each shard replays its slice of the persisted
+//! artifacts before serving: every instance becomes resident and every
+//! prepared-session record that hash-routes here is re-prepared,
+//! counted under `warm_restores`. Afterwards the shard writes through
+//! incrementally — instances on the primary `load`, session records on
+//! each enqueue-time miss — so the cache dir always reflects the warm
+//! state a restarted server should return to.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::instance::Bounds;
+use crate::instance::{Bounds, MipInstance};
 use crate::metrics::progress;
 use crate::propagation::registry::{BatchMode, EngineSpec, Registry};
 use crate::propagation::{PreparedProblem as _, PropResult};
 
 use super::metrics::{ServiceMetrics, ShardSnapshot};
+use super::persist::CacheDir;
 use super::session::{SessionKey, SessionStore};
 use super::{
     EvictReply, Job, LoadReply, PropagateReply, ServiceConfig, ServiceError, ServiceResult,
@@ -60,38 +74,83 @@ struct Pending {
 /// the FIRST request to queue — a deadline never moves backwards).
 struct BatchQueue {
     spec: EngineSpec,
+    /// A share of the session's instance, held for the queue's lifetime:
+    /// budget pressure from other keys may evict the instance between
+    /// enqueue and flush, and the flush re-ingests from this share — an
+    /// accepted request can never be lost to eviction, it can only pay a
+    /// re-prepare (counted under `flush_resolves`).
+    inst: Arc<MipInstance>,
     pending: Vec<Pending>,
     deadline: Instant,
 }
 
 pub(crate) struct Scheduler {
     config: ServiceConfig,
-    /// This shard's index in the pool (0 = primary / XLA shard).
+    /// This shard's index in the pool (0 = the primary counting shard
+    /// for broadcast requests).
     shard: usize,
-    registry: Registry,
+    /// Pool-wide shared registry — the owner of the one `Arc<Runtime>`
+    /// PJRT handle every shard's XLA sessions compile through.
+    registry: Arc<Registry>,
     store: SessionStore,
     queues: HashMap<SessionKey, BatchQueue>,
     metrics: ServiceMetrics,
+    /// Warm-restart artifact store (`--cache-dir`); `None` = disabled.
+    persist: Option<CacheDir>,
 }
 
 impl Scheduler {
     /// One pool shard. `config` arrives with the store budgets already
-    /// sized for this shard (hash-routed shards get the pool split;
-    /// shard 0, which hosts every pinned XLA session, keeps the full
-    /// budgets — see [`super::Service::start`]).
-    pub(crate) fn new(config: ServiceConfig, shard: usize) -> Scheduler {
-        let registry = match &config.artifact_dir {
-            Some(dir) => Registry::with_defaults().with_artifact_dir(dir.clone()),
-            None => Registry::with_defaults(),
-        };
+    /// divided evenly for this shard (see [`super::Service::start`]);
+    /// `config.shards` still names the FULL pool size, which the
+    /// warm-restart replay needs to route persisted sessions. Opening
+    /// the cache dir or replaying artifacts never fails the shard: a
+    /// broken cache degrades to a cold start.
+    pub(crate) fn new(config: ServiceConfig, shard: usize, registry: Arc<Registry>) -> Scheduler {
         let store = SessionStore::new(config.max_sessions, config.max_bytes);
-        Scheduler {
+        let persist = config.cache_dir.as_ref().and_then(|dir| {
+            CacheDir::open(dir)
+                .map_err(|e| {
+                    eprintln!(
+                        "gdp-shard-{shard}: cache dir {} unusable, persistence off: {e}",
+                        dir.display()
+                    )
+                })
+                .ok()
+        });
+        let mut scheduler = Scheduler {
             config,
             shard,
             registry,
             store,
             queues: HashMap::new(),
             metrics: ServiceMetrics::default(),
+            persist,
+        };
+        scheduler.restore();
+        scheduler
+    }
+
+    /// Replay the warm-restart artifacts into this shard's store: every
+    /// persisted instance becomes resident (uncounted — the disk replay
+    /// mirrors the `load` broadcast, which reaches every shard), then
+    /// every prepared-session record whose key hash-routes HERE under
+    /// the current pool size is re-prepared, counted `warm_restores`.
+    /// A record that cannot prepare (engine unservable on this host,
+    /// e.g. XLA artifacts moved away) is skipped, not fatal: the first
+    /// request on it simply pays a plain miss.
+    fn restore(&mut self) {
+        let Some(cache) = self.persist.clone() else { return };
+        for (fp, inst) in cache.instances() {
+            self.store.ingest(inst, fp);
+        }
+        let shards = self.config.shards.max(1);
+        for (fp, spec) in cache.sessions() {
+            let key = SessionKey::new(fp, &spec);
+            if key.shard(shards) != self.shard || self.store.instance(fp).is_none() {
+                continue;
+            }
+            let _ = self.store.restore_session(&key, &spec, &self.registry);
         }
     }
 
@@ -164,6 +223,14 @@ impl Scheduler {
             Job::Evict { session, primary, reply } => {
                 if primary {
                     self.metrics.evicts += 1;
+                    // an explicit client evict must not resurrect on the
+                    // next boot; one shard reaps the (shared) files
+                    if let Some(cache) = &self.persist {
+                        match session {
+                            Some(fp) => cache.remove_fingerprint(fp),
+                            None => cache.clear(),
+                        }
+                    }
                 }
                 // answer queued work before dropping its session
                 self.flush_all();
@@ -184,15 +251,27 @@ impl Scheduler {
     }
 
     /// Ingest one (already handle-validated) instance under its
-    /// precomputed fingerprint.
+    /// precomputed fingerprint. The primary shard counts the client
+    /// request and writes the instance through to the warm-restart
+    /// cache; the broadcast replicas just make it resident.
     fn load(
         &mut self,
-        inst: std::sync::Arc<crate::instance::MipInstance>,
+        inst: Arc<MipInstance>,
         fingerprint: u64,
-        count: bool,
+        primary: bool,
     ) -> ServiceResult<LoadReply> {
         let (rows, cols, nnz) = (inst.nrows(), inst.ncols(), inst.nnz());
-        let (session, cached) = self.store.load_fingerprinted(inst, fingerprint, count);
+        let (session, cached) = if primary {
+            if let Some(cache) = &self.persist {
+                // best-effort: a full disk costs the next boot a cold
+                // start, not this client its load
+                let _ = cache.store_instance(&inst, fingerprint);
+            }
+            self.store.load(inst, fingerprint)
+        } else {
+            let resident = self.store.ingest(inst, fingerprint);
+            (fingerprint, resident)
+        };
         Ok(LoadReply { session, cached, rows, cols, nnz })
     }
 
@@ -231,7 +310,7 @@ impl Scheduler {
         // `hits + misses == propagates + pending` invariant that
         // `gdp request stats --check` gates on (and a miss would pay a
         // wasted `prepare`)
-        let Some(inst) = self.store.instance(req.session) else {
+        let Some(inst) = self.store.instance_arc(req.session) else {
             return Err(ServiceError(format!(
                 "unknown session {:016x} (load the instance first, or it was evicted)",
                 req.session
@@ -249,7 +328,7 @@ impl Scheduler {
                 }
                 b
             }
-            None => Bounds::of(inst),
+            None => Bounds::of(&inst),
         };
         // a malformed index would panic the shard's engine thread and
         // kill its sessions — reject it as a request error instead
@@ -266,13 +345,17 @@ impl Scheduler {
             .session(&key, &spec, &self.registry)
             .map(|(_, hit)| hit)
             .map_err(|e| ServiceError(format!("{e:#}")))?;
+        if !cache_hit {
+            // first prepare of this (instance × spec): write the session
+            // record through to the warm-restart cache, best-effort
+            if let Some(cache) = &self.persist {
+                let _ = cache.store_session(req.session, &spec);
+            }
+        }
         let window = self.config.batch_window;
-        // a session with queued work must survive until its flush: pin it
-        // so budget pressure from other keys cannot evict it (or its
-        // instance) between enqueue and dispatch
-        self.store.pin(&key);
         let queue = self.queues.entry(key.clone()).or_insert_with(|| BatchQueue {
             spec,
+            inst,
             pending: Vec::new(),
             deadline: received + window,
         });
@@ -313,7 +396,6 @@ impl Scheduler {
     /// calls otherwise.
     fn flush(&mut self, key: &SessionKey) {
         let Some(queue) = self.queues.remove(key) else { return };
-        self.store.unpin(key);
         let n = queue.pending.len();
         let batch_mode = self
             .registry
@@ -324,9 +406,12 @@ impl Scheduler {
             .unwrap_or(BatchMode::Loop);
         // resolve the session again, counted under `flush_resolves` (the
         // per-request hit/miss was decided at enqueue and must keep
-        // partitioning requests exactly). The pin above guarantees it is
-        // still resident on this path; the lookup stays fallible for the
-        // explicit-evict path, which flushes before dropping state
+        // partitioning requests exactly). Budget pressure may have
+        // evicted the session — or its instance — since enqueue; the
+        // queue's instance share makes the re-resolve self-sufficient:
+        // re-ingest (uncounted), then prepare if needed. Worst case an
+        // accepted request pays a re-prepare, never an error
+        self.store.ingest(Arc::clone(&queue.inst), key.fingerprint);
         let session = match self.store.session_uncounted(key, &queue.spec, &self.registry) {
             Ok(s) => s,
             Err(e) => {

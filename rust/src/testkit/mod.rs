@@ -90,9 +90,9 @@ pub fn assert_bounds_equal(reference: &[f64], candidate: &[f64], what: &str) {
 /// The XLA integration tests' shared skip policy: the PJRT runtime over
 /// the default artifact directory, or `None` (with a note on stderr) when
 /// artifacts are missing or the `xla` crate is the vendored stub.
-pub fn open_test_runtime(test: &str) -> Option<std::rc::Rc<crate::runtime::Runtime>> {
+pub fn open_test_runtime(test: &str) -> Option<std::sync::Arc<crate::runtime::Runtime>> {
     match crate::runtime::Runtime::open(&crate::runtime::default_artifact_dir()) {
-        Ok(rt) => Some(std::rc::Rc::new(rt)),
+        Ok(rt) => Some(std::sync::Arc::new(rt)),
         Err(e) => {
             eprintln!("{test}: skipping XLA leg (no PJRT runtime: {e:#})");
             None

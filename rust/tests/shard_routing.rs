@@ -56,6 +56,35 @@ fn shard_for_spreads_keys_over_the_pool() {
     }
 }
 
+/// Artifact-backed (XLA) engines route exactly like native ones:
+/// `shard_for` over their cache keys spreads across the whole pool —
+/// there is no shard-0 pinning path anywhere in the router. Pure hash
+/// assertion, so it needs no PJRT artifacts; the end-to-end XLA leg
+/// lives in `tests/xla_integration.rs` and skips without artifacts.
+#[test]
+fn xla_sessions_route_like_native_engines() {
+    const SHARDS: usize = 4;
+    for engine in ["gpu_atomic", "gpu_loop", "megakernel"] {
+        let spec = EngineSpec::new(engine);
+        let mut counts = [0usize; SHARDS];
+        let mut x = 0x0dd0_5eed_c0ff_ee00u64;
+        for _ in 0..256 {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            counts[shard_for(z ^ (z >> 31), &spec.cache_key(), SHARDS)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "{engine}: shard {i} never chosen — XLA keys skewed");
+        }
+        assert!(
+            counts[0] < 256,
+            "{engine}: every key landed on shard 0 — pinning path resurrected?"
+        );
+    }
+}
+
 /// Per-shard misses after one propagate per instance tell which shard
 /// prepared (owns) each session.
 fn shard_miss_profile(shards: usize, insts: &[MipInstance], order: &[usize]) -> Vec<f64> {
@@ -102,4 +131,55 @@ fn same_fingerprints_land_on_same_shards_across_restarts() {
         expected[shard_for(instance_fingerprint(inst), &spec.cache_key(), SHARDS)] += 1.0;
     }
     assert_eq!(first, expected, "service placement disagrees with shard_for");
+}
+
+/// Warm restart, end to end: a second service booted over the cache
+/// dir the first one populated restores every session at startup, so
+/// its per-shard miss profile is all zeros and every propagate is a
+/// cache hit — on the same shards `shard_for` names.
+#[test]
+fn warm_restart_re_hits_sessions_on_every_shard() {
+    const SHARDS: usize = 4;
+    let dir = std::env::temp_dir().join(format!("gdp_route_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let insts: Vec<MipInstance> = (0..6)
+        .map(|seed| {
+            gen::generate(&GenConfig { nrows: 25, ncols: 25, seed: seed + 100, ..Default::default() })
+        })
+        .collect();
+    let cfg = ServiceConfig { shards: SHARDS, cache_dir: Some(dir.clone()), ..ServiceConfig::default() };
+
+    // Boot 1: cold — one miss per instance, persisted as a side effect.
+    let service = Service::start(cfg.clone());
+    let handle = service.handle();
+    let sessions: Vec<u64> =
+        insts.iter().map(|i| handle.load(i.clone()).expect("load").session).collect();
+    for &s in &sessions {
+        assert!(!handle.propagate(PropagateRequest::cold(s)).expect("propagate").cache_hit);
+    }
+    service.shutdown();
+
+    // Boot 2 over the same dir: zero misses anywhere, all warm.
+    let service = Service::start(cfg);
+    let handle = service.handle();
+    let stats = handle.stats().expect("stats");
+    let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per_shard.len(), SHARDS);
+    let mut warm = 0.0;
+    for (i, shard) in per_shard.iter().enumerate() {
+        let sess = shard.get("sessions").unwrap();
+        assert_eq!(
+            sess.get("misses").unwrap().as_f64().unwrap(),
+            0.0,
+            "shard {i} missed after a warm restart"
+        );
+        warm += sess.get("warm_restores").unwrap().as_f64().unwrap();
+    }
+    assert_eq!(warm, insts.len() as f64, "every persisted session restores exactly once");
+    for &s in &sessions {
+        let r = handle.propagate(PropagateRequest::cold(s)).expect("propagate");
+        assert!(r.cache_hit, "session {s:#x} was not warm after restart");
+    }
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

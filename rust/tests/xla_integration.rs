@@ -5,7 +5,7 @@
 //! backend unavailable — every test here skips with a note instead of
 //! failing, so `cargo test` stays green on artifact-less checkouts.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gdp::gen::{self, GenConfig};
 use gdp::instance::VarType;
@@ -18,7 +18,7 @@ use gdp::sparse::Csr;
 use gdp::testkit::assert_bounds_equal;
 use gdp::util::rng::Rng;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     gdp::testkit::open_test_runtime("xla_integration")
 }
 
